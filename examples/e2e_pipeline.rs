@@ -1,0 +1,163 @@
+//! END-TO-END driver: the full system on a real (synthetic-corpus)
+//! workload, proving all three layers compose:
+//!
+//!   1. TRAIN a transformer from scratch (rust Adam over the AOT grad
+//!      graph — L2/L1 under the hood) and log the loss curve;
+//!   2. QUANTIZE it with HIGGS (uniform and dynamic §5 allocation);
+//!   3. EVALUATE perplexity + in-context tasks before/after;
+//!   4. SERVE batched requests through the FLUTE decode path (the
+//!      Pallas LUT kernel) and report latency/throughput.
+//!
+//! Run: `cargo run --release --example e2e_pipeline` (~2 min; uses the
+//! `tiny` config so it exercises everything quickly. Pass `base` for
+//! the full-size run recorded in EXPERIMENTS.md.)
+
+use higgs::config::ModelConfig;
+use higgs::eval::Evaluator;
+use higgs::grids::GridKind;
+use higgs::linearity::calibrate::CalibMetric;
+use higgs::model::Weights;
+use higgs::quant::higgs::HiggsQuantizer;
+use higgs::quant::QuantizedModel;
+use higgs::runtime::Engine;
+use higgs::serve::trace::{generate_trace, TraceConfig};
+use higgs::serve::{Backend, GenerationEngine};
+use higgs::train::Trainer;
+
+fn main() -> anyhow::Result<()> {
+    let cfg_name = std::env::args().nth(1).unwrap_or_else(|| "tiny".into());
+    let steps: u64 = std::env::args().nth(2).and_then(|s| s.parse().ok()).unwrap_or(300);
+    let engine = Engine::new()?;
+    let cfg = ModelConfig::load_named(engine.artifacts(), &cfg_name)?;
+
+    // ---- 1. train ----
+    println!("== [1/4] training `{cfg_name}` for {steps} steps ==");
+    let man = engine.load(&format!("grad_{cfg_name}"))?.manifest.clone();
+    let mut weights = Weights::from_manifest(cfg.clone(), &man, Some(7))?;
+    let trainer = Trainer::new(&engine, cfg.clone());
+    let t0 = std::time::Instant::now();
+    let report = trainer.train(&mut weights, steps, 4e-3, (steps / 10).max(1))?;
+    println!(
+        "loss {:.3} -> {:.3} in {:.1}s ({:.0} tok/s)",
+        report.losses.first().unwrap().1,
+        report.final_loss,
+        t0.elapsed().as_secs_f64(),
+        report.tokens_seen as f64 / t0.elapsed().as_secs_f64()
+    );
+
+    // ---- 2. quantize ----
+    println!("\n== [2/4] quantizing (HIGGS p=2, 4 bits + dynamic 3.25) ==");
+    let registry =
+        higgs::grids::registry::GridRegistry::with_disk_cache(engine.artifacts().join("grids"));
+    let q4 = HiggsQuantizer::new(registry.get(GridKind::Higgs, 256, 2), cfg.group, 0x51);
+    let qm4 = QuantizedModel::quantize_all(&weights, &q4);
+    println!("uniform: {:.2} bits/param", qm4.avg_bits());
+
+    // ---- 3. evaluate ----
+    println!("\n== [3/4] evaluation ==");
+    let ev = Evaluator::new(&engine, cfg.clone());
+    let ppl_fp = ev.perplexity(&weights)?;
+    let s_fp = ev.task_scores(&weights, 3)?;
+    let w4 = qm4.apply_to(&weights);
+    let ppl_q4 = ev.perplexity(&w4)?;
+    let s_q4 = ev.task_scores(&w4, 3)?;
+    println!("fp32      : ppl {ppl_fp:.4}  tasks avg {:.3}", s_fp.average());
+    println!("higgs 4.25: ppl {ppl_q4:.4}  tasks avg {:.3}", s_q4.average());
+    anyhow::ensure!(
+        ppl_q4 < ppl_fp * 1.25,
+        "4-bit HIGGS should be near-lossless (got {ppl_q4} vs {ppl_fp})"
+    );
+
+    // dynamic allocation at 3.25 bits (data-free)
+    let mut ev_cal = Evaluator::new(&engine, cfg.clone());
+    ev_cal.ppl_batches = 1;
+    let alphas = higgs::linearity::calibrate::calibrate_alphas(
+        &ev_cal,
+        &weights,
+        &[0.08, 0.16, 0.24],
+        CalibMetric::Kl,
+        3,
+    )?;
+    let specs = [(16usize, 2usize), (64, 2), (256, 2)];
+    let g_eff = cfg.group.min(cfg.d_model);
+    let models: Vec<QuantizedModel> = specs
+        .iter()
+        .map(|&(n, p)| {
+            let q = HiggsQuantizer::new(registry.get(GridKind::Higgs, n, p), cfg.group, 0x51);
+            QuantizedModel::quantize_all(&weights, &q)
+        })
+        .collect();
+    let layers = weights.linear_names();
+    let dims: Vec<usize> = cfg.linear_shapes().iter().map(|(_, (k, n))| k * n).collect();
+    let mut t2 = vec![vec![0.0; specs.len()]; layers.len()];
+    for (j, qm) in models.iter().enumerate() {
+        for (l, (_, e)) in qm.layer_errors(&weights).iter().enumerate() {
+            t2[l][j] = *e;
+        }
+    }
+    let db = higgs::alloc::ErrorDb {
+        layers: layers.clone(),
+        dims,
+        choices: specs
+            .iter()
+            .map(|&(n, p)| higgs::alloc::GridChoice {
+                id: format!("n{n}p{p}"),
+                bits: higgs::grids::registry::effective_bits(n, p, g_eff),
+            })
+            .collect(),
+        t2,
+    };
+    // budget: halfway between the 2- and 3-bit uniform tiers, so the
+    // DP must mix them; the comparison baseline is the LOWER tier
+    // (same-or-less budget than dynamic).
+    let budget = 0.5 * (db.choices[0].bits + db.choices[1].bits);
+    let sol = higgs::alloc::solve_dp(&db, &alphas, budget)?;
+    let qm_dyn = QuantizedModel::from_layers(
+        layers
+            .iter()
+            .enumerate()
+            .map(|(l, n)| models[sol.choice[l]].get(n).unwrap().clone())
+            .collect(),
+    );
+    let ppl_dyn = ev.perplexity(&qm_dyn.apply_to(&weights))?;
+    let ppl_uni = ev.perplexity(&models[0].apply_to(&weights))?;
+    println!(
+        "uniform @{:.2} bits: ppl {ppl_uni:.4}",
+        db.choices[0].bits
+    );
+    println!(
+        "dynamic @{:.2} bits (budget {budget:.2}): ppl {ppl_dyn:.4}",
+        sol.avg_bits
+    );
+
+    // ---- 4. serve ----
+    println!("\n== [4/4] serving through the FLUTE (Pallas LUT) decode path ==");
+    let corpus = higgs::data::Corpus::new(cfg.vocab, cfg.seq, 1);
+    let trace = generate_trace(
+        &TraceConfig {
+            n_requests: 8,
+            prompt_len: (6, 12),
+            max_new: (6, 10),
+            ..Default::default()
+        },
+        &corpus,
+    );
+    // batch size: use 1 for tiny (only b1 artifacts exported), 4 for base
+    let batch = if cfg_name == "base" { 4 } else { 1 };
+    let q2 = HiggsQuantizer::new(registry.get(GridKind::Higgs, 16, 2), cfg.group, 0x51);
+    let qm_serve = QuantizedModel::quantize_all(&weights, &q2);
+    let mut ge = GenerationEngine::new(
+        &engine,
+        cfg.clone(),
+        Backend::Flute { bits: 2 },
+        batch,
+        &weights,
+        Some(&qm_serve),
+    )?;
+    let m = ge.run_closed_loop(trace)?;
+    println!("flute2 serving: {}", m.summary());
+    anyhow::ensure!(m.completions.len() == 8, "not all requests completed");
+
+    println!("\nE2E pipeline complete: train -> quantize -> eval -> serve all green.");
+    Ok(())
+}

@@ -1,0 +1,94 @@
+//! Serving example: run a request trace through the router with a
+//! FLUTE-HIGGS quantized model and report latency/throughput — the
+//! Table-1 measurement path as a library consumer would use it.
+//!
+//! ```bash
+//! ./target/release/higgs train --config base   # once
+//! cargo run --release --example serve_trace -- base flute4 4
+//! ```
+
+use higgs::config::ModelConfig;
+use higgs::grids::GridKind;
+use higgs::model::Weights;
+use higgs::quant::higgs::HiggsQuantizer;
+use higgs::quant::QuantizedModel;
+use higgs::runtime::Engine;
+use higgs::serve::trace::{generate_trace, TraceConfig};
+use higgs::serve::{Backend, Router, RouterConfig};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cfg_name = args.first().cloned().unwrap_or_else(|| "tiny".into());
+    let backend = match args.get(1).map(|s| s.as_str()).unwrap_or("flute4") {
+        "fp16" => Backend::Dense,
+        "flute2" => Backend::Flute { bits: 2 },
+        "flute3" => Backend::Flute { bits: 3 },
+        _ => Backend::Flute { bits: 4 },
+    };
+    let batch: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(1);
+
+    let engine = Engine::new()?;
+    let cfg = ModelConfig::load_named(engine.artifacts(), &cfg_name)?;
+    let ckpt = engine.artifacts().join(format!("ckpt_{cfg_name}.bin"));
+    anyhow::ensure!(ckpt.exists(), "run `higgs train --config {cfg_name}` first");
+    let weights = Weights::load(&ckpt, cfg.clone())?;
+    let registry =
+        higgs::grids::registry::GridRegistry::with_disk_cache(engine.artifacts().join("grids"));
+    let qmodel = match &backend {
+        Backend::Dense => None,
+        Backend::Flute { bits } => {
+            let n = 1usize << (2 * bits);
+            let q = HiggsQuantizer::new(registry.get(GridKind::Higgs, n, 2), cfg.group, 0x51);
+            Some(QuantizedModel::quantize_all(&weights, &q))
+        }
+        _ => None,
+    };
+    drop(engine); // router builds its own client in-thread
+
+    // open-loop trace: requests arrive over time
+    let corpus = higgs::data::Corpus::new(cfg.vocab, cfg.seq, 1);
+    let trace = generate_trace(
+        &TraceConfig {
+            n_requests: 16,
+            prompt_len: (8, 24),
+            max_new: (8, 16),
+            mean_gap_ms: 20,
+            seed: 7,
+        },
+        &corpus,
+    );
+
+    let router = Router::spawn(
+        cfg,
+        RouterConfig { backend: backend.clone(), batch, ..Default::default() },
+        weights,
+        qmodel,
+    );
+    let t0 = std::time::Instant::now();
+    for r in trace {
+        let wait = r.arrival_ms.saturating_sub(t0.elapsed().as_millis() as u64);
+        if wait > 0 {
+            std::thread::sleep(std::time::Duration::from_millis(wait));
+        }
+        router.submit(r);
+    }
+    let mut done = 0;
+    while done < 16 {
+        match router.completions.recv_timeout(std::time::Duration::from_secs(120)) {
+            Ok(c) => {
+                println!(
+                    "req {:>2}: {:>2} tokens in {:>7.1} ms  {:?}...",
+                    c.id,
+                    c.tokens.len(),
+                    c.latency_ms,
+                    &c.tokens[..c.tokens.len().min(6)]
+                );
+                done += 1;
+            }
+            Err(_) => break,
+        }
+    }
+    let metrics = router.finish()?;
+    println!("\n[{} batch={batch}] {}", backend.label(), metrics.summary());
+    Ok(())
+}

@@ -1,0 +1,248 @@
+"""AOT export: lower every L2 graph to HLO *text* + a parameter manifest.
+
+HLO text (NOT `.serialize()`) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Each artifact `<name>.hlo.txt` gets a sibling `<name>.manifest.txt`
+describing inputs / params / outputs in a trivially parsed whitespace
+format — this is the ABI the rust runtime loads. Model configs are
+also dumped as `config_<cfg>.txt`.
+
+Grids (LUTs) are runtime *inputs*, not baked constants: the same
+lowered graph serves NF, AF and HIGGS grids of the same (n, p) shape;
+the rust side computes the grid values (CLVQ etc.) and feeds them in.
+"""
+
+import argparse
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .configs import CONFIGS, EVAL_BATCH, SERVE_BATCHES
+from .kernels.hadamard import hadamard_transform
+from .kernels.lut_matmul import qmm_flute, qmm_uniform
+from .kernels import ref
+
+DTYPES = {"f32": jnp.float32, "i32": jnp.int32}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec_of(dtype, shape):
+    return jax.ShapeDtypeStruct(shape, DTYPES[dtype])
+
+
+class Exporter:
+    def __init__(self, out_dir, only=None):
+        self.out_dir = out_dir
+        self.only = only
+        self.count = 0
+        os.makedirs(out_dir, exist_ok=True)
+
+    def want(self, name):
+        return self.only is None or self.only in name
+
+    def emit(self, name, fn, inputs, params, outputs, extra_meta=()):
+        """inputs/params: (name, dtype, shape); outputs: (name, dtype, shape)."""
+        if not self.want(name):
+            return
+        arg_specs = [spec_of(d, s) for _, d, s in list(inputs) + list(params)]
+        # keep_unused: the manifest is the ABI — every listed param must
+        # stay a real HLO parameter even if the graph ignores it (e.g.
+        # norm_f in fwd_acts), else arity drifts from the manifest.
+        lowered = jax.jit(fn, keep_unused=True).lower(*arg_specs)
+        text = to_hlo_text(lowered)
+        with open(os.path.join(self.out_dir, f"{name}.hlo.txt"), "w") as f:
+            f.write(text)
+        with open(os.path.join(self.out_dir, f"{name}.manifest.txt"), "w") as f:
+            f.write(f"artifact {name}\n")
+            for k, v in extra_meta:
+                f.write(f"meta {k} {v}\n")
+            for n, d, s in inputs:
+                f.write(f"input {n} {d} {','.join(map(str, s))}\n")
+            for n, d, s in params:
+                f.write(f"param {n} {d} {','.join(map(str, s))}\n")
+            for n, d, s in outputs:
+                f.write(f"output {n} {d} {','.join(map(str, s))}\n")
+        self.count += 1
+        print(f"[aot] {name}: {len(text)/1e6:.2f} MB hlo, "
+              f"{len(inputs)} inputs, {len(params)} params", flush=True)
+
+
+def write_config(out_dir, cfg):
+    with open(os.path.join(out_dir, f"config_{cfg.name}.txt"), "w") as f:
+        for k in ("name", "vocab", "d_model", "n_layers", "n_heads", "d_ff",
+                  "seq", "group"):
+            f.write(f"{k} {getattr(cfg, k)}\n")
+
+
+def backend_meta(spec):
+    return [
+        ("backend", spec.kind),
+        ("p", spec.p), ("n", spec.n), ("g", spec.g),
+        ("rht", int(spec.rht)), ("bits", spec.bits),
+    ]
+
+
+def kv_shape(cfg, b):
+    return (cfg.n_layers, b, cfg.n_heads, cfg.seq, cfg.d_head)
+
+
+def export_model_graphs(ex, cfg):
+    """fwd_loss / grad / fwd_logits (dense; training + eval + calibration)."""
+    man = M.manifest(cfg, M.DENSE)
+    tok = [("tokens", "i32", (EVAL_BATCH, cfg.seq))]
+    ex.emit(f"fwd_loss_{cfg.name}", M.make_loss_fn(cfg), tok, man,
+            [("loss", "f32", ())], [("config", cfg.name), ("kind", "fwd_loss")])
+    ex.emit(f"fwd_logits_{cfg.name}", M.make_logits_fn(cfg), tok, man,
+            [("logits", "f32", (EVAL_BATCH, cfg.seq, cfg.vocab))],
+            [("config", cfg.name), ("kind", "fwd_logits")])
+    grads_out = [("loss", "f32", ())] + [(f"grad.{n}", d, s) for n, d, s in man]
+    ex.emit(f"grad_{cfg.name}", M.make_grad_fn(cfg), tok, man, grads_out,
+            [("config", cfg.name), ("kind", "grad")])
+    ex.emit(f"fwd_acts_{cfg.name}", M.make_acts_fn(cfg), tok, man,
+            M.acts_output_specs(cfg, EVAL_BATCH),
+            [("config", cfg.name), ("kind", "fwd_acts")])
+
+
+def export_serving_graphs(ex, cfg, batches, specs):
+    """prefill (dense) + decode (dense + quantized backends) per batch size."""
+    for b in batches:
+        man = M.manifest(cfg, M.DENSE)
+        ex.emit(
+            f"prefill_dense_{cfg.name}_b{b}", M.make_prefill_fn(cfg),
+            [("tokens", "i32", (b, cfg.seq))], man,
+            [("logits", "f32", (b, cfg.seq, cfg.vocab)),
+             ("kcache", "f32", kv_shape(cfg, b)),
+             ("vcache", "f32", kv_shape(cfg, b))],
+            [("config", cfg.name), ("kind", "prefill"), ("batch", b)]
+            + backend_meta(M.DENSE),
+        )
+        for spec in specs:
+            man = M.manifest(cfg, spec)
+            ex.emit(
+                f"decode_{spec.tag()}_{cfg.name}_b{b}", M.make_decode_fn(cfg, spec),
+                [("token", "i32", (b,)), ("pos", "i32", (b,)),
+                 ("kcache", "f32", kv_shape(cfg, b)),
+                 ("vcache", "f32", kv_shape(cfg, b))],
+                man,
+                [("logits", "f32", (b, cfg.vocab)),
+                 ("kcache", "f32", kv_shape(cfg, b)),
+                 ("vcache", "f32", kv_shape(cfg, b))],
+                [("config", cfg.name), ("kind", "decode"), ("batch", b)]
+                + backend_meta(spec),
+            )
+
+
+def export_qmm_micro(ex, k=512, n_cols=512, g=64, batches=(1, 4, 16)):
+    """Kernel-level microbench graphs: Table 1 / Table 6 raw material."""
+    for m in batches:
+        x = ("x", "f32", (m, k))
+        ex.emit(f"qmm_dense_m{m}",
+                lambda x, w: (x @ w,),
+                [x], [("w", "f32", (k, n_cols))],
+                [("y", "f32", (m, n_cols))],
+                [("kind", "qmm"), ("backend", "dense"), ("m", m), ("k", k),
+                 ("ncols", n_cols)])
+        ex.emit(f"qmm_uniform_b4_m{m}",
+                lambda x, c, s, z: (qmm_uniform(x, c, s, z, g=g),),
+                [x],
+                [("codes", "i32", (k, n_cols)),
+                 ("scale", "f32", (k // g, n_cols)),
+                 ("zero", "f32", (k // g, n_cols))],
+                [("y", "f32", (m, n_cols))],
+                [("kind", "qmm"), ("backend", "uniform"), ("bits", 4),
+                 ("m", m), ("k", k), ("ncols", n_cols), ("g", g)])
+        ex.emit(f"qmm_nf_b4_m{m}",
+                lambda x, c, s, lut: (ref.qmm_ref(x, c, s, lut, p=1, g=g),),
+                [x],
+                [("codes", "i32", (k, n_cols)),
+                 ("scales", "f32", (k // g, n_cols)),
+                 ("lut", "f32", (16, 1))],
+                [("y", "f32", (m, n_cols))],
+                [("kind", "qmm"), ("backend", "nf"), ("bits", 4),
+                 ("m", m), ("k", k), ("ncols", n_cols), ("g", g)])
+        for p in (1, 2):
+            for bits in (2, 3, 4):
+                n_grid = 1 << (bits * p)
+                def mk(p=p, n_grid=n_grid, rht=False):
+                    def f(x, c, s, lut, *rest):
+                        if rht:
+                            x = hadamard_transform(x, rest[0], g=g)
+                        return (qmm_flute(x, c, s, lut, p=p, g=g),)
+                    return f
+                base_params = [
+                    ("codes", "i32", (k // p, n_cols)),
+                    ("scales", "f32", (k // g, n_cols)),
+                    ("lut", "f32", (n_grid, p)),
+                ]
+                ex.emit(f"qmm_flute_p{p}_b{bits}_m{m}", mk(),
+                        [x], base_params, [("y", "f32", (m, n_cols))],
+                        [("kind", "qmm"), ("backend", "flute"), ("p", p),
+                         ("bits", bits), ("m", m), ("k", k),
+                         ("ncols", n_cols), ("g", g)])
+                if p == 2:
+                    ex.emit(f"qmm_flute_rht_p{p}_b{bits}_m{m}", mk(rht=True),
+                            [x], base_params + [("signs", "f32", (k,))],
+                            [("y", "f32", (m, n_cols))],
+                            [("kind", "qmm"), ("backend", "flute_rht"),
+                             ("p", p), ("bits", bits), ("m", m), ("k", k),
+                             ("ncols", n_cols), ("g", g)])
+        ex.emit(f"hadamard_g{g}_m{m}",
+                lambda x, s: (hadamard_transform(x, s, g=g),),
+                [x], [("signs", "f32", (k,))],
+                [("y", "f32", (m, k))],
+                [("kind", "hadamard"), ("m", m), ("k", k), ("g", g)])
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="substring filter on artifact names (debugging)")
+    args = ap.parse_args()
+
+    ex = Exporter(args.out, args.only)
+
+    for cfg in CONFIGS.values():
+        write_config(args.out, cfg)
+        export_model_graphs(ex, cfg)
+
+    # Serving graphs: `base` across Table-1 batch sizes; `tiny` at b=1 for
+    # fast integration tests.
+    base = CONFIGS["base"]
+    tiny = CONFIGS["tiny"]
+    serve_specs = [
+        M.DENSE,
+        M.BackendSpec("uniform", bits=4, g=base.group),
+        M.BackendSpec("nf", n=16, p=1, g=base.group),
+        M.BackendSpec("flute", n=16, p=2, g=base.group, rht=True),    # 2 bit
+        M.BackendSpec("flute", n=64, p=2, g=base.group, rht=True),    # 3 bit
+        M.BackendSpec("flute", n=256, p=2, g=base.group, rht=True),   # 4 bit
+    ]
+    export_serving_graphs(ex, base, SERVE_BATCHES, serve_specs)
+    export_serving_graphs(
+        ex, tiny, (1,),
+        [M.DENSE, M.BackendSpec("flute", n=16, p=2, g=tiny.group, rht=True)],
+    )
+
+    export_qmm_micro(ex)
+
+    print(f"[aot] wrote {ex.count} artifacts to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

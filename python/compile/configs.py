@@ -1,0 +1,87 @@
+"""Model configurations shared between the L2 jax model and aot export.
+
+The rust side reads the same values from `artifacts/manifest_*.txt`
+(emitted by aot.py), so this file is the single source of truth for
+shapes at build time.
+"""
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class TransformerConfig:
+    """A small Llama-style decoder-only transformer.
+
+    Attributes mirror the layers the paper quantizes: per block the seven
+    linear layers (wq, wk, wv, wo, w_gate, w_up, w_down); norms and the
+    (tied) embedding stay full precision, as in the paper's setups.
+    """
+
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    seq: int          # training / eval sequence length == KV capacity
+    group: int        # HIGGS / RTN scale group size g (power of 2, divides d_model and d_ff)
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def linear_shapes(self):
+        """Ordered (name, (in_dim, out_dim)) for every quantizable linear layer."""
+        out = []
+        for i in range(self.n_layers):
+            p = f"l{i}."
+            d, f = self.d_model, self.d_ff
+            out += [
+                (p + "wq", (d, d)),
+                (p + "wk", (d, d)),
+                (p + "wv", (d, d)),
+                (p + "wo", (d, d)),
+                (p + "w_gate", (d, f)),
+                (p + "w_up", (d, f)),
+                (p + "w_down", (f, d)),
+            ]
+        return out
+
+    def param_shapes(self):
+        """Ordered (name, shape) for ALL parameters (manifest order).
+
+        Full-precision params first (embed + norms), then the linear
+        layers in `linear_shapes` order. This fixed ordering is the ABI
+        between aot.py and the rust weight store.
+        """
+        out = [("embed", (self.vocab, self.d_model))]
+        for i in range(self.n_layers):
+            out.append((f"l{i}.norm1", (self.d_model,)))
+            out.append((f"l{i}.norm2", (self.d_model,)))
+        out.append(("norm_f", (self.d_model,)))
+        out += [(n, s) for n, s in self.linear_shapes()]
+        return out
+
+
+TINY = TransformerConfig(
+    name="tiny", vocab=64, d_model=32, n_layers=2, n_heads=2, d_ff=64,
+    seq=32, group=16,
+)
+
+SMALL = TransformerConfig(
+    name="small", vocab=256, d_model=128, n_layers=3, n_heads=4, d_ff=384,
+    seq=64, group=64,
+)
+
+BASE = TransformerConfig(
+    name="base", vocab=256, d_model=192, n_layers=4, n_heads=6, d_ff=512,
+    seq=96, group=64,
+)
+
+CONFIGS = {c.name: c for c in (TINY, SMALL, BASE)}
+
+# Batch size used by training / eval artifacts (fwd_loss, grad, fwd_logits).
+EVAL_BATCH = 8
+# Batch sizes exported for the serving engine (prefill / decode), Table 1.
+SERVE_BATCHES = (1, 4, 16)

@@ -1,0 +1,56 @@
+"""L1 Pallas kernel: grouped randomized Hadamard transform of activations.
+
+Used by the FLUTE-grid serving path (paper Appendix G): HIGGS stores
+weights in the Hadamard-rotated space; at inference the *activations*
+are rotated with the same seed so the GEMM runs entirely in rotated
+space — O(M*K*log g) extra work, asymptotically negligible next to the
+O(M*K*N) GEMM (the claim Table 6 measures).
+
+TPU mapping: one program owns a (bm, K) activation block in VMEM and
+performs the log2(g) butterfly stages in-register; no HBM round-trips
+between stages (the CUDA version does this in shared memory).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+def _hadamard_kernel(x_ref, signs_ref, o_ref, *, g, k):
+    v = x_ref[...] * signs_ref[...][None, :]
+    bm = v.shape[0]
+    v = v.reshape(bm, k // g, g)
+    h = 1
+    while h < g:
+        v = v.reshape(bm, k // g, g // (2 * h), 2, h)
+        a = v[..., 0, :]
+        b = v[..., 1, :]
+        v = jnp.stack([a + b, a - b], axis=-2)
+        h *= 2
+    o_ref[...] = v.reshape(bm, k) * (1.0 / np.sqrt(g))
+
+
+def hadamard_transform(x, signs, *, g: int, bm: int = 0):
+    """y[M, K] = blockwise RHT of x with sign vector `signs` (f32 ±1)."""
+    m, k = x.shape
+    assert k % g == 0 and (g & (g - 1)) == 0, f"g={g} must be a power of 2 dividing K={k}"
+    if bm == 0:
+        bm = min(m, 8)
+        while m % bm != 0:
+            bm -= 1
+    assert m % bm == 0
+
+    return pl.pallas_call(
+        functools.partial(_hadamard_kernel, g=g, k=k),
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i: (i, 0)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, k), jnp.float32),
+        interpret=True,
+    )(x, signs)

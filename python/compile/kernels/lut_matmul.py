@@ -1,0 +1,150 @@
+"""L1 Pallas kernel: fused LUT-dequantization + GEMM (FLUTE analogue).
+
+The paper's runtime contribution (§4.3) is the FLUTE CUDA kernel: the
+quantization grid lives in shared memory and dequantization is fused
+into the GEMM so the kernel stays memory-bound-optimal at low batch.
+TPU/Pallas rethink (DESIGN.md §Hardware-Adaptation):
+
+  * the grid (≤ 2^10 points, Constraint 2) gets a whole-array BlockSpec
+    so it is staged into VMEM once and every gather hits on-chip memory
+    — the analogue of FLUTE's shared-memory LUT;
+  * the GEMM is tiled (bm, bn) with the full K dimension resident, codes
+    are gathered + scaled in-VMEM and fed to `jnp.dot` targeting the MXU
+    (the tensor-core analogue);
+  * p=2 vector lookups are a single gather producing a [K/p, bn, p]
+    block transposed to an MXU-friendly [K, bn] tile.
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; correctness is validated against ref.py and real-TPU
+performance is estimated from VMEM footprint / MXU utilization in
+DESIGN.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+def _qmm_kernel(x_ref, codes_ref, scales_ref, lut_ref, o_ref, *, p, g, k):
+    """One (bm, bn) output tile. K is fully resident.
+
+    x_ref:      [bm, K]      activation tile
+    codes_ref:  [K//p, bn]   int32 grid indices
+    scales_ref: [K//g, bn]   per-group scales
+    lut_ref:    [n, p]       the full grid (VMEM-resident)
+    o_ref:      [bm, bn]
+    """
+    codes = codes_ref[...]
+    lut = lut_ref[...]
+    vals = jnp.take(lut, codes, axis=0)                    # [K//p, bn, p]
+    w = jnp.transpose(vals, (0, 2, 1)).reshape(k, codes.shape[1])
+    sc = jnp.repeat(scales_ref[...], g, axis=0)            # [K, bn]
+    w = w * sc
+    o_ref[...] = jnp.dot(x_ref[...], w, preferred_element_type=jnp.float32)
+
+
+def _auto_tile(dim: int, cap: int) -> int:
+    """Largest divisor of `dim` that is <= cap (tile auto-selection)."""
+    t = min(dim, cap)
+    while dim % t != 0:
+        t -= 1
+    return t
+
+
+def qmm_flute(x, codes, scales, lut, *, p: int, g: int, bm: int = 0, bn: int = 0):
+    """Fused LUT matmul: y[M, N] = x[M, K] @ dequant(codes, scales, lut).
+
+    Shapes: x [M, K], codes int32 [K//p, N], scales [K//g, N], lut [n, p].
+    bm/bn: output tile sizes (0 = pick automatically).
+    """
+    m, k = x.shape
+    kp, n_cols = codes.shape
+    assert kp * p == k, (kp, p, k)
+    assert k % g == 0
+    if bm == 0:
+        bm = _auto_tile(m, 8)
+    if bn == 0:
+        bn = _auto_tile(n_cols, 128)
+    assert m % bm == 0 and n_cols % bn == 0, (m, bm, n_cols, bn)
+
+    grid = (m // bm, n_cols // bn)
+    return pl.pallas_call(
+        functools.partial(_qmm_kernel, p=p, g=g, k=k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((kp, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((k // g, bn), lambda i, j: (0, j)),
+            # whole-array LUT: staged to VMEM once per program
+            pl.BlockSpec(lut.shape, lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n_cols), jnp.float32),
+        interpret=True,
+    )(x, codes, scales, lut)
+
+
+def _qmm_uniform_kernel(x_ref, codes_ref, scale_ref, zero_ref, o_ref, *, g):
+    """MARLIN stand-in tile: uniform scale/zero dequant fused with the GEMM."""
+    w = codes_ref[...].astype(jnp.float32)
+    sc = jnp.repeat(scale_ref[...], g, axis=0)
+    zp = jnp.repeat(zero_ref[...], g, axis=0)
+    w = (w - zp) * sc
+    o_ref[...] = jnp.dot(x_ref[...], w, preferred_element_type=jnp.float32)
+
+
+def qmm_uniform(x, codes, scale, zero, *, g: int, bm: int = 0, bn: int = 0):
+    """Fused uniform-grid matmul (the MARLIN comparator of Table 1)."""
+    m, k = x.shape
+    k2, n_cols = codes.shape
+    assert k2 == k
+    if bm == 0:
+        bm = _auto_tile(m, 8)
+    if bn == 0:
+        bn = _auto_tile(n_cols, 128)
+    assert m % bm == 0 and n_cols % bn == 0
+
+    grid = (m // bm, n_cols // bn)
+    return pl.pallas_call(
+        functools.partial(_qmm_uniform_kernel, g=g),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((k // g, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((k // g, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n_cols), jnp.float32),
+        interpret=True,
+    )(x, codes, scale, zero)
+
+
+def vmem_footprint_bytes(*, m, k, n_cols, p, g, n_grid, bm, bn) -> int:
+    """Static VMEM footprint estimate for one program of qmm_flute.
+
+    Used by DESIGN.md §Perf to pick block shapes: x-tile + codes-tile +
+    scales-tile + LUT + dequantized w-tile + output tile, all f32/i32.
+    """
+    x_tile = bm * k * 4
+    codes_tile = (k // p) * bn * 4
+    scales_tile = (k // g) * bn * 4
+    lut = n_grid * p * 4
+    w_tile = k * bn * 4
+    o_tile = bm * bn * 4
+    return x_tile + codes_tile + scales_tile + lut + w_tile + o_tile
+
+
+def mxu_utilization_estimate(*, m, k, bn, bm) -> float:
+    """Fraction of MXU (128x128 systolic) lanes busy for the tile GEMM.
+
+    The MXU wants (8,128)x(128,128) granules; utilization is the product
+    of fill fractions along each systolic dimension.
+    """
+    fill_m = min(bm, 128) / 128 if bm < 128 else 1.0
+    fill_k = min(k, 128) / 128 if k < 128 else 1.0
+    fill_n = min(bn, 128) / 128 if bn < 128 else 1.0
+    return fill_m * fill_k * fill_n

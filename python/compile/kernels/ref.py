@@ -1,0 +1,86 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Every Pallas kernel in this package has an exact (up to float assoc.)
+reference here; pytest/hypothesis sweeps shapes and asserts allclose.
+These are also the implementations used by the *unfused* serving
+backends (the NF4/bnb stand-in), so they are part of the product, not
+just test scaffolding.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def dequant_ref(codes, scales, lut, *, p: int, g: int):
+    """Reconstruct a dense [K, N] weight matrix from LUT codes.
+
+    codes:  int32 [K//p, N]  indices into the grid
+    scales: f32   [K//g, N]  per-(input-group, column) scales (sigma = s/sqrt(g))
+    lut:    f32   [n, p]     grid points (p=1 grids are stored as [n, 1])
+
+    W[k, n] = lut[codes[k//p, n], k%p] * scales[k//g, n]
+    """
+    kp, n_cols = codes.shape
+    k = kp * p
+    vals = jnp.take(lut, codes, axis=0)            # [K//p, N, p]
+    w = jnp.transpose(vals, (0, 2, 1)).reshape(k, n_cols)
+    sc = jnp.repeat(scales, g, axis=0)             # [K, N]
+    return w * sc
+
+
+def qmm_ref(x, codes, scales, lut, *, p: int, g: int):
+    """Unfused LUT matmul: dequantize the whole weight, then matmul."""
+    w = dequant_ref(codes, scales, lut, p=p, g=g)
+    return x @ w
+
+
+def qmm_uniform_ref(x, codes, scale, zero, *, g: int):
+    """MARLIN stand-in: uniform-grid dequant (scale/zero per group) + matmul.
+
+    codes: int32 [K, N]; scale, zero: f32 [K//g, N].
+    W = (codes - zero) * scale
+    """
+    sc = jnp.repeat(scale, g, axis=0)
+    zp = jnp.repeat(zero, g, axis=0)
+    w = (codes.astype(jnp.float32) - zp) * sc
+    return x @ w
+
+
+def hadamard_ref(x, signs, *, g: int):
+    """Grouped randomized Hadamard transform of activations.
+
+    x: f32 [M, K]; signs: f32 [K] in {-1, +1}; g divides K.
+    Per group of g along K:  y = H_g (D_signs x) / sqrt(g)
+    with H_g the unnormalized Sylvester-Hadamard matrix, so the overall
+    map is orthonormal (norm preserving).
+    """
+    m, k = x.shape
+    v = (x * signs[None, :]).reshape(m, k // g, g)
+    h = 1
+    while h < g:
+        v = v.reshape(m, k // g, g // (2 * h), 2, h)
+        a = v[..., 0, :]
+        b = v[..., 1, :]
+        v = jnp.stack([a + b, a - b], axis=-2)
+        h *= 2
+    v = v.reshape(m, k)
+    return v / np.sqrt(g)
+
+
+def hadamard_matrix(g: int) -> np.ndarray:
+    """Dense unnormalized Sylvester-Hadamard matrix (test helper)."""
+    h = np.array([[1.0]])
+    while h.shape[0] < g:
+        h = np.block([[h, h], [h, -h]])
+    return h
+
+
+def rmsnorm_ref(x, w, eps: float = 1e-5):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * (1.0 / jnp.sqrt(var + eps)) * w
+
+
+def softmax_ref(x, axis=-1):
+    x = x - jnp.max(x, axis=axis, keepdims=True)
+    e = jnp.exp(x)
+    return e / jnp.sum(e, axis=axis, keepdims=True)

@@ -1,0 +1,409 @@
+"""L2: the transformer LM (fwd / loss / grad / prefill / decode) in jax.
+
+The model is a small Llama-style decoder (RMSNorm, RoPE, SwiGLU, tied
+embedding). Every *linear* layer runs through a pluggable weight
+backend, which is how the paper's serving comparison (Table 1) is
+expressed: the same graph is lowered once per backend:
+
+  dense    — x @ W                      (FP16 baseline)
+  uniform  — fused scale/zero dequant   (MARLIN stand-in; Pallas)
+  nf       — unfused LUT dequant + GEMM (NF4/bitsandbytes stand-in)
+  flute    — fused LUT gather + GEMM    (FLUTE/HIGGS; Pallas, p∈{1,2})
+             with the activations RHT of Appendix G in front
+
+aot.py lowers the functions built here to HLO text; python never runs
+at serving time.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .configs import TransformerConfig
+from .kernels import ref
+from .kernels.hadamard import hadamard_transform
+from .kernels.lut_matmul import qmm_flute, qmm_uniform
+
+EPS = 1e-5
+
+# --------------------------------------------------------------------------
+# weight backends
+# --------------------------------------------------------------------------
+
+
+class BackendSpec:
+    """How linear-layer weights are represented in a lowered graph.
+
+    kind: "dense" | "uniform" | "nf" | "flute"
+    For quantized kinds: `bits` (uniform), or `n`/`p` grid shape (LUT
+    kinds); `g` is the scale group size; `rht` prepends the activation
+    Hadamard transform (flute only).
+    """
+
+    def __init__(self, kind="dense", *, n=0, p=1, bits=0, g=64, rht=False):
+        self.kind = kind
+        self.n = n
+        self.p = p
+        self.bits = bits
+        self.g = g
+        self.rht = rht
+        if kind == "uniform":
+            assert bits > 0
+            self.n = 1 << bits
+        if kind in ("nf", "flute"):
+            assert n > 0
+
+    def tag(self) -> str:
+        if self.kind == "dense":
+            return "dense"
+        if self.kind == "uniform":
+            return f"uniform_b{self.bits}"
+        if self.kind == "nf":
+            return f"nf_n{self.n}"
+        rht = "_rht" if self.rht else ""
+        return f"flute_p{self.p}_n{self.n}{rht}"
+
+    # ---- parameter manifest for one linear layer (k_in, n_out) ----
+    def linear_params(self, name, k_in, n_out):
+        g = min(self.g, k_in)
+        if self.kind == "dense":
+            return [(f"{name}.w", "f32", (k_in, n_out))]
+        if self.kind == "uniform":
+            return [
+                (f"{name}.codes", "i32", (k_in, n_out)),
+                (f"{name}.scale", "f32", (k_in // g, n_out)),
+                (f"{name}.zero", "f32", (k_in // g, n_out)),
+            ]
+        ps = [
+            (f"{name}.codes", "i32", (k_in // self.p, n_out)),
+            (f"{name}.scales", "f32", (k_in // g, n_out)),
+        ]
+        if self.rht:
+            ps.append((f"{name}.signs", "f32", (k_in,)))
+        return ps
+
+    def shared_params(self):
+        if self.kind in ("nf", "flute"):
+            return [("lut", "f32", (self.n, self.p))]
+        return []
+
+    # ---- apply: x2d [M, k_in] @ layer -> [M, n_out] ----
+    def apply(self, params, shared, name, x2d):
+        g = min(self.g, x2d.shape[1])
+        if self.kind == "dense":
+            return x2d @ params[f"{name}.w"]
+        if self.kind == "uniform":
+            return qmm_uniform(
+                x2d, params[f"{name}.codes"], params[f"{name}.scale"],
+                params[f"{name}.zero"], g=g,
+            )
+        if self.kind == "nf":
+            return ref.qmm_ref(
+                x2d, params[f"{name}.codes"], params[f"{name}.scales"],
+                shared["lut"], p=self.p, g=g,
+            )
+        # flute
+        if self.rht:
+            x2d = hadamard_transform(x2d, params[f"{name}.signs"], g=g)
+        return qmm_flute(
+            x2d, params[f"{name}.codes"], params[f"{name}.scales"],
+            shared["lut"], p=self.p, g=g,
+        )
+
+
+DENSE = BackendSpec("dense")
+
+
+# --------------------------------------------------------------------------
+# model pieces
+# --------------------------------------------------------------------------
+
+
+def rmsnorm(x, w):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * (1.0 / jnp.sqrt(var + EPS)) * w
+
+
+def rope(q, pos, d_head):
+    """Rotary embedding. q [..., H, Dh]; pos broadcastable to q[..., 0, 0]."""
+    half = d_head // 2
+    freqs = 1.0 / (10000.0 ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = pos[..., None].astype(jnp.float32) * freqs          # [..., half]
+    cos = jnp.cos(ang)[..., None, :]                          # [..., 1, half]
+    sin = jnp.sin(ang)[..., None, :]
+    q1, q2 = q[..., :half], q[..., half:]
+    return jnp.concatenate([q1 * cos - q2 * sin, q1 * sin + q2 * cos], axis=-1)
+
+
+def _linear(spec, params, shared, name, x):
+    """Apply a (possibly quantized) linear to x of shape [..., k_in]."""
+    shape = x.shape
+    x2d = x.reshape(-1, shape[-1])
+    y = spec.apply(params, shared, name, x2d)
+    return y.reshape(*shape[:-1], y.shape[-1])
+
+
+def block_forward(cfg: TransformerConfig, spec, params, shared, i, x, pos,
+                  taps=None):
+    """One transformer block over a full sequence. x [B,S,D], pos [S].
+
+    If `taps` is a list, the four unique pre-linear activations are
+    appended as (name, tensor) — the GPTQ calibration feed
+    (`fwd_acts_<cfg>` artifact).
+    """
+    b, s, d = x.shape
+    h, dh = cfg.n_heads, cfg.d_head
+    pre = f"l{i}."
+    xn = rmsnorm(x, params[pre + "norm1"])
+    if taps is not None:
+        taps.append((pre + "attn_in", xn))
+    q = _linear(spec, params, shared, pre + "wq", xn).reshape(b, s, h, dh)
+    k = _linear(spec, params, shared, pre + "wk", xn).reshape(b, s, h, dh)
+    v = _linear(spec, params, shared, pre + "wv", xn).reshape(b, s, h, dh)
+    q = rope(q, pos[None, :], dh)
+    k = rope(k, pos[None, :], dh)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / np.sqrt(dh)
+    mask = (jnp.arange(s)[None, :] > jnp.arange(s)[:, None])[None, None]
+    scores = jnp.where(mask, -1e9, scores)
+    att = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhqk,bkhd->bqhd", att, v).reshape(b, s, d)
+    if taps is not None:
+        taps.append((pre + "attn_out_in", ctx))
+    x = x + _linear(spec, params, shared, pre + "wo", ctx)
+
+    xn = rmsnorm(x, params[pre + "norm2"])
+    if taps is not None:
+        taps.append((pre + "mlp_in", xn))
+    gate = _linear(spec, params, shared, pre + "w_gate", xn)
+    up = _linear(spec, params, shared, pre + "w_up", xn)
+    down_in = jax.nn.silu(gate) * up
+    if taps is not None:
+        taps.append((pre + "down_in", down_in))
+    x = x + _linear(spec, params, shared, pre + "w_down", down_in)
+    return x, k, v
+
+
+def forward_logits(cfg: TransformerConfig, spec, params, shared, tokens):
+    """tokens i32 [B,S] -> logits f32 [B,S,V]."""
+    b, s = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    pos = jnp.arange(s)
+    for i in range(cfg.n_layers):
+        x, _, _ = block_forward(cfg, spec, params, shared, i, x, pos)
+    x = rmsnorm(x, params["norm_f"])
+    return x @ params["embed"].T
+
+
+def loss_fn(cfg: TransformerConfig, spec, params, shared, tokens):
+    """Mean next-token cross entropy; PPL = exp(loss) on the rust side."""
+    logits = forward_logits(cfg, spec, params, shared, tokens)
+    targets = tokens[:, 1:]
+    lp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    nll = -jnp.take_along_axis(lp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+# --------------------------------------------------------------------------
+# serving graphs: prefill + decode with KV cache
+# --------------------------------------------------------------------------
+
+
+def prefill(cfg: TransformerConfig, spec, params, shared, tokens):
+    """tokens i32 [B,S] -> (logits [B,S,V], kcache, vcache [L,B,H,S,Dh]).
+
+    Padded prompts are handled by causality: the rust engine reads the
+    logits row at prompt_len-1; junk beyond a prompt never influences it.
+    """
+    b, s = tokens.shape
+    h, dh = cfg.n_heads, cfg.d_head
+    x = jnp.take(params["embed"], tokens, axis=0)
+    pos = jnp.arange(s)
+    ks, vs = [], []
+    for i in range(cfg.n_layers):
+        x, k, v = block_forward(cfg, spec, params, shared, i, x, pos)
+        ks.append(jnp.transpose(k, (0, 2, 1, 3)))   # [B,H,S,Dh]
+        vs.append(jnp.transpose(v, (0, 2, 1, 3)))
+    x = rmsnorm(x, params["norm_f"])
+    logits = x @ params["embed"].T
+    return logits, jnp.stack(ks), jnp.stack(vs)
+
+
+def _cache_write(cache_l, new, pos):
+    """cache_l [B,H,S,Dh]; new [B,H,Dh]; pos i32 [B] — per-request write.
+
+    Expressed as a masked select rather than a scatter: XLA fuses it and
+    it vectorizes over ragged per-request positions (continuous batching).
+    """
+    smax = cache_l.shape[2]
+    mask = jnp.arange(smax)[None, :] == pos[:, None]          # [B,S]
+    return jnp.where(mask[:, None, :, None], new[:, :, None, :], cache_l)
+
+
+def decode_step(cfg: TransformerConfig, spec, params, shared, token, pos,
+                kcache, vcache):
+    """One generation step for a running batch.
+
+    token i32 [B]; pos i32 [B] (write/read position per request);
+    kcache/vcache f32 [L,B,H,S,Dh]. Returns (logits [B,V], kcache', vcache').
+    """
+    b = token.shape[0]
+    h, dh, smax = cfg.n_heads, cfg.d_head, cfg.seq
+    x = jnp.take(params["embed"], token, axis=0)          # [B,D]
+    new_k, new_v = [], []
+    for i in range(cfg.n_layers):
+        pre = f"l{i}."
+        xn = rmsnorm(x, params[pre + "norm1"])
+        q = _linear(spec, params, shared, pre + "wq", xn).reshape(b, h, dh)
+        k = _linear(spec, params, shared, pre + "wk", xn).reshape(b, h, dh)
+        v = _linear(spec, params, shared, pre + "wv", xn).reshape(b, h, dh)
+        q = rope(q, pos, dh)                              # pos per request
+        k = rope(k, pos, dh)
+        kc = _cache_write(kcache[i], k, pos)              # [B,H,S,Dh]
+        vc = _cache_write(vcache[i], v, pos)
+        scores = jnp.einsum("bhd,bhsd->bhs", q, kc) / np.sqrt(dh)
+        mask = jnp.arange(smax)[None, None, :] > pos[:, None, None]
+        scores = jnp.where(mask, -1e9, scores)
+        att = jax.nn.softmax(scores, axis=-1)
+        ctx = jnp.einsum("bhs,bhsd->bhd", att, vc).reshape(b, -1)
+        x = x + _linear(spec, params, shared, pre + "wo", ctx)
+        xn = rmsnorm(x, params[pre + "norm2"])
+        gate = _linear(spec, params, shared, pre + "w_gate", xn)
+        up = _linear(spec, params, shared, pre + "w_up", xn)
+        x = x + _linear(spec, params, shared, pre + "w_down",
+                        jax.nn.silu(gate) * up)
+        new_k.append(kc)
+        new_v.append(vc)
+    x = rmsnorm(x, params["norm_f"])
+    logits = x @ params["embed"].T
+    return logits, jnp.stack(new_k), jnp.stack(new_v)
+
+
+# --------------------------------------------------------------------------
+# parameter manifests + flat-argument wrappers (the AOT ABI)
+# --------------------------------------------------------------------------
+
+
+def manifest(cfg: TransformerConfig, spec: BackendSpec):
+    """Ordered (name, dtype, shape) of all graph parameters.
+
+    Full-precision params (embed + norms) first, then shared quantizer
+    params (lut), then per-linear params in cfg.linear_shapes() order.
+    """
+    out = []
+    for name, shape in cfg.param_shapes():
+        is_linear = any(name == n for n, _ in cfg.linear_shapes())
+        if not is_linear:
+            out.append((name, "f32", shape))
+    out += spec.shared_params()
+    for name, (k_in, n_out) in cfg.linear_shapes():
+        out += spec.linear_params(name, k_in, n_out)
+    return out
+
+
+def _split(cfg, spec, flat):
+    """flat tuple (manifest order) -> (params dict, shared dict)."""
+    man = manifest(cfg, spec)
+    assert len(flat) == len(man), (len(flat), len(man))
+    params, shared = {}, {}
+    for (name, _, _), arr in zip(man, flat):
+        if name == "lut":
+            shared[name] = arr
+        else:
+            params[name] = arr
+    return params, shared
+
+
+def make_loss_fn(cfg, spec=DENSE):
+    def fn(tokens, *flat):
+        params, shared = _split(cfg, spec, flat)
+        return (loss_fn(cfg, spec, params, shared, tokens),)
+
+    return fn
+
+
+def make_logits_fn(cfg, spec=DENSE):
+    def fn(tokens, *flat):
+        params, shared = _split(cfg, spec, flat)
+        return (forward_logits(cfg, spec, params, shared, tokens),)
+
+    return fn
+
+
+def forward_acts(cfg: TransformerConfig, params, tokens):
+    """Dense forward that also returns the pre-linear activations —
+    the GPTQ calibration capture (rust accumulates H = E[x xᵀ])."""
+    b, s = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    pos = jnp.arange(s)
+    taps = []
+    for i in range(cfg.n_layers):
+        x, _, _ = block_forward(cfg, DENSE, params, {}, i, x, pos, taps=taps)
+    return tuple(t for _, t in taps)
+
+
+def acts_output_specs(cfg: TransformerConfig, batch):
+    """(name, dtype, shape) for forward_acts outputs, in order."""
+    out = []
+    for i in range(cfg.n_layers):
+        pre = f"l{i}."
+        out.append((f"acts.{pre}attn_in", "f32", (batch, cfg.seq, cfg.d_model)))
+        out.append((f"acts.{pre}attn_out_in", "f32", (batch, cfg.seq, cfg.d_model)))
+        out.append((f"acts.{pre}mlp_in", "f32", (batch, cfg.seq, cfg.d_model)))
+        out.append((f"acts.{pre}down_in", "f32", (batch, cfg.seq, cfg.d_ff)))
+    return out
+
+
+def make_acts_fn(cfg):
+    def fn(tokens, *flat):
+        params, _ = _split(cfg, DENSE, flat)
+        return forward_acts(cfg, params, tokens)
+
+    return fn
+
+
+def make_grad_fn(cfg):
+    """loss + grads w.r.t. every parameter (dense only; training)."""
+
+    def raw(tokens, *flat):
+        params, shared = _split(cfg, DENSE, flat)
+        return loss_fn(cfg, DENSE, params, shared, tokens)
+
+    def fn(tokens, *flat):
+        nflat = len(flat)
+        loss, grads = jax.value_and_grad(raw, argnums=tuple(range(1, nflat + 1)))(
+            tokens, *flat
+        )
+        return (loss, *grads)
+
+    return fn
+
+
+def make_prefill_fn(cfg, spec=DENSE):
+    def fn(tokens, *flat):
+        params, shared = _split(cfg, spec, flat)
+        return prefill(cfg, spec, params, shared, tokens)
+
+    return fn
+
+
+def make_decode_fn(cfg, spec=DENSE):
+    def fn(token, pos, kcache, vcache, *flat):
+        params, shared = _split(cfg, spec, flat)
+        return decode_step(cfg, spec, params, shared, token, pos, kcache, vcache)
+
+    return fn
+
+
+def init_weights(cfg: TransformerConfig, seed: int = 0):
+    """Gaussian init matching the manifest (tests + python-side checks)."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for name, dtype, shape in manifest(cfg, DENSE):
+        if name.endswith("norm1") or name.endswith("norm2") or name == "norm_f":
+            out.append(np.ones(shape, np.float32))
+        else:
+            std = 0.02 if name == "embed" else 1.0 / np.sqrt(shape[0])
+            out.append((rng.standard_normal(shape) * std).astype(np.float32))
+    return out

@@ -1,0 +1,193 @@
+"""L2 model correctness: shapes, backend agreement, decode consistency."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+from compile.configs import TINY, CONFIGS
+from compile.kernels import ref
+
+
+def dense_weights(seed=0):
+    return [jnp.array(a) for a in M.init_weights(TINY, seed)]
+
+
+def tokens(seed=1, b=2):
+    rng = np.random.default_rng(seed)
+    return jnp.array(rng.integers(0, TINY.vocab, (b, TINY.seq)).astype(np.int32))
+
+
+class TestForward:
+    def test_logits_shape(self):
+        w = dense_weights()
+        tok = tokens()
+        (lg,) = M.make_logits_fn(TINY)(tok, *w)
+        assert lg.shape == (2, TINY.seq, TINY.vocab)
+
+    def test_loss_near_uniform_at_init(self):
+        """Random init ⇒ loss ≈ ln(V); sanity for the PPL pipeline."""
+        w = dense_weights()
+        (loss,) = M.make_loss_fn(TINY)(tokens(), *w)
+        assert abs(float(loss) - np.log(TINY.vocab)) < 0.5
+
+    def test_causality(self):
+        """Changing a future token must not change past logits."""
+        w = dense_weights()
+        tok = np.array(tokens())
+        (lg1,) = M.make_logits_fn(TINY)(jnp.array(tok), *w)
+        tok2 = tok.copy()
+        tok2[:, -1] = (tok2[:, -1] + 1) % TINY.vocab
+        (lg2,) = M.make_logits_fn(TINY)(jnp.array(tok2), *w)
+        np.testing.assert_allclose(
+            np.array(lg1[:, :-1]), np.array(lg2[:, :-1]), rtol=1e-5, atol=1e-5
+        )
+
+    def test_grad_outputs_match_manifest(self):
+        w = dense_weights()
+        out = M.make_grad_fn(TINY)(tokens(), *w)
+        assert len(out) == 1 + len(w)
+        for g, p in zip(out[1:], w):
+            assert g.shape == p.shape
+
+    def test_grad_descent_step_reduces_loss(self):
+        w = dense_weights()
+        tok = tokens()
+        out = M.make_grad_fn(TINY)(tok, *w)
+        loss0, grads = out[0], out[1:]
+        w2 = [p - 0.1 * g for p, g in zip(w, grads)]
+        (loss1,) = M.make_loss_fn(TINY)(tok, *w2)
+        assert float(loss1) < float(loss0)
+
+
+class TestDecodeConsistency:
+    def test_decode_matches_prefill(self):
+        w = dense_weights()
+        tok = tokens()
+        lg, kc, vc = M.make_prefill_fn(TINY)(tok, *w)
+        for j in (0, 9, TINY.seq - 1):
+            out = M.make_decode_fn(TINY)(
+                tok[:, j], jnp.full((2,), j, jnp.int32), kc, vc, *w
+            )
+            err = float(jnp.abs(out[0] - lg[:, j]).max())
+            assert err < 5e-4, (j, err)
+
+    def test_ragged_positions(self):
+        """Per-request pos: batch rows at different positions decode right."""
+        w = dense_weights()
+        tok = tokens()
+        lg, kc, vc = M.make_prefill_fn(TINY)(tok, *w)
+        pos = jnp.array([3, 11], jnp.int32)
+        step_tok = jnp.array([int(tok[0, 3]), int(tok[1, 11])], jnp.int32)
+        out = M.make_decode_fn(TINY)(step_tok, pos, kc, vc, *w)
+        assert float(jnp.abs(out[0][0] - lg[0, 3]).max()) < 5e-4
+        assert float(jnp.abs(out[0][1] - lg[1, 11]).max()) < 5e-4
+
+    def test_kv_cache_updated_only_at_pos(self):
+        w = dense_weights()
+        tok = tokens()
+        _, kc, vc = M.make_prefill_fn(TINY)(tok, *w)
+        pos = jnp.array([5, 5], jnp.int32)
+        _, kc2, _ = M.make_decode_fn(TINY)(tok[:, 5], pos, kc, vc, *w)
+        # all other positions untouched
+        mask = np.arange(TINY.seq) != 5
+        np.testing.assert_allclose(
+            np.array(kc)[:, :, :, mask], np.array(kc2)[:, :, :, mask]
+        )
+
+
+def quantize_dense_to_lut(w, n_grid, p, g):
+    """Test-helper 'quantizer': nearest-point LUT encoding of a dense W."""
+    rng = np.random.default_rng(0)
+    k, n_cols = w.shape
+    g = min(g, k)
+    lut = np.sort(rng.standard_normal(n_grid)).astype(np.float32)[:, None]
+    if p > 1:
+        lut = rng.standard_normal((n_grid, p)).astype(np.float32)
+    scales = np.ones((k // g, n_cols), np.float32)
+    wg = np.asarray(w).reshape(k // p, p, n_cols).transpose(0, 2, 1)  # [K/p, N, p]
+    d = ((wg[:, :, None, :] - lut[None, None]) ** 2).sum(-1)
+    codes = d.argmin(-1).astype(np.int32)
+    return codes, scales, lut
+
+
+class TestBackendAgreement:
+    """All serving backends must compute the same function given weights
+    that represent the same dense matrix."""
+
+    @pytest.mark.parametrize("p", [1, 2])
+    def test_flute_equals_nf_unfused(self, p):
+        spec_f = M.BackendSpec("flute", n=16, p=p, g=TINY.group)
+        spec_n = M.BackendSpec("nf", n=16, p=p, g=TINY.group)
+        rng = np.random.default_rng(2)
+        tok = tokens()
+        flat_f, flat_n = [], []
+        for name, dt, shape in M.manifest(TINY, spec_f):
+            if dt == "i32":
+                arr = jnp.array(rng.integers(0, 16, shape).astype(np.int32))
+            elif "norm" in name:
+                arr = jnp.ones(shape, jnp.float32)
+            else:
+                arr = jnp.array(rng.standard_normal(shape).astype(np.float32) * 0.05)
+            flat_f.append(arr)
+            flat_n.append(arr)
+        (l1,) = M.make_loss_fn(TINY, spec_f)(tok, *flat_f)
+        (l2,) = M.make_loss_fn(TINY, spec_n)(tok, *flat_n)
+        assert abs(float(l1) - float(l2)) < 1e-4
+
+    def test_uniform_matches_dense_on_exact_codes(self):
+        """Uniform backend with exactly-representable weights == dense."""
+        spec = M.BackendSpec("uniform", bits=8, g=TINY.group)
+        w_dense = dense_weights()
+        man_d = M.manifest(TINY, M.DENSE)
+        man_q = M.manifest(TINY, spec)
+        dense_map = {n: a for (n, _, _), a in zip(man_d, w_dense)}
+        flat_q = []
+        for name, dt, shape in man_q:
+            if name.endswith(".codes"):
+                base = name[: -len(".codes")]
+                w = np.asarray(dense_map[base + ".w"])
+                k = w.shape[0]
+                g = min(TINY.group, k)
+                # scale chosen so codes are integers 0..255 exactly
+                wmin = w.reshape(k // g, g, -1).min(axis=1)
+                wmax = w.reshape(k // g, g, -1).max(axis=1)
+                scale = ((wmax - wmin) / 255.0 + 1e-12).astype(np.float32)
+                sc = np.repeat(scale, g, axis=0)
+                zp = np.repeat(-wmin / scale, g, axis=0)
+                codes = np.rint(w / sc + zp).astype(np.int32)
+                flat_q.append(jnp.array(codes))
+                self._pending = (scale.astype(np.float32),
+                                 (-wmin / scale).astype(np.float32))
+            elif name.endswith(".scale"):
+                flat_q.append(jnp.array(self._pending[0]))
+            elif name.endswith(".zero"):
+                flat_q.append(jnp.array(self._pending[1]))
+            else:
+                flat_q.append(dense_map[name])
+        tok = tokens()
+        (ld,) = M.make_loss_fn(TINY)(tok, *w_dense)
+        (lq,) = M.make_loss_fn(TINY, spec)(tok, *flat_q)
+        # 8-bit RTN is near-lossless: loss should be very close
+        assert abs(float(ld) - float(lq)) < 0.05, (float(ld), float(lq))
+
+
+class TestManifest:
+    @pytest.mark.parametrize("cfg", list(CONFIGS.values()), ids=lambda c: c.name)
+    def test_dense_manifest_covers_all_params(self, cfg):
+        man = M.manifest(cfg, M.DENSE)
+        names = [n for n, _, _ in man]
+        assert len(names) == len(set(names))
+        for n, shape in cfg.param_shapes():
+            key = n if not any(n == ln for ln, _ in cfg.linear_shapes()) else n + ".w"
+            assert key in names, key
+
+    def test_quantized_manifest_shapes(self):
+        spec = M.BackendSpec("flute", n=64, p=2, g=TINY.group, rht=True)
+        man = M.manifest(TINY, spec)
+        d = {n: (dt, s) for n, dt, s in man}
+        assert d["lut"] == ("f32", (64, 2))
+        assert d["l0.wq.codes"] == ("i32", (TINY.d_model // 2, TINY.d_model))
+        assert d["l0.wq.signs"] == ("f32", (TINY.d_model,))
+        g = min(TINY.group, TINY.d_model)
+        assert d["l0.wq.scales"] == ("f32", (TINY.d_model // g, TINY.d_model))

@@ -1,0 +1,172 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//!  A. grid construction: CLVQ vs quantile init vs uniform (Gaussian MSE)
+//!  B. rotation ablation: HIGGS vs same grid without RHT on heavy tails
+//!  C. outlier handling: RHT (HIGGS) vs fp side-band (SpQR-lite) vs none
+//!  D. scale group size: error vs bits trade-off of g ∈ {16..256}
+//!  E. allocation solver: DP vs greedy vs Lagrange quality + runtime
+//!  F. DP budget discretization granularity
+
+use higgs::alloc::{solve_dp, solve_greedy, solve_lagrange, ErrorDb, GridChoice};
+use higgs::grids::registry::{effective_bits, GridRegistry};
+use higgs::grids::{gaussian_mse_of_1d, GridKind};
+use higgs::linearity::calibrate::{CalibMetric, LayerAlphas};
+use higgs::quant::higgs::HiggsQuantizer;
+use higgs::quant::lut::LutQuantizer;
+use higgs::quant::outlier::OutlierQuantizer;
+use higgs::quant::rtn::RtnQuantizer;
+use higgs::quant::Quantizer;
+use higgs::report::Table;
+use higgs::tensor::Tensor;
+use higgs::util::bench::BenchRunner;
+use higgs::util::prng::Rng;
+use higgs::util::stats::norm_ppf;
+
+fn heavy_tail_layer(k: usize, n: usize, seed: u64) -> Tensor {
+    let mut rng = Rng::new(seed);
+    let data: Vec<f32> = (0..k * n)
+        .map(|_| {
+            let z = rng.normal_f32();
+            if rng.coin(0.01) {
+                z * 15.0
+            } else {
+                z
+            }
+        })
+        .collect();
+    Tensor::from_vec(&[k, n], data)
+}
+
+fn main() {
+    let reg = GridRegistry::new();
+
+    // ---- A: grid construction quality ----
+    let mut t = Table::new(
+        "Ablation A: 1-D grid construction (Gaussian MSE, n=16)",
+        &["constructor", "mse"],
+    );
+    let quantiles: Vec<f32> =
+        (0..16).map(|i| norm_ppf((i as f64 + 0.5) / 16.0) as f32).collect();
+    t.row(vec!["quantile init (NF)".into(), format!("{:.5}", gaussian_mse_of_1d(&quantiles))]);
+    t.row(vec![
+        "optimal uniform (CH)".into(),
+        format!("{:.5}", reg.get(GridKind::Uniform, 16, 1).mse),
+    ]);
+    t.row(vec![
+        "L1-Lloyd (AF)".into(),
+        format!("{:.5}", reg.get(GridKind::Af, 16, 1).mse),
+    ]);
+    t.row(vec![
+        "CLVQ/Lloyd (HIGGS)".into(),
+        format!("{:.5}", reg.get(GridKind::Higgs, 16, 1).mse),
+    ]);
+    print!("{}", t.render());
+
+    // ---- B + C: rotation vs side-band on heavy-tailed weights ----
+    let w = heavy_tail_layer(256, 128, 3);
+    let g = 64;
+    let mut t = Table::new(
+        "Ablation B/C: outlier handling @ ~3.25 bits (heavy-tailed layer)",
+        &["method", "bits", "t2"],
+    );
+    let grid = reg.get(GridKind::Higgs, 8, 1);
+    let plain = LutQuantizer::new(grid.clone(), g);
+    t.row(vec![
+        "grid only (no RHT)".into(),
+        format!("{:.2}", plain.bits_per_param(256)),
+        format!("{:.5}", plain.quantize("l", &w).rel_sq_err(&w)),
+    ]);
+    let higgs = HiggsQuantizer::new(grid.clone(), g, 7);
+    t.row(vec![
+        "RHT + grid (HIGGS)".into(),
+        format!("{:.2}", higgs.bits_per_param(256)),
+        format!("{:.5}", higgs.quantize("l", &w).rel_sq_err(&w)),
+    ]);
+    let spqr = OutlierQuantizer::new(RtnQuantizer::new(3, g), 0.01);
+    t.row(vec![
+        "fp side-band (SpQR-lite)".into(),
+        format!("{:.2}", spqr.bits_per_param(256)),
+        format!("{:.5}", spqr.quantize("l", &w).rel_sq_err(&w)),
+    ]);
+    print!("{}", t.render());
+
+    // ---- D: scale group size ----
+    let wg = heavy_tail_layer(256, 128, 4);
+    let mut t = Table::new(
+        "Ablation D: group size (HIGGS n=16 p=1)",
+        &["g", "eff_bits", "t2"],
+    );
+    for g in [16usize, 32, 64, 128, 256] {
+        let q = HiggsQuantizer::new(reg.get(GridKind::Higgs, 16, 1), g, 7);
+        let ql = q.quantize("l", &wg);
+        t.row(vec![
+            g.to_string(),
+            format!("{:.2}", effective_bits(16, 1, g.min(256))),
+            format!("{:.5}", ql.rel_sq_err(&wg)),
+        ]);
+    }
+    print!("{}", t.render());
+
+    // ---- E/F: allocation solvers ----
+    let mut rng = Rng::new(9);
+    let l_count = 112;
+    let db = ErrorDb {
+        layers: (0..l_count).map(|i| format!("l{i}")).collect(),
+        dims: (0..l_count)
+            .map(|i| if i % 3 == 0 { 4_194_304 } else { 11_534_336 })
+            .collect(),
+        choices: vec![
+            GridChoice { id: "b2".into(), bits: 2.25 },
+            GridChoice { id: "b3".into(), bits: 3.25 },
+            GridChoice { id: "b4".into(), bits: 4.25 },
+            GridChoice { id: "b8".into(), bits: 8.25 },
+        ],
+        t2: (0..l_count)
+            .map(|_| {
+                let base = 0.05 + rng.uniform() * 0.25;
+                vec![base, base * 0.3, base * 0.08, base * 0.001]
+            })
+            .collect(),
+    };
+    let alphas = LayerAlphas {
+        metric: CalibMetric::Ppl,
+        alphas: (0..l_count)
+            .map(|i| (format!("l{i}"), 0.2 + rng.uniform() * 8.0))
+            .collect(),
+        base: 0.0,
+        noise_levels: vec![],
+    };
+    let mut runner = BenchRunner::new();
+    let mut t = Table::new(
+        "Ablation E: allocation solver quality + runtime (112 layers, b_max=3.25)",
+        &["solver", "penalty", "avg_bits", "median_ms"],
+    );
+    let m_dp = runner.bench("dp", || solve_dp(&db, &alphas, 3.25).unwrap());
+    let dp = solve_dp(&db, &alphas, 3.25).unwrap();
+    t.row(vec![
+        "DP (exact)".into(),
+        format!("{:.5}", dp.predicted_penalty),
+        format!("{:.3}", dp.avg_bits),
+        format!("{:.2}", m_dp.median_ms),
+    ]);
+    let m_gr = runner.bench("greedy", || solve_greedy(&db, &alphas, 3.25).unwrap());
+    let gr = solve_greedy(&db, &alphas, 3.25).unwrap();
+    t.row(vec![
+        "greedy".into(),
+        format!("{:.5}", gr.predicted_penalty),
+        format!("{:.3}", gr.avg_bits),
+        format!("{:.2}", m_gr.median_ms),
+    ]);
+    let m_lg = runner.bench("lagrange", || solve_lagrange(&db, &alphas, 3.25).unwrap());
+    let lg = solve_lagrange(&db, &alphas, 3.25).unwrap();
+    t.row(vec![
+        "lagrange".into(),
+        format!("{:.5}", lg.predicted_penalty),
+        format!("{:.3}", lg.avg_bits),
+        format!("{:.2}", m_lg.median_ms),
+    ]);
+    print!("{}", t.render());
+    assert!(dp.predicted_penalty <= gr.predicted_penalty + 1e-9);
+    assert!(dp.predicted_penalty <= lg.predicted_penalty + 1e-9);
+    eprintln!("ablations done");
+}

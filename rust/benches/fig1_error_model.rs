@@ -1,0 +1,28 @@
+//! Bench: regenerate paper Figure 1 — measured vs predicted PPL for
+//! uniform HIGGS quantization across the bit range.
+//!
+//! Run: `cargo bench --bench fig1_error_model` (HIGGS_BENCH_QUICK=1 for
+//! a fast pass). Requires `make artifacts` and a trained checkpoint
+//! (`higgs train --config base`).
+
+use higgs::experiments::{figures, ExpContext};
+
+fn main() {
+    let cfg = std::env::var("HIGGS_BENCH_CFG").unwrap_or_else(|_| "base".into());
+    let ctx = match ExpContext::load(&cfg) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("fig1: skipping ({e:#}); run `make artifacts` first");
+            return;
+        }
+    };
+    let t0 = std::time::Instant::now();
+    match figures::fig1_error_model(&ctx) {
+        Ok((series, table)) => {
+            print!("{}", series.render());
+            print!("{}", table.render());
+            eprintln!("fig1 completed in {:.1}s", t0.elapsed().as_secs_f64());
+        }
+        Err(e) => eprintln!("fig1 failed: {e:#}"),
+    }
+}

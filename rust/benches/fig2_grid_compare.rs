@@ -1,0 +1,23 @@
+//! Bench: regenerate paper Figure 2 — NF vs AF vs HIGGS(p) at ~3.25
+//! bits (PPL on the trained model + grid-level MSE).
+
+use higgs::experiments::{figures, ExpContext};
+
+fn main() {
+    let cfg = std::env::var("HIGGS_BENCH_CFG").unwrap_or_else(|_| "base".into());
+    let ctx = match ExpContext::load(&cfg) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("fig2: skipping ({e:#})");
+            return;
+        }
+    };
+    let t0 = std::time::Instant::now();
+    match figures::fig2_grid_compare(&ctx) {
+        Ok(table) => {
+            print!("{}", table.render());
+            eprintln!("fig2 completed in {:.1}s", t0.elapsed().as_secs_f64());
+        }
+        Err(e) => eprintln!("fig2 failed: {e:#}"),
+    }
+}

@@ -1,0 +1,25 @@
+//! Bench: regenerate paper Figure 3 — PPL vs bitwidth budget for
+//! dynamic (non-uniform) HIGGS, with the linear-model prediction.
+
+use higgs::experiments::{figures, ExpContext};
+use higgs::linearity::calibrate::CalibMetric;
+
+fn main() {
+    let cfg = std::env::var("HIGGS_BENCH_CFG").unwrap_or_else(|_| "base".into());
+    let ctx = match ExpContext::load(&cfg) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("fig3: skipping ({e:#})");
+            return;
+        }
+    };
+    let t0 = std::time::Instant::now();
+    match figures::fig3_dynamic_sweep(&ctx, CalibMetric::Kl) {
+        Ok((series, table)) => {
+            print!("{}", series.render());
+            print!("{}", table.render());
+            eprintln!("fig3 completed in {:.1}s", t0.elapsed().as_secs_f64());
+        }
+        Err(e) => eprintln!("fig3 failed: {e:#}"),
+    }
+}

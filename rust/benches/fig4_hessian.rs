@@ -1,0 +1,25 @@
+//! Bench: regenerate paper Figure 4/5 (Appendix E) — diagonal dominance
+//! of the scaled Hessian D*∇²φD* (Assumption 3 validation). Uses the
+//! `tiny` model by default (finite differences over grad executions).
+
+use higgs::experiments::{figures, ExpContext};
+
+fn main() {
+    let cfg = std::env::var("HIGGS_BENCH_CFG").unwrap_or_else(|_| "tiny".into());
+    let per_layer = if std::env::var("HIGGS_BENCH_QUICK").is_ok() { 4 } else { 12 };
+    let ctx = match ExpContext::load(&cfg) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("fig4: skipping ({e:#})");
+            return;
+        }
+    };
+    let t0 = std::time::Instant::now();
+    match figures::fig4_hessian(&ctx, per_layer) {
+        Ok(table) => {
+            print!("{}", table.render());
+            eprintln!("fig4 completed in {:.1}s", t0.elapsed().as_secs_f64());
+        }
+        Err(e) => eprintln!("fig4 failed: {e:#}"),
+    }
+}

@@ -1,0 +1,130 @@
+//! Micro-benchmarks of the framework hot paths (the §Perf inputs):
+//! FWHT, grid nearest-neighbour, HIGGS layer quantization throughput,
+//! bit-packing, DP allocation, qmm kernel executions at serving shapes.
+
+use higgs::grids::registry::GridRegistry;
+use higgs::grids::GridKind;
+use higgs::hadamard::{fwht, rht_forward, signs_for};
+use higgs::quant::higgs::HiggsQuantizer;
+use higgs::quant::packing::{pack, unpack};
+use higgs::quant::Quantizer;
+use higgs::tensor::Tensor;
+use higgs::util::bench::BenchRunner;
+use higgs::util::prng::Rng;
+
+fn main() {
+    let mut r = BenchRunner::new();
+    let mut rng = Rng::new(1);
+
+    // FWHT over serving-typical group sizes
+    for g in [64usize, 256, 1024] {
+        let mut v = rng.normal_vec(g);
+        r.bench(&format!("fwht_g{g}_x1000"), || {
+            for _ in 0..1000 {
+                fwht(&mut v);
+            }
+            v[0]
+        });
+    }
+    // grouped RHT over a full layer column set
+    {
+        let n = 64 * 512;
+        let mut x = rng.normal_vec(n);
+        let signs = signs_for(0, "bench", n);
+        r.bench("rht_forward_32k", || {
+            rht_forward(&mut x, &signs, 64);
+            x[0]
+        });
+    }
+
+    // grid nearest-neighbour
+    let reg = GridRegistry::new();
+    for (n, p) in [(16usize, 1usize), (256, 2), (4096, 2)] {
+        let grid = reg.get(GridKind::Higgs, n, p);
+        let probes: Vec<f32> = rng.normal_vec(1024 * p);
+        r.bench(&format!("nearest_n{n}_p{p}_x1024"), || {
+            let mut acc = 0usize;
+            for c in probes.chunks(p) {
+                acc += grid.nearest(c);
+            }
+            acc
+        });
+    }
+
+    // HIGGS quantization throughput on a base-sized layer (512x192)
+    {
+        let w = Tensor::from_vec(&[512, 192], rng.normal_vec(512 * 192));
+        let grid = reg.get(GridKind::Higgs, 256, 2);
+        let q = HiggsQuantizer::new(grid, 64, 7);
+        let m = r.bench("higgs_quantize_512x192", || q.quantize("l", &w));
+        eprintln!(
+            "  -> {:.2} Mparam/s",
+            (512.0 * 192.0) / (m.median_ms / 1e3) / 1e6
+        );
+    }
+
+    // bit packing
+    {
+        let codes: Vec<u32> = (0..98304).map(|_| rng.below(16) as u32).collect();
+        r.bench("pack_98k_4bit", || pack(&codes, 4));
+        let packed = pack(&codes, 4);
+        r.bench("unpack_98k_4bit", || unpack(&packed, codes.len(), 4));
+    }
+
+    // DP allocation at paper scale: 224 layers × 8 grid choices
+    {
+        use higgs::alloc::{solve_dp, ErrorDb, GridChoice};
+        use higgs::linearity::calibrate::{CalibMetric, LayerAlphas};
+        let l_count = 224;
+        let db = ErrorDb {
+            layers: (0..l_count).map(|i| format!("l{i}")).collect(),
+            dims: (0..l_count)
+                .map(|i| if i % 3 == 0 { 16_777_216 } else { 58_720_256 })
+                .collect(),
+            choices: (0..8)
+                .map(|j| GridChoice { id: format!("g{j}"), bits: 2.0 + 0.25 * j as f64 + 0.25 })
+                .collect(),
+            t2: (0..l_count)
+                .map(|i| (0..8).map(|j| 0.2 / (1.5f64.powi(j)) * (1.0 + (i % 7) as f64 * 0.1)).collect())
+                .collect(),
+        };
+        let alphas = LayerAlphas {
+            metric: CalibMetric::Ppl,
+            alphas: (0..l_count).map(|i| (format!("l{i}"), 1.0 + (i % 5) as f64)).collect(),
+            base: 0.0,
+            noise_levels: vec![],
+        };
+        let m = r.bench("dp_alloc_224layers_8choices", || {
+            solve_dp(&db, &alphas, 3.25).unwrap()
+        });
+        eprintln!("  -> LLM-scale DP solve: {:.1} ms", m.median_ms);
+    }
+
+    // qmm kernel executions (if artifacts exist)
+    if higgs::artifacts_dir().join("qmm_dense_m1.hlo.txt").exists() {
+        let engine = higgs::runtime::Engine::new().unwrap();
+        let (k, n_cols, g) = (512usize, 512usize, 64usize);
+        for m in [1usize, 16] {
+            let x = higgs::runtime::HostArg::F32(rng.normal_vec(m * k), vec![m, k]);
+            let dense = engine.load(&format!("qmm_dense_m{m}")).unwrap();
+            let w = higgs::runtime::HostArg::F32(rng.normal_vec(k * n_cols), vec![k, n_cols]);
+            r.bench(&format!("qmm_dense_m{m}"), || {
+                engine.run(&dense, &[x.clone(), w.clone()]).unwrap()
+            });
+            let flute = engine.load(&format!("qmm_flute_p2_b4_m{m}")).unwrap();
+            let codes = higgs::runtime::HostArg::I32(
+                (0..(k / 2) * n_cols).map(|_| rng.below(256) as i32).collect(),
+                vec![k / 2, n_cols],
+            );
+            let scales =
+                higgs::runtime::HostArg::F32(rng.normal_vec((k / g) * n_cols), vec![k / g, n_cols]);
+            let lut = higgs::runtime::HostArg::F32(rng.normal_vec(512), vec![256, 2]);
+            r.bench(&format!("qmm_flute_p2_b4_m{m}"), || {
+                engine
+                    .run(&flute, &[x.clone(), codes.clone(), scales.clone(), lut.clone()])
+                    .unwrap()
+            });
+        }
+    }
+    eprintln!("micro_hotpaths done ({} measurements)", r.results.len());
+}

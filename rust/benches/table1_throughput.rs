@@ -1,0 +1,24 @@
+//! Bench: regenerate paper Table 1 — end-to-end decode throughput
+//! (tok/s) by backend (fp16 / uniform-MARLIN / NF-LUT / FLUTE-HIGGS)
+//! × batch size {1,4,16} × wbits {2,3,4} through the serving engine.
+
+use higgs::experiments::{tables, ExpContext};
+
+fn main() {
+    let cfg = std::env::var("HIGGS_BENCH_CFG").unwrap_or_else(|_| "base".into());
+    let ctx = match ExpContext::load(&cfg) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("table1: skipping ({e:#})");
+            return;
+        }
+    };
+    let t0 = std::time::Instant::now();
+    match tables::table1_throughput(&ctx) {
+        Ok(table) => {
+            print!("{}", table.render());
+            eprintln!("table1 completed in {:.1}s", t0.elapsed().as_secs_f64());
+        }
+        Err(e) => eprintln!("table1 failed: {e:#}"),
+    }
+}

@@ -1,0 +1,23 @@
+//! Bench: regenerate paper Table 2 — 1-shot (GPTQ-family) PPL at
+//! wbits ≈ {2,3,4}: GPTQ vs GPTQ+HIGGS(p=2) vs data-free HIGGS.
+
+use higgs::experiments::{tables, ExpContext};
+
+fn main() {
+    let cfg = std::env::var("HIGGS_BENCH_CFG").unwrap_or_else(|_| "base".into());
+    let ctx = match ExpContext::load(&cfg) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("table2: skipping ({e:#})");
+            return;
+        }
+    };
+    let t0 = std::time::Instant::now();
+    match tables::table2_gptq(&ctx) {
+        Ok(table) => {
+            print!("{}", table.render());
+            eprintln!("table2 completed in {:.1}s", t0.elapsed().as_secs_f64());
+        }
+        Err(e) => eprintln!("table2 failed: {e:#}"),
+    }
+}

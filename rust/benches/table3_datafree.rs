@@ -1,0 +1,25 @@
+//! Bench: regenerate paper Table 3 (and Tables 7–11 via
+//! HIGGS_BENCH_CFG=tiny/small/base) — the data-free method grid:
+//! NF / AF / HQQ / HIGGS(p) / dynamic HIGGS × bit tiers, reporting PPL
+//! + synthetic task accuracies.
+
+use higgs::experiments::{tables, ExpContext};
+
+fn main() {
+    let cfg = std::env::var("HIGGS_BENCH_CFG").unwrap_or_else(|_| "base".into());
+    let ctx = match ExpContext::load(&cfg) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("table3: skipping ({e:#})");
+            return;
+        }
+    };
+    let t0 = std::time::Instant::now();
+    match tables::table3_datafree(&ctx) {
+        Ok(table) => {
+            print!("{}", table.render());
+            eprintln!("table3 completed in {:.1}s", t0.elapsed().as_secs_f64());
+        }
+        Err(e) => eprintln!("table3 failed: {e:#}"),
+    }
+}

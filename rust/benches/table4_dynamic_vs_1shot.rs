@@ -1,0 +1,23 @@
+//! Bench: regenerate paper Table 4 — dynamic HIGGS (data-free KL and
+//! PPL-calibrated) vs GPTQ at matched budgets.
+
+use higgs::experiments::{tables, ExpContext};
+
+fn main() {
+    let cfg = std::env::var("HIGGS_BENCH_CFG").unwrap_or_else(|_| "base".into());
+    let ctx = match ExpContext::load(&cfg) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("table4: skipping ({e:#})");
+            return;
+        }
+    };
+    let t0 = std::time::Instant::now();
+    match tables::table4_dynamic_vs_1shot(&ctx) {
+        Ok(table) => {
+            print!("{}", table.render());
+            eprintln!("table4 completed in {:.1}s", t0.elapsed().as_secs_f64());
+        }
+        Err(e) => eprintln!("table4 failed: {e:#}"),
+    }
+}

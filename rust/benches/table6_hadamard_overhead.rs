@@ -1,0 +1,24 @@
+//! Bench: regenerate paper Table 6 (Appendix G) — FLUTE qmm kernel
+//! throughput with vs without the online activation Hadamard transform,
+//! across batch {1,4,16} × wbits {2,3,4}.
+
+use higgs::experiments::{tables, ExpContext};
+
+fn main() {
+    let cfg = std::env::var("HIGGS_BENCH_CFG").unwrap_or_else(|_| "base".into());
+    let ctx = match ExpContext::load(&cfg) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("table6: skipping ({e:#})");
+            return;
+        }
+    };
+    let t0 = std::time::Instant::now();
+    match tables::table6_hadamard_overhead(&ctx) {
+        Ok(table) => {
+            print!("{}", table.render());
+            eprintln!("table6 completed in {:.1}s", t0.elapsed().as_secs_f64());
+        }
+        Err(e) => eprintln!("table6 failed: {e:#}"),
+    }
+}

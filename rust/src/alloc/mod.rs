@@ -1,0 +1,420 @@
+//! Dynamic (non-uniform) bitwidth allocation — paper §5, problem (5):
+//!
+//!   min_{j_1..j_L}  Σ_l α_l · t²_{l,j_l}
+//!   s.t.            Σ_l b_{j_l} · d_l ≤ b_max · d
+//!
+//! A multiple-choice knapsack. The paper solves it with CP-SAT; we
+//! implement an **exact dynamic program** over a discretized budget
+//! (1/64-bit granularity — below any real grid spacing, so optimal for
+//! the instance), plus greedy and Lagrangian-relaxation baselines for
+//! the ablation benches.
+
+use crate::linearity::calibrate::LayerAlphas;
+use anyhow::{bail, Result};
+
+/// One quantizer option (a grid configuration) with measured per-layer
+/// errors.
+#[derive(Clone, Debug)]
+pub struct GridChoice {
+    /// human-readable id, e.g. "flute_p2_n64" or "ch8"
+    pub id: String,
+    /// effective bits/param (incl. scale overhead)
+    pub bits: f64,
+}
+
+/// The error database: t²_{l,j} for every (layer, option).
+#[derive(Clone, Debug)]
+pub struct ErrorDb {
+    pub layers: Vec<String>,
+    /// parameter count d_l per layer
+    pub dims: Vec<usize>,
+    pub choices: Vec<GridChoice>,
+    /// t2[l][j]
+    pub t2: Vec<Vec<f64>>,
+}
+
+impl ErrorDb {
+    pub fn validate(&self) -> Result<()> {
+        if self.layers.len() != self.dims.len() || self.layers.len() != self.t2.len() {
+            bail!("inconsistent ErrorDb dimensions");
+        }
+        for row in &self.t2 {
+            if row.len() != self.choices.len() {
+                bail!("t2 row has {} entries, want {}", row.len(), self.choices.len());
+            }
+        }
+        Ok(())
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.dims.iter().sum()
+    }
+}
+
+/// An allocation: per-layer choice index.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Allocation {
+    pub choice: Vec<usize>,
+    /// Σ α t² under the linear model
+    pub predicted_penalty: f64,
+    /// achieved average bits/param
+    pub avg_bits: f64,
+}
+
+impl Allocation {
+    pub fn describe(&self, db: &ErrorDb) -> String {
+        let mut out = String::new();
+        for (l, &j) in self.choice.iter().enumerate() {
+            out += &format!(
+                "{:<12} -> {:<16} ({:.2} bits, t2 {:.5})\n",
+                db.layers[l], db.choices[j].id, db.choices[j].bits, db.t2[l][j]
+            );
+        }
+        out += &format!(
+            "avg bits {:.3}, predicted penalty {:.4}\n",
+            self.avg_bits, self.predicted_penalty
+        );
+        out
+    }
+}
+
+fn alpha_vec(db: &ErrorDb, alphas: &LayerAlphas) -> Vec<f64> {
+    db.layers
+        .iter()
+        .map(|l| alphas.alpha(l).unwrap_or(1.0).max(0.0))
+        .collect()
+}
+
+fn finish(db: &ErrorDb, alphas: &[f64], choice: Vec<usize>) -> Allocation {
+    let d: f64 = db.total_params() as f64;
+    let bits: f64 = choice
+        .iter()
+        .enumerate()
+        .map(|(l, &j)| db.choices[j].bits * db.dims[l] as f64)
+        .sum::<f64>()
+        / d;
+    let pen: f64 =
+        choice.iter().enumerate().map(|(l, &j)| alphas[l] * db.t2[l][j]).sum();
+    Allocation { choice, predicted_penalty: pen, avg_bits: bits }
+}
+
+/// Budget discretization: 1/SCALE-bit granularity.
+const SCALE: f64 = 64.0;
+
+/// Exact multiple-choice-knapsack DP.
+///
+/// Cost of (l, j) = round(bits_j · SCALE) · (d_l / G) with G the gcd of
+/// all d_l; budget = floor(b_max · SCALE) · (d / G). Table size is
+/// budget_units × L — milliseconds at LLM scale.
+pub fn solve_dp(db: &ErrorDb, alphas: &LayerAlphas, b_max: f64) -> Result<Allocation> {
+    db.validate()?;
+    let a = alpha_vec(db, alphas);
+    let l_count = db.layers.len();
+    let j_count = db.choices.len();
+
+    let g = db.dims.iter().fold(0usize, |acc, &d| gcd(acc, d)).max(1);
+    let units: Vec<u64> = db.dims.iter().map(|&d| (d / g) as u64).collect();
+    let costs: Vec<u64> =
+        db.choices.iter().map(|c| (c.bits * SCALE).round() as u64).collect();
+    let budget: u64 = (b_max * SCALE).floor() as u64 * units.iter().sum::<u64>();
+    let budget = budget as usize;
+
+    // infeasibility check: the cheapest assignment must fit
+    let min_cost: u64 = units
+        .iter()
+        .map(|&u| costs.iter().min().unwrap() * u)
+        .sum();
+    if min_cost as usize > budget {
+        bail!(
+            "budget b_max={b_max} infeasible: cheapest config needs {:.3} bits/param",
+            db.choices.iter().map(|c| c.bits).fold(f64::INFINITY, f64::min)
+        );
+    }
+
+    const INF: f64 = f64::INFINITY;
+    // dp[b] = best penalty using layers 0..l with total cost exactly ≤ b
+    let mut dp = vec![INF; budget + 1];
+    dp[0] = 0.0;
+    // choice backtracking: u8 per (layer, budget) cell
+    let mut back: Vec<Vec<u8>> = Vec::with_capacity(l_count);
+    assert!(j_count < 255);
+
+    for l in 0..l_count {
+        let mut ndp = vec![INF; budget + 1];
+        let mut nb = vec![255u8; budget + 1];
+        for j in 0..j_count {
+            let cost = (costs[j] * units[l]) as usize;
+            let pen = a[l] * db.t2[l][j];
+            if cost > budget {
+                continue;
+            }
+            for b in cost..=budget {
+                let prev = dp[b - cost];
+                if prev + pen < ndp[b] {
+                    ndp[b] = prev + pen;
+                    nb[b] = j as u8;
+                }
+            }
+        }
+        // prefix-min so dp[b] = best with cost ≤ b (keep argmin's cell)
+        dp = ndp;
+        back.push(nb);
+    }
+
+    // best end state: min over b of dp[b]; track exact b for backtrack
+    let mut best_b = 0usize;
+    let mut best = INF;
+    for b in 0..=budget {
+        if dp[b] < best {
+            best = dp[b];
+            best_b = b;
+        }
+    }
+    if !best.is_finite() {
+        bail!("DP found no feasible assignment (budget {budget})");
+    }
+    // backtrack
+    let mut choice = vec![0usize; l_count];
+    let mut b = best_b;
+    for l in (0..l_count).rev() {
+        let j = back[l][b] as usize;
+        assert!(j < j_count, "backtrack inconsistency at layer {l}");
+        choice[l] = j;
+        b -= (costs[j] * units[l]) as usize;
+    }
+    Ok(finish(db, &a, choice))
+}
+
+/// Greedy baseline: start everything at the cheapest option, repeatedly
+/// take the upgrade with the best Δpenalty/Δcost until the budget is
+/// exhausted.
+pub fn solve_greedy(db: &ErrorDb, alphas: &LayerAlphas, b_max: f64) -> Result<Allocation> {
+    db.validate()?;
+    let a = alpha_vec(db, alphas);
+    let l_count = db.layers.len();
+    let cheapest = (0..db.choices.len())
+        .min_by(|&x, &y| db.choices[x].bits.partial_cmp(&db.choices[y].bits).unwrap())
+        .unwrap();
+    let mut choice = vec![cheapest; l_count];
+    let d: f64 = db.total_params() as f64;
+    let budget_bits = b_max * d;
+    let mut used: f64 = choice
+        .iter()
+        .enumerate()
+        .map(|(l, &j)| db.choices[j].bits * db.dims[l] as f64)
+        .sum();
+    if used > budget_bits {
+        bail!("budget infeasible for greedy");
+    }
+    loop {
+        // best upgrade across (layer, option)
+        let mut best: Option<(f64, usize, usize)> = None;
+        for l in 0..l_count {
+            let cur = choice[l];
+            for j in 0..db.choices.len() {
+                let dcost = (db.choices[j].bits - db.choices[cur].bits) * db.dims[l] as f64;
+                if dcost <= 0.0 || used + dcost > budget_bits {
+                    continue;
+                }
+                let dpen = a[l] * (db.t2[l][cur] - db.t2[l][j]);
+                if dpen <= 0.0 {
+                    continue;
+                }
+                let ratio = dpen / dcost;
+                if best.map(|(r, _, _)| ratio > r).unwrap_or(true) {
+                    best = Some((ratio, l, j));
+                }
+            }
+        }
+        match best {
+            Some((_, l, j)) => {
+                used += (db.choices[j].bits - db.choices[choice[l]].bits) * db.dims[l] as f64;
+                choice[l] = j;
+            }
+            None => break,
+        }
+    }
+    Ok(finish(db, &a, choice))
+}
+
+/// Lagrangian relaxation: bisection on λ of
+/// min_j α_l t²_{l,j} + λ b_j d_l per layer (decomposable).
+pub fn solve_lagrange(db: &ErrorDb, alphas: &LayerAlphas, b_max: f64) -> Result<Allocation> {
+    db.validate()?;
+    let a = alpha_vec(db, alphas);
+    let d: f64 = db.total_params() as f64;
+    let budget_bits = b_max * d;
+    let assign = |lambda: f64| -> Vec<usize> {
+        (0..db.layers.len())
+            .map(|l| {
+                (0..db.choices.len())
+                    .min_by(|&x, &y| {
+                        let fx = a[l] * db.t2[l][x] + lambda * db.choices[x].bits * db.dims[l] as f64;
+                        let fy = a[l] * db.t2[l][y] + lambda * db.choices[y].bits * db.dims[l] as f64;
+                        fx.partial_cmp(&fy).unwrap()
+                    })
+                    .unwrap()
+            })
+            .collect()
+    };
+    let bits_of = |c: &[usize]| -> f64 {
+        c.iter().enumerate().map(|(l, &j)| db.choices[j].bits * db.dims[l] as f64).sum()
+    };
+    let (mut lo, mut hi) = (0.0f64, 1.0f64);
+    // grow hi until feasible
+    while bits_of(&assign(hi)) > budget_bits && hi < 1e9 {
+        hi *= 4.0;
+    }
+    if bits_of(&assign(hi)) > budget_bits {
+        bail!("lagrange: budget infeasible");
+    }
+    let mut best = assign(hi);
+    for _ in 0..60 {
+        let mid = 0.5 * (lo + hi);
+        let c = assign(mid);
+        if bits_of(&c) <= budget_bits {
+            best = c;
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+    }
+    Ok(finish(db, &a, best))
+}
+
+fn gcd(a: usize, b: usize) -> usize {
+    if b == 0 {
+        a
+    } else {
+        gcd(b, a % b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linearity::calibrate::CalibMetric;
+    use crate::util::propcheck::forall;
+
+    fn toy_db() -> ErrorDb {
+        ErrorDb {
+            layers: vec!["a".into(), "b".into(), "c".into()],
+            dims: vec![1000, 2000, 1000],
+            choices: vec![
+                GridChoice { id: "2bit".into(), bits: 2.25 },
+                GridChoice { id: "3bit".into(), bits: 3.25 },
+                GridChoice { id: "4bit".into(), bits: 4.25 },
+            ],
+            // layer b is very sensitive
+            t2: vec![
+                vec![0.20, 0.06, 0.015],
+                vec![0.20, 0.06, 0.015],
+                vec![0.20, 0.06, 0.015],
+            ],
+        }
+    }
+
+    fn toy_alphas() -> LayerAlphas {
+        LayerAlphas {
+            metric: CalibMetric::Ppl,
+            alphas: vec![("a".into(), 1.0), ("b".into(), 20.0), ("c".into(), 1.0)],
+            base: 0.0,
+            noise_levels: vec![],
+        }
+    }
+
+    #[test]
+    fn dp_respects_budget_and_sensitivity() {
+        let db = toy_db();
+        let al = toy_alphas();
+        let sol = solve_dp(&db, &al, 3.25).unwrap();
+        assert!(sol.avg_bits <= 3.25 + 1e-9, "{}", sol.avg_bits);
+        // sensitive layer b gets at least as many bits as a and c
+        let bits = |j: usize| db.choices[j].bits;
+        assert!(bits(sol.choice[1]) >= bits(sol.choice[0]));
+        assert!(bits(sol.choice[1]) >= bits(sol.choice[2]));
+        // with α_b = 20 the solver should give b the 4-bit grid
+        assert_eq!(sol.choice[1], 2, "{:?}", sol.choice);
+    }
+
+    #[test]
+    fn dp_uniform_when_alphas_equal() {
+        let db = toy_db();
+        let al = LayerAlphas {
+            metric: CalibMetric::Ppl,
+            alphas: vec![("a".into(), 1.0), ("b".into(), 1.0), ("c".into(), 1.0)],
+            base: 0.0,
+            noise_levels: vec![],
+        };
+        let sol = solve_dp(&db, &al, 3.25).unwrap();
+        // equal sensitivities + equal t² rows → uniform 3-bit assignment
+        assert_eq!(sol.choice, vec![1, 1, 1]);
+    }
+
+    #[test]
+    fn dp_no_worse_than_greedy_and_lagrange() {
+        forall("dp optimality", 25, |g| {
+            let l_count = g.usize_in(2, 6);
+            let db = ErrorDb {
+                layers: (0..l_count).map(|i| format!("l{i}")).collect(),
+                dims: (0..l_count).map(|_| 256 * g.usize_in(1, 8)).collect(),
+                choices: vec![
+                    GridChoice { id: "2".into(), bits: 2.25 },
+                    GridChoice { id: "3".into(), bits: 3.25 },
+                    GridChoice { id: "4".into(), bits: 4.25 },
+                    GridChoice { id: "8".into(), bits: 8.25 },
+                ],
+                t2: (0..l_count)
+                    .map(|_| {
+                        let base = g.f64_in(0.05, 0.3);
+                        vec![base, base * 0.3, base * 0.08, base * 0.001]
+                    })
+                    .collect(),
+            };
+            let al = LayerAlphas {
+                metric: CalibMetric::Ppl,
+                alphas: (0..l_count)
+                    .map(|i| (format!("l{i}"), g.f64_in(0.1, 10.0)))
+                    .collect(),
+                base: 0.0,
+                noise_levels: vec![],
+            };
+            let b_max = g.f64_in(2.5, 6.0);
+            let dp = solve_dp(&db, &al, b_max).unwrap();
+            let gr = solve_greedy(&db, &al, b_max).unwrap();
+            let lg = solve_lagrange(&db, &al, b_max).unwrap();
+            assert!(dp.avg_bits <= b_max + 1e-9);
+            assert!(
+                dp.predicted_penalty <= gr.predicted_penalty + 1e-9,
+                "dp {} greedy {}",
+                dp.predicted_penalty,
+                gr.predicted_penalty
+            );
+            assert!(
+                dp.predicted_penalty <= lg.predicted_penalty + 1e-9,
+                "dp {} lagrange {}",
+                dp.predicted_penalty,
+                lg.predicted_penalty
+            );
+        });
+    }
+
+    #[test]
+    fn penalty_decreases_with_budget() {
+        let db = toy_db();
+        let al = toy_alphas();
+        let p3 = solve_dp(&db, &al, 3.0).unwrap().predicted_penalty;
+        let p4 = solve_dp(&db, &al, 4.0).unwrap().predicted_penalty;
+        let p5 = solve_dp(&db, &al, 4.5).unwrap().predicted_penalty;
+        assert!(p3 > p4 && p4 >= p5, "{p3} {p4} {p5}");
+    }
+
+    #[test]
+    fn infeasible_budget_rejected() {
+        let db = toy_db();
+        let al = toy_alphas();
+        assert!(solve_dp(&db, &al, 1.0).is_err());
+        assert!(solve_greedy(&db, &al, 1.0).is_err());
+        assert!(solve_lagrange(&db, &al, 1.0).is_err());
+    }
+}

@@ -1,0 +1,164 @@
+//! Config system: typed model / quantization / serving configs parsed
+//! from a minimal key-value format (the same format aot.py emits as
+//! `artifacts/config_<name>.txt`) plus `key=value` CLI overrides.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Transformer shape — mirrors `python/compile/configs.py` exactly; the
+/// artifact manifests are the ABI, this is the rust-side view.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub seq: usize,
+    pub group: usize,
+}
+
+impl ModelConfig {
+    pub fn d_head(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// Ordered quantizable linear layers: (name, (k_in, n_out)).
+    pub fn linear_shapes(&self) -> Vec<(String, (usize, usize))> {
+        let mut out = Vec::new();
+        for i in 0..self.n_layers {
+            let d = self.d_model;
+            let f = self.d_ff;
+            out.push((format!("l{i}.wq"), (d, d)));
+            out.push((format!("l{i}.wk"), (d, d)));
+            out.push((format!("l{i}.wv"), (d, d)));
+            out.push((format!("l{i}.wo"), (d, d)));
+            out.push((format!("l{i}.w_gate"), (d, f)));
+            out.push((format!("l{i}.w_up"), (d, f)));
+            out.push((format!("l{i}.w_down"), (f, d)));
+        }
+        out
+    }
+
+    /// Total parameters in quantizable linear layers.
+    pub fn linear_params(&self) -> usize {
+        self.linear_shapes().iter().map(|(_, (k, n))| k * n).sum()
+    }
+
+    /// Total model parameters (incl. embed + norms).
+    pub fn total_params(&self) -> usize {
+        self.linear_params()
+            + self.vocab * self.d_model
+            + (2 * self.n_layers + 1) * self.d_model
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let kv = parse_kv_file(path)?;
+        let get = |k: &str| -> Result<usize> {
+            kv.get(k)
+                .with_context(|| format!("config {} missing key {k}", path.display()))?
+                .parse::<usize>()
+                .with_context(|| format!("bad value for {k}"))
+        };
+        Ok(ModelConfig {
+            name: kv.get("name").cloned().unwrap_or_default(),
+            vocab: get("vocab")?,
+            d_model: get("d_model")?,
+            n_layers: get("n_layers")?,
+            n_heads: get("n_heads")?,
+            d_ff: get("d_ff")?,
+            seq: get("seq")?,
+            group: get("group")?,
+        })
+    }
+
+    pub fn load_named(artifacts: &Path, name: &str) -> Result<Self> {
+        Self::load(&artifacts.join(format!("config_{name}.txt")))
+    }
+}
+
+/// Parse a `key value` / `key = value` per-line file into a map.
+/// Lines starting with `#` are comments.
+pub fn parse_kv_file(path: &Path) -> Result<BTreeMap<String, String>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("read {}", path.display()))?;
+    parse_kv(&text)
+}
+
+pub fn parse_kv(text: &str) -> Result<BTreeMap<String, String>> {
+    let mut map = BTreeMap::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (k, v) = if let Some((k, v)) = line.split_once('=') {
+            (k, v)
+        } else if let Some((k, v)) = line.split_once(char::is_whitespace) {
+            (k, v)
+        } else {
+            bail!("line {}: expected `key value`, got {line:?}", lineno + 1);
+        };
+        map.insert(k.trim().to_string(), v.trim().to_string());
+    }
+    Ok(map)
+}
+
+/// Parse CLI-style overrides `a=1 b=x` into a map.
+pub fn parse_overrides(args: &[String]) -> Result<BTreeMap<String, String>> {
+    let mut map = BTreeMap::new();
+    for a in args {
+        let Some((k, v)) = a.split_once('=') else {
+            bail!("expected key=value override, got {a:?}");
+        };
+        map.insert(k.to_string(), v.to_string());
+    }
+    Ok(map)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_kv_formats() {
+        let m = parse_kv("a 1\nb = two\n# comment\n\nc\t3").unwrap();
+        assert_eq!(m["a"], "1");
+        assert_eq!(m["b"], "two");
+        assert_eq!(m["c"], "3");
+    }
+
+    #[test]
+    fn parse_kv_rejects_bare_word() {
+        assert!(parse_kv("novalue").is_err());
+    }
+
+    #[test]
+    fn linear_shapes_layout() {
+        let c = ModelConfig {
+            name: "t".into(),
+            vocab: 64,
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 64,
+            seq: 32,
+            group: 16,
+        };
+        let ls = c.linear_shapes();
+        assert_eq!(ls.len(), 14);
+        assert_eq!(ls[0], ("l0.wq".to_string(), (32, 32)));
+        assert_eq!(ls[6], ("l0.w_down".to_string(), (64, 32)));
+        // params: per layer 4*32*32 + 3*32*64 = 10240; x2 layers
+        assert_eq!(c.linear_params(), 20480);
+    }
+
+    #[test]
+    fn overrides() {
+        let m = parse_overrides(&["steps=10".into(), "out=x.bin".into()]).unwrap();
+        assert_eq!(m["steps"], "10");
+        assert!(parse_overrides(&["bad".into()]).is_err());
+    }
+}

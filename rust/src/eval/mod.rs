@@ -1,0 +1,186 @@
+//! Evaluation: perplexity, KL divergence (the data-free calibration
+//! metric of §5), and the synthetic in-context probe tasks that stand in
+//! for the paper's zero-shot suite (ARC/PiQA/Wino/HellaSwag → copy /
+//! grammar / cloze accuracy).
+
+pub mod tasks;
+
+use crate::config::ModelConfig;
+use crate::data::{Corpus, Split};
+use crate::model::Weights;
+use crate::runtime::{dense_args, Engine, HostArg};
+use anyhow::Result;
+
+pub const EVAL_BATCH: usize = 8;
+
+pub struct Evaluator<'a> {
+    pub engine: &'a Engine,
+    pub cfg: ModelConfig,
+    pub corpus: Corpus,
+    /// number of batches for PPL (more = smoother, slower)
+    pub ppl_batches: usize,
+}
+
+impl<'a> Evaluator<'a> {
+    pub fn new(engine: &'a Engine, cfg: ModelConfig) -> Self {
+        let corpus = Corpus::new(cfg.vocab, cfg.seq, 0xC0_1155);
+        Evaluator { engine, cfg, corpus, ppl_batches: 4 }
+    }
+
+    /// Validation perplexity: exp(mean token cross-entropy).
+    pub fn perplexity(&self, weights: &Weights) -> Result<f64> {
+        let exe = self.engine.load(&format!("fwd_loss_{}", self.cfg.name))?;
+        let mut total = 0.0f64;
+        for b in 0..self.ppl_batches {
+            let toks = self.corpus.batch(Split::Val, b * EVAL_BATCH, EVAL_BATCH);
+            let args = dense_args(
+                &exe.manifest,
+                vec![HostArg::I32(toks, vec![EVAL_BATCH, self.cfg.seq])],
+                weights,
+            )?;
+            let outs = self.engine.run(&exe, &args)?;
+            total += outs[0].data[0] as f64;
+        }
+        Ok((total / self.ppl_batches as f64).exp())
+    }
+
+    /// Mean loss (not exponentiated) — used by the Hessian probes.
+    pub fn loss(&self, weights: &Weights, batches: usize) -> Result<f64> {
+        let exe = self.engine.load(&format!("fwd_loss_{}", self.cfg.name))?;
+        let mut total = 0.0f64;
+        for b in 0..batches {
+            let toks = self.corpus.batch(Split::Val, b * EVAL_BATCH, EVAL_BATCH);
+            let args = dense_args(
+                &exe.manifest,
+                vec![HostArg::I32(toks, vec![EVAL_BATCH, self.cfg.seq])],
+                weights,
+            )?;
+            total += self.engine.run(&exe, &args)?[0].data[0] as f64;
+        }
+        Ok(total / batches as f64)
+    }
+
+    /// Logits on a token batch [EVAL_BATCH, seq] → [B*S, V] flattened.
+    pub fn logits(&self, weights: &Weights, tokens: Vec<i32>) -> Result<Vec<f32>> {
+        let exe = self.engine.load(&format!("fwd_logits_{}", self.cfg.name))?;
+        let args = dense_args(
+            &exe.manifest,
+            vec![HostArg::I32(tokens, vec![EVAL_BATCH, self.cfg.seq])],
+            weights,
+        )?;
+        Ok(self.engine.run(&exe, &args)?.remove(0).data)
+    }
+
+    /// Mean KL( P_ref ‖ P_q ) on uniformly random tokens — the paper's
+    /// data-free calibration objective (§5 "Data Free Dynamic
+    /// Quantization": "KL-divergence between pretrained and quantized
+    /// models on randomly sampled text tokens").
+    pub fn kl_on_random(
+        &self,
+        reference: &Weights,
+        quantized: &Weights,
+        batches: usize,
+        seed: u64,
+    ) -> Result<f64> {
+        let v = self.cfg.vocab;
+        let mut total = 0.0f64;
+        let mut count = 0usize;
+        for b in 0..batches {
+            let toks = self
+                .corpus
+                .random_tokens(seed ^ (b as u64), EVAL_BATCH * self.cfg.seq);
+            let lr = self.logits(reference, toks.clone())?;
+            let lq = self.logits(quantized, toks)?;
+            for (pr, pq) in lr.chunks(v).zip(lq.chunks(v)) {
+                total += kl_logits(pr, pq);
+                count += 1;
+            }
+        }
+        Ok(total / count as f64)
+    }
+}
+
+/// KL(softmax(a) ‖ softmax(b)) for one logit row.
+pub fn kl_logits(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let lza = log_sum_exp(a);
+    let lzb = log_sum_exp(b);
+    let mut kl = 0.0f64;
+    for (&x, &y) in a.iter().zip(b) {
+        let la = x as f64 - lza;
+        let lb = y as f64 - lzb;
+        kl += la.exp() * (la - lb);
+    }
+    kl.max(0.0)
+}
+
+pub fn log_sum_exp(xs: &[f32]) -> f64 {
+    let m = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let s: f64 = xs.iter().map(|&x| ((x as f64) - m).exp()).sum();
+    m + s.ln()
+}
+
+/// Softmax argmax of a logit row.
+pub fn argmax(xs: &[f32]) -> usize {
+    xs.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kl_zero_on_identical() {
+        let a = [0.3f32, -1.0, 2.0, 0.0];
+        assert!(kl_logits(&a, &a).abs() < 1e-9);
+    }
+
+    #[test]
+    fn kl_positive_and_asymmetric() {
+        let a = [2.0f32, 0.0, 0.0];
+        let b = [0.0f32, 2.0, 0.0];
+        let kab = kl_logits(&a, &b);
+        let kba = kl_logits(&b, &a);
+        assert!(kab > 0.1);
+        assert!(kab > 0.0 && kba > 0.0);
+    }
+
+    #[test]
+    fn kl_grows_with_divergence() {
+        let a = [1.0f32, 0.0];
+        let near = [0.9f32, 0.0];
+        let far = [-3.0f32, 0.0];
+        assert!(kl_logits(&a, &near) < kl_logits(&a, &far));
+    }
+
+    #[test]
+    fn lse_stable() {
+        let xs = [1000.0f32, 1000.0];
+        let v = log_sum_exp(&xs);
+        assert!((v - (1000.0 + (2.0f64).ln())).abs() < 1e-6);
+    }
+
+    #[test]
+    fn argmax_basic() {
+        assert_eq!(argmax(&[0.1, 5.0, -2.0]), 1);
+    }
+
+    #[test]
+    fn ppl_on_tiny_artifacts() {
+        if !crate::artifacts_dir().join("fwd_loss_tiny.hlo.txt").exists() {
+            return;
+        }
+        let eng = Engine::new().unwrap();
+        let cfg = ModelConfig::load_named(eng.artifacts(), "tiny").unwrap();
+        let exe = eng.load("fwd_loss_tiny").unwrap();
+        let w = Weights::from_manifest(cfg.clone(), &exe.manifest, Some(1)).unwrap();
+        let ev = Evaluator::new(&eng, cfg.clone());
+        let ppl = ev.perplexity(&w).unwrap();
+        // random model: PPL ≈ vocab
+        assert!(ppl > 0.5 * cfg.vocab as f64 && ppl < 2.0 * cfg.vocab as f64, "{ppl}");
+    }
+}

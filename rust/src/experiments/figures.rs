@@ -1,0 +1,277 @@
+//! Figure drivers: Fig. 1 (error-model validation), Fig. 2 (grid
+//! comparison), Fig. 3 (dynamic bitwidth sweep), Fig. 4/5 (Hessian
+//! diagonal dominance).
+
+use super::ExpContext;
+use crate::alloc::{solve_dp, ErrorDb, GridChoice};
+use crate::grids::registry::effective_bits;
+use crate::grids::GridKind;
+use crate::linearity::calibrate::CalibMetric;
+use crate::linearity::hessian::HessianProbe;
+
+use crate::quant::higgs::HiggsQuantizer;
+use crate::quant::{QuantizedModel, Quantizer};
+use crate::report::{Series, Table};
+use anyhow::Result;
+
+/// Fig. 1: measured vs predicted PPL for uniform HIGGS quantization
+/// across the 2–8-bit range.
+pub fn fig1_error_model(ctx: &ExpContext) -> Result<(Series, Table)> {
+    // grids on the PPL-vs-bits Pareto frontier (paper §6.1), adapted to
+    // p ∈ {1,2} (our serving-supported dims) plus p=3 for coverage.
+    let grid_specs: &[(usize, usize)] = &[
+        (2, 1),    // 1.25 bits — below the theorem's applicability edge
+        (8, 2),    // 1.75
+        (4, 1),    // 2.25
+        (16, 2),   // 2.25
+        (64, 2),   // 3.25
+        (8, 1),    // 3.25
+        (16, 1),   // 4.25
+        (256, 2),  // 4.25
+        (64, 1),   // 6.25
+        (4096, 2), // 6.25
+        (256, 1),  // 8.25
+    ];
+    let alphas = ctx.alphas(CalibMetric::Ppl, ctx.default_j())?;
+    let ev = ctx.evaluator();
+    // Anchor predictions at the figure evaluator's own base PPL: the
+    // theorem predicts the *increase* Σ α t²; the calibration pass used
+    // a smaller eval subset whose base differs slightly.
+    let base_ppl = ev.perplexity(&ctx.weights)?;
+    let mut measured = Vec::new();
+    let mut predicted = Vec::new();
+    let mut table = Table::new(
+        "Fig 1: measured vs predicted PPL (uniform HIGGS)",
+        &["grid", "bits", "measured_ppl", "predicted_ppl", "delta_err_%"],
+    );
+    for &(n, p) in grid_specs {
+        let grid = ctx.registry.get(GridKind::Higgs, n, p);
+        let q = HiggsQuantizer::new(grid, ctx.cfg.group, ctx.seed);
+        let qm = QuantizedModel::quantize_all(&ctx.weights, &q);
+        let bits = effective_bits(n, p, ctx.cfg.group);
+        let deq = qm.apply_to(&ctx.weights);
+        let m = ev.perplexity(&deq)?;
+        let t2 = qm.layer_errors(&ctx.weights);
+        let pr = base_ppl + crate::linearity::predict::predict_penalty(&alphas, &t2);
+        measured.push((bits, m));
+        predicted.push((bits, pr));
+        let rel = (pr - m).abs() / m * 100.0;
+        table.row(vec![
+            format!("n{n}_p{p}"),
+            format!("{bits:.2}"),
+            format!("{m:.4}"),
+            format!("{pr:.4}"),
+            format!("{rel:.1}"),
+        ]);
+    }
+    let mut s = Series::new("Fig 1: PPL vs bits", "bits/param");
+    s.line("measured", measured);
+    s.line("predicted (Thm 1)", predicted);
+    Ok((s, table))
+}
+
+/// Fig. 2: NF vs AF vs HIGGS(p) at matched bit tiers.
+///
+/// Our small models are noticeably more quantization-robust than
+/// billion-parameter Llamas, so the PPL separation the paper sees at
+/// 3.25 bits appears here one tier lower — both tiers are reported.
+pub fn fig2_grid_compare(ctx: &ExpContext) -> Result<Table> {
+    let ev = ctx.evaluator();
+    let mut t = Table::new(
+        "Fig 2: grid comparison (NF vs AF vs HIGGS)",
+        &["tier", "method", "bits", "grid_mse", "weight_t2", "ppl"],
+    );
+    let base = ev.perplexity(&ctx.weights)?;
+    t.row(vec![
+        "-".into(),
+        "fp32".into(),
+        "32".into(),
+        "-".into(),
+        "0".into(),
+        format!("{base:.4}"),
+    ]);
+    let g = ctx.cfg.group;
+    let mut run = |tier: &str, label: &str, q: &dyn Quantizer, grid_mse: f64| -> Result<()> {
+        let qm = QuantizedModel::quantize_all(&ctx.weights, q);
+        let deq = qm.apply_to(&ctx.weights);
+        let ppl = ev.perplexity(&deq)?;
+        let t2 = qm
+            .layer_errors(&ctx.weights)
+            .iter()
+            .map(|(_, e)| e)
+            .sum::<f64>()
+            / qm.layers.len() as f64;
+        t.row(vec![
+            tier.to_string(),
+            label.to_string(),
+            format!("{:.2}", qm.avg_bits()),
+            if grid_mse > 0.0 { format!("{grid_mse:.4}") } else { "-".into() },
+            format!("{t2:.4}"),
+            format!("{ppl:.4}"),
+        ]);
+        Ok(())
+    };
+    // bits/dim ∈ {2, 3}; p ∈ {1,2,4} (p must divide the scale group in
+    // the column layout; the paper's p=3 needs the flat-vector layout).
+    for bits_per_dim in [2usize, 3] {
+        let tier = format!("{bits_per_dim}.25");
+        let n_scalar = 1usize << bits_per_dim;
+        let nf = ctx.registry.get(GridKind::Nf, n_scalar, 1);
+        run(&tier, "NF", &crate::quant::lut::LutQuantizer::new(nf.clone(), g), nf.mse)?;
+        let af = ctx.registry.get(GridKind::Af, n_scalar, 1);
+        run(&tier, "AF", &crate::quant::lut::LutQuantizer::new(af.clone(), g), af.mse)?;
+        for p in [1usize, 2, 4] {
+            let n = 1usize << (bits_per_dim * p);
+            if n > 4096 {
+                continue;
+            }
+            let grid = ctx.registry.get(GridKind::Higgs, n, p);
+            let mse = grid.mse;
+            run(
+                &tier,
+                &format!("HIGGS p={p}"),
+                &HiggsQuantizer::new(grid, g, ctx.seed),
+                mse,
+            )?;
+        }
+    }
+    Ok(t)
+}
+
+/// The FLUTE-supported grid choices + CH8 used by dynamic HIGGS (§4.3).
+pub fn flute_choices(ctx: &ExpContext) -> Vec<(GridChoice, Box<dyn Quantizer>)> {
+    let g = ctx.cfg.group;
+    let mut out: Vec<(GridChoice, Box<dyn Quantizer>)> = Vec::new();
+    for bits in [2usize, 3, 4] {
+        let n = 1usize << (2 * bits);
+        let grid = ctx.registry.get(GridKind::Higgs, n, 2);
+        out.push((
+            GridChoice {
+                id: format!("flute_p2_b{bits}"),
+                bits: effective_bits(n, 2, g),
+            },
+            Box::new(HiggsQuantizer::new(grid, g, ctx.seed)),
+        ));
+    }
+    // CH8: constrained-uniform 8-bit (kernel-supported high precision)
+    let ug = ctx.registry.get(GridKind::Uniform, 256, 1);
+    out.push((
+        GridChoice { id: "ch8".into(), bits: effective_bits(256, 1, g) },
+        Box::new(crate::quant::lut::LutQuantizer::new(ug, g)),
+    ));
+    out
+}
+
+/// Build the per-layer error database over the FLUTE choices.
+pub fn build_error_db(
+    ctx: &ExpContext,
+    choices: &[(GridChoice, Box<dyn Quantizer>)],
+) -> (ErrorDb, Vec<QuantizedModel>) {
+    let layers = ctx.weights.linear_names();
+    let dims: Vec<usize> =
+        ctx.cfg.linear_shapes().iter().map(|(_, (k, n))| k * n).collect();
+    let mut t2 = vec![vec![0.0; choices.len()]; layers.len()];
+    let mut models = Vec::new();
+    for (j, (_, q)) in choices.iter().enumerate() {
+        let qm = QuantizedModel::quantize_all(&ctx.weights, q.as_ref());
+        for (l, (_, e)) in qm.layer_errors(&ctx.weights).iter().enumerate() {
+            t2[l][j] = *e;
+        }
+        models.push(qm);
+    }
+    (
+        ErrorDb {
+            layers,
+            dims,
+            choices: choices.iter().map(|(c, _)| c.clone()).collect(),
+            t2,
+        },
+        models,
+    )
+}
+
+/// Assemble a mixed quantized model from per-layer choice indices.
+pub fn assemble_mixed(models: &[QuantizedModel], db: &ErrorDb, choice: &[usize]) -> QuantizedModel {
+    let layers = db
+        .layers
+        .iter()
+        .enumerate()
+        .map(|(l, name)| models[choice[l]].get(name).unwrap().clone())
+        .collect();
+    QuantizedModel::from_layers(layers)
+}
+
+/// Fig. 3: PPL vs bitwidth budget for dynamic HIGGS, with the linear
+/// model prediction as the dotted line.
+pub fn fig3_dynamic_sweep(ctx: &ExpContext, metric: CalibMetric) -> Result<(Series, Table)> {
+    let alphas = ctx.alphas(metric, ctx.default_j())?;
+    let ppl_alphas = ctx.alphas(CalibMetric::Ppl, ctx.default_j())?;
+    let choices = flute_choices(ctx);
+    let (db, models) = build_error_db(ctx, &choices);
+    let ev = ctx.evaluator();
+    let budgets = [2.5, 2.75, 3.0, 3.25, 3.5, 4.0, 4.25, 5.0, 6.0];
+    let base_ppl = ev.perplexity(&ctx.weights)?;
+    let mut measured = Vec::new();
+    let mut predicted = Vec::new();
+    let mut table = Table::new(
+        "Fig 3: dynamic HIGGS PPL vs budget",
+        &["b_max", "avg_bits", "measured_ppl", "predicted_ppl"],
+    );
+    for &b in &budgets {
+        let sol = match solve_dp(&db, &alphas, b) {
+            Ok(s) => s,
+            Err(_) => continue, // infeasible budget
+        };
+        let qm = assemble_mixed(&models, &db, &sol.choice);
+        let ppl = ev.perplexity(&qm.apply_to(&ctx.weights))?;
+        let pred = base_ppl
+            + crate::linearity::predict::predict_penalty(
+                &ppl_alphas,
+                &qm.layer_errors(&ctx.weights),
+            );
+        measured.push((b, ppl));
+        predicted.push((b, pred));
+        table.row(vec![
+            format!("{b:.2}"),
+            format!("{:.3}", sol.avg_bits),
+            format!("{ppl:.4}"),
+            format!("{pred:.4}"),
+        ]);
+    }
+    let mut s = Series::new("Fig 3: PPL vs budget b_max (dynamic)", "b_max");
+    s.line("measured", measured);
+    s.line("linear model", predicted);
+    Ok((s, table))
+}
+
+/// Fig. 4/5 (App. E): diagonal dominance of D* ∇²φ D*.
+pub fn fig4_hessian(ctx: &ExpContext, per_layer: usize) -> Result<Table> {
+    let layers: Vec<String> = ctx
+        .weights
+        .linear_names()
+        .into_iter()
+        .filter(|n| n.ends_with(".wq") || n.ends_with(".wo"))
+        .collect();
+    let probe = HessianProbe {
+        engine: &ctx.engine,
+        cfg: ctx.cfg.clone(),
+        layers: layers.clone(),
+        per_layer,
+        step: 5e-3,
+    };
+    let res = probe.compute(&ctx.weights)?;
+    let mut t = Table::new(
+        "Fig 4: scaled Hessian structure (Assumption 3)",
+        &["quantity", "value"],
+    );
+    t.row(vec!["probed layers".into(), format!("{}", layers.len())]);
+    t.row(vec!["params/layer".into(), format!("{per_layer}")]);
+    t.row(vec![
+        "diag dominance |diag|/|offdiag|".into(),
+        format!("{:.2}", res.diag_dominance()),
+    ]);
+    for (name, z) in res.block_diag_means() {
+        t.row(vec![format!("z_l mean diag [{name}]"), format!("{z:.4}")]);
+    }
+    Ok(t)
+}

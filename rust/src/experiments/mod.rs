@@ -1,0 +1,92 @@
+//! Experiment drivers: one function per paper table/figure, shared by
+//! `rust/benches/*` and `higgs experiment <id>`. See DESIGN.md §4 for
+//! the experiment index.
+
+pub mod figures;
+pub mod tables;
+
+use crate::config::ModelConfig;
+use crate::grids::registry::GridRegistry;
+use crate::linearity::calibrate::{
+    calibrate_alphas, default_noise_levels, CalibMetric, LayerAlphas,
+};
+use crate::model::Weights;
+use crate::runtime::Engine;
+use anyhow::{Context, Result};
+
+/// Shared state for experiment drivers.
+pub struct ExpContext {
+    pub engine: Engine,
+    pub cfg: ModelConfig,
+    pub weights: Weights,
+    pub registry: GridRegistry,
+    pub seed: u64,
+    /// whether the weights came from a trained checkpoint
+    pub trained: bool,
+}
+
+impl ExpContext {
+    /// Load config + checkpoint (`artifacts/ckpt_<cfg>.bin`); falls back
+    /// to random init with a loud warning (shape-level results still
+    /// hold, absolute PPLs are meaningless then).
+    pub fn load(cfg_name: &str) -> Result<Self> {
+        let engine = Engine::new()?;
+        let cfg = ModelConfig::load_named(engine.artifacts(), cfg_name)
+            .with_context(|| format!("config {cfg_name}"))?;
+        let man = engine.load(&format!("fwd_loss_{cfg_name}"))?.manifest.clone();
+        let ckpt = engine.artifacts().join(format!("ckpt_{cfg_name}.bin"));
+        let (weights, trained) = if ckpt.exists() {
+            (Weights::load(&ckpt, cfg.clone())?, true)
+        } else {
+            eprintln!(
+                "WARNING: no checkpoint at {} — using random init. \
+                 Run `higgs train --config {cfg_name}` first for meaningful PPLs.",
+                ckpt.display()
+            );
+            (Weights::from_manifest(cfg.clone(), &man, Some(0xA11CE))?, false)
+        };
+        let registry = GridRegistry::with_disk_cache(engine.artifacts().join("grids"));
+        Ok(ExpContext { engine, cfg, weights, registry, seed: 0x51, trained })
+    }
+
+    pub fn evaluator(&self) -> crate::eval::Evaluator<'_> {
+        let mut ev = crate::eval::Evaluator::new(&self.engine, self.cfg.clone());
+        // experiment drivers need PPL resolution well below the
+        // per-method deltas; 12 batches ≈ 9k scored tokens
+        ev.ppl_batches = if std::env::var("HIGGS_BENCH_QUICK").is_ok() { 4 } else { 12 };
+        ev
+    }
+
+    /// Load (or compute and cache) the α calibration for this model.
+    pub fn alphas(&self, metric: CalibMetric, j: usize) -> Result<LayerAlphas> {
+        let tag = match metric {
+            CalibMetric::Ppl => "ppl",
+            CalibMetric::Kl => "kl",
+        };
+        let path = self
+            .engine
+            .artifacts()
+            .join(format!("alphas_{}_{}_j{}.txt", self.cfg.name, tag, j));
+        if path.exists() {
+            return LayerAlphas::load(&path, metric);
+        }
+        eprintln!("calibrating α ({tag}, J={j}) — cached to {}", path.display());
+        let mut ev = self.evaluator();
+        // α noise propagates straight into the DP objective: dynamic
+        // allocation only beats uniform if the sensitivities are real.
+        ev.ppl_batches = 4;
+        let alphas =
+            calibrate_alphas(&ev, &self.weights, &default_noise_levels(j), metric, self.seed)?;
+        alphas.save(&path)?;
+        Ok(alphas)
+    }
+
+    /// Default calibration depth: paper uses J=15; quick mode uses 5.
+    pub fn default_j(&self) -> usize {
+        if std::env::var("HIGGS_BENCH_QUICK").is_ok() {
+            5
+        } else {
+            15
+        }
+    }
+}

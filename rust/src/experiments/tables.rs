@@ -1,0 +1,364 @@
+//! Table drivers: Table 1 (kernel throughput), Table 2 (1-shot / GPTQ),
+//! Table 3 + 7–11 (data-free method grid), Table 4 (dynamic vs 1-shot),
+//! Table 6 (Hadamard overhead).
+
+use super::figures::{assemble_mixed, build_error_db, flute_choices};
+use super::ExpContext;
+use crate::alloc::solve_dp;
+use crate::grids::registry::effective_bits;
+use crate::grids::GridKind;
+use crate::linearity::calibrate::CalibMetric;
+use crate::quant::calibration::collect_hessians;
+use crate::quant::gptq::GptqQuantizer;
+use crate::quant::higgs::HiggsQuantizer;
+use crate::quant::hqq::HqqQuantizer;
+use crate::quant::lut::LutQuantizer;
+use crate::quant::{QuantizedModel, Quantizer};
+use crate::report::Table;
+use crate::runtime::HostArg;
+use crate::serve::trace::{generate_trace, TraceConfig};
+use crate::serve::{Backend, GenerationEngine};
+use crate::util::bench::BenchRunner;
+use anyhow::Result;
+
+fn quick() -> bool {
+    std::env::var("HIGGS_BENCH_QUICK").is_ok()
+}
+
+/// Evaluate (ppl, task scores) of a quantized model.
+fn eval_qm(ctx: &ExpContext, qm: &QuantizedModel) -> Result<(f64, f64, f64)> {
+    let ev = ctx.evaluator();
+    let deq = qm.apply_to(&ctx.weights);
+    let ppl = ev.perplexity(&deq)?;
+    let scores = ev.task_scores(&deq, ctx.seed)?;
+    Ok((ppl, scores.average(), scores.cloze))
+}
+
+// -------------------------------------------------------------------------
+// Table 1: end-to-end serving throughput by backend × batch × wbits
+// -------------------------------------------------------------------------
+
+pub fn table1_throughput(ctx: &ExpContext) -> Result<Table> {
+    let batches: &[usize] = if quick() { &[1, 4] } else { &[1, 4, 16] };
+    let n_req = if quick() { 6 } else { 24 };
+    let mut t = Table::new(
+        "Table 1: decode throughput (tok/s) by backend",
+        &["backend", "wbits", "batch", "tok/s", "p50_ms", "decode_steps"],
+    );
+    // backends: fp16 dense, uniform-4 (MARLIN), nf4 (unfused), flute 2/3/4
+    let mut cases: Vec<(Backend, Option<QuantizedModel>, &str)> = Vec::new();
+    cases.push((Backend::Dense, None, "16"));
+    let rtn = crate::quant::rtn::RtnQuantizer::new(4, ctx.cfg.group);
+    cases.push((
+        Backend::Uniform4,
+        Some(QuantizedModel::quantize_all(&ctx.weights, &rtn)),
+        "4",
+    ));
+    let nf = LutQuantizer::new(ctx.registry.get(GridKind::Nf, 16, 1), ctx.cfg.group);
+    cases.push((
+        Backend::NfLut4,
+        Some(QuantizedModel::quantize_all(&ctx.weights, &nf)),
+        "4",
+    ));
+    for bits in [2u32, 3, 4] {
+        let n = 1usize << (2 * bits);
+        let grid = ctx.registry.get(GridKind::Higgs, n, 2);
+        let q = HiggsQuantizer::new(grid, ctx.cfg.group, ctx.seed);
+        cases.push((
+            Backend::Flute { bits },
+            Some(QuantizedModel::quantize_all(&ctx.weights, &q)),
+            match bits {
+                2 => "2",
+                3 => "3",
+                _ => "4",
+            },
+        ));
+    }
+    let corpus = crate::data::Corpus::new(ctx.cfg.vocab, ctx.cfg.seq, 1);
+    for &batch in batches {
+        for (backend, qm, wbits) in &cases {
+            let trace = generate_trace(
+                &TraceConfig {
+                    n_requests: n_req.max(batch * 2),
+                    prompt_len: (8, 24),
+                    max_new: (16, 32),
+                    ..Default::default()
+                },
+                &corpus,
+            );
+            let mut ge = GenerationEngine::new(
+                &ctx.engine,
+                ctx.cfg.clone(),
+                backend.clone(),
+                batch,
+                &ctx.weights,
+                qm.as_ref(),
+            )?;
+            let m = ge.run_closed_loop(trace)?;
+            t.row(vec![
+                backend.label(),
+                wbits.to_string(),
+                batch.to_string(),
+                format!("{:.1}", m.tok_per_sec()),
+                format!("{:.0}", m.latency_p50()),
+                m.decode_steps.to_string(),
+            ]);
+        }
+    }
+    Ok(t)
+}
+
+// -------------------------------------------------------------------------
+// Table 2: 1-shot (GPTQ-family) PPL comparison
+// -------------------------------------------------------------------------
+
+pub fn table2_gptq(ctx: &ExpContext) -> Result<Table> {
+    let mut t = Table::new(
+        "Table 2: 1-shot quantization PPL (GPTQ family)",
+        &["method", "wbits", "ppl"],
+    );
+    let ev = ctx.evaluator();
+    let base = ev.perplexity(&ctx.weights)?;
+    t.row(vec!["fp32".into(), "16".into(), format!("{base:.4}")]);
+    let hessians = collect_hessians(&ctx.engine, &ctx.cfg, &ctx.weights, if quick() { 1 } else { 4 })?;
+    let g = ctx.cfg.group;
+    for bits in [2u32, 3, 4] {
+        // plain GPTQ (uniform rounding)
+        let gq = crate::quant::gptq::CalibratedGptq {
+            inner: GptqQuantizer::uniform(bits, g),
+            hessians: hessians.clone(),
+        };
+        let qm = QuantizedModel::quantize_all(&ctx.weights, &gq);
+        let ppl = ev.perplexity(&qm.apply_to(&ctx.weights))?;
+        t.row(vec![
+            "GPTQ".into(),
+            format!("{:.2}", bits as f64 + 16.0 / g as f64),
+            format!("{ppl:.4}"),
+        ]);
+        // GPTQ + HIGGS (p=2)
+        let n = 1usize << (2 * bits);
+        let grid = ctx.registry.get(GridKind::Higgs, n, 2);
+        let gh = crate::quant::gptq::CalibratedGptq {
+            inner: GptqQuantizer::higgs(grid, g, ctx.seed),
+            hessians: hessians.clone(),
+        };
+        let qmh = QuantizedModel::quantize_all(&ctx.weights, &gh);
+        let pplh = ev.perplexity(&qmh.apply_to(&ctx.weights))?;
+        t.row(vec![
+            "GPTQ+HIGGS(p=2)".into(),
+            format!("{:.2}", effective_bits(n, 2, g)),
+            format!("{pplh:.4}"),
+        ]);
+        // data-free HIGGS reference at the same width
+        let hq = HiggsQuantizer::new(ctx.registry.get(GridKind::Higgs, n, 2), g, ctx.seed);
+        let qmd = QuantizedModel::quantize_all(&ctx.weights, &hq);
+        let ppld = ev.perplexity(&qmd.apply_to(&ctx.weights))?;
+        t.row(vec![
+            "HIGGS(p=2, data-free)".into(),
+            format!("{:.2}", effective_bits(n, 2, g)),
+            format!("{ppld:.4}"),
+        ]);
+    }
+    Ok(t)
+}
+
+// -------------------------------------------------------------------------
+// Table 3 (and 7–11 via cfg): the data-free method grid
+// -------------------------------------------------------------------------
+
+pub fn table3_datafree(ctx: &ExpContext) -> Result<Table> {
+    let mut t = Table::new(
+        &format!("Table 3: data-free quantization of `{}`", ctx.cfg.name),
+        &["method", "wbits", "ppl", "task_avg", "cloze(MMLU-stand-in)"],
+    );
+    let ev = ctx.evaluator();
+    let base = ev.perplexity(&ctx.weights)?;
+    let scores = ev.task_scores(&ctx.weights, ctx.seed)?;
+    t.row(vec![
+        "fp32".into(),
+        "16".into(),
+        format!("{base:.4}"),
+        format!("{:.3}", scores.average()),
+        format!("{:.3}", scores.cloze),
+    ]);
+    let g = ctx.cfg.group;
+
+    // (bit tier, methods) — the paper's 3.25/4.02/4.25 tiers plus a
+    // 2.25 tier: our small models are more quantization-robust than
+    // Llamas, so the paper's 3-bit separation appears ~1 bit lower here.
+    let tiers: Vec<(&str, Vec<(String, Box<dyn Quantizer>)>)> = vec![
+        (
+            "2.25",
+            vec![
+                ("AF".into(), Box::new(LutQuantizer::new(ctx.registry.get(GridKind::Af, 4, 1), g)) as Box<dyn Quantizer>),
+                ("NF".into(), Box::new(LutQuantizer::new(ctx.registry.get(GridKind::Nf, 4, 1), g))),
+                ("HQQ".into(), Box::new(HqqQuantizer::new(2, g))),
+                ("HIGGS(p=1)".into(), Box::new(HiggsQuantizer::new(ctx.registry.get(GridKind::Higgs, 4, 1), g, ctx.seed))),
+                ("HIGGS(p=2)".into(), Box::new(HiggsQuantizer::new(ctx.registry.get(GridKind::Higgs, 16, 2), g, ctx.seed))),
+                ("HIGGS(p=4)".into(), Box::new(HiggsQuantizer::new(ctx.registry.get(GridKind::Higgs, 256, 4), g, ctx.seed))),
+            ],
+        ),
+        (
+            "3.25",
+            vec![
+                ("AF".into(), Box::new(LutQuantizer::new(ctx.registry.get(GridKind::Af, 8, 1), g)) as Box<dyn Quantizer>),
+                ("NF".into(), Box::new(LutQuantizer::new(ctx.registry.get(GridKind::Nf, 8, 1), g))),
+                ("HQQ".into(), Box::new(HqqQuantizer::new(3, g))),
+                ("HIGGS(p=1)".into(), Box::new(HiggsQuantizer::new(ctx.registry.get(GridKind::Higgs, 8, 1), g, ctx.seed))),
+                ("HIGGS(p=2)".into(), Box::new(HiggsQuantizer::new(ctx.registry.get(GridKind::Higgs, 64, 2), g, ctx.seed))),
+                ("HIGGS(p=4)".into(), Box::new(HiggsQuantizer::new(ctx.registry.get(GridKind::Higgs, 4096, 4), g, ctx.seed))),
+            ],
+        ),
+        (
+            "4.25",
+            vec![
+                ("AF".into(), Box::new(LutQuantizer::new(ctx.registry.get(GridKind::Af, 16, 1), g))),
+                ("NF".into(), Box::new(LutQuantizer::new(ctx.registry.get(GridKind::Nf, 16, 1), g))),
+                ("HQQ".into(), Box::new(HqqQuantizer::new(4, g))),
+                ("HIGGS(p=1)".into(), Box::new(HiggsQuantizer::new(ctx.registry.get(GridKind::Higgs, 16, 1), g, ctx.seed))),
+                ("HIGGS(p=2)".into(), Box::new(HiggsQuantizer::new(ctx.registry.get(GridKind::Higgs, 256, 2), g, ctx.seed))),
+            ],
+        ),
+    ];
+
+    for (tier, methods) in tiers {
+        for (name, q) in methods {
+            let qm = QuantizedModel::quantize_all(&ctx.weights, q.as_ref());
+            let (ppl, avg, mmlu) = eval_qm(ctx, &qm)?;
+            t.row(vec![
+                name,
+                format!("{tier} ({:.2})", qm.avg_bits()),
+                format!("{ppl:.4}"),
+                format!("{avg:.3}"),
+                format!("{mmlu:.3}"),
+            ]);
+        }
+        // dynamic data-free HIGGS at this tier's budget
+        let budget: f64 = tier.parse().unwrap();
+        if let Ok(row) = dyn_higgs_row(ctx, budget, CalibMetric::Kl) {
+            t.row(row);
+        }
+    }
+    Ok(t)
+}
+
+/// One dynamic-HIGGS table row at a given budget.
+fn dyn_higgs_row(
+    ctx: &ExpContext,
+    budget: f64,
+    metric: CalibMetric,
+) -> Result<Vec<String>> {
+    let alphas = ctx.alphas(metric, ctx.default_j())?;
+    let choices = flute_choices(ctx);
+    let (db, models) = build_error_db(ctx, &choices);
+    let sol = solve_dp(&db, &alphas, budget)?;
+    let qm = assemble_mixed(&models, &db, &sol.choice);
+    let (ppl, avg, mmlu) = eval_qm(ctx, &qm)?;
+    let tag = match metric {
+        CalibMetric::Kl => "HIGGS (dyn data-free)",
+        CalibMetric::Ppl => "HIGGS (dyn)",
+    };
+    Ok(vec![
+        tag.into(),
+        format!("{budget} ({:.2})", sol.avg_bits),
+        format!("{ppl:.4}"),
+        format!("{avg:.3}"),
+        format!("{mmlu:.3}"),
+    ])
+}
+
+// -------------------------------------------------------------------------
+// Table 4: dynamic HIGGS vs data-aware 1-shot methods
+// -------------------------------------------------------------------------
+
+pub fn table4_dynamic_vs_1shot(ctx: &ExpContext) -> Result<Table> {
+    let mut t = Table::new(
+        "Table 4: dynamic HIGGS vs 1-shot methods",
+        &["method", "wbits", "ppl", "cloze(MMLU-stand-in)"],
+    );
+    let ev = ctx.evaluator();
+    let base = ev.perplexity(&ctx.weights)?;
+    let s0 = ev.task_scores(&ctx.weights, ctx.seed)?;
+    t.row(vec![
+        "fp32".into(),
+        "16".into(),
+        format!("{base:.4}"),
+        format!("{:.3}", s0.cloze),
+    ]);
+    let g = ctx.cfg.group;
+    let hessians =
+        collect_hessians(&ctx.engine, &ctx.cfg, &ctx.weights, if quick() { 1 } else { 4 })?;
+    for (tier, bits) in [("3.25", 3u32), ("4.25", 4u32)] {
+        let gq = crate::quant::gptq::CalibratedGptq {
+            inner: GptqQuantizer::uniform(bits, g),
+            hessians: hessians.clone(),
+        };
+        let qm = QuantizedModel::quantize_all(&ctx.weights, &gq);
+        let (ppl, _, mmlu) = eval_qm(ctx, &qm)?;
+        t.row(vec![
+            "GPTQ".into(),
+            tier.into(),
+            format!("{ppl:.4}"),
+            format!("{mmlu:.3}"),
+        ]);
+        let budget: f64 = tier.parse().unwrap();
+        for metric in [CalibMetric::Kl, CalibMetric::Ppl] {
+            if let Ok(mut row) = dyn_higgs_row(ctx, budget, metric) {
+                row.remove(3); // drop task_avg — Table 4 has no such column
+                t.row(row);
+            }
+        }
+    }
+    Ok(t)
+}
+
+// -------------------------------------------------------------------------
+// Table 6: Hadamard overhead on the qmm kernels
+// -------------------------------------------------------------------------
+
+pub fn table6_hadamard_overhead(ctx: &ExpContext) -> Result<Table> {
+    let mut t = Table::new(
+        "Table 6: FLUTE qmm kernel with vs without online Hadamard",
+        &["batch", "wbits", "no_rht_ms", "rht_ms", "overhead_%"],
+    );
+    let mut runner = BenchRunner::new();
+    let (k, n_cols, g) = (512usize, 512usize, 64usize);
+    let mut rng = crate::util::prng::Rng::new(9);
+    for &m in &[1usize, 4, 16] {
+        for &bits in &[2u32, 3, 4] {
+            let n_grid = 1usize << (2 * bits);
+            let x = rng.normal_vec(m * k);
+            let codes: Vec<i32> =
+                (0..(k / 2) * n_cols).map(|_| rng.below(n_grid) as i32).collect();
+            let scales = rng.normal_vec((k / g) * n_cols);
+            let lut = rng.normal_vec(n_grid * 2);
+            let signs = rng.sign_vec(k);
+            let base_args = vec![
+                HostArg::F32(x.clone(), vec![m, k]),
+                HostArg::I32(codes.clone(), vec![k / 2, n_cols]),
+                HostArg::F32(scales.clone(), vec![k / g, n_cols]),
+                HostArg::F32(lut.clone(), vec![n_grid, 2]),
+            ];
+            let plain = ctx.engine.load(&format!("qmm_flute_p2_b{bits}_m{m}"))?;
+            let rht = ctx.engine.load(&format!("qmm_flute_rht_p2_b{bits}_m{m}"))?;
+            let m_plain = runner.bench(&format!("qmm_b{bits}_m{m}"), || {
+                ctx.engine.run(&plain, &base_args).unwrap()
+            });
+            let mut rht_args = base_args.clone();
+            rht_args.push(HostArg::F32(signs.clone(), vec![k]));
+            let m_rht = runner.bench(&format!("qmm_rht_b{bits}_m{m}"), || {
+                ctx.engine.run(&rht, &rht_args).unwrap()
+            });
+            let overhead =
+                (m_rht.median_ms - m_plain.median_ms) / m_plain.median_ms * 100.0;
+            t.row(vec![
+                m.to_string(),
+                bits.to_string(),
+                format!("{:.3}", m_plain.median_ms),
+                format!("{:.3}", m_rht.median_ms),
+                format!("{overhead:.1}"),
+            ]);
+        }
+    }
+    Ok(t)
+}

@@ -1,0 +1,98 @@
+//! Abnormal Float (AF) grids — L1-optimal scalar quantizers of N(0,1)
+//! (Yoshida 2023: "NF4 isn't information theoretically optimal").
+//!
+//! Lloyd iteration under the L1 criterion: cell boundaries remain
+//! midpoints (|x-a| = |x-b|), but the optimal representative of a cell
+//! is its conditional *median*: m with Φ(m) = (Φ(a)+Φ(b))/2.
+
+use super::{Grid, GridKind};
+use crate::util::stats::{norm_cdf, norm_ppf};
+
+pub fn af_grid(n: usize) -> Grid {
+    assert!(n >= 2);
+    // init at quantiles
+    let mut pts: Vec<f64> = (0..n).map(|i| norm_ppf((i as f64 + 0.5) / n as f64)).collect();
+    for _ in 0..300 {
+        let mut max_move = 0.0f64;
+        let old = pts.clone();
+        for i in 0..n {
+            let a = if i == 0 { -12.0 } else { (old[i - 1] + old[i]) / 2.0 };
+            let b = if i == n - 1 { 12.0 } else { (old[i] + old[i + 1]) / 2.0 };
+            let target = (norm_cdf(a) + norm_cdf(b)) / 2.0;
+            let m = norm_ppf(target.clamp(1e-12, 1.0 - 1e-12));
+            max_move = max_move.max((m - pts[i]).abs());
+            pts[i] = m;
+        }
+        if max_move < 1e-12 {
+            break;
+        }
+    }
+    let points: Vec<f32> = pts.iter().map(|&x| x as f32).collect();
+    let mut g = Grid { kind: GridKind::Af, n, p: 1, points, mse: 0.0 };
+    g.mse = g.exact_mse_1d();
+    g
+}
+
+/// Expected L1 error of a sorted 1-D grid on N(0,1) (for tests and the
+/// AF-vs-NF comparison): Σ cells ∫ |x-c| φ(x) dx.
+pub fn gaussian_l1_of_1d(points: &[f32]) -> f64 {
+    use crate::util::stats::norm_pdf;
+    let n = points.len();
+    let mut pts: Vec<f64> = points.iter().map(|&x| x as f64).collect();
+    pts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut total = 0.0;
+    for i in 0..n {
+        let c = pts[i];
+        let a = if i == 0 { -12.0 } else { (pts[i - 1] + c) / 2.0 };
+        let b = if i == n - 1 { 12.0 } else { (c + pts[i + 1]) / 2.0 };
+        // ∫_a^b |x-c| φ dx  =  ∫_a^c (c-x)φ + ∫_c^b (x-c)φ
+        // ∫ xφ over [u,v] = φ(u)-φ(v);  ∫ φ = Φ(v)-Φ(u)
+        let left = c * (norm_cdf(c) - norm_cdf(a)) - (norm_pdf(a) - norm_pdf(c));
+        let right = (norm_pdf(c) - norm_pdf(b)) - c * (norm_cdf(b) - norm_cdf(c));
+        total += left + right;
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grids::clvq::clvq_grid;
+    use crate::grids::nf::nf_grid;
+
+    #[test]
+    fn af_beats_nf_and_clvq_on_l1() {
+        // AF optimizes L1, so it must win the L1 metric...
+        for n in [8usize, 16] {
+            let af = af_grid(n);
+            let nf = nf_grid(n);
+            let cl = clvq_grid(n, 1, 0);
+            let l1_af = gaussian_l1_of_1d(&af.points);
+            let l1_nf = gaussian_l1_of_1d(&nf.points);
+            let l1_cl = gaussian_l1_of_1d(&cl.points);
+            assert!(l1_af < l1_nf, "n={n} af {l1_af} nf {l1_nf}");
+            assert!(l1_af <= l1_cl + 1e-9, "n={n} af {l1_af} clvq {l1_cl}");
+        }
+    }
+
+    #[test]
+    fn clvq_beats_af_on_mse() {
+        // ...but loses the *MSE* metric to the CLVQ grid — exactly the
+        // paper's argument for why MSE-optimal grids are the right
+        // choice under the linearity theorem.
+        for n in [8usize, 16, 64] {
+            let af = af_grid(n);
+            let cl = clvq_grid(n, 1, 0);
+            assert!(cl.mse < af.mse, "n={n} clvq {} af {}", cl.mse, af.mse);
+        }
+    }
+
+    #[test]
+    fn af_symmetric_and_sorted() {
+        let g = af_grid(16);
+        assert!(g.points.windows(2).all(|w| w[0] < w[1]));
+        for i in 0..8 {
+            assert!((g.points[i] + g.points[15 - i]).abs() < 1e-4);
+        }
+    }
+}

@@ -1,0 +1,199 @@
+//! CLVQ: Gaussian-MSE-optimal grids (Pagès & Printems 2003) — the HIGGS
+//! grid constructor (paper Alg. 2, `CLVQ(n, p)`).
+//!
+//! p = 1: deterministic Lloyd iteration with exact truncated-normal cell
+//! centroids (erf-based) — converges to the optimal scalar quantizer.
+//! p > 1: stochastic competitive learning (the CLVQ of the paper) with a
+//! decreasing step, followed by mini-batch Lloyd polish.
+
+use super::{Grid, GridKind};
+use crate::util::prng::Rng;
+use crate::util::stats::{norm_cdf, norm_pdf, norm_ppf};
+
+/// Integer p-th root of n, if exact.
+fn int_root(n: usize, p: usize) -> Option<usize> {
+    let m = (n as f64).powf(1.0 / p as f64).round() as usize;
+    for cand in m.saturating_sub(1)..=m + 1 {
+        if cand >= 1 && cand.pow(p as u32) == n {
+            return Some(cand);
+        }
+    }
+    None
+}
+
+/// Build the Gaussian-MSE-optimal grid for (n, p).
+pub fn clvq_grid(n: usize, p: usize, seed: u64) -> Grid {
+    assert!(n >= 1 && p >= 1);
+    let mut grid = if p == 1 {
+        lloyd_1d(n)
+    } else {
+        let pts = clvq_nd(n, p, seed);
+        Grid { kind: GridKind::Higgs, n, p, points: pts, mse: 0.0 }
+    };
+    grid.mse = if p == 1 {
+        grid.exact_mse_1d()
+    } else {
+        grid.estimate_mse(120_000, seed ^ 0xD1CE)
+    };
+    grid
+}
+
+/// Optimal scalar quantizer of N(0,1) via exact Lloyd.
+fn lloyd_1d(n: usize) -> Grid {
+    // init at quantiles
+    let mut pts: Vec<f64> = (0..n).map(|i| norm_ppf((i as f64 + 0.5) / n as f64)).collect();
+    for _ in 0..4000 {
+        let mut new = pts.clone();
+        let mut max_move = 0.0f64;
+        for i in 0..n {
+            let a = if i == 0 { -12.0 } else { (pts[i - 1] + pts[i]) / 2.0 };
+            let b = if i == n - 1 { 12.0 } else { (pts[i] + pts[i + 1]) / 2.0 };
+            let mass = norm_cdf(b) - norm_cdf(a);
+            if mass <= 1e-300 {
+                continue;
+            }
+            // centroid of N(0,1) truncated to [a,b]
+            let c = (norm_pdf(a) - norm_pdf(b)) / mass;
+            max_move = max_move.max((c - pts[i]).abs());
+            new[i] = c;
+        }
+        pts = new;
+        if max_move < 1e-12 {
+            break;
+        }
+    }
+    Grid {
+        kind: GridKind::Higgs,
+        n,
+        p: 1,
+        points: pts.iter().map(|&x| x as f32).collect(),
+        mse: 0.0,
+    }
+}
+
+/// Stochastic CLVQ + Lloyd polish for p-dimensional grids.
+fn clvq_nd(n: usize, p: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed ^ 0xC1_9A9E5);
+    // init: product of optimal 1-D grids when n = m^p (then Lloyd can
+    // only improve on the scalar quantizer — guarantees the p>1 grid
+    // dominates the p=1 grid at equal bits/dim); random otherwise.
+    let mut pts: Vec<f32> = if let Some(m) = int_root(n, p) {
+        let base = lloyd_1d(m);
+        let mut out = vec![0.0f32; n * p];
+        for i in 0..n {
+            let mut rem = i;
+            for d in 0..p {
+                out[i * p + d] = base.points[rem % m];
+                rem /= m;
+            }
+        }
+        out
+    } else {
+        rng.normal_vec(n * p).iter().map(|v| v * 0.7).collect()
+    };
+
+    // competitive learning phase: c* += γ_t (ξ - c*)
+    let iters = (20_000 * n.max(64)).min(2_000_000);
+    let (a, b) = (1.0f64, 200.0f64);
+    let mut sample = vec![0.0f32; p];
+    let mut grid_view = Grid { kind: GridKind::Higgs, n, p, points: Vec::new(), mse: 0.0 };
+    for t in 0..iters {
+        rng.fill_normal(&mut sample);
+        // nearest under current points (inline to avoid cloning)
+        grid_view.points = std::mem::take(&mut pts);
+        let c = grid_view.nearest(&sample);
+        pts = std::mem::take(&mut grid_view.points);
+        let gamma = (a / (b + t as f64)).min(0.3) as f32;
+        for d in 0..p {
+            let pc = &mut pts[c * p + d];
+            *pc += gamma * (sample[d] - *pc);
+        }
+    }
+
+    // Lloyd polish: K rounds of batched assignment/centroid.
+    let batch = 60_000usize;
+    let mut samples = vec![0.0f32; batch * p];
+    for round in 0..8 {
+        let mut r2 = Rng::new(seed ^ (0xF00D + round as u64));
+        r2.fill_normal(&mut samples);
+        let mut sums = vec![0.0f64; n * p];
+        let mut counts = vec![0usize; n];
+        grid_view.points = std::mem::take(&mut pts);
+        for s in samples.chunks(p) {
+            let c = grid_view.nearest(s);
+            counts[c] += 1;
+            for d in 0..p {
+                sums[c * p + d] += s[d] as f64;
+            }
+        }
+        pts = std::mem::take(&mut grid_view.points);
+        for c in 0..n {
+            if counts[c] > 0 {
+                for d in 0..p {
+                    pts[c * p + d] = (sums[c * p + d] / counts[c] as f64) as f32;
+                }
+            } else {
+                // dead point: respawn near origin
+                for d in 0..p {
+                    pts[c * p + d] = r2.normal_f32() * 0.3;
+                }
+            }
+        }
+    }
+    pts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lloyd_1d_two_points() {
+        // optimal 2-point quantizer of N(0,1) is ±sqrt(2/π) ≈ ±0.7979
+        let g = clvq_grid(2, 1, 0);
+        let expected = (2.0 / std::f64::consts::PI).sqrt();
+        assert!((g.points[0] as f64 + expected).abs() < 1e-3, "{:?}", g.points);
+        assert!((g.points[1] as f64 - expected).abs() < 1e-3);
+        // MSE = 1 - 2/π ≈ 0.3634
+        assert!((g.mse - (1.0 - 2.0 / std::f64::consts::PI)).abs() < 1e-3, "{}", g.mse);
+    }
+
+    #[test]
+    fn lloyd_1d_beats_quantiles() {
+        let n = 16;
+        let g = clvq_grid(n, 1, 0);
+        let quant: Vec<f32> =
+            (0..n).map(|i| norm_ppf((i as f64 + 0.5) / n as f64) as f32).collect();
+        let q_mse = super::super::gaussian_mse_of_1d(&quant);
+        assert!(g.mse < q_mse, "lloyd {} quantile {}", g.mse, q_mse);
+    }
+
+    #[test]
+    fn mse_decreases_with_n() {
+        let m4 = clvq_grid(4, 1, 0).mse;
+        let m8 = clvq_grid(8, 1, 0).mse;
+        let m16 = clvq_grid(16, 1, 0).mse;
+        assert!(m4 > m8 && m8 > m16, "{m4} {m8} {m16}");
+    }
+
+    #[test]
+    fn higher_dim_beats_scalar_at_equal_rate() {
+        // 2 bits/dim: n=4,p=1 vs n=16,p=2 — vector quantization wins
+        // (the paper's Figure 2 effect).
+        let g1 = clvq_grid(4, 1, 0);
+        let g2 = clvq_grid(16, 2, 0);
+        assert!(
+            g2.mse < g1.mse,
+            "p=2 grid should beat p=1 at equal bits: {} vs {}",
+            g2.mse,
+            g1.mse
+        );
+    }
+
+    #[test]
+    fn nd_points_shape() {
+        let g = clvq_grid(16, 2, 3);
+        assert_eq!(g.points.len(), 32);
+        assert!(g.mse > 0.0 && g.mse < 1.0);
+    }
+}

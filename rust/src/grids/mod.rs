@@ -1,0 +1,226 @@
+//! Quantization grids: the paper's comparison space (§2, §4.2).
+//!
+//! A [`Grid`] is a collection of `n` points in R^p used for
+//! round-to-nearest quantization of (approximately) standard-normal
+//! data. Variants:
+//!
+//! * [`clvq`] — Gaussian-MSE-optimal grids via the Pagès–Printems CLVQ
+//!   algorithm (+ Lloyd polish). **This is the HIGGS grid.**
+//! * [`nf`] — Normal Float: quantiles of N(0,1) (entropy-equalized),
+//!   the QLoRA/bitsandbytes grid family.
+//! * [`af`] — Abnormal Float: L1-optimal Lloyd grids (Yoshida 2023).
+//! * [`uniform`] — MSE-optimal *constrained uniform* grids (the CH8
+//!   trick of §4.3) and min-max RTN grids.
+//!
+//! All grids are computed once and cached in [`registry::GridRegistry`];
+//! expected per-dimension MSE on N(0, I_p) — the `t²(G)` of Appendix F —
+//! is attached to each grid.
+
+pub mod af;
+pub mod clvq;
+pub mod nf;
+pub mod registry;
+pub mod uniform;
+
+use crate::util::prng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum GridKind {
+    /// CLVQ Gaussian-MSE-optimal (HIGGS)
+    Higgs,
+    /// Normal Float (quantiles)
+    Nf,
+    /// Abnormal Float (L1-optimal)
+    Af,
+    /// MSE-optimal symmetric uniform (CH8)
+    Uniform,
+}
+
+impl GridKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            GridKind::Higgs => "higgs",
+            GridKind::Nf => "nf",
+            GridKind::Af => "af",
+            GridKind::Uniform => "uniform",
+        }
+    }
+}
+
+/// A quantization grid: `n` points in R^p (row-major `points[n*p]`).
+#[derive(Clone, Debug)]
+pub struct Grid {
+    pub kind: GridKind,
+    pub n: usize,
+    pub p: usize,
+    pub points: Vec<f32>,
+    /// Expected per-dimension MSE of rounding N(0, I_p) to this grid —
+    /// the grid constant `t²(G)` of Appendix F.
+    pub mse: f64,
+}
+
+impl Grid {
+    pub fn point(&self, i: usize) -> &[f32] {
+        &self.points[i * self.p..(i + 1) * self.p]
+    }
+
+    /// Codebook bits per weight dimension: log2(n)/p.
+    pub fn bits_per_dim(&self) -> f64 {
+        (self.n as f64).log2() / self.p as f64
+    }
+
+    /// Index of the nearest grid point (Euclidean).
+    pub fn nearest(&self, v: &[f32]) -> usize {
+        debug_assert_eq!(v.len(), self.p);
+        if self.p == 1 {
+            return self.nearest_1d(v[0]);
+        }
+        let mut best = 0usize;
+        let mut best_d = f32::INFINITY;
+        for i in 0..self.n {
+            let pt = self.point(i);
+            let mut d = 0.0f32;
+            for (a, b) in v.iter().zip(pt) {
+                let e = a - b;
+                d += e * e;
+                if d >= best_d {
+                    break;
+                }
+            }
+            if d < best_d {
+                best_d = d;
+                best = i;
+            }
+        }
+        best
+    }
+
+    /// Binary search for 1-D grids (points sorted ascending).
+    pub fn nearest_1d(&self, x: f32) -> usize {
+        debug_assert_eq!(self.p, 1);
+        let pts = &self.points;
+        match pts.binary_search_by(|a| a.partial_cmp(&x).unwrap()) {
+            Ok(i) => i,
+            Err(i) => {
+                if i == 0 {
+                    0
+                } else if i >= pts.len() {
+                    pts.len() - 1
+                } else if (x - pts[i - 1]).abs() <= (pts[i] - x).abs() {
+                    i - 1
+                } else {
+                    i
+                }
+            }
+        }
+    }
+
+    /// Monte-Carlo estimate of the per-dim MSE on N(0, I_p).
+    pub fn estimate_mse(&self, samples: usize, seed: u64) -> f64 {
+        let mut rng = Rng::new(seed);
+        let mut acc = 0.0f64;
+        let mut v = vec![0.0f32; self.p];
+        for _ in 0..samples {
+            rng.fill_normal(&mut v);
+            let c = self.nearest(&v);
+            let pt = self.point(c);
+            for (a, b) in v.iter().zip(pt) {
+                let e = (*a - *b) as f64;
+                acc += e * e;
+            }
+        }
+        acc / (samples * self.p) as f64
+    }
+
+    /// Exact per-dim Gaussian MSE for 1-D grids via cell integrals.
+    pub fn exact_mse_1d(&self) -> f64 {
+        assert_eq!(self.p, 1);
+        gaussian_mse_of_1d(&self.points)
+    }
+}
+
+/// Exact E[(X - q(X))²], X~N(0,1), for a sorted 1-D codebook.
+///
+/// Per Voronoi cell [a,b] with center c:
+/// ∫(x-c)²φ = (Φ(b)-Φ(a))(1+c²) - (bφ(b)-aφ(a)) - 2c(φ(a)-φ(b)).
+pub fn gaussian_mse_of_1d(points: &[f32]) -> f64 {
+    use crate::util::stats::{norm_cdf, norm_pdf};
+    let n = points.len();
+    assert!(n >= 1);
+    let mut pts: Vec<f64> = points.iter().map(|&x| x as f64).collect();
+    pts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut total = 0.0;
+    for i in 0..n {
+        let c = pts[i];
+        let a = if i == 0 { -12.0 } else { (pts[i - 1] + c) / 2.0 };
+        let b = if i == n - 1 { 12.0 } else { (c + pts[i + 1]) / 2.0 };
+        let (pa, pb) = (norm_pdf(a), norm_pdf(b));
+        let (ca, cb) = (norm_cdf(a), norm_cdf(b));
+        let mass = cb - ca;
+        let ex2 = mass - (b * pb - a * pa); // ∫ x² φ over [a,b]
+        let ex = pa - pb; // ∫ x φ over [a,b]
+        total += ex2 - 2.0 * c * ex + c * c * mass;
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_grid() -> Grid {
+        Grid {
+            kind: GridKind::Uniform,
+            n: 4,
+            p: 1,
+            points: vec![-1.5, -0.5, 0.5, 1.5],
+            mse: 0.0,
+        }
+    }
+
+    #[test]
+    fn nearest_1d_basic() {
+        let g = toy_grid();
+        assert_eq!(g.nearest(&[-2.0]), 0);
+        assert_eq!(g.nearest(&[-0.4]), 1);
+        assert_eq!(g.nearest(&[0.51]), 2);
+        assert_eq!(g.nearest(&[9.0]), 3);
+        // exact midpoint ties toward the lower point
+        assert_eq!(g.nearest(&[0.0]), 1);
+    }
+
+    #[test]
+    fn nearest_2d_basic() {
+        let g = Grid {
+            kind: GridKind::Higgs,
+            n: 3,
+            p: 2,
+            points: vec![0.0, 0.0, 1.0, 1.0, -1.0, 1.0],
+            mse: 0.0,
+        };
+        assert_eq!(g.nearest(&[0.1, -0.1]), 0);
+        assert_eq!(g.nearest(&[0.9, 1.2]), 1);
+        assert_eq!(g.nearest(&[-0.8, 0.9]), 2);
+    }
+
+    #[test]
+    fn exact_mse_matches_monte_carlo() {
+        let g = toy_grid();
+        let exact = g.exact_mse_1d();
+        let mc = g.estimate_mse(200_000, 1);
+        assert!((exact - mc).abs() / exact < 0.03, "exact {exact} mc {mc}");
+    }
+
+    #[test]
+    fn single_point_grid_mse_is_second_moment() {
+        // one point at 0 → MSE = E[X²] = 1
+        let mse = gaussian_mse_of_1d(&[0.0]);
+        assert!((mse - 1.0).abs() < 1e-4, "{mse}");
+    }
+
+    #[test]
+    fn bits_per_dim() {
+        let g = Grid { kind: GridKind::Higgs, n: 256, p: 2, points: vec![0.0; 512], mse: 0.0 };
+        assert!((g.bits_per_dim() - 4.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,95 @@
+//! Normal Float (NF) grids — quantiles of N(0,1).
+//!
+//! Dettmers et al. (QLoRA) construct the "information-theoretically
+//! optimal" grid by equalizing the probability mass of each level, i.e.
+//! placing levels at quantiles; NF4 additionally guarantees a 0 level.
+//! Both variants are provided; the quantile grid is the one compared in
+//! the paper's figures (grid values live in N(0,1) units here because
+//! the pipeline scales groups by σ̂ = ||w||/√g).
+
+use super::{Grid, GridKind};
+use crate::util::stats::norm_ppf;
+
+/// Plain quantile grid: level i at Φ⁻¹((i + 0.5)/n).
+pub fn nf_grid(n: usize) -> Grid {
+    assert!(n >= 2);
+    let points: Vec<f32> =
+        (0..n).map(|i| norm_ppf((i as f64 + 0.5) / n as f64) as f32).collect();
+    let mut g = Grid { kind: GridKind::Nf, n, p: 1, points, mse: 0.0 };
+    g.mse = g.exact_mse_1d();
+    g
+}
+
+/// NF4-style grid with an exact zero and asymmetric halves (2^b levels:
+/// 2^(b-1) negatives, zero, 2^(b-1)-1 positives), following the QLoRA
+/// construction with offset 1/2 tail truncation.
+pub fn nf_grid_zero(n: usize) -> Grid {
+    assert!(n >= 4 && n.is_power_of_two());
+    let half = n / 2;
+    let offset = 0.5 * (1.0 / 32.0 + 1.0 / (2.0 * half as f64));
+    let mut points = Vec::with_capacity(n);
+    // negative side: half points from -max .. just below 0
+    for i in 0..half {
+        let q = offset + (0.5 - offset) * (i as f64) / (half as f64 - 1.0).max(1.0);
+        points.push(norm_ppf(q) as f32);
+    }
+    // positive side incl. exact zero
+    for i in 0..half {
+        let q = 0.5 + (0.5 - offset) * (i as f64) / (half as f64 - 1.0).max(1.0);
+        points.push(norm_ppf(q.min(1.0 - offset)) as f32);
+    }
+    points.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    points.dedup_by(|a, b| (*a - *b).abs() < 1e-7);
+    while points.len() < n {
+        // pad by nudging the largest magnitude outward (keeps n levels)
+        let last = *points.last().unwrap();
+        points.push(last + 1e-3);
+    }
+    let mut g = Grid { kind: GridKind::Nf, n, p: 1, points, mse: 0.0 };
+    g.mse = g.exact_mse_1d();
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grids::clvq::clvq_grid;
+
+    #[test]
+    fn quantile_grid_symmetric() {
+        let g = nf_grid(16);
+        for i in 0..8 {
+            assert!((g.points[i] + g.points[15 - i]).abs() < 1e-4);
+        }
+        assert!(g.points.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn zero_grid_contains_zero() {
+        let g = nf_grid_zero(16);
+        assert!(g.points.iter().any(|&x| x.abs() < 1e-6), "{:?}", g.points);
+        assert_eq!(g.points.len(), 16);
+    }
+
+    #[test]
+    fn nf_is_worse_than_mse_optimal() {
+        // The paper's headline grid comparison: the entropy-equalized NF
+        // grid has strictly higher Gaussian MSE than the CLVQ grid.
+        for n in [8usize, 16, 64] {
+            let nf = nf_grid(n);
+            let opt = clvq_grid(n, 1, 0);
+            assert!(
+                nf.mse > opt.mse,
+                "n={n}: nf {} should exceed clvq {}",
+                nf.mse,
+                opt.mse
+            );
+        }
+    }
+
+    #[test]
+    fn mse_decreases_with_n() {
+        assert!(nf_grid(8).mse > nf_grid(16).mse);
+        assert!(nf_grid(16).mse > nf_grid(64).mse);
+    }
+}

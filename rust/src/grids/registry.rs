@@ -1,0 +1,168 @@
+//! Grid registry: compute-once cache of grids keyed by (kind, n, p),
+//! with optional on-disk persistence under `artifacts/grids/`.
+//!
+//! "The optimal grid only has to be computed once for any pair of n and
+//! p" (paper §4.2) — CLVQ for larger (n, p) is the only expensive
+//! constructor, so it is cached across processes.
+
+use super::{af::af_grid, clvq::clvq_grid, nf::nf_grid, uniform::uniform_optimal_grid};
+use super::{Grid, GridKind};
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::io::{BufRead, Write};
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+pub struct GridRegistry {
+    cache: Mutex<HashMap<(GridKind, usize, usize), Arc<Grid>>>,
+    disk_dir: Option<PathBuf>,
+}
+
+impl GridRegistry {
+    pub fn new() -> Self {
+        GridRegistry { cache: Mutex::new(HashMap::new()), disk_dir: None }
+    }
+
+    /// Registry persisting CLVQ grids under `dir` (created on demand).
+    pub fn with_disk_cache(dir: PathBuf) -> Self {
+        GridRegistry { cache: Mutex::new(HashMap::new()), disk_dir: Some(dir) }
+    }
+
+    pub fn get(&self, kind: GridKind, n: usize, p: usize) -> Arc<Grid> {
+        if let Some(g) = self.cache.lock().unwrap().get(&(kind, n, p)) {
+            return g.clone();
+        }
+        let grid = self
+            .load_from_disk(kind, n, p)
+            .unwrap_or_else(|| {
+                let g = build(kind, n, p);
+                let _ = self.save_to_disk(&g);
+                g
+            });
+        let arc = Arc::new(grid);
+        self.cache.lock().unwrap().insert((kind, n, p), arc.clone());
+        arc
+    }
+
+    fn disk_path(&self, kind: GridKind, n: usize, p: usize) -> Option<PathBuf> {
+        self.disk_dir.as_ref().map(|d| d.join(format!("{}_n{}_p{}.grid", kind.label(), n, p)))
+    }
+
+    fn load_from_disk(&self, kind: GridKind, n: usize, p: usize) -> Option<Grid> {
+        let path = self.disk_path(kind, n, p)?;
+        let f = std::fs::File::open(path).ok()?;
+        parse_grid(std::io::BufReader::new(f), kind, n, p).ok()
+    }
+
+    fn save_to_disk(&self, g: &Grid) -> Result<()> {
+        let Some(path) = self.disk_path(g.kind, g.n, g.p) else {
+            return Ok(());
+        };
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::File::create(&path)
+            .with_context(|| format!("create {}", path.display()))?;
+        writeln!(f, "mse {}", g.mse)?;
+        for pt in g.points.chunks(g.p) {
+            let row: Vec<String> = pt.iter().map(|x| format!("{x}")).collect();
+            writeln!(f, "{}", row.join(" "))?;
+        }
+        Ok(())
+    }
+}
+
+impl Default for GridRegistry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+fn parse_grid(r: impl BufRead, kind: GridKind, n: usize, p: usize) -> Result<Grid> {
+    let mut mse = 0.0f64;
+    let mut points = Vec::with_capacity(n * p);
+    for line in r.lines() {
+        let line = line?;
+        if let Some(rest) = line.strip_prefix("mse ") {
+            mse = rest.trim().parse()?;
+        } else if !line.trim().is_empty() {
+            for tok in line.split_whitespace() {
+                points.push(tok.parse::<f32>()?);
+            }
+        }
+    }
+    anyhow::ensure!(points.len() == n * p, "grid file has {} values, want {}", points.len(), n * p);
+    Ok(Grid { kind, n, p, points, mse })
+}
+
+fn build(kind: GridKind, n: usize, p: usize) -> Grid {
+    match kind {
+        GridKind::Higgs => clvq_grid(n, p, 0x4116_5),
+        GridKind::Nf => {
+            assert_eq!(p, 1, "NF grids are scalar");
+            nf_grid(n)
+        }
+        GridKind::Af => {
+            assert_eq!(p, 1, "AF grids are scalar");
+            af_grid(n)
+        }
+        GridKind::Uniform => {
+            assert_eq!(p, 1, "uniform grids are scalar");
+            uniform_optimal_grid(n)
+        }
+    }
+}
+
+/// Effective bits/parameter of a (grid, group) configuration, counting
+/// the 16-bit group scale the way the paper does (e.g. 4 + 16/64 = 4.25).
+pub fn effective_bits(n: usize, p: usize, group: usize) -> f64 {
+    (n as f64).log2() / p as f64 + 16.0 / group as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cache_returns_same_arc() {
+        let r = GridRegistry::new();
+        let a = r.get(GridKind::Nf, 16, 1);
+        let b = r.get(GridKind::Nf, 16, 1);
+        assert!(Arc::ptr_eq(&a, &b));
+    }
+
+    #[test]
+    fn disk_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("higgs_grid_test_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        {
+            let r = GridRegistry::with_disk_cache(dir.clone());
+            let g = r.get(GridKind::Higgs, 8, 2);
+            assert_eq!(g.points.len(), 16);
+        }
+        // fresh registry must load identical points from disk
+        let r2 = GridRegistry::with_disk_cache(dir.clone());
+        let g2 = r2.get(GridKind::Higgs, 8, 2);
+        let r3 = GridRegistry::new();
+        let g3 = r3.get(GridKind::Higgs, 8, 2);
+        assert_eq!(g2.points, g3.points);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn effective_bits_paper_configs() {
+        // paper §H: (p=2, n=256) + g=1024 ⇒ 4.02; (p=1,n=19)+g=64 ⇒ ~4.25
+        assert!((effective_bits(256, 2, 1024) - 4.015625).abs() < 1e-6);
+        assert!((effective_bits(16, 1, 64) - 4.25).abs() < 1e-6);
+        assert!((effective_bits(64, 2, 64) - 3.25).abs() < 1e-6);
+    }
+
+    #[test]
+    fn all_kinds_build() {
+        let r = GridRegistry::new();
+        assert_eq!(r.get(GridKind::Higgs, 16, 1).points.len(), 16);
+        assert_eq!(r.get(GridKind::Nf, 16, 1).points.len(), 16);
+        assert_eq!(r.get(GridKind::Af, 16, 1).points.len(), 16);
+        assert_eq!(r.get(GridKind::Uniform, 16, 1).points.len(), 16);
+    }
+}

@@ -1,0 +1,150 @@
+//! Uniform grids: MSE-optimal *constrained uniform* grids (the CH8
+//! trick, paper §4.3) and plain min-max RTN helpers (Eqn. 1).
+//!
+//! Constrained HIGGS bridges to existing uniform-GEMM kernels by
+//! restricting the grid to be uniform and solving only for its scale —
+//! "suboptimal in terms of MSE, but makes up for it in kernel support".
+
+use super::{gaussian_mse_of_1d, Grid, GridKind};
+
+/// Symmetric uniform grid with `n` levels and step `s`:
+/// points = s * (i - (n-1)/2), i = 0..n.
+pub fn symmetric_uniform_points(n: usize, s: f64) -> Vec<f32> {
+    let mid = (n as f64 - 1.0) / 2.0;
+    (0..n).map(|i| (s * (i as f64 - mid)) as f32).collect()
+}
+
+/// MSE-optimal symmetric uniform grid for N(0,1): golden-section search
+/// on the step size (the CH8 constructor, any n).
+pub fn uniform_optimal_grid(n: usize) -> Grid {
+    assert!(n >= 2);
+    let f = |s: f64| gaussian_mse_of_1d(&symmetric_uniform_points(n, s));
+    // bracket: step in (0, 8/(n-1)] covers ±4σ
+    let (mut a, mut b) = (1e-4, 10.0 / (n as f64 - 1.0));
+    let phi = (5f64.sqrt() - 1.0) / 2.0;
+    let (mut c, mut d) = (b - phi * (b - a), a + phi * (b - a));
+    let (mut fc, mut fd) = (f(c), f(d));
+    for _ in 0..80 {
+        if fc < fd {
+            b = d;
+            d = c;
+            fd = fc;
+            c = b - phi * (b - a);
+            fc = f(c);
+        } else {
+            a = c;
+            c = d;
+            fc = fd;
+            d = a + phi * (b - a);
+            fd = f(d);
+        }
+    }
+    let s = (a + b) / 2.0;
+    let points = symmetric_uniform_points(n, s);
+    let mse = gaussian_mse_of_1d(&points);
+    Grid { kind: GridKind::Uniform, n, p: 1, points, mse }
+}
+
+/// Min-max RTN scale/zero for a weight group (Eqn. 1 of the paper):
+/// codes = round((w - min)/step), step = (max-min)/(2^b - 1).
+/// Returns (step, zero) with the dequant convention
+/// `w ≈ (code - zero) * step` used by the serving uniform backend.
+pub fn rtn_scale_zero(group: &[f32], bits: u32) -> (f32, f32) {
+    let levels = ((1u32 << bits) - 1) as f32;
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for &w in group {
+        lo = lo.min(w);
+        hi = hi.max(w);
+    }
+    if !lo.is_finite() || hi <= lo {
+        return (1e-8, 0.0);
+    }
+    let step = (hi - lo) / levels;
+    let zero = -lo / step;
+    (step, zero)
+}
+
+/// Quantize a group with a given (step, zero): returns codes clamped to
+/// [0, 2^bits).
+pub fn rtn_encode(group: &[f32], step: f32, zero: f32, bits: u32) -> Vec<u32> {
+    let maxc = (1u32 << bits) - 1;
+    group
+        .iter()
+        .map(|&w| {
+            let c = (w / step + zero).round();
+            (c.max(0.0) as u32).min(maxc)
+        })
+        .collect()
+}
+
+pub fn rtn_decode(codes: &[u32], step: f32, zero: f32) -> Vec<f32> {
+    codes.iter().map(|&c| (c as f32 - zero) * step).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grids::clvq::clvq_grid;
+    use crate::util::propcheck::forall;
+
+    #[test]
+    fn optimal_uniform_worse_than_clvq_but_close_at_8bit() {
+        let u8b = uniform_optimal_grid(256);
+        let c8b = clvq_grid(256, 1, 0);
+        assert!(u8b.mse >= c8b.mse);
+        // at 8 bits the gap is small (<2.5x) — why CH8 is viable
+        assert!(u8b.mse < c8b.mse * 2.5, "{} vs {}", u8b.mse, c8b.mse);
+    }
+
+    #[test]
+    fn optimal_uniform_beats_naive_pm4() {
+        // naive step covering ±4σ exactly
+        let n = 16;
+        let naive = gaussian_mse_of_1d(&symmetric_uniform_points(n, 8.0 / 15.0));
+        let opt = uniform_optimal_grid(n).mse;
+        assert!(opt < naive, "{opt} {naive}");
+    }
+
+    #[test]
+    fn rtn_roundtrip_within_half_step() {
+        forall("rtn roundtrip", 50, |g| {
+            let n = g.usize_in(4, 64);
+            let bits = g.usize_in(2, 8) as u32;
+            let group = g.vec_normal(n);
+            let (step, zero) = rtn_scale_zero(&group, bits);
+            let codes = rtn_encode(&group, step, zero, bits);
+            let deq = rtn_decode(&codes, step, zero);
+            for (w, d) in group.iter().zip(&deq) {
+                assert!(
+                    (w - d).abs() <= step * 0.5 + 1e-5,
+                    "w {w} d {d} step {step}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn rtn_extremes_exact() {
+        let group = [-1.0f32, 0.2, 0.9, 3.0];
+        let (step, zero) = rtn_scale_zero(&group, 4);
+        let codes = rtn_encode(&group, step, zero, 4);
+        let deq = rtn_decode(&codes, step, zero);
+        assert!((deq[0] + 1.0).abs() < 1e-5);
+        assert!((deq[3] - 3.0).abs() < 1e-5);
+        assert_eq!(codes[0], 0);
+        assert_eq!(codes[3], 15);
+    }
+
+    #[test]
+    fn constant_group_safe() {
+        let group = [0.5f32; 8];
+        let (step, zero) = rtn_scale_zero(&group, 4);
+        assert!(step > 0.0);
+        let codes = rtn_encode(&group, step, zero, 4);
+        let deq = rtn_decode(&codes, step, zero);
+        for d in deq {
+            assert!((d - 0.5).abs() < 1.0);
+        }
+    }
+}

@@ -1,0 +1,205 @@
+//! Hadamard substrate: fast Walsh–Hadamard transform + the randomized
+//! Hadamard transform (RHT) used by HIGGS (paper Alg. 1, App. G).
+//!
+//! Conventions (matching `python/compile/kernels/hadamard.py`):
+//! the *orthonormal* grouped RHT is `R x = H_g (D_ξ x) / sqrt(g)` with
+//! `H_g` the unnormalized Sylvester matrix and `D_ξ` a ±1 diagonal from
+//! seed ξ. `R` is a rotation: inverse = `D_ξ H_g / sqrt(g)` (H is
+//! symmetric).
+
+use crate::util::prng::Rng;
+
+/// In-place unnormalized FWHT over a power-of-two slice. O(g log g).
+pub fn fwht(v: &mut [f32]) {
+    let g = v.len();
+    assert!(g.is_power_of_two(), "fwht length {g} not a power of 2");
+    let mut h = 1;
+    while h < g {
+        let mut i = 0;
+        while i < g {
+            for j in i..i + h {
+                let a = v[j];
+                let b = v[j + h];
+                v[j] = a + b;
+                v[j + h] = a - b;
+            }
+            i += 2 * h;
+        }
+        h *= 2;
+    }
+}
+
+/// Deterministic ±1 sign vector for (seed, label) — the RHT diagonal.
+pub fn signs_for(seed: u64, label: &str, n: usize) -> Vec<f32> {
+    Rng::from_stream(seed, label).sign_vec(n)
+}
+
+/// Orthonormal grouped RHT applied in place: per contiguous group of g,
+/// `x <- H (signs ⊙ x) / sqrt(g)`. `signs.len() == x.len()`.
+pub fn rht_forward(x: &mut [f32], signs: &[f32], g: usize) {
+    assert_eq!(x.len(), signs.len());
+    assert_eq!(x.len() % g, 0);
+    let inv = 1.0 / (g as f32).sqrt();
+    for (chunk, sg) in x.chunks_mut(g).zip(signs.chunks(g)) {
+        for (v, s) in chunk.iter_mut().zip(sg) {
+            *v *= s;
+        }
+        fwht(chunk);
+        for v in chunk.iter_mut() {
+            *v *= inv;
+        }
+    }
+}
+
+/// Inverse of [`rht_forward`]: `x <- signs ⊙ (H x) / sqrt(g)`.
+pub fn rht_inverse(x: &mut [f32], signs: &[f32], g: usize) {
+    assert_eq!(x.len(), signs.len());
+    assert_eq!(x.len() % g, 0);
+    let inv = 1.0 / (g as f32).sqrt();
+    for (chunk, sg) in x.chunks_mut(g).zip(signs.chunks(g)) {
+        fwht(chunk);
+        for (v, s) in chunk.iter_mut().zip(sg) {
+            *v *= *s * inv;
+        }
+    }
+}
+
+/// Apply the orthonormal grouped RHT along the *rows* (input dim) of a
+/// row-major [K, N] matrix: every column is transformed independently in
+/// groups of g along K. This is the weight-space transform of App. G
+/// (groups along the input dimension so activations can be rotated with
+/// the same seed at serve time).
+pub fn rht_rows_forward(w: &mut [f32], k: usize, n: usize, signs: &[f32], g: usize) {
+    assert_eq!(w.len(), k * n);
+    assert_eq!(signs.len(), k);
+    assert_eq!(k % g, 0);
+    let mut col = vec![0.0f32; k];
+    for j in 0..n {
+        for i in 0..k {
+            col[i] = w[i * n + j];
+        }
+        rht_forward(&mut col, signs, g);
+        for i in 0..k {
+            w[i * n + j] = col[i];
+        }
+    }
+}
+
+/// Inverse of [`rht_rows_forward`].
+pub fn rht_rows_inverse(w: &mut [f32], k: usize, n: usize, signs: &[f32], g: usize) {
+    assert_eq!(w.len(), k * n);
+    assert_eq!(signs.len(), k);
+    let mut col = vec![0.0f32; k];
+    for j in 0..n {
+        for i in 0..k {
+            col[i] = w[i * n + j];
+        }
+        rht_inverse(&mut col, signs, g);
+        for i in 0..k {
+            w[i * n + j] = col[i];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::forall;
+
+    #[test]
+    fn fwht_known_values() {
+        let mut v = vec![1.0, 0.0, 0.0, 0.0];
+        fwht(&mut v);
+        assert_eq!(v, vec![1.0, 1.0, 1.0, 1.0]);
+        let mut v = vec![1.0, 2.0];
+        fwht(&mut v);
+        assert_eq!(v, vec![3.0, -1.0]);
+    }
+
+    #[test]
+    fn fwht_involution_scaled() {
+        // H(Hx) = g * x
+        forall("fwht involution", 30, |gn| {
+            let g = gn.pow2_in(1, 8);
+            let x = gn.vec_normal(g);
+            let mut v = x.clone();
+            fwht(&mut v);
+            fwht(&mut v);
+            for (a, b) in v.iter().zip(&x) {
+                assert!((a / g as f32 - b).abs() < 1e-3, "{a} {b}");
+            }
+        });
+    }
+
+    #[test]
+    fn rht_preserves_norm() {
+        forall("rht isometry", 30, |gn| {
+            let g = gn.pow2_in(2, 7);
+            let groups = gn.usize_in(1, 4);
+            let x = gn.vec_normal(g * groups);
+            let signs = gn.rng().sign_vec(g * groups);
+            let mut y = x.clone();
+            rht_forward(&mut y, &signs, g);
+            let nx: f32 = x.iter().map(|v| v * v).sum();
+            let ny: f32 = y.iter().map(|v| v * v).sum();
+            assert!((nx - ny).abs() / nx.max(1e-6) < 1e-3, "{nx} {ny}");
+        });
+    }
+
+    #[test]
+    fn rht_roundtrip() {
+        forall("rht roundtrip", 30, |gn| {
+            let g = gn.pow2_in(2, 7);
+            let x = gn.vec_normal(g * 2);
+            let signs = gn.rng().sign_vec(g * 2);
+            let mut y = x.clone();
+            rht_forward(&mut y, &signs, g);
+            rht_inverse(&mut y, &signs, g);
+            for (a, b) in y.iter().zip(&x) {
+                assert!((a - b).abs() < 1e-4, "{a} {b}");
+            }
+        });
+    }
+
+    #[test]
+    fn rht_gaussianizes() {
+        // A spiky vector becomes ~Gaussian after RHT: kurtosis drops.
+        let g = 256;
+        let mut x = vec![0.0f32; g];
+        x[3] = 16.0; // all energy in one coordinate
+        let signs = signs_for(0, "t", g);
+        let mut y = x.clone();
+        rht_forward(&mut y, &signs, g);
+        // post-RHT entries all have magnitude 1 (|spike|/sqrt(g) spread)
+        for v in &y {
+            assert!((v.abs() - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn rows_transform_matches_per_column() {
+        let (k, n, g) = (8, 3, 4);
+        let mut rng = crate::util::prng::Rng::new(9);
+        let w: Vec<f32> = rng.normal_vec(k * n);
+        let signs = signs_for(1, "c", k);
+        let mut wt = w.clone();
+        rht_rows_forward(&mut wt, k, n, &signs, g);
+        for j in 0..n {
+            let mut col: Vec<f32> = (0..k).map(|i| w[i * n + j]).collect();
+            rht_forward(&mut col, &signs, g);
+            for i in 0..k {
+                assert!((wt[i * n + j] - col[i]).abs() < 1e-5);
+            }
+        }
+        rht_rows_inverse(&mut wt, k, n, &signs, g);
+        for (a, b) in wt.iter().zip(&w) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn signs_deterministic() {
+        assert_eq!(signs_for(3, "l0.wq", 64), signs_for(3, "l0.wq", 64));
+        assert_ne!(signs_for(3, "l0.wq", 64), signs_for(3, "l0.wk", 64));
+    }
+}

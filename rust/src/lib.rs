@@ -1,0 +1,63 @@
+//! # higgs — LLM quantization via the Linearity Theorem
+//!
+//! A full-system reproduction of *"Pushing the Limits of Large Language
+//! Model Quantization via the Linearity Theorem"* (Malinovskii et al.,
+//! 2024) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L1** (build-time Python): Pallas kernels — the fused
+//!   LUT-dequantize + GEMM (FLUTE analogue) and the grouped Hadamard
+//!   transform — validated against pure-jnp oracles.
+//! * **L2** (build-time Python): the transformer LM (fwd / loss / grad /
+//!   prefill / decode) lowered once to HLO text under
+//!   `artifacts/`.
+//! * **L3** (this crate): the quantization framework and serving
+//!   coordinator. Python never runs at request time.
+//!
+//! Top-level features, mapped to the paper:
+//!
+//! | paper | module |
+//! |---|---|
+//! | §3 linearity theorem machinery (α-calibration, PPL prediction) | [`linearity`] |
+//! | §4 HIGGS (RHT + Gaussian-MSE-optimal grids) | [`quant::higgs`], [`grids`], [`hadamard`] |
+//! | §4.3 FLUTE-style serving | [`serve`], [`runtime`] |
+//! | §4.4 GPTQ + HIGGS | [`quant::gptq`] |
+//! | §5 dynamic bitwidth allocation | [`alloc`] |
+//! | §6 evaluation harness | [`eval`], `rust/benches/` |
+
+pub mod alloc;
+pub mod config;
+pub mod experiments;
+pub mod data;
+pub mod eval;
+pub mod grids;
+pub mod hadamard;
+pub mod linearity;
+pub mod model;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod serve;
+pub mod tensor;
+pub mod train;
+pub mod util;
+
+pub use anyhow::{anyhow, bail, Context, Result};
+
+/// Repo-relative artifacts directory (overridable via `HIGGS_ARTIFACTS`).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("HIGGS_ARTIFACTS") {
+        return p.into();
+    }
+    // Walk up from cwd looking for an `artifacts/` directory so tests,
+    // benches and binaries all work regardless of invocation dir.
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.is_dir() {
+            return cand;
+        }
+        if !dir.pop() {
+            return "artifacts".into();
+        }
+    }
+}

@@ -1,0 +1,169 @@
+//! Algorithm 3: error-coefficient calibration.
+//!
+//! For every linear layer l and noise level t_j, evaluate the metric of
+//! the model with only layer l perturbed by `G_l(·, t_j)` and regress
+//! Δ_{l,j} = metric(W*(l, t_j)) − metric(W*) on t_j² through the origin:
+//! α_l = Σ_j Δ_{l,j} t_j² / Σ_j t_j⁴.
+//!
+//! Metrics:
+//! * `Ppl` — validation perplexity (the paper's calibrated mode);
+//! * `Kl`  — KL divergence against the unperturbed model on random
+//!   tokens (the fully data-free mode of §5).
+
+use super::noise::gaussian_noise;
+use crate::eval::Evaluator;
+use crate::model::Weights;
+use crate::util::stats::lsq_origin;
+use anyhow::Result;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CalibMetric {
+    Ppl,
+    Kl,
+}
+
+#[derive(Clone, Debug)]
+pub struct LayerAlphas {
+    pub metric: CalibMetric,
+    /// (layer name, α_l) in cfg.linear_shapes() order
+    pub alphas: Vec<(String, f64)>,
+    /// baseline metric value (PPL(W*) for Ppl, 0 for Kl)
+    pub base: f64,
+    pub noise_levels: Vec<f64>,
+}
+
+impl LayerAlphas {
+    pub fn alpha(&self, layer: &str) -> Option<f64> {
+        self.alphas.iter().find(|(n, _)| n == layer).map(|&(_, a)| a)
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        use std::io::Write;
+        let mut f = std::fs::File::create(path)?;
+        writeln!(f, "# alpha calibration ({:?}) base {}", self.metric, self.base)?;
+        writeln!(f, "base {}", self.base)?;
+        for (n, a) in &self.alphas {
+            writeln!(f, "{n} {a}")?;
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &std::path::Path, metric: CalibMetric) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        let mut base = 0.0;
+        let mut alphas = Vec::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let (k, v) = line.split_once(' ').unwrap_or((line, "0"));
+            if k == "base" {
+                base = v.parse()?;
+            } else {
+                alphas.push((k.to_string(), v.parse()?));
+            }
+        }
+        Ok(LayerAlphas { metric, alphas, base, noise_levels: vec![] })
+    }
+}
+
+/// Run Algorithm 3. `noise_levels` are the t_j (e.g. J=15 uniform in the
+/// theorem's applicability range [0.02, 0.25]).
+pub fn calibrate_alphas(
+    ev: &Evaluator,
+    weights: &Weights,
+    noise_levels: &[f64],
+    metric: CalibMetric,
+    seed: u64,
+) -> Result<LayerAlphas> {
+    let layers = weights.linear_names();
+    let base = match metric {
+        CalibMetric::Ppl => ev.perplexity(weights)?,
+        CalibMetric::Kl => 0.0,
+    };
+    let mut alphas = Vec::with_capacity(layers.len());
+    let mut work = weights.clone();
+    for (li, layer) in layers.iter().enumerate() {
+        let original = weights.linear(layer).unwrap().clone();
+        let mut xs = Vec::with_capacity(noise_levels.len());
+        let mut ys = Vec::with_capacity(noise_levels.len());
+        for (j, &t) in noise_levels.iter().enumerate() {
+            let noisy = gaussian_noise(&original, t, seed ^ ((li * 131 + j) as u64), layer);
+            work.set_linear(layer, noisy)?;
+            let m = match metric {
+                CalibMetric::Ppl => ev.perplexity(&work)?,
+                CalibMetric::Kl => ev.kl_on_random(weights, &work, 2, seed ^ 0xD15E)?,
+            };
+            xs.push(t * t);
+            ys.push(m - base);
+        }
+        work.set_linear(layer, original)?;
+        let alpha = lsq_origin(&xs, &ys).max(0.0);
+        log::debug!("alpha[{layer}] = {alpha:.4}");
+        alphas.push((layer.clone(), alpha));
+    }
+    Ok(LayerAlphas {
+        metric,
+        alphas,
+        base,
+        noise_levels: noise_levels.to_vec(),
+    })
+}
+
+/// Default noise grid: J levels uniform in the applicability range.
+pub fn default_noise_levels(j: usize) -> Vec<f64> {
+    let (lo, hi) = (0.03, 0.25);
+    (0..j).map(|i| lo + (hi - lo) * i as f64 / (j - 1).max(1) as f64).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::runtime::Engine;
+
+    #[test]
+    fn noise_grid_shape() {
+        let g = default_noise_levels(15);
+        assert_eq!(g.len(), 15);
+        assert!(g[0] > 0.0 && g[14] <= 0.25 + 1e-12);
+        assert!(g.windows(2).all(|w| w[1] > w[0]));
+    }
+
+    #[test]
+    fn alphas_roundtrip_file() {
+        let a = LayerAlphas {
+            metric: CalibMetric::Ppl,
+            alphas: vec![("l0.wq".into(), 1.5), ("l0.wk".into(), 0.25)],
+            base: 9.5,
+            noise_levels: vec![0.1],
+        };
+        let path = std::env::temp_dir().join(format!("alphas_{}.txt", std::process::id()));
+        a.save(&path).unwrap();
+        let b = LayerAlphas::load(&path, CalibMetric::Ppl).unwrap();
+        assert_eq!(b.base, 9.5);
+        assert_eq!(b.alpha("l0.wq"), Some(1.5));
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn calibration_on_tiny_model() {
+        if !crate::artifacts_dir().join("fwd_loss_tiny.hlo.txt").exists() {
+            return;
+        }
+        let eng = Engine::new().unwrap();
+        let cfg = ModelConfig::load_named(eng.artifacts(), "tiny").unwrap();
+        let exe = eng.load("fwd_loss_tiny").unwrap();
+        let w = Weights::from_manifest(cfg.clone(), &exe.manifest, Some(1)).unwrap();
+        let mut ev = Evaluator::new(&eng, cfg);
+        ev.ppl_batches = 1;
+        // calibrate just 2 layers worth by truncating noise levels for speed
+        let alphas =
+            calibrate_alphas(&ev, &w, &[0.1, 0.2], CalibMetric::Ppl, 3).unwrap();
+        assert_eq!(alphas.alphas.len(), 14);
+        assert!(alphas.base > 1.0);
+        // α must be finite and non-negative
+        assert!(alphas.alphas.iter().all(|(_, a)| a.is_finite() && *a >= 0.0));
+    }
+}

@@ -1,0 +1,206 @@
+//! Assumption 3 validation (Appendix E): the scaled Hessian product
+//! D* ∇²φ(w*) D* is approximately (block-)diagonal.
+//!
+//! The paper uses PyTorch autograd; here we use the exact gradients of
+//! the AOT `grad_<cfg>` executable and central finite differences over
+//! a parameter subset: column j of the sub-Hessian is
+//! (∇f(w + h e_j) − ∇f(w − h e_j)) / 2h restricted to the subset —
+//! 2·t executions for a t-parameter probe.
+
+use crate::config::ModelConfig;
+use crate::data::{Corpus, Split};
+use crate::model::Weights;
+use crate::runtime::{dense_args, Engine, HostArg};
+use crate::tensor::Tensor;
+use anyhow::{Context, Result};
+
+/// A probe selects `per_layer` leading parameters from each listed layer.
+pub struct HessianProbe<'a> {
+    pub engine: &'a Engine,
+    pub cfg: ModelConfig,
+    pub layers: Vec<String>,
+    pub per_layer: usize,
+    pub step: f32,
+}
+
+pub struct HessianResult {
+    /// the sub-Hessian of the loss, scaled: D* H D* (t×t, t = layers × per_layer)
+    pub scaled: Tensor,
+    pub layers: Vec<String>,
+    pub per_layer: usize,
+}
+
+impl HessianResult {
+    /// Diagonal-dominance statistic: mean |diag| / mean |off-diag|.
+    /// Assumption 3 predicts this is ≫ 1.
+    pub fn diag_dominance(&self) -> f64 {
+        let n = self.scaled.rows();
+        let mut diag = 0.0f64;
+        let mut off = 0.0f64;
+        for i in 0..n {
+            for j in 0..n {
+                let v = self.scaled.at2(i, j).abs() as f64;
+                if i == j {
+                    diag += v;
+                } else {
+                    off += v;
+                }
+            }
+        }
+        let diag_mean = diag / n as f64;
+        let off_mean = off / (n * (n - 1)).max(1) as f64;
+        if off_mean == 0.0 {
+            f64::INFINITY
+        } else {
+            diag_mean / off_mean
+        }
+    }
+
+    /// Per-layer-block diagonal means (the z_l of Assumption 3).
+    pub fn block_diag_means(&self) -> Vec<(String, f64)> {
+        let t = self.per_layer;
+        self.layers
+            .iter()
+            .enumerate()
+            .map(|(li, name)| {
+                let mut s = 0.0f64;
+                for i in 0..t {
+                    s += self.scaled.at2(li * t + i, li * t + i) as f64;
+                }
+                (name.clone(), s / t as f64)
+            })
+            .collect()
+    }
+}
+
+impl<'a> HessianProbe<'a> {
+    /// Gradient restricted to the probe subset, at perturbed weights.
+    fn subset_grad(
+        &self,
+        weights: &Weights,
+        tokens: &[i32],
+        batch: usize,
+    ) -> Result<Vec<f32>> {
+        let exe = self.engine.load(&format!("grad_{}", self.cfg.name))?;
+        let args = dense_args(
+            &exe.manifest,
+            vec![HostArg::I32(tokens.to_vec(), vec![batch, self.cfg.seq])],
+            weights,
+        )?;
+        let outs = self.engine.run(&exe, &args)?;
+        // outputs: loss, then grads in manifest/params order
+        let mut sub = Vec::with_capacity(self.layers.len() * self.per_layer);
+        for layer in &self.layers {
+            let name = format!("grad.{layer}.w");
+            let g = outs
+                .iter()
+                .find(|o| o.name == name)
+                .with_context(|| format!("missing output {name}"))?;
+            sub.extend_from_slice(&g.data[..self.per_layer]);
+        }
+        Ok(sub)
+    }
+
+    /// Compute the scaled sub-Hessian D* H D*.
+    pub fn compute(&self, weights: &Weights) -> Result<HessianResult> {
+        let batch = crate::eval::EVAL_BATCH;
+        let corpus = Corpus::new(self.cfg.vocab, self.cfg.seq, 0xC0_1155);
+        let tokens = corpus.batch(Split::Val, 0, batch);
+        let t = self.per_layer;
+        let total = self.layers.len() * t;
+        let mut h = Tensor::zeros(&[total, total]);
+        let mut work = weights.clone();
+
+        // layer norms for the D* scaling
+        let norms: Vec<f32> = self
+            .layers
+            .iter()
+            .map(|l| weights.linear(l).unwrap().norm() as f32)
+            .collect();
+
+        for (li, layer) in self.layers.iter().enumerate() {
+            let original = weights.linear(layer).unwrap().clone();
+            for pi in 0..t {
+                let col = li * t + pi;
+                // +h and −h probes on parameter pi of this layer
+                let mut wplus = original.clone();
+                wplus.data[pi] += self.step;
+                work.set_linear(layer, wplus)?;
+                let gp = self.subset_grad(&work, &tokens, batch)?;
+                let mut wminus = original.clone();
+                wminus.data[pi] -= self.step;
+                work.set_linear(layer, wminus)?;
+                let gm = self.subset_grad(&work, &tokens, batch)?;
+                for row in 0..total {
+                    *h.at2_mut(row, col) = (gp[row] - gm[row]) / (2.0 * self.step);
+                }
+            }
+            work.set_linear(layer, original)?;
+        }
+
+        // scale: (D* H D*)_{ij} = ||W_{l(i)}|| ||W_{l(j)}|| H_{ij}
+        for i in 0..total {
+            for j in 0..total {
+                let s = norms[i / t] * norms[j / t];
+                *h.at2_mut(i, j) *= s;
+            }
+        }
+        // symmetrize (FD noise)
+        let ht = h.t();
+        for i in 0..total {
+            for j in 0..total {
+                *h.at2_mut(i, j) = 0.5 * (h.at2(i, j) + ht.at2(i, j));
+            }
+        }
+        Ok(HessianResult { scaled: h, layers: self.layers.clone(), per_layer: t })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn diag_dominance_math() {
+        let mut m = Tensor::zeros(&[4, 4]);
+        for i in 0..4 {
+            *m.at2_mut(i, i) = 10.0;
+        }
+        *m.at2_mut(0, 1) = 1.0;
+        let r = HessianResult {
+            scaled: m,
+            layers: vec!["a".into(), "b".into()],
+            per_layer: 2,
+        };
+        assert!(r.diag_dominance() > 50.0);
+        let blocks = r.block_diag_means();
+        assert_eq!(blocks.len(), 2);
+        assert!((blocks[0].1 - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn probe_on_tiny_model() {
+        if !crate::artifacts_dir().join("grad_tiny.hlo.txt").exists() {
+            return;
+        }
+        let eng = Engine::new().unwrap();
+        let cfg = ModelConfig::load_named(eng.artifacts(), "tiny").unwrap();
+        let exe = eng.load("grad_tiny").unwrap();
+        let w = Weights::from_manifest(cfg.clone(), &exe.manifest, Some(1)).unwrap();
+        let probe = HessianProbe {
+            engine: &eng,
+            cfg,
+            layers: vec!["l0.wq".into(), "l1.wo".into()],
+            per_layer: 3,
+            step: 1e-2,
+        };
+        let res = probe.compute(&w).unwrap();
+        assert_eq!(res.scaled.rows(), 6);
+        // symmetric by construction
+        for i in 0..6 {
+            for j in 0..6 {
+                assert!((res.scaled.at2(i, j) - res.scaled.at2(j, i)).abs() < 1e-6);
+            }
+        }
+    }
+}

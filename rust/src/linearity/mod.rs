@@ -1,0 +1,18 @@
+//! The linearity-theorem machinery (paper §3, §5, Appendices B–E):
+//!
+//! * [`noise`] — Gaussian noise insertion `G_l(W, t)` (Eqn. 9), the
+//!   quantizer-independent perturbation used for calibration;
+//! * [`calibrate`] — Algorithm 3: per-layer scaling coefficients α_l by
+//!   least squares over J noise levels, against PPL or (data-free) KL;
+//! * [`predict`] — the linear error model
+//!   `PPL(Ŵ) ≈ PPL(W*) + Σ_l α_l t_l²` (Theorem 1 / Eqn. 4);
+//! * [`hessian`] — finite-difference validation of Assumption 3
+//!   (diagonal dominance of D*∇²φD*, Appendix E).
+
+pub mod calibrate;
+pub mod hessian;
+pub mod noise;
+pub mod predict;
+
+pub use calibrate::{calibrate_alphas, CalibMetric, LayerAlphas};
+pub use predict::predict_ppl;

@@ -1,0 +1,65 @@
+//! Gaussian noise insertion (paper Eqn. 9 / Appendix B.2):
+//!
+//!   G_l(W_l, t) = W_l + (t‖W_l‖_F / √d_l) Σ_l,   Σ_l ~ N(0, 1)^{d_l}
+//!
+//! so that E‖G_l(W,t) − W‖²_F = t²‖W‖²_F exactly — a synthetic
+//! "compressor" with a dialled-in relative error t, unbiased (hence
+//! Assumption 1 is not even needed, §3.2).
+
+use crate::tensor::Tensor;
+use crate::util::prng::Rng;
+
+/// Return a noisy copy of `w` with relative error level `t`.
+pub fn gaussian_noise(w: &Tensor, t: f64, seed: u64, label: &str) -> Tensor {
+    let d = w.len() as f64;
+    let sigma = (t * w.norm() / d.sqrt()) as f32;
+    let mut rng = Rng::from_stream(seed, &format!("noise:{label}:{t}"));
+    let mut out = w.clone();
+    for v in out.data.iter_mut() {
+        *v += sigma * rng.normal_f32();
+    }
+    out
+}
+
+/// Empirical relative error of the insertion (for tests / validation).
+pub fn measured_t2(original: &Tensor, noisy: &Tensor) -> f64 {
+    crate::util::stats::rel_sq_err(&noisy.data, &original.data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::forall;
+
+    #[test]
+    fn relative_error_matches_t() {
+        forall("noise t calibration", 20, |g| {
+            let k = g.usize_in(32, 128);
+            let n = g.usize_in(8, 32);
+            let t = g.f64_in(0.01, 0.5);
+            let w = Tensor::from_vec(&[k, n], g.vec_normal(k * n));
+            let noisy = gaussian_noise(&w, t, g.seed, "x");
+            let t2 = measured_t2(&w, &noisy);
+            let rel_dev = (t2 - t * t).abs() / (t * t);
+            // concentration: relative deviation shrinks with d; allow 20%
+            assert!(rel_dev < 0.2, "t²={} want {} (dev {rel_dev})", t2, t * t);
+        });
+    }
+
+    #[test]
+    fn deterministic_per_seed_and_label() {
+        let w = Tensor::from_vec(&[4, 4], (0..16).map(|i| i as f32).collect());
+        let a = gaussian_noise(&w, 0.1, 1, "l0");
+        let b = gaussian_noise(&w, 0.1, 1, "l0");
+        let c = gaussian_noise(&w, 0.1, 1, "l1");
+        assert_eq!(a.data, b.data);
+        assert_ne!(a.data, c.data);
+    }
+
+    #[test]
+    fn zero_t_is_identity() {
+        let w = Tensor::from_vec(&[4, 4], (0..16).map(|i| i as f32).collect());
+        let a = gaussian_noise(&w, 0.0, 1, "l0");
+        assert_eq!(a.data, w.data);
+    }
+}

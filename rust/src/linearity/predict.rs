@@ -1,0 +1,61 @@
+//! The linear error model (Theorem 1):
+//!
+//!   E[PPL(Ŵ)] ≈ PPL(W*) + Σ_l α_l t_l²          (Eqn. 4)
+//!
+//! given per-layer relative errors t_l² (measured from any quantizer —
+//! the α_l are quantizer-independent) and the calibrated α_l.
+
+use super::calibrate::LayerAlphas;
+
+/// Predict the metric value after quantizing with per-layer errors
+/// `t2_per_layer` (same order/names as the calibration).
+pub fn predict_ppl(alphas: &LayerAlphas, t2_per_layer: &[(String, f64)]) -> f64 {
+    let mut total = alphas.base;
+    for (layer, t2) in t2_per_layer {
+        if let Some(a) = alphas.alpha(layer) {
+            total += a * t2;
+        }
+    }
+    total
+}
+
+/// Penalty-only form (Σ α t²) — the objective of problem (5).
+pub fn predict_penalty(alphas: &LayerAlphas, t2_per_layer: &[(String, f64)]) -> f64 {
+    predict_ppl(alphas, t2_per_layer) - alphas.base
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linearity::calibrate::CalibMetric;
+
+    fn toy_alphas() -> LayerAlphas {
+        LayerAlphas {
+            metric: CalibMetric::Ppl,
+            alphas: vec![("a".into(), 2.0), ("b".into(), 10.0)],
+            base: 5.0,
+            noise_levels: vec![],
+        }
+    }
+
+    #[test]
+    fn additive_prediction() {
+        let a = toy_alphas();
+        let pred = predict_ppl(&a, &[("a".into(), 0.01), ("b".into(), 0.04)]);
+        assert!((pred - (5.0 + 0.02 + 0.4)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn unknown_layers_ignored() {
+        let a = toy_alphas();
+        let pred = predict_ppl(&a, &[("zzz".into(), 1.0)]);
+        assert_eq!(pred, 5.0);
+    }
+
+    #[test]
+    fn penalty_is_delta() {
+        let a = toy_alphas();
+        let t2 = vec![("a".to_string(), 0.5)];
+        assert!((predict_penalty(&a, &t2) - 1.0).abs() < 1e-12);
+    }
+}

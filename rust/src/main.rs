@@ -1,0 +1,395 @@
+//! `higgs` — the L3 coordinator CLI.
+//!
+//! Subcommands (hand-rolled parser; clap is not in the offline set):
+//!
+//! ```text
+//! higgs train      --config base --steps 400 [--lr 3e-3] [--out PATH]
+//! higgs eval       --config base [--quant SPEC] [--tasks]
+//! higgs quantize   --config base --method higgs_p2_n256 [--report-layers]
+//! higgs calibrate  --config base [--metric ppl|kl] [--levels 15]
+//! higgs allocate   --config base --budget 3.25 [--solver dp|greedy|lagrange] [--metric kl]
+//! higgs serve-bench --config base --backend flute4|fp16|uniform4|nf4 --batch 4 [--requests 24]
+//! higgs hessian    --config tiny [--per-layer 8]
+//! higgs experiment fig1|fig2|fig3|fig4|table1|table2|table3|table4|table6 [--config base]
+//! ```
+
+use anyhow::{bail, Context, Result};
+use higgs::config::ModelConfig;
+use higgs::experiments::{figures, tables, ExpContext};
+use higgs::linearity::calibrate::CalibMetric;
+use higgs::model::Weights;
+use higgs::runtime::Engine;
+use std::collections::BTreeMap;
+
+struct Args {
+    cmd: String,
+    flags: BTreeMap<String, String>,
+    positional: Vec<String>,
+}
+
+fn parse_args() -> Args {
+    let mut it = std::env::args().skip(1).peekable();
+    let cmd = it.next().unwrap_or_else(|| "help".to_string());
+    let mut flags = BTreeMap::new();
+    let mut positional = Vec::new();
+    while let Some(a) = it.next() {
+        if let Some(name) = a.strip_prefix("--") {
+            let val = if it.peek().map(|v| !v.starts_with("--")).unwrap_or(false) {
+                it.next().unwrap()
+            } else {
+                "true".to_string()
+            };
+            flags.insert(name.to_string(), val);
+        } else {
+            positional.push(a);
+        }
+    }
+    Args { cmd, flags, positional }
+}
+
+impl Args {
+    fn get(&self, k: &str, default: &str) -> String {
+        self.flags.get(k).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    fn get_usize(&self, k: &str, default: usize) -> Result<usize> {
+        match self.flags.get(k) {
+            Some(v) => v.parse().with_context(|| format!("--{k} {v}: not an integer")),
+            None => Ok(default),
+        }
+    }
+
+    fn get_f64(&self, k: &str, default: f64) -> Result<f64> {
+        match self.flags.get(k) {
+            Some(v) => v.parse().with_context(|| format!("--{k} {v}: not a number")),
+            None => Ok(default),
+        }
+    }
+}
+
+fn main() {
+    let args = parse_args();
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.cmd.as_str() {
+        "train" => cmd_train(args),
+        "eval" => cmd_eval(args),
+        "quantize" => cmd_quantize(args),
+        "calibrate" => cmd_calibrate(args),
+        "allocate" => cmd_allocate(args),
+        "serve-bench" => cmd_serve_bench(args),
+        "generate" => cmd_generate(args),
+        "hessian" => cmd_hessian(args),
+        "experiment" => cmd_experiment(args),
+        "help" | "--help" | "-h" => {
+            println!("{}", HELP);
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}; see `higgs help`"),
+    }
+}
+
+const HELP: &str = "higgs — LLM quantization via the Linearity Theorem (see README.md)
+commands: train, eval, quantize, calibrate, allocate, serve-bench, hessian, experiment";
+
+fn ckpt_path(engine: &Engine, cfg: &ModelConfig, args: &Args) -> std::path::PathBuf {
+    match args.flags.get("ckpt").or_else(|| args.flags.get("out")) {
+        Some(p) => p.into(),
+        None => engine.artifacts().join(format!("ckpt_{}.bin", cfg.name)),
+    }
+}
+
+fn load_weights(engine: &Engine, cfg: &ModelConfig, args: &Args) -> Result<Weights> {
+    let path = ckpt_path(engine, cfg, args);
+    if path.exists() {
+        Weights::load(&path, cfg.clone())
+    } else {
+        eprintln!("WARNING: {} missing; using random init", path.display());
+        let man = engine.load(&format!("fwd_loss_{}", cfg.name))?.manifest.clone();
+        Weights::from_manifest(cfg.clone(), &man, Some(0xA11CE))
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let engine = Engine::new()?;
+    let cfg_name = args.get("config", "base");
+    let cfg = ModelConfig::load_named(engine.artifacts(), &cfg_name)?;
+    let steps = args.get_usize("steps", 400)? as u64;
+    let lr = args.get_f64("lr", 3e-3)? as f32;
+    let man = engine.load(&format!("grad_{cfg_name}"))?.manifest.clone();
+    let mut weights = Weights::from_manifest(cfg.clone(), &man, Some(7))?;
+    eprintln!(
+        "training `{cfg_name}` ({} params) for {steps} steps, lr {lr}",
+        weights.total_params()
+    );
+    let trainer = higgs::train::Trainer::new(&engine, cfg.clone());
+    let t0 = std::time::Instant::now();
+    let report = trainer.train(&mut weights, steps, lr, (steps / 20).max(1))?;
+    let path = ckpt_path(&engine, &cfg, args);
+    weights.save(&path)?;
+    println!(
+        "trained {} steps in {:.1}s ({:.0} tok/s), final loss {:.4} (ppl {:.3}); saved {}",
+        report.steps,
+        t0.elapsed().as_secs_f64(),
+        report.tokens_seen as f64 / t0.elapsed().as_secs_f64(),
+        report.final_loss,
+        (report.final_loss as f64).exp(),
+        path.display()
+    );
+    println!("loss curve:");
+    for (s, l) in &report.losses {
+        println!("  step {s:>6}  loss {l:.4}");
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let engine = Engine::new()?;
+    let cfg = ModelConfig::load_named(engine.artifacts(), &args.get("config", "base"))?;
+    let weights = load_weights(&engine, &cfg, args)?;
+    let ev = higgs::eval::Evaluator::new(&engine, cfg.clone());
+    let registry =
+        higgs::grids::registry::GridRegistry::with_disk_cache(engine.artifacts().join("grids"));
+    let (label, target) = match args.flags.get("quant") {
+        Some(spec) => {
+            let q = higgs::quant::parse_spec(spec, &registry, cfg.group, 0x51)?;
+            let qm = higgs::quant::QuantizedModel::quantize_all(&weights, q.as_ref());
+            (format!("{spec} ({:.2} bits)", qm.avg_bits()), qm.apply_to(&weights))
+        }
+        None => ("fp32".to_string(), weights.clone()),
+    };
+    let ppl = ev.perplexity(&target)?;
+    println!("{label}: ppl {ppl:.4}");
+    if args.flags.contains_key("tasks") {
+        let s = ev.task_scores(&target, 0x51)?;
+        println!(
+            "tasks: copy {:.3}  grammar {:.3}  cloze {:.3}  avg {:.3}",
+            s.copy,
+            s.grammar,
+            s.cloze,
+            s.average()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_quantize(args: &Args) -> Result<()> {
+    let engine = Engine::new()?;
+    let cfg = ModelConfig::load_named(engine.artifacts(), &args.get("config", "base"))?;
+    let weights = load_weights(&engine, &cfg, args)?;
+    let registry =
+        higgs::grids::registry::GridRegistry::with_disk_cache(engine.artifacts().join("grids"));
+    let spec = args.get("method", "higgs_p2_n256");
+    let q = higgs::quant::parse_spec(&spec, &registry, cfg.group, 0x51)?;
+    let t0 = std::time::Instant::now();
+    let qm = higgs::quant::QuantizedModel::quantize_all(&weights, q.as_ref());
+    let secs = t0.elapsed().as_secs_f64();
+    let packed: usize = qm.layers.iter().map(|l| l.packed_bytes()).sum();
+    println!(
+        "{spec}: {:.2} bits/param, {:.1} KiB packed, quantized {} layers in {:.2}s ({:.1} Mparam/s)",
+        qm.avg_bits(),
+        packed as f64 / 1024.0,
+        qm.layers.len(),
+        secs,
+        cfg.linear_params() as f64 / secs / 1e6,
+    );
+    if args.flags.contains_key("report-layers") {
+        for (name, t2) in qm.layer_errors(&weights) {
+            println!("  {name:<14} t² {t2:.5}");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_calibrate(args: &Args) -> Result<()> {
+    let cfg_name = args.get("config", "base");
+    let ctx = ExpContext::load(&cfg_name)?;
+    let metric = match args.get("metric", "ppl").as_str() {
+        "kl" => CalibMetric::Kl,
+        _ => CalibMetric::Ppl,
+    };
+    let j = args.get_usize("levels", 15)?;
+    let alphas = ctx.alphas(metric, j)?;
+    println!("base metric: {:.4}", alphas.base);
+    for (name, a) in &alphas.alphas {
+        println!("  alpha[{name:<14}] = {a:.4}");
+    }
+    Ok(())
+}
+
+fn cmd_allocate(args: &Args) -> Result<()> {
+    let ctx = ExpContext::load(&args.get("config", "base"))?;
+    let metric = match args.get("metric", "kl").as_str() {
+        "ppl" => CalibMetric::Ppl,
+        _ => CalibMetric::Kl,
+    };
+    let budget = args.get_f64("budget", 3.25)?;
+    let alphas = ctx.alphas(metric, ctx.default_j())?;
+    let choices = figures::flute_choices(&ctx);
+    let (db, models) = figures::build_error_db(&ctx, &choices);
+    let sol = match args.get("solver", "dp").as_str() {
+        "greedy" => higgs::alloc::solve_greedy(&db, &alphas, budget)?,
+        "lagrange" => higgs::alloc::solve_lagrange(&db, &alphas, budget)?,
+        _ => higgs::alloc::solve_dp(&db, &alphas, budget)?,
+    };
+    print!("{}", sol.describe(&db));
+    let qm = figures::assemble_mixed(&models, &db, &sol.choice);
+    let ev = ctx.evaluator();
+    let ppl = ev.perplexity(&qm.apply_to(&ctx.weights))?;
+    println!("measured ppl: {ppl:.4}");
+    Ok(())
+}
+
+fn cmd_serve_bench(args: &Args) -> Result<()> {
+    let ctx = ExpContext::load(&args.get("config", "base"))?;
+    let backend = match args.get("backend", "flute4").as_str() {
+        "fp16" | "dense" => higgs::serve::Backend::Dense,
+        "uniform4" | "marlin" => higgs::serve::Backend::Uniform4,
+        "nf4" => higgs::serve::Backend::NfLut4,
+        "flute2" => higgs::serve::Backend::Flute { bits: 2 },
+        "flute3" => higgs::serve::Backend::Flute { bits: 3 },
+        _ => higgs::serve::Backend::Flute { bits: 4 },
+    };
+    let batch = args.get_usize("batch", 4)?;
+    let n_req = args.get_usize("requests", 24)?;
+    let qm = match &backend {
+        higgs::serve::Backend::Dense => None,
+        higgs::serve::Backend::Uniform4 => Some(higgs::quant::QuantizedModel::quantize_all(
+            &ctx.weights,
+            &higgs::quant::rtn::RtnQuantizer::new(4, ctx.cfg.group),
+        )),
+        higgs::serve::Backend::NfLut4 => Some(higgs::quant::QuantizedModel::quantize_all(
+            &ctx.weights,
+            &higgs::quant::lut::LutQuantizer::new(
+                ctx.registry.get(higgs::grids::GridKind::Nf, 16, 1),
+                ctx.cfg.group,
+            ),
+        )),
+        higgs::serve::Backend::Flute { bits } => {
+            let n = 1usize << (2 * bits);
+            Some(higgs::quant::QuantizedModel::quantize_all(
+                &ctx.weights,
+                &higgs::quant::higgs::HiggsQuantizer::new(
+                    ctx.registry.get(higgs::grids::GridKind::Higgs, n, 2),
+                    ctx.cfg.group,
+                    0x51,
+                ),
+            ))
+        }
+    };
+    let corpus = higgs::data::Corpus::new(ctx.cfg.vocab, ctx.cfg.seq, 1);
+    let trace = higgs::serve::trace::generate_trace(
+        &higgs::serve::TraceConfig { n_requests: n_req, ..Default::default() },
+        &corpus,
+    );
+    let mut ge = higgs::serve::GenerationEngine::new(
+        &ctx.engine,
+        ctx.cfg.clone(),
+        backend.clone(),
+        batch,
+        &ctx.weights,
+        qm.as_ref(),
+    )?;
+    let m = ge.run_closed_loop(trace)?;
+    println!("[{} b={batch}] {}", backend.label(), m.summary());
+    Ok(())
+}
+
+/// Generate a continuation from a corpus prompt through any backend —
+/// the smallest end-to-end "is the serving stack alive" check.
+fn cmd_generate(args: &Args) -> Result<()> {
+    let ctx = ExpContext::load(&args.get("config", "base"))?;
+    let n_new = args.get_usize("tokens", 24)?;
+    let prompt_len = args.get_usize("prompt", 16)?;
+    let use_flute = args.get("backend", "flute4").starts_with("flute");
+    let (backend, qm) = if use_flute {
+        let q = higgs::quant::higgs::HiggsQuantizer::new(
+            ctx.registry.get(higgs::grids::GridKind::Higgs, 256, 2),
+            ctx.cfg.group,
+            0x51,
+        );
+        (
+            higgs::serve::Backend::Flute { bits: 4 },
+            Some(higgs::quant::QuantizedModel::quantize_all(&ctx.weights, &q)),
+        )
+    } else {
+        (higgs::serve::Backend::Dense, None)
+    };
+    let corpus = higgs::data::Corpus::new(ctx.cfg.vocab, ctx.cfg.seq, 1);
+    let seq = corpus.sequence(higgs::data::Split::Val, args.get_usize("seed", 0)?);
+    let prompt: Vec<i32> =
+        seq[..prompt_len.min(ctx.cfg.seq - 1)].iter().map(|&t| t as i32).collect();
+    let mut ge = higgs::serve::GenerationEngine::new(
+        &ctx.engine,
+        ctx.cfg.clone(),
+        backend.clone(),
+        1,
+        &ctx.weights,
+        qm.as_ref(),
+    )?;
+    let mut queue = std::collections::VecDeque::new();
+    queue.push_back(higgs::serve::Request {
+        id: 0,
+        prompt: prompt.clone(),
+        max_new: n_new,
+        arrival_ms: 0,
+    });
+    let mut tokens = Vec::new();
+    while queue.front().is_some() || ge.active_slots() > 0 {
+        ge.admit(&mut queue)?;
+        for c in ge.step()? {
+            tokens = c.tokens;
+        }
+    }
+    println!("backend : {}", backend.label());
+    println!("prompt  : {prompt:?}");
+    println!("output  : {tokens:?}");
+    println!(
+        "kv frag : {:.1}% peak blocks {}",
+        ge.kv_manager.fragmentation() * 100.0,
+        ge.kv_manager.peak_used
+    );
+    Ok(())
+}
+
+fn cmd_hessian(args: &Args) -> Result<()> {
+    let ctx = ExpContext::load(&args.get("config", "tiny"))?;
+    let per_layer = args.get_usize("per-layer", 8)?;
+    let t = figures::fig4_hessian(&ctx, per_layer)?;
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let which = args
+        .positional
+        .first()
+        .context("usage: higgs experiment <fig1|fig2|fig3|fig4|table1|table2|table3|table4|table6>")?
+        .clone();
+    let cfg_name = args.get("config", "base");
+    let ctx = ExpContext::load(&cfg_name)?;
+    match which.as_str() {
+        "fig1" => {
+            let (s, t) = figures::fig1_error_model(&ctx)?;
+            print!("{}\n{}", s.render(), t.render());
+        }
+        "fig2" => print!("{}", figures::fig2_grid_compare(&ctx)?.render()),
+        "fig3" => {
+            let (s, t) = figures::fig3_dynamic_sweep(&ctx, CalibMetric::Kl)?;
+            print!("{}\n{}", s.render(), t.render());
+        }
+        "fig4" => print!("{}", figures::fig4_hessian(&ctx, 8)?.render()),
+        "table1" => print!("{}", tables::table1_throughput(&ctx)?.render()),
+        "table2" => print!("{}", tables::table2_gptq(&ctx)?.render()),
+        "table3" => print!("{}", tables::table3_datafree(&ctx)?.render()),
+        "table4" => print!("{}", tables::table4_dynamic_vs_1shot(&ctx)?.render()),
+        "table6" => print!("{}", tables::table6_hadamard_overhead(&ctx)?.render()),
+        other => bail!("unknown experiment {other:?}"),
+    }
+    Ok(())
+}

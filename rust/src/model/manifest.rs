@@ -1,0 +1,190 @@
+//! Artifact manifests: the ABI emitted by `python/compile/aot.py`.
+//!
+//! Each `<name>.hlo.txt` has a sibling `<name>.manifest.txt`:
+//! ```text
+//! artifact decode_flute_p2_n256_rht_base_b4
+//! meta backend flute
+//! input token i32 4
+//! param embed f32 256,192
+//! output logits f32 4,256
+//! ```
+//! The rust runtime feeds executables strictly in `inputs ++ params`
+//! order and reads outputs in `outputs` order.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            _ => bail!("unknown dtype {s}"),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub dtype: DType,
+    pub dims: Vec<usize>,
+}
+
+impl ParamSpec {
+    pub fn numel(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub artifact: String,
+    pub meta: BTreeMap<String, String>,
+    pub inputs: Vec<ParamSpec>,
+    pub params: Vec<ParamSpec>,
+    pub outputs: Vec<ParamSpec>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read manifest {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn load_named(artifacts: &Path, artifact: &str) -> Result<Self> {
+        Self::load(&artifacts.join(format!("{artifact}.manifest.txt")))
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut artifact = String::new();
+        let mut meta = BTreeMap::new();
+        let (mut inputs, mut params, mut outputs) = (Vec::new(), Vec::new(), Vec::new());
+        for (no, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let mut it = line.splitn(2, ' ');
+            let tag = it.next().unwrap();
+            let rest = it.next().unwrap_or("");
+            match tag {
+                "artifact" => artifact = rest.to_string(),
+                "meta" => {
+                    let (k, v) = rest
+                        .split_once(' ')
+                        .with_context(|| format!("line {}: bad meta", no + 1))?;
+                    meta.insert(k.to_string(), v.to_string());
+                }
+                "input" | "param" | "output" => {
+                    let parts: Vec<&str> = rest.split_whitespace().collect();
+                    if parts.len() < 2 {
+                        bail!("line {}: bad spec {line:?}", no + 1);
+                    }
+                    let dims = if parts.len() == 2 || parts[2].is_empty() {
+                        vec![]
+                    } else {
+                        parts[2]
+                            .split(',')
+                            .filter(|s| !s.is_empty())
+                            .map(|s| s.parse::<usize>().context("bad dim"))
+                            .collect::<Result<Vec<_>>>()?
+                    };
+                    let spec = ParamSpec {
+                        name: parts[0].to_string(),
+                        dtype: DType::parse(parts[1])?,
+                        dims,
+                    };
+                    match tag {
+                        "input" => inputs.push(spec),
+                        "param" => params.push(spec),
+                        _ => outputs.push(spec),
+                    }
+                }
+                _ => bail!("line {}: unknown tag {tag}", no + 1),
+            }
+        }
+        if artifact.is_empty() {
+            bail!("manifest missing `artifact` line");
+        }
+        Ok(Manifest { artifact, meta, inputs, params, outputs })
+    }
+
+    pub fn meta_usize(&self, key: &str) -> Option<usize> {
+        self.meta.get(key).and_then(|v| v.parse().ok())
+    }
+
+    pub fn param(&self, name: &str) -> Option<&ParamSpec> {
+        self.params.iter().find(|p| p.name == name)
+    }
+
+    /// Total argument count the executable expects.
+    pub fn arity(&self) -> usize {
+        self.inputs.len() + self.params.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "artifact fwd_loss_tiny\n\
+        meta config tiny\n\
+        meta kind fwd_loss\n\
+        input tokens i32 8,32\n\
+        param embed f32 64,32\n\
+        param l0.norm1 f32 32\n\
+        output loss f32 \n";
+
+    #[test]
+    fn parse_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.artifact, "fwd_loss_tiny");
+        assert_eq!(m.meta["kind"], "fwd_loss");
+        assert_eq!(m.inputs.len(), 1);
+        assert_eq!(m.inputs[0].dims, vec![8, 32]);
+        assert_eq!(m.params[0].dtype, DType::F32);
+        assert_eq!(m.params[1].dims, vec![32]);
+        assert_eq!(m.outputs[0].dims, Vec::<usize>::new());
+        assert_eq!(m.arity(), 3);
+    }
+
+    #[test]
+    fn scalar_output_numel() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.outputs[0].numel(), 1);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Manifest::parse("bogus line here").is_err());
+        assert!(Manifest::parse("param x f99 1").is_err());
+        assert!(Manifest::parse("meta onlykey").is_err());
+    }
+
+    #[test]
+    fn real_artifacts_parse() {
+        // if artifacts are built, every manifest in the dir must parse
+        let dir = crate::artifacts_dir();
+        if !dir.is_dir() {
+            return;
+        }
+        let mut count = 0;
+        for e in std::fs::read_dir(&dir).unwrap() {
+            let p = e.unwrap().path();
+            if p.to_string_lossy().ends_with(".manifest.txt") {
+                Manifest::load(&p).unwrap_or_else(|e| panic!("{}: {e}", p.display()));
+                count += 1;
+            }
+        }
+        assert!(count == 0 || count > 10, "found {count} manifests");
+    }
+}

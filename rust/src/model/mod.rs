@@ -1,0 +1,8 @@
+//! Model substrate: artifact manifests (the python↔rust ABI), the named
+//! weight store, init, and checkpoint (de)serialization.
+
+pub mod manifest;
+pub mod weights;
+
+pub use manifest::{Manifest, ParamSpec};
+pub use weights::Weights;

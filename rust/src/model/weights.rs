@@ -1,0 +1,273 @@
+//! Named weight store: the rust-side model state, ordered to match the
+//! dense artifact manifest (`manifest(cfg, DENSE)` in model.py).
+//!
+//! Checkpoints are a simple self-describing binary format (magic,
+//! config name, tensor table) — `higgs train` writes them, every other
+//! subcommand loads them.
+
+use crate::config::ModelConfig;
+use crate::model::manifest::{DType, Manifest};
+use crate::tensor::Tensor;
+use crate::util::prng::Rng;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"HIGGSWT1";
+
+#[derive(Clone, Debug)]
+pub struct Weights {
+    pub cfg: ModelConfig,
+    /// tensors in manifest order
+    pub tensors: Vec<Tensor>,
+    pub names: Vec<String>,
+    index: HashMap<String, usize>,
+}
+
+impl Weights {
+    /// Build from a dense manifest + config: tensor order and shapes
+    /// come from the manifest's `param` entries.
+    pub fn from_manifest(cfg: ModelConfig, man: &Manifest, init_seed: Option<u64>) -> Result<Self> {
+        let mut tensors = Vec::with_capacity(man.params.len());
+        let mut names = Vec::with_capacity(man.params.len());
+        let mut rng = Rng::new(init_seed.unwrap_or(0));
+        for p in &man.params {
+            if p.dtype != DType::F32 {
+                bail!("dense manifest has non-f32 param {}", p.name);
+            }
+            let t = match init_seed {
+                None => Tensor::zeros(&p.dims),
+                Some(_) => init_tensor(&p.name, &p.dims, &mut rng),
+            };
+            names.push(p.name.clone());
+            tensors.push(t);
+        }
+        let index = names.iter().cloned().enumerate().map(|(i, n)| (n, i)).collect();
+        Ok(Weights { cfg, tensors, names, index })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.index.get(name).map(|&i| &self.tensors[i])
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> Option<&mut Tensor> {
+        let i = *self.index.get(name)?;
+        Some(&mut self.tensors[i])
+    }
+
+    pub fn idx(&self, name: &str) -> Option<usize> {
+        self.index.get(name).copied()
+    }
+
+    /// Replace a tensor (shape-checked).
+    pub fn set(&mut self, name: &str, t: Tensor) -> Result<()> {
+        let i = *self.index.get(name).with_context(|| format!("no tensor {name}"))?;
+        if self.tensors[i].dims != t.dims {
+            bail!("shape mismatch for {name}: {:?} vs {:?}", self.tensors[i].dims, t.dims);
+        }
+        self.tensors[i] = t;
+        Ok(())
+    }
+
+    /// Names of the quantizable linear layers present in this model,
+    /// with the `.w` suffix stripped (matching cfg.linear_shapes()).
+    pub fn linear_names(&self) -> Vec<String> {
+        self.cfg.linear_shapes().into_iter().map(|(n, _)| n).collect()
+    }
+
+    /// The linear layer's weight tensor (manifest name `<name>.w`).
+    pub fn linear(&self, name: &str) -> Option<&Tensor> {
+        self.get(&format!("{name}.w"))
+    }
+
+    pub fn set_linear(&mut self, name: &str, t: Tensor) -> Result<()> {
+        self.set(&format!("{name}.w"), t)
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.tensors.iter().map(|t| t.len()).sum()
+    }
+
+    // ---- checkpoint io ----
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut f = std::io::BufWriter::new(
+            std::fs::File::create(path).with_context(|| format!("create {}", path.display()))?,
+        );
+        f.write_all(MAGIC)?;
+        write_str(&mut f, &self.cfg.name)?;
+        f.write_all(&(self.tensors.len() as u32).to_le_bytes())?;
+        for (name, t) in self.names.iter().zip(&self.tensors) {
+            write_str(&mut f, name)?;
+            f.write_all(&(t.dims.len() as u32).to_le_bytes())?;
+            for &d in &t.dims {
+                f.write_all(&(d as u64).to_le_bytes())?;
+            }
+            // raw f32 little-endian
+            let bytes: &[u8] = unsafe {
+                std::slice::from_raw_parts(t.data.as_ptr() as *const u8, t.data.len() * 4)
+            };
+            f.write_all(bytes)?;
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path, cfg: ModelConfig) -> Result<Self> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?,
+        );
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("{} is not a higgs checkpoint", path.display());
+        }
+        let ckpt_cfg = read_str(&mut f)?;
+        if !ckpt_cfg.is_empty() && ckpt_cfg != cfg.name {
+            bail!("checkpoint is for config {ckpt_cfg:?}, asked for {:?}", cfg.name);
+        }
+        let mut nbuf = [0u8; 4];
+        f.read_exact(&mut nbuf)?;
+        let count = u32::from_le_bytes(nbuf) as usize;
+        let mut names = Vec::with_capacity(count);
+        let mut tensors = Vec::with_capacity(count);
+        for _ in 0..count {
+            let name = read_str(&mut f)?;
+            f.read_exact(&mut nbuf)?;
+            let rank = u32::from_le_bytes(nbuf) as usize;
+            let mut dims = Vec::with_capacity(rank);
+            let mut dbuf = [0u8; 8];
+            for _ in 0..rank {
+                f.read_exact(&mut dbuf)?;
+                dims.push(u64::from_le_bytes(dbuf) as usize);
+            }
+            let numel: usize = dims.iter().product();
+            let mut data = vec![0.0f32; numel];
+            let bytes: &mut [u8] = unsafe {
+                std::slice::from_raw_parts_mut(data.as_mut_ptr() as *mut u8, numel * 4)
+            };
+            f.read_exact(bytes)?;
+            names.push(name);
+            tensors.push(Tensor::from_vec(&dims, data));
+        }
+        let index = names.iter().cloned().enumerate().map(|(i, n)| (n, i)).collect();
+        Ok(Weights { cfg, tensors, names, index })
+    }
+}
+
+/// Initialization matching python's `init_weights`: ones for norms,
+/// N(0, 0.02) embed, N(0, 1/sqrt(fan_in)) linears.
+fn init_tensor(name: &str, dims: &[usize], rng: &mut Rng) -> Tensor {
+    if name.ends_with("norm1") || name.ends_with("norm2") || name == "norm_f" {
+        return Tensor::ones(dims);
+    }
+    let std = if name == "embed" {
+        0.02
+    } else {
+        1.0 / (dims[0] as f32).sqrt()
+    };
+    let mut t = Tensor::zeros(dims);
+    for v in t.data.iter_mut() {
+        *v = rng.normal_f32() * std;
+    }
+    t
+}
+
+fn write_str(w: &mut impl Write, s: &str) -> Result<()> {
+    w.write_all(&(s.len() as u32).to_le_bytes())?;
+    w.write_all(s.as_bytes())?;
+    Ok(())
+}
+
+fn read_str(r: &mut impl Read) -> Result<String> {
+    let mut nbuf = [0u8; 4];
+    r.read_exact(&mut nbuf)?;
+    let n = u32::from_le_bytes(nbuf) as usize;
+    if n > 1 << 20 {
+        bail!("unreasonable string length {n}");
+    }
+    let mut buf = vec![0u8; n];
+    r.read_exact(&mut buf)?;
+    Ok(String::from_utf8(buf)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> ModelConfig {
+        ModelConfig {
+            name: "tiny".into(),
+            vocab: 64,
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 64,
+            seq: 32,
+            group: 16,
+        }
+    }
+
+    fn tiny_manifest() -> Manifest {
+        // mirror python manifest(TINY, DENSE) structure
+        let cfg = tiny_cfg();
+        let mut text = String::from("artifact test\n");
+        text += &format!("param embed f32 {},{}\n", cfg.vocab, cfg.d_model);
+        for i in 0..cfg.n_layers {
+            text += &format!("param l{i}.norm1 f32 {}\n", cfg.d_model);
+            text += &format!("param l{i}.norm2 f32 {}\n", cfg.d_model);
+        }
+        text += &format!("param norm_f f32 {}\n", cfg.d_model);
+        for (n, (k, m)) in cfg.linear_shapes() {
+            text += &format!("param {n}.w f32 {k},{m}\n");
+        }
+        Manifest::parse(&text).unwrap()
+    }
+
+    #[test]
+    fn init_and_lookup() {
+        let w = Weights::from_manifest(tiny_cfg(), &tiny_manifest(), Some(1)).unwrap();
+        assert_eq!(w.tensors.len(), 20);
+        assert!(w.get("embed").is_some());
+        assert!(w.linear("l0.wq").is_some());
+        assert!(w.get("nope").is_none());
+        // norms are ones
+        assert!(w.get("norm_f").unwrap().data.iter().all(|&x| x == 1.0));
+        // embed has small std
+        let e = w.get("embed").unwrap();
+        let var: f32 = e.data.iter().map(|x| x * x).sum::<f32>() / e.len() as f32;
+        assert!(var < 0.01, "{var}");
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let w = Weights::from_manifest(tiny_cfg(), &tiny_manifest(), Some(2)).unwrap();
+        let path = std::env::temp_dir().join(format!("higgs_w_{}.bin", std::process::id()));
+        w.save(&path).unwrap();
+        let w2 = Weights::load(&path, tiny_cfg()).unwrap();
+        assert_eq!(w.names, w2.names);
+        for (a, b) in w.tensors.iter().zip(&w2.tensors) {
+            assert_eq!(a.data, b.data);
+        }
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn set_shape_checked() {
+        let mut w = Weights::from_manifest(tiny_cfg(), &tiny_manifest(), Some(3)).unwrap();
+        assert!(w.set("embed", Tensor::zeros(&[64, 32])).is_ok());
+        assert!(w.set("embed", Tensor::zeros(&[32, 64])).is_err());
+        assert!(w.set_linear("l1.wo", Tensor::zeros(&[32, 32])).is_ok());
+    }
+
+    #[test]
+    fn load_rejects_wrong_config() {
+        let w = Weights::from_manifest(tiny_cfg(), &tiny_manifest(), Some(4)).unwrap();
+        let path = std::env::temp_dir().join(format!("higgs_w2_{}.bin", std::process::id()));
+        w.save(&path).unwrap();
+        let mut other = tiny_cfg();
+        other.name = "base".into();
+        assert!(Weights::load(&path, other).is_err());
+        let _ = std::fs::remove_file(path);
+    }
+}

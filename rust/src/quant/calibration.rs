@@ -1,0 +1,113 @@
+//! Calibration data collection for data-aware quantizers (GPTQ, §4.4):
+//! run the `fwd_acts_<cfg>` artifact over calibration batches and
+//! accumulate per-layer input Hessians H_l = E[x xᵀ].
+
+use super::gptq::hessian_from_activations;
+use crate::config::ModelConfig;
+use crate::data::{Corpus, Split};
+use crate::model::Weights;
+use crate::runtime::{dense_args, Engine, HostArg};
+use crate::tensor::Tensor;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+
+/// Which activation tap feeds which linear layers.
+fn tap_targets(block: usize, tap: &str) -> Vec<String> {
+    let p = format!("l{block}.");
+    match tap {
+        "attn_in" => vec![format!("{p}wq"), format!("{p}wk"), format!("{p}wv")],
+        "attn_out_in" => vec![format!("{p}wo")],
+        "mlp_in" => vec![format!("{p}w_gate"), format!("{p}w_up")],
+        "down_in" => vec![format!("{p}w_down")],
+        _ => vec![],
+    }
+}
+
+/// Accumulate Hessians over `batches` calibration batches of corpus
+/// text (the paper uses WikiText-2 train; we use the synthetic corpus).
+pub fn collect_hessians(
+    engine: &Engine,
+    cfg: &ModelConfig,
+    weights: &Weights,
+    batches: usize,
+) -> Result<HashMap<String, Tensor>> {
+    let exe = engine.load(&format!("fwd_acts_{}", cfg.name))?;
+    let corpus = Corpus::new(cfg.vocab, cfg.seq, 0xC0_1155);
+    let b = crate::eval::EVAL_BATCH;
+    let mut hessians: HashMap<String, Tensor> = HashMap::new();
+    for bi in 0..batches {
+        let toks = corpus.batch(Split::Train, 400_000 + bi * b, b);
+        let args = dense_args(
+            &exe.manifest,
+            vec![HostArg::I32(toks, vec![b, cfg.seq])],
+            weights,
+        )?;
+        let outs = engine.run(&exe, &args)?;
+        for out in outs {
+            // name: acts.l{i}.<tap>
+            let rest = out
+                .name
+                .strip_prefix("acts.l")
+                .with_context(|| format!("unexpected output {}", out.name))?;
+            let (block, tap) = rest.split_once('.').context("bad tap name")?;
+            let block: usize = block.parse()?;
+            let k = *out.dims.last().unwrap();
+            let rows = out.data.len() / k;
+            let x = Tensor::from_vec(&[rows, k], out.data);
+            let h = hessian_from_activations(&x);
+            for layer in tap_targets(block, tap) {
+                hessians
+                    .entry(layer)
+                    .and_modify(|acc| acc.add_assign(&h))
+                    .or_insert_with(|| h.clone());
+            }
+        }
+    }
+    // average over batches
+    for h in hessians.values_mut() {
+        h.scale(1.0 / batches.max(1) as f32);
+    }
+    Ok(hessians)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tap_mapping_complete() {
+        let mut all = Vec::new();
+        for tap in ["attn_in", "attn_out_in", "mlp_in", "down_in"] {
+            all.extend(tap_targets(0, tap));
+        }
+        all.sort();
+        let mut want: Vec<String> =
+            ["wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down"]
+                .iter()
+                .map(|s| format!("l0.{s}"))
+                .collect();
+        want.sort();
+        assert_eq!(all, want);
+    }
+
+    #[test]
+    fn hessians_on_tiny() {
+        if !crate::artifacts_dir().join("fwd_acts_tiny.hlo.txt").exists() {
+            return;
+        }
+        let eng = Engine::new().unwrap();
+        let cfg = ModelConfig::load_named(eng.artifacts(), "tiny").unwrap();
+        let exe = eng.load("fwd_loss_tiny").unwrap();
+        let w = Weights::from_manifest(cfg.clone(), &exe.manifest, Some(1)).unwrap();
+        let hs = collect_hessians(&eng, &cfg, &w, 1).unwrap();
+        assert_eq!(hs.len(), cfg.linear_shapes().len());
+        // H for wq is d_model × d_model and PSD-ish (positive diagonal)
+        let h = &hs["l0.wq"];
+        assert_eq!(h.dims, vec![cfg.d_model, cfg.d_model]);
+        for i in 0..cfg.d_model {
+            assert!(h.at2(i, i) >= 0.0);
+        }
+        // wq and wk share the same tap → identical Hessians
+        assert_eq!(hs["l0.wq"].data, hs["l0.wk"].data);
+    }
+}

@@ -1,0 +1,377 @@
+//! GPTQ (Frantar et al. 2022) and its HIGGS extension (paper §4.4).
+//!
+//! Data-aware one-shot quantization: given the layer-input Hessian
+//! H = E[x xᵀ] accumulated from calibration activations, rows of W are
+//! quantized in order with the remaining rows updated to compensate the
+//! quantization error (Cholesky form of the OBS update).
+//!
+//! The HIGGS extension replaces the RoundToNearest operator with
+//! rotated-space vector rounding on a Gaussian-MSE-optimal grid: W and H
+//! are conjugated by the grouped RHT, rows are rounded (jointly in
+//! p-tuples for p > 1) to the grid scaled by the HIGGS group scales, and
+//! the output is structurally identical to Algorithm 1's — so it runs on
+//! the same FLUTE serving path.
+
+use super::{eff_group, layer_signs, QuantData, QuantizedLayer, Quantizer};
+use crate::grids::uniform::rtn_scale_zero;
+use crate::grids::Grid;
+use crate::hadamard::{rht_rows_forward, signs_for};
+use crate::tensor::linalg::{add_diag, cholesky_lower, lower_tri_inverse, mean_diag};
+use crate::tensor::Tensor;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Rounding operator plugged into the GPTQ loop.
+pub enum GptqRounding {
+    /// min-max uniform grids per (group, column) — classic GPTQ.
+    Uniform { bits: u32 },
+    /// HIGGS: rotated space + MSE-optimal grid (p ∈ {1, 2, 4}).
+    Higgs { grid: Arc<Grid>, seed: u64 },
+}
+
+pub struct GptqQuantizer {
+    pub rounding: GptqRounding,
+    pub group: usize,
+    /// dampening fraction λ/mean(diag H)
+    pub damp: f32,
+}
+
+impl GptqQuantizer {
+    pub fn uniform(bits: u32, group: usize) -> Self {
+        GptqQuantizer { rounding: GptqRounding::Uniform { bits }, group, damp: 0.01 }
+    }
+
+    pub fn higgs(grid: Arc<Grid>, group: usize, seed: u64) -> Self {
+        GptqQuantizer { rounding: GptqRounding::Higgs { grid, seed }, group, damp: 0.01 }
+    }
+
+    pub fn name(&self) -> String {
+        match &self.rounding {
+            GptqRounding::Uniform { bits } => format!("gptq_b{}_g{}", bits, self.group),
+            GptqRounding::Higgs { grid, .. } => {
+                format!("gptq_higgs_p{}_n{}_g{}", grid.p, grid.n, self.group)
+            }
+        }
+    }
+
+    pub fn bits_per_param(&self, k: usize) -> f64 {
+        let g = eff_group(self.group, k) as f64;
+        match &self.rounding {
+            GptqRounding::Uniform { bits } => *bits as f64 + 16.0 / g,
+            GptqRounding::Higgs { grid, .. } => {
+                (grid.n as f64).log2() / grid.p as f64 + 16.0 / g
+            }
+        }
+    }
+
+    /// Quantize with an explicit Hessian H [K,K] (≈ E[x xᵀ] of the
+    /// layer's inputs). `h` is consumed (dampened in place).
+    pub fn quantize_with_h(
+        &self,
+        layer_name: &str,
+        w: &Tensor,
+        mut h: Tensor,
+    ) -> anyhow::Result<QuantizedLayer> {
+        let (k, n) = (w.rows(), w.cols());
+        assert_eq!(h.rows(), k);
+        let g = eff_group(self.group, k);
+
+        // --- rotate W and H for the HIGGS rounding operator ---
+        let (mut wk, signs) = match &self.rounding {
+            GptqRounding::Uniform { .. } => (w.clone(), None),
+            GptqRounding::Higgs { seed, .. } => {
+                let signs = layer_signs(*seed, layer_name, k);
+                let mut wr = w.clone();
+                rht_rows_forward(&mut wr.data, k, n, &signs, g);
+                // H† = R H Rᵀ: transform rows then columns
+                rht_rows_forward(&mut h.data, k, k, &signs, g);
+                let mut ht = h.t();
+                rht_rows_forward(&mut ht.data, k, k, &signs, g);
+                h = ht.t();
+                (wr, Some(signs))
+            }
+        };
+
+        // --- dampen + U = cholesky(H⁻¹) upper ---
+        let lambda = self.damp * mean_diag(&h).max(1e-8);
+        add_diag(&mut h, lambda);
+        let l = cholesky_lower(&h)?;
+        let linv = lower_tri_inverse(&l);
+        let hinv = linv.t().matmul(&linv);
+        let l2 = cholesky_lower(&hinv)?;
+        let u = l2.t(); // Hinv = Uᵀ U, U upper triangular
+
+        // --- precompute static per-(group,column) scales ---
+        let ngroups = k / g;
+        let (p, grid, maxbits) = match &self.rounding {
+            GptqRounding::Uniform { bits } => (1usize, None, *bits),
+            GptqRounding::Higgs { grid, .. } => (grid.p, Some(grid.clone()), 0),
+        };
+        assert!(k % p == 0 && g % p == 0);
+        let mut steps = vec![0.0f32; ngroups * n];
+        let mut zeros = vec![0.0f32; ngroups * n];
+        let mut grp = vec![0.0f32; g];
+        for j in 0..n {
+            for gi in 0..ngroups {
+                for t in 0..g {
+                    grp[t] = wk.data[(gi * g + t) * n + j];
+                }
+                match &self.rounding {
+                    GptqRounding::Uniform { bits } => {
+                        let (s, z) = rtn_scale_zero(&grp, *bits);
+                        steps[gi * n + j] = s;
+                        zeros[gi * n + j] = z;
+                    }
+                    GptqRounding::Higgs { .. } => {
+                        // HIGGS σ: group-norm/√g (rotation-invariant)
+                        let ss: f64 = grp.iter().map(|&v| (v as f64) * (v as f64)).sum();
+                        steps[gi * n + j] = ((ss / g as f64).sqrt() as f32).max(1e-12);
+                    }
+                }
+            }
+        }
+
+        // --- the GPTQ sweep: quantize p rows at a time, feed back error ---
+        let mut codes = vec![0u32; (k / p) * n];
+        let mut vbuf = vec![0.0f32; p];
+        for kb in (0..k).step_by(p) {
+            let gi = kb / g;
+            for j in 0..n {
+                for d in 0..p {
+                    vbuf[d] = wk.data[(kb + d) * n + j];
+                }
+                let sigma = steps[gi * n + j];
+                // round
+                let (code, qvals): (u32, Vec<f32>) = match &self.rounding {
+                    GptqRounding::Uniform { .. } => {
+                        let zero = zeros[gi * n + j];
+                        let maxc = ((1u32 << maxbits) - 1) as f32;
+                        let c = (vbuf[0] / sigma + zero).round().clamp(0.0, maxc);
+                        (c as u32, vec![(c - zero) * sigma])
+                    }
+                    GptqRounding::Higgs { .. } => {
+                        let grid = grid.as_ref().unwrap();
+                        let scaled: Vec<f32> = vbuf.iter().map(|&v| v / sigma).collect();
+                        let c = grid.nearest(&scaled);
+                        let q: Vec<f32> =
+                            grid.point(c).iter().map(|&x| x * sigma).collect();
+                        (c as u32, q)
+                    }
+                };
+                codes[(kb / p) * n + j] = code;
+                // error feedback for each quantized row in this tuple
+                for d in 0..p {
+                    let r = kb + d;
+                    let denom = u.at2(r, r);
+                    if denom.abs() < 1e-12 {
+                        continue;
+                    }
+                    let err = (vbuf[d] - qvals[d]) / denom;
+                    for rr in (kb + p)..k {
+                        let coef = u.at2(r, rr);
+                        if coef != 0.0 {
+                            wk.data[rr * n + j] -= coef * err;
+                        }
+                    }
+                }
+            }
+        }
+
+        let data = match &self.rounding {
+            GptqRounding::Uniform { bits } => QuantData::Uniform {
+                codes,
+                steps,
+                zeros,
+                bits: *bits,
+            },
+            GptqRounding::Higgs { .. } => QuantData::Lut {
+                codes,
+                scales: steps,
+                grid: grid.unwrap(),
+                signs,
+            },
+        };
+        Ok(QuantizedLayer {
+            name: layer_name.to_string(),
+            method: self.name(),
+            k,
+            n_out: n,
+            g,
+            data,
+            bits_per_param: self.bits_per_param(k),
+        })
+    }
+}
+
+/// Build H = (1/M) Σ x xᵀ from row-major activations X [M, K].
+pub fn hessian_from_activations(x: &Tensor) -> Tensor {
+    let (m, k) = (x.rows(), x.cols());
+    let mut h = x.t().matmul(x);
+    h.scale(1.0 / m.max(1) as f32);
+    let _ = k;
+    h
+}
+
+/// Adapter: a calibrated GPTQ configured with per-layer Hessians that
+/// implements the plain [`Quantizer`] interface (falls back to an
+/// identity Hessian = activation-agnostic RTN behaviour when a layer
+/// has no calibration data).
+pub struct CalibratedGptq {
+    pub inner: GptqQuantizer,
+    pub hessians: HashMap<String, Tensor>,
+}
+
+impl Quantizer for CalibratedGptq {
+    fn name(&self) -> String {
+        self.inner.name()
+    }
+
+    fn bits_per_param(&self, k: usize) -> f64 {
+        self.inner.bits_per_param(k)
+    }
+
+    fn quantize(&self, layer_name: &str, w: &Tensor) -> QuantizedLayer {
+        let k = w.rows();
+        let h = self.hessians.get(layer_name).cloned().unwrap_or_else(|| {
+            let mut eye = Tensor::zeros(&[k, k]);
+            for i in 0..k {
+                *eye.at2_mut(i, i) = 1.0;
+            }
+            eye
+        });
+        self.inner
+            .quantize_with_h(layer_name, w, h)
+            .expect("gptq quantization failed")
+    }
+}
+
+/// For rotated-space Hessians in tests: conjugate H by the layer RHT.
+pub fn rotate_hessian(h: &Tensor, seed: u64, layer_name: &str, g: usize) -> Tensor {
+    let k = h.rows();
+    let signs = signs_for(seed, &format!("rht:{layer_name}"), k);
+    let mut hr = h.clone();
+    rht_rows_forward(&mut hr.data, k, k, &signs, g);
+    let mut ht = hr.t();
+    rht_rows_forward(&mut ht.data, k, k, &signs, g);
+    ht.t()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grids::registry::GridRegistry;
+    use crate::grids::GridKind;
+    use crate::quant::rtn::RtnQuantizer;
+    use crate::util::prng::Rng;
+
+    fn rand_layer(k: usize, n: usize, seed: u64) -> Tensor {
+        let mut rng = Rng::new(seed);
+        Tensor::from_vec(&[k, n], rng.normal_vec(k * n))
+    }
+
+    /// Correlated calibration activations (non-trivial Hessian).
+    fn calib_acts(m: usize, k: usize, seed: u64) -> Tensor {
+        let mut rng = Rng::new(seed);
+        let base = rng.normal_vec(m);
+        let mut data = vec![0.0f32; m * k];
+        for i in 0..m {
+            for j in 0..k {
+                data[i * k + j] = 0.6 * base[i] + rng.normal_f32();
+            }
+        }
+        Tensor::from_vec(&[m, k], data)
+    }
+
+    /// Layer-output MSE ||XW - XŴ||² — what GPTQ actually minimizes.
+    fn output_err(x: &Tensor, w: &Tensor, ql: &QuantizedLayer) -> f64 {
+        let deq = ql.dequantize();
+        let y = x.matmul(w);
+        let yq = x.matmul(&deq);
+        crate::util::stats::rel_sq_err(&yq.data, &y.data)
+    }
+
+    #[test]
+    fn gptq_beats_rtn_on_output_error() {
+        let (k, n) = (64, 32);
+        let w = rand_layer(k, n, 0);
+        let x = calib_acts(256, k, 1);
+        let h = hessian_from_activations(&x);
+        let gptq = GptqQuantizer::uniform(3, 32);
+        let ql_gptq = gptq.quantize_with_h("l", &w, h).unwrap();
+        let ql_rtn = RtnQuantizer::new(3, 32).quantize("l", &w);
+        let e_gptq = output_err(&x, &w, &ql_gptq);
+        let e_rtn = output_err(&x, &w, &ql_rtn);
+        assert!(e_gptq < e_rtn, "gptq {e_gptq} rtn {e_rtn}");
+    }
+
+    #[test]
+    fn gptq_higgs_beats_plain_gptq_at_low_bits() {
+        // 2 bits/dim: vector HIGGS rounding should beat uniform rounding
+        let (k, n) = (64, 32);
+        let w = rand_layer(k, n, 2);
+        let x = calib_acts(256, k, 3);
+        let reg = GridRegistry::new();
+        let grid = reg.get(GridKind::Higgs, 16, 2); // 2 bits/dim
+        let h1 = hessian_from_activations(&x);
+        let h2 = hessian_from_activations(&x);
+        let e_u = output_err(
+            &x,
+            &w,
+            &GptqQuantizer::uniform(2, 32).quantize_with_h("l", &w, h1).unwrap(),
+        );
+        let e_h = output_err(
+            &x,
+            &w,
+            &GptqQuantizer::higgs(grid, 32, 7).quantize_with_h("l", &w, h2).unwrap(),
+        );
+        assert!(e_h < e_u, "higgs {e_h} uniform {e_u}");
+    }
+
+    #[test]
+    fn identity_hessian_matches_rtn_closely() {
+        // With H = I the OBS update has nothing to exploit; output error
+        // should be within noise of plain RTN.
+        let (k, n) = (32, 16);
+        let w = rand_layer(k, n, 4);
+        let mut eye = Tensor::zeros(&[k, k]);
+        for i in 0..k {
+            *eye.at2_mut(i, i) = 1.0;
+        }
+        let ql = GptqQuantizer::uniform(4, 32).quantize_with_h("l", &w, eye).unwrap();
+        let e = ql.rel_sq_err(&w);
+        let e_rtn = RtnQuantizer::new(4, 32).quantize("l", &w).rel_sq_err(&w);
+        assert!(e < e_rtn * 1.5 + 1e-6, "{e} vs {e_rtn}");
+    }
+
+    #[test]
+    fn calibrated_adapter_works() {
+        let (k, n) = (32, 8);
+        let w = rand_layer(k, n, 5);
+        let x = calib_acts(128, k, 6);
+        let mut hs = HashMap::new();
+        hs.insert("l0".to_string(), hessian_from_activations(&x));
+        let q = CalibratedGptq { inner: GptqQuantizer::uniform(4, 32), hessians: hs };
+        let ql = q.quantize("l0", &w);
+        assert!(ql.rel_sq_err(&w) < 0.05);
+        // missing layer falls back to identity H
+        let ql2 = q.quantize("unknown", &w);
+        assert!(ql2.rel_sq_err(&w) < 0.05);
+    }
+
+    #[test]
+    fn gptq_higgs_dequant_structurally_higgs() {
+        // output must be loadable by the same serving path: Lut + signs
+        let (k, n) = (32, 8);
+        let w = rand_layer(k, n, 8);
+        let x = calib_acts(64, k, 9);
+        let reg = GridRegistry::new();
+        let grid = reg.get(GridKind::Higgs, 16, 2);
+        let ql = GptqQuantizer::higgs(grid, 32, 7)
+            .quantize_with_h("l", &w, hessian_from_activations(&x))
+            .unwrap();
+        match &ql.data {
+            QuantData::Lut { signs: Some(_), grid, .. } => assert_eq!(grid.p, 2),
+            _ => panic!("expected rotated LUT data"),
+        }
+    }
+}

@@ -1,0 +1,169 @@
+//! HQQ: Half-Quadratic Quantization (Badri & Shaji 2023) — data-free
+//! optimization of the zero-point of uniform group grids under a
+//! sparsity-promoting ℓ_p (p < 1) reconstruction loss.
+//!
+//! Half-quadratic splitting on  min_z ‖W - Q_z(W)‖_p^p :
+//!   W_e ← generalized soft-threshold of (W - dequant)   (prox of ℓ_p)
+//!   z   ← mean over group of (W - W_e - step·codes)     (quadratic part)
+//! iterated a fixed number of rounds, starting from the min-max RTN
+//! solution.
+
+use super::{eff_group, QuantData, QuantizedLayer, Quantizer};
+use crate::grids::uniform::rtn_scale_zero;
+use crate::tensor::Tensor;
+
+pub struct HqqQuantizer {
+    pub bits: u32,
+    pub group: usize,
+    pub iters: usize,
+    /// ℓ_p norm exponent (HQQ default ~0.7)
+    pub lp: f32,
+    /// HQS penalty parameter β
+    pub beta: f32,
+}
+
+impl HqqQuantizer {
+    pub fn new(bits: u32, group: usize) -> Self {
+        HqqQuantizer { bits, group, iters: 20, lp: 0.7, beta: 10.0 }
+    }
+}
+
+/// Generalized soft-thresholding: prox of |x|^p / β (elementwise).
+fn shrink_lp(x: f32, lp: f32, beta: f32) -> f32 {
+    let thresh = (lp / beta) * x.abs().max(1e-8).powf(lp - 1.0);
+    x.signum() * (x.abs() - thresh).max(0.0)
+}
+
+impl Quantizer for HqqQuantizer {
+    fn name(&self) -> String {
+        format!("hqq_b{}_g{}", self.bits, self.group)
+    }
+
+    fn bits_per_param(&self, k: usize) -> f64 {
+        self.bits as f64 + 16.0 / eff_group(self.group, k) as f64
+    }
+
+    fn quantize(&self, layer_name: &str, w: &Tensor) -> QuantizedLayer {
+        let (k, n) = (w.rows(), w.cols());
+        let g = eff_group(self.group, k);
+        let ngroups = k / g;
+        let maxc = ((1u32 << self.bits) - 1) as f32;
+        let mut codes = vec![0u32; k * n];
+        let mut steps = vec![0.0f32; ngroups * n];
+        let mut zeros = vec![0.0f32; ngroups * n];
+        let mut grp = vec![0.0f32; g];
+        for j in 0..n {
+            for gi in 0..ngroups {
+                for t in 0..g {
+                    grp[t] = w.data[(gi * g + t) * n + j];
+                }
+                let (step, mut zero) = rtn_scale_zero(&grp, self.bits);
+                let mut cs: Vec<f32> = vec![0.0; g];
+                for it in 0..self.iters {
+                    // quantize with current zero
+                    for t in 0..g {
+                        cs[t] = (grp[t] / step + zero).round().clamp(0.0, maxc);
+                    }
+                    if it + 1 == self.iters {
+                        break;
+                    }
+                    // residual shrinkage (prox of lp) then zero update
+                    let mut acc = 0.0f64;
+                    for t in 0..g {
+                        let deq = (cs[t] - zero) * step;
+                        let e = grp[t] - deq;
+                        let es = shrink_lp(e, self.lp, self.beta);
+                        // z solves the quadratic sub-problem of
+                        // min ||(W - We) - step*(c - z)||²
+                        acc += ((cs[t] * step - (grp[t] - es)) / step) as f64;
+                    }
+                    let new_zero = (acc / g as f64) as f32;
+                    if (new_zero - zero).abs() < 1e-7 {
+                        zero = new_zero;
+                        // re-encode once with the final zero
+                        for t in 0..g {
+                            cs[t] = (grp[t] / step + zero).round().clamp(0.0, maxc);
+                        }
+                        break;
+                    }
+                    zero = new_zero;
+                }
+                steps[gi * n + j] = step;
+                zeros[gi * n + j] = zero;
+                for t in 0..g {
+                    codes[(gi * g + t) * n + j] = cs[t] as u32;
+                }
+            }
+        }
+        QuantizedLayer {
+            name: layer_name.to_string(),
+            method: self.name(),
+            k,
+            n_out: n,
+            g,
+            data: QuantData::Uniform { codes, steps, zeros, bits: self.bits },
+            bits_per_param: self.bits_per_param(k),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::rtn::RtnQuantizer;
+    use crate::util::prng::Rng;
+
+    fn outlier_layer(k: usize, n: usize, seed: u64) -> Tensor {
+        // heavy-tailed weights — the regime HQQ targets
+        let mut rng = Rng::new(seed);
+        let data: Vec<f32> = (0..k * n)
+            .map(|_| {
+                let z = rng.normal_f32();
+                if rng.coin(0.02) {
+                    z * 8.0
+                } else {
+                    z
+                }
+            })
+            .collect();
+        Tensor::from_vec(&[k, n], data)
+    }
+
+    #[test]
+    fn hqq_not_worse_than_rtn() {
+        let w = outlier_layer(128, 32, 0);
+        let e_rtn = RtnQuantizer::new(3, 32).quantize("l", &w).rel_sq_err(&w);
+        let e_hqq = HqqQuantizer::new(3, 32).quantize("l", &w).rel_sq_err(&w);
+        // HQQ optimizes an lp objective; it should at least be in the
+        // same ballpark and usually better on outlier weights.
+        assert!(e_hqq < e_rtn * 1.1, "hqq {e_hqq} rtn {e_rtn}");
+    }
+
+    #[test]
+    fn shrink_behaviour() {
+        assert_eq!(shrink_lp(0.0, 0.7, 10.0), 0.0);
+        // large values barely shrink
+        let v = shrink_lp(5.0, 0.7, 10.0);
+        assert!(v > 4.5 && v < 5.0);
+        // symmetric
+        assert!((shrink_lp(-5.0, 0.7, 10.0) + v).abs() < 1e-6);
+    }
+
+    #[test]
+    fn codes_in_range() {
+        let w = outlier_layer(64, 8, 1);
+        let ql = HqqQuantizer::new(4, 32).quantize("l", &w);
+        if let QuantData::Uniform { codes, .. } = &ql.data {
+            assert!(codes.iter().all(|&c| c < 16));
+        } else {
+            panic!();
+        }
+    }
+
+    #[test]
+    fn near_lossless_at_8_bits() {
+        let w = outlier_layer(64, 8, 2);
+        let e = HqqQuantizer::new(8, 32).quantize("l", &w).rel_sq_err(&w);
+        assert!(e < 1e-3, "{e}");
+    }
+}

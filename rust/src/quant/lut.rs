@@ -1,0 +1,132 @@
+//! Scalar LUT quantizer over a fixed grid (NF / AF / optimal-uniform
+//! without rotation) — the bitsandbytes-style comparator family.
+//!
+//! Groups of g along the input dim are scaled by σ̂ = ‖w‖/√g (the
+//! std-estimate that makes N(0,1)-unit grids applicable), then each
+//! weight is rounded to the nearest grid level. Identical pipeline to
+//! HIGGS *minus* the Hadamard rotation — so comparisons isolate exactly
+//! (grid choice) and (rotation) as the paper intends.
+
+use super::{eff_group, QuantData, QuantizedLayer, Quantizer};
+use crate::grids::Grid;
+use crate::tensor::Tensor;
+use std::sync::Arc;
+
+pub struct LutQuantizer {
+    pub grid: Arc<Grid>,
+    pub group: usize,
+}
+
+impl LutQuantizer {
+    pub fn new(grid: Arc<Grid>, group: usize) -> Self {
+        assert_eq!(grid.p, 1, "LutQuantizer is scalar; use HiggsQuantizer for p>1");
+        LutQuantizer { grid, group }
+    }
+}
+
+impl Quantizer for LutQuantizer {
+    fn name(&self) -> String {
+        format!("{}_n{}_g{}", self.grid.kind.label(), self.grid.n, self.group)
+    }
+
+    fn bits_per_param(&self, k: usize) -> f64 {
+        (self.grid.n as f64).log2() + 16.0 / eff_group(self.group, k) as f64
+    }
+
+    fn quantize(&self, layer_name: &str, w: &Tensor) -> QuantizedLayer {
+        let (k, n) = (w.rows(), w.cols());
+        let g = eff_group(self.group, k);
+        let ngroups = k / g;
+        let mut codes = vec![0u32; k * n];
+        let mut scales = vec![0.0f32; ngroups * n];
+        for j in 0..n {
+            for gi in 0..ngroups {
+                let mut ss = 0.0f64;
+                for t in 0..g {
+                    let v = w.data[(gi * g + t) * n + j] as f64;
+                    ss += v * v;
+                }
+                let sigma = ((ss / g as f64).sqrt() as f32).max(1e-12);
+                scales[gi * n + j] = sigma;
+                for t in 0..g {
+                    let v = w.data[(gi * g + t) * n + j] / sigma;
+                    codes[(gi * g + t) * n + j] = self.grid.nearest_1d(v) as u32;
+                }
+            }
+        }
+        QuantizedLayer {
+            name: layer_name.to_string(),
+            method: self.name(),
+            k,
+            n_out: n,
+            g,
+            data: QuantData::Lut { codes, scales, grid: self.grid.clone(), signs: None },
+            bits_per_param: self.bits_per_param(k),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grids::registry::GridRegistry;
+    use crate::grids::GridKind;
+    use crate::util::prng::Rng;
+
+    fn rand_layer(k: usize, n: usize, seed: u64) -> Tensor {
+        let mut rng = Rng::new(seed);
+        Tensor::from_vec(&[k, n], rng.normal_vec(k * n))
+    }
+
+    #[test]
+    fn gaussian_weights_hit_grid_mse() {
+        // On Gaussian weights the relative error should match the grid's
+        // theoretical per-dim MSE (Appendix F identity).
+        let reg = GridRegistry::new();
+        let grid = reg.get(GridKind::Nf, 16, 1);
+        let w = rand_layer(256, 64, 0);
+        let ql = LutQuantizer::new(grid.clone(), 64).quantize("l", &w);
+        let t2 = ql.rel_sq_err(&w);
+        assert!((t2 - grid.mse).abs() / grid.mse < 0.15, "t2 {t2} grid mse {}", grid.mse);
+    }
+
+    #[test]
+    fn higgs_grid_beats_nf_grid_on_gaussian() {
+        let reg = GridRegistry::new();
+        let w = rand_layer(256, 64, 1);
+        let e_nf = LutQuantizer::new(reg.get(GridKind::Nf, 16, 1), 64)
+            .quantize("l", &w)
+            .rel_sq_err(&w);
+        let e_cl = LutQuantizer::new(reg.get(GridKind::Higgs, 16, 1), 64)
+            .quantize("l", &w)
+            .rel_sq_err(&w);
+        assert!(e_cl < e_nf, "clvq {e_cl} nf {e_nf}");
+    }
+
+    #[test]
+    fn scale_invariance() {
+        // scaling the layer by c scales the reconstruction by c too
+        let reg = GridRegistry::new();
+        let grid = reg.get(GridKind::Nf, 16, 1);
+        let w = rand_layer(64, 8, 2);
+        let mut w2 = w.clone();
+        w2.scale(7.5);
+        let q1 = LutQuantizer::new(grid.clone(), 32).quantize("l", &w);
+        let q2 = LutQuantizer::new(grid, 32).quantize("l", &w2);
+        let d1 = q1.dequantize();
+        let d2 = q2.dequantize();
+        for (a, b) in d1.data.iter().zip(&d2.data) {
+            assert!((a * 7.5 - b).abs() < 1e-3, "{a} {b}");
+        }
+    }
+
+    #[test]
+    fn zero_layer_safe() {
+        let reg = GridRegistry::new();
+        let grid = reg.get(GridKind::Nf, 16, 1);
+        let w = Tensor::zeros(&[32, 4]);
+        let ql = LutQuantizer::new(grid, 32).quantize("l", &w);
+        let d = ql.dequantize();
+        assert!(d.data.iter().all(|v| v.abs() < 1e-6));
+    }
+}

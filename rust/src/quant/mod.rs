@@ -1,0 +1,420 @@
+//! Quantizers: the paper's method (HIGGS) and every comparator
+//! (RTN, NF, AF, HQQ, GPTQ, GPTQ+HIGGS).
+//!
+//! All quantizers operate on a linear layer's weight matrix W ∈ R^{K×N}
+//! (input-dim K, output-dim N, row-major) with scale groups of size `g`
+//! along K per output column — the layout the serving kernels consume
+//! (`python/compile/kernels/lut_matmul.py`).
+
+pub mod calibration;
+pub mod gptq;
+pub mod higgs;
+pub mod outlier;
+pub mod hqq;
+pub mod lut;
+pub mod packing;
+pub mod rtn;
+
+use crate::grids::Grid;
+use crate::hadamard::{rht_inverse, signs_for};
+use crate::tensor::Tensor;
+use std::sync::Arc;
+
+/// Quantized payload of one layer.
+#[derive(Clone, Debug)]
+pub enum QuantData {
+    /// LUT codes into `grid`; if `signs` is set, codes live in the
+    /// Hadamard-rotated space (HIGGS) and dequantization applies the
+    /// inverse grouped RHT.
+    Lut {
+        codes: Vec<u32>,       // [K/p * N] row-major (k-major)
+        scales: Vec<f32>,      // [K/g * N]
+        grid: Arc<Grid>,
+        signs: Option<Vec<f32>>, // [K]
+    },
+    /// Uniform grid: w ≈ (code - zero) * step, per (group, column).
+    Uniform {
+        codes: Vec<u32>,  // [K * N]
+        steps: Vec<f32>,  // [K/g * N]
+        zeros: Vec<f32>,  // [K/g * N]
+        bits: u32,
+    },
+}
+
+#[derive(Clone, Debug)]
+pub struct QuantizedLayer {
+    pub name: String,
+    pub method: String,
+    pub k: usize,
+    pub n_out: usize,
+    pub g: usize,
+    pub data: QuantData,
+    /// effective bits per parameter incl. 16-bit group scales
+    pub bits_per_param: f64,
+}
+
+impl QuantizedLayer {
+    /// Reconstruct the dense weight matrix in the ORIGINAL space.
+    pub fn dequantize(&self) -> Tensor {
+        let (k, n, g) = (self.k, self.n_out, self.g);
+        let mut w = vec![0.0f32; k * n];
+        match &self.data {
+            QuantData::Lut { codes, scales, grid, signs } => {
+                let p = grid.p;
+                for j in 0..n {
+                    for kk in 0..k {
+                        let code = codes[(kk / p) * n + j] as usize;
+                        let val = grid.points[code * p + kk % p];
+                        let sigma = scales[(kk / g) * n + j];
+                        w[kk * n + j] = val * sigma;
+                    }
+                }
+                if let Some(signs) = signs {
+                    // codes live in rotated space: invert per column-group
+                    let mut col = vec![0.0f32; k];
+                    for j in 0..n {
+                        for kk in 0..k {
+                            col[kk] = w[kk * n + j];
+                        }
+                        rht_inverse(&mut col, signs, g);
+                        for kk in 0..k {
+                            w[kk * n + j] = col[kk];
+                        }
+                    }
+                }
+            }
+            QuantData::Uniform { codes, steps, zeros, .. } => {
+                for j in 0..n {
+                    for kk in 0..k {
+                        let gi = kk / g;
+                        let step = steps[gi * n + j];
+                        let zero = zeros[gi * n + j];
+                        w[kk * n + j] = (codes[kk * n + j] as f32 - zero) * step;
+                    }
+                }
+            }
+        }
+        Tensor::from_vec(&[k, n], w)
+    }
+
+    /// Dequantize WITHOUT undoing the rotation (the serving
+    /// representation for RHT backends; identical to `dequantize` for
+    /// non-rotated data).
+    pub fn dequantize_rotated(&self) -> Tensor {
+        let (k, n, g) = (self.k, self.n_out, self.g);
+        match &self.data {
+            QuantData::Lut { codes, scales, grid, .. } => {
+                let p = grid.p;
+                let mut w = vec![0.0f32; k * n];
+                for j in 0..n {
+                    for kk in 0..k {
+                        let code = codes[(kk / p) * n + j] as usize;
+                        let val = grid.points[code * p + kk % p];
+                        let sigma = scales[(kk / g) * n + j];
+                        w[kk * n + j] = val * sigma;
+                    }
+                }
+                Tensor::from_vec(&[k, n], w)
+            }
+            QuantData::Uniform { .. } => self.dequantize(),
+        }
+    }
+
+    /// Relative squared error t² = ||Ŵ - W||²_F / ||W||²_F (Eqn. 3).
+    pub fn rel_sq_err(&self, original: &Tensor) -> f64 {
+        let deq = self.dequantize();
+        crate::util::stats::rel_sq_err(&deq.data, &original.data)
+    }
+
+    /// Packed size in bytes (codes bit-packed + scales at 16 bit).
+    pub fn packed_bytes(&self) -> usize {
+        match &self.data {
+            QuantData::Lut { codes, scales, grid, .. } => {
+                let code_bits = (grid.n as f64).log2().ceil() as usize;
+                packing::packed_words(codes.len(), code_bits as u32) * 4 + scales.len() * 2
+            }
+            QuantData::Uniform { codes, steps, zeros, bits } => {
+                packing::packed_words(codes.len(), *bits) * 4 + (steps.len() + zeros.len()) * 2
+            }
+        }
+    }
+}
+
+/// The quantizer interface every method implements.
+pub trait Quantizer: Sync + Send {
+    /// Human-readable method id, e.g. `higgs_p2_n256` — used in tables.
+    fn name(&self) -> String;
+
+    /// Effective bits/param for a layer with input dim K (the group size
+    /// is clamped to K for narrow layers).
+    fn bits_per_param(&self, k: usize) -> f64;
+
+    /// Quantize layer `layer_name` with weights W [K, N].
+    fn quantize(&self, layer_name: &str, w: &Tensor) -> QuantizedLayer;
+}
+
+/// A fully quantized model: every linear layer of a [`crate::model::Weights`]
+/// replaced by a [`QuantizedLayer`]; norms/embed stay full precision
+/// (as in all of the paper's setups).
+#[derive(Clone)]
+pub struct QuantizedModel {
+    pub layers: Vec<QuantizedLayer>,
+    index: std::collections::HashMap<String, usize>,
+}
+
+impl QuantizedModel {
+    /// Quantize all linear layers with one quantizer (uniform-bitwidth
+    /// mode). Parallel over layers.
+    pub fn quantize_all(weights: &crate::model::Weights, q: &dyn Quantizer) -> Self {
+        let names = weights.linear_names();
+        let layers = crate::util::pool::par_map(names.len(), |i| {
+            let w = weights.linear(&names[i]).expect("linear exists");
+            q.quantize(&names[i], w)
+        });
+        Self::from_layers(layers)
+    }
+
+    /// Quantize with a per-layer assignment (dynamic-bitwidth mode, §5).
+    pub fn quantize_mixed(
+        weights: &crate::model::Weights,
+        assignment: &[(String, &dyn Quantizer)],
+    ) -> Self {
+        let layers = crate::util::pool::par_map(assignment.len(), |i| {
+            let (name, q) = &assignment[i];
+            let w = weights.linear(name).expect("linear exists");
+            q.quantize(name, w)
+        });
+        Self::from_layers(layers)
+    }
+
+    pub fn from_layers(layers: Vec<QuantizedLayer>) -> Self {
+        let index =
+            layers.iter().enumerate().map(|(i, l)| (l.name.clone(), i)).collect();
+        QuantizedModel { layers, index }
+    }
+
+    pub fn get(&self, name: &str) -> Option<&QuantizedLayer> {
+        self.index.get(name).map(|&i| &self.layers[i])
+    }
+
+    /// Dense weights with every linear replaced by its dequantization —
+    /// what PPL evaluation (and dense prefill) runs on.
+    pub fn apply_to(&self, weights: &crate::model::Weights) -> crate::model::Weights {
+        let mut out = weights.clone();
+        for l in &self.layers {
+            out.set_linear(&l.name, l.dequantize()).expect("shape match");
+        }
+        out
+    }
+
+    /// Average bits/param over quantized layers (weighted by size).
+    pub fn avg_bits(&self) -> f64 {
+        let total: usize = self.layers.iter().map(|l| l.k * l.n_out).sum();
+        self.layers
+            .iter()
+            .map(|l| l.bits_per_param * (l.k * l.n_out) as f64)
+            .sum::<f64>()
+            / total.max(1) as f64
+    }
+
+    /// Per-layer relative errors t² against the original weights.
+    pub fn layer_errors(&self, weights: &crate::model::Weights) -> Vec<(String, f64)> {
+        self.layers
+            .iter()
+            .map(|l| {
+                let w = weights.linear(&l.name).expect("linear exists");
+                (l.name.clone(), l.rel_sq_err(w))
+            })
+            .collect()
+    }
+}
+
+/// Effective group size for a layer with input dim k: the largest power
+/// of two ≤ g that divides k (the RHT needs power-of-two groups).
+pub(crate) fn eff_group(g: usize, k: usize) -> usize {
+    let mut eg = g.min(k);
+    if !eg.is_power_of_two() {
+        eg = eg.next_power_of_two() / 2;
+    }
+    while eg > 1 && k % eg != 0 {
+        eg /= 2;
+    }
+    eg.max(1)
+}
+
+/// Parse a quantizer spec string into a boxed quantizer. Grammar:
+///   `higgs_p<P>_n<N>` | `nf_n<N>` | `af_n<N>` | `chu_n<N>` (constrained
+///   uniform) | `rtn_b<B>` | `hqq_b<B>`; optional `_g<G>` suffix
+///   overrides the group size.
+pub fn parse_spec(
+    spec: &str,
+    registry: &crate::grids::registry::GridRegistry,
+    default_group: usize,
+    seed: u64,
+) -> anyhow::Result<Box<dyn Quantizer>> {
+    use crate::grids::GridKind;
+    let mut group = default_group;
+    let mut parts: Vec<&str> = spec.split('_').collect();
+    if let Some(last) = parts.last() {
+        if let Some(g) = last.strip_prefix('g').and_then(|v| v.parse::<usize>().ok()) {
+            group = g;
+            parts.pop();
+        }
+    }
+    let get = |prefix: &str| -> Option<usize> {
+        parts
+            .iter()
+            .find_map(|p| p.strip_prefix(prefix).and_then(|v| v.parse::<usize>().ok()))
+    };
+    let head = parts.first().copied().unwrap_or("");
+    let q: Box<dyn Quantizer> = match head {
+        "higgs" => {
+            let p = get("p").unwrap_or(2);
+            let n = get("n").ok_or_else(|| anyhow::anyhow!("higgs spec needs n"))?;
+            Box::new(higgs::HiggsQuantizer::new(
+                registry.get(GridKind::Higgs, n, p),
+                group,
+                seed,
+            ))
+        }
+        "nf" => {
+            let n = get("n").ok_or_else(|| anyhow::anyhow!("nf spec needs n"))?;
+            Box::new(lut::LutQuantizer::new(registry.get(GridKind::Nf, n, 1), group))
+        }
+        "af" => {
+            let n = get("n").ok_or_else(|| anyhow::anyhow!("af spec needs n"))?;
+            Box::new(lut::LutQuantizer::new(registry.get(GridKind::Af, n, 1), group))
+        }
+        "chu" | "ch8" => {
+            let n = get("n").unwrap_or(256);
+            Box::new(lut::LutQuantizer::new(registry.get(GridKind::Uniform, n, 1), group))
+        }
+        "rtn" => {
+            let b = get("b").ok_or_else(|| anyhow::anyhow!("rtn spec needs b"))? as u32;
+            Box::new(rtn::RtnQuantizer::new(b, group))
+        }
+        "hqq" => {
+            let b = get("b").ok_or_else(|| anyhow::anyhow!("hqq spec needs b"))? as u32;
+            Box::new(hqq::HqqQuantizer::new(b, group))
+        }
+        _ => anyhow::bail!("unknown quantizer spec {spec:?}"),
+    };
+    Ok(q)
+}
+
+/// RHT signs shared between quantizer and serving engine for a layer.
+pub fn layer_signs(seed: u64, layer_name: &str, k: usize) -> Vec<f32> {
+    signs_for(seed, &format!("rht:{layer_name}"), k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grids::{GridKind};
+
+    #[test]
+    fn parse_spec_roundtrip() {
+        let reg = crate::grids::registry::GridRegistry::new();
+        for (spec, bits_at_64) in [
+            ("higgs_p2_n256", 4.25),
+            ("nf_n16", 4.25),
+            ("af_n8", 3.25),
+            ("rtn_b4", 4.25),
+            ("hqq_b3", 3.25),
+            ("chu_n256", 8.25),
+        ] {
+            let q = parse_spec(spec, &reg, 64, 0).unwrap();
+            assert!(
+                (q.bits_per_param(128) - bits_at_64).abs() < 1e-6,
+                "{spec}: {}",
+                q.bits_per_param(128)
+            );
+        }
+        // group override suffix
+        let q = parse_spec("nf_n16_g32", &reg, 64, 0).unwrap();
+        assert!((q.bits_per_param(128) - 4.5).abs() < 1e-6);
+        assert!(parse_spec("bogus_x1", &reg, 64, 0).is_err());
+    }
+
+    #[test]
+    fn eff_group_divides() {
+        assert_eq!(eff_group(64, 192), 64);
+        assert_eq!(eff_group(64, 48), 16);
+        assert_eq!(eff_group(1024, 192), 64);
+        assert_eq!(eff_group(64, 7), 1);
+    }
+
+    #[test]
+    fn dequantize_lut_unrotated() {
+        let grid = Arc::new(Grid {
+            kind: GridKind::Nf,
+            n: 2,
+            p: 1,
+            points: vec![-1.0, 1.0],
+            mse: 0.0,
+        });
+        let ql = QuantizedLayer {
+            name: "t".into(),
+            method: "test".into(),
+            k: 2,
+            n_out: 2,
+            g: 2,
+            data: QuantData::Lut {
+                codes: vec![0, 1, 1, 0], // [K=2 x N=2]
+                scales: vec![2.0, 3.0],  // [K/g=1 x N=2]
+                grid,
+                signs: None,
+            },
+            bits_per_param: 1.0,
+        };
+        let w = ql.dequantize();
+        assert_eq!(w.data, vec![-2.0, 3.0, 2.0, -3.0]);
+    }
+
+    #[test]
+    fn dequantize_uniform() {
+        let ql = QuantizedLayer {
+            name: "t".into(),
+            method: "rtn".into(),
+            k: 2,
+            n_out: 1,
+            g: 2,
+            data: QuantData::Uniform {
+                codes: vec![0, 3],
+                steps: vec![0.5],
+                zeros: vec![1.0],
+                bits: 2,
+            },
+            bits_per_param: 2.0,
+        };
+        let w = ql.dequantize();
+        assert_eq!(w.data, vec![-0.5, 1.0]);
+    }
+
+    #[test]
+    fn packed_bytes_sane() {
+        let grid = Arc::new(Grid {
+            kind: GridKind::Higgs,
+            n: 256,
+            p: 2,
+            points: vec![0.0; 512],
+            mse: 0.0,
+        });
+        let ql = QuantizedLayer {
+            name: "t".into(),
+            method: "higgs".into(),
+            k: 128,
+            n_out: 64,
+            g: 64,
+            data: QuantData::Lut {
+                codes: vec![0; 64 * 64],
+                scales: vec![1.0; 2 * 64],
+                grid,
+                signs: None,
+            },
+            bits_per_param: 4.25,
+        };
+        // 4096 codes * 8 bits = 4096 bytes + 128 scales * 2 = 256
+        assert_eq!(ql.packed_bytes(), 4096 + 256);
+    }
+}

@@ -1,0 +1,144 @@
+//! Outlier-aware quantization (SpQR / SqueezeLLM-style comparator,
+//! paper §2 "Data-Aware Methods"): keep the top-ρ fraction of weights
+//! by magnitude in full precision (sparse side-band) and quantize the
+//! rest with any inner quantizer.
+//!
+//! This is the *other* answer to heavy-tailed weights — HIGGS removes
+//! outliers by rotation, SpQR stores them. Having both lets the benches
+//! ablate the choice (see `rust/benches/ablations.rs`).
+
+use super::{QuantizedLayer, Quantizer};
+use crate::tensor::Tensor;
+
+pub struct OutlierQuantizer<Q: Quantizer> {
+    pub inner: Q,
+    /// fraction of weights kept in fp (e.g. 0.01)
+    pub rho: f64,
+}
+
+/// A quantized layer plus its fp32 outlier side-band.
+#[derive(Clone, Debug)]
+pub struct OutlierLayer {
+    pub base: QuantizedLayer,
+    /// (flat index, original value)
+    pub outliers: Vec<(u32, f32)>,
+}
+
+impl<Q: Quantizer> OutlierQuantizer<Q> {
+    pub fn new(inner: Q, rho: f64) -> Self {
+        assert!((0.0..0.5).contains(&rho));
+        OutlierQuantizer { inner, rho }
+    }
+
+    pub fn name(&self) -> String {
+        format!("spqr[{}]_rho{}", self.inner.name(), self.rho)
+    }
+
+    /// Effective bits: inner bits + side-band cost (32-bit value + 32-bit
+    /// index per outlier, amortized).
+    pub fn bits_per_param(&self, k: usize) -> f64 {
+        self.inner.bits_per_param(k) + self.rho * 64.0
+    }
+
+    pub fn quantize(&self, layer_name: &str, w: &Tensor) -> OutlierLayer {
+        let n = w.data.len();
+        let keep = ((n as f64 * self.rho).ceil() as usize).min(n);
+        // threshold = magnitude of the keep-th largest weight
+        let mut mags: Vec<f32> = w.data.iter().map(|v| v.abs()).collect();
+        let thresh = if keep == 0 {
+            f32::INFINITY
+        } else {
+            let idx = n - keep;
+            mags.select_nth_unstable_by(idx, |a, b| a.partial_cmp(b).unwrap());
+            mags[idx]
+        };
+        // zero outliers out of the inner quantizer's input (so scales
+        // aren't distorted), remember the originals
+        let mut inner_w = w.clone();
+        let mut outliers = Vec::with_capacity(keep);
+        for (i, v) in w.data.iter().enumerate() {
+            if v.abs() >= thresh && outliers.len() < keep {
+                outliers.push((i as u32, *v));
+                inner_w.data[i] = 0.0;
+            }
+        }
+        let base = self.inner.quantize(layer_name, &inner_w);
+        OutlierLayer { base, outliers }
+    }
+}
+
+impl OutlierLayer {
+    /// Dense reconstruction: inner dequant with outliers restored.
+    pub fn dequantize(&self) -> Tensor {
+        let mut t = self.base.dequantize();
+        for &(i, v) in &self.outliers {
+            t.data[i as usize] = v;
+        }
+        t
+    }
+
+    pub fn rel_sq_err(&self, original: &Tensor) -> f64 {
+        crate::util::stats::rel_sq_err(&self.dequantize().data, &original.data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::rtn::RtnQuantizer;
+    use crate::util::prng::Rng;
+
+    fn outlier_layer(k: usize, n: usize, seed: u64) -> Tensor {
+        let mut rng = Rng::new(seed);
+        let data: Vec<f32> = (0..k * n)
+            .map(|_| {
+                let z = rng.normal_f32();
+                if rng.coin(0.01) {
+                    z * 20.0
+                } else {
+                    z
+                }
+            })
+            .collect();
+        Tensor::from_vec(&[k, n], data)
+    }
+
+    #[test]
+    fn outlier_splitting_beats_plain_rtn_on_heavy_tails() {
+        let w = outlier_layer(128, 64, 0);
+        let plain = RtnQuantizer::new(3, 64).quantize("l", &w).rel_sq_err(&w);
+        let q = OutlierQuantizer::new(RtnQuantizer::new(3, 64), 0.01);
+        let split = q.quantize("l", &w).rel_sq_err(&w);
+        assert!(split < plain * 0.7, "split {split} plain {plain}");
+    }
+
+    #[test]
+    fn outliers_restored_exactly() {
+        let w = outlier_layer(64, 32, 1);
+        let q = OutlierQuantizer::new(RtnQuantizer::new(4, 32), 0.02);
+        let ol = q.quantize("l", &w);
+        let deq = ol.dequantize();
+        for &(i, v) in &ol.outliers {
+            assert_eq!(deq.data[i as usize], v);
+        }
+        // expected side-band size
+        assert_eq!(ol.outliers.len(), (64.0f64 * 32.0 * 0.02).ceil() as usize);
+    }
+
+    #[test]
+    fn rho_zero_matches_inner() {
+        let w = outlier_layer(32, 16, 2);
+        let q = OutlierQuantizer::new(RtnQuantizer::new(4, 32), 0.0);
+        let ol = q.quantize("l", &w);
+        assert!(ol.outliers.is_empty());
+        let direct = RtnQuantizer::new(4, 32).quantize("l", &w);
+        assert_eq!(ol.dequantize().data, direct.dequantize().data);
+    }
+
+    #[test]
+    fn bits_accounting_includes_sideband() {
+        let q = OutlierQuantizer::new(RtnQuantizer::new(4, 64), 0.01);
+        // 4.25 + 0.01*64 = 4.89
+        assert!((q.bits_per_param(128) - 4.89).abs() < 1e-9);
+    }
+}

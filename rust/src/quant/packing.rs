@@ -1,0 +1,150 @@
+//! Bit-packing of quantization codes into u32 words (Constraint 1 of
+//! §4.3: memory layouts for b ∈ {2,3,4,8}, incl. the bit-slice trick
+//! for non-power-of-two code widths).
+
+/// Number of u32 words needed to pack `count` codes of `bits` bits.
+pub fn packed_words(count: usize, bits: u32) -> usize {
+    ((count as u64 * bits as u64 + 31) / 32) as usize
+}
+
+/// Pack codes (< 2^bits each) densely, little-endian within words.
+pub fn pack(codes: &[u32], bits: u32) -> Vec<u32> {
+    assert!(bits >= 1 && bits <= 32);
+    let mut out = vec![0u32; packed_words(codes.len(), bits)];
+    let mask = if bits == 32 { u32::MAX } else { (1u32 << bits) - 1 };
+    for (i, &c) in codes.iter().enumerate() {
+        debug_assert!(c <= mask, "code {c} exceeds {bits} bits");
+        let bitpos = i as u64 * bits as u64;
+        let word = (bitpos / 32) as usize;
+        let off = (bitpos % 32) as u32;
+        out[word] |= (c & mask) << off;
+        if off + bits > 32 {
+            out[word + 1] |= (c & mask) >> (32 - off);
+        }
+    }
+    out
+}
+
+/// Unpack `count` codes of `bits` bits.
+pub fn unpack(words: &[u32], count: usize, bits: u32) -> Vec<u32> {
+    let mask = if bits == 32 { u32::MAX } else { (1u32 << bits) - 1 };
+    let mut out = Vec::with_capacity(count);
+    for i in 0..count {
+        let bitpos = i as u64 * bits as u64;
+        let word = (bitpos / 32) as usize;
+        let off = (bitpos % 32) as u32;
+        let mut v = words[word] >> off;
+        if off + bits > 32 {
+            v |= words[word + 1] << (32 - off);
+        }
+        out.push(v & mask);
+    }
+    out
+}
+
+/// Bit-slice packing for widths that are not powers of two (§4.3,
+/// FP6-LLM-style): split each b-bit code into a (b-s)-bit high plane and
+/// an s-bit low plane, each packed independently. Enables aligned loads
+/// of each plane on real hardware.
+pub struct BitSliced {
+    pub high: Vec<u32>,
+    pub low: Vec<u32>,
+    pub high_bits: u32,
+    pub low_bits: u32,
+    pub count: usize,
+}
+
+pub fn pack_bitsliced(codes: &[u32], bits: u32) -> BitSliced {
+    let low_bits = match bits {
+        3 => 1,
+        5 => 1,
+        6 => 2,
+        _ => 0,
+    };
+    let high_bits = bits - low_bits;
+    if low_bits == 0 {
+        return BitSliced {
+            high: pack(codes, bits),
+            low: Vec::new(),
+            high_bits,
+            low_bits,
+            count: codes.len(),
+        };
+    }
+    let lo_mask = (1u32 << low_bits) - 1;
+    let high: Vec<u32> = codes.iter().map(|&c| c >> low_bits).collect();
+    let low: Vec<u32> = codes.iter().map(|&c| c & lo_mask).collect();
+    BitSliced {
+        high: pack(&high, high_bits),
+        low: pack(&low, low_bits),
+        high_bits,
+        low_bits,
+        count: codes.len(),
+    }
+}
+
+pub fn unpack_bitsliced(bs: &BitSliced) -> Vec<u32> {
+    if bs.low_bits == 0 {
+        return unpack(&bs.high, bs.count, bs.high_bits);
+    }
+    let high = unpack(&bs.high, bs.count, bs.high_bits);
+    let low = unpack(&bs.low, bs.count, bs.low_bits);
+    high.iter().zip(&low).map(|(h, l)| (h << bs.low_bits) | l).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::forall;
+
+    #[test]
+    fn roundtrip_all_widths() {
+        forall("pack roundtrip", 100, |g| {
+            let bits = g.usize_in(1, 16) as u32;
+            let n = g.usize_in(1, 300);
+            let mask = (1u64 << bits) - 1;
+            let codes: Vec<u32> =
+                (0..n).map(|_| (g.rng().next_u64() & mask) as u32).collect();
+            let packed = pack(&codes, bits);
+            assert_eq!(unpack(&packed, n, bits), codes);
+        });
+    }
+
+    #[test]
+    fn packing_is_dense() {
+        // 32 3-bit codes = 96 bits = 3 words
+        let codes = vec![5u32; 32];
+        assert_eq!(pack(&codes, 3).len(), 3);
+        // 8 4-bit codes in one word
+        assert_eq!(pack(&vec![15u32; 8], 4).len(), 1);
+    }
+
+    #[test]
+    fn word_boundary_crossing() {
+        // 3-bit codes: code 10 crosses word boundary at bit 30
+        let codes: Vec<u32> = (0..22).map(|i| (i % 8) as u32).collect();
+        let packed = pack(&codes, 3);
+        assert_eq!(unpack(&packed, 22, 3), codes);
+    }
+
+    #[test]
+    fn bitslice_roundtrip() {
+        forall("bitslice roundtrip", 60, |g| {
+            let bits = *g.choose(&[2u32, 3, 4, 5, 6, 8]);
+            let n = g.usize_in(1, 200);
+            let mask = (1u64 << bits) - 1;
+            let codes: Vec<u32> =
+                (0..n).map(|_| (g.rng().next_u64() & mask) as u32).collect();
+            let bs = pack_bitsliced(&codes, bits);
+            assert_eq!(unpack_bitsliced(&bs), codes);
+        });
+    }
+
+    #[test]
+    fn bitslice_planes_power_of_two() {
+        let bs = pack_bitsliced(&[7, 5, 3, 1], 3);
+        assert_eq!(bs.high_bits, 2);
+        assert_eq!(bs.low_bits, 1);
+        assert!(bs.high_bits.is_power_of_two() && bs.low_bits.is_power_of_two());
+    }
+}

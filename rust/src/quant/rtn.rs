@@ -1,0 +1,106 @@
+//! RTN: direct round-to-nearest over min-max uniform group grids
+//! (Eqn. 1 of the paper) — the first-wave data-free baseline.
+
+use super::{eff_group, QuantData, QuantizedLayer, Quantizer};
+use crate::grids::uniform::{rtn_encode, rtn_scale_zero};
+use crate::tensor::Tensor;
+
+pub struct RtnQuantizer {
+    pub bits: u32,
+    pub group: usize,
+}
+
+impl RtnQuantizer {
+    pub fn new(bits: u32, group: usize) -> Self {
+        RtnQuantizer { bits, group }
+    }
+}
+
+impl Quantizer for RtnQuantizer {
+    fn name(&self) -> String {
+        format!("rtn_b{}_g{}", self.bits, self.group)
+    }
+
+    fn bits_per_param(&self, k: usize) -> f64 {
+        self.bits as f64 + 16.0 / eff_group(self.group, k) as f64
+    }
+
+    fn quantize(&self, layer_name: &str, w: &Tensor) -> QuantizedLayer {
+        let (k, n) = (w.rows(), w.cols());
+        let g = eff_group(self.group, k);
+        let ngroups = k / g;
+        let mut codes = vec![0u32; k * n];
+        let mut steps = vec![0.0f32; ngroups * n];
+        let mut zeros = vec![0.0f32; ngroups * n];
+        let mut grp = vec![0.0f32; g];
+        for j in 0..n {
+            for gi in 0..ngroups {
+                for t in 0..g {
+                    grp[t] = w.data[(gi * g + t) * n + j];
+                }
+                let (step, zero) = rtn_scale_zero(&grp, self.bits);
+                let cs = rtn_encode(&grp, step, zero, self.bits);
+                steps[gi * n + j] = step;
+                zeros[gi * n + j] = zero;
+                for t in 0..g {
+                    codes[(gi * g + t) * n + j] = cs[t];
+                }
+            }
+        }
+        QuantizedLayer {
+            name: layer_name.to_string(),
+            method: self.name(),
+            k,
+            n_out: n,
+            g,
+            data: QuantData::Uniform { codes, steps, zeros, bits: self.bits },
+            bits_per_param: self.bits_per_param(k),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn rand_layer(k: usize, n: usize, seed: u64) -> Tensor {
+        let mut rng = Rng::new(seed);
+        Tensor::from_vec(&[k, n], rng.normal_vec(k * n))
+    }
+
+    #[test]
+    fn error_decreases_with_bits() {
+        let w = rand_layer(64, 32, 0);
+        let e2 = RtnQuantizer::new(2, 16).quantize("l", &w).rel_sq_err(&w);
+        let e4 = RtnQuantizer::new(4, 16).quantize("l", &w).rel_sq_err(&w);
+        let e8 = RtnQuantizer::new(8, 16).quantize("l", &w).rel_sq_err(&w);
+        assert!(e2 > e4 && e4 > e8, "{e2} {e4} {e8}");
+        assert!(e8 < 1e-4, "{e8}");
+    }
+
+    #[test]
+    fn smaller_groups_help() {
+        let w = rand_layer(128, 16, 1);
+        let e_big = RtnQuantizer::new(3, 128).quantize("l", &w).rel_sq_err(&w);
+        let e_small = RtnQuantizer::new(3, 16).quantize("l", &w).rel_sq_err(&w);
+        assert!(e_small < e_big, "{e_small} {e_big}");
+    }
+
+    #[test]
+    fn codes_within_range() {
+        let w = rand_layer(32, 8, 2);
+        let ql = RtnQuantizer::new(3, 16).quantize("l", &w);
+        if let QuantData::Uniform { codes, .. } = &ql.data {
+            assert!(codes.iter().all(|&c| c < 8));
+        } else {
+            panic!("expected uniform data");
+        }
+    }
+
+    #[test]
+    fn bits_accounting() {
+        let q = RtnQuantizer::new(4, 64);
+        assert!((q.bits_per_param(192) - 4.25).abs() < 1e-9);
+    }
+}

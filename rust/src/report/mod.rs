@@ -1,0 +1,146 @@
+//! Report substrate: paper-style table and series formatting shared by
+//! the benches, examples and the CLI (`higgs experiment ...`).
+
+/// A simple aligned text table.
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = format!("== {} ==\n", self.title);
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}", w = w))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out += &fmt_row(&self.headers, &widths);
+        out.push('\n');
+        out += &"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1));
+        out.push('\n');
+        for row in &self.rows {
+            out += &fmt_row(row, &widths);
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Also emit machine-readable TSV (for plotting).
+    pub fn to_tsv(&self) -> String {
+        let mut out = self.headers.join("\t");
+        out.push('\n');
+        for row in &self.rows {
+            out += &row.join("\t");
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// An (x, y) series for figure-style outputs, rendered as aligned pairs
+/// plus a crude ASCII plot for terminal inspection.
+pub struct Series {
+    pub title: String,
+    pub xlabel: String,
+    pub lines: Vec<(String, Vec<(f64, f64)>)>,
+}
+
+impl Series {
+    pub fn new(title: &str, xlabel: &str) -> Self {
+        Series { title: title.to_string(), xlabel: xlabel.to_string(), lines: Vec::new() }
+    }
+
+    pub fn line(&mut self, name: &str, pts: Vec<(f64, f64)>) {
+        self.lines.push((name.to_string(), pts));
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = format!("== {} ==  (x = {})\n", self.title, self.xlabel);
+        for (name, pts) in &self.lines {
+            out += &format!("-- {name}\n");
+            for (x, y) in pts {
+                out += &format!("   {x:>10.4}  {y:>12.5}\n");
+            }
+        }
+        out
+    }
+}
+
+/// Format a float with sensible precision for tables.
+pub fn fnum(v: f64) -> String {
+    if !v.is_finite() {
+        return format!("{v}");
+    }
+    let a = v.abs();
+    if a >= 1000.0 {
+        format!("{v:.0}")
+    } else if a >= 10.0 {
+        format!("{v:.2}")
+    } else {
+        format!("{v:.4}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("demo", &["method", "ppl"]);
+        t.row(vec!["higgs".into(), "6.64".into()]);
+        t.row(vec!["nf".into(), "7.68".into()]);
+        let r = t.render();
+        assert!(r.contains("demo"));
+        assert!(r.contains("higgs"));
+        assert!(r.lines().count() >= 5);
+        let tsv = t.to_tsv();
+        assert_eq!(tsv.lines().count(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn table_checks_arity() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn fnum_ranges() {
+        assert_eq!(fnum(12345.6), "12346");
+        assert_eq!(fnum(12.345), "12.35");
+        assert_eq!(fnum(1.23456), "1.2346");
+    }
+
+    #[test]
+    fn series_renders() {
+        let mut s = Series::new("fig", "bits");
+        s.line("measured", vec![(2.0, 10.0), (4.0, 6.0)]);
+        let r = s.render();
+        assert!(r.contains("measured") && r.contains("bits"));
+    }
+}

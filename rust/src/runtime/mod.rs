@@ -1,0 +1,325 @@
+//! Runtime: loads AOT artifacts (HLO text) and executes them on the
+//! PJRT CPU client. This is the only module that touches XLA.
+//!
+//! Pattern (see /opt/xla-example/load_hlo): `HloModuleProto::from_text_file`
+//! → `XlaComputation::from_proto` → `client.compile` → `execute`.
+//! Artifacts are lowered with `return_tuple=True`, so every execution
+//! returns one tuple literal which we decompose into per-output
+//! literals in manifest order.
+
+use crate::model::manifest::{DType, Manifest};
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+pub struct Engine {
+    client: xla::PjRtClient,
+    artifacts: PathBuf,
+    cache: Mutex<HashMap<String, Arc<Executable>>>,
+    /// executions performed (for perf accounting)
+    pub exec_count: std::sync::atomic::AtomicU64,
+}
+
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub manifest: Manifest,
+}
+
+/// Host-side argument: f32 or i32 buffer + dims.
+#[derive(Clone, Debug)]
+pub enum HostArg {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl HostArg {
+    pub fn scalar_i32(v: i32) -> Self {
+        HostArg::I32(vec![v], vec![])
+    }
+
+    /// Build the XLA literal for this argument (host copy happens here).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let (lit, dims) = match self {
+            HostArg::F32(data, dims) => (xla::Literal::vec1(data), dims),
+            HostArg::I32(data, dims) => (xla::Literal::vec1(data), dims),
+        };
+        if dims.is_empty() {
+            // rank-0: reshape vec1 of len 1 to scalar
+            return Ok(lit.reshape(&[])?);
+        }
+        let di: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+        Ok(lit.reshape(&di)?)
+    }
+
+    pub fn numel(&self) -> usize {
+        match self {
+            HostArg::F32(d, _) => d.len(),
+            HostArg::I32(d, _) => d.len(),
+        }
+    }
+}
+
+/// One output: f32 data (i32 outputs are converted on read).
+#[derive(Clone, Debug)]
+pub struct HostOut {
+    pub name: String,
+    pub data: Vec<f32>,
+    pub dims: Vec<usize>,
+}
+
+impl Engine {
+    pub fn new() -> Result<Self> {
+        Self::with_artifacts(crate::artifacts_dir())
+    }
+
+    pub fn with_artifacts(artifacts: PathBuf) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Engine {
+            client,
+            artifacts,
+            cache: Mutex::new(HashMap::new()),
+            exec_count: std::sync::atomic::AtomicU64::new(0),
+        })
+    }
+
+    pub fn artifacts(&self) -> &PathBuf {
+        &self.artifacts
+    }
+
+    /// Load (compile) an artifact by name, with caching.
+    pub fn load(&self, artifact: &str) -> Result<Arc<Executable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(artifact) {
+            return Ok(e.clone());
+        }
+        let hlo_path = self.artifacts.join(format!("{artifact}.hlo.txt"));
+        let manifest = Manifest::load_named(&self.artifacts, artifact)?;
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo_path.to_str().context("non-utf8 path")?,
+        )
+        .map_err(|e| anyhow::anyhow!("parse HLO {}: {e:?}", hlo_path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {artifact}: {e:?}"))?;
+        let arc = Arc::new(Executable { exe, manifest });
+        self.cache.lock().unwrap().insert(artifact.to_string(), arc.clone());
+        Ok(arc)
+    }
+
+    pub fn loaded_count(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+
+    /// Low-level execute on pre-built literals (borrowed — no copies of
+    /// the host buffers). Returns the raw output literals in manifest
+    /// order. This is the serving hot path: weights are converted to
+    /// literals ONCE and borrowed every step (see EXPERIMENTS.md §Perf).
+    pub fn run_literals(
+        &self,
+        exe: &Executable,
+        args: &[&xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        if args.len() != exe.manifest.arity() {
+            bail!(
+                "{}: got {} args, manifest wants {}",
+                exe.manifest.artifact,
+                args.len(),
+                exe.manifest.arity()
+            );
+        }
+        let result = exe
+            .exe
+            .execute::<&xla::Literal>(args)
+            .map_err(|e| anyhow::anyhow!("execute {}: {e:?}", exe.manifest.artifact))?;
+        self.exec_count.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch result: {e:?}"))?;
+        let parts = tuple
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untuple result: {e:?}"))?;
+        if parts.len() != exe.manifest.outputs.len() {
+            bail!(
+                "{}: executable returned {} outputs, manifest says {}",
+                exe.manifest.artifact,
+                parts.len(),
+                exe.manifest.outputs.len()
+            );
+        }
+        Ok(parts)
+    }
+
+    /// Upload a host argument to a device-resident buffer (weights stay
+    /// on device across decode steps — §Perf step 2).
+    pub fn upload(&self, arg: &HostArg) -> Result<xla::PjRtBuffer> {
+        let lit = arg.to_literal()?;
+        self.upload_literal(&lit)
+    }
+
+    pub fn upload_literal(&self, lit: &xla::Literal) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_literal(None, lit)
+            .map_err(|e| anyhow::anyhow!("upload: {e:?}"))
+    }
+
+    /// Execute on device buffers (no host→device parameter copies).
+    pub fn run_buffers(
+        &self,
+        exe: &Executable,
+        args: &[&xla::PjRtBuffer],
+    ) -> Result<Vec<xla::Literal>> {
+        if args.len() != exe.manifest.arity() {
+            bail!(
+                "{}: got {} buffer args, manifest wants {}",
+                exe.manifest.artifact,
+                args.len(),
+                exe.manifest.arity()
+            );
+        }
+        let result = exe
+            .exe
+            .execute_b::<&xla::PjRtBuffer>(args)
+            .map_err(|e| anyhow::anyhow!("execute_b {}: {e:?}", exe.manifest.artifact))?;
+        self.exec_count.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch result: {e:?}"))?;
+        let parts = tuple
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untuple result: {e:?}"))?;
+        Ok(parts)
+    }
+
+    /// Execute an artifact: args must match `inputs ++ params` order.
+    pub fn run(&self, exe: &Executable, args: &[HostArg]) -> Result<Vec<HostOut>> {
+        if args.len() != exe.manifest.arity() {
+            bail!(
+                "{}: got {} args, manifest wants {} (inputs {} + params {})",
+                exe.manifest.artifact,
+                args.len(),
+                exe.manifest.arity(),
+                exe.manifest.inputs.len(),
+                exe.manifest.params.len()
+            );
+        }
+        let lits: Vec<xla::Literal> =
+            args.iter().map(|a| a.to_literal()).collect::<Result<_>>()?;
+        let result = exe
+            .exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| anyhow::anyhow!("execute {}: {e:?}", exe.manifest.artifact))?;
+        self.exec_count.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch result: {e:?}"))?;
+        let parts = tuple
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untuple result: {e:?}"))?;
+        if parts.len() != exe.manifest.outputs.len() {
+            bail!(
+                "{}: executable returned {} outputs, manifest says {}",
+                exe.manifest.artifact,
+                parts.len(),
+                exe.manifest.outputs.len()
+            );
+        }
+        let mut outs = Vec::with_capacity(parts.len());
+        for (lit, spec) in parts.into_iter().zip(&exe.manifest.outputs) {
+            let data = match spec.dtype {
+                DType::F32 => lit
+                    .to_vec::<f32>()
+                    .map_err(|e| anyhow::anyhow!("read {}: {e:?}", spec.name))?,
+                DType::I32 => lit
+                    .to_vec::<i32>()
+                    .map_err(|e| anyhow::anyhow!("read {}: {e:?}", spec.name))?
+                    .into_iter()
+                    .map(|v| v as f32)
+                    .collect(),
+            };
+            outs.push(HostOut { name: spec.name.clone(), data, dims: spec.dims.clone() });
+        }
+        Ok(outs)
+    }
+
+    /// Convenience: load + run in one call.
+    pub fn run_artifact(&self, artifact: &str, args: &[HostArg]) -> Result<Vec<HostOut>> {
+        let exe = self.load(artifact)?;
+        self.run(&exe, args)
+    }
+}
+
+/// Assemble args for a model-graph artifact: `inputs` (caller-provided)
+/// followed by the dense weights in manifest order.
+pub fn dense_args(
+    man: &Manifest,
+    inputs: Vec<HostArg>,
+    weights: &crate::model::Weights,
+) -> Result<Vec<HostArg>> {
+    let mut args = inputs;
+    for p in &man.params {
+        let t = weights
+            .get(&p.name)
+            .with_context(|| format!("weights missing {}", p.name))?;
+        if t.dims != p.dims {
+            bail!("{}: weight shape {:?} vs manifest {:?}", p.name, t.dims, p.dims);
+        }
+        args.push(HostArg::F32(t.data.clone(), t.dims.clone()));
+    }
+    Ok(args)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn have_artifacts() -> bool {
+        crate::artifacts_dir().join("fwd_loss_tiny.hlo.txt").exists()
+    }
+
+    #[test]
+    fn load_and_run_tiny_loss() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let eng = Engine::new().unwrap();
+        let exe = eng.load("fwd_loss_tiny").unwrap();
+        let man = exe.manifest.clone();
+        let cfg = crate::config::ModelConfig::load_named(eng.artifacts(), "tiny").unwrap();
+        let w = crate::model::Weights::from_manifest(cfg.clone(), &man_dense(&man), Some(1))
+            .unwrap();
+        let tokens: Vec<i32> = (0..8 * cfg.seq).map(|i| (i % cfg.vocab) as i32).collect();
+        let args = dense_args(
+            &man,
+            vec![HostArg::I32(tokens, vec![8, cfg.seq])],
+            &w,
+        )
+        .unwrap();
+        let outs = eng.run(&exe, &args).unwrap();
+        assert_eq!(outs.len(), 1);
+        let loss = outs[0].data[0];
+        // random init → loss near ln(vocab)
+        assert!((loss - (cfg.vocab as f32).ln()).abs() < 1.0, "loss {loss}");
+        // cache hit
+        let again = eng.load("fwd_loss_tiny").unwrap();
+        assert!(Arc::ptr_eq(&exe, &again));
+    }
+
+    /// The dense-params manifest view (params only, as Weights expects).
+    fn man_dense(m: &Manifest) -> Manifest {
+        m.clone()
+    }
+
+    #[test]
+    fn arity_mismatch_rejected() {
+        if !have_artifacts() {
+            return;
+        }
+        let eng = Engine::new().unwrap();
+        let exe = eng.load("fwd_loss_tiny").unwrap();
+        let err = eng.run(&exe, &[]).unwrap_err();
+        assert!(err.to_string().contains("args"));
+    }
+}

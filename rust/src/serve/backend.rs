@@ -1,0 +1,186 @@
+//! Weight backends: how model weights are represented on the decode
+//! path. Each backend names a decode artifact family and knows how to
+//! assemble the executable's parameter list from a (dense, quantized)
+//! model pair — the rust side of Table 1's kernel comparison.
+
+use crate::model::manifest::{DType, Manifest};
+use crate::model::Weights;
+use crate::quant::{QuantData, QuantizedModel};
+use crate::runtime::HostArg;
+use anyhow::{bail, Context, Result};
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// dense f32 GEMM (the FP16 baseline of Table 1)
+    Dense,
+    /// fused scale/zero uniform dequant (MARLIN stand-in), b=4
+    Uniform4,
+    /// unfused scalar LUT (NF4/bitsandbytes stand-in), n=16
+    NfLut4,
+    /// fused vector-LUT Pallas kernel + activation RHT (FLUTE/HIGGS)
+    Flute { bits: u32 },
+}
+
+impl Backend {
+    pub fn label(&self) -> String {
+        match self {
+            Backend::Dense => "fp16".into(),
+            Backend::Uniform4 => "marlin(uniform4)".into(),
+            Backend::NfLut4 => "nf4".into(),
+            Backend::Flute { bits } => format!("flute{bits}"),
+        }
+    }
+
+    /// The decode artifact name for (cfg, batch).
+    pub fn decode_artifact(&self, cfg_name: &str, batch: usize) -> String {
+        match self {
+            Backend::Dense => format!("decode_dense_{cfg_name}_b{batch}"),
+            Backend::Uniform4 => format!("decode_uniform_b4_{cfg_name}_b{batch}"),
+            Backend::NfLut4 => format!("decode_nf_n16_{cfg_name}_b{batch}"),
+            Backend::Flute { bits } => {
+                let n = 1usize << (2 * bits); // p=2 grids
+                format!("decode_flute_p2_n{n}_rht_{cfg_name}_b{batch}")
+            }
+        }
+    }
+
+    /// Prefill always runs the dense artifact on (de)quantized weights —
+    /// numerically identical to the backend's representation (App. G).
+    pub fn prefill_artifact(&self, cfg_name: &str, batch: usize) -> String {
+        format!("prefill_dense_{cfg_name}_b{batch}")
+    }
+
+    /// Assemble the decode executable's `param` arguments in manifest
+    /// order from full-precision weights + the quantized model.
+    pub fn build_params(
+        &self,
+        man: &Manifest,
+        weights: &Weights,
+        qmodel: Option<&QuantizedModel>,
+    ) -> Result<Vec<HostArg>> {
+        let mut out = Vec::with_capacity(man.params.len());
+        for spec in &man.params {
+            let arg = if spec.name == "lut" {
+                let qm = qmodel.context("lut param but no quantized model")?;
+                let grid = match &qm.layers.first().context("empty qmodel")?.data {
+                    QuantData::Lut { grid, .. } => grid.clone(),
+                    _ => bail!("lut param but first layer is not LUT-quantized"),
+                };
+                if grid.n * grid.p != spec.numel() {
+                    bail!(
+                        "grid {}x{} does not match lut param {:?}",
+                        grid.n,
+                        grid.p,
+                        spec.dims
+                    );
+                }
+                HostArg::F32(grid.points.clone(), spec.dims.clone())
+            } else if let Some(base) = spec.name.strip_suffix(".w") {
+                // dense linear weight: use dequantized values if we have
+                // a quantized model (keeps dense-backend comparisons
+                // honest), else original
+                let t = match qmodel.and_then(|qm| qm.get(base)) {
+                    Some(ql) => ql.dequantize(),
+                    None => weights.linear(base).context("missing linear")?.clone(),
+                };
+                HostArg::F32(t.data, spec.dims.clone())
+            } else if let Some(base) = spec.name.strip_suffix(".codes") {
+                let ql = lookup(qmodel, base)?;
+                let codes: &[u32] = match &ql.data {
+                    QuantData::Lut { codes, .. } => codes,
+                    QuantData::Uniform { codes, .. } => codes,
+                };
+                if codes.len() != spec.numel() {
+                    bail!("{}: codes len {} vs {:?}", spec.name, codes.len(), spec.dims);
+                }
+                HostArg::I32(codes.iter().map(|&c| c as i32).collect(), spec.dims.clone())
+            } else if let Some(base) = spec.name.strip_suffix(".scales") {
+                let ql = lookup(qmodel, base)?;
+                match &ql.data {
+                    QuantData::Lut { scales, .. } => {
+                        HostArg::F32(scales.clone(), spec.dims.clone())
+                    }
+                    _ => bail!("{}: not LUT data", spec.name),
+                }
+            } else if let Some(base) = spec.name.strip_suffix(".scale") {
+                let ql = lookup(qmodel, base)?;
+                match &ql.data {
+                    QuantData::Uniform { steps, .. } => {
+                        HostArg::F32(steps.clone(), spec.dims.clone())
+                    }
+                    _ => bail!("{}: not uniform data", spec.name),
+                }
+            } else if let Some(base) = spec.name.strip_suffix(".zero") {
+                let ql = lookup(qmodel, base)?;
+                match &ql.data {
+                    QuantData::Uniform { zeros, .. } => {
+                        HostArg::F32(zeros.clone(), spec.dims.clone())
+                    }
+                    _ => bail!("{}: not uniform data", spec.name),
+                }
+            } else if let Some(base) = spec.name.strip_suffix(".signs") {
+                let ql = lookup(qmodel, base)?;
+                match &ql.data {
+                    QuantData::Lut { signs: Some(s), .. } => {
+                        HostArg::F32(s.clone(), spec.dims.clone())
+                    }
+                    _ => bail!("{}: layer has no RHT signs", spec.name),
+                }
+            } else {
+                // embed / norms: full precision
+                let t = weights
+                    .get(&spec.name)
+                    .with_context(|| format!("weights missing {}", spec.name))?;
+                if spec.dtype != DType::F32 {
+                    bail!("{}: expected f32", spec.name);
+                }
+                HostArg::F32(t.data.clone(), spec.dims.clone())
+            };
+            out.push(arg);
+        }
+        Ok(out)
+    }
+}
+
+fn lookup<'a>(
+    qmodel: Option<&'a QuantizedModel>,
+    base: &str,
+) -> Result<&'a crate::quant::QuantizedLayer> {
+    qmodel
+        .context("quantized param but no quantized model")?
+        .get(base)
+        .with_context(|| format!("quantized model missing layer {base}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifact_names() {
+        assert_eq!(Backend::Dense.decode_artifact("base", 4), "decode_dense_base_b4");
+        assert_eq!(
+            Backend::Flute { bits: 3 }.decode_artifact("base", 16),
+            "decode_flute_p2_n64_rht_base_b16"
+        );
+        assert_eq!(
+            Backend::Uniform4.decode_artifact("base", 1),
+            "decode_uniform_b4_base_b1"
+        );
+        assert_eq!(Backend::NfLut4.decode_artifact("base", 1), "decode_nf_n16_base_b1");
+    }
+
+    #[test]
+    fn labels_distinct() {
+        let all = [
+            Backend::Dense,
+            Backend::Uniform4,
+            Backend::NfLut4,
+            Backend::Flute { bits: 2 },
+            Backend::Flute { bits: 4 },
+        ];
+        let labels: std::collections::HashSet<String> =
+            all.iter().map(|b| b.label()).collect();
+        assert_eq!(labels.len(), all.len());
+    }
+}

@@ -1,0 +1,129 @@
+//! Dynamic batcher: groups incoming requests into admission batches
+//! under a (max size, deadline) policy — the vLLM-style front end of
+//! the router. Pure logic (no XLA), so it is exhaustively testable.
+
+use super::trace::Request;
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct BatcherConfig {
+    /// maximum requests to release at once (≤ engine batch)
+    pub max_batch: usize,
+    /// maximum time the oldest request may wait before release
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { max_batch: 16, max_wait: Duration::from_millis(5) }
+    }
+}
+
+pub struct Batcher {
+    cfg: BatcherConfig,
+    pending: VecDeque<(Request, Instant)>,
+}
+
+impl Batcher {
+    pub fn new(cfg: BatcherConfig) -> Self {
+        Batcher { cfg, pending: VecDeque::new() }
+    }
+
+    pub fn push(&mut self, req: Request) {
+        self.pending.push_back((req, Instant::now()));
+    }
+
+    pub fn pending(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Release a batch if the policy says so: either `max_batch`
+    /// requests are waiting, or the oldest has exceeded `max_wait`, or
+    /// `force` (engine idle) is set.
+    pub fn poll(&mut self, now: Instant, force: bool) -> Vec<Request> {
+        let due = self
+            .pending
+            .front()
+            .map(|(_, t)| now.duration_since(*t) >= self.cfg.max_wait)
+            .unwrap_or(false);
+        if self.pending.is_empty() || (!due && !force && self.pending.len() < self.cfg.max_batch)
+        {
+            return Vec::new();
+        }
+        let n = self.pending.len().min(self.cfg.max_batch);
+        (0..n).map(|_| self.pending.pop_front().unwrap().0).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::forall;
+
+    fn req(id: u64) -> Request {
+        Request { id, prompt: vec![1, 2], max_new: 4, arrival_ms: 0 }
+    }
+
+    #[test]
+    fn releases_when_full() {
+        let mut b = Batcher::new(BatcherConfig {
+            max_batch: 3,
+            max_wait: Duration::from_secs(10),
+        });
+        b.push(req(0));
+        b.push(req(1));
+        assert!(b.poll(Instant::now(), false).is_empty());
+        b.push(req(2));
+        let out = b.poll(Instant::now(), false);
+        assert_eq!(out.len(), 3);
+        assert_eq!(out[0].id, 0);
+    }
+
+    #[test]
+    fn releases_on_deadline() {
+        let mut b = Batcher::new(BatcherConfig {
+            max_batch: 100,
+            max_wait: Duration::from_millis(0),
+        });
+        b.push(req(0));
+        let out = b.poll(Instant::now() + Duration::from_millis(1), false);
+        assert_eq!(out.len(), 1);
+    }
+
+    #[test]
+    fn force_flushes() {
+        let mut b = Batcher::new(BatcherConfig {
+            max_batch: 100,
+            max_wait: Duration::from_secs(100),
+        });
+        b.push(req(0));
+        assert_eq!(b.poll(Instant::now(), true).len(), 1);
+        assert!(b.poll(Instant::now(), true).is_empty());
+    }
+
+    #[test]
+    fn fifo_order_preserved() {
+        forall("batcher fifo", 30, |g| {
+            let n = g.usize_in(1, 40);
+            let cap = g.usize_in(1, 8);
+            let mut b = Batcher::new(BatcherConfig {
+                max_batch: cap,
+                max_wait: Duration::from_secs(100),
+            });
+            for i in 0..n {
+                b.push(req(i as u64));
+            }
+            let mut seen = Vec::new();
+            loop {
+                let out = b.poll(Instant::now(), true);
+                if out.is_empty() {
+                    break;
+                }
+                assert!(out.len() <= cap);
+                seen.extend(out.iter().map(|r| r.id));
+            }
+            assert_eq!(seen, (0..n as u64).collect::<Vec<_>>());
+        });
+    }
+}

@@ -1,0 +1,425 @@
+//! The generation engine: continuous batching over fixed-shape PJRT
+//! executables with slot reuse and rust-owned KV state.
+//!
+//! Hot-path design (EXPERIMENTS.md §Perf): weight/code parameters are
+//! converted to XLA literals ONCE at engine construction and borrowed
+//! on every decode step; the KV cache lives as a pair of literals that
+//! are swapped with the step outputs, so the steady-state loop performs
+//! no host-side weight copies at all.
+//!
+//! Invariants (checked by tests + propcheck):
+//!   * a live slot's KV column is never touched by other slots'
+//!     prefills;
+//!   * every admitted request generates exactly min(max_new, capacity)
+//!     tokens;
+//!   * greedy decode through the engine matches the offline
+//!     prefill-only path token-for-token.
+
+use super::backend::Backend;
+use super::kvcache::{KvBlockManager, KvConfig};
+use super::metrics::ServeMetrics;
+use super::trace::Request;
+use crate::config::ModelConfig;
+use crate::eval::argmax;
+use crate::model::Weights;
+use crate::quant::QuantizedModel;
+use crate::runtime::{Engine, Executable, HostArg};
+use anyhow::{Context, Result};
+use std::collections::VecDeque;
+use std::sync::Arc;
+use std::time::Instant;
+
+#[derive(Clone, Debug)]
+pub struct Completion {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    pub latency_ms: f64,
+    pub prompt_len: usize,
+}
+
+enum Slot {
+    Idle,
+    Active {
+        req: Request,
+        /// next KV write position
+        pos: usize,
+        generated: Vec<i32>,
+        last_token: i32,
+        admitted: Instant,
+    },
+}
+
+pub struct GenerationEngine<'a> {
+    engine: &'a Engine,
+    pub cfg: ModelConfig,
+    pub backend: Backend,
+    pub batch: usize,
+    decode_exe: Arc<Executable>,
+    prefill_exe: Arc<Executable>,
+    /// weight/code params as literals, converted once (§Perf)
+    decode_param_lits: Vec<xla::Literal>,
+    prefill_param_lits: Vec<xla::Literal>,
+    /// host copies kept only for HIGGS_SERVE_SLOWPATH=1 (the §Perf
+    /// "before" baseline: re-convert all params every step)
+    decode_param_args: Option<Vec<HostArg>>,
+    kv_k: xla::Literal,
+    kv_v: xla::Literal,
+    slots: Vec<Slot>,
+    /// paged KV accounting (admission control + fragmentation metrics)
+    pub kv_manager: KvBlockManager,
+    pub metrics: ServeMetrics,
+}
+
+impl<'a> GenerationEngine<'a> {
+    pub fn new(
+        engine: &'a Engine,
+        cfg: ModelConfig,
+        backend: Backend,
+        batch: usize,
+        weights: &Weights,
+        qmodel: Option<&QuantizedModel>,
+    ) -> Result<Self> {
+        let decode_name = backend.decode_artifact(&cfg.name, batch);
+        let prefill_name = backend.prefill_artifact(&cfg.name, batch);
+        let decode_exe = engine.load(&decode_name).context(decode_name)?;
+        let prefill_exe = engine.load(&prefill_name).context(prefill_name)?;
+        let decode_args = backend.build_params(&decode_exe.manifest, weights, qmodel)?;
+        let decode_param_lits =
+            decode_args.iter().map(|a| a.to_literal()).collect::<Result<Vec<_>>>()?;
+        let decode_param_args = if std::env::var("HIGGS_SERVE_SLOWPATH").is_ok() {
+            Some(decode_args.clone())
+        } else {
+            None
+        };
+        // prefill runs the dense graph on dequantized weights
+        let prefill_param_lits = Backend::Dense
+            .build_params(&prefill_exe.manifest, weights, qmodel)?
+            .iter()
+            .map(|a| a.to_literal())
+            .collect::<Result<Vec<_>>>()?;
+        let kv_dims: Vec<usize> =
+            vec![cfg.n_layers, batch, cfg.n_heads, cfg.seq, cfg.d_head()];
+        let kv_len: usize = kv_dims.iter().product();
+        let kv_manager = KvBlockManager::new(KvConfig::for_model(cfg.seq, batch, 16));
+        let zero_kv = || HostArg::F32(vec![0.0; kv_len], kv_dims.clone()).to_literal();
+        Ok(GenerationEngine {
+            engine,
+            cfg,
+            backend,
+            batch,
+            decode_exe,
+            prefill_exe,
+            decode_param_lits,
+            prefill_param_lits,
+            decode_param_args,
+            kv_k: zero_kv()?,
+            kv_v: zero_kv()?,
+            slots: (0..batch).map(|_| Slot::Idle).collect(),
+            kv_manager,
+            metrics: ServeMetrics::default(),
+        })
+    }
+
+    pub fn idle_slots(&self) -> usize {
+        self.slots.iter().filter(|s| matches!(s, Slot::Idle)).count()
+    }
+
+    pub fn active_slots(&self) -> usize {
+        self.batch - self.idle_slots()
+    }
+
+    /// Admit up to `idle_slots` requests from the queue via one merged
+    /// prefill. Live slots' KV is preserved by only copying the new
+    /// slots' KV columns out of the prefill result.
+    pub fn admit(&mut self, queue: &mut VecDeque<Request>) -> Result<usize> {
+        if queue.is_empty() || self.idle_slots() == 0 {
+            return Ok(0);
+        }
+        let s = self.cfg.seq;
+        let mut tokens = vec![0i32; self.batch * s];
+        let mut newly: Vec<(usize, Request)> = Vec::new();
+        for b in 0..self.batch {
+            if !matches!(self.slots[b], Slot::Idle) {
+                continue;
+            }
+            let Some(req) = queue.front() else { break };
+            // paged-KV admission control: worst-case block reservation
+            if !self.kv_manager.can_admit(req.prompt.len(), req.max_new) {
+                break;
+            }
+            let req = queue.pop_front().unwrap();
+            self.kv_manager.admit(req.id, req.prompt.len(), req.max_new)?;
+            let plen = req.prompt.len().min(s - 1);
+            tokens[b * s..b * s + plen].copy_from_slice(&req.prompt[..plen]);
+            newly.push((b, req));
+        }
+        if newly.is_empty() {
+            return Ok(0);
+        }
+        let tok_lit = HostArg::I32(tokens, vec![self.batch, s]).to_literal()?;
+        let mut args: Vec<&xla::Literal> = vec![&tok_lit];
+        args.extend(self.prefill_param_lits.iter());
+        let outs = self.engine.run_literals(&self.prefill_exe, &args)?;
+        self.metrics.prefill_calls += 1;
+        let v = self.cfg.vocab;
+        let logits: Vec<f32> =
+            outs[0].to_vec().map_err(|e| anyhow::anyhow!("logits: {e:?}"))?;
+        let kc: Vec<f32> = outs[1].to_vec().map_err(|e| anyhow::anyhow!("kc: {e:?}"))?;
+        let vc: Vec<f32> = outs[2].to_vec().map_err(|e| anyhow::anyhow!("vc: {e:?}"))?;
+        // splice the new slots' KV columns into the engine state
+        let mut kv_k: Vec<f32> =
+            self.kv_k.to_vec().map_err(|e| anyhow::anyhow!("kv_k: {e:?}"))?;
+        let mut kv_v: Vec<f32> =
+            self.kv_v.to_vec().map_err(|e| anyhow::anyhow!("kv_v: {e:?}"))?;
+        let (l_count, h, dh) = (self.cfg.n_layers, self.cfg.n_heads, self.cfg.d_head());
+        let slot_stride = h * s * dh;
+        let layer_stride = self.batch * slot_stride;
+        for &(b, _) in &newly {
+            for l in 0..l_count {
+                let off = l * layer_stride + b * slot_stride;
+                kv_k[off..off + slot_stride].copy_from_slice(&kc[off..off + slot_stride]);
+                kv_v[off..off + slot_stride].copy_from_slice(&vc[off..off + slot_stride]);
+            }
+        }
+        let kv_dims: Vec<usize> =
+            vec![l_count, self.batch, h, s, dh];
+        self.kv_k = HostArg::F32(kv_k, kv_dims.clone()).to_literal()?;
+        self.kv_v = HostArg::F32(kv_v, kv_dims).to_literal()?;
+        let n = newly.len();
+        for (b, req) in newly {
+            let plen = req.prompt.len().min(s - 1);
+            let row = &logits[(b * s + plen - 1) * v..(b * s + plen) * v];
+            let first = argmax(row) as i32;
+            self.slots[b] = Slot::Active {
+                pos: plen,
+                generated: vec![first],
+                last_token: first,
+                admitted: Instant::now(),
+                req,
+            };
+        }
+        Ok(n)
+    }
+
+    /// One decode step for all active slots; returns completions.
+    pub fn step(&mut self) -> Result<Vec<Completion>> {
+        if self.active_slots() == 0 {
+            return Ok(Vec::new());
+        }
+        let s = self.cfg.seq;
+        let v = self.cfg.vocab;
+        let mut token = vec![0i32; self.batch];
+        let mut pos = vec![0i32; self.batch];
+        for (b, slot) in self.slots.iter().enumerate() {
+            if let Slot::Active { pos: p, last_token, .. } = slot {
+                token[b] = *last_token;
+                pos[b] = *p as i32;
+            }
+        }
+        let tok_lit = HostArg::I32(token, vec![self.batch]).to_literal()?;
+        let pos_lit = HostArg::I32(pos, vec![self.batch]).to_literal()?;
+        // §Perf "before" baseline: re-convert every parameter per step.
+        // (A third variant — device-resident weight buffers through
+        // execute_b — was tried and abandoned: the xla crate's
+        // execute_b segfaults on the CPU PJRT plugin; see §Perf.)
+        let slow_lits: Option<Vec<xla::Literal>> = match &self.decode_param_args {
+            Some(args) => {
+                Some(args.iter().map(|a| a.to_literal()).collect::<Result<Vec<_>>>()?)
+            }
+            None => None,
+        };
+        let mut args: Vec<&xla::Literal> = vec![&tok_lit, &pos_lit, &self.kv_k, &self.kv_v];
+        match &slow_lits {
+            Some(lits) => args.extend(lits.iter()),
+            None => args.extend(self.decode_param_lits.iter()),
+        }
+        let mut outs = self.engine.run_literals(&self.decode_exe, &args)?;
+        self.metrics.decode_steps += 1;
+        // outputs: logits [B,V], kcache, vcache — kv literals are swapped
+        // in wholesale (no host round-trip)
+        let vc = outs.pop().unwrap();
+        let kc = outs.pop().unwrap();
+        let logits: Vec<f32> =
+            outs.pop().unwrap().to_vec().map_err(|e| anyhow::anyhow!("logits: {e:?}"))?;
+        self.kv_k = kc;
+        self.kv_v = vc;
+
+        let mut done = Vec::new();
+        for b in 0..self.batch {
+            let slot = &mut self.slots[b];
+            if let Slot::Active { pos, generated, last_token, req, admitted } = slot {
+                let row = &logits[b * v..(b + 1) * v];
+                let next = argmax(row) as i32;
+                *pos += 1;
+                generated.push(next);
+                *last_token = next;
+                let _ = self.kv_manager.append_token(req.id);
+                let capacity_hit = *pos + 1 >= s;
+                if generated.len() >= req.max_new || capacity_hit {
+                    let latency = admitted.elapsed().as_secs_f64() * 1e3;
+                    done.push(Completion {
+                        id: req.id,
+                        tokens: generated.clone(),
+                        latency_ms: latency,
+                        prompt_len: req.prompt.len(),
+                    });
+                    self.metrics.completions.push((
+                        latency,
+                        generated.len(),
+                        req.prompt.len(),
+                    ));
+                    self.kv_manager.release(req.id)?;
+                    self.slots[b] = Slot::Idle;
+                }
+            }
+        }
+        Ok(done)
+    }
+
+    /// Closed-loop driver: run a whole trace to completion (Table 1's
+    /// measurement mode) and return the metrics.
+    pub fn run_closed_loop(&mut self, trace: Vec<Request>) -> Result<ServeMetrics> {
+        let mut queue: VecDeque<Request> = trace.into();
+        let t0 = Instant::now();
+        let mut all = Vec::new();
+        while !queue.is_empty() || self.active_slots() > 0 {
+            self.admit(&mut queue)?;
+            let done = self.step()?;
+            all.extend(done);
+        }
+        self.metrics.wall_secs = t0.elapsed().as_secs_f64();
+        Ok(self.metrics.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::trace::{generate_trace, TraceConfig};
+
+    fn have_tiny() -> bool {
+        crate::artifacts_dir().join("decode_dense_tiny_b1.hlo.txt").exists()
+    }
+
+    fn setup(eng: &Engine) -> (ModelConfig, Weights) {
+        let cfg = ModelConfig::load_named(eng.artifacts(), "tiny").unwrap();
+        let exe = eng.load("fwd_loss_tiny").unwrap();
+        let w = Weights::from_manifest(cfg.clone(), &exe.manifest, Some(1)).unwrap();
+        (cfg, w)
+    }
+
+    #[test]
+    fn closed_loop_completes_all_requests() {
+        if !have_tiny() {
+            return;
+        }
+        let eng = Engine::new().unwrap();
+        let (cfg, w) = setup(&eng);
+        let corpus = crate::data::Corpus::new(cfg.vocab, cfg.seq, 1);
+        let trace = generate_trace(
+            &TraceConfig {
+                n_requests: 3,
+                prompt_len: (4, 8),
+                max_new: (3, 6),
+                ..Default::default()
+            },
+            &corpus,
+        );
+        let mut ge =
+            GenerationEngine::new(&eng, cfg, Backend::Dense, 1, &w, None).unwrap();
+        let m = ge.run_closed_loop(trace).unwrap();
+        assert_eq!(m.completions.len(), 3);
+        assert!(m.total_generated() >= 9);
+        assert!(m.tok_per_sec() > 0.0);
+    }
+
+    #[test]
+    fn generation_deterministic_across_runs() {
+        if !have_tiny() {
+            return;
+        }
+        let eng = Engine::new().unwrap();
+        let (cfg, w) = setup(&eng);
+        let corpus = crate::data::Corpus::new(cfg.vocab, cfg.seq, 1);
+        let mk_trace = || {
+            generate_trace(
+                &TraceConfig {
+                    n_requests: 2,
+                    prompt_len: (4, 6),
+                    max_new: (4, 4),
+                    ..Default::default()
+                },
+                &corpus,
+            )
+        };
+        let run = || -> Vec<Vec<i32>> {
+            let mut ge =
+                GenerationEngine::new(&eng, cfg.clone(), Backend::Dense, 1, &w, None)
+                    .unwrap();
+            let mut queue: VecDeque<Request> = mk_trace().into();
+            let mut outs = Vec::new();
+            while !queue.is_empty() || ge.active_slots() > 0 {
+                ge.admit(&mut queue).unwrap();
+                for c in ge.step().unwrap() {
+                    outs.push((c.id, c.tokens));
+                }
+            }
+            outs.sort_by_key(|(id, _)| *id);
+            outs.into_iter().map(|(_, t)| t).collect()
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn flute_backend_close_to_dense() {
+        // greedy generations from the FLUTE decode path should mostly
+        // agree with the dense path on the SAME dequantized weights
+        if !crate::artifacts_dir()
+            .join("decode_flute_p2_n16_rht_tiny_b1.hlo.txt")
+            .exists()
+        {
+            return;
+        }
+        let eng = Engine::new().unwrap();
+        let (cfg, w) = setup(&eng);
+        let reg = crate::grids::registry::GridRegistry::new();
+        let grid = reg.get(crate::grids::GridKind::Higgs, 16, 2);
+        let q = crate::quant::higgs::HiggsQuantizer::new(grid, cfg.group, 0x51);
+        let qm = crate::quant::QuantizedModel::quantize_all(&w, &q);
+        let corpus = crate::data::Corpus::new(cfg.vocab, cfg.seq, 1);
+        let trace = generate_trace(
+            &TraceConfig {
+                n_requests: 1,
+                prompt_len: (6, 8),
+                max_new: (5, 5),
+                ..Default::default()
+            },
+            &corpus,
+        );
+        // dense on dequantized weights
+        let mut ge_d = GenerationEngine::new(
+            &eng,
+            cfg.clone(),
+            Backend::Dense,
+            1,
+            &w,
+            Some(&qm),
+        )
+        .unwrap();
+        let mut ge_f = GenerationEngine::new(
+            &eng,
+            cfg.clone(),
+            Backend::Flute { bits: 2 },
+            1,
+            &w,
+            Some(&qm),
+        )
+        .unwrap();
+        let md = ge_d.run_closed_loop(trace.clone()).unwrap();
+        let mf = ge_f.run_closed_loop(trace).unwrap();
+        assert_eq!(md.completions.len(), 1);
+        assert_eq!(mf.completions.len(), 1);
+        // same number of tokens (content may rarely differ on near-ties)
+        assert_eq!(md.completions[0].1, mf.completions[0].1);
+    }
+}

@@ -1,0 +1,255 @@
+//! KV-cache block manager — the vLLM-style paged allocator of the
+//! serving coordinator.
+//!
+//! The fixed-shape HLO executables own the *contents* of the KV tensors;
+//! this manager owns the *accounting*: slots, logical block tables per
+//! request, capacity admission, and fragmentation metrics. It is what
+//! lets the router answer "can I admit this request now?" without
+//! touching XLA, and what a multi-engine deployment would shard over.
+
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+
+/// Configuration of one engine's KV memory.
+#[derive(Clone, Debug)]
+pub struct KvConfig {
+    /// tokens per block (page size)
+    pub block_size: usize,
+    /// total physical blocks available
+    pub n_blocks: usize,
+    /// per-request hard cap (seq capacity of the executables)
+    pub max_tokens_per_request: usize,
+}
+
+impl KvConfig {
+    /// Sizing for a model config at a given batch: one slot's sequence
+    /// capacity, paged into blocks.
+    pub fn for_model(seq: usize, batch: usize, block_size: usize) -> Self {
+        let blocks_per_slot = seq.div_ceil(block_size);
+        KvConfig {
+            block_size,
+            n_blocks: blocks_per_slot * batch,
+            max_tokens_per_request: seq,
+        }
+    }
+}
+
+/// Per-request allocation state.
+#[derive(Clone, Debug)]
+struct Lease {
+    blocks: Vec<usize>,
+    tokens: usize,
+}
+
+/// The block manager. Free list + per-request block tables.
+pub struct KvBlockManager {
+    cfg: KvConfig,
+    free: Vec<usize>,
+    leases: HashMap<u64, Lease>,
+    /// high-water mark of simultaneously used blocks
+    pub peak_used: usize,
+}
+
+impl KvBlockManager {
+    pub fn new(cfg: KvConfig) -> Self {
+        let free = (0..cfg.n_blocks).rev().collect();
+        KvBlockManager { cfg, free, leases: HashMap::new(), peak_used: 0 }
+    }
+
+    pub fn used_blocks(&self) -> usize {
+        self.cfg.n_blocks - self.free.len()
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    fn blocks_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.cfg.block_size)
+    }
+
+    /// Can a request with `prompt_len` tokens and up to `max_new` more
+    /// be admitted right now (worst-case reservation policy)?
+    pub fn can_admit(&self, prompt_len: usize, max_new: usize) -> bool {
+        let total = (prompt_len + max_new).min(self.cfg.max_tokens_per_request);
+        self.blocks_for(total) <= self.free.len()
+    }
+
+    /// Reserve blocks for a request's prompt (+ worst-case generation).
+    pub fn admit(&mut self, req_id: u64, prompt_len: usize, max_new: usize) -> Result<()> {
+        if self.leases.contains_key(&req_id) {
+            bail!("request {req_id} already admitted");
+        }
+        let total = (prompt_len + max_new).min(self.cfg.max_tokens_per_request);
+        let need = self.blocks_for(total);
+        if need > self.free.len() {
+            bail!(
+                "admission rejected for {req_id}: need {need} blocks, {} free",
+                self.free.len()
+            );
+        }
+        let blocks: Vec<usize> = (0..need).map(|_| self.free.pop().unwrap()).collect();
+        self.leases.insert(req_id, Lease { blocks, tokens: prompt_len });
+        self.peak_used = self.peak_used.max(self.used_blocks());
+        Ok(())
+    }
+
+    /// Record one generated token; errors if the lease would overflow.
+    pub fn append_token(&mut self, req_id: u64) -> Result<()> {
+        let cfg_cap = self.cfg.max_tokens_per_request;
+        let lease = match self.leases.get_mut(&req_id) {
+            Some(l) => l,
+            None => bail!("no lease for request {req_id}"),
+        };
+        if lease.tokens + 1 > cfg_cap {
+            bail!("request {req_id} exceeded seq capacity {cfg_cap}");
+        }
+        lease.tokens += 1;
+        if lease.tokens > lease.blocks.len() * self.cfg.block_size {
+            bail!("request {req_id} outgrew its reservation (bug)");
+        }
+        Ok(())
+    }
+
+    /// The logical → physical block table for a request (what a paged
+    /// attention kernel would consume).
+    pub fn block_table(&self, req_id: u64) -> Option<&[usize]> {
+        self.leases.get(&req_id).map(|l| l.blocks.as_slice())
+    }
+
+    pub fn tokens_of(&self, req_id: u64) -> Option<usize> {
+        self.leases.get(&req_id).map(|l| l.tokens)
+    }
+
+    /// Release a finished request's blocks back to the free list.
+    pub fn release(&mut self, req_id: u64) -> Result<usize> {
+        let lease = match self.leases.remove(&req_id) {
+            Some(l) => l,
+            None => bail!("no lease for request {req_id}"),
+        };
+        let n = lease.blocks.len();
+        self.free.extend(lease.blocks);
+        Ok(n)
+    }
+
+    /// Internal-fragmentation ratio: reserved-but-unused token slots /
+    /// reserved slots (the waste the paper's fixed-batch engines accept).
+    pub fn fragmentation(&self) -> f64 {
+        let mut reserved = 0usize;
+        let mut used = 0usize;
+        for l in self.leases.values() {
+            reserved += l.blocks.len() * self.cfg.block_size;
+            used += l.tokens;
+        }
+        if reserved == 0 {
+            0.0
+        } else {
+            1.0 - used as f64 / reserved as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::forall;
+
+    fn mgr(blocks: usize) -> KvBlockManager {
+        KvBlockManager::new(KvConfig {
+            block_size: 16,
+            n_blocks: blocks,
+            max_tokens_per_request: 96,
+        })
+    }
+
+    #[test]
+    fn admit_release_roundtrip() {
+        let mut m = mgr(12);
+        assert!(m.can_admit(20, 30)); // 50 tokens → 4 blocks
+        m.admit(1, 20, 30).unwrap();
+        assert_eq!(m.used_blocks(), 4);
+        assert_eq!(m.block_table(1).unwrap().len(), 4);
+        assert_eq!(m.release(1).unwrap(), 4);
+        assert_eq!(m.used_blocks(), 0);
+    }
+
+    #[test]
+    fn capacity_enforced() {
+        let mut m = mgr(4);
+        m.admit(1, 30, 30).unwrap(); // 60 tok → 4 blocks: all of them
+        assert!(!m.can_admit(1, 1));
+        assert!(m.admit(2, 1, 1).is_err());
+        m.release(1).unwrap();
+        assert!(m.can_admit(1, 1));
+    }
+
+    #[test]
+    fn seq_cap_clamps_reservation() {
+        let mut m = mgr(100);
+        // prompt+max_new over the 96-token cap reserves only 96 → 6 blocks
+        m.admit(1, 90, 50).unwrap();
+        assert_eq!(m.block_table(1).unwrap().len(), 6);
+    }
+
+    #[test]
+    fn append_respects_capacity() {
+        let mut m = mgr(10);
+        m.admit(1, 94, 2).unwrap();
+        m.append_token(1).unwrap();
+        m.append_token(1).unwrap();
+        assert!(m.append_token(1).is_err()); // 97 > 96
+    }
+
+    #[test]
+    fn double_admit_and_unknown_release_rejected() {
+        let mut m = mgr(10);
+        m.admit(1, 10, 10).unwrap();
+        assert!(m.admit(1, 5, 5).is_err());
+        assert!(m.release(99).is_err());
+        assert!(m.append_token(98).is_err());
+    }
+
+    #[test]
+    fn fragmentation_math() {
+        let mut m = mgr(10);
+        m.admit(1, 1, 31).unwrap(); // reserves 2 blocks = 32 slots, uses 1
+        let f = m.fragmentation();
+        assert!((f - 31.0 / 32.0).abs() < 1e-9, "{f}");
+    }
+
+    #[test]
+    fn no_leaks_under_random_workload() {
+        forall("kv manager leak-free", 40, |g| {
+            let mut m = mgr(g.usize_in(4, 40));
+            let mut live: Vec<u64> = Vec::new();
+            let mut next_id = 0u64;
+            for _ in 0..g.usize_in(10, 120) {
+                if g.bool() || live.is_empty() {
+                    let p = g.usize_in(1, 40);
+                    let n = g.usize_in(1, 40);
+                    if m.can_admit(p, n) {
+                        m.admit(next_id, p, n).unwrap();
+                        live.push(next_id);
+                        next_id += 1;
+                    }
+                } else {
+                    let i = g.usize_in(0, live.len() - 1);
+                    let id = live.swap_remove(i);
+                    m.release(id).unwrap();
+                }
+            }
+            for id in live.drain(..) {
+                m.release(id).unwrap();
+            }
+            assert_eq!(m.used_blocks(), 0, "blocks leaked");
+        });
+    }
+
+    #[test]
+    fn for_model_sizing() {
+        let cfg = KvConfig::for_model(96, 4, 16);
+        assert_eq!(cfg.n_blocks, 24);
+        let m = KvBlockManager::new(cfg);
+        assert_eq!(m.free_blocks(), 24);
+    }
+}

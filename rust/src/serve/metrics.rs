@@ -1,0 +1,84 @@
+//! Serving metrics: throughput / latency accounting for Table 1.
+
+use crate::util::stats::percentile;
+
+#[derive(Clone, Debug, Default)]
+pub struct ServeMetrics {
+    /// per-request (latency_ms, generated tokens, prompt tokens)
+    pub completions: Vec<(f64, usize, usize)>,
+    pub wall_secs: f64,
+    pub decode_steps: u64,
+    pub prefill_calls: u64,
+}
+
+impl ServeMetrics {
+    /// End-to-end generated-token throughput (tok/s) — Table 1's metric.
+    pub fn tok_per_sec(&self) -> f64 {
+        let toks: usize = self.completions.iter().map(|c| c.1).sum();
+        if self.wall_secs <= 0.0 {
+            return 0.0;
+        }
+        toks as f64 / self.wall_secs
+    }
+
+    pub fn total_generated(&self) -> usize {
+        self.completions.iter().map(|c| c.1).sum()
+    }
+
+    pub fn latency_p50(&self) -> f64 {
+        let ls: Vec<f64> = self.completions.iter().map(|c| c.0).collect();
+        if ls.is_empty() {
+            0.0
+        } else {
+            percentile(&ls, 50.0)
+        }
+    }
+
+    pub fn latency_p95(&self) -> f64 {
+        let ls: Vec<f64> = self.completions.iter().map(|c| c.0).collect();
+        if ls.is_empty() {
+            0.0
+        } else {
+            percentile(&ls, 95.0)
+        }
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "{} reqs, {} toks, {:.1} tok/s, p50 {:.0} ms, p95 {:.0} ms, {} decode steps, {} prefills",
+            self.completions.len(),
+            self.total_generated(),
+            self.tok_per_sec(),
+            self.latency_p50(),
+            self.latency_p95(),
+            self.decode_steps,
+            self.prefill_calls,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn throughput_math() {
+        let m = ServeMetrics {
+            completions: vec![(100.0, 50, 10), (200.0, 50, 10)],
+            wall_secs: 2.0,
+            decode_steps: 100,
+            prefill_calls: 2,
+        };
+        assert!((m.tok_per_sec() - 50.0).abs() < 1e-9);
+        assert_eq!(m.total_generated(), 100);
+        assert!((m.latency_p50() - 100.0).abs() < 1e-9 || (m.latency_p50() - 200.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_safe() {
+        let m = ServeMetrics::default();
+        assert_eq!(m.tok_per_sec(), 0.0);
+        assert_eq!(m.latency_p50(), 0.0);
+        assert!(m.summary().contains("0 reqs"));
+    }
+}

@@ -1,0 +1,30 @@
+//! Serving coordinator — the L3 system contribution (paper §4.3,
+//! Table 1): a request router + continuous batcher + KV-cache manager
+//! in front of the AOT generation executables, with pluggable weight
+//! backends (FP16 dense / uniform-MARLIN / NF-LUT / FLUTE-HIGGS).
+//!
+//! Architecture (vLLM-router-like, std::thread based):
+//!
+//! ```text
+//!   clients ──mpsc──▶ Router ──▶ Batcher (deadline+size) ──▶ Engine
+//!                                                     │  prefill/decode
+//!                       metrics ◀── completions ◀─────┘  (PJRT execs)
+//! ```
+//!
+//! Fixed-shape executables force a static max batch; the engine does
+//! continuous batching by slot reuse: finished slots are refilled from
+//! the queue via a merged prefill without disturbing live slots' KV.
+
+pub mod backend;
+pub mod batcher;
+pub mod engine;
+pub mod kvcache;
+pub mod metrics;
+pub mod router;
+pub mod trace;
+
+pub use backend::Backend;
+pub use engine::GenerationEngine;
+pub use metrics::ServeMetrics;
+pub use router::{Router, RouterConfig};
+pub use trace::{Request, TraceConfig};

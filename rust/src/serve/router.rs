@@ -1,0 +1,175 @@
+//! Router: the threaded serving front end. Clients submit requests via
+//! a channel; a coordinator thread owns the XLA engine (PJRT handles
+//! are not Send) and runs the batcher + generation loop; completions
+//! stream back on a channel.
+
+use super::backend::Backend;
+use super::batcher::{Batcher, BatcherConfig};
+use super::engine::{Completion, GenerationEngine};
+use super::metrics::ServeMetrics;
+use super::trace::Request;
+use crate::config::ModelConfig;
+use crate::model::Weights;
+use crate::quant::QuantizedModel;
+use crate::runtime::Engine;
+use anyhow::Result;
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct RouterConfig {
+    pub backend: Backend,
+    pub batch: usize,
+    pub batcher: BatcherConfig,
+    /// coordinator exits after this long with no work
+    pub idle_timeout: Duration,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig {
+            backend: Backend::Dense,
+            batch: 4,
+            batcher: BatcherConfig::default(),
+            idle_timeout: Duration::from_millis(200),
+        }
+    }
+}
+
+pub enum RouterMsg {
+    Submit(Request),
+    Shutdown,
+}
+
+pub struct Router {
+    pub tx: mpsc::Sender<RouterMsg>,
+    pub completions: mpsc::Receiver<Completion>,
+    handle: std::thread::JoinHandle<Result<ServeMetrics>>,
+}
+
+impl Router {
+    /// Spawn the coordinator thread. `artifacts` because the XLA client
+    /// must be constructed inside the thread.
+    pub fn spawn(
+        cfg: ModelConfig,
+        rcfg: RouterConfig,
+        weights: Weights,
+        qmodel: Option<QuantizedModel>,
+    ) -> Router {
+        let (tx, rx) = mpsc::channel::<RouterMsg>();
+        let (ctx, crx) = mpsc::channel::<Completion>();
+        let handle = std::thread::spawn(move || -> Result<ServeMetrics> {
+            let engine = Engine::new()?;
+            let mut ge = GenerationEngine::new(
+                &engine,
+                cfg,
+                rcfg.backend.clone(),
+                rcfg.batch,
+                &weights,
+                qmodel.as_ref(),
+            )?;
+            let mut batcher = Batcher::new(rcfg.batcher.clone());
+            let mut queue: VecDeque<Request> = VecDeque::new();
+            let t0 = Instant::now();
+            let mut last_work = Instant::now();
+            let mut shutdown = false;
+            loop {
+                // drain the inbox without blocking
+                loop {
+                    match rx.try_recv() {
+                        Ok(RouterMsg::Submit(r)) => batcher.push(r),
+                        Ok(RouterMsg::Shutdown) => shutdown = true,
+                        Err(mpsc::TryRecvError::Empty) => break,
+                        Err(mpsc::TryRecvError::Disconnected) => {
+                            shutdown = true;
+                            break;
+                        }
+                    }
+                }
+                // batcher → admission queue (force when engine has room)
+                let force = ge.idle_slots() > 0 && queue.is_empty();
+                queue.extend(batcher.poll(Instant::now(), force || shutdown));
+                ge.admit(&mut queue)?;
+                if ge.active_slots() > 0 {
+                    for c in ge.step()? {
+                        let _ = ctx.send(c);
+                    }
+                    last_work = Instant::now();
+                } else if shutdown && batcher.pending() == 0 && queue.is_empty() {
+                    break;
+                } else if last_work.elapsed() > rcfg.idle_timeout && shutdown {
+                    break;
+                } else if last_work.elapsed() > rcfg.idle_timeout.mul_f32(20.0) {
+                    // safety valve: never spin forever
+                    break;
+                } else {
+                    std::thread::sleep(Duration::from_micros(200));
+                }
+            }
+            ge.metrics.wall_secs = t0.elapsed().as_secs_f64();
+            Ok(ge.metrics.clone())
+        });
+        Router { tx, completions: crx, handle }
+    }
+
+    pub fn submit(&self, req: Request) {
+        let _ = self.tx.send(RouterMsg::Submit(req));
+    }
+
+    /// Signal shutdown and join, returning the run's metrics.
+    pub fn finish(self) -> Result<ServeMetrics> {
+        let _ = self.tx.send(RouterMsg::Shutdown);
+        self.handle.join().map_err(|_| anyhow::anyhow!("router thread panicked"))?
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::trace::{generate_trace, TraceConfig};
+
+    #[test]
+    fn router_end_to_end() {
+        if !crate::artifacts_dir().join("decode_dense_tiny_b1.hlo.txt").exists() {
+            return;
+        }
+        let engine = Engine::new().unwrap();
+        let cfg = ModelConfig::load_named(engine.artifacts(), "tiny").unwrap();
+        let exe = engine.load("fwd_loss_tiny").unwrap();
+        let w = Weights::from_manifest(cfg.clone(), &exe.manifest, Some(1)).unwrap();
+        drop(engine);
+        let corpus = crate::data::Corpus::new(cfg.vocab, cfg.seq, 1);
+        let trace = generate_trace(
+            &TraceConfig {
+                n_requests: 4,
+                prompt_len: (4, 8),
+                max_new: (2, 4),
+                ..Default::default()
+            },
+            &corpus,
+        );
+        let router = Router::spawn(
+            cfg,
+            RouterConfig { batch: 1, ..Default::default() },
+            w,
+            None,
+        );
+        for r in trace {
+            router.submit(r);
+        }
+        let mut got = 0;
+        // collect with timeout budget
+        let deadline = Instant::now() + Duration::from_secs(60);
+        while got < 4 && Instant::now() < deadline {
+            if router.completions.recv_timeout(Duration::from_secs(30)).is_ok() {
+                got += 1;
+            } else {
+                break;
+            }
+        }
+        let metrics = router.finish().unwrap();
+        assert_eq!(got, 4, "completions missing: {}", metrics.summary());
+        assert_eq!(metrics.completions.len(), 4);
+    }
+}

@@ -1,0 +1,93 @@
+//! Workload traces: the synthetic request streams the benchmarks replay
+//! (the stand-in for production serving traces).
+
+use crate::data::{Corpus, Split};
+use crate::util::prng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub max_new: usize,
+    /// offset from trace start, in milliseconds (0 = all-at-once)
+    pub arrival_ms: u64,
+}
+
+#[derive(Clone, Debug)]
+pub struct TraceConfig {
+    pub n_requests: usize,
+    pub prompt_len: (usize, usize),
+    pub max_new: (usize, usize),
+    /// mean inter-arrival gap; 0 = closed-loop (all arrive at t=0)
+    pub mean_gap_ms: u64,
+    pub seed: u64,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig {
+            n_requests: 32,
+            prompt_len: (8, 24),
+            max_new: (16, 32),
+            mean_gap_ms: 0,
+            seed: 0xBEEF,
+        }
+    }
+}
+
+/// Generate a trace of grammar-text prompts.
+pub fn generate_trace(cfg: &TraceConfig, corpus: &Corpus) -> Vec<Request> {
+    let mut rng = Rng::from_stream(cfg.seed, "trace");
+    let mut arrival = 0u64;
+    (0..cfg.n_requests)
+        .map(|i| {
+            let plen = cfg.prompt_len.0 + rng.below(cfg.prompt_len.1 - cfg.prompt_len.0 + 1);
+            let new = cfg.max_new.0 + rng.below(cfg.max_new.1 - cfg.max_new.0 + 1);
+            let seq = corpus.sequence(Split::Val, 90_000 + i);
+            let prompt: Vec<i32> = seq[..plen.min(seq.len())].iter().map(|&t| t as i32).collect();
+            if cfg.mean_gap_ms > 0 {
+                // exponential-ish inter-arrival
+                let u = rng.uniform().max(1e-9);
+                arrival += (-(u.ln()) * cfg.mean_gap_ms as f64) as u64;
+            }
+            Request { id: i as u64, prompt, max_new: new, arrival_ms: arrival }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_shapes() {
+        let corpus = Corpus::new(256, 96, 1);
+        let cfg = TraceConfig { n_requests: 10, ..Default::default() };
+        let t = generate_trace(&cfg, &corpus);
+        assert_eq!(t.len(), 10);
+        for r in &t {
+            assert!(r.prompt.len() >= 8 && r.prompt.len() <= 24);
+            assert!(r.max_new >= 16 && r.max_new <= 32);
+            assert_eq!(r.arrival_ms, 0);
+        }
+    }
+
+    #[test]
+    fn open_loop_arrivals_increase() {
+        let corpus = Corpus::new(256, 96, 1);
+        let cfg = TraceConfig { n_requests: 20, mean_gap_ms: 5, ..Default::default() };
+        let t = generate_trace(&cfg, &corpus);
+        assert!(t.windows(2).all(|w| w[1].arrival_ms >= w[0].arrival_ms));
+        assert!(t.last().unwrap().arrival_ms > 0);
+    }
+
+    #[test]
+    fn deterministic() {
+        let corpus = Corpus::new(256, 96, 1);
+        let cfg = TraceConfig::default();
+        let a = generate_trace(&cfg, &corpus);
+        let b = generate_trace(&cfg, &corpus);
+        assert_eq!(a.len(), b.len());
+        assert_eq!(a[3].prompt, b[3].prompt);
+    }
+}

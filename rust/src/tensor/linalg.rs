@@ -1,0 +1,126 @@
+//! Dense linear algebra for the data-aware quantizers: Cholesky
+//! factorization, triangular inverse, SPD inverse (GPTQ's H⁻¹ pipeline).
+
+use super::Tensor;
+use anyhow::{bail, Result};
+
+/// Lower Cholesky factor L of an SPD matrix A (A = L Lᵀ).
+pub fn cholesky_lower(a: &Tensor) -> Result<Tensor> {
+    let n = a.rows();
+    assert_eq!(n, a.cols());
+    let mut l = vec![0.0f64; n * n];
+    let ad = &a.data;
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = ad[i * n + j] as f64;
+            for k in 0..j {
+                sum -= l[i * n + k] * l[j * n + k];
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    bail!("matrix not positive definite at pivot {i} (sum {sum})");
+                }
+                l[i * n + j] = sum.sqrt();
+            } else {
+                l[i * n + j] = sum / l[j * n + j];
+            }
+        }
+    }
+    Ok(Tensor::from_vec(&[n, n], l.iter().map(|&x| x as f32).collect()))
+}
+
+/// Inverse of a lower-triangular matrix.
+pub fn lower_tri_inverse(l: &Tensor) -> Tensor {
+    let n = l.rows();
+    let ld = &l.data;
+    let mut inv = vec![0.0f64; n * n];
+    for i in 0..n {
+        inv[i * n + i] = 1.0 / ld[i * n + i] as f64;
+        for j in 0..i {
+            let mut sum = 0.0f64;
+            for k in j..i {
+                sum += ld[i * n + k] as f64 * inv[k * n + j];
+            }
+            inv[i * n + j] = -sum / ld[i * n + i] as f64;
+        }
+    }
+    Tensor::from_vec(&[n, n], inv.iter().map(|&x| x as f32).collect())
+}
+
+/// Inverse of an SPD matrix via Cholesky: A⁻¹ = L⁻ᵀ L⁻¹.
+pub fn spd_inverse(a: &Tensor) -> Result<Tensor> {
+    let l = cholesky_lower(a)?;
+    let linv = lower_tri_inverse(&l);
+    Ok(linv.t().matmul(&linv))
+}
+
+/// Add λ to the diagonal in place (Hessian dampening).
+pub fn add_diag(a: &mut Tensor, lambda: f32) {
+    let n = a.rows();
+    for i in 0..n {
+        a.data[i * n + i] += lambda;
+    }
+}
+
+/// Mean of the diagonal.
+pub fn mean_diag(a: &Tensor) -> f32 {
+    let n = a.rows();
+    (0..n).map(|i| a.data[i * n + i]).sum::<f32>() / n as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn random_spd(n: usize, seed: u64) -> Tensor {
+        let mut rng = Rng::new(seed);
+        let x = Tensor::from_vec(&[n + 4, n], rng.normal_vec((n + 4) * n));
+        let mut h = x.t().matmul(&x);
+        add_diag(&mut h, 0.1);
+        h
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let a = random_spd(16, 0);
+        let l = cholesky_lower(&a).unwrap();
+        let rec = l.matmul(&l.t());
+        for (x, y) in rec.data.iter().zip(&a.data) {
+            assert!((x - y).abs() < 1e-2 * a.max_abs(), "{x} {y}");
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 2.0, 1.0]); // eig -1
+        assert!(cholesky_lower(&a).is_err());
+    }
+
+    #[test]
+    fn tri_inverse_correct() {
+        let a = random_spd(8, 1);
+        let l = cholesky_lower(&a).unwrap();
+        let linv = lower_tri_inverse(&l);
+        let eye = l.matmul(&linv);
+        for i in 0..8 {
+            for j in 0..8 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((eye.at2(i, j) - want).abs() < 1e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn spd_inverse_correct() {
+        let a = random_spd(12, 2);
+        let ainv = spd_inverse(&a).unwrap();
+        let eye = a.matmul(&ainv);
+        for i in 0..12 {
+            for j in 0..12 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((eye.at2(i, j) - want).abs() < 5e-3, "{i},{j}");
+            }
+        }
+    }
+}

@@ -1,0 +1,223 @@
+//! Minimal dense f32 tensor substrate.
+//!
+//! The model's heavy compute goes through XLA executables; this type
+//! covers the offline math the framework itself needs (quantizers, grid
+//! training, Hessian probes, Adam state). Contiguous row-major layout.
+
+pub mod linalg;
+
+use anyhow::{bail, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(dims: &[usize]) -> Self {
+        let n = dims.iter().product();
+        Tensor { dims: dims.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn ones(dims: &[usize]) -> Self {
+        let n = dims.iter().product();
+        Tensor { dims: dims.to_vec(), data: vec![1.0; n] }
+    }
+
+    pub fn from_vec(dims: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(dims.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor { dims: dims.to_vec(), data }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Tensor { dims: vec![], data: vec![v] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.dims.len()
+    }
+
+    /// Rows/cols of a rank-2 tensor.
+    pub fn rows(&self) -> usize {
+        assert_eq!(self.rank(), 2);
+        self.dims[0]
+    }
+
+    pub fn cols(&self) -> usize {
+        assert_eq!(self.rank(), 2);
+        self.dims[1]
+    }
+
+    #[inline]
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.dims[1] + j]
+    }
+
+    #[inline]
+    pub fn at2_mut(&mut self, i: usize, j: usize) -> &mut f32 {
+        &mut self.data[i * self.dims[1] + j]
+    }
+
+    pub fn reshape(&self, dims: &[usize]) -> Result<Tensor> {
+        if dims.iter().product::<usize>() != self.data.len() {
+            bail!("reshape {:?} -> {:?}: element count mismatch", self.dims, dims);
+        }
+        Ok(Tensor { dims: dims.to_vec(), data: self.data.clone() })
+    }
+
+    /// Frobenius norm.
+    pub fn norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+
+    pub fn sq_norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>()
+    }
+
+    /// Column j of a rank-2 tensor.
+    pub fn col(&self, j: usize) -> Vec<f32> {
+        let (r, c) = (self.rows(), self.cols());
+        (0..r).map(|i| self.data[i * c + j]).collect()
+    }
+
+    pub fn set_col(&mut self, j: usize, v: &[f32]) {
+        let (r, c) = (self.rows(), self.cols());
+        assert_eq!(v.len(), r);
+        for i in 0..r {
+            self.data[i * c + j] = v[i];
+        }
+    }
+
+    /// Transpose of a rank-2 tensor.
+    pub fn t(&self) -> Tensor {
+        let (r, c) = (self.rows(), self.cols());
+        let mut out = vec![0.0f32; r * c];
+        for i in 0..r {
+            for j in 0..c {
+                out[j * r + i] = self.data[i * c + j];
+            }
+        }
+        Tensor::from_vec(&[c, r], out)
+    }
+
+    /// Blocked matmul self[M,K] @ other[K,N]; cache-friendly ikj loop.
+    pub fn matmul(&self, other: &Tensor) -> Tensor {
+        let (m, k) = (self.rows(), self.cols());
+        let (k2, n) = (other.rows(), other.cols());
+        assert_eq!(k, k2, "matmul inner dims {k} vs {k2}");
+        let mut out = vec![0.0f32; m * n];
+        let a = &self.data;
+        let b = &other.data;
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (kk, &av) in arow.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &b[kk * n..(kk + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
+            }
+        }
+        Tensor::from_vec(&[m, n], out)
+    }
+
+    pub fn add_assign(&mut self, other: &Tensor) {
+        assert_eq!(self.dims, other.dims);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for a in self.data.iter_mut() {
+            *a *= s;
+        }
+    }
+
+    /// a += s * b (axpy).
+    pub fn axpy(&mut self, s: f32, b: &Tensor) {
+        assert_eq!(self.dims, b.dims);
+        for (a, bv) in self.data.iter_mut().zip(&b.data) {
+            *a += s * bv;
+        }
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_index() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.at2(0, 2), 3.0);
+        assert_eq!(t.at2(1, 0), 4.0);
+        assert_eq!(t.rows(), 2);
+        assert_eq!(t.cols(), 3);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Tensor::from_vec(&[2, 2], vec![1., 2., 3., 4.]);
+        let b = Tensor::from_vec(&[2, 2], vec![1., 1., 1., 1.]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![3., 3., 7., 7.]);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let mut eye = Tensor::zeros(&[3, 3]);
+        for i in 0..3 {
+            *eye.at2_mut(i, i) = 1.0;
+        }
+        assert_eq!(a.matmul(&eye).data, a.data);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let a = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(a.t().t(), a);
+        assert_eq!(a.t().at2(2, 1), a.at2(1, 2));
+    }
+
+    #[test]
+    fn col_ops() {
+        let mut a = Tensor::zeros(&[3, 2]);
+        a.set_col(1, &[1., 2., 3.]);
+        assert_eq!(a.col(1), vec![1., 2., 3.]);
+        assert_eq!(a.col(0), vec![0., 0., 0.]);
+    }
+
+    #[test]
+    fn norm_and_axpy() {
+        let mut a = Tensor::from_vec(&[2], vec![3., 4.]);
+        assert!((a.norm() - 5.0).abs() < 1e-9);
+        let b = Tensor::from_vec(&[2], vec![1., 1.]);
+        a.axpy(2.0, &b);
+        assert_eq!(a.data, vec![5., 6.]);
+    }
+
+    #[test]
+    fn reshape_checks() {
+        let a = Tensor::zeros(&[4, 2]);
+        assert!(a.reshape(&[2, 4]).is_ok());
+        assert!(a.reshape(&[3, 3]).is_err());
+    }
+}

@@ -1,0 +1,109 @@
+//! Hand-rolled bench harness (criterion is not in the offline crate set).
+//!
+//! Each `rust/benches/*.rs` is a `harness = false` binary that uses
+//! `BenchRunner` for timed sections and the `report` module for the
+//! paper-style tables. Measurements do warmup + multiple samples and
+//! report median / p10 / p90.
+
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub median_ms: f64,
+    pub p10_ms: f64,
+    pub p90_ms: f64,
+    pub samples: usize,
+}
+
+impl Measurement {
+    pub fn throughput(&self, items: f64) -> f64 {
+        items / (self.median_ms / 1e3)
+    }
+}
+
+pub struct BenchRunner {
+    pub warmup: usize,
+    pub samples: usize,
+    pub results: Vec<Measurement>,
+}
+
+impl Default for BenchRunner {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl BenchRunner {
+    pub fn new() -> Self {
+        let quick = std::env::var("HIGGS_BENCH_QUICK").is_ok();
+        BenchRunner {
+            warmup: if quick { 1 } else { 3 },
+            samples: if quick { 3 } else { 10 },
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f` (warmup + samples); returns the measurement and records it.
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> Measurement {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut times = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t = Instant::now();
+            std::hint::black_box(f());
+            times.push(t.elapsed().as_secs_f64() * 1e3);
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let m = Measurement {
+            name: name.to_string(),
+            median_ms: times[times.len() / 2],
+            p10_ms: times[times.len() / 10],
+            p90_ms: times[times.len() * 9 / 10],
+            samples: times.len(),
+        };
+        eprintln!(
+            "  bench {:<42} median {:>9.3} ms  (p10 {:.3}, p90 {:.3}, n={})",
+            m.name, m.median_ms, m.p10_ms, m.p90_ms, m.samples
+        );
+        self.results.push(m.clone());
+        m
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Measurement> {
+        self.results.iter().find(|m| m.name == name)
+    }
+}
+
+/// `cargo bench` passes `--bench`; user filters come after `--`.
+pub fn bench_filter() -> Option<String> {
+    let args: Vec<String> = std::env::args().skip(1).filter(|a| !a.starts_with("--bench")).collect();
+    args.into_iter().find(|a| !a.starts_with('-'))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_records() {
+        std::env::set_var("HIGGS_BENCH_QUICK", "1");
+        let mut r = BenchRunner::new();
+        let m = r.bench("noop", || 1 + 1);
+        assert!(m.median_ms >= 0.0);
+        assert!(r.get("noop").is_some());
+    }
+
+    #[test]
+    fn throughput_math() {
+        let m = Measurement {
+            name: "x".into(),
+            median_ms: 100.0,
+            p10_ms: 90.0,
+            p90_ms: 110.0,
+            samples: 5,
+        };
+        assert!((m.throughput(50.0) - 500.0).abs() < 1e-9);
+    }
+}

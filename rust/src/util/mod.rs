@@ -1,0 +1,15 @@
+//! Shared substrates: PRNG, property testing, timing, thread pool, stats.
+//!
+//! The offline crate set has no `rand`, `proptest`, `criterion` or
+//! `rayon`; these modules are the from-scratch replacements the rest of
+//! the crate builds on.
+
+pub mod bench;
+pub mod pool;
+pub mod prng;
+pub mod propcheck;
+pub mod stats;
+pub mod timer;
+
+pub use prng::Rng;
+pub use timer::Timer;

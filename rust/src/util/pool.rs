@@ -1,0 +1,91 @@
+//! Minimal scoped thread pool (no rayon in the offline crate set).
+//!
+//! `scope_chunks` parallelizes an index range across worker threads via
+//! `crossbeam_utils::thread::scope`; used by the quantizers (per-layer
+//! fan-out) and the CLVQ trainer.
+
+use crossbeam_utils::thread;
+
+/// Number of worker threads to use (env `HIGGS_THREADS` overrides).
+pub fn num_threads() -> usize {
+    if let Ok(s) = std::env::var("HIGGS_THREADS") {
+        if let Ok(n) = s.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// Run `f(i)` for every i in 0..n, distributing contiguous chunks over
+/// worker threads. `f` must be Sync; results are written via interior
+/// state owned by the caller (e.g. per-index output slots).
+pub fn par_for(n: usize, f: impl Fn(usize) + Sync) {
+    let workers = num_threads().min(n.max(1));
+    if workers <= 1 || n <= 1 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let chunk = n.div_ceil(workers);
+    thread::scope(|s| {
+        for w in 0..workers {
+            let lo = w * chunk;
+            let hi = ((w + 1) * chunk).min(n);
+            if lo >= hi {
+                continue;
+            }
+            let f = &f;
+            s.spawn(move |_| {
+                for i in lo..hi {
+                    f(i);
+                }
+            });
+        }
+    })
+    .expect("worker thread panicked");
+}
+
+/// Map 0..n in parallel, collecting results in order.
+pub fn par_map<T: Send>(n: usize, f: impl Fn(usize) -> T + Sync) -> Vec<T> {
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    {
+        let slots = std::sync::Mutex::new(&mut out);
+        par_for(n, |i| {
+            let v = f(i);
+            // Short critical section: single slot write.
+            slots.lock().unwrap()[i] = Some(v);
+        });
+    }
+    out.into_iter().map(|o| o.unwrap()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn par_for_covers_all() {
+        let hits = AtomicUsize::new(0);
+        par_for(1000, |_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 1000);
+    }
+
+    #[test]
+    fn par_map_ordered() {
+        let v = par_map(100, |i| i * i);
+        assert_eq!(v[7], 49);
+        assert_eq!(v.len(), 100);
+    }
+
+    #[test]
+    fn handles_zero_and_one() {
+        let v = par_map(0, |i| i);
+        assert!(v.is_empty());
+        let v = par_map(1, |i| i + 1);
+        assert_eq!(v, vec![1]);
+    }
+}

@@ -1,0 +1,256 @@
+//! Deterministic PRNG: xoshiro256** seeded via splitmix64, with
+//! Box-Muller Gaussians.
+//!
+//! Every stochastic component in the crate (RHT sign vectors, CLVQ,
+//! Gaussian noise insertion, synthetic corpus, workload traces) draws
+//! from this generator keyed by an explicit `(seed, stream)` pair so
+//! experiments are reproducible bit-for-bit.
+
+/// splitmix64 step — used for seeding and for hashing stream labels.
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// xoshiro256** — fast, high-quality, 2^256 period.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+    /// cached second Box-Muller output
+    spare: Option<f64>,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s, spare: None }
+    }
+
+    /// Independent stream derived from a seed and a label (e.g. layer
+    /// name + purpose); collision-resistant enough for experiments.
+    pub fn from_stream(seed: u64, label: &str) -> Self {
+        let mut h = seed ^ 0xcbf29ce484222325;
+        for b in label.bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        Self::new(h)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in [0, 1).
+    #[inline]
+    pub fn uniform_f32(&mut self) -> f32 {
+        self.uniform() as f32
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // Lemire-style rejection-free bounded sampling (slight bias is
+        // irrelevant at our n << 2^64 scales).
+        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Standard normal via Box-Muller (cached spare).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.spare.take() {
+            return z;
+        }
+        loop {
+            let u1 = self.uniform();
+            if u1 <= f64::MIN_POSITIVE {
+                continue;
+            }
+            let u2 = self.uniform();
+            let r = (-2.0 * u1.ln()).sqrt();
+            let th = std::f64::consts::TAU * u2;
+            self.spare = Some(r * th.sin());
+            return r * th.cos();
+        }
+    }
+
+    #[inline]
+    pub fn normal_f32(&mut self) -> f32 {
+        self.normal() as f32
+    }
+
+    /// Fill a slice with i.i.d. standard normals.
+    pub fn fill_normal(&mut self, out: &mut [f32]) {
+        for v in out.iter_mut() {
+            *v = self.normal() as f32;
+        }
+    }
+
+    /// Vector of i.i.d. standard normals.
+    pub fn normal_vec(&mut self, n: usize) -> Vec<f32> {
+        let mut v = vec![0.0; n];
+        self.fill_normal(&mut v);
+        v
+    }
+
+    /// Random ±1 sign vector (the RHT diagonal D_ξ).
+    pub fn sign_vec(&mut self, n: usize) -> Vec<f32> {
+        let mut v = Vec::with_capacity(n);
+        let mut bits = 0u64;
+        for i in 0..n {
+            if i % 64 == 0 {
+                bits = self.next_u64();
+            }
+            v.push(if bits & 1 == 1 { 1.0 } else { -1.0 });
+            bits >>= 1;
+        }
+        v
+    }
+
+    /// Geometric-ish integer: number of uniform trials below p (capped).
+    pub fn coin(&mut self, p: f64) -> bool {
+        self.uniform() < p
+    }
+
+    /// Zipf-distributed index in [0, n) with exponent `a` via rejection
+    /// inversion (approximate; used by the synthetic corpus).
+    pub fn zipf(&mut self, n: usize, a: f64) -> usize {
+        // inverse-CDF on the discrete power law by sampling the
+        // continuous Pareto and clamping — adequate for corpus shaping.
+        let u = self.uniform().max(1e-12);
+        // x ∈ [1, n]; rank = floor(x) - 1 ∈ [0, n-1]
+        let x = ((n as f64).powf(1.0 - a) * u + (1.0 - u)).powf(1.0 / (1.0 - a));
+        ((x.floor() as usize).max(1) - 1).min(n - 1)
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn streams_differ() {
+        let mut a = Rng::from_stream(7, "x");
+        let mut b = Rng::from_stream(7, "y");
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn uniform_range() {
+        let mut r = Rng::new(1);
+        for _ in 0..10_000 {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(2);
+        let n = 200_000;
+        let (mut m, mut m2) = (0.0, 0.0);
+        for _ in 0..n {
+            let z = r.normal();
+            m += z;
+            m2 += z * z;
+        }
+        m /= n as f64;
+        m2 /= n as f64;
+        assert!(m.abs() < 0.01, "mean {m}");
+        assert!((m2 - 1.0).abs() < 0.02, "var {m2}");
+    }
+
+    #[test]
+    fn below_bounds() {
+        let mut r = Rng::new(3);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let i = r.below(10);
+            assert!(i < 10);
+            seen[i] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn sign_vec_balanced() {
+        let mut r = Rng::new(4);
+        let v = r.sign_vec(10_000);
+        let s: f32 = v.iter().sum();
+        assert!(v.iter().all(|&x| x == 1.0 || x == -1.0));
+        assert!(s.abs() < 300.0, "sum {s}");
+    }
+
+    #[test]
+    fn zipf_skewed() {
+        let mut r = Rng::new(5);
+        let mut c0 = 0;
+        for _ in 0..10_000 {
+            if r.zipf(100, 1.2) == 0 {
+                c0 += 1;
+            }
+        }
+        // rank-0 must dominate
+        assert!(c0 > 1000, "c0 {c0}");
+    }
+
+    #[test]
+    fn shuffle_permutes() {
+        let mut r = Rng::new(6);
+        let mut v: Vec<usize> = (0..50).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+        assert_ne!(v, (0..50).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,150 @@
+//! Mini property-based-testing framework (offline stand-in for proptest).
+//!
+//! `forall` runs a property over N randomly generated cases; on failure
+//! it retries with progressively "smaller" generator budgets to report a
+//! near-minimal case, and always prints the seed so the case replays.
+//!
+//! ```no_run
+//! // (no_run: doctest binaries don't inherit the xla rpath link flags)
+//! use higgs::util::propcheck::{forall, Gen};
+//! forall("sum is commutative", 100, |g| {
+//!     let a = g.f32_in(-10.0, 10.0);
+//!     let b = g.f32_in(-10.0, 10.0);
+//!     assert!((a + b - (b + a)).abs() < 1e-6);
+//! });
+//! ```
+
+use super::prng::Rng;
+
+/// Generator handed to properties; tracks a size budget so failures can
+/// be re-run with smaller inputs (shrinking-lite).
+pub struct Gen {
+    rng: Rng,
+    /// multiplicative cap on collection sizes in [0,1]
+    size: f64,
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn new(seed: u64, size: f64) -> Self {
+        Gen { rng: Rng::new(seed), size, seed }
+    }
+
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        if hi <= lo {
+            return lo;
+        }
+        let span = ((hi - lo) as f64 * self.size).max(1.0) as usize;
+        lo + self.rng.below(span.min(hi - lo) + 1)
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.range_f64(lo as f64, hi as f64) as f32
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.coin(0.5)
+    }
+
+    /// Power of two in [2^lo, 2^hi], scaled down by the size budget.
+    pub fn pow2_in(&mut self, lo: u32, hi: u32) -> usize {
+        let hi_eff = lo + (((hi - lo) as f64 * self.size).round() as u32);
+        1usize << (lo + self.rng.below((hi_eff - lo + 1) as usize) as u32)
+    }
+
+    pub fn vec_normal(&mut self, n: usize) -> Vec<f32> {
+        self.rng.normal_vec(n)
+    }
+
+    pub fn vec_uniform(&mut self, n: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..n).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+}
+
+/// Run `prop` on `cases` random inputs. Panics (with seed) on failure.
+pub fn forall<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(name: &str, cases: u64, prop: F) {
+    let base = env_seed();
+    for i in 0..cases {
+        let seed = base.wrapping_add(i).wrapping_mul(0x9E3779B97F4A7C15);
+        let result = std::panic::catch_unwind(|| {
+            let mut g = Gen::new(seed, 1.0);
+            prop(&mut g);
+        });
+        if result.is_err() {
+            // shrinking-lite: retry same seed with smaller size budgets
+            // and report the smallest budget that still fails.
+            let mut min_fail = 1.0;
+            for &size in &[0.05, 0.1, 0.25, 0.5] {
+                let r = std::panic::catch_unwind(|| {
+                    let mut g = Gen::new(seed, size);
+                    prop(&mut g);
+                });
+                if r.is_err() {
+                    min_fail = size;
+                    break;
+                }
+            }
+            panic!(
+                "property `{name}` failed (case {i}, seed {seed:#x}, \
+                 min failing size {min_fail}); rerun with HIGGS_PROP_SEED={base}"
+            );
+        }
+    }
+}
+
+fn env_seed() -> u64 {
+    std::env::var("HIGGS_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x5EED)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_valid_property() {
+        forall("abs is nonneg", 50, |g| {
+            let x = g.f32_in(-100.0, 100.0);
+            assert!(x.abs() >= 0.0);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always fails`")]
+    fn reports_failures() {
+        forall("always fails", 5, |g| {
+            let x = g.f32_in(0.0, 1.0);
+            assert!(x < 0.0);
+        });
+    }
+
+    #[test]
+    fn pow2_in_range() {
+        forall("pow2 bounds", 100, |g| {
+            let v = g.pow2_in(2, 8);
+            assert!(v.is_power_of_two() && (4..=256).contains(&v));
+        });
+    }
+
+    #[test]
+    fn usize_in_bounds() {
+        forall("usize bounds", 100, |g| {
+            let v = g.usize_in(3, 17);
+            assert!((3..=17).contains(&v));
+        });
+    }
+}

@@ -1,0 +1,105 @@
+//! Lightweight timing + section profiling for the perf pass.
+
+use std::time::{Duration, Instant};
+
+/// Simple scoped timer.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn ms(&self) -> f64 {
+        self.elapsed().as_secs_f64() * 1e3
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+}
+
+/// Named-section profiler: accumulate durations across a run and dump a
+/// sorted report. Used by `higgs serve-bench --profile` and the perf
+/// pass (EXPERIMENTS.md §Perf).
+#[derive(Default)]
+pub struct Profiler {
+    sections: Vec<(String, Duration, u64)>,
+}
+
+impl Profiler {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, name: &str, d: Duration) {
+        if let Some(e) = self.sections.iter_mut().find(|(n, _, _)| n == name) {
+            e.1 += d;
+            e.2 += 1;
+        } else {
+            self.sections.push((name.to_string(), d, 1));
+        }
+    }
+
+    pub fn time<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t = Instant::now();
+        let out = f();
+        self.record(name, t.elapsed());
+        out
+    }
+
+    pub fn report(&self) -> String {
+        let mut rows: Vec<_> = self.sections.iter().collect();
+        rows.sort_by(|a, b| b.1.cmp(&a.1));
+        let total: Duration = rows.iter().map(|r| r.1).sum();
+        let mut out = format!("{:<32} {:>10} {:>8} {:>7}\n", "section", "total_ms", "calls", "%");
+        for (name, dur, calls) in rows {
+            let ms = dur.as_secs_f64() * 1e3;
+            let pct = if total.as_nanos() > 0 {
+                dur.as_secs_f64() / total.as_secs_f64() * 100.0
+            } else {
+                0.0
+            };
+            out += &format!("{name:<32} {ms:>10.2} {calls:>8} {pct:>6.1}%\n");
+        }
+        out
+    }
+
+    pub fn total_ms(&self, name: &str) -> f64 {
+        self.sections
+            .iter()
+            .find(|(n, _, _)| n == name)
+            .map(|(_, d, _)| d.as_secs_f64() * 1e3)
+            .unwrap_or(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profiler_accumulates() {
+        let mut p = Profiler::new();
+        p.record("a", Duration::from_millis(5));
+        p.record("a", Duration::from_millis(5));
+        p.record("b", Duration::from_millis(1));
+        assert!((p.total_ms("a") - 10.0).abs() < 0.1);
+        let rep = p.report();
+        assert!(rep.contains('a') && rep.contains('b'));
+    }
+
+    #[test]
+    fn time_returns_value() {
+        let mut p = Profiler::new();
+        let v = p.time("work", || 42);
+        assert_eq!(v, 42);
+        assert!(p.total_ms("work") >= 0.0);
+    }
+}

@@ -1,0 +1,160 @@
+//! Integration: dynamic bitwidth allocation end-to-end on the tiny
+//! model — error DB from real quantizers, α from real calibration, DP
+//! solution quality vs uniform assignment (the §5 claim).
+
+use higgs::alloc::{solve_dp, solve_greedy, solve_lagrange, ErrorDb, GridChoice};
+use higgs::config::ModelConfig;
+use higgs::eval::Evaluator;
+use higgs::grids::registry::{effective_bits, GridRegistry};
+use higgs::grids::GridKind;
+use higgs::linearity::calibrate::{calibrate_alphas, CalibMetric};
+use higgs::model::Weights;
+use higgs::quant::higgs::HiggsQuantizer;
+use higgs::quant::QuantizedModel;
+use higgs::runtime::Engine;
+use higgs::train::Trainer;
+
+fn have_artifacts() -> bool {
+    higgs::artifacts_dir().join("grad_tiny.hlo.txt").exists()
+}
+
+fn trained_tiny(engine: &Engine) -> (ModelConfig, Weights) {
+    let cfg = ModelConfig::load_named(engine.artifacts(), "tiny").unwrap();
+    let cache = std::env::temp_dir().join("higgs_test_tiny_ckpt.bin");
+    if let Ok(w) = Weights::load(&cache, cfg.clone()) {
+        return (cfg, w);
+    }
+    let man = engine.load("grad_tiny").unwrap().manifest.clone();
+    let mut w = Weights::from_manifest(cfg.clone(), &man, Some(7)).unwrap();
+    Trainer::new(engine, cfg.clone()).train(&mut w, 300, 4e-3, 100).unwrap();
+    let _ = w.save(&cache);
+    (cfg, w)
+}
+
+#[test]
+fn dynamic_allocation_beats_uniform_at_equal_budget() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let engine = Engine::new().unwrap();
+    let (cfg, w) = trained_tiny(&engine);
+    let mut ev = Evaluator::new(&engine, cfg.clone());
+    ev.ppl_batches = 2;
+    let reg = GridRegistry::new();
+
+    // grid choices at 2/3/4 bits (p=2) + 8-bit fallback
+    let specs: Vec<(usize, usize)> = vec![(16, 2), (64, 2), (256, 2), (256, 1)];
+    let quantizers: Vec<HiggsQuantizer> = specs
+        .iter()
+        .map(|&(n, p)| HiggsQuantizer::new(reg.get(GridKind::Higgs, n, p), cfg.group, 1))
+        .collect();
+    let models: Vec<QuantizedModel> =
+        quantizers.iter().map(|q| QuantizedModel::quantize_all(&w, q)).collect();
+    let layers = w.linear_names();
+    let dims: Vec<usize> = cfg.linear_shapes().iter().map(|(_, (k, n))| k * n).collect();
+    let mut t2 = vec![vec![0.0; specs.len()]; layers.len()];
+    for (j, qm) in models.iter().enumerate() {
+        for (l, (_, e)) in qm.layer_errors(&w).iter().enumerate() {
+            t2[l][j] = *e;
+        }
+    }
+    let db = ErrorDb {
+        layers: layers.clone(),
+        dims,
+        choices: specs
+            .iter()
+            .map(|&(n, p)| GridChoice {
+                id: format!("n{n}p{p}"),
+                bits: effective_bits(n, p, cfg.group.min(cfg.d_model)),
+            })
+            .collect(),
+        t2,
+    };
+    let alphas =
+        calibrate_alphas(&ev, &w, &[0.08, 0.16, 0.24], CalibMetric::Ppl, 3).unwrap();
+
+    // budget = the 3-bit uniform level: DP must match or beat uniform
+    let budget = db.choices[1].bits;
+    let sol = solve_dp(&db, &alphas, budget).unwrap();
+    assert!(sol.avg_bits <= budget + 1e-9);
+
+    let uniform_pen: f64 = layers
+        .iter()
+        .enumerate()
+        .map(|(l, name)| alphas.alpha(name).unwrap().max(0.0) * db.t2[l][1])
+        .sum();
+    assert!(
+        sol.predicted_penalty <= uniform_pen + 1e-12,
+        "dp {} vs uniform {}",
+        sol.predicted_penalty,
+        uniform_pen
+    );
+
+    // measured PPL: dynamic should not be worse than uniform (noise margin 3%)
+    let qm_dyn = QuantizedModel::from_layers(
+        layers
+            .iter()
+            .enumerate()
+            .map(|(l, n)| models[sol.choice[l]].get(n).unwrap().clone())
+            .collect(),
+    );
+    let ppl_dyn = ev.perplexity(&qm_dyn.apply_to(&w)).unwrap();
+    let ppl_uni = ev.perplexity(&models[1].apply_to(&w)).unwrap();
+    assert!(
+        ppl_dyn <= ppl_uni * 1.03,
+        "dynamic {ppl_dyn} vs uniform {ppl_uni}"
+    );
+
+    // solver hierarchy on the same instance
+    let gr = solve_greedy(&db, &alphas, budget).unwrap();
+    let lg = solve_lagrange(&db, &alphas, budget).unwrap();
+    assert!(sol.predicted_penalty <= gr.predicted_penalty + 1e-12);
+    assert!(sol.predicted_penalty <= lg.predicted_penalty + 1e-12);
+}
+
+#[test]
+fn budget_monotonicity_on_real_instance() {
+    if !have_artifacts() {
+        return;
+    }
+    let engine = Engine::new().unwrap();
+    let (cfg, w) = trained_tiny(&engine);
+    let reg = GridRegistry::new();
+    let specs: Vec<(usize, usize)> = vec![(16, 2), (64, 2), (256, 2)];
+    let layers = w.linear_names();
+    let dims: Vec<usize> = cfg.linear_shapes().iter().map(|(_, (k, n))| k * n).collect();
+    let mut t2 = vec![vec![0.0; specs.len()]; layers.len()];
+    for (j, &(n, p)) in specs.iter().enumerate() {
+        let q = HiggsQuantizer::new(reg.get(GridKind::Higgs, n, p), cfg.group, 1);
+        let qm = QuantizedModel::quantize_all(&w, &q);
+        for (l, (_, e)) in qm.layer_errors(&w).iter().enumerate() {
+            t2[l][j] = *e;
+        }
+    }
+    let db = ErrorDb {
+        layers: layers.clone(),
+        dims,
+        choices: specs
+            .iter()
+            .map(|&(n, p)| GridChoice {
+                id: format!("n{n}p{p}"),
+                bits: effective_bits(n, p, cfg.group.min(cfg.d_model)),
+            })
+            .collect(),
+        t2,
+    };
+    // flat alphas: still well-defined
+    let alphas = higgs::linearity::calibrate::LayerAlphas {
+        metric: CalibMetric::Ppl,
+        alphas: layers.iter().map(|n| (n.clone(), 1.0)).collect(),
+        base: 0.0,
+        noise_levels: vec![],
+    };
+    let mut last = f64::INFINITY;
+    for b in [3.0, 3.5, 4.0, 5.0] {
+        let sol = solve_dp(&db, &alphas, b).unwrap();
+        assert!(sol.predicted_penalty <= last + 1e-12, "not monotone at {b}");
+        last = sol.predicted_penalty;
+    }
+}

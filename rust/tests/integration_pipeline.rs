@@ -1,0 +1,143 @@
+//! Integration: the full quantization pipeline on the tiny model —
+//! train a little, quantize with every method, check PPL ordering and
+//! the linearity-theorem prediction quality.
+
+use higgs::config::ModelConfig;
+use higgs::eval::Evaluator;
+use higgs::grids::registry::GridRegistry;
+use higgs::grids::GridKind;
+use higgs::linearity::calibrate::{calibrate_alphas, CalibMetric};
+use higgs::linearity::noise::gaussian_noise;
+use higgs::linearity::predict::predict_ppl;
+use higgs::model::Weights;
+use higgs::quant::higgs::HiggsQuantizer;
+use higgs::quant::QuantizedModel;
+use higgs::runtime::Engine;
+use higgs::train::Trainer;
+
+fn have_artifacts() -> bool {
+    higgs::artifacts_dir().join("grad_tiny.hlo.txt").exists()
+}
+
+/// Train (or load cached) tiny weights for pipeline tests.
+fn trained_tiny(engine: &Engine) -> (ModelConfig, Weights) {
+    let cfg = ModelConfig::load_named(engine.artifacts(), "tiny").unwrap();
+    let cache = std::env::temp_dir().join("higgs_test_tiny_ckpt.bin");
+    if let Ok(w) = Weights::load(&cache, cfg.clone()) {
+        return (cfg, w);
+    }
+    let man = engine.load("grad_tiny").unwrap().manifest.clone();
+    let mut w = Weights::from_manifest(cfg.clone(), &man, Some(7)).unwrap();
+    let tr = Trainer::new(engine, cfg.clone());
+    tr.train(&mut w, 300, 4e-3, 100).unwrap();
+    let _ = w.save(&cache);
+    (cfg, w)
+}
+
+#[test]
+fn trained_model_beats_random_and_quantization_degrades_gracefully() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let engine = Engine::new().unwrap();
+    let (cfg, w) = trained_tiny(&engine);
+    let man = engine.load("fwd_loss_tiny").unwrap().manifest.clone();
+    let random = Weights::from_manifest(cfg.clone(), &man, Some(99)).unwrap();
+    let mut ev = Evaluator::new(&engine, cfg.clone());
+    ev.ppl_batches = 2;
+    let ppl_rand = ev.perplexity(&random).unwrap();
+    let ppl_trained = ev.perplexity(&w).unwrap();
+    // the mixed-order grammar is deliberately hard: 300 tiny-model steps
+    // roughly halve the random-init perplexity
+    assert!(
+        ppl_trained < 0.7 * ppl_rand,
+        "training failed: {ppl_trained} vs random {ppl_rand}"
+    );
+
+    let reg = GridRegistry::new();
+    // 8-bit-ish quantization ≈ lossless; 2-bit-ish clearly worse
+    let q_hi = HiggsQuantizer::new(reg.get(GridKind::Higgs, 256, 1), cfg.group, 1);
+    let q_lo = HiggsQuantizer::new(reg.get(GridKind::Higgs, 4, 1), cfg.group, 1);
+    let ppl_hi = ev
+        .perplexity(&QuantizedModel::quantize_all(&w, &q_hi).apply_to(&w))
+        .unwrap();
+    let ppl_lo = ev
+        .perplexity(&QuantizedModel::quantize_all(&w, &q_lo).apply_to(&w))
+        .unwrap();
+    assert!(ppl_hi < ppl_trained * 1.05, "8-bit not lossless: {ppl_hi} vs {ppl_trained}");
+    assert!(ppl_lo > ppl_hi, "2-bit {ppl_lo} should exceed 8-bit {ppl_hi}");
+}
+
+#[test]
+fn linearity_prediction_tracks_measured_ppl() {
+    if !have_artifacts() {
+        return;
+    }
+    let engine = Engine::new().unwrap();
+    let (cfg, w) = trained_tiny(&engine);
+    let mut ev = Evaluator::new(&engine, cfg.clone());
+    ev.ppl_batches = 2;
+    let alphas =
+        calibrate_alphas(&ev, &w, &[0.08, 0.15, 0.22], CalibMetric::Ppl, 3).unwrap();
+    // quantize at a moderate width and compare predicted vs measured
+    let reg = GridRegistry::new();
+    let q = HiggsQuantizer::new(reg.get(GridKind::Higgs, 16, 1), cfg.group, 1);
+    let qm = QuantizedModel::quantize_all(&w, &q);
+    let measured = ev.perplexity(&qm.apply_to(&w)).unwrap();
+    let predicted = predict_ppl(&alphas, &qm.layer_errors(&w));
+    let rel = (predicted - measured).abs() / measured;
+    assert!(
+        rel < 0.25,
+        "linear model off by {:.1}%: measured {measured:.3} predicted {predicted:.3}",
+        rel * 100.0
+    );
+}
+
+#[test]
+fn noise_insertion_is_unbiased_in_ppl_direction() {
+    // PPL must increase monotonically (statistically) with noise level
+    if !have_artifacts() {
+        return;
+    }
+    let engine = Engine::new().unwrap();
+    let (cfg, w) = trained_tiny(&engine);
+    let mut ev = Evaluator::new(&engine, cfg.clone());
+    ev.ppl_batches = 2;
+    // NOTE: the tiny model is extremely noise-robust (2-bit quantization
+    // moves PPL by only a few %), so use strong noise levels and a
+    // modest growth requirement.
+    let base = ev.perplexity(&w).unwrap();
+    let mut last = base;
+    for &t in &[0.1, 0.3, 0.7] {
+        let mut wn = w.clone();
+        for name in w.linear_names() {
+            let noisy = gaussian_noise(w.linear(&name).unwrap(), t, 5, &name);
+            wn.set_linear(&name, noisy).unwrap();
+        }
+        let ppl = ev.perplexity(&wn).unwrap();
+        assert!(ppl > last * 0.99, "t={t}: ppl {ppl} did not grow from {last}");
+        last = ppl;
+    }
+    assert!(last > base * 1.02, "noise at t=0.7 barely moved PPL: {base} -> {last}");
+}
+
+#[test]
+fn kl_metric_orders_like_ppl() {
+    if !have_artifacts() {
+        return;
+    }
+    let engine = Engine::new().unwrap();
+    let (cfg, w) = trained_tiny(&engine);
+    let mut ev = Evaluator::new(&engine, cfg.clone());
+    ev.ppl_batches = 1;
+    let reg = GridRegistry::new();
+    let q4 = HiggsQuantizer::new(reg.get(GridKind::Higgs, 16, 1), cfg.group, 1);
+    let q2 = HiggsQuantizer::new(reg.get(GridKind::Higgs, 4, 1), cfg.group, 1);
+    let w4 = QuantizedModel::quantize_all(&w, &q4).apply_to(&w);
+    let w2 = QuantizedModel::quantize_all(&w, &q2).apply_to(&w);
+    let kl4 = ev.kl_on_random(&w, &w4, 1, 3).unwrap();
+    let kl2 = ev.kl_on_random(&w, &w2, 1, 3).unwrap();
+    assert!(kl2 > kl4, "KL ordering violated: 2-bit {kl2} vs 4-bit {kl4}");
+    assert!(kl4 >= 0.0);
+}

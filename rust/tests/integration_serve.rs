@@ -1,0 +1,179 @@
+//! Integration: serving coordinator invariants on the tiny model —
+//! continuous batching correctness, backend agreement, router flow.
+
+use higgs::config::ModelConfig;
+use higgs::model::Weights;
+use higgs::runtime::Engine;
+use higgs::serve::engine::GenerationEngine;
+use higgs::serve::trace::{generate_trace, Request, TraceConfig};
+use higgs::serve::{Backend, Router, RouterConfig};
+use std::collections::VecDeque;
+
+fn have_artifacts() -> bool {
+    higgs::artifacts_dir().join("decode_dense_tiny_b1.hlo.txt").exists()
+}
+
+fn setup(engine: &Engine) -> (ModelConfig, Weights) {
+    let cfg = ModelConfig::load_named(engine.artifacts(), "tiny").unwrap();
+    let man = engine.load("fwd_loss_tiny").unwrap().manifest.clone();
+    (cfg.clone(), Weights::from_manifest(cfg, &man, Some(1)).unwrap())
+}
+
+#[test]
+fn every_request_generates_exactly_max_new() {
+    if !have_artifacts() {
+        return;
+    }
+    let engine = Engine::new().unwrap();
+    let (cfg, w) = setup(&engine);
+    let corpus = higgs::data::Corpus::new(cfg.vocab, cfg.seq, 2);
+    let trace = generate_trace(
+        &TraceConfig {
+            n_requests: 5,
+            prompt_len: (4, 10),
+            max_new: (2, 7),
+            ..Default::default()
+        },
+        &corpus,
+    );
+    let expected: Vec<(u64, usize)> =
+        trace.iter().map(|r| (r.id, r.max_new)).collect();
+    let mut ge = GenerationEngine::new(&engine, cfg, Backend::Dense, 1, &w, None).unwrap();
+    let mut queue: VecDeque<Request> = trace.into();
+    let mut done = Vec::new();
+    while !queue.is_empty() || ge.active_slots() > 0 {
+        ge.admit(&mut queue).unwrap();
+        done.extend(ge.step().unwrap());
+    }
+    done.sort_by_key(|c| c.id);
+    assert_eq!(done.len(), expected.len());
+    for (c, (id, max_new)) in done.iter().zip(&expected) {
+        assert_eq!(c.id, *id);
+        assert_eq!(c.tokens.len(), *max_new, "req {id}");
+        assert!(c.tokens.iter().all(|&t| t >= 0 && (t as usize) < 64));
+    }
+}
+
+#[test]
+fn continuous_batching_isolates_slots() {
+    // generations must be identical whether a request runs alone or
+    // alongside other requests that come and go (slot isolation).
+    if !higgs::artifacts_dir().join("decode_dense_tiny_b1.hlo.txt").exists() {
+        return;
+    }
+    let engine = Engine::new().unwrap();
+    let (cfg, w) = setup(&engine);
+    let corpus = higgs::data::Corpus::new(cfg.vocab, cfg.seq, 3);
+    let mk = |id: u64, plen: usize, max_new: usize| {
+        let seq = corpus.sequence(higgs::data::Split::Val, 70_000 + id as usize);
+        Request {
+            id,
+            prompt: seq[..plen].iter().map(|&t| t as i32).collect(),
+            max_new,
+            arrival_ms: 0,
+        }
+    };
+    // solo run at batch 1
+    let solo = {
+        let mut ge =
+            GenerationEngine::new(&engine, cfg.clone(), Backend::Dense, 1, &w, None)
+                .unwrap();
+        let mut q: VecDeque<Request> = vec![mk(0, 8, 6)].into();
+        let mut out = Vec::new();
+        while !q.is_empty() || ge.active_slots() > 0 {
+            ge.admit(&mut q).unwrap();
+            out.extend(ge.step().unwrap());
+        }
+        out.remove(0).tokens
+    };
+    // same request sequentially after another one at batch 1 (slot reuse)
+    let reused = {
+        let mut ge =
+            GenerationEngine::new(&engine, cfg.clone(), Backend::Dense, 1, &w, None)
+                .unwrap();
+        let mut q: VecDeque<Request> = vec![mk(7, 5, 3), mk(0, 8, 6)].into();
+        let mut out = Vec::new();
+        while !q.is_empty() || ge.active_slots() > 0 {
+            ge.admit(&mut q).unwrap();
+            out.extend(ge.step().unwrap());
+        }
+        out.into_iter().find(|c| c.id == 0).unwrap().tokens
+    };
+    assert_eq!(solo, reused, "slot reuse changed a request's generation");
+}
+
+#[test]
+fn router_handles_concurrent_submitters() {
+    if !have_artifacts() {
+        return;
+    }
+    let engine = Engine::new().unwrap();
+    let (cfg, w) = setup(&engine);
+    drop(engine);
+    let corpus = higgs::data::Corpus::new(cfg.vocab, cfg.seq, 4);
+    let router = Router::spawn(cfg, RouterConfig { batch: 1, ..Default::default() }, w, None);
+    let trace = generate_trace(
+        &TraceConfig {
+            n_requests: 6,
+            prompt_len: (4, 8),
+            max_new: (2, 3),
+            ..Default::default()
+        },
+        &corpus,
+    );
+    // submit from two "client" threads
+    let tx = router.tx.clone();
+    let (t1, t2): (Vec<Request>, Vec<Request>) =
+        trace.into_iter().partition(|r| r.id % 2 == 0);
+    let h1 = std::thread::spawn(move || {
+        for r in t1 {
+            tx.send(higgs::serve::router::RouterMsg::Submit(r)).unwrap();
+        }
+    });
+    for r in t2 {
+        router.submit(r);
+    }
+    h1.join().unwrap();
+    let mut got = 0;
+    while got < 6 {
+        match router.completions.recv_timeout(std::time::Duration::from_secs(60)) {
+            Ok(_) => got += 1,
+            Err(_) => break,
+        }
+    }
+    let metrics = router.finish().unwrap();
+    assert_eq!(got, 6, "{}", metrics.summary());
+}
+
+#[test]
+fn batch4_artifacts_run_if_present() {
+    // base-config serving artifacts at batch 4 (skips if only tiny built)
+    if !higgs::artifacts_dir().join("decode_dense_base_b4.hlo.txt").exists() {
+        return;
+    }
+    let engine = Engine::new().unwrap();
+    let cfg = ModelConfig::load_named(engine.artifacts(), "base").unwrap();
+    let man = engine.load("fwd_loss_base").unwrap().manifest.clone();
+    let w = Weights::from_manifest(cfg.clone(), &man, Some(1)).unwrap();
+    let corpus = higgs::data::Corpus::new(cfg.vocab, cfg.seq, 5);
+    let trace = generate_trace(
+        &TraceConfig {
+            n_requests: 6,
+            prompt_len: (8, 16),
+            max_new: (4, 6),
+            ..Default::default()
+        },
+        &corpus,
+    );
+    let mut ge = GenerationEngine::new(&engine, cfg, Backend::Dense, 4, &w, None).unwrap();
+    let m = ge.run_closed_loop(trace).unwrap();
+    assert_eq!(m.completions.len(), 6);
+    // batching efficiency: fewer decode steps than serial execution
+    let serial_steps: usize = m.completions.iter().map(|c| c.1).sum();
+    assert!(
+        (m.decode_steps as usize) < serial_steps,
+        "batching had no effect: {} steps for {} tokens",
+        m.decode_steps,
+        serial_steps
+    );
+}
