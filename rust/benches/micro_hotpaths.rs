@@ -1,13 +1,21 @@
 //! Micro-benchmarks of the framework hot paths (the §Perf inputs):
-//! FWHT, grid nearest-neighbour, HIGGS layer quantization throughput,
-//! bit-packing, DP allocation, qmm kernel executions at serving shapes.
+//! FWHT, grid nearest-neighbour (brute-force scan vs projection index),
+//! HIGGS layer quantization throughput (serial reference vs blocked
+//! multithreaded encode), bit-packing, DP allocation, qmm kernel
+//! executions at serving shapes.
+//!
+//! Emits `BENCH_hotpaths.json` (override with `HIGGS_BENCH_JSON`) with
+//! (op, ns/iter, throughput) rows so the perf trajectory is tracked
+//! across PRs — see `PERF.md` for how to read it. The indexed/blocked
+//! fast paths are asserted equal to their reference oracles before
+//! timing, so a broken optimization can't report a good number.
 
 use higgs::grids::registry::GridRegistry;
 use higgs::grids::GridKind;
 use higgs::hadamard::{fwht, rht_forward, signs_for};
 use higgs::quant::higgs::HiggsQuantizer;
 use higgs::quant::packing::{pack, unpack};
-use higgs::quant::Quantizer;
+use higgs::quant::{QuantData, Quantizer};
 use higgs::tensor::Tensor;
 use higgs::util::bench::BenchRunner;
 use higgs::util::prng::Rng;
@@ -19,7 +27,7 @@ fn main() {
     // FWHT over serving-typical group sizes
     for g in [64usize, 256, 1024] {
         let mut v = rng.normal_vec(g);
-        r.bench(&format!("fwht_g{g}_x1000"), || {
+        r.bench_items(&format!("fwht_g{g}_x1000"), 1000.0, || {
             for _ in 0..1000 {
                 fwht(&mut v);
             }
@@ -31,44 +39,75 @@ fn main() {
         let n = 64 * 512;
         let mut x = rng.normal_vec(n);
         let signs = signs_for(0, "bench", n);
-        r.bench("rht_forward_32k", || {
+        r.bench_items("rht_forward_32k", n as f64, || {
             rht_forward(&mut x, &signs, 64);
             x[0]
         });
     }
 
-    // grid nearest-neighbour
+    // grid nearest-neighbour: indexed Grid::nearest vs the brute-force
+    // reference scan on identical probes
     let reg = GridRegistry::new();
     for (n, p) in [(16usize, 1usize), (256, 2), (4096, 2)] {
         let grid = reg.get(GridKind::Higgs, n, p);
         let probes: Vec<f32> = rng.normal_vec(1024 * p);
-        r.bench(&format!("nearest_n{n}_p{p}_x1024"), || {
+        // correctness gate: the indexed path must match the scan exactly
+        for c in probes.chunks(p) {
+            assert_eq!(
+                grid.nearest(c),
+                grid.nearest_bruteforce(c),
+                "indexed nearest diverged from scan at n={n} p={p}"
+            );
+        }
+        r.bench_items(&format!("nearest_n{n}_p{p}_x1024"), 1024.0, || {
             let mut acc = 0usize;
             for c in probes.chunks(p) {
                 acc += grid.nearest(c);
             }
             acc
         });
+        r.bench_items(&format!("nearest_bruteforce_n{n}_p{p}_x1024"), 1024.0, || {
+            let mut acc = 0usize;
+            for c in probes.chunks(p) {
+                acc += grid.nearest_bruteforce(c);
+            }
+            acc
+        });
     }
 
-    // HIGGS quantization throughput on a base-sized layer (512x192)
+    // HIGGS quantization throughput on a base-sized layer (512x192):
+    // blocked multithreaded encode vs the serial reference
     {
         let w = Tensor::from_vec(&[512, 192], rng.normal_vec(512 * 192));
         let grid = reg.get(GridKind::Higgs, 256, 2);
         let q = HiggsQuantizer::new(grid, 64, 7);
-        let m = r.bench("higgs_quantize_512x192", || q.quantize("l", &w));
-        eprintln!(
-            "  -> {:.2} Mparam/s",
-            (512.0 * 192.0) / (m.median_ms / 1e3) / 1e6
-        );
+        let fast = q.quantize("l", &w);
+        let slow = q.quantize_reference("l", &w);
+        match (&fast.data, &slow.data) {
+            (
+                QuantData::Lut { codes: ca, scales: sa, .. },
+                QuantData::Lut { codes: cb, scales: sb, .. },
+            ) => {
+                assert_eq!(ca, cb, "blocked encode codes diverged from reference");
+                assert_eq!(sa, sb, "blocked encode scales diverged from reference");
+            }
+            _ => unreachable!(),
+        }
+        let params = 512.0 * 192.0;
+        let m = r.bench_items("higgs_quantize_512x192", params, || q.quantize("l", &w));
+        eprintln!("  -> {:.2} Mparam/s (blocked parallel)", m.throughput(params) / 1e6);
+        let m = r.bench_items("higgs_quantize_serial_512x192", params, || {
+            q.quantize_reference("l", &w)
+        });
+        eprintln!("  -> {:.2} Mparam/s (serial reference)", m.throughput(params) / 1e6);
     }
 
     // bit packing
     {
         let codes: Vec<u32> = (0..98304).map(|_| rng.below(16) as u32).collect();
-        r.bench("pack_98k_4bit", || pack(&codes, 4));
+        r.bench_items("pack_98k_4bit", 98304.0, || pack(&codes, 4));
         let packed = pack(&codes, 4);
-        r.bench("unpack_98k_4bit", || unpack(&packed, codes.len(), 4));
+        r.bench_items("unpack_98k_4bit", 98304.0, || unpack(&packed, codes.len(), 4));
     }
 
     // DP allocation at paper scale: 224 layers × 8 grid choices
@@ -125,6 +164,14 @@ fn main() {
                     .unwrap()
             });
         }
+    }
+
+    // machine-readable perf record (tracked across PRs)
+    let json_path = std::env::var("HIGGS_BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_hotpaths.json".to_string());
+    match r.write_json(std::path::Path::new(&json_path)) {
+        Ok(()) => eprintln!("wrote {json_path} ({} measurements)", r.results.len()),
+        Err(e) => eprintln!("WARNING: could not write {json_path}: {e}"),
     }
     eprintln!("micro_hotpaths done ({} measurements)", r.results.len());
 }

@@ -28,7 +28,7 @@ pub fn af_grid(n: usize) -> Grid {
         }
     }
     let points: Vec<f32> = pts.iter().map(|&x| x as f32).collect();
-    let mut g = Grid { kind: GridKind::Af, n, p: 1, points, mse: 0.0 };
+    let mut g = Grid::new(GridKind::Af, n, 1, points, 0.0);
     g.mse = g.exact_mse_1d();
     g
 }

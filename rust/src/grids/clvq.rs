@@ -5,8 +5,16 @@
 //! centroids (erf-based) — converges to the optimal scalar quantizer.
 //! p > 1: stochastic competitive learning (the CLVQ of the paper) with a
 //! decreasing step, followed by mini-batch Lloyd polish.
+//!
+//! Nearest-neighbor usage is phase-aware: the competitive phase mutates
+//! one point per sample, so it queries the raw [`nearest_scan`]
+//! (an index would go stale every step); each Lloyd polish round runs
+//! against a frozen point set, so it builds a fresh [`GridIndex`] and
+//! assigns all 60k samples through it. Both paths return bit-identical
+//! indices to the scan, so the produced grids are unchanged.
 
-use super::{Grid, GridKind};
+use super::index::GridIndex;
+use super::{nearest_scan, Grid, GridKind};
 use crate::util::prng::Rng;
 use crate::util::stats::{norm_cdf, norm_pdf, norm_ppf};
 
@@ -28,7 +36,7 @@ pub fn clvq_grid(n: usize, p: usize, seed: u64) -> Grid {
         lloyd_1d(n)
     } else {
         let pts = clvq_nd(n, p, seed);
-        Grid { kind: GridKind::Higgs, n, p, points: pts, mse: 0.0 }
+        Grid::new(GridKind::Higgs, n, p, pts, 0.0)
     };
     grid.mse = if p == 1 {
         grid.exact_mse_1d()
@@ -62,13 +70,13 @@ fn lloyd_1d(n: usize) -> Grid {
             break;
         }
     }
-    Grid {
-        kind: GridKind::Higgs,
+    Grid::new(
+        GridKind::Higgs,
         n,
-        p: 1,
-        points: pts.iter().map(|&x| x as f32).collect(),
-        mse: 0.0,
-    }
+        1,
+        pts.iter().map(|&x| x as f32).collect(),
+        0.0,
+    )
 }
 
 /// Stochastic CLVQ + Lloyd polish for p-dimensional grids.
@@ -92,17 +100,14 @@ fn clvq_nd(n: usize, p: usize, seed: u64) -> Vec<f32> {
         rng.normal_vec(n * p).iter().map(|v| v * 0.7).collect()
     };
 
-    // competitive learning phase: c* += γ_t (ξ - c*)
+    // competitive learning phase: c* += γ_t (ξ - c*). The winner is
+    // found by direct scan — the point set moves every iteration.
     let iters = (20_000 * n.max(64)).min(2_000_000);
     let (a, b) = (1.0f64, 200.0f64);
     let mut sample = vec![0.0f32; p];
-    let mut grid_view = Grid { kind: GridKind::Higgs, n, p, points: Vec::new(), mse: 0.0 };
     for t in 0..iters {
         rng.fill_normal(&mut sample);
-        // nearest under current points (inline to avoid cloning)
-        grid_view.points = std::mem::take(&mut pts);
-        let c = grid_view.nearest(&sample);
-        pts = std::mem::take(&mut grid_view.points);
+        let c = nearest_scan(&pts, p, &sample);
         let gamma = (a / (b + t as f64)).min(0.3) as f32;
         for d in 0..p {
             let pc = &mut pts[c * p + d];
@@ -110,7 +115,9 @@ fn clvq_nd(n: usize, p: usize, seed: u64) -> Vec<f32> {
         }
     }
 
-    // Lloyd polish: K rounds of batched assignment/centroid.
+    // Lloyd polish: K rounds of batched assignment/centroid. The point
+    // set is frozen within a round, so assignments run through a fresh
+    // per-round index (bit-identical to the scan, ~10x fewer flops).
     let batch = 60_000usize;
     let mut samples = vec![0.0f32; batch * p];
     for round in 0..8 {
@@ -118,15 +125,14 @@ fn clvq_nd(n: usize, p: usize, seed: u64) -> Vec<f32> {
         r2.fill_normal(&mut samples);
         let mut sums = vec![0.0f64; n * p];
         let mut counts = vec![0usize; n];
-        grid_view.points = std::mem::take(&mut pts);
+        let idx = GridIndex::build(&pts, n, p);
         for s in samples.chunks(p) {
-            let c = grid_view.nearest(s);
+            let c = idx.nearest(&pts, s);
             counts[c] += 1;
             for d in 0..p {
                 sums[c * p + d] += s[d] as f64;
             }
         }
-        pts = std::mem::take(&mut grid_view.points);
         for c in 0..n {
             if counts[c] > 0 {
                 for d in 0..p {

@@ -1,0 +1,313 @@
+//! Indexed nearest-neighbor over a fixed grid — the encode hot path.
+//!
+//! `Grid::nearest` was a brute-force O(n·p) scan; at HIGGS's production
+//! grids (n up to 4096, p = 2) that scan dominates the entire
+//! quantization pipeline. [`GridIndex`] answers the same query exactly
+//! by ranking the grid points along a single projection direction:
+//!
+//! 1. **build**: pick a unit direction `u` (the principal direction of
+//!    the point cloud via power iteration; any direction is correct,
+//!    better directions just prune harder), project every point,
+//!    `t_i = u·c_i`, and sort the points by `t_i`.
+//! 2. **query**: project the probe, `t = u·v`, binary-search its rank,
+//!    then walk outward in both directions, always taking the side with
+//!    the smaller projection gap so candidates are visited in
+//!    nondecreasing `|t_i − t|`.
+//! 3. **prune**: for unit `u`, Cauchy–Schwarz gives the triangle
+//!    inequality `(t_i − t)² ≤ ‖c_i − v‖²`, so once
+//!    `(|t_i − t| − ε)² ≥ best` every remaining candidate loses and the
+//!    walk stops. `ε` is a small slack covering f32 rounding of the two
+//!    dot products, which keeps the invariant exact in floating point.
+//!
+//! The candidate distances themselves are evaluated with the *same*
+//! f32 operation order as the brute-force scan (coordinate-order sum of
+//! squares), and ties are resolved toward the smaller original point
+//! index — so the result is **bit-identical** to
+//! [`nearest_scan`](super::nearest_scan), which the property tests in
+//! `rust/tests/prop_fast_encode.rs` enforce. The classic
+//! `argmin(‖c‖²/2 − v·c)` inner-product trick is deliberately *not*
+//! used for the final comparison: it changes f32 rounding on near-ties
+//! and would break bit-compatibility with the reference scan.
+//!
+//! For Gaussian-MSE grids of N(0, I_p) the point cloud is nearly
+//! isotropic, so the projection discriminates about one coordinate's
+//! worth of distance; in practice a query at n = 4096, p = 2 visits a
+//! few dozen candidates instead of 4096 (see `PERF.md`).
+
+use super::nearest_scan;
+
+/// Sorted-projection nearest-neighbor index over `n` points in R^p.
+#[derive(Clone, Debug)]
+pub struct GridIndex {
+    p: usize,
+    /// unit projection direction, length p
+    dir: Vec<f32>,
+    /// projections of the points onto `dir`, ascending
+    proj: Vec<f32>,
+    /// `order[rank]` = original index of the rank-th point
+    order: Vec<u32>,
+    /// the points re-laid-out in projection order (cache-local scan)
+    pts_sorted: Vec<f32>,
+    /// pruning slack absorbing f32 rounding of the projections
+    margin: f32,
+}
+
+impl GridIndex {
+    /// Build the index for `n` row-major points of dimension `p`.
+    pub fn build(points: &[f32], n: usize, p: usize) -> GridIndex {
+        assert_eq!(points.len(), n * p, "points length mismatch");
+        assert!(n >= 1 && p >= 1);
+        let dir = principal_direction(points, n, p);
+        let mut ranked: Vec<(f32, u32)> = (0..n)
+            .map(|i| {
+                let mut t = 0.0f32;
+                for d in 0..p {
+                    t += dir[d] * points[i * p + d];
+                }
+                (t, i as u32)
+            })
+            .collect();
+        // total order (grid points are finite in practice, but a NaN
+        // point must not panic the build) + index tiebreak for
+        // determinism across platforms.
+        ranked.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        let proj: Vec<f32> = ranked.iter().map(|r| r.0).collect();
+        let order: Vec<u32> = ranked.iter().map(|r| r.1).collect();
+        let mut pts_sorted = Vec::with_capacity(n * p);
+        for &oi in &order {
+            let oi = oi as usize;
+            pts_sorted.extend_from_slice(&points[oi * p..(oi + 1) * p]);
+        }
+        // |fl(u·x) − u·x| ≲ p·ulp·max|coord|; 1e-4·(1+max|c|) per dot
+        // product is orders of magnitude above that, and over-scanning a
+        // hair past the exact bound is cheap.
+        let max_abs = points.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        let margin = 1e-4 * (1.0 + max_abs) * p as f32;
+        GridIndex { p, dir, proj, order, pts_sorted, margin }
+    }
+
+    /// Index of the nearest point (Euclidean) — bit-identical to the
+    /// brute-force [`nearest_scan`] over the original point order.
+    /// `points` is the original row-major point array the index was
+    /// built from (used only by the non-finite fallback path).
+    pub fn nearest(&self, points: &[f32], v: &[f32]) -> usize {
+        debug_assert_eq!(v.len(), self.p);
+        let p = self.p;
+        let mut t = 0.0f32;
+        for d in 0..p {
+            t += self.dir[d] * v[d];
+        }
+        if !t.is_finite() {
+            // NaN/overflow probes: defer to the reference scan so the
+            // (degenerate) answer matches it exactly.
+            return nearest_scan(points, p, v);
+        }
+        let n = self.proj.len();
+        // build-time margin covers the points' dot-product rounding;
+        // the probe's own dot error scales with its coordinate
+        // magnitudes (NOT with |t| — large coordinates can cancel
+        // along `dir` and still carry their full rounding error)
+        let vmax = v.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        let margin = self.margin + 1e-5 * p as f32 * vmax;
+        // first rank with proj >= t; walk down from lo-1 and up from hi
+        let mut hi = self.proj.partition_point(|&x| x < t);
+        let mut lo = hi;
+        let mut best_d = f32::INFINITY;
+        // start at 0 like the reference scan so fully-degenerate inputs
+        // (all distances NaN/inf) resolve to the same answer it gives
+        let mut best = 0usize;
+        loop {
+            let down = lo > 0;
+            let up = hi < n;
+            if !down && !up {
+                break;
+            }
+            // take the side with the smaller projection gap so visits
+            // are in nondecreasing |proj - t| (makes the break exact)
+            let take_down = if down && up {
+                (t - self.proj[lo - 1]) <= (self.proj[hi] - t)
+            } else {
+                down
+            };
+            let rank = if take_down { lo - 1 } else { hi };
+            let gap = (self.proj[rank] - t).abs();
+            if gap > margin {
+                let g = gap - margin;
+                if g * g >= best_d {
+                    break; // every remaining candidate is farther
+                }
+            }
+            // exact distance, same op order as the reference scan
+            let base = rank * p;
+            let mut d = 0.0f32;
+            for dd in 0..p {
+                let e = v[dd] - self.pts_sorted[base + dd];
+                d += e * e;
+            }
+            let oi = self.order[rank] as usize;
+            if d < best_d || (d == best_d && oi < best) {
+                best_d = d;
+                best = oi;
+            }
+            if take_down {
+                lo -= 1;
+            } else {
+                hi += 1;
+            }
+        }
+        best
+    }
+
+    /// Number of indexed points.
+    pub fn len(&self) -> usize {
+        self.proj.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.proj.is_empty()
+    }
+}
+
+/// Principal direction of the (centered) point cloud via power
+/// iteration on the p×p covariance — deterministic, O(n·p²). Falls back
+/// to e₀ for degenerate clouds (n = 1, all points equal, ...). Any unit
+/// vector keeps the index exact; this one just maximizes pruning power.
+fn principal_direction(points: &[f32], n: usize, p: usize) -> Vec<f32> {
+    if p == 1 {
+        return vec![1.0];
+    }
+    let mut mean = vec![0.0f64; p];
+    for i in 0..n {
+        for d in 0..p {
+            mean[d] += points[i * p + d] as f64;
+        }
+    }
+    for m in mean.iter_mut() {
+        *m /= n as f64;
+    }
+    // covariance (upper-filled symmetric)
+    let mut cov = vec![0.0f64; p * p];
+    for i in 0..n {
+        for a in 0..p {
+            let xa = points[i * p + a] as f64 - mean[a];
+            for b in 0..p {
+                cov[a * p + b] += xa * (points[i * p + b] as f64 - mean[b]);
+            }
+        }
+    }
+    let trace: f64 = (0..p).map(|a| cov[a * p + a]).sum();
+    if !(trace > 1e-18) || !trace.is_finite() {
+        let mut e0 = vec![0.0f32; p];
+        e0[0] = 1.0;
+        return e0;
+    }
+    // deterministic start with energy in every coordinate
+    let mut v: Vec<f64> = (0..p).map(|d| 1.0 + 0.1 * d as f64).collect();
+    let mut buf = vec![0.0f64; p];
+    for _ in 0..48 {
+        for a in 0..p {
+            let mut s = 0.0f64;
+            for b in 0..p {
+                s += cov[a * p + b] * v[b];
+            }
+            buf[a] = s;
+        }
+        let norm = buf.iter().map(|x| x * x).sum::<f64>().sqrt();
+        if norm <= 1e-300 {
+            break;
+        }
+        for a in 0..p {
+            v[a] = buf[a] / norm;
+        }
+    }
+    let norm = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+    if !(norm > 1e-12) {
+        let mut e0 = vec![0.0f32; p];
+        e0[0] = 1.0;
+        return e0;
+    }
+    v.iter().map(|&x| (x / norm) as f32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::forall;
+    use crate::util::prng::Rng;
+
+    fn random_points(n: usize, p: usize, seed: u64) -> Vec<f32> {
+        Rng::new(seed).normal_vec(n * p)
+    }
+
+    #[test]
+    fn matches_scan_on_random_clouds() {
+        forall("index == scan", 60, |g| {
+            let n = g.usize_in(1, 300);
+            let p = g.usize_in(1, 4);
+            let pts = g.vec_normal(n * p);
+            let idx = GridIndex::build(&pts, n, p);
+            for _ in 0..20 {
+                let v = g.vec_normal(p);
+                assert_eq!(
+                    idx.nearest(&pts, &v),
+                    nearest_scan(&pts, p, &v),
+                    "n={n} p={p} v={v:?}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn exact_on_grid_points_themselves() {
+        let pts = random_points(128, 2, 3);
+        let idx = GridIndex::build(&pts, 128, 2);
+        for i in 0..128 {
+            let v = &pts[i * 2..i * 2 + 2];
+            assert_eq!(idx.nearest(&pts, v), nearest_scan(&pts, 2, v));
+        }
+    }
+
+    #[test]
+    fn tie_breaks_toward_lower_index() {
+        // two identical points: both scan and index must return index 0
+        let pts = vec![0.5f32, 0.5, 0.5, 0.5, -1.0, -1.0];
+        let idx = GridIndex::build(&pts, 3, 2);
+        assert_eq!(nearest_scan(&pts, 2, &[0.4, 0.4]), 0);
+        assert_eq!(idx.nearest(&pts, &[0.4, 0.4]), 0);
+    }
+
+    #[test]
+    fn nan_probe_matches_scan() {
+        let pts = random_points(16, 2, 5);
+        let idx = GridIndex::build(&pts, 16, 2);
+        let v = [f32::NAN, 0.0];
+        assert_eq!(idx.nearest(&pts, &v), nearest_scan(&pts, 2, &v));
+        let v = [f32::INFINITY, 0.0];
+        assert_eq!(idx.nearest(&pts, &v), nearest_scan(&pts, 2, &v));
+    }
+
+    #[test]
+    fn single_point_cloud() {
+        let pts = vec![0.25f32, -0.75];
+        let idx = GridIndex::build(&pts, 1, 2);
+        assert_eq!(idx.nearest(&pts, &[9.0, 9.0]), 0);
+        assert_eq!(idx.len(), 1);
+        assert!(!idx.is_empty());
+    }
+
+    #[test]
+    fn degenerate_identical_points() {
+        let pts = vec![1.0f32; 8 * 2]; // zero covariance
+        let idx = GridIndex::build(&pts, 8, 2);
+        assert_eq!(idx.nearest(&pts, &[0.0, 0.0]), 0);
+    }
+
+    #[test]
+    fn scalar_dimension_supported() {
+        let pts = vec![-1.5f32, -0.5, 0.5, 1.5];
+        let idx = GridIndex::build(&pts, 4, 1);
+        for (v, want) in [(-2.0f32, 0usize), (-0.4, 1), (0.51, 2), (9.0, 3)] {
+            assert_eq!(idx.nearest(&pts, &[v]), want);
+        }
+    }
+}

@@ -15,14 +15,23 @@
 //! All grids are computed once and cached in [`registry::GridRegistry`];
 //! expected per-dimension MSE on N(0, I_p) — the `t²(G)` of Appendix F —
 //! is attached to each grid.
+//!
+//! Nearest-neighbor queries go through the lazily-built projection
+//! [`index::GridIndex`] for p > 1 (binary search for p = 1); both paths
+//! are bit-identical to the brute-force [`nearest_scan`] reference,
+//! which is kept as the oracle for property tests and for callers whose
+//! point set is still mutating (CLVQ competitive learning).
 
 pub mod af;
 pub mod clvq;
+pub mod index;
 pub mod nf;
 pub mod registry;
 pub mod uniform;
 
+use self::index::GridIndex;
 use crate::util::prng::Rng;
+use std::sync::OnceLock;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum GridKind {
@@ -47,7 +56,41 @@ impl GridKind {
     }
 }
 
+/// Reference brute-force nearest point: first index (original order)
+/// with strictly smallest squared Euclidean distance. This is THE
+/// semantic contract for every accelerated path — `GridIndex` and
+/// `Grid::nearest_1d` must agree with it bit-for-bit on finite probes.
+pub fn nearest_scan(points: &[f32], p: usize, v: &[f32]) -> usize {
+    debug_assert_eq!(v.len(), p);
+    let n = points.len() / p;
+    let mut best = 0usize;
+    let mut best_d = f32::INFINITY;
+    for i in 0..n {
+        let pt = &points[i * p..(i + 1) * p];
+        let mut d = 0.0f32;
+        for (a, b) in v.iter().zip(pt) {
+            let e = a - b;
+            d += e * e;
+            if d >= best_d {
+                break;
+            }
+        }
+        if d < best_d {
+            best_d = d;
+            best = i;
+        }
+    }
+    best
+}
+
 /// A quantization grid: `n` points in R^p (row-major `points[n*p]`).
+///
+/// Construct with [`Grid::new`]; the nearest-neighbor index is built
+/// lazily on the first `nearest` query and cached. The `points` field
+/// is public for read access — code that mutates a point set during
+/// training works on raw slices + [`nearest_scan`]/[`GridIndex`]
+/// directly (see [`clvq`]) so a stale cached index can never be
+/// observed.
 #[derive(Clone, Debug)]
 pub struct Grid {
     pub kind: GridKind,
@@ -57,9 +100,16 @@ pub struct Grid {
     /// Expected per-dimension MSE of rounding N(0, I_p) to this grid —
     /// the grid constant `t²(G)` of Appendix F.
     pub mse: f64,
+    /// Lazily-built projection index (see module docs).
+    index: OnceLock<GridIndex>,
 }
 
 impl Grid {
+    pub fn new(kind: GridKind, n: usize, p: usize, points: Vec<f32>, mse: f64) -> Grid {
+        assert_eq!(points.len(), n * p, "grid points length mismatch");
+        Grid { kind, n, p, points, mse, index: OnceLock::new() }
+    }
+
     pub fn point(&self, i: usize) -> &[f32] {
         &self.points[i * self.p..(i + 1) * self.p]
     }
@@ -69,47 +119,60 @@ impl Grid {
         (self.n as f64).log2() / self.p as f64
     }
 
-    /// Index of the nearest grid point (Euclidean).
+    /// The grid's nearest-neighbor index, building it on first use.
+    pub fn index(&self) -> &GridIndex {
+        self.index.get_or_init(|| GridIndex::build(&self.points, self.n, self.p))
+    }
+
+    /// Index of the nearest grid point (Euclidean). Accelerated
+    /// (binary search for p = 1, projection index for p > 1) but
+    /// bit-identical to [`Grid::nearest_bruteforce`] — non-finite
+    /// probes are routed through the scan itself so even degenerate
+    /// inputs agree with the oracle.
     pub fn nearest(&self, v: &[f32]) -> usize {
         debug_assert_eq!(v.len(), self.p);
         if self.p == 1 {
+            if !v[0].is_finite() {
+                return nearest_scan(&self.points, 1, v);
+            }
             return self.nearest_1d(v[0]);
         }
-        let mut best = 0usize;
-        let mut best_d = f32::INFINITY;
-        for i in 0..self.n {
-            let pt = self.point(i);
-            let mut d = 0.0f32;
-            for (a, b) in v.iter().zip(pt) {
-                let e = a - b;
-                d += e * e;
-                if d >= best_d {
-                    break;
-                }
-            }
-            if d < best_d {
-                best_d = d;
-                best = i;
-            }
-        }
-        best
+        self.index().nearest(&self.points, v)
     }
 
-    /// Binary search for 1-D grids (points sorted ascending).
+    /// The original O(n·p) linear scan — kept as the reference oracle
+    /// for property tests and micro-benchmarks.
+    pub fn nearest_bruteforce(&self, v: &[f32]) -> usize {
+        debug_assert_eq!(v.len(), self.p);
+        nearest_scan(&self.points, self.p, v)
+    }
+
+    /// Binary search for 1-D grids (points sorted ascending). Total
+    /// order comparison: NaN/degenerate inputs clamp to the end cells
+    /// instead of panicking. (Direct callers get that clamping;
+    /// [`Grid::nearest`] routes non-finite probes through
+    /// [`nearest_scan`] instead, to stay bit-identical to the oracle.)
     pub fn nearest_1d(&self, x: f32) -> usize {
         debug_assert_eq!(self.p, 1);
         let pts = &self.points;
-        match pts.binary_search_by(|a| a.partial_cmp(&x).unwrap()) {
+        match pts.binary_search_by(|a| a.total_cmp(&x)) {
             Ok(i) => i,
             Err(i) => {
                 if i == 0 {
                     0
                 } else if i >= pts.len() {
                     pts.len() - 1
-                } else if (x - pts[i - 1]).abs() <= (pts[i] - x).abs() {
-                    i - 1
                 } else {
-                    i
+                    // compare SQUARED f32 distances in the scan's op
+                    // order, so underflow ties resolve like the oracle
+                    // (tie → lower index)
+                    let dl = x - pts[i - 1];
+                    let dr = x - pts[i];
+                    if dl * dl <= dr * dr {
+                        i - 1
+                    } else {
+                        i
+                    }
                 }
             }
         }
@@ -169,13 +232,7 @@ mod tests {
     use super::*;
 
     fn toy_grid() -> Grid {
-        Grid {
-            kind: GridKind::Uniform,
-            n: 4,
-            p: 1,
-            points: vec![-1.5, -0.5, 0.5, 1.5],
-            mse: 0.0,
-        }
+        Grid::new(GridKind::Uniform, 4, 1, vec![-1.5, -0.5, 0.5, 1.5], 0.0)
     }
 
     #[test]
@@ -190,17 +247,42 @@ mod tests {
     }
 
     #[test]
+    fn nearest_1d_degenerate_inputs_no_panic() {
+        let g = toy_grid();
+        // NaN sorts after +inf under total order → clamps to last cell
+        assert_eq!(g.nearest_1d(f32::NAN), 3);
+        assert_eq!(g.nearest_1d(f32::INFINITY), 3);
+        assert_eq!(g.nearest_1d(f32::NEG_INFINITY), 0);
+        assert_eq!(g.nearest_1d(-0.0), 1);
+        // Grid::nearest must agree with the scan oracle even on
+        // non-finite probes (it falls back to the scan for them)
+        for x in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+            assert_eq!(g.nearest(&[x]), g.nearest_bruteforce(&[x]));
+        }
+    }
+
+    #[test]
     fn nearest_2d_basic() {
-        let g = Grid {
-            kind: GridKind::Higgs,
-            n: 3,
-            p: 2,
-            points: vec![0.0, 0.0, 1.0, 1.0, -1.0, 1.0],
-            mse: 0.0,
-        };
+        let g = Grid::new(
+            GridKind::Higgs,
+            3,
+            2,
+            vec![0.0, 0.0, 1.0, 1.0, -1.0, 1.0],
+            0.0,
+        );
         assert_eq!(g.nearest(&[0.1, -0.1]), 0);
         assert_eq!(g.nearest(&[0.9, 1.2]), 1);
         assert_eq!(g.nearest(&[-0.8, 0.9]), 2);
+    }
+
+    #[test]
+    fn indexed_nearest_matches_bruteforce() {
+        let mut rng = crate::util::prng::Rng::new(11);
+        let g = Grid::new(GridKind::Higgs, 200, 2, rng.normal_vec(400), 0.0);
+        for _ in 0..500 {
+            let v = rng.normal_vec(2);
+            assert_eq!(g.nearest(&v), g.nearest_bruteforce(&v));
+        }
     }
 
     #[test]
@@ -220,7 +302,7 @@ mod tests {
 
     #[test]
     fn bits_per_dim() {
-        let g = Grid { kind: GridKind::Higgs, n: 256, p: 2, points: vec![0.0; 512], mse: 0.0 };
+        let g = Grid::new(GridKind::Higgs, 256, 2, vec![0.0; 512], 0.0);
         assert!((g.bits_per_dim() - 4.0).abs() < 1e-12);
     }
 }

@@ -15,7 +15,7 @@ pub fn nf_grid(n: usize) -> Grid {
     assert!(n >= 2);
     let points: Vec<f32> =
         (0..n).map(|i| norm_ppf((i as f64 + 0.5) / n as f64) as f32).collect();
-    let mut g = Grid { kind: GridKind::Nf, n, p: 1, points, mse: 0.0 };
+    let mut g = Grid::new(GridKind::Nf, n, 1, points, 0.0);
     g.mse = g.exact_mse_1d();
     g
 }
@@ -45,7 +45,7 @@ pub fn nf_grid_zero(n: usize) -> Grid {
         let last = *points.last().unwrap();
         points.push(last + 1e-3);
     }
-    let mut g = Grid { kind: GridKind::Nf, n, p: 1, points, mse: 0.0 };
+    let mut g = Grid::new(GridKind::Nf, n, 1, points, 0.0);
     g.mse = g.exact_mse_1d();
     g
 }

@@ -92,7 +92,7 @@ fn parse_grid(r: impl BufRead, kind: GridKind, n: usize, p: usize) -> Result<Gri
         }
     }
     anyhow::ensure!(points.len() == n * p, "grid file has {} values, want {}", points.len(), n * p);
-    Ok(Grid { kind, n, p, points, mse })
+    Ok(Grid::new(kind, n, p, points, mse))
 }
 
 fn build(kind: GridKind, n: usize, p: usize) -> Grid {

@@ -42,7 +42,7 @@ pub fn uniform_optimal_grid(n: usize) -> Grid {
     let s = (a + b) / 2.0;
     let points = symmetric_uniform_points(n, s);
     let mse = gaussian_mse_of_1d(&points);
-    Grid { kind: GridKind::Uniform, n, p: 1, points, mse }
+    Grid::new(GridKind::Uniform, n, 1, points, mse)
 }
 
 /// Min-max RTN scale/zero for a weight group (Eqn. 1 of the paper):

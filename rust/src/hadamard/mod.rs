@@ -64,6 +64,21 @@ pub fn rht_inverse(x: &mut [f32], signs: &[f32], g: usize) {
     }
 }
 
+/// Batched grouped RHT over a column-major block: `block` holds `cols`
+/// contiguous columns of length `k` (layout `block[c*k + i]`), each of
+/// which is transformed in place in groups of `g` along its length —
+/// identical arithmetic to calling [`rht_forward`] per column. This is
+/// the blocked HIGGS encoder's transform: the caller gathers a block of
+/// weight columns once (turning the strided column walk into contiguous
+/// streams) and runs the whole block through the RHT before encoding.
+pub fn rht_block_forward(block: &mut [f32], cols: usize, k: usize, signs: &[f32], g: usize) {
+    assert_eq!(block.len(), cols * k);
+    assert_eq!(signs.len(), k);
+    for col in block.chunks_mut(k) {
+        rht_forward(col, signs, g);
+    }
+}
+
 /// Apply the orthonormal grouped RHT along the *rows* (input dim) of a
 /// row-major [K, N] matrix: every column is transformed independently in
 /// groups of g along K. This is the weight-space transform of App. G
@@ -195,6 +210,30 @@ mod tests {
         for (a, b) in wt.iter().zip(&w) {
             assert!((a - b).abs() < 1e-4);
         }
+    }
+
+    #[test]
+    fn block_transform_matches_per_column() {
+        forall("rht block == per-column", 20, |gn| {
+            let g = gn.pow2_in(2, 6);
+            let groups = gn.usize_in(1, 3);
+            let k = g * groups;
+            let cols = gn.usize_in(1, 5);
+            let signs = gn.rng().sign_vec(k);
+            let mut block = gn.vec_normal(cols * k);
+            let reference: Vec<Vec<f32>> = block
+                .chunks(k)
+                .map(|col| {
+                    let mut c = col.to_vec();
+                    rht_forward(&mut c, &signs, g);
+                    c
+                })
+                .collect();
+            rht_block_forward(&mut block, cols, k, &signs, g);
+            for (c, want) in block.chunks(k).zip(&reference) {
+                assert_eq!(c, want.as_slice());
+            }
+        });
     }
 
     #[test]

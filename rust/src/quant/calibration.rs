@@ -43,6 +43,8 @@ pub fn collect_hessians(
             weights,
         )?;
         let outs = engine.run(&exe, &args)?;
+        // parse tap names serially (cheap, fallible) ...
+        let mut taps: Vec<(usize, String, Tensor)> = Vec::with_capacity(outs.len());
         for out in outs {
             // name: acts.l{i}.<tap>
             let rest = out
@@ -53,13 +55,26 @@ pub fn collect_hessians(
             let block: usize = block.parse()?;
             let k = *out.dims.last().unwrap();
             let rows = out.data.len() / k;
-            let x = Tensor::from_vec(&[rows, k], out.data);
-            let h = hessian_from_activations(&x);
-            for layer in tap_targets(block, tap) {
-                hessians
-                    .entry(layer)
-                    .and_modify(|acc| acc.add_assign(&h))
-                    .or_insert_with(|| h.clone());
+            taps.push((block, tap.to_string(), Tensor::from_vec(&[rows, k], out.data)));
+        }
+        // ... then compute the per-tap Hessians (dominated by the XᵀX
+        // matmul) in parallel. Work proceeds in bounded chunks — one
+        // worker's worth at a time — so peak memory holds O(threads)
+        // extra k×k Hessians rather than one per tap; each chunk is
+        // merged serially in tap order, keeping the f32 accumulation
+        // deterministic.
+        let chunk = crate::util::pool::num_threads().max(1);
+        for tap_chunk in taps.chunks(chunk) {
+            let hs: Vec<Tensor> = crate::util::pool::par_map(tap_chunk.len(), |i| {
+                hessian_from_activations(&tap_chunk[i].2)
+            });
+            for ((block, tap, _), h) in tap_chunk.iter().zip(hs) {
+                for layer in tap_targets(*block, tap) {
+                    hessians
+                        .entry(layer)
+                        .and_modify(|acc| acc.add_assign(&h))
+                        .or_insert_with(|| h.clone());
+                }
             }
         }
     }

@@ -346,13 +346,7 @@ mod tests {
 
     #[test]
     fn dequantize_lut_unrotated() {
-        let grid = Arc::new(Grid {
-            kind: GridKind::Nf,
-            n: 2,
-            p: 1,
-            points: vec![-1.0, 1.0],
-            mse: 0.0,
-        });
+        let grid = Arc::new(Grid::new(GridKind::Nf, 2, 1, vec![-1.0, 1.0], 0.0));
         let ql = QuantizedLayer {
             name: "t".into(),
             method: "test".into(),
@@ -393,13 +387,7 @@ mod tests {
 
     #[test]
     fn packed_bytes_sane() {
-        let grid = Arc::new(Grid {
-            kind: GridKind::Higgs,
-            n: 256,
-            p: 2,
-            points: vec![0.0; 512],
-            mse: 0.0,
-        });
+        let grid = Arc::new(Grid::new(GridKind::Higgs, 256, 2, vec![0.0; 512], 0.0));
         let ql = QuantizedLayer {
             name: "t".into(),
             method: "higgs".into(),

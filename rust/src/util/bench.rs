@@ -3,7 +3,9 @@
 //! Each `rust/benches/*.rs` is a `harness = false` binary that uses
 //! `BenchRunner` for timed sections and the `report` module for the
 //! paper-style tables. Measurements do warmup + multiple samples and
-//! report median / p10 / p90.
+//! report median / p10 / p90. [`BenchRunner::write_json`] emits the
+//! results as machine-readable JSON (op, ns/iter, throughput) so the
+//! perf trajectory can be tracked across PRs (see `PERF.md`).
 
 use std::time::Instant;
 
@@ -14,11 +16,18 @@ pub struct Measurement {
     pub p10_ms: f64,
     pub p90_ms: f64,
     pub samples: usize,
+    /// logical items processed per iteration (for throughput), if known
+    pub items: Option<f64>,
 }
 
 impl Measurement {
     pub fn throughput(&self, items: f64) -> f64 {
         items / (self.median_ms / 1e3)
+    }
+
+    /// median nanoseconds per iteration
+    pub fn ns_per_iter(&self) -> f64 {
+        self.median_ms * 1e6
     }
 }
 
@@ -37,15 +46,31 @@ impl Default for BenchRunner {
 impl BenchRunner {
     pub fn new() -> Self {
         let quick = std::env::var("HIGGS_BENCH_QUICK").is_ok();
-        BenchRunner {
-            warmup: if quick { 1 } else { 3 },
-            samples: if quick { 3 } else { 10 },
-            results: Vec::new(),
+        if quick {
+            Self::with_counts(1, 3)
+        } else {
+            Self::with_counts(3, 10)
         }
     }
 
+    /// Explicit warmup/sample counts (tests use this instead of
+    /// mutating `HIGGS_BENCH_QUICK` in the process environment).
+    pub fn with_counts(warmup: usize, samples: usize) -> Self {
+        BenchRunner { warmup, samples: samples.max(1), results: Vec::new() }
+    }
+
     /// Time `f` (warmup + samples); returns the measurement and records it.
-    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> Measurement {
+    pub fn bench<T>(&mut self, name: &str, f: impl FnMut() -> T) -> Measurement {
+        self.run(name, None, f)
+    }
+
+    /// Like [`BenchRunner::bench`], recording how many logical items one
+    /// iteration processes so the JSON report can derive throughput.
+    pub fn bench_items<T>(&mut self, name: &str, items: f64, f: impl FnMut() -> T) -> Measurement {
+        self.run(name, Some(items), f)
+    }
+
+    fn run<T>(&mut self, name: &str, items: Option<f64>, mut f: impl FnMut() -> T) -> Measurement {
         for _ in 0..self.warmup {
             std::hint::black_box(f());
         }
@@ -62,6 +87,7 @@ impl BenchRunner {
             p10_ms: times[times.len() / 10],
             p90_ms: times[times.len() * 9 / 10],
             samples: times.len(),
+            items,
         };
         eprintln!(
             "  bench {:<42} median {:>9.3} ms  (p10 {:.3}, p90 {:.3}, n={})",
@@ -74,6 +100,64 @@ impl BenchRunner {
     pub fn get(&self, name: &str) -> Option<&Measurement> {
         self.results.iter().find(|m| m.name == name)
     }
+
+    /// Serialize every recorded measurement as JSON:
+    /// `{"benches": [{"op", "median_ms", "ns_per_iter", "p10_ms",
+    /// "p90_ms", "samples", "items_per_iter"?, "throughput_per_sec"?}]}`.
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\n  \"benches\": [\n");
+        for (i, m) in self.results.iter().enumerate() {
+            out += &format!(
+                "    {{\"op\": \"{}\", \"median_ms\": {}, \"ns_per_iter\": {}, \
+                 \"p10_ms\": {}, \"p90_ms\": {}, \"samples\": {}",
+                json_escape(&m.name),
+                fmt_f64(m.median_ms),
+                fmt_f64(m.ns_per_iter()),
+                fmt_f64(m.p10_ms),
+                fmt_f64(m.p90_ms),
+                m.samples
+            );
+            if let Some(items) = m.items {
+                out += &format!(
+                    ", \"items_per_iter\": {}, \"throughput_per_sec\": {}",
+                    fmt_f64(items),
+                    fmt_f64(m.throughput(items))
+                );
+            }
+            out += "}";
+            if i + 1 < self.results.len() {
+                out += ",";
+            }
+            out += "\n";
+        }
+        out += "  ]\n}\n";
+        out
+    }
+
+    /// Write [`BenchRunner::to_json`] to `path`.
+    pub fn write_json(&self, path: &std::path::Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json())
+    }
+}
+
+fn fmt_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.6}")
+    } else {
+        "null".to_string()
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    s.chars()
+        .flat_map(|c| match c {
+            '"' => "\\\"".chars().collect::<Vec<_>>(),
+            '\\' => "\\\\".chars().collect(),
+            '\n' => "\\n".chars().collect(),
+            c if (c as u32) < 0x20 => format!("\\u{:04x}", c as u32).chars().collect(),
+            c => vec![c],
+        })
+        .collect()
 }
 
 /// `cargo bench` passes `--bench`; user filters come after `--`.
@@ -88,8 +172,7 @@ mod tests {
 
     #[test]
     fn bench_records() {
-        std::env::set_var("HIGGS_BENCH_QUICK", "1");
-        let mut r = BenchRunner::new();
+        let mut r = BenchRunner::with_counts(1, 3);
         let m = r.bench("noop", || 1 + 1);
         assert!(m.median_ms >= 0.0);
         assert!(r.get("noop").is_some());
@@ -103,7 +186,23 @@ mod tests {
             p10_ms: 90.0,
             p90_ms: 110.0,
             samples: 5,
+            items: Some(50.0),
         };
         assert!((m.throughput(50.0) - 500.0).abs() < 1e-9);
+        assert!((m.ns_per_iter() - 1e8).abs() < 1e-3);
+    }
+
+    #[test]
+    fn json_shape() {
+        let mut r = BenchRunner::with_counts(1, 3);
+        r.bench_items("op_a", 1024.0, || 0);
+        r.bench("op\"b", || 0);
+        let j = r.to_json();
+        assert!(j.contains("\"op\": \"op_a\""));
+        assert!(j.contains("\"throughput_per_sec\""));
+        assert!(j.contains("op\\\"b"));
+        // crude balance check in lieu of a JSON parser
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+        assert!(j.trim_end().ends_with('}'));
     }
 }

@@ -1,10 +1,21 @@
-//! Minimal scoped thread pool (no rayon in the offline crate set).
+//! Minimal scoped thread pool on `std::thread::scope` (no rayon or
+//! crossbeam in the offline crate set).
 //!
-//! `scope_chunks` parallelizes an index range across worker threads via
-//! `crossbeam_utils::thread::scope`; used by the quantizers (per-layer
-//! fan-out) and the CLVQ trainer.
+//! `par_for` distributes an index range over worker threads with
+//! dynamic (atomic-counter) scheduling — work items of uneven cost
+//! (layer quantization, encode blocks) balance automatically. Used by
+//! the quantizers (per-layer and per-block fan-out) and the CLVQ
+//! trainer.
 
-use crossbeam_utils::thread;
+use std::cell::Cell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+thread_local! {
+    /// Set inside pool workers: a nested `par_for` (e.g. the blocked
+    /// encoder called from the per-layer fan-out) runs inline instead
+    /// of spawning workers², which would oversubscribe the machine.
+    static IN_POOL: Cell<bool> = const { Cell::new(false) };
+}
 
 /// Number of worker threads to use (env `HIGGS_THREADS` overrides).
 pub fn num_threads() -> usize {
@@ -16,34 +27,34 @@ pub fn num_threads() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
 }
 
-/// Run `f(i)` for every i in 0..n, distributing contiguous chunks over
-/// worker threads. `f` must be Sync; results are written via interior
-/// state owned by the caller (e.g. per-index output slots).
+/// Run `f(i)` for every i in 0..n across worker threads. Indices are
+/// handed out dynamically, one at a time, so long items don't stall a
+/// whole static chunk. `f` must be Sync; results are written via
+/// interior state owned by the caller (e.g. per-index output slots or a
+/// [`SharedSlice`]).
 pub fn par_for(n: usize, f: impl Fn(usize) + Sync) {
     let workers = num_threads().min(n.max(1));
-    if workers <= 1 || n <= 1 {
+    if workers <= 1 || n <= 1 || IN_POOL.with(|c| c.get()) {
         for i in 0..n {
             f(i);
         }
         return;
     }
-    let chunk = n.div_ceil(workers);
-    thread::scope(|s| {
-        for w in 0..workers {
-            let lo = w * chunk;
-            let hi = ((w + 1) * chunk).min(n);
-            if lo >= hi {
-                continue;
-            }
-            let f = &f;
-            s.spawn(move |_| {
-                for i in lo..hi {
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| {
+                IN_POOL.with(|c| c.set(true));
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
                     f(i);
                 }
             });
         }
-    })
-    .expect("worker thread panicked");
+    });
 }
 
 /// Map 0..n in parallel, collecting results in order.
@@ -58,6 +69,47 @@ pub fn par_map<T: Send>(n: usize, f: impl Fn(usize) -> T + Sync) -> Vec<T> {
         });
     }
     out.into_iter().map(|o| o.unwrap()).collect()
+}
+
+/// A shared mutable view of a slice for parallel writers whose index
+/// sets are provably disjoint (each index written by at most one
+/// thread, no concurrent reads of written cells until the parallel
+/// region ends). The blocked HIGGS encoder uses this to scatter codes
+/// and scales into strided per-column positions from `par_for` workers.
+pub struct SharedSlice<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _marker: std::marker::PhantomData<&'a mut [T]>,
+}
+
+// SAFETY: access contract is delegated to `write`'s caller; the raw
+// pointer itself is freely sendable between the scoped threads that
+// outlive it.
+unsafe impl<T: Send> Send for SharedSlice<'_, T> {}
+unsafe impl<T: Send> Sync for SharedSlice<'_, T> {}
+
+impl<'a, T> SharedSlice<'a, T> {
+    pub fn new(slice: &'a mut [T]) -> Self {
+        SharedSlice { ptr: slice.as_mut_ptr(), len: slice.len(), _marker: std::marker::PhantomData }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Write one element.
+    ///
+    /// # Safety
+    /// `i < len`, and no other thread writes index `i` during the same
+    /// parallel region.
+    pub unsafe fn write(&self, i: usize, v: T) {
+        debug_assert!(i < self.len);
+        *self.ptr.add(i) = v;
+    }
 }
 
 #[cfg(test)]
@@ -75,6 +127,16 @@ mod tests {
     }
 
     #[test]
+    fn par_for_each_index_exactly_once() {
+        let mut seen = vec![0u32; 500];
+        let shared = SharedSlice::new(&mut seen);
+        par_for(500, |i| unsafe { shared.write(i, i as u32 + 1) });
+        for (i, &v) in seen.iter().enumerate() {
+            assert_eq!(v, i as u32 + 1);
+        }
+    }
+
+    #[test]
     fn par_map_ordered() {
         let v = par_map(100, |i| i * i);
         assert_eq!(v[7], 49);
@@ -87,5 +149,21 @@ mod tests {
         assert!(v.is_empty());
         let v = par_map(1, |i| i + 1);
         assert_eq!(v, vec![1]);
+    }
+
+    #[test]
+    fn nested_par_for_runs_inline() {
+        // a par_for inside a pool worker must not spawn workers² —
+        // it runs inline on the worker thread and still covers all
+        // indices (this is the per-layer ∘ per-block nesting)
+        let hits = AtomicUsize::new(0);
+        par_for(8, |_| {
+            par_for(32, |_| {
+                hits.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 8 * 32);
+        // num_threads never panics and is at least 1
+        assert!(num_threads() >= 1);
     }
 }

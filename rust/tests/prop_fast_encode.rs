@@ -1,0 +1,155 @@
+//! Property tests for the fast encode path (via `util/propcheck`):
+//!
+//! 1. the indexed `Grid::nearest` is bit-identical to the brute-force
+//!    scan on random N(0,1) probes, for every grid kind in the registry
+//!    (CLVQ p ∈ {1,2}, NF, AF, constrained-uniform);
+//! 2. the blocked multithreaded `HiggsQuantizer::quantize` produces
+//!    bit-for-bit the same codes/scales/signs as the serial reference,
+//!    across random shapes, block sizes, and thread counts.
+//!
+//! These two equivalences are what let the perf work (grid index +
+//! blocked parallel encode) claim "same format, just faster".
+
+use higgs::grids::registry::GridRegistry;
+use higgs::grids::{nearest_scan, Grid, GridKind};
+use higgs::quant::higgs::HiggsQuantizer;
+use higgs::quant::{QuantData, Quantizer};
+use higgs::tensor::Tensor;
+use higgs::util::propcheck::forall;
+use std::sync::{Arc, OnceLock};
+
+/// One registry per test binary — CLVQ grids are expensive to train.
+fn registry() -> &'static GridRegistry {
+    static REG: OnceLock<GridRegistry> = OnceLock::new();
+    REG.get_or_init(GridRegistry::new)
+}
+
+/// The grid zoo the encode equivalence is checked against. Sizes are
+/// chosen so the whole suite trains in seconds (CLVQ cost is dominated
+/// by the stochastic phase, which scales with n).
+fn grid_zoo() -> Vec<Arc<Grid>> {
+    let reg = registry();
+    vec![
+        reg.get(GridKind::Higgs, 16, 1),
+        reg.get(GridKind::Higgs, 16, 2),
+        reg.get(GridKind::Higgs, 64, 2),
+        reg.get(GridKind::Nf, 16, 1),
+        reg.get(GridKind::Af, 16, 1),
+        reg.get(GridKind::Uniform, 256, 1),
+    ]
+}
+
+#[test]
+fn indexed_nearest_equals_bruteforce_scan_on_all_registry_grids() {
+    for grid in grid_zoo() {
+        forall(
+            &format!("nearest == scan [{} n={} p={}]", grid.kind.label(), grid.n, grid.p),
+            40,
+            |g| {
+                for _ in 0..25 {
+                    let v = g.vec_normal(grid.p);
+                    let fast = grid.nearest(&v);
+                    let slow = grid.nearest_bruteforce(&v);
+                    assert_eq!(
+                        fast, slow,
+                        "grid {} n={} p={} probe {v:?}",
+                        grid.kind.label(),
+                        grid.n,
+                        grid.p
+                    );
+                }
+            },
+        );
+    }
+}
+
+#[test]
+fn indexed_nearest_handles_extreme_probes() {
+    // far tails and exact grid points — the binary-search boundaries
+    for grid in grid_zoo() {
+        for i in 0..grid.n {
+            let pt = grid.point(i).to_vec();
+            assert_eq!(grid.nearest(&pt), grid.nearest_bruteforce(&pt));
+        }
+        let far: Vec<f32> = (0..grid.p).map(|d| if d % 2 == 0 { 40.0 } else { -40.0 }).collect();
+        assert_eq!(grid.nearest(&far), grid.nearest_bruteforce(&far));
+        let zero = vec![0.0f32; grid.p];
+        assert_eq!(grid.nearest(&zero), grid.nearest_bruteforce(&zero));
+    }
+}
+
+#[test]
+fn free_standing_scan_agrees_with_grid_scan() {
+    // nearest_scan is the public oracle — it must agree with the
+    // method-form brute force (same code path, different entry points)
+    let grid = registry().get(GridKind::Higgs, 64, 2);
+    forall("scan entry points agree", 50, |g| {
+        let v = g.vec_normal(2);
+        assert_eq!(grid.nearest_bruteforce(&v), nearest_scan(&grid.points, 2, &v));
+    });
+}
+
+fn assert_bitwise_equal(fast: &QuantData, slow: &QuantData) {
+    match (fast, slow) {
+        (
+            QuantData::Lut { codes: ca, scales: sa, signs: ga, .. },
+            QuantData::Lut { codes: cb, scales: sb, signs: gb, .. },
+        ) => {
+            assert_eq!(ca, cb, "codes differ");
+            // scales/signs compared bit-for-bit via their raw bits
+            let bits = |v: &Vec<f32>| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+            assert_eq!(bits(sa), bits(sb), "scales differ");
+            match (ga, gb) {
+                (Some(a), Some(b)) => assert_eq!(bits(a), bits(b), "signs differ"),
+                _ => panic!("missing signs"),
+            }
+        }
+        _ => panic!("expected LUT data"),
+    }
+}
+
+#[test]
+fn blocked_parallel_quantize_equals_serial_reference() {
+    let grids = [
+        registry().get(GridKind::Higgs, 16, 1),
+        registry().get(GridKind::Higgs, 16, 2),
+        registry().get(GridKind::Higgs, 64, 2),
+    ];
+    forall("blocked quantize == serial", 12, |g| {
+        let grid = (*g.choose(&grids)).clone();
+        // shapes that exercise group clamping, odd column counts, and
+        // blocks that don't divide n
+        let k = *g.choose(&[32usize, 48, 64, 96, 128]);
+        let n = g.usize_in(1, 70);
+        let group = *g.choose(&[16usize, 32, 64, 128]);
+        let seed = g.rng().next_u64();
+        let w = Tensor::from_vec(&[k, n], g.vec_normal(k * n));
+        let q = HiggsQuantizer::new(grid, group, seed);
+        let fast = q.quantize("prop_layer", &w);
+        let slow = q.quantize_reference("prop_layer", &w);
+        assert_bitwise_equal(&fast.data, &slow.data);
+        assert_eq!(fast.k, slow.k);
+        assert_eq!(fast.g, slow.g);
+        assert_eq!(
+            fast.dequantize().data.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            slow.dequantize().data.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            "dequantized weights differ"
+        );
+    });
+}
+
+#[test]
+fn blocked_quantize_stable_across_block_sizes() {
+    // the block size (the HIGGS_ENCODE_BLOCK knob) must never change
+    // the output, only the speed — passed as a parameter here so the
+    // test doesn't mutate process environment under concurrent readers
+    let grid = registry().get(GridKind::Higgs, 16, 2);
+    let q = HiggsQuantizer::new(grid, 32, 0xB10C);
+    let mut rng = higgs::util::prng::Rng::new(77);
+    let w = Tensor::from_vec(&[64, 37], rng.normal_vec(64 * 37));
+    let reference = q.quantize_reference("l", &w);
+    for blk in [1usize, 3, 16, 1024] {
+        let out = q.quantize_blocked("l", &w, blk);
+        assert_bitwise_equal(&out.data, &reference.data);
+    }
+}

@@ -1,0 +1,244 @@
+//! Minimal, dependency-free reimplementation of the `anyhow` API surface
+//! this workspace uses: `Error`, `Result`, `Context`, and the
+//! `anyhow!` / `bail!` / `ensure!` macros.
+//!
+//! Semantics mirror upstream anyhow where it matters here:
+//! * `Display` shows the outermost message; `{:#}` appends the cause
+//!   chain as `outer: inner: ...`;
+//! * `Debug` shows the message plus a `Caused by:` list;
+//! * any `std::error::Error + Send + Sync + 'static` converts via `?`;
+//! * `.context(..)` / `.with_context(..)` work on both `Result<_, E>`
+//!   (E a std error) and `Result<_, anyhow::Error>` and `Option<_>`.
+//!
+//! Like upstream, `Error` deliberately does NOT implement
+//! `std::error::Error` — that is what makes the blanket `From` impl
+//! coherent.
+
+use std::fmt::{self, Display};
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A boxed-up error: message plus an optional cause chain.
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+impl Error {
+    /// Create an error from a displayable message.
+    pub fn msg<M: Display>(message: M) -> Self {
+        Error { msg: message.to_string(), source: None }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: Display>(self, context: C) -> Self {
+        Error { msg: context.to_string(), source: Some(Box::new(self)) }
+    }
+
+    /// Iterate the cause chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        let mut msgs = vec![self.msg.as_str()];
+        let mut cur = &self.source;
+        while let Some(e) = cur {
+            msgs.push(e.msg.as_str());
+            cur = &e.source;
+        }
+        msgs.into_iter()
+    }
+}
+
+impl Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        if f.alternate() {
+            let mut cur = &self.source;
+            while let Some(e) = cur {
+                write!(f, ": {}", e.msg)?;
+                cur = &e.source;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        if self.source.is_some() {
+            f.write_str("\n\nCaused by:")?;
+            let mut cur = &self.source;
+            while let Some(e) = cur {
+                write!(f, "\n    {}", e.msg)?;
+                cur = &e.source;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        // Flatten the std source chain into nested Errors.
+        let mut msgs: Vec<String> = Vec::new();
+        let mut src = e.source();
+        while let Some(s) = src {
+            msgs.push(s.to_string());
+            src = s.source();
+        }
+        let mut nested: Option<Box<Error>> = None;
+        for m in msgs.into_iter().rev() {
+            nested = Some(Box::new(Error { msg: m, source: nested }));
+        }
+        Error { msg: e.to_string(), source: nested }
+    }
+}
+
+mod ext {
+    use super::Error;
+
+    /// Anything that can become an `Error` — std errors via the blanket
+    /// impl, plus `Error` itself. (Coherent because `Error` does not
+    /// implement `std::error::Error`.)
+    pub trait IntoError {
+        fn into_error(self) -> Error;
+    }
+
+    impl<E: std::error::Error + Send + Sync + 'static> IntoError for E {
+        fn into_error(self) -> Error {
+            Error::from(self)
+        }
+    }
+
+    impl IntoError for Error {
+        fn into_error(self) -> Error {
+            self
+        }
+    }
+}
+
+/// Context extension for `Result` and `Option`.
+pub trait Context<T, E> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static;
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: ext::IntoError> Context<T, E> for std::result::Result<T, E> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| e.into_error().context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into_error().context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+    {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !$cond {
+            $crate::bail!("condition failed: {}", ::std::stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        bail!("boom {}", 42);
+    }
+
+    #[test]
+    fn display_and_chain() {
+        let e = fails().unwrap_err().context("outer");
+        assert_eq!(e.to_string(), "outer");
+        assert_eq!(format!("{e:#}"), "outer: boom 42");
+        assert_eq!(e.chain().count(), 2);
+    }
+
+    #[test]
+    fn std_error_converts() {
+        let r: Result<i32> = "nope".parse::<i32>().map_err(Error::from);
+        assert!(r.is_err());
+        let r2: Result<i32> = "nope".parse::<i32>().context("parsing");
+        assert_eq!(r2.unwrap_err().to_string(), "parsing");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<i32> = None;
+        let e = v.context("missing").unwrap_err();
+        assert_eq!(e.to_string(), "missing");
+        let v = Some(3).with_context(|| "unused").unwrap();
+        assert_eq!(v, 3);
+    }
+
+    #[test]
+    fn ensure_macro() {
+        fn check(x: i32) -> Result<()> {
+            ensure!(x > 0, "x must be positive, got {x}");
+            Ok(())
+        }
+        assert!(check(1).is_ok());
+        assert!(check(-1).unwrap_err().to_string().contains("positive"));
+    }
+}

@@ -1,0 +1,51 @@
+//! Minimal stand-in for the `log` facade macros used in this workspace.
+//!
+//! Records go to stderr when the `HIGGS_LOG` environment variable is
+//! set (any value); otherwise they are formatted and dropped. No
+//! levels/filtering beyond that — the workspace only uses
+//! `info!`/`debug!` on cold paths.
+
+/// Emit one record (macro plumbing; not meant to be called directly).
+pub fn __emit(level: &str, args: std::fmt::Arguments<'_>) {
+    if std::env::var_os("HIGGS_LOG").is_some() {
+        eprintln!("[{level}] {args}");
+    }
+}
+
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)*) => { $crate::__emit("ERROR", ::std::format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)*) => { $crate::__emit("WARN", ::std::format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => { $crate::__emit("INFO", ::std::format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => { $crate::__emit("DEBUG", ::std::format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! trace {
+    ($($arg:tt)*) => { $crate::__emit("TRACE", ::std::format_args!($($arg)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn macros_expand() {
+        // must compile and not panic with or without HIGGS_LOG
+        info!("hello {}", 1);
+        debug!("x = {x}", x = 2);
+        warn!("w");
+        error!("e");
+        trace!("t");
+    }
+}
