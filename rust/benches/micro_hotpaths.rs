@@ -139,6 +139,44 @@ fn main() {
         eprintln!("  -> LLM-scale DP solve: {:.1} ms", m.median_ms);
     }
 
+    // ErrorDb build (every layer × every grid choice, pool-parallel)
+    // + mixed-precision encode of the resulting DP allocation
+    {
+        use higgs::alloc::errordb::{build_error_db, higgs_test_choices, quantize_allocation};
+        use higgs::alloc::solve_dp;
+        use higgs::linearity::calibrate::{CalibMetric, LayerAlphas};
+        use higgs::model::fixture;
+
+        let cfg = fixture::tiny_config();
+        let w = fixture::tiny_weights(3);
+        let choices = higgs_test_choices(cfg.group, 7);
+        let cells = (cfg.linear_params() * choices.len()) as f64;
+        let build = build_error_db(&w, &choices).unwrap();
+        let m = r.bench_items("errordb_build_tiny_3choices", cells, || {
+            build_error_db(&w, &choices).unwrap()
+        });
+        eprintln!("  -> ErrorDb build: {:.2} Mparam-cells/s", m.throughput(cells) / 1e6);
+
+        let alphas = LayerAlphas {
+            metric: CalibMetric::Ppl,
+            alphas: build
+                .db
+                .layers
+                .iter()
+                .enumerate()
+                .map(|(i, n)| (n.clone(), 1.0 + (i % 5) as f64))
+                .collect(),
+            base: 0.0,
+            noise_levels: vec![],
+        };
+        let sol = solve_dp(&build.db, &alphas, 4.0).unwrap();
+        let params = cfg.linear_params() as f64;
+        let m = r.bench_items("mixed_encode_tiny", params, || {
+            quantize_allocation(&w, &choices, &sol).unwrap()
+        });
+        eprintln!("  -> mixed encode: {:.2} Mparam/s", m.throughput(params) / 1e6);
+    }
+
     // qmm kernel executions (if artifacts exist)
     if higgs::artifacts_dir().join("qmm_dense_m1.hlo.txt").exists() {
         let engine = higgs::runtime::Engine::new().unwrap();

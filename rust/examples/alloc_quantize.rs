@@ -1,0 +1,77 @@
+//! Mixed-precision pipeline example — the §5 problem (5) end-to-end as
+//! a library consumer: measure the per-layer error database, solve the
+//! DP under a bit budget, REALIZE the allocation as a mixed-precision
+//! model (every layer its own grid/bits/packing), verify the budget
+//! against BIT-EXACT packed sizes, and serve it through
+//! `Backend::Mixed`.
+//!
+//! ```bash
+//! ./target/release/higgs train --config tiny   # once
+//! cargo run --release --example alloc_quantize -- tiny 3.25
+//! ```
+
+use higgs::alloc::errordb::build_error_db;
+use higgs::alloc::solve_dp;
+use higgs::experiments::{figures, ExpContext};
+use higgs::linearity::calibrate::CalibMetric;
+use higgs::linearity::predict::predict_penalty;
+use higgs::serve::trace::{generate_trace, TraceConfig};
+use higgs::serve::{Backend, GenerationEngine};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cfg_name = args.first().cloned().unwrap_or_else(|| "tiny".into());
+    let budget: f64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(3.25);
+    let ctx = ExpContext::load(&cfg_name)?;
+
+    // 1. sensitivities (data-free KL; cached under artifacts/)
+    let alphas = ctx.alphas(CalibMetric::Kl, 7)?;
+
+    // 2. error database: every (layer, registry grid choice) pair,
+    //    parallel over the flattened task list
+    let choices = figures::flute_choices(&ctx);
+    let t0 = std::time::Instant::now();
+    let build = build_error_db(&ctx.weights, &choices)?;
+    println!(
+        "error db: {} layers x {} choices in {:.2}s",
+        build.db.layers.len(),
+        build.db.choices.len(),
+        t0.elapsed().as_secs_f64()
+    );
+
+    // 3. exact DP under the budget + mixed-precision realization
+    let sol = solve_dp(&build.db, &alphas, budget)?;
+    print!("{}", sol.describe(&build.db));
+    let qm = build.realize(&sol.choice)?;
+    println!(
+        "packed: {:.3} bits/param (bit-exact) under budget {budget}",
+        qm.packed_avg_bits()
+    );
+
+    // 4. linearity-theorem check: predicted vs measured penalty
+    let measured = predict_penalty(&alphas, &qm.layer_errors(&ctx.weights));
+    println!(
+        "penalty: predicted {:.6}, measured {:.6}",
+        sol.predicted_penalty, measured
+    );
+
+    // 5. serve the mixed model (dense decode on per-layer dequantized
+    //    weights — the LUT kernels need one global grid, a mixed model
+    //    has many)
+    let corpus = higgs::data::Corpus::new(ctx.cfg.vocab, ctx.cfg.seq, 1);
+    let trace = generate_trace(
+        &TraceConfig { n_requests: 4, max_new: (4, 8), ..Default::default() },
+        &corpus,
+    );
+    let mut ge = GenerationEngine::new(
+        &ctx.engine,
+        ctx.cfg.clone(),
+        Backend::Mixed,
+        1,
+        &ctx.weights,
+        Some(&qm),
+    )?;
+    let m = ge.run_closed_loop(trace)?;
+    println!("[mixed b=1] {}", m.summary());
+    Ok(())
+}

@@ -10,7 +10,6 @@
 
 use higgs::experiments::{figures, ExpContext};
 use higgs::linearity::calibrate::CalibMetric;
-use higgs::quant::QuantizedModel;
 
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -31,26 +30,24 @@ fn main() -> anyhow::Result<()> {
     }
 
     // 2. per-layer error database over the FLUTE-supported grids
+    //    (parallel over every (layer, choice) pair)
     let choices = figures::flute_choices(&ctx);
-    let (db, models) = figures::build_error_db(&ctx, &choices);
+    let build = figures::build_error_db(&ctx, &choices)?;
+    let db = &build.db;
 
     // 3. exact DP allocation at the budget
-    let sol = higgs::alloc::solve_dp(&db, &alphas, budget)?;
+    let sol = higgs::alloc::solve_dp(db, &alphas, budget)?;
     println!("\nDP allocation at b_max = {budget}:");
-    print!("{}", sol.describe(&db));
+    print!("{}", sol.describe(db));
 
     // 4. measured comparison vs uniform at the same budget
-    let qm_dyn = figures::assemble_mixed(&models, &db, &sol.choice);
+    let qm_dyn = build.realize(&sol.choice)?;
     let ppl_dyn = ev.perplexity(&qm_dyn.apply_to(&ctx.weights))?;
     // uniform = the single choice closest to the budget
-    let (uni_idx, _) = db
-        .choices
-        .iter()
-        .enumerate()
-        .filter(|(_, c)| c.bits <= budget + 1e-9)
-        .max_by(|a, b| a.1.bits.partial_cmp(&b.1.bits).unwrap())
-        .unwrap();
-    let qm_uni: &QuantizedModel = &models[uni_idx];
+    let uni_idx = db
+        .best_uniform_choice(budget)
+        .expect("budget below the cheapest registry grid");
+    let qm_uni = build.realize_uniform(uni_idx)?;
     let ppl_uni = ev.perplexity(&qm_uni.apply_to(&ctx.weights))?;
     println!(
         "\nuniform {} ({:.2} bits): ppl {:.4}",

@@ -1,0 +1,233 @@
+//! ErrorDb construction + mixed-precision realization — the glue that
+//! turns the §5 DP solution into an actual quantized model.
+//!
+//! [`build_error_db`] measures the per-layer relative ℓ² error t²_{l,j}
+//! of every (layer, grid choice) pair against the model's real weight
+//! matrices. The (layer × choice) grid is flattened into ONE task list
+//! for [`crate::util::pool::par_map`], so big layers on slow grids
+//! balance against small layers on fast ones; each task runs the
+//! indexed blocked encode ([`Quantizer::quantize_with_t2`]). Every
+//! quantized layer is kept, so realizing an [`Allocation`] afterwards
+//! is a zero-encode assembly ([`ErrorDbBuild::realize`]).
+//!
+//! [`quantize_allocation`] is the re-encode path through
+//! [`QuantizedModel::quantize_mixed`] for callers that only kept the
+//! allocation (e.g. loading a solved plan in a serving process); it is
+//! bit-identical to `realize` because the quantizers are deterministic.
+
+use super::{Allocation, ErrorDb, GridChoice};
+use crate::model::Weights;
+use crate::quant::{QuantizedLayer, QuantizedModel, Quantizer};
+use anyhow::{bail, Result};
+
+/// An [`ErrorDb`] plus the quantized layers it was measured from,
+/// indexed `[layer][choice]`.
+pub struct ErrorDbBuild {
+    pub db: ErrorDb,
+    layers: Vec<Vec<QuantizedLayer>>,
+}
+
+impl ErrorDbBuild {
+    /// The quantized layer measured for (layer l, choice j).
+    pub fn layer(&self, l: usize, j: usize) -> &QuantizedLayer {
+        &self.layers[l][j]
+    }
+
+    /// Assemble the mixed-precision model for a per-layer choice vector
+    /// (e.g. `Allocation::choice`) from the already-quantized layers.
+    pub fn realize(&self, choice: &[usize]) -> Result<QuantizedModel> {
+        if choice.len() != self.layers.len() {
+            bail!(
+                "allocation has {} layers, error db has {}",
+                choice.len(),
+                self.layers.len()
+            );
+        }
+        let mut out = Vec::with_capacity(choice.len());
+        for (l, &j) in choice.iter().enumerate() {
+            if j >= self.db.choices.len() {
+                bail!("choice index {j} out of range for layer {l}");
+            }
+            out.push(self.layers[l][j].clone());
+        }
+        Ok(QuantizedModel::from_layers(out))
+    }
+
+    /// Uniform assignment of a single choice to every layer.
+    pub fn realize_uniform(&self, j: usize) -> Result<QuantizedModel> {
+        self.realize(&vec![j; self.layers.len()])
+    }
+}
+
+/// Measure t²_{l,j} for every (linear layer, grid choice) pair.
+///
+/// Parallelized over the flattened (layer, choice) task list with
+/// [`crate::util::pool::par_map`]; nested quantizer parallelism runs
+/// inline (the pool's re-entrancy guard), so the machine is never
+/// oversubscribed.
+pub fn build_error_db(
+    weights: &Weights,
+    choices: &[(GridChoice, Box<dyn Quantizer>)],
+) -> Result<ErrorDbBuild> {
+    if choices.is_empty() {
+        bail!("build_error_db: no grid choices given");
+    }
+    let names = weights.linear_names();
+    if names.is_empty() {
+        bail!("build_error_db: model has no linear layers");
+    }
+    let l_count = names.len();
+    let j_count = choices.len();
+    let mut dims = Vec::with_capacity(l_count);
+    for n in &names {
+        let Some(t) = weights.linear(n) else {
+            bail!("build_error_db: weights missing linear layer {n}");
+        };
+        dims.push(t.len());
+    }
+
+    let results: Vec<(QuantizedLayer, f64)> =
+        crate::util::pool::par_map(l_count * j_count, |i| {
+            let (l, j) = (i / j_count, i % j_count);
+            let w = weights.linear(&names[l]).expect("linear exists");
+            choices[j].1.quantize_with_t2(&names[l], w)
+        });
+
+    let mut layers: Vec<Vec<QuantizedLayer>> = Vec::with_capacity(l_count);
+    let mut t2 = vec![vec![0.0f64; j_count]; l_count];
+    let mut it = results.into_iter();
+    for l in 0..l_count {
+        let mut row = Vec::with_capacity(j_count);
+        for j in 0..j_count {
+            let (ql, e) = it.next().expect("par_map returns l_count*j_count items");
+            t2[l][j] = e;
+            row.push(ql);
+        }
+        layers.push(row);
+    }
+
+    let db = ErrorDb {
+        layers: names,
+        dims,
+        choices: choices.iter().map(|(c, _)| c.clone()).collect(),
+        t2,
+    };
+    db.validate()?;
+    Ok(ErrorDbBuild { db, layers })
+}
+
+/// Re-encode a solved allocation directly from the weights via
+/// [`QuantizedModel::quantize_mixed`] — for callers that did not keep
+/// the [`ErrorDbBuild`]. Deterministic quantizers make this
+/// bit-identical to [`ErrorDbBuild::realize`].
+pub fn quantize_allocation(
+    weights: &Weights,
+    choices: &[(GridChoice, Box<dyn Quantizer>)],
+    alloc: &Allocation,
+) -> Result<QuantizedModel> {
+    let names = weights.linear_names();
+    if alloc.choice.len() != names.len() {
+        bail!(
+            "allocation has {} layers, model has {}",
+            alloc.choice.len(),
+            names.len()
+        );
+    }
+    let mut assignment: Vec<(String, &dyn Quantizer)> = Vec::with_capacity(names.len());
+    for (name, &j) in names.into_iter().zip(&alloc.choice) {
+        let Some((_, q)) = choices.get(j) else {
+            bail!("choice index {j} out of range ({} choices)", choices.len());
+        };
+        assignment.push((name, q.as_ref()));
+    }
+    Ok(QuantizedModel::quantize_mixed(weights, &assignment))
+}
+
+/// Test/bench support (shared because `#[cfg(test)]` helpers are not
+/// visible to integration tests or benches): the standard 3-tier
+/// HIGGS p=2 choice list at 2/3/4 bits per dim.
+#[doc(hidden)]
+pub fn higgs_test_choices(group: usize, seed: u64) -> Vec<(GridChoice, Box<dyn Quantizer>)> {
+    use crate::grids::registry::{effective_bits, GridRegistry};
+    use crate::grids::GridKind;
+    use crate::quant::higgs::HiggsQuantizer;
+    let reg = GridRegistry::new();
+    [(16usize, 2usize), (64, 2), (256, 2)]
+        .iter()
+        .map(|&(n, p)| {
+            let c = GridChoice {
+                id: format!("higgs_n{n}_p{p}"),
+                bits: effective_bits(n, p, group),
+            };
+            let q: Box<dyn Quantizer> =
+                Box::new(HiggsQuantizer::new(reg.get(GridKind::Higgs, n, p), group, seed));
+            (c, q)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::fixture;
+
+    fn tiny_weights() -> Weights {
+        fixture::tiny_weights(11)
+    }
+
+    fn higgs_choices(group: usize) -> Vec<(GridChoice, Box<dyn Quantizer>)> {
+        higgs_test_choices(group, 7)
+    }
+
+    #[test]
+    fn errordb_matches_serial_measurement() {
+        let w = tiny_weights();
+        let choices = higgs_choices(16);
+        let build = build_error_db(&w, &choices).unwrap();
+        assert_eq!(build.db.layers.len(), 14);
+        assert_eq!(build.db.choices.len(), 3);
+        // every t² positive and decreasing with bits (coarse → fine)
+        for row in &build.db.t2 {
+            assert!(row[0] > row[1] && row[1] > row[2], "{row:?}");
+        }
+        // parallel build equals per-layer serial measurement
+        for (l, name) in build.db.layers.iter().enumerate() {
+            for (j, (_, q)) in choices.iter().enumerate() {
+                let ql = q.quantize(name, w.linear(name).unwrap());
+                let t2 = ql.rel_sq_err(w.linear(name).unwrap());
+                let rel = (build.db.t2[l][j] - t2).abs() / t2.max(1e-12);
+                assert!(rel < 1e-3, "t2[{l}][{j}]: {} vs {}", build.db.t2[l][j], t2);
+            }
+        }
+    }
+
+    #[test]
+    fn realize_and_reencode_agree() {
+        let w = tiny_weights();
+        let choices = higgs_choices(16);
+        let build = build_error_db(&w, &choices).unwrap();
+        let choice: Vec<usize> =
+            (0..build.db.layers.len()).map(|l| l % choices.len()).collect();
+        let cached = build.realize(&choice).unwrap();
+        let alloc = Allocation {
+            choice: choice.clone(),
+            predicted_penalty: 0.0,
+            avg_bits: 0.0,
+        };
+        let fresh = quantize_allocation(&w, &choices, &alloc).unwrap();
+        for (a, b) in cached.layers.iter().zip(&fresh.layers) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.dequantize().data, b.dequantize().data, "layer {}", a.name);
+        }
+    }
+
+    #[test]
+    fn realize_rejects_bad_shapes() {
+        let w = tiny_weights();
+        let choices = higgs_choices(16);
+        let build = build_error_db(&w, &choices).unwrap();
+        assert!(build.realize(&[0, 1]).is_err());
+        assert!(build.realize(&vec![99; build.db.layers.len()]).is_err());
+        assert!(build_error_db(&w, &[]).is_err());
+    }
+}

@@ -5,9 +5,12 @@
 //!
 //! A multiple-choice knapsack. The paper solves it with CP-SAT; we
 //! implement an **exact dynamic program** over a discretized budget
-//! (1/64-bit granularity — below any real grid spacing, so optimal for
-//! the instance), plus greedy and Lagrangian-relaxation baselines for
-//! the ablation benches.
+//! (1/64-bit granularity; per-choice costs round UP so the budget is a
+//! hard constraint — exact for 1/64-aligned grid bits, conservative by
+//! < 1/64 bit otherwise), plus greedy and Lagrangian-relaxation
+//! baselines for the ablation benches.
+
+pub mod errordb;
 
 use crate::linearity::calibrate::LayerAlphas;
 use anyhow::{bail, Result};
@@ -48,6 +51,16 @@ impl ErrorDb {
 
     pub fn total_params(&self) -> usize {
         self.dims.iter().sum()
+    }
+
+    /// The highest-bits single choice whose uniform assignment fits the
+    /// budget — the baseline any dynamic allocation must beat.
+    pub fn best_uniform_choice(&self, b_max: f64) -> Option<usize> {
+        (0..self.choices.len())
+            .filter(|&j| self.choices[j].bits <= b_max + 1e-12)
+            .max_by(|&x, &y| {
+                self.choices[x].bits.partial_cmp(&self.choices[y].bits).unwrap()
+            })
     }
 }
 
@@ -103,9 +116,12 @@ const SCALE: f64 = 64.0;
 
 /// Exact multiple-choice-knapsack DP.
 ///
-/// Cost of (l, j) = round(bits_j · SCALE) · (d_l / G) with G the gcd of
-/// all d_l; budget = floor(b_max · SCALE) · (d / G). Table size is
-/// budget_units × L — milliseconds at LLM scale.
+/// Cost of (l, j) = ceil(bits_j · SCALE) · (d_l / G) with G the gcd of
+/// all d_l; budget = floor(b_max · SCALE) · (d / G). Costs round UP and
+/// the budget rounds DOWN, so `b_max` is a hard constraint even for
+/// bit values not aligned to 1/SCALE (a rounded-down cost would let
+/// allocations exceed the budget). Table size is budget_units × L —
+/// milliseconds at LLM scale.
 pub fn solve_dp(db: &ErrorDb, alphas: &LayerAlphas, b_max: f64) -> Result<Allocation> {
     db.validate()?;
     let a = alpha_vec(db, alphas);
@@ -115,7 +131,7 @@ pub fn solve_dp(db: &ErrorDb, alphas: &LayerAlphas, b_max: f64) -> Result<Alloca
     let g = db.dims.iter().fold(0usize, |acc, &d| gcd(acc, d)).max(1);
     let units: Vec<u64> = db.dims.iter().map(|&d| (d / g) as u64).collect();
     let costs: Vec<u64> =
-        db.choices.iter().map(|c| (c.bits * SCALE).round() as u64).collect();
+        db.choices.iter().map(|c| (c.bits * SCALE).ceil() as u64).collect();
     let budget: u64 = (b_max * SCALE).floor() as u64 * units.iter().sum::<u64>();
     let budget = budget as usize;
 
@@ -132,7 +148,7 @@ pub fn solve_dp(db: &ErrorDb, alphas: &LayerAlphas, b_max: f64) -> Result<Alloca
     }
 
     const INF: f64 = f64::INFINITY;
-    // dp[b] = best penalty using layers 0..l with total cost exactly ≤ b
+    // dp[b] = best penalty using layers 0..l with total cost exactly b
     let mut dp = vec![INF; budget + 1];
     dp[0] = 0.0;
     // choice backtracking: u8 per (layer, budget) cell
@@ -156,7 +172,6 @@ pub fn solve_dp(db: &ErrorDb, alphas: &LayerAlphas, b_max: f64) -> Result<Alloca
                 }
             }
         }
-        // prefix-min so dp[b] = best with cost ≤ b (keep argmin's cell)
         dp = ndp;
         back.push(nb);
     }
@@ -407,6 +422,77 @@ mod tests {
         let p4 = solve_dp(&db, &al, 4.0).unwrap().predicted_penalty;
         let p5 = solve_dp(&db, &al, 4.5).unwrap().predicted_penalty;
         assert!(p3 > p4 && p4 >= p5, "{p3} {p4} {p5}");
+    }
+
+    #[test]
+    fn dp_budget_hard_constraint_unaligned_bits() {
+        // grid bit values NOT aligned to 1/64 (e.g. 3.17) must never
+        // let the allocation exceed b_max: costs round UP.
+        forall("dp unaligned-bits budget", 40, |g| {
+            let l_count = g.usize_in(2, 6);
+            let db = ErrorDb {
+                layers: (0..l_count).map(|i| format!("l{i}")).collect(),
+                dims: (0..l_count).map(|_| 256 * g.usize_in(1, 8)).collect(),
+                choices: vec![
+                    GridChoice { id: "a".into(), bits: 2.03 },
+                    GridChoice { id: "b".into(), bits: 3.17 },
+                    GridChoice { id: "c".into(), bits: 4.71 },
+                    GridChoice { id: "d".into(), bits: g.f64_in(5.0, 8.0) },
+                ],
+                t2: (0..l_count)
+                    .map(|_| {
+                        let base = g.f64_in(0.05, 0.3);
+                        vec![base, base * 0.3, base * 0.08, base * 0.001]
+                    })
+                    .collect(),
+            };
+            let al = LayerAlphas {
+                metric: CalibMetric::Ppl,
+                alphas: (0..l_count)
+                    .map(|i| (format!("l{i}"), g.f64_in(0.1, 10.0)))
+                    .collect(),
+                base: 0.0,
+                noise_levels: vec![],
+            };
+            let b_max = g.f64_in(2.6, 7.9);
+            let dp = solve_dp(&db, &al, b_max).unwrap();
+            assert!(dp.avg_bits <= b_max + 1e-9, "dp {} > {b_max}", dp.avg_bits);
+            let gr = solve_greedy(&db, &al, b_max).unwrap();
+            assert!(gr.avg_bits <= b_max + 1e-9, "greedy {} > {b_max}", gr.avg_bits);
+            let lg = solve_lagrange(&db, &al, b_max).unwrap();
+            assert!(lg.avg_bits <= b_max + 1e-9, "lagrange {} > {b_max}", lg.avg_bits);
+        });
+    }
+
+    #[test]
+    fn dp_cost_rounding_never_rounds_down() {
+        // 3.172·64 = 203.008: round() would cost 203 units and admit
+        // the grid under b_max = 3.1719 even though 3.172 > 3.1719.
+        // ceil() costs 204 units, so the budget stays a hard constraint.
+        let db = ErrorDb {
+            layers: vec!["a".into()],
+            dims: vec![64],
+            choices: vec![GridChoice { id: "x".into(), bits: 3.172 }],
+            t2: vec![vec![0.1]],
+        };
+        let al = LayerAlphas {
+            metric: CalibMetric::Ppl,
+            alphas: vec![("a".into(), 1.0)],
+            base: 0.0,
+            noise_levels: vec![],
+        };
+        assert!(solve_dp(&db, &al, 3.1719).is_err());
+        // at 204/64 = 3.1875 the (ceil-discretized) cost fits
+        let sol = solve_dp(&db, &al, 3.1875).unwrap();
+        assert!((sol.avg_bits - 3.172).abs() < 1e-12);
+    }
+
+    #[test]
+    fn best_uniform_choice_respects_budget() {
+        let db = toy_db();
+        assert_eq!(db.best_uniform_choice(3.25), Some(1));
+        assert_eq!(db.best_uniform_choice(4.5), Some(2));
+        assert_eq!(db.best_uniform_choice(2.0), None);
     }
 
     #[test]

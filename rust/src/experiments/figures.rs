@@ -3,7 +3,8 @@
 //! diagonal dominance).
 
 use super::ExpContext;
-use crate::alloc::{solve_dp, ErrorDb, GridChoice};
+use crate::alloc::errordb::ErrorDbBuild;
+use crate::alloc::{solve_dp, GridChoice};
 use crate::grids::registry::effective_bits;
 use crate::grids::GridKind;
 use crate::linearity::calibrate::CalibMetric;
@@ -162,43 +163,15 @@ pub fn flute_choices(ctx: &ExpContext) -> Vec<(GridChoice, Box<dyn Quantizer>)> 
     out
 }
 
-/// Build the per-layer error database over the FLUTE choices.
+/// Build the per-layer error database over the FLUTE choices —
+/// delegates to the (layer × choice)-parallel builder in
+/// [`crate::alloc::errordb`]; realize allocations with
+/// [`ErrorDbBuild::realize`].
 pub fn build_error_db(
     ctx: &ExpContext,
     choices: &[(GridChoice, Box<dyn Quantizer>)],
-) -> (ErrorDb, Vec<QuantizedModel>) {
-    let layers = ctx.weights.linear_names();
-    let dims: Vec<usize> =
-        ctx.cfg.linear_shapes().iter().map(|(_, (k, n))| k * n).collect();
-    let mut t2 = vec![vec![0.0; choices.len()]; layers.len()];
-    let mut models = Vec::new();
-    for (j, (_, q)) in choices.iter().enumerate() {
-        let qm = QuantizedModel::quantize_all(&ctx.weights, q.as_ref());
-        for (l, (_, e)) in qm.layer_errors(&ctx.weights).iter().enumerate() {
-            t2[l][j] = *e;
-        }
-        models.push(qm);
-    }
-    (
-        ErrorDb {
-            layers,
-            dims,
-            choices: choices.iter().map(|(c, _)| c.clone()).collect(),
-            t2,
-        },
-        models,
-    )
-}
-
-/// Assemble a mixed quantized model from per-layer choice indices.
-pub fn assemble_mixed(models: &[QuantizedModel], db: &ErrorDb, choice: &[usize]) -> QuantizedModel {
-    let layers = db
-        .layers
-        .iter()
-        .enumerate()
-        .map(|(l, name)| models[choice[l]].get(name).unwrap().clone())
-        .collect();
-    QuantizedModel::from_layers(layers)
+) -> Result<ErrorDbBuild> {
+    crate::alloc::errordb::build_error_db(&ctx.weights, choices)
 }
 
 /// Fig. 3: PPL vs bitwidth budget for dynamic HIGGS, with the linear
@@ -207,7 +180,8 @@ pub fn fig3_dynamic_sweep(ctx: &ExpContext, metric: CalibMetric) -> Result<(Seri
     let alphas = ctx.alphas(metric, ctx.default_j())?;
     let ppl_alphas = ctx.alphas(CalibMetric::Ppl, ctx.default_j())?;
     let choices = flute_choices(ctx);
-    let (db, models) = build_error_db(ctx, &choices);
+    let build = build_error_db(ctx, &choices)?;
+    let db = &build.db;
     let ev = ctx.evaluator();
     let budgets = [2.5, 2.75, 3.0, 3.25, 3.5, 4.0, 4.25, 5.0, 6.0];
     let base_ppl = ev.perplexity(&ctx.weights)?;
@@ -218,11 +192,11 @@ pub fn fig3_dynamic_sweep(ctx: &ExpContext, metric: CalibMetric) -> Result<(Seri
         &["b_max", "avg_bits", "measured_ppl", "predicted_ppl"],
     );
     for &b in &budgets {
-        let sol = match solve_dp(&db, &alphas, b) {
+        let sol = match solve_dp(db, &alphas, b) {
             Ok(s) => s,
             Err(_) => continue, // infeasible budget
         };
-        let qm = assemble_mixed(&models, &db, &sol.choice);
+        let qm = build.realize(&sol.choice)?;
         let ppl = ev.perplexity(&qm.apply_to(&ctx.weights))?;
         let pred = base_ppl
             + crate::linearity::predict::predict_penalty(

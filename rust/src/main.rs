@@ -8,7 +8,10 @@
 //! higgs quantize   --config base --method higgs_p2_n256 [--report-layers]
 //! higgs calibrate  --config base [--metric ppl|kl] [--levels 15]
 //! higgs allocate   --config base --budget 3.25 [--solver dp|greedy|lagrange] [--metric kl]
-//! higgs serve-bench --config base --backend flute4|fp16|uniform4|nf4 --batch 4 [--requests 24]
+//! higgs alloc-quantize --config base --budget 3.25 [--solver dp|greedy|lagrange]
+//!                  [--metric kl|ppl] [--report-layers] [--serve [--requests 8] [--batch 1]]
+//! higgs serve-bench --config base --backend flute4|fp16|uniform4|nf4|mixed --batch 4
+//!                  [--requests 24] [--budget 3.25]   (budget applies to --backend mixed)
 //! higgs hessian    --config tiny [--per-layer 8]
 //! higgs experiment fig1|fig2|fig3|fig4|table1|table2|table3|table4|table6 [--config base]
 //! ```
@@ -82,6 +85,7 @@ fn run(args: &Args) -> Result<()> {
         "quantize" => cmd_quantize(args),
         "calibrate" => cmd_calibrate(args),
         "allocate" => cmd_allocate(args),
+        "alloc-quantize" => cmd_alloc_quantize(args),
         "serve-bench" => cmd_serve_bench(args),
         "generate" => cmd_generate(args),
         "hessian" => cmd_hessian(args),
@@ -95,7 +99,7 @@ fn run(args: &Args) -> Result<()> {
 }
 
 const HELP: &str = "higgs — LLM quantization via the Linearity Theorem (see README.md)
-commands: train, eval, quantize, calibrate, allocate, serve-bench, hessian, experiment";
+commands: train, eval, quantize, calibrate, allocate, alloc-quantize, serve-bench, hessian, experiment";
 
 fn ckpt_path(engine: &Engine, cfg: &ModelConfig, args: &Args) -> std::path::PathBuf {
     match args.flags.get("ckpt").or_else(|| args.flags.get("out")) {
@@ -231,17 +235,109 @@ fn cmd_allocate(args: &Args) -> Result<()> {
     let budget = args.get_f64("budget", 3.25)?;
     let alphas = ctx.alphas(metric, ctx.default_j())?;
     let choices = figures::flute_choices(&ctx);
-    let (db, models) = figures::build_error_db(&ctx, &choices);
+    let build = figures::build_error_db(&ctx, &choices)?;
     let sol = match args.get("solver", "dp").as_str() {
-        "greedy" => higgs::alloc::solve_greedy(&db, &alphas, budget)?,
-        "lagrange" => higgs::alloc::solve_lagrange(&db, &alphas, budget)?,
-        _ => higgs::alloc::solve_dp(&db, &alphas, budget)?,
+        "greedy" => higgs::alloc::solve_greedy(&build.db, &alphas, budget)?,
+        "lagrange" => higgs::alloc::solve_lagrange(&build.db, &alphas, budget)?,
+        _ => higgs::alloc::solve_dp(&build.db, &alphas, budget)?,
     };
-    print!("{}", sol.describe(&db));
-    let qm = figures::assemble_mixed(&models, &db, &sol.choice);
+    print!("{}", sol.describe(&build.db));
+    let qm = build.realize(&sol.choice)?;
     let ev = ctx.evaluator();
     let ppl = ev.perplexity(&qm.apply_to(&ctx.weights))?;
     println!("measured ppl: {ppl:.4}");
+    Ok(())
+}
+
+/// The end-to-end §5 pipeline: measure per-layer errors for every
+/// registry grid choice, solve the DP under the bit budget, REALIZE the
+/// allocation as a mixed-precision quantized model, and report
+/// predicted-vs-measured penalty + bit-exact packed sizes. With
+/// `--serve`, run a request trace through the mixed model
+/// (`Backend::Mixed`: dense decode on per-layer dequantized weights).
+fn cmd_alloc_quantize(args: &Args) -> Result<()> {
+    let ctx = ExpContext::load(&args.get("config", "base"))?;
+    let metric = match args.get("metric", "kl").as_str() {
+        "ppl" => CalibMetric::Ppl,
+        _ => CalibMetric::Kl,
+    };
+    let budget = args.get_f64("budget", 3.25)?;
+    let alphas = ctx.alphas(metric, ctx.default_j())?;
+
+    let choices = figures::flute_choices(&ctx);
+    let t0 = std::time::Instant::now();
+    let build = higgs::alloc::errordb::build_error_db(&ctx.weights, &choices)?;
+    eprintln!(
+        "error db: {} layers x {} choices in {:.2}s",
+        build.db.layers.len(),
+        build.db.choices.len(),
+        t0.elapsed().as_secs_f64()
+    );
+
+    let sol = match args.get("solver", "dp").as_str() {
+        "greedy" => higgs::alloc::solve_greedy(&build.db, &alphas, budget)?,
+        "lagrange" => higgs::alloc::solve_lagrange(&build.db, &alphas, budget)?,
+        _ => higgs::alloc::solve_dp(&build.db, &alphas, budget)?,
+    };
+    if args.flags.contains_key("report-layers") {
+        print!("{}", sol.describe(&build.db));
+    }
+
+    let qm = build.realize(&sol.choice)?;
+    let packed: usize = qm.layers.iter().map(|l| l.packed_bytes()).sum();
+    println!(
+        "mixed model: {} layers, nominal {:.3} bits/param, packed {:.3} bits/param \
+         ({:.1} KiB) under budget {budget}",
+        qm.layers.len(),
+        qm.avg_bits(),
+        qm.packed_avg_bits(),
+        packed as f64 / 1024.0,
+    );
+
+    // linearity-theorem glue: predicted Σ α t² vs the penalty measured
+    // on the realized model's actual layer errors
+    let measured =
+        higgs::linearity::predict::predict_penalty(&alphas, &qm.layer_errors(&ctx.weights));
+    println!(
+        "penalty: predicted {:.6}, measured {:.6} ({:+.2}%)",
+        sol.predicted_penalty,
+        measured,
+        (measured - sol.predicted_penalty) / sol.predicted_penalty.abs().max(1e-12) * 100.0,
+    );
+    if let Some(j) = build.db.best_uniform_choice(budget) {
+        let uni = build.realize_uniform(j)?;
+        let uni_pen = higgs::linearity::predict::predict_penalty(
+            &alphas,
+            &uni.layer_errors(&ctx.weights),
+        );
+        println!(
+            "best uniform at budget: {} ({:.3} bits) penalty {:.6} — dynamic {}",
+            build.db.choices[j].id,
+            uni.avg_bits(),
+            uni_pen,
+            if measured <= uni_pen { "wins/ties" } else { "LOSES (unexpected)" },
+        );
+    }
+
+    if args.flags.contains_key("serve") {
+        let batch = args.get_usize("batch", 1)?;
+        let n_req = args.get_usize("requests", 8)?;
+        let corpus = higgs::data::Corpus::new(ctx.cfg.vocab, ctx.cfg.seq, 1);
+        let trace = higgs::serve::trace::generate_trace(
+            &higgs::serve::TraceConfig { n_requests: n_req, ..Default::default() },
+            &corpus,
+        );
+        let mut ge = higgs::serve::GenerationEngine::new(
+            &ctx.engine,
+            ctx.cfg.clone(),
+            higgs::serve::Backend::Mixed,
+            batch,
+            &ctx.weights,
+            Some(&qm),
+        )?;
+        let m = ge.run_closed_loop(trace)?;
+        println!("[mixed b={batch}] {}", m.summary());
+    }
     Ok(())
 }
 
@@ -253,12 +349,27 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         "nf4" => higgs::serve::Backend::NfLut4,
         "flute2" => higgs::serve::Backend::Flute { bits: 2 },
         "flute3" => higgs::serve::Backend::Flute { bits: 3 },
+        "mixed" => higgs::serve::Backend::Mixed,
         _ => higgs::serve::Backend::Flute { bits: 4 },
     };
     let batch = args.get_usize("batch", 4)?;
     let n_req = args.get_usize("requests", 24)?;
     let qm = match &backend {
         higgs::serve::Backend::Dense => None,
+        higgs::serve::Backend::Mixed => {
+            // DP-allocated mixed-precision model at --budget (data-free
+            // KL sensitivities, like `alloc-quantize --metric kl`)
+            let budget = args.get_f64("budget", 3.25)?;
+            let alphas = ctx.alphas(CalibMetric::Kl, ctx.default_j())?;
+            let choices = figures::flute_choices(&ctx);
+            let build = higgs::alloc::errordb::build_error_db(&ctx.weights, &choices)?;
+            let sol = higgs::alloc::solve_dp(&build.db, &alphas, budget)?;
+            eprintln!(
+                "mixed allocation at b_max={budget}: {:.3} bits/param",
+                sol.avg_bits
+            );
+            Some(build.realize(&sol.choice)?)
+        }
         higgs::serve::Backend::Uniform4 => Some(higgs::quant::QuantizedModel::quantize_all(
             &ctx.weights,
             &higgs::quant::rtn::RtnQuantizer::new(4, ctx.cfg.group),

@@ -1,0 +1,58 @@
+//! Tiny-model test fixture, shared by unit tests, integration tests,
+//! and benches (the latter two cannot see `#[cfg(test)]` helpers).
+//! Builds [`Weights`] straight from a dense manifest — the same layout
+//! `aot.py` emits — so no XLA artifacts are needed.
+
+use super::{Manifest, Weights};
+use crate::config::ModelConfig;
+
+/// The `tiny` config (mirrors `python/compile/configs.py`).
+pub fn tiny_config() -> ModelConfig {
+    ModelConfig {
+        name: "tiny".into(),
+        vocab: 64,
+        d_model: 32,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 64,
+        seq: 32,
+        group: 16,
+    }
+}
+
+/// The dense-manifest text for a config (embed + norms + linears, the
+/// order `Weights::from_manifest` expects).
+pub fn dense_manifest_text(cfg: &ModelConfig) -> String {
+    let mut text = String::from("artifact fixture\n");
+    text += &format!("param embed f32 {},{}\n", cfg.vocab, cfg.d_model);
+    for i in 0..cfg.n_layers {
+        text += &format!("param l{i}.norm1 f32 {}\n", cfg.d_model);
+        text += &format!("param l{i}.norm2 f32 {}\n", cfg.d_model);
+    }
+    text += &format!("param norm_f f32 {}\n", cfg.d_model);
+    for (n, (k, m)) in cfg.linear_shapes() {
+        text += &format!("param {n}.w f32 {k},{m}\n");
+    }
+    text
+}
+
+/// Randomly-initialized tiny-model weights.
+pub fn tiny_weights(seed: u64) -> Weights {
+    let cfg = tiny_config();
+    let man = Manifest::parse(&dense_manifest_text(&cfg)).expect("fixture manifest parses");
+    Weights::from_manifest(cfg, &man, Some(seed)).expect("fixture weights build")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixture_builds_and_matches_config() {
+        let w = tiny_weights(1);
+        let cfg = tiny_config();
+        assert_eq!(w.linear_names().len(), cfg.linear_shapes().len());
+        assert!(w.linear("l0.wq").is_some());
+        assert_eq!(w.get("embed").unwrap().dims, vec![cfg.vocab, cfg.d_model]);
+    }
+}

@@ -4,5 +4,8 @@
 pub mod manifest;
 pub mod weights;
 
+#[doc(hidden)]
+pub mod fixture;
+
 pub use manifest::{Manifest, ParamSpec};
 pub use weights::Weights;

@@ -186,6 +186,12 @@ impl Quantizer for HiggsQuantizer {
     fn quantize(&self, layer_name: &str, w: &Tensor) -> QuantizedLayer {
         self.quantize_blocked(layer_name, w, encode_block_cols())
     }
+
+    /// Encode-time t² (rotated-space accumulation) — ~2× cheaper than
+    /// the default dequantize-and-compare, exact up to f32 rounding.
+    fn quantize_with_t2(&self, layer_name: &str, w: &Tensor) -> (QuantizedLayer, f64) {
+        self.quantize_blocked_impl(layer_name, w, encode_block_cols(), true)
+    }
 }
 
 impl HiggsQuantizer {
@@ -193,6 +199,26 @@ impl HiggsQuantizer {
     /// knob resolves here from [`Quantizer::quantize`]; tests pass the
     /// block directly to avoid mutating process environment).
     pub fn quantize_blocked(&self, layer_name: &str, w: &Tensor, block: usize) -> QuantizedLayer {
+        self.quantize_blocked_impl(layer_name, w, block, false).0
+    }
+
+    /// Blocked encode that also accumulates the layer's relative
+    /// squared error t² DURING encode. The RHT is orthonormal, so the
+    /// per-group error in the rotated space equals the original-space
+    /// error: ‖ŵ_g − w_g‖² = (s²/g)·‖v̂ − v‖² and ‖W‖²_F = Σ_g s², i.e.
+    /// no dequantize + inverse-rotation pass is needed (the ErrorDb
+    /// build measures every (layer, choice) pair, so this matters).
+    ///
+    /// Codes/scales are bit-identical to [`Self::quantize_reference`]:
+    /// the error accumulation only reads values the encode already
+    /// produced.
+    fn quantize_blocked_impl(
+        &self,
+        layer_name: &str,
+        w: &Tensor,
+        block: usize,
+        want_err: bool,
+    ) -> (QuantizedLayer, f64) {
         let block = block.max(1);
         let (k, n) = (w.rows(), w.cols());
         let g = eff_group(self.group, k);
@@ -214,9 +240,16 @@ impl HiggsQuantizer {
         let mut codes = vec![0u32; (k / p) * n];
         let mut scales = vec![0.0f32; ngroups * n];
         let nblocks = n.div_ceil(block);
+        // per-block partial sums for the encode-time error: numerator
+        // Σ (s²/g)·‖v̂−v‖² and denominator Σ s² (each block writes only
+        // its own slot)
+        let mut err_num = vec![0.0f64; nblocks];
+        let mut err_den = vec![0.0f64; nblocks];
         {
             let codes_out = SharedSlice::new(&mut codes);
             let scales_out = SharedSlice::new(&mut scales);
+            let err_num_out = SharedSlice::new(&mut err_num);
+            let err_den_out = SharedSlice::new(&mut err_den);
             let signs_ref = &signs;
             par_for(nblocks, |bi| {
                 let j0 = bi * block;
@@ -257,27 +290,61 @@ impl HiggsQuantizer {
                     // one batched RHT pass over the whole block
                     rht_block_forward(&mut buf[..bcols * k], bcols, k, signs_ref, g);
                     // √g scale + indexed p-tuple encode + scatter outputs
+                    // (chunks walked group-by-group — same order as one
+                    // flat chunks(p) pass, but the group boundary is
+                    // where the error weighting s²/g applies)
+                    let mut blk_num = 0.0f64;
+                    let mut blk_den = 0.0f64;
                     for (b, j) in (j0..j1).enumerate() {
                         let col = &mut buf[b * k..(b + 1) * k];
                         for v in col.iter_mut() {
                             *v *= sqrt_g;
                         }
-                        for (ci, chunk) in col.chunks(p).enumerate() {
-                            let c = self.grid.nearest(chunk) as u32;
-                            // SAFETY: column j is owned by exactly this
-                            // block; (ci, j) and (gi, j) positions are
-                            // disjoint across par_for workers.
-                            unsafe { codes_out.write(ci * n + j, c) };
-                        }
+                        let chunks_per_group = g / p;
                         for gi in 0..ngroups {
+                            let gseg = &col[gi * g..(gi + 1) * g];
+                            let mut gerr = 0.0f64;
+                            for (t, chunk) in gseg.chunks(p).enumerate() {
+                                let c = self.grid.nearest(chunk) as u32;
+                                let ci = gi * chunks_per_group + t;
+                                // SAFETY: column j is owned by exactly
+                                // this block; (ci, j) and (gi, j)
+                                // positions are disjoint across par_for
+                                // workers.
+                                unsafe { codes_out.write(ci * n + j, c) };
+                                if want_err {
+                                    let pt = self.grid.point(c as usize);
+                                    for (a, q) in chunk.iter().zip(pt) {
+                                        let d = (*a - *q) as f64;
+                                        gerr += d * d;
+                                    }
+                                }
+                            }
+                            let s = svals[b * ngroups + gi] as f64;
+                            if want_err {
+                                blk_num += s * s / g as f64 * gerr;
+                                blk_den += s * s;
+                            }
                             let sigma = svals[b * ngroups + gi] / sqrt_g;
                             unsafe { scales_out.write(gi * n + j, sigma) };
                         }
                     }
+                    if want_err {
+                        // SAFETY: slot bi is written by this block only.
+                        unsafe { err_num_out.write(bi, blk_num) };
+                        unsafe { err_den_out.write(bi, blk_den) };
+                    }
                 });
             });
         }
-        self.finish(layer_name, k, n, g, codes, scales, signs)
+        let t2 = if want_err {
+            let num: f64 = err_num.iter().sum();
+            let den: f64 = err_den.iter().sum();
+            num / den.max(1e-24)
+        } else {
+            0.0
+        };
+        (self.finish(layer_name, k, n, g, codes, scales, signs), t2)
     }
 }
 
@@ -349,6 +416,28 @@ mod tests {
         for blk in [1usize, 7, 64, 4096] {
             let out = q.quantize_blocked("l", &w, blk);
             assert_layers_identical(&out, &reference);
+        }
+    }
+
+    #[test]
+    fn encode_time_t2_matches_dequantize_t2() {
+        // the rotated-space error accumulated during encode must equal
+        // the dequantize-and-compare measurement (RHT orthonormality)
+        let reg = GridRegistry::new();
+        for (n_grid, p) in [(16usize, 1usize), (64, 2)] {
+            let grid = reg.get(GridKind::Higgs, n_grid, p);
+            let q = HiggsQuantizer::new(grid, 32, 7);
+            for w in [rand_layer(96, 17, 3), spiky_layer(64, 9, 5)] {
+                let (ql, t2_fast) = q.quantize_with_t2("l", &w);
+                let t2_ref = ql.rel_sq_err(&w);
+                assert!(
+                    (t2_fast - t2_ref).abs() <= 1e-5 + 1e-3 * t2_ref.abs(),
+                    "n={n_grid} p={p}: encode t2 {t2_fast} vs dequant t2 {t2_ref}"
+                );
+                // and the codes are still bit-identical to the reference
+                let reference = q.quantize_reference("l", &w);
+                assert_layers_identical(&ql, &reference);
+            }
         }
     }
 

@@ -126,17 +126,42 @@ impl QuantizedLayer {
         crate::util::stats::rel_sq_err(&deq.data, &original.data)
     }
 
+    /// Bit width of one packed code in this layer's representation —
+    /// per-layer in a mixed-precision model.
+    pub fn code_bits(&self) -> u32 {
+        match &self.data {
+            QuantData::Lut { grid, .. } => (grid.n as f64).log2().ceil() as u32,
+            QuantData::Uniform { bits, .. } => *bits,
+        }
+    }
+
+    /// This layer's codes, bit-packed at its own width.
+    pub fn packed_codes(&self) -> packing::PackedCodes {
+        let codes: &[u32] = match &self.data {
+            QuantData::Lut { codes, .. } => codes,
+            QuantData::Uniform { codes, .. } => codes,
+        };
+        packing::PackedCodes::from_codes(codes, self.code_bits())
+    }
+
     /// Packed size in bytes (codes bit-packed + scales at 16 bit).
     pub fn packed_bytes(&self) -> usize {
+        let code_bits = self.code_bits();
         match &self.data {
-            QuantData::Lut { codes, scales, grid, .. } => {
-                let code_bits = (grid.n as f64).log2().ceil() as usize;
-                packing::packed_words(codes.len(), code_bits as u32) * 4 + scales.len() * 2
+            QuantData::Lut { codes, scales, .. } => {
+                packing::packed_words(codes.len(), code_bits) * 4 + scales.len() * 2
             }
-            QuantData::Uniform { codes, steps, zeros, bits } => {
-                packing::packed_words(codes.len(), *bits) * 4 + (steps.len() + zeros.len()) * 2
+            QuantData::Uniform { codes, steps, zeros, .. } => {
+                packing::packed_words(codes.len(), code_bits) * 4
+                    + (steps.len() + zeros.len()) * 2
             }
         }
+    }
+
+    /// Exact packed size in bits — the ground truth for bit-budget
+    /// accounting (u32-word padding included).
+    pub fn packed_bits(&self) -> u64 {
+        self.packed_bytes() as u64 * 8
     }
 }
 
@@ -151,6 +176,17 @@ pub trait Quantizer: Sync + Send {
 
     /// Quantize layer `layer_name` with weights W [K, N].
     fn quantize(&self, layer_name: &str, w: &Tensor) -> QuantizedLayer;
+
+    /// Quantize AND report the layer's relative squared error t²
+    /// (Eqn. 3) — the ErrorDb build primitive (§5). The default
+    /// measures via dequantization; quantizers that can compute the
+    /// error during encode override it (HIGGS: the RHT is orthonormal,
+    /// so rotated-space error equals original-space error).
+    fn quantize_with_t2(&self, layer_name: &str, w: &Tensor) -> (QuantizedLayer, f64) {
+        let ql = self.quantize(layer_name, w);
+        let t2 = ql.rel_sq_err(w);
+        (ql, t2)
+    }
 }
 
 /// A fully quantized model: every linear layer of a [`crate::model::Weights`]
@@ -215,6 +251,37 @@ impl QuantizedModel {
             .map(|l| l.bits_per_param * (l.k * l.n_out) as f64)
             .sum::<f64>()
             / total.max(1) as f64
+    }
+
+    /// Exact average bits/param from bit-packed sizes (Σ packed bits /
+    /// Σ params) — not the quantizers' nominal estimate. This is what a
+    /// bit budget is checked against.
+    pub fn packed_avg_bits(&self) -> f64 {
+        let params: usize = self.layers.iter().map(|l| l.k * l.n_out).sum();
+        let bits: u64 = self.layers.iter().map(|l| l.packed_bits()).sum();
+        bits as f64 / params.max(1) as f64
+    }
+
+    /// The single LUT grid shared by every LUT layer, or `None` if the
+    /// model is mixed-precision (or has no LUT layers). Decode kernels
+    /// with one global `lut` parameter require `Some`.
+    pub fn shared_lut_grid(&self) -> Option<Arc<Grid>> {
+        let mut found: Option<Arc<Grid>> = None;
+        for l in &self.layers {
+            if let QuantData::Lut { grid, .. } = &l.data {
+                match &found {
+                    None => found = Some(grid.clone()),
+                    Some(g) => {
+                        let same = Arc::ptr_eq(g, grid)
+                            || (g.n == grid.n && g.p == grid.p && g.points == grid.points);
+                        if !same {
+                            return None;
+                        }
+                    }
+                }
+            }
+        }
+        found
     }
 
     /// Per-layer relative errors t² against the original weights.
@@ -383,6 +450,68 @@ mod tests {
         };
         let w = ql.dequantize();
         assert_eq!(w.data, vec![-0.5, 1.0]);
+    }
+
+    #[test]
+    fn packed_codes_match_packed_bytes() {
+        let grid = Arc::new(Grid::new(GridKind::Nf, 4, 1, vec![-1.0, -0.3, 0.3, 1.0], 0.0));
+        let ql = QuantizedLayer {
+            name: "t".into(),
+            method: "test".into(),
+            k: 4,
+            n_out: 2,
+            g: 4,
+            data: QuantData::Lut {
+                codes: vec![0, 1, 2, 3, 3, 2, 1, 0],
+                scales: vec![1.0, 1.0],
+                grid,
+                signs: None,
+            },
+            bits_per_param: 2.5,
+        };
+        assert_eq!(ql.code_bits(), 2);
+        let pc = ql.packed_codes();
+        assert_eq!(pc.unpack(), vec![0, 1, 2, 3, 3, 2, 1, 0]);
+        assert_eq!(ql.packed_bytes(), pc.byte_len() + 2 * 2);
+        assert_eq!(ql.packed_bits(), ql.packed_bytes() as u64 * 8);
+    }
+
+    #[test]
+    fn shared_lut_grid_detects_mixed() {
+        let g1 = Arc::new(Grid::new(GridKind::Nf, 2, 1, vec![-1.0, 1.0], 0.0));
+        let g2 = Arc::new(Grid::new(GridKind::Nf, 4, 1, vec![-1.0, -0.3, 0.3, 1.0], 0.0));
+        let mk = |name: &str, grid: Arc<Grid>| QuantizedLayer {
+            name: name.into(),
+            method: "test".into(),
+            k: 2,
+            n_out: 1,
+            g: 2,
+            data: QuantData::Lut {
+                codes: vec![0, 1],
+                scales: vec![1.0],
+                grid,
+                signs: None,
+            },
+            bits_per_param: 1.0,
+        };
+        let uniform = QuantizedModel::from_layers(vec![
+            mk("a", g1.clone()),
+            mk("b", g1.clone()),
+        ]);
+        assert!(uniform.shared_lut_grid().is_some());
+        let mixed = QuantizedModel::from_layers(vec![mk("a", g1), mk("b", g2)]);
+        assert!(mixed.shared_lut_grid().is_none());
+    }
+
+    #[test]
+    fn default_quantize_with_t2_matches_rel_sq_err() {
+        let reg = crate::grids::registry::GridRegistry::new();
+        let q = lut::LutQuantizer::new(reg.get(GridKind::Nf, 16, 1), 32);
+        let mut rng = crate::util::prng::Rng::new(3);
+        let w = Tensor::from_vec(&[64, 8], rng.normal_vec(64 * 8));
+        let (ql, t2) = q.quantize_with_t2("l", &w);
+        let t2_ref = ql.rel_sq_err(&w);
+        assert!((t2 - t2_ref).abs() < 1e-12, "{t2} vs {t2_ref}");
     }
 
     #[test]

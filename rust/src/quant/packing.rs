@@ -42,6 +42,32 @@ pub fn unpack(words: &[u32], count: usize, bits: u32) -> Vec<u32> {
     out
 }
 
+/// A self-describing packed code plane for ONE layer. Layers in a
+/// mixed-precision model (§5) each carry their own code width, so the
+/// width travels with the words instead of being a model-global
+/// constant.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PackedCodes {
+    pub bits: u32,
+    pub count: usize,
+    pub words: Vec<u32>,
+}
+
+impl PackedCodes {
+    pub fn from_codes(codes: &[u32], bits: u32) -> Self {
+        PackedCodes { bits, count: codes.len(), words: pack(codes, bits) }
+    }
+
+    pub fn unpack(&self) -> Vec<u32> {
+        unpack(&self.words, self.count, self.bits)
+    }
+
+    /// Exact storage footprint of the packed words.
+    pub fn byte_len(&self) -> usize {
+        self.words.len() * 4
+    }
+}
+
 /// Bit-slice packing for widths that are not powers of two (§4.3,
 /// FP6-LLM-style): split each b-bit code into a (b-s)-bit high plane and
 /// an s-bit low plane, each packed independently. Enables aligned loads
@@ -125,6 +151,21 @@ mod tests {
         let codes: Vec<u32> = (0..22).map(|i| (i % 8) as u32).collect();
         let packed = pack(&codes, 3);
         assert_eq!(unpack(&packed, 22, 3), codes);
+    }
+
+    #[test]
+    fn packed_codes_heterogeneous_widths_roundtrip() {
+        // per-layer widths in one model: each plane is self-describing
+        forall("packed codes roundtrip", 40, |g| {
+            let bits = *g.choose(&[2u32, 3, 4, 6, 8]);
+            let n = g.usize_in(1, 300);
+            let mask = (1u64 << bits) - 1;
+            let codes: Vec<u32> =
+                (0..n).map(|_| (g.rng().next_u64() & mask) as u32).collect();
+            let pc = PackedCodes::from_codes(&codes, bits);
+            assert_eq!(pc.unpack(), codes);
+            assert_eq!(pc.byte_len(), packed_words(n, bits) * 4);
+        });
     }
 
     #[test]

@@ -19,6 +19,11 @@ pub enum Backend {
     NfLut4,
     /// fused vector-LUT Pallas kernel + activation RHT (FLUTE/HIGGS)
     Flute { bits: u32 },
+    /// mixed-precision model (§5 dynamic allocation): every layer
+    /// carries its own grid/bits, served through the dense decode
+    /// executable on per-layer dequantized weights (the LUT kernels
+    /// take ONE global grid, which a mixed model does not have)
+    Mixed,
 }
 
 impl Backend {
@@ -28,13 +33,14 @@ impl Backend {
             Backend::Uniform4 => "marlin(uniform4)".into(),
             Backend::NfLut4 => "nf4".into(),
             Backend::Flute { bits } => format!("flute{bits}"),
+            Backend::Mixed => "mixed".into(),
         }
     }
 
     /// The decode artifact name for (cfg, batch).
     pub fn decode_artifact(&self, cfg_name: &str, batch: usize) -> String {
         match self {
-            Backend::Dense => format!("decode_dense_{cfg_name}_b{batch}"),
+            Backend::Dense | Backend::Mixed => format!("decode_dense_{cfg_name}_b{batch}"),
             Backend::Uniform4 => format!("decode_uniform_b4_{cfg_name}_b{batch}"),
             Backend::NfLut4 => format!("decode_nf_n16_{cfg_name}_b{batch}"),
             Backend::Flute { bits } => {
@@ -62,10 +68,17 @@ impl Backend {
         for spec in &man.params {
             let arg = if spec.name == "lut" {
                 let qm = qmodel.context("lut param but no quantized model")?;
-                let grid = match &qm.layers.first().context("empty qmodel")?.data {
-                    QuantData::Lut { grid, .. } => grid.clone(),
-                    _ => bail!("lut param but first layer is not LUT-quantized"),
-                };
+                qm.layers.first().context("empty qmodel")?;
+                // the decode executable bakes in ONE global grid: a
+                // mixed-precision model (per-layer grids) would silently
+                // decode every non-matching layer's codes against the
+                // wrong LUT — reject it here instead
+                let grid = qm.shared_lut_grid().context(
+                    "decode artifact expects a single shared LUT grid, but the \
+                     quantized model is mixed-precision; serve it with \
+                     Backend::Mixed (dense decode on per-layer dequantized \
+                     weights) instead",
+                )?;
                 if grid.n * grid.p != spec.numel() {
                     bail!(
                         "grid {}x{} does not match lut param {:?}",
@@ -156,6 +169,11 @@ fn lookup<'a>(
 mod tests {
     use super::*;
 
+    use crate::grids::registry::GridRegistry;
+    use crate::grids::GridKind;
+    use crate::quant::higgs::HiggsQuantizer;
+    use crate::quant::Quantizer;
+
     #[test]
     fn artifact_names() {
         assert_eq!(Backend::Dense.decode_artifact("base", 4), "decode_dense_base_b4");
@@ -168,6 +186,8 @@ mod tests {
             "decode_uniform_b4_base_b1"
         );
         assert_eq!(Backend::NfLut4.decode_artifact("base", 1), "decode_nf_n16_base_b1");
+        // mixed models are served through the dense decode executable
+        assert_eq!(Backend::Mixed.decode_artifact("base", 1), "decode_dense_base_b1");
     }
 
     #[test]
@@ -178,9 +198,76 @@ mod tests {
             Backend::NfLut4,
             Backend::Flute { bits: 2 },
             Backend::Flute { bits: 4 },
+            Backend::Mixed,
         ];
         let labels: std::collections::HashSet<String> =
             all.iter().map(|b| b.label()).collect();
         assert_eq!(labels.len(), all.len());
+    }
+
+    use crate::model::fixture;
+
+    fn tiny_weights() -> Weights {
+        fixture::tiny_weights(5)
+    }
+
+    /// Quantize the tiny model with ALTERNATING grids (a mixed model).
+    fn mixed_model(w: &Weights) -> QuantizedModel {
+        let reg = GridRegistry::new();
+        let q2 = HiggsQuantizer::new(reg.get(GridKind::Higgs, 16, 2), 16, 1);
+        let q4 = HiggsQuantizer::new(reg.get(GridKind::Higgs, 256, 2), 16, 1);
+        let names = w.linear_names();
+        let assignment: Vec<(String, &dyn Quantizer)> = names
+            .iter()
+            .enumerate()
+            .map(|(i, n)| {
+                let q: &dyn Quantizer = if i % 2 == 0 { &q2 } else { &q4 };
+                (n.clone(), q)
+            })
+            .collect();
+        QuantizedModel::quantize_mixed(w, &assignment)
+    }
+
+    #[test]
+    fn mixed_backend_builds_dense_params_from_mixed_model() {
+        let w = tiny_weights();
+        let qm = mixed_model(&w);
+        assert!(qm.shared_lut_grid().is_none(), "model should be mixed");
+        // the dense/Mixed manifest: every param as the dense graph sees it
+        let cfg = fixture::tiny_config();
+        let mut text = String::from("artifact decode_dense_tiny_b1\n");
+        text += &format!("param embed f32 {},{}\n", cfg.vocab, cfg.d_model);
+        for (n, (k, m)) in cfg.linear_shapes() {
+            text += &format!("param {n}.w f32 {k},{m}\n");
+        }
+        let man = Manifest::parse(&text).unwrap();
+        let args = Backend::Mixed.build_params(&man, &w, Some(&qm)).unwrap();
+        assert_eq!(args.len(), man.params.len());
+        // each linear param is the layer's OWN dequantization
+        for (spec, arg) in man.params.iter().zip(&args).skip(1) {
+            let base = spec.name.strip_suffix(".w").unwrap();
+            let want = qm.get(base).unwrap().dequantize();
+            match arg {
+                HostArg::F32(v, dims) => {
+                    assert_eq!(dims, &spec.dims);
+                    assert_eq!(v, &want.data, "param {}", spec.name);
+                }
+                _ => panic!("expected f32 param"),
+            }
+        }
+    }
+
+    #[test]
+    fn lut_kernel_rejects_mixed_model() {
+        let w = tiny_weights();
+        let qm = mixed_model(&w);
+        let man = Manifest::parse("artifact decode_flute\nparam lut f32 16,2\n").unwrap();
+        let err = Backend::Flute { bits: 2 }
+            .build_params(&man, &w, Some(&qm))
+            .unwrap_err();
+        assert!(
+            format!("{err:#}").contains("mixed"),
+            "error should point at the mixed model: {err:#}"
+        );
     }
 }

@@ -70,6 +70,57 @@ pub struct GenerationEngine<'a> {
     pub metrics: ServeMetrics,
 }
 
+/// Pure admission planning (no XLA): pop admissible requests off the
+/// queue into the given idle slots, taking KV leases with the
+/// PREFILL-CLAMPED prompt length `min(len, seq − 1)` — so the lease
+/// accounting matches the tokens the engine actually writes, instead of
+/// over-reserving (and later overflowing) on long prompts. Empty
+/// prompts are rejected outright (a zero-length prefill has no logits
+/// row to sample from — `plen − 1` would underflow), and so are
+/// `max_new == 0` requests (admission always samples one token from
+/// the prefill, which a zero-token lease cannot absorb). FIFO order is
+/// preserved; planning stops at the first request that does not fit.
+///
+/// Returns `(slot, clamped_prompt_len, request)` triples.
+pub(crate) fn plan_admissions(
+    queue: &mut VecDeque<Request>,
+    kv: &mut KvBlockManager,
+    idle_slots: &[usize],
+    seq: usize,
+    metrics: &mut ServeMetrics,
+) -> Result<Vec<(usize, usize, Request)>> {
+    let mut out = Vec::new();
+    let mut slots = idle_slots.iter().copied();
+    let mut slot = slots.next();
+    while let Some(b) = slot {
+        let Some(front) = queue.front() else { break };
+        // plen == 0 covers both an empty prompt and a prompt clamped to
+        // nothing (seq <= 1) — either way there is no logits row to
+        // sample from (`plen - 1` would underflow)
+        let plen = front.prompt.len().min(seq.saturating_sub(1));
+        if plen == 0 || front.max_new == 0 {
+            let req = queue.pop_front().unwrap();
+            log::warn!(
+                "rejecting request {}: {}",
+                req.id,
+                if req.max_new == 0 { "max_new == 0" } else { "no servable prompt tokens" }
+            );
+            metrics.rejected += 1;
+            continue; // slot b stays available for the next request
+        }
+        // paged-KV admission control: worst-case block reservation on
+        // the CLAMPED length (what prefill will actually write)
+        if !kv.can_admit(plen, front.max_new) {
+            break;
+        }
+        let req = queue.pop_front().unwrap();
+        kv.admit(req.id, plen, req.max_new)?;
+        out.push((b, plen, req));
+        slot = slots.next();
+    }
+    Ok(out)
+}
+
 impl<'a> GenerationEngine<'a> {
     pub fn new(
         engine: &'a Engine,
@@ -136,25 +187,18 @@ impl<'a> GenerationEngine<'a> {
             return Ok(0);
         }
         let s = self.cfg.seq;
-        let mut tokens = vec![0i32; self.batch * s];
-        let mut newly: Vec<(usize, Request)> = Vec::new();
-        for b in 0..self.batch {
-            if !matches!(self.slots[b], Slot::Idle) {
-                continue;
-            }
-            let Some(req) = queue.front() else { break };
-            // paged-KV admission control: worst-case block reservation
-            if !self.kv_manager.can_admit(req.prompt.len(), req.max_new) {
-                break;
-            }
-            let req = queue.pop_front().unwrap();
-            self.kv_manager.admit(req.id, req.prompt.len(), req.max_new)?;
-            let plen = req.prompt.len().min(s - 1);
-            tokens[b * s..b * s + plen].copy_from_slice(&req.prompt[..plen]);
-            newly.push((b, req));
-        }
+        let idle: Vec<usize> = (0..self.batch)
+            .filter(|&b| matches!(self.slots[b], Slot::Idle))
+            .collect();
+        let newly =
+            plan_admissions(queue, &mut self.kv_manager, &idle, s, &mut self.metrics)?;
         if newly.is_empty() {
             return Ok(0);
+        }
+        let mut tokens = vec![0i32; self.batch * s];
+        for (b, plen, req) in &newly {
+            let (b, plen) = (*b, *plen);
+            tokens[b * s..b * s + plen].copy_from_slice(&req.prompt[..plen]);
         }
         let tok_lit = HostArg::I32(tokens, vec![self.batch, s]).to_literal()?;
         let mut args: Vec<&xla::Literal> = vec![&tok_lit];
@@ -174,7 +218,7 @@ impl<'a> GenerationEngine<'a> {
         let (l_count, h, dh) = (self.cfg.n_layers, self.cfg.n_heads, self.cfg.d_head());
         let slot_stride = h * s * dh;
         let layer_stride = self.batch * slot_stride;
-        for &(b, _) in &newly {
+        for &(b, _, _) in &newly {
             for l in 0..l_count {
                 let off = l * layer_stride + b * slot_stride;
                 kv_k[off..off + slot_stride].copy_from_slice(&kc[off..off + slot_stride]);
@@ -186,8 +230,7 @@ impl<'a> GenerationEngine<'a> {
         self.kv_k = HostArg::F32(kv_k, kv_dims.clone()).to_literal()?;
         self.kv_v = HostArg::F32(kv_v, kv_dims).to_literal()?;
         let n = newly.len();
-        for (b, req) in newly {
-            let plen = req.prompt.len().min(s - 1);
+        for (b, plen, req) in newly {
             let row = &logits[(b * s + plen - 1) * v..(b * s + plen) * v];
             let first = argmax(row) as i32;
             self.slots[b] = Slot::Active {
@@ -253,7 +296,12 @@ impl<'a> GenerationEngine<'a> {
                 *pos += 1;
                 generated.push(next);
                 *last_token = next;
-                let _ = self.kv_manager.append_token(req.id);
+                // a lease overflow here means the admission accounting
+                // drifted from the decode loop — surface it, never
+                // swallow it
+                self.kv_manager.append_token(req.id).with_context(|| {
+                    format!("KV lease overflow for request {} at pos {pos}", req.id)
+                })?;
                 let capacity_hit = *pos + 1 >= s;
                 if generated.len() >= req.max_new || capacity_hit {
                     let latency = admitted.elapsed().as_secs_f64() * 1e3;
@@ -299,6 +347,102 @@ mod tests {
 
     fn have_tiny() -> bool {
         crate::artifacts_dir().join("decode_dense_tiny_b1.hlo.txt").exists()
+    }
+
+    fn mgr(seq: usize, batch: usize) -> KvBlockManager {
+        KvBlockManager::new(KvConfig::for_model(seq, batch, 16))
+    }
+
+    fn req(id: u64, prompt_len: usize, max_new: usize) -> Request {
+        Request { id, prompt: vec![1i32; prompt_len], max_new, arrival_ms: 0 }
+    }
+
+    #[test]
+    fn admission_rejects_empty_prompt_and_zero_max_new() {
+        // empty prompt → clean rejection (not a plen-1 underflow panic);
+        // max_new == 0 → clean rejection (prefill always samples one
+        // token, which a zero-token lease cannot absorb — before the
+        // fix this aborted the whole engine via the step() error path);
+        // the slot stays available for the next admissible request
+        let mut kv = mgr(96, 2);
+        let mut metrics = ServeMetrics::default();
+        let mut queue: VecDeque<Request> =
+            vec![req(0, 0, 4), req(1, 8, 0), req(2, 8, 4)].into();
+        let planned =
+            plan_admissions(&mut queue, &mut kv, &[0, 1], 96, &mut metrics).unwrap();
+        assert_eq!(metrics.rejected, 2);
+        assert_eq!(planned.len(), 1);
+        assert_eq!(planned[0].0, 0, "slot 0 reused after the rejections");
+        assert_eq!(planned[0].2.id, 2);
+        assert!(kv.tokens_of(0).is_none(), "no lease for the rejected requests");
+        assert!(kv.tokens_of(1).is_none());
+    }
+
+    #[test]
+    fn admission_rejects_prompt_clamped_to_nothing() {
+        // seq == 1: every prompt clamps to plen = 0 — there is no
+        // logits row to sample, so the request must be rejected, not
+        // admitted into a `plen - 1` underflow
+        let mut kv = mgr(16, 1);
+        let mut metrics = ServeMetrics::default();
+        let mut queue: VecDeque<Request> = vec![req(4, 8, 2)].into();
+        let planned =
+            plan_admissions(&mut queue, &mut kv, &[0], 1, &mut metrics).unwrap();
+        assert!(planned.is_empty());
+        assert_eq!(metrics.rejected, 1);
+        // seq == 0 must not underflow either
+        let mut queue: VecDeque<Request> = vec![req(5, 8, 2)].into();
+        let planned =
+            plan_admissions(&mut queue, &mut kv, &[0], 0, &mut metrics).unwrap();
+        assert!(planned.is_empty());
+        assert_eq!(metrics.rejected, 2);
+    }
+
+    #[test]
+    fn admission_clamps_long_prompts_before_leasing() {
+        // a prompt longer than seq must lease the CLAMPED length —
+        // otherwise the lease starts beyond capacity and the very first
+        // append_token reports a (bogus) overflow
+        let seq = 96;
+        let mut kv = mgr(seq, 1);
+        let mut metrics = ServeMetrics::default();
+        let max_new = 4;
+        let mut queue: VecDeque<Request> = vec![req(7, 1000, max_new)].into();
+        let planned =
+            plan_admissions(&mut queue, &mut kv, &[0], seq, &mut metrics).unwrap();
+        assert_eq!(planned.len(), 1);
+        let plen = planned[0].1;
+        assert_eq!(plen, seq - 1);
+        assert_eq!(kv.tokens_of(7), Some(plen));
+        // the decode loop appends one token per decode step; with the
+        // clamped lease none of them can overflow
+        let decode_tokens = max_new.min(seq - plen);
+        for i in 0..decode_tokens {
+            kv.append_token(7).unwrap_or_else(|e| panic!("append {i}: {e}"));
+        }
+    }
+
+    #[test]
+    fn unclamped_lease_overflows_immediately() {
+        // the pre-fix behaviour: leasing the UNTRUNCATED prompt length
+        // puts the lease beyond seq capacity and every append fails —
+        // this is the accounting drift `step` used to swallow
+        let mut kv = mgr(96, 1);
+        kv.admit(3, 1000, 4).unwrap();
+        assert!(kv.append_token(3).is_err());
+    }
+
+    #[test]
+    fn admission_stops_at_first_unfit_request() {
+        // FIFO head-of-line: a request that doesn't fit blocks the rest
+        let mut kv = mgr(32, 1); // 2 blocks of 16
+        let mut metrics = ServeMetrics::default();
+        kv.admit(99, 20, 10).unwrap(); // occupies both blocks
+        let mut queue: VecDeque<Request> = vec![req(0, 8, 4), req(1, 4, 2)].into();
+        let planned =
+            plan_admissions(&mut queue, &mut kv, &[0], 32, &mut metrics).unwrap();
+        assert!(planned.is_empty());
+        assert_eq!(queue.len(), 2, "queue untouched when nothing fits");
     }
 
     fn setup(eng: &Engine) -> (ModelConfig, Weights) {

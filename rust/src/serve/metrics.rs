@@ -9,6 +9,11 @@ pub struct ServeMetrics {
     pub wall_secs: f64,
     pub decode_steps: u64,
     pub prefill_calls: u64,
+    /// requests rejected at admission (e.g. empty prompts)
+    pub rejected: u64,
+    /// requests dropped by the router safety valve (stuck work that
+    /// could not be admitted; never silently discarded)
+    pub dropped: u64,
 }
 
 impl ServeMetrics {
@@ -44,7 +49,7 @@ impl ServeMetrics {
     }
 
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "{} reqs, {} toks, {:.1} tok/s, p50 {:.0} ms, p95 {:.0} ms, {} decode steps, {} prefills",
             self.completions.len(),
             self.total_generated(),
@@ -53,7 +58,14 @@ impl ServeMetrics {
             self.latency_p95(),
             self.decode_steps,
             self.prefill_calls,
-        )
+        );
+        if self.rejected > 0 {
+            s += &format!(", {} rejected", self.rejected);
+        }
+        if self.dropped > 0 {
+            s += &format!(", {} DROPPED", self.dropped);
+        }
+        s
     }
 }
 
@@ -68,6 +80,7 @@ mod tests {
             wall_secs: 2.0,
             decode_steps: 100,
             prefill_calls: 2,
+            ..Default::default()
         };
         assert!((m.tok_per_sec() - 50.0).abs() < 1e-9);
         assert_eq!(m.total_generated(), 100);
@@ -80,5 +93,10 @@ mod tests {
         assert_eq!(m.tok_per_sec(), 0.0);
         assert_eq!(m.latency_p50(), 0.0);
         assert!(m.summary().contains("0 reqs"));
+        // rejected/dropped only surface when nonzero
+        assert!(!m.summary().contains("rejected"));
+        let m2 = ServeMetrics { rejected: 2, dropped: 1, ..Default::default() };
+        assert!(m2.summary().contains("2 rejected"));
+        assert!(m2.summary().contains("1 DROPPED"));
     }
 }

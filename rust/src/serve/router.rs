@@ -78,7 +78,13 @@ impl Router {
                 // drain the inbox without blocking
                 loop {
                     match rx.try_recv() {
-                        Ok(RouterMsg::Submit(r)) => batcher.push(r),
+                        Ok(RouterMsg::Submit(r)) => {
+                            // a fresh submission is work: it resets the
+                            // safety-valve clock so requests arriving
+                            // after an idle gap are never guillotined
+                            last_work = Instant::now();
+                            batcher.push(r);
+                        }
                         Ok(RouterMsg::Shutdown) => shutdown = true,
                         Err(mpsc::TryRecvError::Empty) => break,
                         Err(mpsc::TryRecvError::Disconnected) => {
@@ -98,10 +104,46 @@ impl Router {
                     last_work = Instant::now();
                 } else if shutdown && batcher.pending() == 0 && queue.is_empty() {
                     break;
-                } else if last_work.elapsed() > rcfg.idle_timeout && shutdown {
+                } else if shutdown && last_work.elapsed() > rcfg.idle_timeout {
+                    // shutdown with work that never became admissible:
+                    // count it as dropped instead of losing it silently
+                    let stuck = batcher.pending() + queue.len();
+                    if stuck > 0 {
+                        log::error!("shutdown dropping {stuck} unserved request(s)");
+                        ge.metrics.dropped += stuck as u64;
+                    }
                     break;
-                } else if last_work.elapsed() > rcfg.idle_timeout.mul_f32(20.0) {
-                    // safety valve: never spin forever
+                } else if last_work.elapsed() > rcfg.idle_timeout.mul_f32(20.0)
+                    && (batcher.pending() > 0 || !queue.is_empty())
+                {
+                    // Safety valve: pending work but admission has made
+                    // no progress for 20 idle periods (e.g. a request
+                    // that can never fit). Give it one last chance,
+                    // then drain it into the metrics — the coordinator
+                    // must not spin forever, and requests must never be
+                    // dropped invisibly. An EMPTY idle router keeps
+                    // waiting: disconnected clients arrive via the
+                    // shutdown path, and fresh submissions reset
+                    // `last_work`.
+                    // flush the batcher COMPLETELY (one poll caps at
+                    // max_batch) so every stuck request is counted
+                    loop {
+                        let flushed = batcher.poll(Instant::now(), true);
+                        if flushed.is_empty() {
+                            break;
+                        }
+                        queue.extend(flushed);
+                    }
+                    if ge.admit(&mut queue)? > 0 {
+                        last_work = Instant::now();
+                        continue;
+                    }
+                    log::error!(
+                        "router safety valve: dropping {} stuck request(s)",
+                        queue.len()
+                    );
+                    ge.metrics.dropped += queue.len() as u64;
+                    queue.clear();
                     break;
                 } else {
                     std::thread::sleep(Duration::from_micros(200));
@@ -171,5 +213,61 @@ mod tests {
         let metrics = router.finish().unwrap();
         assert_eq!(got, 4, "completions missing: {}", metrics.summary());
         assert_eq!(metrics.completions.len(), 4);
+    }
+
+    #[test]
+    fn router_survives_idle_gap_longer_than_safety_valve() {
+        // regression: the 20×idle_timeout safety valve used to kill the
+        // coordinator outright, silently dropping anything submitted
+        // afterwards. Submissions now reset the valve clock and stuck
+        // work is drained into `metrics.dropped`, never lost silently.
+        if !crate::artifacts_dir().join("decode_dense_tiny_b1.hlo.txt").exists() {
+            return;
+        }
+        let engine = Engine::new().unwrap();
+        let cfg = ModelConfig::load_named(engine.artifacts(), "tiny").unwrap();
+        let exe = engine.load("fwd_loss_tiny").unwrap();
+        let w = Weights::from_manifest(cfg.clone(), &exe.manifest, Some(1)).unwrap();
+        drop(engine);
+        let corpus = crate::data::Corpus::new(cfg.vocab, cfg.seq, 1);
+        let mk = |n: usize, seed: u64| {
+            generate_trace(
+                &TraceConfig {
+                    n_requests: n,
+                    prompt_len: (4, 8),
+                    max_new: (2, 3),
+                    seed,
+                    ..Default::default()
+                },
+                &corpus,
+            )
+        };
+        let idle = Duration::from_millis(25);
+        let router = Router::spawn(
+            cfg,
+            RouterConfig { batch: 1, idle_timeout: idle, ..Default::default() },
+            w,
+            None,
+        );
+        for r in mk(1, 3) {
+            router.submit(r);
+        }
+        assert!(
+            router.completions.recv_timeout(Duration::from_secs(60)).is_ok(),
+            "first burst not served"
+        );
+        // idle PAST the 20×idle_timeout valve window, then submit again
+        std::thread::sleep(idle.mul_f32(25.0));
+        for mut r in mk(1, 9) {
+            r.id += 100;
+            router.submit(r);
+        }
+        assert!(
+            router.completions.recv_timeout(Duration::from_secs(60)).is_ok(),
+            "request submitted after the idle gap was dropped"
+        );
+        let metrics = router.finish().unwrap();
+        assert_eq!(metrics.completions.len(), 2, "{}", metrics.summary());
+        assert_eq!(metrics.dropped, 0, "{}", metrics.summary());
     }
 }

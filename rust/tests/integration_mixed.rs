@@ -1,0 +1,177 @@
+//! End-to-end non-uniform bit allocation (§5) WITHOUT the XLA runtime:
+//! `solve_dp` → `quantize_mixed` on the tiny model, proving
+//!
+//!   * the realized mixed model meets its bit budget with BIT-EXACT
+//!     packed sizes (not just the quantizers' nominal estimate);
+//!   * its measured total weighted ℓ² error is no worse than the best
+//!     single uniform registry grid that fits the same budget;
+//!   * the cached-layer realization and the `quantize_mixed` re-encode
+//!     agree bit-for-bit;
+//!   * the DP's predicted penalty matches the penalty measured on the
+//!     realized model (the linearity-theorem glue).
+
+use higgs::alloc::errordb::{build_error_db, higgs_test_choices, quantize_allocation};
+use higgs::alloc::{solve_dp, GridChoice};
+use higgs::grids::registry::{effective_bits, GridRegistry};
+use higgs::grids::GridKind;
+use higgs::linearity::calibrate::{CalibMetric, LayerAlphas};
+use higgs::linearity::predict::predict_penalty;
+use higgs::model::fixture::{tiny_config as tiny_cfg, tiny_weights};
+use higgs::quant::lut::LutQuantizer;
+use higgs::quant::Quantizer;
+
+/// Registry grid choices at 3/4/5 effective bits (HIGGS p=2) plus the
+/// 9-bit CH8-style constrained-uniform fallback.
+fn registry_choices(group: usize) -> Vec<(GridChoice, Box<dyn Quantizer>)> {
+    let mut out = higgs_test_choices(group, 7);
+    let reg = GridRegistry::new();
+    out.push((
+        GridChoice { id: "ch8".into(), bits: effective_bits(256, 1, group) },
+        Box::new(LutQuantizer::new(reg.get(GridKind::Uniform, 256, 1), group)),
+    ));
+    out
+}
+
+/// Synthetic but heterogeneous sensitivities: attention outputs and
+/// down-projections "matter" much more — enough spread that the DP
+/// must move bits between layers.
+fn synthetic_alphas(layers: &[String]) -> LayerAlphas {
+    let alphas = layers
+        .iter()
+        .map(|n| {
+            let a = if n.ends_with(".wo") || n.ends_with(".w_down") {
+                12.0
+            } else if n.ends_with(".wq") {
+                3.0
+            } else {
+                0.5
+            };
+            (n.clone(), a)
+        })
+        .collect();
+    LayerAlphas { metric: CalibMetric::Ppl, alphas, base: 0.0, noise_levels: vec![] }
+}
+
+#[test]
+fn dp_to_mixed_model_end_to_end() {
+    let w = tiny_weights(11);
+    let cfg = tiny_cfg();
+    let choices = registry_choices(cfg.group);
+    let build = build_error_db(&w, &choices).unwrap();
+    let alphas = synthetic_alphas(&build.db.layers);
+
+    // budget = the 4-bit uniform tier (higgs n64 p2 at g=16)
+    let b_max = effective_bits(64, 2, cfg.group);
+    let sol = solve_dp(&build.db, &alphas, b_max).unwrap();
+    assert!(sol.avg_bits <= b_max + 1e-9, "avg {} > {b_max}", sol.avg_bits);
+
+    // with this sensitivity spread the allocation must actually be
+    // non-uniform (otherwise the test shows nothing)
+    let distinct: std::collections::HashSet<usize> = sol.choice.iter().copied().collect();
+    assert!(distinct.len() > 1, "allocation degenerated to uniform: {:?}", sol.choice);
+
+    // realize: every layer carries its own grid/bits/packing
+    let qm = build.realize(&sol.choice).unwrap();
+    assert_eq!(qm.layers.len(), build.db.layers.len());
+    let widths: std::collections::HashSet<u32> =
+        qm.layers.iter().map(|l| l.code_bits()).collect();
+    assert!(widths.len() > 1, "expected heterogeneous code widths");
+
+    // BIT-EXACT packed budget check: Σ packed bits / Σ params ≤ b_max.
+    // (On these power-of-two shapes the u32-word padding is zero, so
+    // the packed size must also equal the DP's accounting exactly.)
+    let packed_bits = qm.packed_avg_bits();
+    assert!(packed_bits <= b_max + 1e-9, "packed {packed_bits} > {b_max}");
+    assert!(
+        (packed_bits - sol.avg_bits).abs() < 1e-9,
+        "packed {packed_bits} vs nominal {}",
+        sol.avg_bits
+    );
+
+    // measured total weighted ℓ² error vs the best uniform registry
+    // grid of equal-or-greater average bits that fits the budget
+    let measured = predict_penalty(&alphas, &qm.layer_errors(&w));
+    let j_uni = build.db.best_uniform_choice(b_max).unwrap();
+    assert_eq!(build.db.choices[j_uni].id, "higgs_n64_p2");
+    let uni = build.realize_uniform(j_uni).unwrap();
+    assert!(uni.avg_bits() >= sol.avg_bits - 1e-9, "uniform baseline has fewer bits");
+    let uni_measured = predict_penalty(&alphas, &uni.layer_errors(&w));
+    assert!(
+        measured <= uni_measured * (1.0 + 1e-6) + 1e-12,
+        "dynamic {measured} worse than uniform {uni_measured}"
+    );
+
+    // linearity glue: the DP's predicted penalty is the same Σ α t²
+    // measured on the realized model (encode-time t² vs dequantized
+    // measurement differ only by f32 rounding)
+    let rel = (sol.predicted_penalty - measured).abs() / measured.max(1e-12);
+    assert!(
+        rel < 1e-3,
+        "predicted {} vs measured {measured}",
+        sol.predicted_penalty
+    );
+
+    // the re-encode path (`quantize_mixed` from the raw weights) is
+    // bit-identical to the cached realization
+    let fresh = quantize_allocation(&w, &choices, &sol).unwrap();
+    assert_eq!(fresh.layers.len(), qm.layers.len());
+    for (a, b) in qm.layers.iter().zip(&fresh.layers) {
+        assert_eq!(a.name, b.name);
+        assert_eq!(a.code_bits(), b.code_bits());
+        assert_eq!(
+            a.packed_codes().words,
+            b.packed_codes().words,
+            "packed codes differ for {}",
+            a.name
+        );
+        assert_eq!(a.dequantize().data, b.dequantize().data, "layer {}", a.name);
+    }
+
+    // a mixed model has no single serving LUT; a uniform one does
+    assert!(qm.shared_lut_grid().is_none());
+    let all_same = build.realize_uniform(0).unwrap();
+    assert!(all_same.shared_lut_grid().is_some());
+}
+
+#[test]
+fn tighter_budgets_trade_error_monotonically() {
+    let w = tiny_weights(13);
+    let cfg = tiny_cfg();
+    let choices = registry_choices(cfg.group);
+    let build = build_error_db(&w, &choices).unwrap();
+    let alphas = synthetic_alphas(&build.db.layers);
+    let mut last_pen = f64::INFINITY;
+    for b_max in [3.0, 3.5, 4.0, 5.0] {
+        let sol = solve_dp(&build.db, &alphas, b_max).unwrap();
+        let qm = build.realize(&sol.choice).unwrap();
+        assert!(qm.packed_avg_bits() <= b_max + 1e-9);
+        let pen = predict_penalty(&alphas, &qm.layer_errors(&w));
+        // margin covers encode-time vs dequantized-t² f32 rounding
+        assert!(
+            pen <= last_pen * (1.0 + 1e-4) + 1e-12,
+            "penalty not monotone at {b_max}: {pen} > {last_pen}"
+        );
+        last_pen = pen;
+    }
+}
+
+#[test]
+fn mixed_model_dense_weights_match_per_layer_quantizers() {
+    // apply_to on a mixed model uses each layer's OWN grid
+    let w = tiny_weights(17);
+    let cfg = tiny_cfg();
+    let choices = registry_choices(cfg.group);
+    let build = build_error_db(&w, &choices).unwrap();
+    let names = w.linear_names();
+    let choice: Vec<usize> = (0..names.len()).map(|l| l % choices.len()).collect();
+    let qm = build.realize(&choice).unwrap();
+    let dense = qm.apply_to(&w);
+    for (l, name) in names.iter().enumerate() {
+        let solo = choices[choice[l]].1.quantize(name, w.linear(name).unwrap());
+        assert_eq!(
+            dense.linear(name).unwrap().data,
+            solo.dequantize().data,
+            "layer {name}"
+        );
+    }
+}
