@@ -1,8 +1,9 @@
 //! Micro-benchmarks of the framework hot paths (the §Perf inputs):
 //! FWHT, grid nearest-neighbour (brute-force scan vs projection index),
 //! HIGGS layer quantization throughput (serial reference vs blocked
-//! multithreaded encode), bit-packing, DP allocation, qmm kernel
-//! executions at serving shapes.
+//! multithreaded encode), fused decode (blocked parallel dequantize vs
+//! serial reference, decode-from-packed, streaming error measurement),
+//! bit-packing, DP allocation, qmm kernel executions at serving shapes.
 //!
 //! Emits `BENCH_hotpaths.json` (override with `HIGGS_BENCH_JSON`) with
 //! (op, ns/iter, throughput) rows so the perf trajectory is tracked
@@ -14,11 +15,18 @@ use higgs::grids::registry::GridRegistry;
 use higgs::grids::GridKind;
 use higgs::hadamard::{fwht, rht_forward, signs_for};
 use higgs::quant::higgs::HiggsQuantizer;
+use higgs::quant::lut::LutQuantizer;
 use higgs::quant::packing::{pack, unpack};
 use higgs::quant::{QuantData, Quantizer};
 use higgs::tensor::Tensor;
 use higgs::util::bench::BenchRunner;
 use higgs::util::prng::Rng;
+
+/// Raw f32 bits — the decode correctness gates compare bit patterns,
+/// not `==` (which would let a 0.0 → -0.0 regression slip through).
+fn bits_of(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
 
 fn main() {
     let mut r = BenchRunner::new();
@@ -102,6 +110,68 @@ fn main() {
         eprintln!("  -> {:.2} Mparam/s (serial reference)", m.throughput(params) / 1e6);
     }
 
+    // fused decode: blocked parallel dequantize vs the serial
+    // reference on a 1024x1024 LUT layer (the PR acceptance target),
+    // decode-from-packed, the batched-inverse-RHT HIGGS decode, and
+    // the streaming error measurement vs the materializing one
+    {
+        let w = Tensor::from_vec(&[1024, 1024], rng.normal_vec(1024 * 1024));
+        let params = 1024.0 * 1024.0;
+        let ql = LutQuantizer::new(reg.get(GridKind::Nf, 16, 1), 64).quantize("l", &w);
+        // correctness gates: fast paths must match the reference
+        // bit-for-bit before any timing happens
+        let reference = ql.dequantize_reference();
+        assert_eq!(
+            bits_of(&ql.dequantize().data),
+            bits_of(&reference.data),
+            "blocked dequantize diverged"
+        );
+        let pc = ql.packed_codes();
+        assert_eq!(
+            bits_of(&ql.dequantize_from_packed(&pc).data),
+            bits_of(&reference.data),
+            "packed dequantize diverged"
+        );
+        let m = r.bench_items("dequant_dense_1024x1024", params, || ql.dequantize());
+        eprintln!("  -> {:.2} Mparam/s (blocked parallel)", m.throughput(params) / 1e6);
+        let m = r.bench_items("dequant_dense_serial_1024x1024", params, || {
+            ql.dequantize_reference()
+        });
+        eprintln!("  -> {:.2} Mparam/s (serial reference)", m.throughput(params) / 1e6);
+        r.bench_items("dequant_from_packed_1024x1024", params, || {
+            ql.dequantize_from_packed(&pc)
+        });
+
+        // rotated HIGGS layer: decode includes the inverse RHT, batched
+        // per block on the fast path, per-column scalar on the serial one
+        let qh = HiggsQuantizer::new(reg.get(GridKind::Higgs, 256, 2), 64, 7);
+        let qlh = qh.quantize("h", &w);
+        assert_eq!(
+            bits_of(&qlh.dequantize().data),
+            bits_of(&qlh.dequantize_reference().data),
+            "blocked rotated dequantize diverged"
+        );
+        r.bench_items("dequant_rht_1024x1024", params, || qlh.dequantize());
+        r.bench_items("dequant_rht_serial_1024x1024", params, || qlh.dequantize_reference());
+
+        // streaming rel_sq_err (no dense materialization) vs the
+        // materializing reference — the per-cell cost of an ErrorDb
+        // build for quantizers without an encode-time t² fast path
+        let fast = ql.rel_sq_err(&w);
+        let slow = ql.rel_sq_err_reference(&w);
+        assert!(
+            (fast - slow).abs() <= 1e-12 + 1e-9 * slow.abs(),
+            "streaming rel_sq_err diverged: {fast} vs {slow}"
+        );
+        let m = r.bench_items("errordb_streaming_relerr_1024x1024", params, || {
+            ql.rel_sq_err(&w)
+        });
+        eprintln!("  -> {:.2} Mparam/s (streaming)", m.throughput(params) / 1e6);
+        r.bench_items("errordb_materialized_relerr_1024x1024", params, || {
+            ql.rel_sq_err_reference(&w)
+        });
+    }
+
     // bit packing
     {
         let codes: Vec<u32> = (0..98304).map(|_| rng.below(16) as u32).collect();
@@ -175,6 +245,35 @@ fn main() {
             quantize_allocation(&w, &choices, &sol).unwrap()
         });
         eprintln!("  -> mixed encode: {:.2} Mparam/s", m.throughput(params) / 1e6);
+
+        // Mixed-backend param assembly (serve-bench engine-construction
+        // cold start): per-layer dense params from the pool-parallel
+        // decode fan-out
+        {
+            use higgs::model::Manifest;
+            use higgs::serve::Backend;
+            let man = Manifest::parse(&fixture::dense_manifest_text(&cfg)).unwrap();
+            let qm = quantize_allocation(&w, &choices, &sol).unwrap();
+            let m = r.bench_items("mixed_build_params_tiny", params, || {
+                Backend::Mixed.build_params(&man, &w, Some(&qm)).unwrap()
+            });
+            eprintln!("  -> mixed build_params: {:.2} Mparam/s", m.throughput(params) / 1e6);
+        }
+
+        // ErrorDb build through the STREAMING decode measurement:
+        // non-HIGGS choices have no encode-time t² fast path, so every
+        // (layer, choice) cell pays a decode — now fused + blocked
+        // instead of a dense materialize-and-compare
+        use higgs::alloc::errordb::lut_test_choices;
+        let lut_choices = lut_test_choices(cfg.group);
+        let lut_cells = (cfg.linear_params() * lut_choices.len()) as f64;
+        let m = r.bench_items("errordb_streaming_build_tiny_lut3", lut_cells, || {
+            build_error_db(&w, &lut_choices).unwrap()
+        });
+        eprintln!(
+            "  -> ErrorDb build (streaming, LUT choices): {:.2} Mparam-cells/s",
+            m.throughput(lut_cells) / 1e6
+        );
     }
 
     // qmm kernel executions (if artifacts exist)

@@ -6,9 +6,15 @@
 //! matrices. The (layer × choice) grid is flattened into ONE task list
 //! for [`crate::util::pool::par_map`], so big layers on slow grids
 //! balance against small layers on fast ones; each task runs the
-//! indexed blocked encode ([`Quantizer::quantize_with_t2`]). Every
-//! quantized layer is kept, so realizing an [`Allocation`] afterwards
-//! is a zero-encode assembly ([`ErrorDbBuild::realize`]).
+//! indexed blocked encode ([`Quantizer::quantize_with_t2`]). HIGGS
+//! choices compute t² during encode (rotated-space residual); every
+//! other quantizer (LUT/RTN/HQQ) goes through the default
+//! `quantize_with_t2`, which now measures via the STREAMING blocked
+//! decode (`QuantizedLayer::rel_sq_err`) — error partials accumulate
+//! block-by-block, so no (layer, choice) cell ever materializes a
+//! dense K×N reconstruction. Every quantized layer is kept, so
+//! realizing an [`Allocation`] afterwards is a zero-encode assembly
+//! ([`ErrorDbBuild::realize`]).
 //!
 //! [`quantize_allocation`] is the re-encode path through
 //! [`QuantizedModel::quantize_mixed`] for callers that only kept the
@@ -166,6 +172,30 @@ pub fn higgs_test_choices(group: usize, seed: u64) -> Vec<(GridChoice, Box<dyn Q
         .collect()
 }
 
+/// Non-HIGGS comparator choices (scalar LUT grids at 2/4/8 bits) —
+/// quantizers WITHOUT an encode-time t² fast path: their ErrorDb cells
+/// are measured by the streaming blocked decode
+/// (`QuantizedLayer::rel_sq_err`), never materializing a dense
+/// reconstruction. Shared by tests and `micro_hotpaths`.
+#[doc(hidden)]
+pub fn lut_test_choices(group: usize) -> Vec<(GridChoice, Box<dyn Quantizer>)> {
+    use crate::grids::registry::GridRegistry;
+    use crate::grids::GridKind;
+    use crate::quant::lut::LutQuantizer;
+    let reg = GridRegistry::new();
+    [(GridKind::Nf, 4usize), (GridKind::Nf, 16), (GridKind::Uniform, 256)]
+        .iter()
+        .map(|&(kind, n)| {
+            let q = LutQuantizer::new(reg.get(kind, n, 1), group);
+            let c = GridChoice {
+                id: q.name(),
+                bits: (n as f64).log2() + 16.0 / group as f64,
+            };
+            (c, Box::new(q) as Box<dyn Quantizer>)
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -197,6 +227,28 @@ mod tests {
                 let t2 = ql.rel_sq_err(w.linear(name).unwrap());
                 let rel = (build.db.t2[l][j] - t2).abs() / t2.max(1e-12);
                 assert!(rel < 1e-3, "t2[{l}][{j}]: {} vs {}", build.db.t2[l][j], t2);
+            }
+        }
+    }
+
+    #[test]
+    fn errordb_builds_for_non_higgs_quantizers_via_streaming_decode() {
+        // LUT/RTN-style choices lack quantize_with_t2 fast paths; the
+        // default now measures through the streaming blocked decode.
+        // The cells must equal the materializing reference measurement.
+        let w = tiny_weights();
+        let choices = lut_test_choices(16);
+        let build = build_error_db(&w, &choices).unwrap();
+        for row in &build.db.t2 {
+            assert!(row[0] > row[1] && row[1] > row[2], "{row:?}");
+        }
+        for (l, name) in build.db.layers.iter().enumerate() {
+            for (j, (_, q)) in choices.iter().enumerate() {
+                let wt = w.linear(name).unwrap();
+                let ql = q.quantize(name, wt);
+                let t2_ref = ql.rel_sq_err_reference(wt);
+                let rel = (build.db.t2[l][j] - t2_ref).abs() / t2_ref.max(1e-12);
+                assert!(rel < 1e-6, "t2[{l}][{j}]: {} vs {t2_ref}", build.db.t2[l][j]);
             }
         }
     }

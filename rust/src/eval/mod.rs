@@ -8,8 +8,9 @@ pub mod tasks;
 use crate::config::ModelConfig;
 use crate::data::{Corpus, Split};
 use crate::model::Weights;
-use crate::runtime::{dense_args, Engine, HostArg};
+use crate::runtime::{dense_param_literals, Engine, Executable, HostArg};
 use anyhow::Result;
+use std::sync::Arc;
 
 pub const EVAL_BATCH: usize = 8;
 
@@ -21,60 +22,88 @@ pub struct Evaluator<'a> {
     pub ppl_batches: usize,
 }
 
+/// A graph executable + one weights object's params as XLA literals,
+/// converted ONCE and borrowed on every batch (the engine's §Perf
+/// pattern — the old path re-cloned every dense weight into fresh
+/// `HostArg`s per batch through `dense_args`).
+pub struct Prepared {
+    exe: Arc<Executable>,
+    params: Vec<xla::Literal>,
+}
+
 impl<'a> Evaluator<'a> {
     pub fn new(engine: &'a Engine, cfg: ModelConfig) -> Self {
         let corpus = Corpus::new(cfg.vocab, cfg.seq, 0xC0_1155);
         Evaluator { engine, cfg, corpus, ppl_batches: 4 }
     }
 
+    /// Load `artifact` and convert this weights object's params to
+    /// literals once, for reuse across batches.
+    fn prepare(&self, artifact: &str, weights: &Weights) -> Result<Prepared> {
+        let exe = self.engine.load(artifact)?;
+        let params = dense_param_literals(&exe.manifest, weights)?;
+        Ok(Prepared { exe, params })
+    }
+
+    /// Run a prepared graph on one token batch; returns the first
+    /// output's f32 data.
+    fn run_prepared(&self, prep: &Prepared, tokens: Vec<i32>) -> Result<Vec<f32>> {
+        let tok_lit = HostArg::I32(tokens, vec![EVAL_BATCH, self.cfg.seq]).to_literal()?;
+        let mut args: Vec<&xla::Literal> = vec![&tok_lit];
+        args.extend(prep.params.iter());
+        let outs = self.engine.run_literals(&prep.exe, &args)?;
+        outs[0].to_vec::<f32>().map_err(|e| anyhow::anyhow!("read output: {e:?}"))
+    }
+
     /// Validation perplexity: exp(mean token cross-entropy).
     pub fn perplexity(&self, weights: &Weights) -> Result<f64> {
-        let exe = self.engine.load(&format!("fwd_loss_{}", self.cfg.name))?;
+        let prep = self.prepare(&format!("fwd_loss_{}", self.cfg.name), weights)?;
         let mut total = 0.0f64;
         for b in 0..self.ppl_batches {
             let toks = self.corpus.batch(Split::Val, b * EVAL_BATCH, EVAL_BATCH);
-            let args = dense_args(
-                &exe.manifest,
-                vec![HostArg::I32(toks, vec![EVAL_BATCH, self.cfg.seq])],
-                weights,
-            )?;
-            let outs = self.engine.run(&exe, &args)?;
-            total += outs[0].data[0] as f64;
+            total += self.run_prepared(&prep, toks)?[0] as f64;
         }
         Ok((total / self.ppl_batches as f64).exp())
     }
 
     /// Mean loss (not exponentiated) — used by the Hessian probes.
     pub fn loss(&self, weights: &Weights, batches: usize) -> Result<f64> {
-        let exe = self.engine.load(&format!("fwd_loss_{}", self.cfg.name))?;
+        let prep = self.prepare(&format!("fwd_loss_{}", self.cfg.name), weights)?;
         let mut total = 0.0f64;
         for b in 0..batches {
             let toks = self.corpus.batch(Split::Val, b * EVAL_BATCH, EVAL_BATCH);
-            let args = dense_args(
-                &exe.manifest,
-                vec![HostArg::I32(toks, vec![EVAL_BATCH, self.cfg.seq])],
-                weights,
-            )?;
-            total += self.engine.run(&exe, &args)?[0].data[0] as f64;
+            total += self.run_prepared(&prep, toks)?[0] as f64;
         }
         Ok(total / batches as f64)
     }
 
+    /// Prepare the logits graph for a weights object — callers that
+    /// evaluate many token batches against the same weights (KL
+    /// calibration, the probe tasks) convert params once here instead
+    /// of per batch.
+    pub fn prepare_logits(&self, weights: &Weights) -> Result<Prepared> {
+        self.prepare(&format!("fwd_logits_{}", self.cfg.name), weights)
+    }
+
+    /// Logits of a prepared weights object on one token batch
+    /// [EVAL_BATCH, seq] → [B*S, V] flattened.
+    pub fn logits_prepared(&self, prep: &Prepared, tokens: Vec<i32>) -> Result<Vec<f32>> {
+        self.run_prepared(prep, tokens)
+    }
+
     /// Logits on a token batch [EVAL_BATCH, seq] → [B*S, V] flattened.
+    /// One-shot convenience; loops should [`Evaluator::prepare_logits`]
+    /// once and call [`Evaluator::logits_prepared`] per batch.
     pub fn logits(&self, weights: &Weights, tokens: Vec<i32>) -> Result<Vec<f32>> {
-        let exe = self.engine.load(&format!("fwd_logits_{}", self.cfg.name))?;
-        let args = dense_args(
-            &exe.manifest,
-            vec![HostArg::I32(tokens, vec![EVAL_BATCH, self.cfg.seq])],
-            weights,
-        )?;
-        Ok(self.engine.run(&exe, &args)?.remove(0).data)
+        let prep = self.prepare_logits(weights)?;
+        self.run_prepared(&prep, tokens)
     }
 
     /// Mean KL( P_ref ‖ P_q ) on uniformly random tokens — the paper's
     /// data-free calibration objective (§5 "Data Free Dynamic
     /// Quantization": "KL-divergence between pretrained and quantized
-    /// models on randomly sampled text tokens").
+    /// models on randomly sampled text tokens"). Both models' params
+    /// are converted to literals once, not per batch.
     pub fn kl_on_random(
         &self,
         reference: &Weights,
@@ -83,14 +112,16 @@ impl<'a> Evaluator<'a> {
         seed: u64,
     ) -> Result<f64> {
         let v = self.cfg.vocab;
+        let prep_r = self.prepare_logits(reference)?;
+        let prep_q = self.prepare_logits(quantized)?;
         let mut total = 0.0f64;
         let mut count = 0usize;
         for b in 0..batches {
             let toks = self
                 .corpus
                 .random_tokens(seed ^ (b as u64), EVAL_BATCH * self.cfg.seq);
-            let lr = self.logits(reference, toks.clone())?;
-            let lq = self.logits(quantized, toks)?;
+            let lr = self.run_prepared(&prep_r, toks.clone())?;
+            let lq = self.run_prepared(&prep_q, toks)?;
             for (pr, pq) in lr.chunks(v).zip(lq.chunks(v)) {
                 total += kl_logits(pr, pq);
                 count += 1;

@@ -9,7 +9,7 @@
 //! All probes report accuracy in [0,1]; a quantized model's degradation
 //! ordering across these mirrors the paper's task tables.
 
-use super::{argmax, log_sum_exp, Evaluator, EVAL_BATCH};
+use super::{argmax, log_sum_exp, Evaluator, Prepared, EVAL_BATCH};
 use crate::data::Split;
 use crate::model::Weights;
 use crate::util::prng::Rng;
@@ -30,16 +30,23 @@ impl TaskScores {
 
 impl<'a> Evaluator<'a> {
     pub fn task_scores(&self, weights: &Weights, seed: u64) -> Result<TaskScores> {
+        // one params→literals conversion shared by all three probes
+        // (each probe runs ≥ 1 full logits batch on the same weights)
+        let prep = self.prepare_logits(weights)?;
         Ok(TaskScores {
-            copy: self.copy_accuracy(weights, seed)?,
-            grammar: self.grammar_accuracy(weights)?,
-            cloze: self.cloze_accuracy(weights, seed ^ 0xC102E)?,
+            copy: self.copy_accuracy_prepared(&prep, seed)?,
+            grammar: self.grammar_accuracy_prepared(&prep)?,
+            cloze: self.cloze_accuracy_prepared(&prep, seed ^ 0xC102E)?,
         })
     }
 
     /// Copy probe: `BOS a1..am  a1..am` — accuracy of predicting the
     /// second occurrence tokens from the first (induction heads).
     pub fn copy_accuracy(&self, weights: &Weights, seed: u64) -> Result<f64> {
+        self.copy_accuracy_prepared(&self.prepare_logits(weights)?, seed)
+    }
+
+    fn copy_accuracy_prepared(&self, prep: &Prepared, seed: u64) -> Result<f64> {
         let s = self.cfg.seq;
         let m = (s - 2) / 2;
         let mut rng = Rng::from_stream(seed, "task:copy");
@@ -53,7 +60,7 @@ impl<'a> Evaluator<'a> {
             row.resize(s, 0);
             toks.extend(row);
         }
-        let logits = self.logits(weights, toks.clone())?;
+        let logits = self.logits_prepared(prep, toks.clone())?;
         let v = self.cfg.vocab;
         let mut hits = 0usize;
         let mut total = 0usize;
@@ -74,10 +81,14 @@ impl<'a> Evaluator<'a> {
     /// Grammar probe: next-token accuracy vs. the corpus generator's
     /// top successor on held-out text.
     pub fn grammar_accuracy(&self, weights: &Weights) -> Result<f64> {
+        self.grammar_accuracy_prepared(&self.prepare_logits(weights)?)
+    }
+
+    fn grammar_accuracy_prepared(&self, prep: &Prepared) -> Result<f64> {
         let s = self.cfg.seq;
         let v = self.cfg.vocab;
         let toks = self.corpus.batch(Split::Val, 10_000, EVAL_BATCH);
-        let logits = self.logits(weights, toks.clone())?;
+        let logits = self.logits_prepared(prep, toks.clone())?;
         let mut hits = 0usize;
         let mut total = 0usize;
         for b in 0..EVAL_BATCH {
@@ -99,6 +110,10 @@ impl<'a> Evaluator<'a> {
     /// true 4-token continuation against 3 random distractors by total
     /// log-likelihood; accuracy = fraction where truth wins.
     pub fn cloze_accuracy(&self, weights: &Weights, seed: u64) -> Result<f64> {
+        self.cloze_accuracy_prepared(&self.prepare_logits(weights)?, seed)
+    }
+
+    fn cloze_accuracy_prepared(&self, prep: &Prepared, seed: u64) -> Result<f64> {
         let s = self.cfg.seq;
         let v = self.cfg.vocab;
         let cont = 4usize;
@@ -128,7 +143,7 @@ impl<'a> Evaluator<'a> {
                     toks.extend(row);
                 }
             }
-            let logits = self.logits(weights, toks.clone())?;
+            let logits = self.logits_prepared(prep, toks.clone())?;
             for (q, &truth) in truth_idx.iter().enumerate() {
                 let mut best = (f64::NEG_INFINITY, 0usize);
                 for opt in 0..4 {

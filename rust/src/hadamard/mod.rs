@@ -79,6 +79,22 @@ pub fn rht_block_forward(block: &mut [f32], cols: usize, k: usize, signs: &[f32]
     }
 }
 
+/// Batched grouped inverse RHT over a column-major block — the decode
+/// mirror of [`rht_block_forward`]: `block` holds `cols` contiguous
+/// columns of length `k` (layout `block[c*k + i]`), each inverted in
+/// place in groups of `g`, with arithmetic identical to calling
+/// [`rht_inverse`] per column. The blocked dequantize kernel gathers a
+/// block of decoded columns once and runs the whole block through the
+/// inverse rotation instead of re-copying each column out of the
+/// row-major output (see `quant::decode`).
+pub fn rht_inverse_block(block: &mut [f32], cols: usize, k: usize, signs: &[f32], g: usize) {
+    assert_eq!(block.len(), cols * k);
+    assert_eq!(signs.len(), k);
+    for col in block.chunks_mut(k) {
+        rht_inverse(col, signs, g);
+    }
+}
+
 /// Apply the orthonormal grouped RHT along the *rows* (input dim) of a
 /// row-major [K, N] matrix: every column is transformed independently in
 /// groups of g along K. This is the weight-space transform of App. G
@@ -234,6 +250,44 @@ mod tests {
                 assert_eq!(c, want.as_slice());
             }
         });
+    }
+
+    #[test]
+    fn inverse_block_matches_per_column() {
+        forall("rht inverse block == per-column", 20, |gn| {
+            let g = gn.pow2_in(2, 6);
+            let groups = gn.usize_in(1, 3);
+            let k = g * groups;
+            let cols = gn.usize_in(1, 5);
+            let signs = gn.rng().sign_vec(k);
+            let mut block = gn.vec_normal(cols * k);
+            let reference: Vec<Vec<f32>> = block
+                .chunks(k)
+                .map(|col| {
+                    let mut c = col.to_vec();
+                    rht_inverse(&mut c, &signs, g);
+                    c
+                })
+                .collect();
+            rht_inverse_block(&mut block, cols, k, &signs, g);
+            for (c, want) in block.chunks(k).zip(&reference) {
+                assert_eq!(c, want.as_slice());
+            }
+        });
+    }
+
+    #[test]
+    fn forward_block_inverse_block_roundtrip() {
+        let (k, cols, g) = (16usize, 3usize, 8usize);
+        let mut rng = crate::util::prng::Rng::new(21);
+        let x: Vec<f32> = rng.normal_vec(cols * k);
+        let signs = signs_for(4, "blk", k);
+        let mut y = x.clone();
+        rht_block_forward(&mut y, cols, k, &signs, g);
+        rht_inverse_block(&mut y, cols, k, &signs, g);
+        for (a, b) in y.iter().zip(&x) {
+            assert!((a - b).abs() < 1e-4, "{a} {b}");
+        }
     }
 
     #[test]

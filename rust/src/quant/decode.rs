@@ -1,0 +1,264 @@
+//! Fused decode kernels — the architectural mirror of the blocked
+//! encode path (`quant::higgs`).
+//!
+//! `QuantizedLayer::dequantize` used to be a serial, column-strided
+//! scalar double-loop (plus a per-column copy + scalar `rht_inverse`
+//! for rotated HIGGS layers). It ran once per layer at Mixed-backend
+//! engine construction, inside every `rel_sq_err` measurement, and in
+//! `Backend::build_params` — making decode the second hot loop of the
+//! repo after encode. This module rebuilds it as row/column-blocked,
+//! cache-aware kernels:
+//!
+//! * columns are processed in blocks of `B` (`HIGGS_DECODE_BLOCK`,
+//!   default 32) fanned out over [`crate::util::pool::par_for`] with
+//!   per-thread scratch;
+//! * codes and scales are **gathered once per block**: the code plane
+//!   is read row-contiguously (one `gather` per code row — a plain
+//!   `copy_from_slice` for in-memory codes, a block-wise
+//!   [`PackedCodes::unpack_into`] for the bit-packed storage
+//!   representation), and each grid point is looked up once per
+//!   p-tuple instead of once per weight;
+//! * rotated (HIGGS) layers batch the inverse rotation through
+//!   [`crate::hadamard::rht_inverse_block`] over the whole column-major
+//!   block instead of re-copying each column out of the row-major
+//!   output and calling scalar `rht_inverse` on it;
+//! * sinks consume finished blocks: the dense scatter
+//!   ([`decode_dense`]) writes disjoint columns through a
+//!   [`SharedSlice`], and the streaming error measurement
+//!   ([`rel_sq_err_streaming`]) accumulates ‖Ŵ−W‖² / ‖W‖² partials
+//!   into per-block slots without ever materializing Ŵ.
+//!
+//! Every per-value f32 operation happens in the same order as the
+//! serial reference ([`super::QuantizedLayer::dequantize_reference`]),
+//! so the blocked parallel output is **bit-for-bit equal** to the
+//! reference for any thread count or block size — property-tested in
+//! `rust/tests/prop_fast_decode.rs`. The streaming error is
+//! deterministic too (fixed per-block partials summed in block order),
+//! and equals the materialized measurement up to f64 summation-order
+//! rounding.
+
+use super::packing::PackedCodes;
+use crate::grids::Grid;
+use crate::hadamard::rht_inverse_block;
+use crate::util::pool::{par_for, SharedSlice};
+use std::cell::RefCell;
+
+thread_local! {
+    /// Per-worker decode scratch (column-major block buffer + one code
+    /// row), reused across the blocks a worker processes. Both buffers
+    /// are fully overwritten before being read (the code-row gather
+    /// covers every `crow` slot, the point/scale passes cover every
+    /// `buf` index of the current block), so stale contents are never
+    /// observable.
+    static DECODE_SCRATCH: RefCell<(Vec<f32>, Vec<u32>)> =
+        const { RefCell::new((Vec::new(), Vec::new())) };
+}
+
+/// Columns per decode block (`HIGGS_DECODE_BLOCK` overrides). Like the
+/// encode block, 32 columns × a few thousand rows of f32 keeps the
+/// block buffer L2-resident while amortizing the strided scatter.
+pub fn decode_block_cols() -> usize {
+    crate::util::env_usize("HIGGS_DECODE_BLOCK", 32)
+}
+
+/// Where a decode kernel reads codes from: the in-memory `Vec<u32>`
+/// plane or the bit-packed storage representation (decode-from-packed —
+/// no intermediate unpacked vector is ever materialized).
+#[derive(Clone, Copy)]
+pub enum CodeSource<'a> {
+    Unpacked(&'a [u32]),
+    Packed(&'a PackedCodes),
+}
+
+impl CodeSource<'_> {
+    /// Read codes `[start, start + out.len())` into `out`.
+    fn gather(&self, start: usize, out: &mut [u32]) {
+        match self {
+            CodeSource::Unpacked(c) => out.copy_from_slice(&c[start..start + out.len()]),
+            CodeSource::Packed(pc) => pc.unpack_into(start, out),
+        }
+    }
+}
+
+/// Borrowed decode-relevant view of one quantized layer. `signs: None`
+/// for LUT payloads yields the rotated (serving) representation;
+/// `Some` applies the grouped inverse RHT.
+pub(super) struct LayerView<'a> {
+    pub k: usize,
+    pub n: usize,
+    pub g: usize,
+    pub codes: CodeSource<'a>,
+    pub payload: Payload<'a>,
+}
+
+pub(super) enum Payload<'a> {
+    Lut { scales: &'a [f32], grid: &'a Grid, signs: Option<&'a [f32]> },
+    Uniform { steps: &'a [f32], zeros: &'a [f32] },
+}
+
+/// Decode columns `[j0, j0 + bcols)` into the column-major scratch
+/// `buf[b * k + kk]`. Codes/scales are streamed row-contiguously;
+/// per-value arithmetic matches the serial reference exactly.
+fn decode_block(v: &LayerView<'_>, j0: usize, bcols: usize, buf: &mut [f32], crow: &mut [u32]) {
+    let (k, n, g) = (v.k, v.n, v.g);
+    match &v.payload {
+        Payload::Lut { scales, grid, signs } => {
+            let p = grid.p;
+            debug_assert_eq!(k % p, 0);
+            debug_assert_eq!(k % g, 0);
+            // gather the code plane row-by-row (contiguous reads),
+            // scatter each p-tuple's grid point into per-column runs
+            for ci in 0..k / p {
+                v.codes.gather(ci * n + j0, &mut crow[..bcols]);
+                for (b, &code) in crow[..bcols].iter().enumerate() {
+                    let pt = grid.point(code as usize);
+                    for (t, &val) in pt.iter().enumerate() {
+                        buf[b * k + ci * p + t] = val;
+                    }
+                }
+            }
+            // group scales: one scales row covers g block rows
+            for gi in 0..k / g {
+                let srow = &scales[gi * n + j0..gi * n + j0 + bcols];
+                for (b, &sigma) in srow.iter().enumerate() {
+                    for val in &mut buf[b * k + gi * g..b * k + (gi + 1) * g] {
+                        *val *= sigma;
+                    }
+                }
+            }
+            // batched inverse rotation over the whole block (identical
+            // arithmetic to per-column rht_inverse)
+            if let Some(signs) = signs {
+                rht_inverse_block(&mut buf[..bcols * k], bcols, k, signs, g);
+            }
+        }
+        Payload::Uniform { steps, zeros } => {
+            for kk in 0..k {
+                v.codes.gather(kk * n + j0, &mut crow[..bcols]);
+                let gi = kk / g;
+                let srow = &steps[gi * n + j0..gi * n + j0 + bcols];
+                let zrow = &zeros[gi * n + j0..gi * n + j0 + bcols];
+                for (b, &code) in crow[..bcols].iter().enumerate() {
+                    buf[b * k + kk] = (code as f32 - zrow[b]) * srow[b];
+                }
+            }
+        }
+    }
+}
+
+/// Drive the blocked decode: split the n columns into blocks, decode
+/// each block into a per-worker column-major buffer, and hand the
+/// finished block to `sink(bi, j0, bcols, buf)`. Blocks fan out over
+/// the pool (inline when already on a pool worker); the sink's writes
+/// must be disjoint per block — a dense column scatter or per-block
+/// accumulator slots.
+fn for_each_block(
+    view: &LayerView<'_>,
+    block: usize,
+    sink: impl Fn(usize, usize, usize, &[f32]) + Sync,
+) {
+    let (k, n) = (view.k, view.n);
+    let block = block.max(1);
+    let nblocks = n.div_ceil(block);
+    let sink = &sink;
+    par_for(nblocks, |bi| {
+        let j0 = bi * block;
+        let bcols = (j0 + block).min(n) - j0;
+        DECODE_SCRATCH.with(|cell| {
+            let scratch = &mut *cell.borrow_mut();
+            let (buf, crow) = (&mut scratch.0, &mut scratch.1);
+            buf.resize(bcols * k, 0.0);
+            crow.resize(bcols, 0);
+            decode_block(view, j0, bcols, buf, crow);
+            sink(bi, j0, bcols, &buf[..bcols * k]);
+        });
+    });
+}
+
+/// Blocked multithreaded dequantize into a dense row-major `[k, n]`
+/// buffer — bit-identical to the serial reference for any thread count
+/// or block size.
+pub(super) fn decode_dense(view: &LayerView<'_>, block: usize) -> Vec<f32> {
+    let (k, n) = (view.k, view.n);
+    let mut w = vec![0.0f32; k * n];
+    {
+        let out = SharedSlice::new(&mut w);
+        for_each_block(view, block, |_bi, j0, bcols, buf| {
+            for kk in 0..k {
+                for b in 0..bcols {
+                    // SAFETY: column j0+b is decoded by exactly this
+                    // block; positions are disjoint across workers.
+                    unsafe { out.write(kk * n + j0 + b, buf[b * k + kk]) };
+                }
+            }
+        });
+    }
+    w
+}
+
+/// Streaming relative squared error ‖Ŵ−W‖²_F / ‖W‖²_F: accumulates
+/// block-by-block against the original row-major weights without ever
+/// materializing the dense Ŵ. Deterministic for any thread count
+/// (per-block partials summed in block order).
+pub(super) fn rel_sq_err_streaming(view: &LayerView<'_>, original: &[f32], block: usize) -> f64 {
+    let (k, n) = (view.k, view.n);
+    assert_eq!(original.len(), k * n, "original shape mismatch");
+    let block = block.max(1);
+    let nblocks = n.div_ceil(block);
+    let mut num = vec![0.0f64; nblocks];
+    let mut den = vec![0.0f64; nblocks];
+    {
+        let num_out = SharedSlice::new(&mut num);
+        let den_out = SharedSlice::new(&mut den);
+        for_each_block(view, block, |bi, j0, bcols, buf| {
+            let mut bn = 0.0f64;
+            let mut bd = 0.0f64;
+            for b in 0..bcols {
+                let col = &buf[b * k..(b + 1) * k];
+                for (kk, &dec) in col.iter().enumerate() {
+                    let orig = original[kk * n + j0 + b];
+                    let d = (dec - orig) as f64;
+                    bn += d * d;
+                    bd += (orig as f64) * (orig as f64);
+                }
+            }
+            // SAFETY: slot bi is written by this block only.
+            unsafe { num_out.write(bi, bn) };
+            unsafe { den_out.write(bi, bd) };
+        });
+    }
+    let num: f64 = num.iter().sum();
+    let den: f64 = den.iter().sum();
+    if den == 0.0 {
+        if num == 0.0 {
+            0.0
+        } else {
+            f64::INFINITY
+        }
+    } else {
+        num / den
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn block_knob_floor() {
+        // the env default path: whatever the env says, never 0
+        assert!(decode_block_cols() >= 1);
+    }
+
+    #[test]
+    fn code_source_gather_agrees() {
+        let codes: Vec<u32> = (0..100).map(|i| (i % 16) as u32).collect();
+        let pc = PackedCodes::from_codes(&codes, 4);
+        let mut a = vec![0u32; 7];
+        let mut b = vec![0u32; 7];
+        CodeSource::Unpacked(codes.as_slice()).gather(41, &mut a);
+        CodeSource::Packed(&pc).gather(41, &mut b);
+        assert_eq!(a, b);
+        assert_eq!(a, codes[41..48].to_vec());
+    }
+}

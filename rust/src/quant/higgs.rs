@@ -60,12 +60,7 @@ thread_local! {
 /// columns × a few thousand rows of f32 keeps a block's gather buffer
 /// inside L2 while amortizing the strided row reads across columns.
 fn encode_block_cols() -> usize {
-    if let Ok(s) = std::env::var("HIGGS_ENCODE_BLOCK") {
-        if let Ok(n) = s.parse::<usize>() {
-            return n.max(1);
-        }
-    }
-    32
+    crate::util::env_usize("HIGGS_ENCODE_BLOCK", 32)
 }
 
 pub struct HiggsQuantizer {

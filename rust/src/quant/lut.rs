@@ -10,6 +10,7 @@
 use super::{eff_group, QuantData, QuantizedLayer, Quantizer};
 use crate::grids::Grid;
 use crate::tensor::Tensor;
+use crate::util::pool::{par_for, SharedSlice};
 use std::sync::Arc;
 
 pub struct LutQuantizer {
@@ -22,6 +23,74 @@ impl LutQuantizer {
         assert_eq!(grid.p, 1, "LutQuantizer is scalar; use HiggsQuantizer for p>1");
         LutQuantizer { grid, group }
     }
+
+    /// Encode one column (group scales + nearest-level rounding) into
+    /// its strided positions. `dims` is `(n, g, ngroups)`. Shared by
+    /// the parallel fan-out and the serial reference, so both orders
+    /// of per-element f32 arithmetic are identical by construction.
+    fn encode_column(
+        &self,
+        w: &Tensor,
+        j: usize,
+        dims: (usize, usize, usize),
+        mut put_code: impl FnMut(usize, u32),
+        mut put_scale: impl FnMut(usize, f32),
+    ) {
+        let (n, g, ngroups) = dims;
+        for gi in 0..ngroups {
+            let mut ss = 0.0f64;
+            for t in 0..g {
+                let v = w.data[(gi * g + t) * n + j] as f64;
+                ss += v * v;
+            }
+            let sigma = ((ss / g as f64).sqrt() as f32).max(1e-12);
+            put_scale(gi * n + j, sigma);
+            for t in 0..g {
+                let v = w.data[(gi * g + t) * n + j] / sigma;
+                put_code((gi * g + t) * n + j, self.grid.nearest_1d(v) as u32);
+            }
+        }
+    }
+
+    /// The original fully-serial strided column walk — kept as the
+    /// bit-exact oracle for the parallel path.
+    pub fn quantize_reference(&self, layer_name: &str, w: &Tensor) -> QuantizedLayer {
+        let (k, n) = (w.rows(), w.cols());
+        let g = eff_group(self.group, k);
+        let ngroups = k / g;
+        let mut codes = vec![0u32; k * n];
+        let mut scales = vec![0.0f32; ngroups * n];
+        for j in 0..n {
+            self.encode_column(
+                w,
+                j,
+                (n, g, ngroups),
+                |i, c| codes[i] = c,
+                |i, s| scales[i] = s,
+            );
+        }
+        self.finish(layer_name, k, n, g, codes, scales)
+    }
+
+    fn finish(
+        &self,
+        layer_name: &str,
+        k: usize,
+        n: usize,
+        g: usize,
+        codes: Vec<u32>,
+        scales: Vec<f32>,
+    ) -> QuantizedLayer {
+        QuantizedLayer {
+            name: layer_name.to_string(),
+            method: self.name(),
+            k,
+            n_out: n,
+            g,
+            data: QuantData::Lut { codes, scales, grid: self.grid.clone(), signs: None },
+            bits_per_param: self.bits_per_param(k),
+        }
+    }
 }
 
 impl Quantizer for LutQuantizer {
@@ -33,36 +102,34 @@ impl Quantizer for LutQuantizer {
         (self.grid.n as f64).log2() + 16.0 / eff_group(self.group, k) as f64
     }
 
+    /// Column-parallel encode: columns are independent, so they fan
+    /// out over [`crate::util::pool::par_for`] and scatter codes/scales
+    /// through [`SharedSlice`] (column j's strided positions are
+    /// written by exactly one worker). Per-element arithmetic runs in
+    /// the same order as [`LutQuantizer::quantize_reference`], so the
+    /// output is bit-identical for any thread count.
     fn quantize(&self, layer_name: &str, w: &Tensor) -> QuantizedLayer {
         let (k, n) = (w.rows(), w.cols());
         let g = eff_group(self.group, k);
         let ngroups = k / g;
         let mut codes = vec![0u32; k * n];
         let mut scales = vec![0.0f32; ngroups * n];
-        for j in 0..n {
-            for gi in 0..ngroups {
-                let mut ss = 0.0f64;
-                for t in 0..g {
-                    let v = w.data[(gi * g + t) * n + j] as f64;
-                    ss += v * v;
-                }
-                let sigma = ((ss / g as f64).sqrt() as f32).max(1e-12);
-                scales[gi * n + j] = sigma;
-                for t in 0..g {
-                    let v = w.data[(gi * g + t) * n + j] / sigma;
-                    codes[(gi * g + t) * n + j] = self.grid.nearest_1d(v) as u32;
-                }
-            }
+        {
+            let codes_out = SharedSlice::new(&mut codes);
+            let scales_out = SharedSlice::new(&mut scales);
+            par_for(n, |j| {
+                self.encode_column(
+                    w,
+                    j,
+                    (n, g, ngroups),
+                    // SAFETY: all written indices are ≡ j (mod n) —
+                    // disjoint across par_for workers.
+                    |i, c| unsafe { codes_out.write(i, c) },
+                    |i, s| unsafe { scales_out.write(i, s) },
+                );
+            });
         }
-        QuantizedLayer {
-            name: layer_name.to_string(),
-            method: self.name(),
-            k,
-            n_out: n,
-            g,
-            data: QuantData::Lut { codes, scales, grid: self.grid.clone(), signs: None },
-            bits_per_param: self.bits_per_param(k),
-        }
+        self.finish(layer_name, k, n, g, codes, scales)
     }
 }
 
@@ -117,6 +184,29 @@ mod tests {
         let d2 = q2.dequantize();
         for (a, b) in d1.data.iter().zip(&d2.data) {
             assert!((a * 7.5 - b).abs() < 1e-3, "{a} {b}");
+        }
+    }
+
+    #[test]
+    fn parallel_quantize_matches_serial_reference() {
+        let reg = GridRegistry::new();
+        let cases = [(GridKind::Nf, 16usize), (GridKind::Af, 8), (GridKind::Uniform, 256)];
+        for (kind, n_grid) in cases {
+            let q = LutQuantizer::new(reg.get(kind, n_grid, 1), 32);
+            let w = rand_layer(96, 41, (n_grid + 3) as u64);
+            let fast = q.quantize("l", &w);
+            let slow = q.quantize_reference("l", &w);
+            match (&fast.data, &slow.data) {
+                (
+                    QuantData::Lut { codes: ca, scales: sa, .. },
+                    QuantData::Lut { codes: cb, scales: sb, .. },
+                ) => {
+                    assert_eq!(ca, cb, "codes differ for {kind:?}");
+                    let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+                    assert_eq!(bits(sa), bits(sb), "scales differ for {kind:?}");
+                }
+                _ => panic!("expected LUT data"),
+            }
         }
     }
 

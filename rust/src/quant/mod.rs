@@ -7,6 +7,7 @@
 //! (`python/compile/kernels/lut_matmul.py`).
 
 pub mod calibration;
+pub mod decode;
 pub mod gptq;
 pub mod higgs;
 pub mod outlier;
@@ -54,8 +55,104 @@ pub struct QuantizedLayer {
 }
 
 impl QuantizedLayer {
-    /// Reconstruct the dense weight matrix in the ORIGINAL space.
+    /// Borrowed decode view for the blocked kernels. `codes_override`
+    /// swaps in an alternate code plane (decode-from-packed);
+    /// `keep_rotated` skips the inverse RHT (the serving view).
+    fn decode_view<'a>(
+        &'a self,
+        codes_override: Option<decode::CodeSource<'a>>,
+        keep_rotated: bool,
+    ) -> decode::LayerView<'a> {
+        let (k, n, g) = (self.k, self.n_out, self.g);
+        match &self.data {
+            QuantData::Lut { codes, scales, grid, signs } => decode::LayerView {
+                k,
+                n,
+                g,
+                codes: codes_override
+                    .unwrap_or_else(|| decode::CodeSource::Unpacked(codes.as_slice())),
+                payload: decode::Payload::Lut {
+                    scales: scales.as_slice(),
+                    grid: grid.as_ref(),
+                    signs: if keep_rotated { None } else { signs.as_deref() },
+                },
+            },
+            QuantData::Uniform { codes, steps, zeros, .. } => decode::LayerView {
+                k,
+                n,
+                g,
+                codes: codes_override
+                    .unwrap_or_else(|| decode::CodeSource::Unpacked(codes.as_slice())),
+                payload: decode::Payload::Uniform {
+                    steps: steps.as_slice(),
+                    zeros: zeros.as_slice(),
+                },
+            },
+        }
+    }
+
+    /// Reconstruct the dense weight matrix in the ORIGINAL space —
+    /// blocked, multithreaded, bit-identical to
+    /// [`QuantizedLayer::dequantize_reference`] (see [`decode`]).
     pub fn dequantize(&self) -> Tensor {
+        self.dequantize_blocked(decode::decode_block_cols())
+    }
+
+    /// [`QuantizedLayer::dequantize`] with an explicit column-block
+    /// size (the `HIGGS_DECODE_BLOCK` knob resolves in `dequantize`;
+    /// tests pass the block directly to avoid mutating process
+    /// environment).
+    pub fn dequantize_blocked(&self, block: usize) -> Tensor {
+        let w = decode::decode_dense(&self.decode_view(None, false), block);
+        Tensor::from_vec(&[self.k, self.n_out], w)
+    }
+
+    /// Dequantize WITHOUT undoing the rotation (the serving
+    /// representation for RHT backends; identical to `dequantize` for
+    /// non-rotated data). Blocked + multithreaded like `dequantize`.
+    pub fn dequantize_rotated(&self) -> Tensor {
+        self.dequantize_rotated_blocked(decode::decode_block_cols())
+    }
+
+    /// [`QuantizedLayer::dequantize_rotated`] with an explicit block size.
+    pub fn dequantize_rotated_blocked(&self, block: usize) -> Tensor {
+        let w = decode::decode_dense(&self.decode_view(None, true), block);
+        Tensor::from_vec(&[self.k, self.n_out], w)
+    }
+
+    /// Dequantize directly from the bit-packed storage plane — the
+    /// kernels consume [`packing::PackedCodes`] block-wise via
+    /// `unpack_into`, never materializing an intermediate `Vec<u32>`.
+    /// `packed` must describe this layer's code plane (same count).
+    pub fn dequantize_from_packed(&self, packed: &packing::PackedCodes) -> Tensor {
+        self.dequantize_from_packed_blocked(packed, decode::decode_block_cols())
+    }
+
+    /// [`QuantizedLayer::dequantize_from_packed`] with an explicit block size.
+    pub fn dequantize_from_packed_blocked(
+        &self,
+        packed: &packing::PackedCodes,
+        block: usize,
+    ) -> Tensor {
+        let expect = match &self.data {
+            QuantData::Lut { codes, .. } => codes.len(),
+            QuantData::Uniform { codes, .. } => codes.len(),
+        };
+        assert_eq!(packed.count, expect, "packed plane does not match layer");
+        // count alone can collide across layers of equal shape; a
+        // wrong-width plane would reassemble garbage codes silently
+        assert_eq!(packed.bits, self.code_bits(), "packed plane has wrong code width");
+        let w = decode::decode_dense(
+            &self.decode_view(Some(decode::CodeSource::Packed(packed)), false),
+            block,
+        );
+        Tensor::from_vec(&[self.k, self.n_out], w)
+    }
+
+    /// The original serial column-strided decode — kept as the
+    /// bit-exact reference oracle for the blocked parallel path
+    /// (property tests, micro-benchmarks).
+    pub fn dequantize_reference(&self) -> Tensor {
         let (k, n, g) = (self.k, self.n_out, self.g);
         let mut w = vec![0.0f32; k * n];
         match &self.data {
@@ -97,10 +194,8 @@ impl QuantizedLayer {
         Tensor::from_vec(&[k, n], w)
     }
 
-    /// Dequantize WITHOUT undoing the rotation (the serving
-    /// representation for RHT backends; identical to `dequantize` for
-    /// non-rotated data).
-    pub fn dequantize_rotated(&self) -> Tensor {
+    /// Serial reference for [`QuantizedLayer::dequantize_rotated`].
+    pub fn dequantize_rotated_reference(&self) -> Tensor {
         let (k, n, g) = (self.k, self.n_out, self.g);
         match &self.data {
             QuantData::Lut { codes, scales, grid, .. } => {
@@ -116,21 +211,40 @@ impl QuantizedLayer {
                 }
                 Tensor::from_vec(&[k, n], w)
             }
-            QuantData::Uniform { .. } => self.dequantize(),
+            QuantData::Uniform { .. } => self.dequantize_reference(),
         }
     }
 
     /// Relative squared error t² = ||Ŵ - W||²_F / ||W||²_F (Eqn. 3).
+    /// Streaming fused measurement: error partials accumulate
+    /// block-by-block during decode, so the dense Ŵ is never
+    /// materialized (the ErrorDb build measures every (layer, choice)
+    /// pair through this). Deterministic for any thread count; equals
+    /// [`QuantizedLayer::rel_sq_err_reference`] up to f64
+    /// summation-order rounding.
     pub fn rel_sq_err(&self, original: &Tensor) -> f64 {
-        let deq = self.dequantize();
+        self.rel_sq_err_blocked(original, decode::decode_block_cols())
+    }
+
+    /// [`QuantizedLayer::rel_sq_err`] with an explicit block size.
+    pub fn rel_sq_err_blocked(&self, original: &Tensor, block: usize) -> f64 {
+        decode::rel_sq_err_streaming(&self.decode_view(None, false), &original.data, block)
+    }
+
+    /// The materializing reference measurement (serial dense decode +
+    /// flat compare) — the oracle for the streaming path.
+    pub fn rel_sq_err_reference(&self, original: &Tensor) -> f64 {
+        let deq = self.dequantize_reference();
         crate::util::stats::rel_sq_err(&deq.data, &original.data)
     }
 
     /// Bit width of one packed code in this layer's representation —
-    /// per-layer in a mixed-precision model.
+    /// per-layer in a mixed-precision model. Integer ⌈log2 n⌉ (no
+    /// float round-trip); an n = 1 degenerate grid yields 0-bit codes,
+    /// which pack to zero words.
     pub fn code_bits(&self) -> u32 {
         match &self.data {
-            QuantData::Lut { grid, .. } => (grid.n as f64).log2().ceil() as u32,
+            QuantData::Lut { grid, .. } => packing::ceil_log2(grid.n),
             QuantData::Uniform { bits, .. } => *bits,
         }
     }
@@ -179,9 +293,11 @@ pub trait Quantizer: Sync + Send {
 
     /// Quantize AND report the layer's relative squared error t²
     /// (Eqn. 3) — the ErrorDb build primitive (§5). The default
-    /// measures via dequantization; quantizers that can compute the
-    /// error during encode override it (HIGGS: the RHT is orthonormal,
-    /// so rotated-space error equals original-space error).
+    /// measures via the streaming blocked decode
+    /// ([`QuantizedLayer::rel_sq_err`]) — no dense Ŵ materialization;
+    /// quantizers that can compute the error during encode override it
+    /// (HIGGS: the RHT is orthonormal, so rotated-space error equals
+    /// original-space error).
     fn quantize_with_t2(&self, layer_name: &str, w: &Tensor) -> (QuantizedLayer, f64) {
         let ql = self.quantize(layer_name, w);
         let t2 = ql.rel_sq_err(w);
@@ -450,6 +566,90 @@ mod tests {
         };
         let w = ql.dequantize();
         assert_eq!(w.data, vec![-0.5, 1.0]);
+    }
+
+    #[test]
+    fn blocked_dequantize_matches_reference() {
+        // quick smoke of the fused decode on both payload kinds (the
+        // full property suite lives in tests/prop_fast_decode.rs)
+        let reg = crate::grids::registry::GridRegistry::new();
+        let mut rng = crate::util::prng::Rng::new(17);
+        let w = Tensor::from_vec(&[64, 19], rng.normal_vec(64 * 19));
+        let layers: Vec<QuantizedLayer> = vec![
+            higgs::HiggsQuantizer::new(reg.get(GridKind::Higgs, 16, 2), 32, 5).quantize("h", &w),
+            lut::LutQuantizer::new(reg.get(GridKind::Nf, 16, 1), 32).quantize("l", &w),
+            rtn::RtnQuantizer::new(3, 16).quantize("r", &w),
+        ];
+        for ql in &layers {
+            let reference = ql.dequantize_reference();
+            for blk in [1usize, 5, 32, 1024] {
+                assert_eq!(ql.dequantize_blocked(blk).data, reference.data, "{}", ql.method);
+            }
+            assert_eq!(
+                ql.dequantize_rotated().data,
+                ql.dequantize_rotated_reference().data,
+                "{}",
+                ql.method
+            );
+            // decode-from-packed consumes the bit-exact storage plane
+            let pc = ql.packed_codes();
+            assert_eq!(ql.dequantize_from_packed(&pc).data, reference.data, "{}", ql.method);
+            // streaming error == materialized error (f64 order aside)
+            let fast = ql.rel_sq_err(&w);
+            let slow = ql.rel_sq_err_reference(&w);
+            assert!((fast - slow).abs() <= 1e-12 + 1e-9 * slow.abs(), "{fast} vs {slow}");
+        }
+    }
+
+    #[test]
+    fn degenerate_single_point_grid_decodes() {
+        // n = 1 grid: 0-bit codes — code_bits() must not float-trip to
+        // garbage, and pack/dequantize must survive the empty plane
+        let grid = Arc::new(Grid::new(GridKind::Nf, 1, 1, vec![0.25], 0.0));
+        let ql = QuantizedLayer {
+            name: "t".into(),
+            method: "test".into(),
+            k: 4,
+            n_out: 3,
+            g: 4,
+            data: QuantData::Lut {
+                codes: vec![0; 12],
+                scales: vec![2.0, 4.0, 8.0],
+                grid,
+                signs: None,
+            },
+            bits_per_param: 0.25,
+        };
+        assert_eq!(ql.code_bits(), 0);
+        let pc = ql.packed_codes();
+        assert_eq!(pc.bits, 0);
+        assert!(pc.words.is_empty());
+        let want = ql.dequantize_reference();
+        assert_eq!(ql.dequantize().data, want.data);
+        assert_eq!(ql.dequantize_from_packed(&pc).data, want.data);
+        // every value is point * column scale
+        assert_eq!(want.data[0..3], [0.5, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn code_bits_integer_ceil_log2() {
+        let mk = |n: usize| QuantizedLayer {
+            name: "t".into(),
+            method: "test".into(),
+            k: 1,
+            n_out: 1,
+            g: 1,
+            data: QuantData::Lut {
+                codes: vec![0],
+                scales: vec![1.0],
+                grid: Arc::new(Grid::new(GridKind::Nf, n, 1, vec![0.0; n], 0.0)),
+                signs: None,
+            },
+            bits_per_param: 1.0,
+        };
+        for (n, bits) in [(1usize, 0u32), (2, 1), (3, 2), (16, 4), (200, 8), (256, 8), (257, 9)] {
+            assert_eq!(mk(n).code_bits(), bits, "n={n}");
+        }
     }
 
     #[test]

@@ -2,14 +2,37 @@
 //! §4.3: memory layouts for b ∈ {2,3,4,8}, incl. the bit-slice trick
 //! for non-power-of-two code widths).
 
+/// Integer ⌈log2 n⌉ — the code width of an n-point codebook. No float
+/// round-trip (`(n as f64).log2().ceil()` is exact only by luck for
+/// large n); n ≤ 1 yields 0 bits (the degenerate single-point grid,
+/// which [`pack`]/[`unpack`] store as zero words).
+pub fn ceil_log2(n: usize) -> u32 {
+    if n <= 1 {
+        0
+    } else {
+        let floor = n.ilog2();
+        if n.is_power_of_two() {
+            floor
+        } else {
+            floor + 1
+        }
+    }
+}
+
 /// Number of u32 words needed to pack `count` codes of `bits` bits.
 pub fn packed_words(count: usize, bits: u32) -> usize {
     ((count as u64 * bits as u64 + 31) / 32) as usize
 }
 
 /// Pack codes (< 2^bits each) densely, little-endian within words.
+/// `bits == 0` (an n = 1 degenerate grid: every code is 0) packs to
+/// zero words.
 pub fn pack(codes: &[u32], bits: u32) -> Vec<u32> {
-    assert!(bits >= 1 && bits <= 32);
+    assert!(bits <= 32);
+    if bits == 0 {
+        debug_assert!(codes.iter().all(|&c| c == 0), "0-bit plane with nonzero code");
+        return Vec::new();
+    }
     let mut out = vec![0u32; packed_words(codes.len(), bits)];
     let mask = if bits == 32 { u32::MAX } else { (1u32 << bits) - 1 };
     for (i, &c) in codes.iter().enumerate() {
@@ -27,19 +50,31 @@ pub fn pack(codes: &[u32], bits: u32) -> Vec<u32> {
 
 /// Unpack `count` codes of `bits` bits.
 pub fn unpack(words: &[u32], count: usize, bits: u32) -> Vec<u32> {
+    let mut out = vec![0u32; count];
+    unpack_range(words, 0, bits, &mut out);
+    out
+}
+
+/// Unpack the codes `[start, start + out.len())` of a packed plane into
+/// `out` — the block-wise primitive the fused decode kernels use to
+/// consume [`PackedCodes`] directly, without materializing the whole
+/// `Vec<u32>` first. `bits == 0` yields all-zero codes.
+pub fn unpack_range(words: &[u32], start: usize, bits: u32, out: &mut [u32]) {
+    if bits == 0 {
+        out.fill(0);
+        return;
+    }
     let mask = if bits == 32 { u32::MAX } else { (1u32 << bits) - 1 };
-    let mut out = Vec::with_capacity(count);
-    for i in 0..count {
-        let bitpos = i as u64 * bits as u64;
+    for (i, slot) in out.iter_mut().enumerate() {
+        let bitpos = (start + i) as u64 * bits as u64;
         let word = (bitpos / 32) as usize;
         let off = (bitpos % 32) as u32;
         let mut v = words[word] >> off;
         if off + bits > 32 {
             v |= words[word + 1] << (32 - off);
         }
-        out.push(v & mask);
+        *slot = v & mask;
     }
-    out
 }
 
 /// A self-describing packed code plane for ONE layer. Layers in a
@@ -60,6 +95,13 @@ impl PackedCodes {
 
     pub fn unpack(&self) -> Vec<u32> {
         unpack(&self.words, self.count, self.bits)
+    }
+
+    /// Unpack codes `[start, start + out.len())` into `out` without
+    /// materializing the full plane (see [`unpack_range`]).
+    pub fn unpack_into(&self, start: usize, out: &mut [u32]) {
+        debug_assert!(start + out.len() <= self.count, "unpack_into past end of plane");
+        unpack_range(&self.words, start, self.bits, out);
     }
 
     /// Exact storage footprint of the packed words.
@@ -178,6 +220,52 @@ mod tests {
                 (0..n).map(|_| (g.rng().next_u64() & mask) as u32).collect();
             let bs = pack_bitsliced(&codes, bits);
             assert_eq!(unpack_bitsliced(&bs), codes);
+        });
+    }
+
+    #[test]
+    fn ceil_log2_exact() {
+        assert_eq!(ceil_log2(0), 0);
+        assert_eq!(ceil_log2(1), 0);
+        assert_eq!(ceil_log2(2), 1);
+        assert_eq!(ceil_log2(3), 2);
+        assert_eq!(ceil_log2(4), 2);
+        assert_eq!(ceil_log2(5), 3);
+        assert_eq!(ceil_log2(256), 8);
+        assert_eq!(ceil_log2(257), 9);
+        assert_eq!(ceil_log2(4096), 12);
+        assert_eq!(ceil_log2((1usize << 31) + 1), 32);
+    }
+
+    #[test]
+    fn zero_bit_plane_roundtrip() {
+        // n = 1 degenerate grid: every code is 0, stored as zero words
+        let codes = vec![0u32; 37];
+        let packed = pack(&codes, 0);
+        assert!(packed.is_empty());
+        assert_eq!(unpack(&packed, 37, 0), codes);
+        let pc = PackedCodes::from_codes(&codes, 0);
+        assert_eq!(pc.byte_len(), 0);
+        assert_eq!(pc.unpack(), codes);
+        let mut out = vec![7u32; 5];
+        pc.unpack_into(30, &mut out);
+        assert_eq!(out, vec![0u32; 5]);
+    }
+
+    #[test]
+    fn unpack_range_matches_full_unpack() {
+        forall("unpack_range == unpack slice", 60, |g| {
+            let bits = g.usize_in(1, 16) as u32;
+            let n = g.usize_in(1, 300);
+            let mask = (1u64 << bits) - 1;
+            let codes: Vec<u32> =
+                (0..n).map(|_| (g.rng().next_u64() & mask) as u32).collect();
+            let pc = PackedCodes::from_codes(&codes, bits);
+            let start = g.usize_in(0, n - 1);
+            let len = g.usize_in(0, n - start);
+            let mut out = vec![0u32; len];
+            pc.unpack_into(start, &mut out);
+            assert_eq!(out, codes[start..start + len].to_vec());
         });
     }
 

@@ -250,6 +250,40 @@ impl Engine {
     }
 }
 
+/// Look one manifest param up in the weights, shape-validated — shared
+/// by [`dense_args`] and [`dense_param_literals`].
+fn dense_param<'a>(
+    weights: &'a crate::model::Weights,
+    p: &crate::model::manifest::ParamSpec,
+) -> Result<&'a crate::tensor::Tensor> {
+    let t = weights
+        .get(&p.name)
+        .with_context(|| format!("weights missing {}", p.name))?;
+    if t.dims != p.dims {
+        bail!("{}: weight shape {:?} vs manifest {:?}", p.name, t.dims, p.dims);
+    }
+    Ok(t)
+}
+
+/// Convert a manifest's dense params straight to XLA literals, ONCE
+/// per weights object — the evaluator-side §Perf pattern: callers hold
+/// the literals and borrow them on every batch via
+/// [`Engine::run_literals`], instead of re-cloning every weight into
+/// fresh [`HostArg`]s per batch (as [`dense_args`] does). Skips the
+/// intermediate `HostArg` copy entirely.
+pub fn dense_param_literals(
+    man: &Manifest,
+    weights: &crate::model::Weights,
+) -> Result<Vec<xla::Literal>> {
+    let mut lits = Vec::with_capacity(man.params.len());
+    for p in &man.params {
+        let t = dense_param(weights, p)?;
+        let di: Vec<i64> = p.dims.iter().map(|&d| d as i64).collect();
+        lits.push(xla::Literal::vec1(&t.data).reshape(&di)?);
+    }
+    Ok(lits)
+}
+
 /// Assemble args for a model-graph artifact: `inputs` (caller-provided)
 /// followed by the dense weights in manifest order.
 pub fn dense_args(
@@ -259,12 +293,7 @@ pub fn dense_args(
 ) -> Result<Vec<HostArg>> {
     let mut args = inputs;
     for p in &man.params {
-        let t = weights
-            .get(&p.name)
-            .with_context(|| format!("weights missing {}", p.name))?;
-        if t.dims != p.dims {
-            bail!("{}: weight shape {:?} vs manifest {:?}", p.name, t.dims, p.dims);
-        }
+        let t = dense_param(weights, p)?;
         args.push(HostArg::F32(t.data.clone(), t.dims.clone()));
     }
     Ok(args)
@@ -310,6 +339,28 @@ mod tests {
     /// The dense-params manifest view (params only, as Weights expects).
     fn man_dense(m: &Manifest) -> Manifest {
         m.clone()
+    }
+
+    #[test]
+    fn dense_param_literals_match_dense_args() {
+        // XLA-free: literal construction works in the stub too. The
+        // once-per-weights literals must hold exactly the values (and
+        // dims) dense_args would have produced per batch.
+        let cfg = crate::model::fixture::tiny_config();
+        let man =
+            Manifest::parse(&crate::model::fixture::dense_manifest_text(&cfg)).unwrap();
+        let w = crate::model::fixture::tiny_weights(9);
+        let lits = dense_param_literals(&man, &w).unwrap();
+        let args = dense_args(&man, vec![], &w).unwrap();
+        assert_eq!(lits.len(), args.len());
+        for (lit, arg) in lits.iter().zip(&args) {
+            let want = arg.to_literal().unwrap();
+            assert_eq!(lit.dims(), want.dims());
+            assert_eq!(lit.to_vec::<f32>().unwrap(), want.to_vec::<f32>().unwrap());
+        }
+        // missing weight rejected
+        let man2 = Manifest::parse("artifact x\nparam nope f32 4\n").unwrap();
+        assert!(dense_param_literals(&man2, &w).is_err());
     }
 
     #[test]

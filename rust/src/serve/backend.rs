@@ -64,8 +64,28 @@ impl Backend {
         weights: &Weights,
         qmodel: Option<&QuantizedModel>,
     ) -> Result<Vec<HostArg>> {
+        // Per-layer dense weights are the expensive params (a full
+        // blocked decode each): fan them out over the pool up front
+        // instead of decoding layers one-by-one on the calling thread.
+        // Each layer's own decode is block-parallel too, but at engine
+        // construction the per-layer fan-out is what overlaps small
+        // and large layers (nested par_for runs inline via the pool's
+        // re-entrancy guard). This is the Mixed serve-bench cold-start
+        // path.
+        let mut dense_w: Vec<Option<crate::tensor::Tensor>> = if qmodel.is_some() {
+            let specs = &man.params;
+            crate::util::pool::par_map(specs.len(), |i| {
+                let base = specs[i].name.strip_suffix(".w")?;
+                let ql = qmodel?.get(base)?;
+                Some(ql.dequantize())
+            })
+        } else {
+            // no quantized model → nothing to pre-decode; skip the
+            // pool fan-out instead of spawning workers for all-None
+            vec![None; man.params.len()]
+        };
         let mut out = Vec::with_capacity(man.params.len());
-        for spec in &man.params {
+        for (pi, spec) in man.params.iter().enumerate() {
             let arg = if spec.name == "lut" {
                 let qm = qmodel.context("lut param but no quantized model")?;
                 qm.layers.first().context("empty qmodel")?;
@@ -91,9 +111,10 @@ impl Backend {
             } else if let Some(base) = spec.name.strip_suffix(".w") {
                 // dense linear weight: use dequantized values if we have
                 // a quantized model (keeps dense-backend comparisons
-                // honest), else original
-                let t = match qmodel.and_then(|qm| qm.get(base)) {
-                    Some(ql) => ql.dequantize(),
+                // honest; pre-decoded in the pool fan-out above), else
+                // original
+                let t = match dense_w[pi].take() {
+                    Some(t) => t,
                     None => weights.linear(base).context("missing linear")?.clone(),
                 };
                 HostArg::F32(t.data, spec.dims.clone())

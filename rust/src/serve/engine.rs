@@ -121,6 +121,14 @@ pub(crate) fn plan_admissions(
     Ok(out)
 }
 
+/// Convert host args to XLA literals in parallel (engine-construction
+/// cold-start: each conversion is a full host copy of a weight plane).
+fn par_literals(args: &[HostArg]) -> Result<Vec<xla::Literal>> {
+    crate::util::pool::par_map(args.len(), |i| args[i].to_literal())
+        .into_iter()
+        .collect()
+}
+
 impl<'a> GenerationEngine<'a> {
     pub fn new(
         engine: &'a Engine,
@@ -134,20 +142,19 @@ impl<'a> GenerationEngine<'a> {
         let prefill_name = backend.prefill_artifact(&cfg.name, batch);
         let decode_exe = engine.load(&decode_name).context(decode_name)?;
         let prefill_exe = engine.load(&prefill_name).context(prefill_name)?;
+        // cold-start: build_params fans the per-layer decode out over
+        // the pool, and the host→literal conversions (one big copy per
+        // param) fan out the same way
         let decode_args = backend.build_params(&decode_exe.manifest, weights, qmodel)?;
-        let decode_param_lits =
-            decode_args.iter().map(|a| a.to_literal()).collect::<Result<Vec<_>>>()?;
+        let decode_param_lits = par_literals(&decode_args)?;
         let decode_param_args = if std::env::var("HIGGS_SERVE_SLOWPATH").is_ok() {
             Some(decode_args.clone())
         } else {
             None
         };
         // prefill runs the dense graph on dequantized weights
-        let prefill_param_lits = Backend::Dense
-            .build_params(&prefill_exe.manifest, weights, qmodel)?
-            .iter()
-            .map(|a| a.to_literal())
-            .collect::<Result<Vec<_>>>()?;
+        let prefill_args = Backend::Dense.build_params(&prefill_exe.manifest, weights, qmodel)?;
+        let prefill_param_lits = par_literals(&prefill_args)?;
         let kv_dims: Vec<usize> =
             vec![cfg.n_layers, batch, cfg.n_heads, cfg.seq, cfg.d_head()];
         let kv_len: usize = kv_dims.iter().product();

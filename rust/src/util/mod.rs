@@ -13,3 +13,22 @@ pub mod timer;
 
 pub use prng::Rng;
 pub use timer::Timer;
+
+/// Parse a positive usize knob from the environment: `default` when
+/// unset or unparsable, floored at 1. Shared by the block-size and
+/// thread-count knobs so parse behavior can't drift between them.
+pub fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name)
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .map_or(default, |n| n.max(1))
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn env_usize_default_and_floor() {
+        // unset → default (no env mutation: use an unlikely name)
+        assert_eq!(super::env_usize("HIGGS_TEST_KNOB_DOES_NOT_EXIST", 32), 32);
+    }
+}

@@ -19,12 +19,8 @@ thread_local! {
 
 /// Number of worker threads to use (env `HIGGS_THREADS` overrides).
 pub fn num_threads() -> usize {
-    if let Ok(s) = std::env::var("HIGGS_THREADS") {
-        if let Ok(n) = s.parse::<usize>() {
-            return n.max(1);
-        }
-    }
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+    let auto = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    crate::util::env_usize("HIGGS_THREADS", auto)
 }
 
 /// Run `f(i)` for every i in 0..n across worker threads. Indices are

@@ -1,0 +1,195 @@
+//! Property tests for the fast decode path (via `util/propcheck`) —
+//! the mirror of `prop_fast_encode.rs`:
+//!
+//! 1. the blocked multithreaded `QuantizedLayer::dequantize` (and
+//!    `dequantize_rotated`) is bit-for-bit identical to the serial
+//!    reference across random shapes, grids, sign seeds, payload kinds
+//!    (rotated HIGGS, unrotated LUT, uniform RTN/HQQ), and block
+//!    sizes;
+//! 2. decode-from-packed (kernels consuming `PackedCodes` block-wise
+//!    via `unpack_into`) equals decode-from-unpacked bit-for-bit;
+//! 3. the streaming `rel_sq_err` equals the materializing reference
+//!    measurement within f64 summation-order tolerance, for any block
+//!    size.
+//!
+//! These equivalences are what let the decode perf work claim "same
+//! numbers, just faster".
+
+use higgs::grids::registry::GridRegistry;
+use higgs::grids::{Grid, GridKind};
+use higgs::quant::higgs::HiggsQuantizer;
+use higgs::quant::hqq::HqqQuantizer;
+use higgs::quant::lut::LutQuantizer;
+use higgs::quant::rtn::RtnQuantizer;
+use higgs::quant::{QuantData, QuantizedLayer, Quantizer};
+use higgs::tensor::Tensor;
+use higgs::util::propcheck::{forall, Gen};
+use std::sync::{Arc, OnceLock};
+
+/// One registry per test binary — CLVQ grids are expensive to train.
+fn registry() -> &'static GridRegistry {
+    static REG: OnceLock<GridRegistry> = OnceLock::new();
+    REG.get_or_init(GridRegistry::new)
+}
+
+fn to_bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// A random quantized layer of a random kind: rotated HIGGS (p ∈
+/// {1,2}), unrotated scalar LUT, or uniform (RTN / HQQ) — every decode
+/// payload shape in the repo.
+fn random_layer(g: &mut Gen) -> (QuantizedLayer, Tensor) {
+    let k = *g.choose(&[32usize, 48, 64, 96, 128]);
+    let n = g.usize_in(1, 70);
+    let group = *g.choose(&[16usize, 32, 64, 128]);
+    let w = Tensor::from_vec(&[k, n], g.vec_normal(k * n));
+    let kind = g.usize_in(0, 3);
+    let ql = match kind {
+        0 => {
+            let grids = [
+                registry().get(GridKind::Higgs, 16, 1),
+                registry().get(GridKind::Higgs, 16, 2),
+                registry().get(GridKind::Higgs, 64, 2),
+            ];
+            let grid = (*g.choose(&grids)).clone();
+            HiggsQuantizer::new(grid, group, g.rng().next_u64()).quantize("prop", &w)
+        }
+        1 => {
+            let grids = [
+                registry().get(GridKind::Nf, 16, 1),
+                registry().get(GridKind::Af, 8, 1),
+                registry().get(GridKind::Uniform, 256, 1),
+            ];
+            let grid = (*g.choose(&grids)).clone();
+            LutQuantizer::new(grid, group).quantize("prop", &w)
+        }
+        2 => RtnQuantizer::new(*g.choose(&[2u32, 3, 4]), group).quantize("prop", &w),
+        _ => HqqQuantizer::new(*g.choose(&[3u32, 4]), group).quantize("prop", &w),
+    };
+    (ql, w)
+}
+
+#[test]
+fn blocked_parallel_dequantize_equals_serial_reference() {
+    forall("blocked dequantize == serial", 24, |g| {
+        let (ql, _w) = random_layer(g);
+        let reference = ql.dequantize_reference();
+        // the env-default block size (whatever the pool/thread count)
+        assert_eq!(to_bits(&ql.dequantize().data), to_bits(&reference.data), "{}", ql.method);
+        // explicit block sizes incl. degenerate and over-wide
+        for blk in [1usize, 7, 32, 4096] {
+            assert_eq!(
+                to_bits(&ql.dequantize_blocked(blk).data),
+                to_bits(&reference.data),
+                "{} block={blk}",
+                ql.method
+            );
+        }
+    });
+}
+
+#[test]
+fn blocked_rotated_dequantize_equals_serial_reference() {
+    forall("blocked rotated dequantize == serial", 16, |g| {
+        let (ql, _w) = random_layer(g);
+        let reference = ql.dequantize_rotated_reference();
+        for blk in [1usize, 13, 4096] {
+            assert_eq!(
+                to_bits(&ql.dequantize_rotated_blocked(blk).data),
+                to_bits(&reference.data),
+                "{} block={blk}",
+                ql.method
+            );
+        }
+    });
+}
+
+#[test]
+fn decode_from_packed_equals_decode_from_unpacked() {
+    forall("packed decode == unpacked decode", 20, |g| {
+        let (ql, _w) = random_layer(g);
+        let pc = ql.packed_codes();
+        // the packed plane really is the storage representation
+        let codes: &[u32] = match &ql.data {
+            QuantData::Lut { codes, .. } => codes,
+            QuantData::Uniform { codes, .. } => codes,
+        };
+        assert_eq!(pc.unpack(), codes, "packed plane diverged");
+        let want = ql.dequantize_reference();
+        for blk in [1usize, 9, 4096] {
+            assert_eq!(
+                to_bits(&ql.dequantize_from_packed_blocked(&pc, blk).data),
+                to_bits(&want.data),
+                "{} block={blk}",
+                ql.method
+            );
+        }
+    });
+}
+
+#[test]
+fn streaming_rel_sq_err_matches_materialized() {
+    forall("streaming rel_sq_err == materialized", 24, |g| {
+        let (ql, w) = random_layer(g);
+        let reference = ql.rel_sq_err_reference(&w);
+        for blk in [1usize, 7, 32, 4096] {
+            let fast = ql.rel_sq_err_blocked(&w, blk);
+            // identical f32 decode values; only the f64 accumulation
+            // order differs (per-block partials vs one flat pass)
+            assert!(
+                (fast - reference).abs() <= 1e-12 + 1e-9 * reference.abs(),
+                "{} block={blk}: {fast} vs {reference}",
+                ql.method
+            );
+        }
+    });
+}
+
+#[test]
+fn streaming_rel_sq_err_deterministic_across_blocks_of_same_size() {
+    // same block size → bit-identical f64 result, regardless of how
+    // the pool interleaves blocks
+    forall("streaming err deterministic", 10, |g| {
+        let (ql, w) = random_layer(g);
+        let a = ql.rel_sq_err_blocked(&w, 8);
+        for _ in 0..3 {
+            let b = ql.rel_sq_err_blocked(&w, 8);
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    });
+}
+
+#[test]
+fn zero_weights_den_zero_semantics_match_reference() {
+    // den == 0 edges. A zero layer on the plain NF grid decodes to
+    // tiny NONZERO values (nf_grid has no exact-zero level; σ clamps
+    // to 1e-12), so num > 0 with den == 0 — both measurements must
+    // report the same +∞ sentinel, never NaN.
+    let reg = registry();
+    let w = Tensor::zeros(&[32, 4]);
+    let ql = LutQuantizer::new(reg.get(GridKind::Nf, 16, 1), 32).quantize("z", &w);
+    let fast = ql.rel_sq_err(&w);
+    let slow = ql.rel_sq_err_reference(&w);
+    assert!(fast.is_infinite() && slow.is_infinite(), "{fast} vs {slow}");
+
+    // An exact reconstruction of a zero layer (grid WITH a zero level,
+    // all codes pointing at it) is num == 0, den == 0 → 0, not NaN.
+    let grid = Arc::new(Grid::new(GridKind::Nf, 2, 1, vec![0.0, 1.0], 0.0));
+    let exact = QuantizedLayer {
+        name: "z".into(),
+        method: "test".into(),
+        k: 32,
+        n_out: 4,
+        g: 32,
+        data: QuantData::Lut {
+            codes: vec![0; 32 * 4],
+            scales: vec![1.0; 4],
+            grid,
+            signs: None,
+        },
+        bits_per_param: 1.0,
+    };
+    assert_eq!(exact.rel_sq_err(&w), 0.0);
+    assert_eq!(exact.rel_sq_err_reference(&w), 0.0);
+}
