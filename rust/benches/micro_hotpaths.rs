@@ -180,6 +180,49 @@ fn main() {
         r.bench_items("unpack_98k_4bit", 98304.0, || unpack(&packed, codes.len(), 4));
     }
 
+    // QuantArtifact persistence: save the packed planes, then the
+    // serving cold start (load + decode-from-packed) vs re-quantizing
+    // from scratch — the "quantize once, serve many times" ratio
+    {
+        use higgs::quant::artifact::QuantArtifact;
+        use higgs::quant::QuantizedModel;
+        let w = Tensor::from_vec(&[1024, 1024], rng.normal_vec(1024 * 1024));
+        let params = 1024.0 * 1024.0;
+        let q = HiggsQuantizer::new(reg.get(GridKind::Higgs, 256, 2), 64, 7);
+        let qm = QuantizedModel::from_layers(vec![q.quantize("l", &w)]);
+        let art = QuantArtifact::from_model("bench", &qm);
+        let path = std::env::temp_dir()
+            .join(format!("higgs_bench_artifact_{}.qa", std::process::id()));
+        art.save(&path).unwrap();
+        // correctness gate: the loaded artifact must reproduce the
+        // in-memory model bit-for-bit before any timing happens
+        let loaded = QuantArtifact::load(&path).unwrap();
+        assert_eq!(
+            bits_of(&loaded.layers[0].dequantize().data),
+            bits_of(&qm.layers[0].dequantize().data),
+            "artifact roundtrip diverged"
+        );
+        assert_eq!(
+            loaded.packed_avg_bits().to_bits(),
+            qm.packed_avg_bits().to_bits(),
+            "packed bits accounting diverged"
+        );
+        r.bench_items("artifact_save_1024x1024", params, || art.save(&path).unwrap());
+        let m = r.bench_items("artifact_load_cold_start", params, || {
+            let a = QuantArtifact::load(&path).unwrap();
+            a.layers[0].dequantize()
+        });
+        eprintln!(
+            "  -> artifact cold start: {:.2} Mparam/s (load + decode-from-packed)",
+            m.throughput(params) / 1e6
+        );
+        let m = r.bench_items("artifact_requantize_1024x1024", params, || {
+            q.quantize("l", &w)
+        });
+        eprintln!("  -> re-quantize: {:.2} Mparam/s", m.throughput(params) / 1e6);
+        let _ = std::fs::remove_file(&path);
+    }
+
     // DP allocation at paper scale: 224 layers × 8 grid choices
     {
         use higgs::alloc::{solve_dp, ErrorDb, GridChoice};

@@ -24,7 +24,8 @@
 use super::{Allocation, ErrorDb, GridChoice};
 use crate::model::Weights;
 use crate::quant::{QuantizedLayer, QuantizedModel, Quantizer};
-use anyhow::{bail, Result};
+use anyhow::{bail, ensure, Context, Result};
+use std::path::Path;
 
 /// An [`ErrorDb`] plus the quantized layers it was measured from,
 /// indexed `[layer][choice]`.
@@ -120,6 +121,284 @@ pub fn build_error_db(
     };
     db.validate()?;
     Ok(ErrorDbBuild { db, layers })
+}
+
+// ---------------------------------------------------------------------------
+// ErrorDb persistence + cache handle
+// ---------------------------------------------------------------------------
+
+/// FNV-1a fingerprint of the model's linear weights (names + raw f32
+/// bits; the shared [`crate::util::fnv1a`]) — guards cached error
+/// databases against retrained checkpoints: t² is measured against
+/// the *weights*, so a cache is only valid for the exact tensor
+/// contents it was measured on.
+pub fn weights_fingerprint(weights: &Weights) -> u64 {
+    let mut h = crate::util::fnv1a(std::iter::empty::<u8>());
+    for name in weights.linear_names() {
+        h = crate::util::fnv1a_with(h, name.bytes());
+        if let Some(t) = weights.linear(&name) {
+            h = crate::util::fnv1a_with(
+                h,
+                t.data.iter().flat_map(|v| v.to_bits().to_le_bytes()),
+            );
+        }
+    }
+    h
+}
+
+impl ErrorDb {
+    /// Persist the measured t² table (plus the weights fingerprint it
+    /// was measured against) as a line-oriented text file under
+    /// `artifacts/` — the reusable product of an expensive
+    /// L·J-layer-encode build. f64 values round-trip exactly through
+    /// Rust's shortest `Display` representation.
+    pub fn save(&self, path: &Path, fingerprint: u64) -> Result<()> {
+        self.validate()?;
+        let mut s = String::from("higgs-errordb v1\n");
+        s += &format!("fingerprint {fingerprint}\n");
+        for c in &self.choices {
+            ensure!(
+                !c.id.contains(char::is_whitespace),
+                "choice id {:?} contains whitespace",
+                c.id
+            );
+            s += &format!("choice {} {}\n", c.id, c.bits);
+        }
+        for ((name, dim), row) in self.layers.iter().zip(&self.dims).zip(&self.t2) {
+            ensure!(
+                !name.contains(char::is_whitespace),
+                "layer name {name:?} contains whitespace"
+            );
+            s += &format!("layer {name} {dim}");
+            for v in row {
+                s += &format!(" {v}");
+            }
+            s.push('\n');
+        }
+        std::fs::write(path, s)
+            .with_context(|| format!("write error db {}", path.display()))?;
+        Ok(())
+    }
+
+    /// Load a persisted error database; returns the db and the weights
+    /// fingerprint it was measured against.
+    pub fn load(path: &Path) -> Result<(ErrorDb, u64)> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read error db {}", path.display()))?;
+        let mut lines = text.lines();
+        ensure!(
+            lines.next() == Some("higgs-errordb v1"),
+            "{}: not an error-db file",
+            path.display()
+        );
+        let mut fingerprint = 0u64;
+        let mut choices = Vec::new();
+        let (mut layers, mut dims, mut t2) = (Vec::new(), Vec::new(), Vec::new());
+        for line in lines {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let mut it = line.split_whitespace();
+            match it.next() {
+                Some("fingerprint") => {
+                    fingerprint = it.next().context("fingerprint value")?.parse()?;
+                }
+                Some("choice") => {
+                    let id = it.next().context("choice id")?.to_string();
+                    let bits: f64 = it.next().context("choice bits")?.parse()?;
+                    choices.push(GridChoice { id, bits });
+                }
+                Some("layer") => {
+                    let name = it.next().context("layer name")?.to_string();
+                    let dim: usize = it.next().context("layer dim")?.parse()?;
+                    let row = it
+                        .map(|v| v.parse::<f64>())
+                        .collect::<Result<Vec<f64>, _>>()?;
+                    layers.push(name);
+                    dims.push(dim);
+                    t2.push(row);
+                }
+                other => bail!("unknown error-db line tag {other:?}"),
+            }
+        }
+        let db = ErrorDb { layers, dims, choices, t2 };
+        db.validate()?;
+        Ok((db, fingerprint))
+    }
+}
+
+/// A usable error database: either freshly built (with every quantized
+/// layer kept for zero-encode [`ErrorDbBuild::realize`]) or loaded
+/// from a cache file (realization re-encodes chosen cells lazily —
+/// bit-identical, the quantizers are deterministic).
+pub enum DbHandle {
+    Built(ErrorDbBuild),
+    Cached {
+        db: ErrorDb,
+        /// lazily re-encoded (layer, choice) cells, memoized so a
+        /// budget sweep never encodes a cell twice — total encode work
+        /// is bounded by the L·J a fresh build would have paid
+        memo: std::sync::Mutex<std::collections::HashMap<(usize, usize), QuantizedLayer>>,
+    },
+}
+
+impl DbHandle {
+    fn cached_handle(db: ErrorDb) -> DbHandle {
+        DbHandle::Cached { db, memo: std::sync::Mutex::new(std::collections::HashMap::new()) }
+    }
+
+    pub fn db(&self) -> &ErrorDb {
+        match self {
+            DbHandle::Built(b) => &b.db,
+            DbHandle::Cached { db, .. } => db,
+        }
+    }
+
+    /// Whether this handle skipped the measurement (loaded from cache).
+    pub fn cached(&self) -> bool {
+        matches!(self, DbHandle::Cached { .. })
+    }
+
+    /// Assemble the mixed model for a per-layer choice vector. The
+    /// built path clones the already-quantized layers; the cached path
+    /// re-encodes only the chosen (layer, choice) cells — each at most
+    /// once across realizes (memoized) — and stamps the cached t² so
+    /// artifacts carry the measured error either way. Bit-identical to
+    /// the built path: the quantizers are deterministic.
+    pub fn realize(
+        &self,
+        weights: &Weights,
+        choices: &[(GridChoice, Box<dyn Quantizer>)],
+        choice: &[usize],
+    ) -> Result<QuantizedModel> {
+        match self {
+            DbHandle::Built(b) => b.realize(choice),
+            DbHandle::Cached { db, memo } => {
+                // layer order == linear_names order == db row order —
+                // and the weights must BE the model the db was
+                // measured over, or the t² stamping below would index
+                // the wrong rows
+                let names = weights.linear_names();
+                ensure!(
+                    names == db.layers,
+                    "weights' linear layers do not match the cached error db \
+                     ({} vs {} layers)",
+                    names.len(),
+                    db.layers.len()
+                );
+                if choice.len() != names.len() {
+                    bail!(
+                        "allocation has {} layers, model has {}",
+                        choice.len(),
+                        names.len()
+                    );
+                }
+                for &j in choice {
+                    ensure!(
+                        j < choices.len() && j < db.choices.len(),
+                        "choice index {j} out of range ({} choices)",
+                        choices.len()
+                    );
+                }
+                // one entry per layer — cells are unique within a call
+                let todo: Vec<(usize, usize)> = {
+                    let m = memo.lock().unwrap();
+                    choice
+                        .iter()
+                        .enumerate()
+                        .map(|(l, &j)| (l, j))
+                        .filter(|cell| !m.contains_key(cell))
+                        .collect()
+                };
+                let fresh = crate::util::pool::par_map(todo.len(), |i| {
+                    let (l, j) = todo[i];
+                    let w = weights.linear(&names[l]).expect("linear exists");
+                    let mut ql = choices[j].1.quantize(&names[l], w);
+                    ql.t2 = Some(db.t2[l][j]);
+                    ql
+                });
+                let mut m = memo.lock().unwrap();
+                for (cell, ql) in todo.into_iter().zip(fresh) {
+                    m.insert(cell, ql);
+                }
+                let layers = choice
+                    .iter()
+                    .enumerate()
+                    .map(|(l, &j)| m[&(l, j)].clone())
+                    .collect();
+                Ok(QuantizedModel::from_layers(layers))
+            }
+        }
+    }
+}
+
+/// Build the error database, REUSING a persisted measurement when one
+/// exists and still matches (same layers, dims, choices, and weights
+/// fingerprint). On a cache miss the fresh build is persisted for the
+/// next run. `cache: None` always builds.
+pub fn load_or_build_error_db(
+    weights: &Weights,
+    choices: &[(GridChoice, Box<dyn Quantizer>)],
+    cache: Option<&Path>,
+) -> Result<DbHandle> {
+    // the fingerprint covers the weight bytes AND each choice's typed
+    // spec (grid kind/n/p, group, seed) — a cache measured with a
+    // different quantizer configuration behind the same choice id
+    // must not be reused
+    let mut fingerprint = weights_fingerprint(weights);
+    for (_, q) in choices {
+        fingerprint = crate::util::fnv1a_with(fingerprint, q.spec().to_string().bytes());
+    }
+    if let Some(path) = cache {
+        if path.exists() {
+            match ErrorDb::load(path) {
+                Ok((db, fp)) if fp == fingerprint && db_matches(&db, weights, choices) => {
+                    eprintln!("error db: reusing cached measurement {}", path.display());
+                    return Ok(DbHandle::cached_handle(db));
+                }
+                Ok(_) => eprintln!(
+                    "error db: cache {} is stale (model/choices changed); re-measuring",
+                    path.display()
+                ),
+                Err(e) => eprintln!(
+                    "error db: could not read cache {}: {e:#}; re-measuring",
+                    path.display()
+                ),
+            }
+        }
+    }
+    let build = build_error_db(weights, choices)?;
+    if let Some(path) = cache {
+        if let Some(parent) = path.parent() {
+            let _ = std::fs::create_dir_all(parent);
+        }
+        if let Err(e) = build.db.save(path, fingerprint) {
+            eprintln!("WARNING: could not cache error db at {}: {e:#}", path.display());
+        }
+    }
+    Ok(DbHandle::Built(build))
+}
+
+fn db_matches(
+    db: &ErrorDb,
+    weights: &Weights,
+    choices: &[(GridChoice, Box<dyn Quantizer>)],
+) -> bool {
+    let names = weights.linear_names();
+    if db.layers != names || db.choices.len() != choices.len() {
+        return false;
+    }
+    let dims_ok = names
+        .iter()
+        .zip(&db.dims)
+        .all(|(n, &d)| weights.linear(n).map(|t| t.len() == d).unwrap_or(false));
+    let choices_ok = db
+        .choices
+        .iter()
+        .zip(choices)
+        .all(|(a, (b, _))| a.id == b.id && a.bits == b.bits);
+    dims_ok && choices_ok
 }
 
 /// Re-encode a solved allocation directly from the weights via
@@ -271,6 +550,49 @@ mod tests {
             assert_eq!(a.name, b.name);
             assert_eq!(a.dequantize().data, b.dequantize().data, "layer {}", a.name);
         }
+    }
+
+    #[test]
+    fn errordb_cache_roundtrip_and_invalidation() {
+        let w = tiny_weights();
+        let choices = higgs_choices(16);
+        let path = std::env::temp_dir()
+            .join(format!("higgs_errordb_test_{}.txt", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        // first call builds + persists
+        let h1 = load_or_build_error_db(&w, &choices, Some(&path)).unwrap();
+        assert!(!h1.cached());
+        assert!(path.exists());
+        // second call reuses the cache; t² identical (f64 Display
+        // round-trips exactly through the text format)
+        let h2 = load_or_build_error_db(&w, &choices, Some(&path)).unwrap();
+        assert!(h2.cached());
+        assert_eq!(h1.db().t2, h2.db().t2);
+        assert_eq!(h1.db().dims, h2.db().dims);
+        // realization agrees bit-for-bit between built and cached paths,
+        // and the cached path stamps the measured t²
+        let choice: Vec<usize> =
+            (0..h1.db().layers.len()).map(|l| l % choices.len()).collect();
+        let a = h1.realize(&w, &choices, &choice).unwrap();
+        let b = h2.realize(&w, &choices, &choice).unwrap();
+        for (x, y) in a.layers.iter().zip(&b.layers) {
+            assert_eq!(x.dequantize().data, y.dequantize().data, "layer {}", x.name);
+            assert_eq!(x.t2, y.t2, "layer {}", x.name);
+            assert!(x.t2.is_some());
+        }
+        // retrained weights → fingerprint mismatch → re-measure
+        let w2 = fixture::tiny_weights(99);
+        let h3 = load_or_build_error_db(&w2, &choices, Some(&path)).unwrap();
+        assert!(!h3.cached());
+        // different choice list → stale → re-measure
+        let fewer = {
+            let mut c = higgs_choices(16);
+            c.pop();
+            c
+        };
+        let h4 = load_or_build_error_db(&w2, &fewer, Some(&path)).unwrap();
+        assert!(!h4.cached());
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

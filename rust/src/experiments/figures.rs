@@ -3,7 +3,7 @@
 //! diagonal dominance).
 
 use super::ExpContext;
-use crate::alloc::errordb::ErrorDbBuild;
+use crate::alloc::errordb::{DbHandle, ErrorDbBuild};
 use crate::alloc::{solve_dp, GridChoice};
 use crate::grids::registry::effective_bits;
 use crate::grids::GridKind;
@@ -174,14 +174,27 @@ pub fn build_error_db(
     crate::alloc::errordb::build_error_db(&ctx.weights, choices)
 }
 
+/// Like [`build_error_db`], but REUSING the measurement persisted
+/// under `artifacts/errordb_<cfg>.txt` when it still matches the
+/// current weights and choice list (fingerprint-guarded) — experiment
+/// drivers re-run sweeps without paying the L·J encode+measure pass
+/// again.
+pub fn load_or_build_error_db(
+    ctx: &ExpContext,
+    choices: &[(GridChoice, Box<dyn Quantizer>)],
+) -> Result<DbHandle> {
+    let cache = ctx.engine.artifacts().join(format!("errordb_{}.txt", ctx.cfg.name));
+    crate::alloc::errordb::load_or_build_error_db(&ctx.weights, choices, Some(&cache))
+}
+
 /// Fig. 3: PPL vs bitwidth budget for dynamic HIGGS, with the linear
 /// model prediction as the dotted line.
 pub fn fig3_dynamic_sweep(ctx: &ExpContext, metric: CalibMetric) -> Result<(Series, Table)> {
     let alphas = ctx.alphas(metric, ctx.default_j())?;
     let ppl_alphas = ctx.alphas(CalibMetric::Ppl, ctx.default_j())?;
     let choices = flute_choices(ctx);
-    let build = build_error_db(ctx, &choices)?;
-    let db = &build.db;
+    let build = load_or_build_error_db(ctx, &choices)?;
+    let db = build.db();
     let ev = ctx.evaluator();
     let budgets = [2.5, 2.75, 3.0, 3.25, 3.5, 4.0, 4.25, 5.0, 6.0];
     let base_ppl = ev.perplexity(&ctx.weights)?;
@@ -196,7 +209,7 @@ pub fn fig3_dynamic_sweep(ctx: &ExpContext, metric: CalibMetric) -> Result<(Seri
             Ok(s) => s,
             Err(_) => continue, // infeasible budget
         };
-        let qm = build.realize(&sol.choice)?;
+        let qm = build.realize(&ctx.weights, &choices, &sol.choice)?;
         let ppl = ev.perplexity(&qm.apply_to(&ctx.weights))?;
         let pred = base_ppl
             + crate::linearity::predict::predict_penalty(

@@ -2,7 +2,7 @@
 //! Table 3 + 7–11 (data-free method grid), Table 4 (dynamic vs 1-shot),
 //! Table 6 (Hadamard overhead).
 
-use super::figures::{build_error_db, flute_choices};
+use super::figures::{flute_choices, load_or_build_error_db};
 use super::ExpContext;
 use crate::alloc::solve_dp;
 use crate::grids::registry::effective_bits;
@@ -250,9 +250,9 @@ fn dyn_higgs_row(
 ) -> Result<Vec<String>> {
     let alphas = ctx.alphas(metric, ctx.default_j())?;
     let choices = flute_choices(ctx);
-    let build = build_error_db(ctx, &choices)?;
-    let sol = solve_dp(&build.db, &alphas, budget)?;
-    let qm = build.realize(&sol.choice)?;
+    let build = load_or_build_error_db(ctx, &choices)?;
+    let sol = solve_dp(build.db(), &alphas, budget)?;
+    let qm = build.realize(&ctx.weights, &choices, &sol.choice)?;
     let (ppl, avg, mmlu) = eval_qm(ctx, &qm)?;
     let tag = match metric {
         CalibMetric::Kl => "HIGGS (dyn data-free)",

@@ -114,6 +114,14 @@ impl Grid {
         &self.points[i * self.p..(i + 1) * self.p]
     }
 
+    /// Same quantization table: identical (n, p) and bit-identical
+    /// points — the equality decode kernels care about. `kind` is a
+    /// label and does not participate; callers that must preserve
+    /// metadata (e.g. artifact grid-table dedup) check it separately.
+    pub fn same_table(&self, other: &Grid) -> bool {
+        self.n == other.n && self.p == other.p && self.points == other.points
+    }
+
     /// Codebook bits per weight dimension: log2(n)/p.
     pub fn bits_per_dim(&self) -> f64 {
         (self.n as f64).log2() / self.p as f64
@@ -179,20 +187,44 @@ impl Grid {
     }
 
     /// Monte-Carlo estimate of the per-dim MSE on N(0, I_p).
+    ///
+    /// Pool-parallel over fixed-size sample blocks: each block draws
+    /// from its own RNG stream (derived from `seed` and the block
+    /// index via splitmix64) and the per-block f64 partials are summed
+    /// in block order — the result is deterministic for any thread
+    /// count / `HIGGS_THREADS` setting. The block partition changes
+    /// the exact sample stream relative to the old single-stream
+    /// serial walk, so cached grid constants move within Monte-Carlo
+    /// noise when regenerated.
     pub fn estimate_mse(&self, samples: usize, seed: u64) -> f64 {
-        let mut rng = Rng::new(seed);
-        let mut acc = 0.0f64;
-        let mut v = vec![0.0f32; self.p];
-        for _ in 0..samples {
-            rng.fill_normal(&mut v);
-            let c = self.nearest(&v);
-            let pt = self.point(c);
-            for (a, b) in v.iter().zip(pt) {
-                let e = (*a - *b) as f64;
-                acc += e * e;
-            }
+        const BLOCK: usize = 8192;
+        if samples == 0 {
+            return 0.0;
         }
-        acc / (samples * self.p) as f64
+        // warm the index once instead of racing the lazy OnceLock init
+        // across the first samples of every worker
+        if self.p > 1 {
+            let _ = self.index();
+        }
+        let nblocks = samples.div_ceil(BLOCK);
+        let partials = crate::util::pool::par_map(nblocks, |bi| {
+            let count = BLOCK.min(samples - bi * BLOCK);
+            let mut h = seed ^ (bi as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+            let mut rng = Rng::new(crate::util::prng::splitmix64(&mut h));
+            let mut acc = 0.0f64;
+            let mut v = vec![0.0f32; self.p];
+            for _ in 0..count {
+                rng.fill_normal(&mut v);
+                let c = self.nearest(&v);
+                let pt = self.point(c);
+                for (a, b) in v.iter().zip(pt) {
+                    let e = (*a - *b) as f64;
+                    acc += e * e;
+                }
+            }
+            acc
+        });
+        partials.iter().sum::<f64>() / (samples * self.p) as f64
     }
 
     /// Exact per-dim Gaussian MSE for 1-D grids via cell integrals.
@@ -291,6 +323,27 @@ mod tests {
         let exact = g.exact_mse_1d();
         let mc = g.estimate_mse(200_000, 1);
         assert!((exact - mc).abs() / exact < 0.03, "exact {exact} mc {mc}");
+    }
+
+    #[test]
+    fn estimate_mse_deterministic_and_block_partitioned() {
+        // pool-parallel MC must be bit-deterministic for any thread
+        // interleaving (per-block streams, block-ordered f64 sum)
+        let g = toy_grid();
+        let a = g.estimate_mse(20_000, 7);
+        for _ in 0..3 {
+            assert_eq!(a.to_bits(), g.estimate_mse(20_000, 7).to_bits());
+        }
+        // non-block-aligned sample counts cover the tail-block path
+        let b = g.estimate_mse(8192 + 13, 7);
+        assert!(b > 0.0 && b < 1.0, "{b}");
+        assert_eq!(g.estimate_mse(0, 7), 0.0);
+        // a 2-D grid exercises the indexed path under the pool
+        let mut rng = crate::util::prng::Rng::new(3);
+        let g2 = Grid::new(GridKind::Higgs, 64, 2, rng.normal_vec(128), 0.0);
+        let m = g2.estimate_mse(30_000, 11);
+        assert_eq!(m.to_bits(), g2.estimate_mse(30_000, 11).to_bits());
+        assert!(m > 0.0 && m < 1.5, "{m}");
     }
 
     #[test]

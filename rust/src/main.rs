@@ -6,12 +6,17 @@
 //! higgs train      --config base --steps 400 [--lr 3e-3] [--out PATH]
 //! higgs eval       --config base [--quant SPEC] [--tasks]
 //! higgs quantize   --config base --method higgs_p2_n256 [--report-layers]
+//!                  [--save-artifact PATH]
 //! higgs calibrate  --config base [--metric ppl|kl] [--levels 15]
 //! higgs allocate   --config base --budget 3.25 [--solver dp|greedy|lagrange] [--metric kl]
 //! higgs alloc-quantize --config base --budget 3.25 [--solver dp|greedy|lagrange]
-//!                  [--metric kl|ppl] [--report-layers] [--serve [--requests 8] [--batch 1]]
+//!                  [--metric kl|ppl] [--report-layers] [--save-artifact PATH]
+//!                  [--serve [--requests 8] [--batch 1]]
 //! higgs serve-bench --config base --backend flute4|fp16|uniform4|nf4|mixed --batch 4
-//!                  [--requests 24] [--budget 3.25]   (budget applies to --backend mixed)
+//!                  [--requests 24] [--budget 3.25] [--artifact PATH]
+//!                  (budget applies to --backend mixed; --artifact cold-starts
+//!                   the mixed backend from a saved QuantArtifact)
+//! higgs serve-artifact --artifact PATH [--config base] [--batch 1] [--requests 8]
 //! higgs hessian    --config tiny [--per-layer 8]
 //! higgs experiment fig1|fig2|fig3|fig4|table1|table2|table3|table4|table6 [--config base]
 //! ```
@@ -87,6 +92,7 @@ fn run(args: &Args) -> Result<()> {
         "allocate" => cmd_allocate(args),
         "alloc-quantize" => cmd_alloc_quantize(args),
         "serve-bench" => cmd_serve_bench(args),
+        "serve-artifact" => cmd_serve_artifact(args),
         "generate" => cmd_generate(args),
         "hessian" => cmd_hessian(args),
         "experiment" => cmd_experiment(args),
@@ -99,7 +105,7 @@ fn run(args: &Args) -> Result<()> {
 }
 
 const HELP: &str = "higgs — LLM quantization via the Linearity Theorem (see README.md)
-commands: train, eval, quantize, calibrate, allocate, alloc-quantize, serve-bench, hessian, experiment";
+commands: train, eval, quantize, calibrate, allocate, alloc-quantize, serve-bench, serve-artifact, hessian, experiment";
 
 fn ckpt_path(engine: &Engine, cfg: &ModelConfig, args: &Args) -> std::path::PathBuf {
     match args.flags.get("ckpt").or_else(|| args.flags.get("out")) {
@@ -207,6 +213,32 @@ fn cmd_quantize(args: &Args) -> Result<()> {
             println!("  {name:<14} t² {t2:.5}");
         }
     }
+    save_artifact_if_requested(args, &cfg.name, &qm)?;
+    Ok(())
+}
+
+/// `--save-artifact PATH`: persist the quantized model as a
+/// self-describing `QuantArtifact` (quantize once, serve many times —
+/// reload with `higgs serve-artifact` / `serve-bench --artifact`).
+fn save_artifact_if_requested(
+    args: &Args,
+    config: &str,
+    qm: &higgs::quant::QuantizedModel,
+) -> Result<()> {
+    let Some(path) = args.flags.get("save-artifact") else {
+        return Ok(());
+    };
+    let art = higgs::quant::artifact::QuantArtifact::from_model(config, qm);
+    let t0 = std::time::Instant::now();
+    art.save(std::path::Path::new(path))?;
+    let on_disk = std::fs::metadata(path).map(|m| m.len()).unwrap_or(0);
+    println!(
+        "artifact: {} layers, {:.3} bits/param packed, {:.1} KiB on disk -> {path} ({:.2}s)",
+        art.layers.len(),
+        art.packed_avg_bits(),
+        on_disk as f64 / 1024.0,
+        t0.elapsed().as_secs_f64(),
+    );
     Ok(())
 }
 
@@ -235,14 +267,14 @@ fn cmd_allocate(args: &Args) -> Result<()> {
     let budget = args.get_f64("budget", 3.25)?;
     let alphas = ctx.alphas(metric, ctx.default_j())?;
     let choices = figures::flute_choices(&ctx);
-    let build = figures::build_error_db(&ctx, &choices)?;
+    let build = figures::load_or_build_error_db(&ctx, &choices)?;
     let sol = match args.get("solver", "dp").as_str() {
-        "greedy" => higgs::alloc::solve_greedy(&build.db, &alphas, budget)?,
-        "lagrange" => higgs::alloc::solve_lagrange(&build.db, &alphas, budget)?,
-        _ => higgs::alloc::solve_dp(&build.db, &alphas, budget)?,
+        "greedy" => higgs::alloc::solve_greedy(build.db(), &alphas, budget)?,
+        "lagrange" => higgs::alloc::solve_lagrange(build.db(), &alphas, budget)?,
+        _ => higgs::alloc::solve_dp(build.db(), &alphas, budget)?,
     };
-    print!("{}", sol.describe(&build.db));
-    let qm = build.realize(&sol.choice)?;
+    print!("{}", sol.describe(build.db()));
+    let qm = build.realize(&ctx.weights, &choices, &sol.choice)?;
     let ev = ctx.evaluator();
     let ppl = ev.perplexity(&qm.apply_to(&ctx.weights))?;
     println!("measured ppl: {ppl:.4}");
@@ -266,24 +298,25 @@ fn cmd_alloc_quantize(args: &Args) -> Result<()> {
 
     let choices = figures::flute_choices(&ctx);
     let t0 = std::time::Instant::now();
-    let build = higgs::alloc::errordb::build_error_db(&ctx.weights, &choices)?;
+    let build = figures::load_or_build_error_db(&ctx, &choices)?;
     eprintln!(
-        "error db: {} layers x {} choices in {:.2}s",
-        build.db.layers.len(),
-        build.db.choices.len(),
-        t0.elapsed().as_secs_f64()
+        "error db: {} layers x {} choices in {:.2}s{}",
+        build.db().layers.len(),
+        build.db().choices.len(),
+        t0.elapsed().as_secs_f64(),
+        if build.cached() { " (cached measurement)" } else { "" },
     );
 
     let sol = match args.get("solver", "dp").as_str() {
-        "greedy" => higgs::alloc::solve_greedy(&build.db, &alphas, budget)?,
-        "lagrange" => higgs::alloc::solve_lagrange(&build.db, &alphas, budget)?,
-        _ => higgs::alloc::solve_dp(&build.db, &alphas, budget)?,
+        "greedy" => higgs::alloc::solve_greedy(build.db(), &alphas, budget)?,
+        "lagrange" => higgs::alloc::solve_lagrange(build.db(), &alphas, budget)?,
+        _ => higgs::alloc::solve_dp(build.db(), &alphas, budget)?,
     };
     if args.flags.contains_key("report-layers") {
-        print!("{}", sol.describe(&build.db));
+        print!("{}", sol.describe(build.db()));
     }
 
-    let qm = build.realize(&sol.choice)?;
+    let qm = build.realize(&ctx.weights, &choices, &sol.choice)?;
     let packed: usize = qm.layers.iter().map(|l| l.packed_bytes()).sum();
     println!(
         "mixed model: {} layers, nominal {:.3} bits/param, packed {:.3} bits/param \
@@ -304,20 +337,23 @@ fn cmd_alloc_quantize(args: &Args) -> Result<()> {
         measured,
         (measured - sol.predicted_penalty) / sol.predicted_penalty.abs().max(1e-12) * 100.0,
     );
-    if let Some(j) = build.db.best_uniform_choice(budget) {
-        let uni = build.realize_uniform(j)?;
+    if let Some(j) = build.db().best_uniform_choice(budget) {
+        let uniform_choice = vec![j; build.db().layers.len()];
+        let uni = build.realize(&ctx.weights, &choices, &uniform_choice)?;
         let uni_pen = higgs::linearity::predict::predict_penalty(
             &alphas,
             &uni.layer_errors(&ctx.weights),
         );
         println!(
             "best uniform at budget: {} ({:.3} bits) penalty {:.6} — dynamic {}",
-            build.db.choices[j].id,
+            build.db().choices[j].id,
             uni.avg_bits(),
             uni_pen,
             if measured <= uni_pen { "wins/ties" } else { "LOSES (unexpected)" },
         );
     }
+
+    save_artifact_if_requested(args, &ctx.cfg.name, &qm)?;
 
     if args.flags.contains_key("serve") {
         let batch = args.get_usize("batch", 1)?;
@@ -354,21 +390,91 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     };
     let batch = args.get_usize("batch", 4)?;
     let n_req = args.get_usize("requests", 24)?;
-    let qm = match &backend {
+    // --artifact PATH: cold-start the mixed backend from a persisted
+    // QuantArtifact — no error-db build, no re-quantization; dense
+    // params decode straight from the packed planes
+    let artifact = match args.flags.get("artifact") {
+        Some(p) => {
+            if args.flags.get("backend").map(|b| b != "mixed").unwrap_or(false) {
+                bail!(
+                    "--artifact serves through the mixed backend; drop --backend \
+                     or pass --backend mixed"
+                );
+            }
+            let t0 = std::time::Instant::now();
+            let art = higgs::quant::artifact::QuantArtifact::load(std::path::Path::new(p))?;
+            eprintln!(
+                "artifact {p}: {} layers, {:.3} bits/param packed, loaded in {:.2}s \
+                 (no re-quantization)",
+                art.layers.len(),
+                art.packed_avg_bits(),
+                t0.elapsed().as_secs_f64()
+            );
+            Some(art)
+        }
+        None => None,
+    };
+    let backend = if artifact.is_some() { higgs::serve::Backend::Mixed } else { backend };
+    let qm = match &artifact {
+        Some(_) => None, // the artifact IS the quantized model
+        None => backend_model(args, &ctx, &backend)?,
+    };
+    let corpus = higgs::data::Corpus::new(ctx.cfg.vocab, ctx.cfg.seq, 1);
+    let trace = higgs::serve::trace::generate_trace(
+        &higgs::serve::TraceConfig { n_requests: n_req, ..Default::default() },
+        &corpus,
+    );
+    let t0 = std::time::Instant::now();
+    let mut ge = match &artifact {
+        Some(art) => higgs::serve::GenerationEngine::from_artifact(
+            &ctx.engine,
+            ctx.cfg.clone(),
+            backend.clone(),
+            batch,
+            &ctx.weights,
+            art,
+        )?,
+        None => higgs::serve::GenerationEngine::new(
+            &ctx.engine,
+            ctx.cfg.clone(),
+            backend.clone(),
+            batch,
+            &ctx.weights,
+            qm.as_ref(),
+        )?,
+    };
+    if artifact.is_some() {
+        eprintln!(
+            "engine cold start from packed planes in {:.2}s",
+            t0.elapsed().as_secs_f64()
+        );
+    }
+    let m = ge.run_closed_loop(trace)?;
+    println!("[{} b={batch}] {}", backend.label(), m.summary());
+    Ok(())
+}
+
+/// Quantize (or DP-allocate) the model a serve-bench backend needs.
+fn backend_model(
+    args: &Args,
+    ctx: &ExpContext,
+    backend: &higgs::serve::Backend,
+) -> Result<Option<higgs::quant::QuantizedModel>> {
+    let qm = match backend {
         higgs::serve::Backend::Dense => None,
         higgs::serve::Backend::Mixed => {
             // DP-allocated mixed-precision model at --budget (data-free
             // KL sensitivities, like `alloc-quantize --metric kl`)
             let budget = args.get_f64("budget", 3.25)?;
             let alphas = ctx.alphas(CalibMetric::Kl, ctx.default_j())?;
-            let choices = figures::flute_choices(&ctx);
-            let build = higgs::alloc::errordb::build_error_db(&ctx.weights, &choices)?;
-            let sol = higgs::alloc::solve_dp(&build.db, &alphas, budget)?;
+            let choices = figures::flute_choices(ctx);
+            let build = figures::load_or_build_error_db(ctx, &choices)?;
+            let sol = higgs::alloc::solve_dp(build.db(), &alphas, budget)?;
             eprintln!(
                 "mixed allocation at b_max={budget}: {:.3} bits/param",
                 sol.avg_bits
             );
-            Some(build.realize(&sol.choice)?)
+            Some(build.realize(&ctx.weights, &choices, &sol.choice)?)
         }
         higgs::serve::Backend::Uniform4 => Some(higgs::quant::QuantizedModel::quantize_all(
             &ctx.weights,
@@ -393,21 +499,55 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
             ))
         }
     };
+    Ok(qm)
+}
+
+/// Cold-start a serving engine from a persisted `QuantArtifact` and
+/// run a request trace through it — the "quantize once, serve many
+/// times" path: no error-db build, no re-quantization; dense params
+/// decode straight from the artifact's bit-packed planes.
+fn cmd_serve_artifact(args: &Args) -> Result<()> {
+    let path = args
+        .flags
+        .get("artifact")
+        .cloned()
+        .or_else(|| args.positional.first().cloned())
+        .context(
+            "usage: higgs serve-artifact --artifact PATH [--config base] [--batch 1] \
+             [--requests 8]",
+        )?;
+    let ctx = ExpContext::load(&args.get("config", "base"))?;
+    let t0 = std::time::Instant::now();
+    let art = higgs::quant::artifact::QuantArtifact::load(std::path::Path::new(&path))?;
+    eprintln!(
+        "artifact {path}: config {:?}, {} layers, {:.3} bits/param packed, loaded in {:.2}s",
+        art.config,
+        art.layers.len(),
+        art.packed_avg_bits(),
+        t0.elapsed().as_secs_f64()
+    );
+    let batch = args.get_usize("batch", 1)?;
+    let n_req = args.get_usize("requests", 8)?;
+    let t0 = std::time::Instant::now();
+    let mut ge = higgs::serve::GenerationEngine::from_artifact(
+        &ctx.engine,
+        ctx.cfg.clone(),
+        higgs::serve::Backend::Mixed,
+        batch,
+        &ctx.weights,
+        &art,
+    )?;
+    eprintln!(
+        "engine cold start from packed planes in {:.2}s",
+        t0.elapsed().as_secs_f64()
+    );
     let corpus = higgs::data::Corpus::new(ctx.cfg.vocab, ctx.cfg.seq, 1);
     let trace = higgs::serve::trace::generate_trace(
         &higgs::serve::TraceConfig { n_requests: n_req, ..Default::default() },
         &corpus,
     );
-    let mut ge = higgs::serve::GenerationEngine::new(
-        &ctx.engine,
-        ctx.cfg.clone(),
-        backend.clone(),
-        batch,
-        &ctx.weights,
-        qm.as_ref(),
-    )?;
     let m = ge.run_closed_loop(trace)?;
-    println!("[{} b={batch}] {}", backend.label(), m.summary());
+    println!("[artifact b={batch}] {}", m.summary());
     Ok(())
 }
 

@@ -1,0 +1,1247 @@
+//! `QuantArtifact` — the self-describing, serializable quantized-model
+//! format: quantize ONCE, persist, and cold-start a serve backend
+//! straight from the packed planes (no re-quantization, no dense
+//! intermediate — decode goes through the PR 3
+//! `dequantize_from_packed` kernels via [`LayerScheme::dequantize`]).
+//!
+//! ## Model
+//!
+//! * [`LayerScheme`] — the typed per-layer descriptor: [`QuantSpec`] +
+//!   shape `[k, n_out]` + scale layout (`g`: one scale row per group of
+//!   g input rows) + the bit-packed [`PackedCodes`] plane + the
+//!   measured t² (when the encode path measured it). A
+//!   [`QuantizedLayer`] converts losslessly to and from its scheme
+//!   ([`QuantizedLayer::scheme`] / [`LayerScheme::to_layer`]); mixed
+//!   models are just `Vec<LayerScheme>`.
+//! * [`QuantArtifact`] — a config tag + the layer schemes, with a
+//!   versioned binary [`QuantArtifact::save`]/[`QuantArtifact::load`]
+//!   and shape validation against a dense [`Manifest`]
+//!   ([`QuantArtifact::validate_against`]).
+//!
+//! ## On-disk layout (all little-endian)
+//!
+//! ```text
+//! magic  b"HIGGSQA1"                         (8 bytes)
+//! u32    format version (1)
+//! u64    manifest length, then manifest JSON (grids + layer schemes,
+//!        specs as canonical QuantSpec strings)
+//! planes deduplicated grid tables (n·p f32 each), then per layer:
+//!        packed code words (u32), scales/steps[/zeros] (f32),
+//!        RHT signs (f32, rotated layers)
+//! u64    FNV-1a checksum of every preceding byte
+//! ```
+//!
+//! Scales are stored as raw f32 (the paper's 16-bit-scale accounting is
+//! a *size* convention — `packed_avg_bits` counts them at 16 bits —
+//! but serving decodes f32 scales, and storing them exactly is what
+//! makes save→load→dequantize bit-for-bit). Loading validates
+//! everything before any kernel runs: magic/version/checksum, plane
+//! sizes against the declared shapes, code ranges against the grid
+//! size — corrupted or truncated files error, they never panic.
+
+use super::decode;
+use super::packing::{self, PackedCodes};
+use super::{QuantData, QuantSpec, QuantizedLayer, QuantizedModel};
+use crate::grids::{Grid, GridKind};
+use crate::model::Manifest;
+use crate::tensor::Tensor;
+use anyhow::{bail, ensure, Context, Result};
+use std::path::Path;
+use std::sync::Arc;
+
+const MAGIC: &[u8; 8] = b"HIGGSQA1";
+const VERSION: u32 = 1;
+
+// ---------------------------------------------------------------------------
+// LayerScheme
+// ---------------------------------------------------------------------------
+
+/// The typed, serializable descriptor of one quantized layer: spec +
+/// shape + scale layout + packed plane + measured t².
+#[derive(Clone, Debug)]
+pub struct LayerScheme {
+    /// layer name (the manifest's `<name>.w` base)
+    pub name: String,
+    /// the quantizer configuration that produced the layer
+    pub spec: QuantSpec,
+    /// input dim K
+    pub k: usize,
+    /// output dim N
+    pub n_out: usize,
+    /// effective scale-group size along K (one scale row per g rows)
+    pub g: usize,
+    /// measured relative squared error t² (Eqn. 3), if measured
+    pub t2: Option<f64>,
+    /// the storage payload
+    pub plane: PlaneData,
+}
+
+/// The storage-form payload of a [`LayerScheme`]: codes live
+/// bit-packed at the layer's own width (mixed models are heterogeneous
+/// per layer), scales/steps/zeros/signs as f32 planes.
+#[derive(Clone, Debug)]
+pub enum PlaneData {
+    /// LUT codes into `grid`; `signs` present means the codes live in
+    /// the Hadamard-rotated space (HIGGS).
+    Lut {
+        packed: PackedCodes,
+        scales: Vec<f32>,
+        grid: Arc<Grid>,
+        signs: Option<Vec<f32>>,
+    },
+    /// Uniform grid: w ≈ (code − zero) · step.
+    Uniform {
+        packed: PackedCodes,
+        steps: Vec<f32>,
+        zeros: Vec<f32>,
+        bits: u32,
+    },
+}
+
+impl LayerScheme {
+    /// Build the scheme of an in-memory layer (packs the code plane at
+    /// the layer's own width).
+    pub fn from_layer(ql: &QuantizedLayer) -> LayerScheme {
+        let plane = match &ql.data {
+            QuantData::Lut { codes, scales, grid, signs } => PlaneData::Lut {
+                packed: PackedCodes::from_codes(codes, ql.code_bits()),
+                scales: scales.clone(),
+                grid: grid.clone(),
+                signs: signs.clone(),
+            },
+            QuantData::Uniform { codes, steps, zeros, bits } => PlaneData::Uniform {
+                packed: PackedCodes::from_codes(codes, *bits),
+                steps: steps.clone(),
+                zeros: zeros.clone(),
+                bits: *bits,
+            },
+        };
+        LayerScheme {
+            name: ql.name.clone(),
+            spec: ql.spec.clone(),
+            k: ql.k,
+            n_out: ql.n_out,
+            g: ql.g,
+            t2: ql.t2,
+            plane,
+        }
+    }
+
+    /// Reconstruct the in-memory [`QuantizedLayer`] (unpacks the code
+    /// plane). Validates first, so malformed schemes error instead of
+    /// panicking downstream.
+    pub fn to_layer(&self) -> Result<QuantizedLayer> {
+        self.validate()?;
+        let data = match &self.plane {
+            PlaneData::Lut { packed, scales, grid, signs } => QuantData::Lut {
+                codes: packed.unpack(),
+                scales: scales.clone(),
+                grid: grid.clone(),
+                signs: signs.clone(),
+            },
+            PlaneData::Uniform { packed, steps, zeros, bits } => QuantData::Uniform {
+                codes: packed.unpack(),
+                steps: steps.clone(),
+                zeros: zeros.clone(),
+                bits: *bits,
+            },
+        };
+        Ok(QuantizedLayer {
+            name: self.name.clone(),
+            spec: self.spec.clone(),
+            k: self.k,
+            n_out: self.n_out,
+            g: self.g,
+            data,
+            bits_per_param: self.spec.bits_per_param(self.k),
+            t2: self.t2,
+        })
+    }
+
+    /// Structural validation: shapes, plane sizes, code ranges. This is
+    /// what makes a loaded artifact safe to hand to the decode kernels
+    /// (which assert rather than error).
+    pub fn validate(&self) -> Result<()> {
+        let (k, n, g) = (self.k, self.n_out, self.g);
+        ensure!(k >= 1 && n >= 1 && g >= 1, "layer {}: degenerate shape", self.name);
+        ensure!(k % g == 0, "layer {}: group {g} does not divide k {k}", self.name);
+        match &self.plane {
+            PlaneData::Lut { packed, scales, grid, signs } => {
+                ensure!(
+                    grid.n >= 1 && grid.p >= 1 && grid.points.len() == grid.n * grid.p,
+                    "layer {}: malformed grid table",
+                    self.name
+                );
+                ensure!(
+                    k % grid.p == 0,
+                    "layer {}: grid dim p={} does not divide k {k}",
+                    self.name,
+                    grid.p
+                );
+                ensure!(
+                    packed.bits == packing::ceil_log2(grid.n),
+                    "layer {}: packed width {} vs grid width {}",
+                    self.name,
+                    packed.bits,
+                    packing::ceil_log2(grid.n)
+                );
+                ensure!(
+                    packed.count == (k / grid.p) * n,
+                    "layer {}: {} packed codes vs shape {}x{} (p={})",
+                    self.name,
+                    packed.count,
+                    k,
+                    n,
+                    grid.p
+                );
+                ensure!(
+                    packed.words.len() == packing::packed_words(packed.count, packed.bits),
+                    "layer {}: packed plane has {} words, want {}",
+                    self.name,
+                    packed.words.len(),
+                    packing::packed_words(packed.count, packed.bits)
+                );
+                ensure!(
+                    scales.len() == (k / g) * n,
+                    "layer {}: {} scales vs {} groups x {} cols",
+                    self.name,
+                    scales.len(),
+                    k / g,
+                    n
+                );
+                if let Some(s) = signs {
+                    ensure!(
+                        s.len() == k,
+                        "layer {}: {} signs vs k {k}",
+                        self.name,
+                        s.len()
+                    );
+                    ensure!(
+                        g.is_power_of_two(),
+                        "layer {}: rotated layer needs a power-of-two group, got {g}",
+                        self.name
+                    );
+                }
+                // every code must index inside the grid (only possible to
+                // violate when n is not a power of two of the code width)
+                if grid.n < (1usize << packed.bits.min(31)) {
+                    let mut buf = vec![0u32; 4096.min(packed.count.max(1))];
+                    let mut start = 0usize;
+                    while start < packed.count {
+                        let len = buf.len().min(packed.count - start);
+                        packed.unpack_into(start, &mut buf[..len]);
+                        if let Some(&bad) = buf[..len].iter().find(|&&c| c as usize >= grid.n)
+                        {
+                            bail!(
+                                "layer {}: code {bad} out of range for {}-point grid",
+                                self.name,
+                                grid.n
+                            );
+                        }
+                        start += len;
+                    }
+                }
+            }
+            PlaneData::Uniform { packed, steps, zeros, bits } => {
+                ensure!(
+                    *bits >= 1 && *bits <= 32,
+                    "layer {}: uniform width {bits} out of range",
+                    self.name
+                );
+                ensure!(
+                    packed.bits == *bits,
+                    "layer {}: packed width {} vs declared {bits}",
+                    self.name,
+                    packed.bits
+                );
+                ensure!(
+                    packed.count == k * n,
+                    "layer {}: {} packed codes vs shape {k}x{n}",
+                    self.name,
+                    packed.count
+                );
+                ensure!(
+                    packed.words.len() == packing::packed_words(packed.count, packed.bits),
+                    "layer {}: packed plane has {} words, want {}",
+                    self.name,
+                    packed.words.len(),
+                    packing::packed_words(packed.count, packed.bits)
+                );
+                ensure!(
+                    steps.len() == (k / g) * n && zeros.len() == steps.len(),
+                    "layer {}: {} steps / {} zeros vs {} groups x {} cols",
+                    self.name,
+                    steps.len(),
+                    zeros.len(),
+                    k / g,
+                    n
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Borrowed decode view that reads STRAIGHT from the packed plane —
+    /// the cold-start path: no unpacked `Vec<u32>` is ever
+    /// materialized (block-wise `unpack_into`, see [`decode`]).
+    fn view(&self, keep_rotated: bool) -> decode::LayerView<'_> {
+        let (k, n, g) = (self.k, self.n_out, self.g);
+        match &self.plane {
+            PlaneData::Lut { packed, scales, grid, signs } => decode::LayerView {
+                k,
+                n,
+                g,
+                codes: decode::CodeSource::Packed(packed),
+                payload: decode::Payload::Lut {
+                    scales: scales.as_slice(),
+                    grid: grid.as_ref(),
+                    signs: if keep_rotated { None } else { signs.as_deref() },
+                },
+            },
+            PlaneData::Uniform { packed, steps, zeros, .. } => decode::LayerView {
+                k,
+                n,
+                g,
+                codes: decode::CodeSource::Packed(packed),
+                payload: decode::Payload::Uniform {
+                    steps: steps.as_slice(),
+                    zeros: zeros.as_slice(),
+                },
+            },
+        }
+    }
+
+    /// Dense weights in the ORIGINAL space, decoded directly from the
+    /// packed plane (blocked + multithreaded; bit-identical to
+    /// `to_layer()?.dequantize()`). Schemes from
+    /// [`LayerScheme::from_layer`] or [`QuantArtifact::load`] are
+    /// always well-formed; hand-built malformed schemes assert like
+    /// every other decode path.
+    pub fn dequantize(&self) -> Tensor {
+        let w = decode::decode_dense(&self.view(false), decode::decode_block_cols());
+        Tensor::from_vec(&[self.k, self.n_out], w)
+    }
+
+    /// Bit width of one packed code in this layer.
+    pub fn code_bits(&self) -> u32 {
+        match &self.plane {
+            PlaneData::Lut { packed, .. } => packed.bits,
+            PlaneData::Uniform { bits, .. } => *bits,
+        }
+    }
+
+    /// Packed size in bytes — same accounting as
+    /// [`QuantizedLayer::packed_bytes`] (codes bit-packed + scales at
+    /// 16 bit; signs are seed-derived and not counted).
+    pub fn packed_bytes(&self) -> usize {
+        match &self.plane {
+            PlaneData::Lut { packed, scales, .. } => packed.byte_len() + scales.len() * 2,
+            PlaneData::Uniform { packed, steps, zeros, .. } => {
+                packed.byte_len() + (steps.len() + zeros.len()) * 2
+            }
+        }
+    }
+
+    /// Exact packed size in bits (u32-word padding included).
+    pub fn packed_bits(&self) -> u64 {
+        self.packed_bytes() as u64 * 8
+    }
+}
+
+impl QuantizedLayer {
+    /// The serializable scheme descriptor of this layer (packs the
+    /// code plane) — the [`artifact`](self) counterpart of the
+    /// in-memory representation.
+    pub fn scheme(&self) -> LayerScheme {
+        LayerScheme::from_layer(self)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// QuantArtifact
+// ---------------------------------------------------------------------------
+
+/// A fully quantized model in storage form: a config tag plus one
+/// [`LayerScheme`] per linear layer, save/load-able as one
+/// self-describing binary file.
+#[derive(Clone, Debug)]
+pub struct QuantArtifact {
+    /// model config name this artifact was quantized for (checked
+    /// against at serve time by shape validation, informational here)
+    pub config: String,
+    pub layers: Vec<LayerScheme>,
+}
+
+impl QuantArtifact {
+    /// Snapshot an in-memory quantized model.
+    pub fn from_model(config: &str, qm: &QuantizedModel) -> QuantArtifact {
+        QuantArtifact {
+            config: config.to_string(),
+            layers: qm.layers.iter().map(LayerScheme::from_layer).collect(),
+        }
+    }
+
+    pub fn from_schemes(config: &str, layers: Vec<LayerScheme>) -> QuantArtifact {
+        QuantArtifact { config: config.to_string(), layers }
+    }
+
+    /// Reconstruct the in-memory [`QuantizedModel`] — bit-for-bit equal
+    /// to the model the artifact was built from (packed planes,
+    /// `packed_avg_bits`, dequantized tensors).
+    pub fn to_model(&self) -> Result<QuantizedModel> {
+        let layers = self
+            .layers
+            .iter()
+            .map(|s| s.to_layer())
+            .collect::<Result<Vec<_>>>()?;
+        Ok(QuantizedModel::from_layers(layers))
+    }
+
+    pub fn get(&self, name: &str) -> Option<&LayerScheme> {
+        self.layers.iter().find(|l| l.name == name)
+    }
+
+    /// The single LUT grid shared by every LUT layer, or `None` if the
+    /// artifact is mixed-precision (same contract as
+    /// [`QuantizedModel::shared_lut_grid`]).
+    pub fn shared_lut_grid(&self) -> Option<Arc<Grid>> {
+        let mut found: Option<Arc<Grid>> = None;
+        for l in &self.layers {
+            if let PlaneData::Lut { grid, .. } = &l.plane {
+                match &found {
+                    None => found = Some(grid.clone()),
+                    Some(g) => {
+                        if !Arc::ptr_eq(g, grid) && !g.same_table(grid) {
+                            return None;
+                        }
+                    }
+                }
+            }
+        }
+        found
+    }
+
+    /// Exact average bits/param from the packed planes (Σ packed bits /
+    /// Σ params) — identical to [`QuantizedModel::packed_avg_bits`].
+    pub fn packed_avg_bits(&self) -> f64 {
+        let params: usize = self.layers.iter().map(|l| l.k * l.n_out).sum();
+        let bits: u64 = self.layers.iter().map(|l| l.packed_bits()).sum();
+        bits as f64 / params.max(1) as f64
+    }
+
+    /// Total packed payload in bytes (codes + scales accounting).
+    pub fn packed_bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.packed_bytes()).sum()
+    }
+
+    /// Validate against a dense model manifest, in BOTH directions:
+    /// every scheme must match its `<name>.w` param's `[k, n]` dims,
+    /// and every `.w` param must be covered by a scheme — a partial
+    /// artifact would otherwise silently serve the uncovered layers at
+    /// full precision. This is the guard that a persisted artifact
+    /// belongs to (and fully quantizes) the model it is served with.
+    pub fn validate_against(&self, man: &Manifest) -> Result<()> {
+        for l in &self.layers {
+            let pname = format!("{}.w", l.name);
+            let spec = man
+                .param(&pname)
+                .with_context(|| format!("manifest has no param {pname}"))?;
+            ensure!(
+                spec.dims == vec![l.k, l.n_out],
+                "layer {}: artifact shape {}x{} vs manifest {:?}",
+                l.name,
+                l.k,
+                l.n_out,
+                spec.dims
+            );
+        }
+        for p in &man.params {
+            if let Some(base) = p.name.strip_suffix(".w") {
+                ensure!(
+                    self.get(base).is_some(),
+                    "artifact does not cover linear layer {base} — a partial artifact \
+                     would silently serve it at full precision"
+                );
+            }
+        }
+        Ok(())
+    }
+
+    // ---- persistence ----
+
+    /// Serialize to the versioned binary format (see module docs).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let bytes = self.to_bytes();
+        std::fs::write(path, &bytes)
+            .with_context(|| format!("write artifact {}", path.display()))?;
+        Ok(())
+    }
+
+    /// The serialized byte image (exposed for size accounting/tests).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        // deduplicate grid tables by content (layers quantized by one
+        // quantizer share the same Arc, but content-equality also folds
+        // separately-built identical grids)
+        let mut grids: Vec<Arc<Grid>> = Vec::new();
+        let mut grid_of_layer: Vec<Option<usize>> = Vec::with_capacity(self.layers.len());
+        for l in &self.layers {
+            match &l.plane {
+                PlaneData::Lut { grid, .. } => {
+                    // kind participates here (unlike `shared_lut_grid`):
+                    // the table entry stores it, so two same-point grids
+                    // of different kinds must not fold together
+                    let idx = grids.iter().position(|g| {
+                        Arc::ptr_eq(g, grid) || (g.kind == grid.kind && g.same_table(grid))
+                    });
+                    let idx = idx.unwrap_or_else(|| {
+                        grids.push(grid.clone());
+                        grids.len() - 1
+                    });
+                    grid_of_layer.push(Some(idx));
+                }
+                PlaneData::Uniform { .. } => grid_of_layer.push(None),
+            }
+        }
+
+        // manifest JSON
+        let grid_json: Vec<Json> = grids
+            .iter()
+            .map(|g| {
+                Json::Obj(vec![
+                    ("kind".into(), Json::Str(g.kind.label().to_string())),
+                    ("n".into(), json_int(g.n)),
+                    ("p".into(), json_int(g.p)),
+                    ("mse".into(), json_num(g.mse)),
+                ])
+            })
+            .collect();
+        let layer_json: Vec<Json> = self
+            .layers
+            .iter()
+            .zip(&grid_of_layer)
+            .map(|(l, gi)| {
+                let plane = match &l.plane {
+                    PlaneData::Lut { packed, signs, .. } => Json::Obj(vec![
+                        ("type".into(), Json::Str("lut".into())),
+                        ("grid".into(), json_int(gi.expect("lut layer has grid"))),
+                        ("bits".into(), json_int(packed.bits as usize)),
+                        ("count".into(), json_int(packed.count)),
+                        ("signs".into(), Json::Bool(signs.is_some())),
+                    ]),
+                    PlaneData::Uniform { packed, bits, .. } => Json::Obj(vec![
+                        ("type".into(), Json::Str("uniform".into())),
+                        ("bits".into(), json_int(*bits as usize)),
+                        ("count".into(), json_int(packed.count)),
+                    ]),
+                };
+                Json::Obj(vec![
+                    ("name".into(), Json::Str(l.name.clone())),
+                    ("spec".into(), Json::Str(l.spec.to_string())),
+                    ("k".into(), json_int(l.k)),
+                    ("n".into(), json_int(l.n_out)),
+                    ("g".into(), json_int(l.g)),
+                    ("t2".into(), l.t2.map(json_num).unwrap_or(Json::Null)),
+                    ("plane".into(), plane),
+                ])
+            })
+            .collect();
+        let manifest = Json::Obj(vec![
+            ("version".into(), json_int(VERSION as usize)),
+            ("config".into(), Json::Str(self.config.clone())),
+            ("grids".into(), Json::Arr(grid_json)),
+            ("layers".into(), Json::Arr(layer_json)),
+        ]);
+        let mut json = String::new();
+        manifest.write(&mut json);
+
+        // assemble: header + json + planes + checksum
+        let mut buf: Vec<u8> = Vec::with_capacity(json.len() + 64);
+        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(&VERSION.to_le_bytes());
+        buf.extend_from_slice(&(json.len() as u64).to_le_bytes());
+        buf.extend_from_slice(json.as_bytes());
+        for g in &grids {
+            push_f32s(&mut buf, &g.points);
+        }
+        for l in &self.layers {
+            match &l.plane {
+                PlaneData::Lut { packed, scales, signs, .. } => {
+                    push_u32s(&mut buf, &packed.words);
+                    push_f32s(&mut buf, scales);
+                    if let Some(s) = signs {
+                        push_f32s(&mut buf, s);
+                    }
+                }
+                PlaneData::Uniform { packed, steps, zeros, .. } => {
+                    push_u32s(&mut buf, &packed.words);
+                    push_f32s(&mut buf, steps);
+                    push_f32s(&mut buf, zeros);
+                }
+            }
+        }
+        let checksum = fnv1a(&buf);
+        buf.extend_from_slice(&checksum.to_le_bytes());
+        buf
+    }
+
+    /// Load and fully validate an artifact file. Corrupted headers,
+    /// truncated files, checksum mismatches, wrong plane sizes, and
+    /// out-of-range codes all error — never panic.
+    pub fn load(path: &Path) -> Result<QuantArtifact> {
+        let buf = std::fs::read(path)
+            .with_context(|| format!("read artifact {}", path.display()))?;
+        Self::from_bytes(&buf).with_context(|| format!("load artifact {}", path.display()))
+    }
+
+    /// Parse a serialized artifact image (see [`QuantArtifact::save`]).
+    pub fn from_bytes(buf: &[u8]) -> Result<QuantArtifact> {
+        ensure!(buf.len() >= 8 + 4 + 8 + 8, "file too short to be a quant artifact");
+        ensure!(&buf[..8] == MAGIC, "bad magic (not a quant artifact)");
+        let trailer = u64::from_le_bytes(buf[buf.len() - 8..].try_into().unwrap());
+        ensure!(
+            fnv1a(&buf[..buf.len() - 8]) == trailer,
+            "checksum mismatch (corrupted artifact)"
+        );
+        let body = &buf[..buf.len() - 8];
+        let mut cur = Cursor { buf: body, pos: 8 };
+        let version = cur.u32()?;
+        ensure!(version == VERSION, "unsupported artifact version {version}");
+        let json_len = cur.u64()? as usize;
+        let json_bytes = cur.take(json_len).context("manifest JSON")?;
+        let json_text = std::str::from_utf8(json_bytes).context("manifest is not UTF-8")?;
+        let man = Json::parse(json_text)?;
+
+        let config = man
+            .get("config")
+            .and_then(Json::as_str)
+            .unwrap_or_default()
+            .to_string();
+
+        // grid tables
+        let mut grids: Vec<Arc<Grid>> = Vec::new();
+        for (i, gj) in man.get("grids").and_then(Json::as_arr).unwrap_or(&[]).iter().enumerate()
+        {
+            let kind = grid_kind_from_label(
+                gj.get("kind").and_then(Json::as_str).context("grid kind")?,
+            )?;
+            let n = gj.get("n").context("grid n")?.as_usize()?;
+            let p = gj.get("p").context("grid p")?.as_usize()?;
+            ensure!(
+                (1..=1 << 24).contains(&n) && (1..=64).contains(&p),
+                "grid {i}: implausible size {n}x{p}"
+            );
+            let mse = gj.get("mse").and_then(|v| v.as_f64().ok()).unwrap_or(0.0);
+            let points = cur.f32s(n.checked_mul(p).context("grid size overflow")?)?;
+            grids.push(Arc::new(Grid::new(kind, n, p, points, mse)));
+        }
+
+        // layer schemes
+        let mut layers = Vec::new();
+        for lj in man.get("layers").and_then(Json::as_arr).unwrap_or(&[]) {
+            let name = lj.get("name").and_then(Json::as_str).context("layer name")?.to_string();
+            let spec_s = lj.get("spec").and_then(Json::as_str).context("layer spec")?;
+            let spec = QuantSpec::parse(spec_s, 64, 0x51)
+                .with_context(|| format!("layer {name}: bad spec"))?;
+            let k = lj.get("k").context("layer k")?.as_usize()?;
+            let n_out = lj.get("n").context("layer n")?.as_usize()?;
+            let g = lj.get("g").context("layer g")?.as_usize()?;
+            ensure!(
+                k >= 1 && n_out >= 1 && g >= 1 && k.checked_mul(n_out).is_some(),
+                "layer {name}: implausible shape {k}x{n_out} (g {g})"
+            );
+            let t2 = match lj.get("t2") {
+                None | Some(Json::Null) => None,
+                Some(v) => Some(v.as_f64().context("layer t2")?),
+            };
+            let pj = lj.get("plane").context("layer plane")?;
+            // range-check BEFORE narrowing to u32: an absurd declared
+            // width must error, not truncate into a plausible one
+            let bits_decl = pj.get("bits").context("plane bits")?.as_usize()?;
+            ensure!(bits_decl <= 32, "layer {name}: code width {bits_decl} > 32");
+            let bits = bits_decl as u32;
+            let count = pj.get("count").context("plane count")?.as_usize()?;
+            let words = cur.u32s(packing::packed_words(count, bits))?;
+            let packed = PackedCodes { bits, count, words };
+            let plane = match pj.get("type").and_then(Json::as_str) {
+                Some("lut") => {
+                    let gi = pj.get("grid").context("plane grid")?.as_usize()?;
+                    let grid = grids
+                        .get(gi)
+                        .with_context(|| format!("layer {name}: grid index {gi} out of range"))?
+                        .clone();
+                    let scales = cur.f32s((k / g.max(1)) * n_out)?;
+                    let signs = if pj.get("signs").and_then(Json::as_bool).unwrap_or(false) {
+                        Some(cur.f32s(k)?)
+                    } else {
+                        None
+                    };
+                    PlaneData::Lut { packed, scales, grid, signs }
+                }
+                Some("uniform") => {
+                    let steps = cur.f32s((k / g.max(1)) * n_out)?;
+                    let zeros = cur.f32s((k / g.max(1)) * n_out)?;
+                    PlaneData::Uniform { packed, steps, zeros, bits }
+                }
+                other => bail!("layer {name}: unknown plane type {other:?}"),
+            };
+            layers.push(LayerScheme { name, spec, k, n_out, g, t2, plane });
+        }
+        ensure!(cur.pos == body.len(), "trailing bytes after planes");
+        for l in &layers {
+            l.validate()?;
+        }
+        Ok(QuantArtifact { config, layers })
+    }
+}
+
+fn grid_kind_from_label(s: &str) -> Result<GridKind> {
+    Ok(match s {
+        "higgs" => GridKind::Higgs,
+        "nf" => GridKind::Nf,
+        "af" => GridKind::Af,
+        "uniform" => GridKind::Uniform,
+        other => bail!("unknown grid kind {other:?}"),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// byte helpers
+// ---------------------------------------------------------------------------
+
+fn push_u32s(buf: &mut Vec<u8>, v: &[u32]) {
+    buf.reserve(v.len() * 4);
+    for &x in v {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn push_f32s(buf: &mut Vec<u8>, v: &[f32]) {
+    buf.reserve(v.len() * 4);
+    for &x in v {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Trailer checksum over the whole byte image — the shared
+/// [`crate::util::fnv1a`] (single-byte corruptions always change it).
+fn fnv1a(bytes: &[u8]) -> u64 {
+    crate::util::fnv1a(bytes.iter().copied())
+}
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self.pos.checked_add(n).context("length overflow")?;
+        ensure!(end <= self.buf.len(), "truncated artifact ({n} bytes past end)");
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn u32s(&mut self, n: usize) -> Result<Vec<u32>> {
+        let bytes = self.take(n.checked_mul(4).context("length overflow")?)?;
+        Ok(bytes.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
+        let bytes = self.take(n.checked_mul(4).context("length overflow")?)?;
+        Ok(bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// minimal JSON (serde is not in the offline crate set)
+// ---------------------------------------------------------------------------
+
+/// The subset of JSON the artifact manifest needs: objects, arrays,
+/// strings, finite numbers, bools, null. Numbers round-trip exactly
+/// (integers emitted without a fraction, f64 via Rust's
+/// shortest-round-trip `Display`); non-finite numbers serialize as
+/// `null`.
+#[derive(Clone, Debug, PartialEq)]
+pub(crate) enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+fn json_int(v: usize) -> Json {
+    Json::Num(v as f64)
+}
+
+fn json_num(v: f64) -> Json {
+    if v.is_finite() {
+        Json::Num(v)
+    } else {
+        Json::Null
+    }
+}
+
+impl Json {
+    fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(kv) => kv.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s.as_str()),
+            _ => None,
+        }
+    }
+
+    fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(v) => Some(v.as_slice()),
+            _ => None,
+        }
+    }
+
+    fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    fn as_f64(&self) -> Result<f64> {
+        match self {
+            Json::Num(v) => Ok(*v),
+            other => bail!("expected number, got {other:?}"),
+        }
+    }
+
+    fn as_usize(&self) -> Result<usize> {
+        let v = self.as_f64()?;
+        ensure!(
+            v >= 0.0 && v.fract() == 0.0 && v <= 2f64.powi(53),
+            "expected non-negative integer, got {v}"
+        );
+        Ok(v as usize)
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(v) => {
+                if v.fract() == 0.0 && v.abs() <= 2f64.powi(53) {
+                    out.push_str(&format!("{}", *v as i64));
+                } else {
+                    out.push_str(&format!("{v}"));
+                }
+            }
+            Json::Str(s) => {
+                out.push('"');
+                for c in s.chars() {
+                    match c {
+                        '"' => out.push_str("\\\""),
+                        '\\' => out.push_str("\\\\"),
+                        '\n' => out.push_str("\\n"),
+                        '\r' => out.push_str("\\r"),
+                        '\t' => out.push_str("\\t"),
+                        c if (c as u32) < 0x20 => {
+                            out.push_str(&format!("\\u{:04x}", c as u32))
+                        }
+                        c => out.push(c),
+                    }
+                }
+                out.push('"');
+            }
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    item.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(kv) => {
+                out.push('{');
+                for (i, (k, v)) in kv.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    Json::Str(k.clone()).write(out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+
+    pub(crate) fn parse(text: &str) -> Result<Json> {
+        let mut p = JsonParser { bytes: text.as_bytes(), pos: 0, depth: 0 };
+        let v = p.value()?;
+        p.skip_ws();
+        ensure!(p.pos == p.bytes.len(), "trailing JSON at byte {}", p.pos);
+        Ok(v)
+    }
+}
+
+/// Nesting cap for the recursive-descent parser: a crafted file with a
+/// valid checksum but pathologically nested JSON must error, not blow
+/// the stack (the real manifest nests 4 levels deep).
+const JSON_MAX_DEPTH: usize = 64;
+
+struct JsonParser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+    depth: usize,
+}
+
+impl JsonParser<'_> {
+    fn skip_ws(&mut self) {
+        while self.pos < self.bytes.len()
+            && matches!(self.bytes[self.pos], b' ' | b'\t' | b'\n' | b'\r')
+        {
+            self.pos += 1;
+        }
+    }
+
+    fn peek(&mut self) -> Result<u8> {
+        self.skip_ws();
+        self.bytes
+            .get(self.pos)
+            .copied()
+            .with_context(|| "unexpected end of JSON".to_string())
+    }
+
+    fn expect(&mut self, c: u8) -> Result<()> {
+        let got = self.peek()?;
+        ensure!(got == c, "expected {:?} at byte {}, got {:?}", c as char, self.pos, got as char);
+        self.pos += 1;
+        Ok(())
+    }
+
+    fn eat_lit(&mut self, lit: &str, v: Json) -> Result<Json> {
+        ensure!(
+            self.bytes[self.pos..].starts_with(lit.as_bytes()),
+            "bad JSON literal at byte {}",
+            self.pos
+        );
+        self.pos += lit.len();
+        Ok(v)
+    }
+
+    fn value(&mut self) -> Result<Json> {
+        self.depth += 1;
+        ensure!(self.depth <= JSON_MAX_DEPTH, "JSON nested deeper than {JSON_MAX_DEPTH}");
+        let v = self.value_inner();
+        self.depth -= 1;
+        v
+    }
+
+    fn value_inner(&mut self) -> Result<Json> {
+        match self.peek()? {
+            b'{' => {
+                self.pos += 1;
+                let mut kv = Vec::new();
+                if self.peek()? == b'}' {
+                    self.pos += 1;
+                    return Ok(Json::Obj(kv));
+                }
+                loop {
+                    self.skip_ws();
+                    let key = match self.string()? {
+                        Json::Str(s) => s,
+                        _ => unreachable!(),
+                    };
+                    self.expect(b':')?;
+                    let v = self.value()?;
+                    kv.push((key, v));
+                    match self.peek()? {
+                        b',' => self.pos += 1,
+                        b'}' => {
+                            self.pos += 1;
+                            return Ok(Json::Obj(kv));
+                        }
+                        c => bail!("expected ',' or '}}' at byte {}, got {:?}", self.pos, c as char),
+                    }
+                }
+            }
+            b'[' => {
+                self.pos += 1;
+                let mut items = Vec::new();
+                if self.peek()? == b']' {
+                    self.pos += 1;
+                    return Ok(Json::Arr(items));
+                }
+                loop {
+                    items.push(self.value()?);
+                    match self.peek()? {
+                        b',' => self.pos += 1,
+                        b']' => {
+                            self.pos += 1;
+                            return Ok(Json::Arr(items));
+                        }
+                        c => bail!("expected ',' or ']' at byte {}, got {:?}", self.pos, c as char),
+                    }
+                }
+            }
+            b'"' => self.string(),
+            b't' => self.eat_lit("true", Json::Bool(true)),
+            b'f' => self.eat_lit("false", Json::Bool(false)),
+            b'n' => self.eat_lit("null", Json::Null),
+            _ => self.number(),
+        }
+    }
+
+    fn string(&mut self) -> Result<Json> {
+        self.expect(b'"')?;
+        let mut s = String::new();
+        loop {
+            let c = *self
+                .bytes
+                .get(self.pos)
+                .context("unterminated JSON string")?;
+            self.pos += 1;
+            match c {
+                b'"' => return Ok(Json::Str(s)),
+                b'\\' => {
+                    let e = *self
+                        .bytes
+                        .get(self.pos)
+                        .context("unterminated JSON escape")?;
+                    self.pos += 1;
+                    match e {
+                        b'"' => s.push('"'),
+                        b'\\' => s.push('\\'),
+                        b'/' => s.push('/'),
+                        b'n' => s.push('\n'),
+                        b'r' => s.push('\r'),
+                        b't' => s.push('\t'),
+                        b'u' => {
+                            let hex = self
+                                .bytes
+                                .get(self.pos..self.pos + 4)
+                                .context("truncated \\u escape")?;
+                            self.pos += 4;
+                            let code = u32::from_str_radix(
+                                std::str::from_utf8(hex).context("bad \\u escape")?,
+                                16,
+                            )
+                            .context("bad \\u escape")?;
+                            s.push(char::from_u32(code).context("bad \\u code point")?);
+                        }
+                        other => bail!("unknown JSON escape \\{}", other as char),
+                    }
+                }
+                c if c < 0x80 => s.push(c as char),
+                _ => {
+                    // multi-byte UTF-8: find the full char from the source
+                    let start = self.pos - 1;
+                    let text = std::str::from_utf8(&self.bytes[start..])
+                        .ok()
+                        .and_then(|t| t.chars().next())
+                        .context("invalid UTF-8 in JSON string")?;
+                    s.push(text);
+                    self.pos = start + text.len_utf8();
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        self.skip_ws();
+        let start = self.pos;
+        while self.pos < self.bytes.len()
+            && matches!(self.bytes[self.pos], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+        {
+            self.pos += 1;
+        }
+        ensure!(self.pos > start, "expected JSON value at byte {start}");
+        let s = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
+        let v: f64 = s
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad JSON number {s:?} at byte {start}"))?;
+        Ok(Json::Num(v))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grids::registry::GridRegistry;
+    use crate::quant::higgs::HiggsQuantizer;
+    use crate::quant::rtn::RtnQuantizer;
+    use crate::quant::Quantizer;
+    use crate::util::prng::Rng;
+
+    fn rand_layer(k: usize, n: usize, seed: u64) -> Tensor {
+        let mut rng = Rng::new(seed);
+        Tensor::from_vec(&[k, n], rng.normal_vec(k * n))
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let v = Json::Obj(vec![
+            ("a".into(), Json::Num(3.0)),
+            ("b".into(), Json::Str("x \"quoted\"\n\\слой".into())),
+            ("c".into(), Json::Arr(vec![Json::Null, Json::Bool(true), Json::Num(0.015625)])),
+            ("d".into(), Json::Obj(vec![])),
+            ("e".into(), Json::Num(1e-17)),
+        ]);
+        let mut s = String::new();
+        v.write(&mut s);
+        assert_eq!(Json::parse(&s).unwrap(), v);
+        assert!(Json::parse("{broken").is_err());
+        assert!(Json::parse("").is_err());
+        assert!(Json::parse("{}extra").is_err());
+        // pathological nesting errors instead of blowing the stack
+        let deep = format!("{}null{}", "[".repeat(10_000), "]".repeat(10_000));
+        assert!(Json::parse(&deep).is_err());
+    }
+
+    #[test]
+    fn scheme_roundtrips_layer_bit_for_bit() {
+        let reg = GridRegistry::new();
+        let w = rand_layer(64, 20, 1);
+        for ql in [
+            HiggsQuantizer::new(reg.get(GridKind::Higgs, 16, 2), 32, 7).quantize("h", &w),
+            RtnQuantizer::new(3, 32).quantize("r", &w),
+        ] {
+            let scheme = ql.scheme();
+            scheme.validate().unwrap();
+            let back = scheme.to_layer().unwrap();
+            assert_eq!(back.spec, ql.spec);
+            assert_eq!(back.packed_codes(), ql.packed_codes());
+            assert_eq!(back.dequantize().data, ql.dequantize().data);
+            // decode straight from the packed plane — no unpacked codes
+            assert_eq!(scheme.dequantize().data, ql.dequantize().data);
+            assert_eq!(scheme.packed_bytes(), ql.packed_bytes());
+        }
+    }
+
+    #[test]
+    fn artifact_bytes_roundtrip_and_dedup_grids() {
+        let reg = GridRegistry::new();
+        let q = HiggsQuantizer::new(reg.get(GridKind::Higgs, 16, 2), 16, 5);
+        let w1 = rand_layer(32, 8, 2);
+        let w2 = rand_layer(64, 4, 3);
+        let qm = QuantizedModel::from_layers(vec![
+            q.quantize("a", &w1),
+            q.quantize("b", &w2),
+        ]);
+        let art = QuantArtifact::from_model("test", &qm);
+        let bytes = art.to_bytes();
+        let loaded = QuantArtifact::from_bytes(&bytes).unwrap();
+        assert_eq!(loaded.config, "test");
+        assert_eq!(loaded.layers.len(), 2);
+        let back = loaded.to_model().unwrap();
+        for (a, b) in qm.layers.iter().zip(&back.layers) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.packed_codes(), b.packed_codes());
+            assert_eq!(a.dequantize().data, b.dequantize().data);
+        }
+        assert_eq!(qm.packed_avg_bits().to_bits(), back.packed_avg_bits().to_bits());
+        assert_eq!(art.packed_avg_bits().to_bits(), loaded.packed_avg_bits().to_bits());
+        // both layers share ONE grid table after load
+        match (&loaded.layers[0].plane, &loaded.layers[1].plane) {
+            (PlaneData::Lut { grid: g1, .. }, PlaneData::Lut { grid: g2, .. }) => {
+                assert!(Arc::ptr_eq(g1, g2), "grid table not deduplicated");
+            }
+            _ => panic!("expected LUT planes"),
+        }
+        assert!(loaded.shared_lut_grid().is_some());
+    }
+
+    #[test]
+    fn corrupt_images_error_not_panic() {
+        let reg = GridRegistry::new();
+        let w = rand_layer(32, 4, 9);
+        let qm = QuantizedModel::from_layers(vec![
+            HiggsQuantizer::new(reg.get(GridKind::Higgs, 16, 2), 16, 5).quantize("a", &w)
+        ]);
+        let bytes = QuantArtifact::from_model("t", &qm).to_bytes();
+        // bad magic
+        let mut b = bytes.clone();
+        b[0] ^= 0xFF;
+        assert!(QuantArtifact::from_bytes(&b).is_err());
+        // truncation at every interesting boundary
+        for cut in [0usize, 7, 12, 19, bytes.len() / 2, bytes.len() - 9] {
+            assert!(QuantArtifact::from_bytes(&bytes[..cut]).is_err(), "cut {cut}");
+        }
+        // single flipped byte anywhere → checksum mismatch
+        for at in [8usize, 21, bytes.len() / 2, bytes.len() - 12] {
+            let mut b = bytes.clone();
+            b[at] ^= 0x10;
+            assert!(QuantArtifact::from_bytes(&b).is_err(), "flip at {at}");
+        }
+        // garbage
+        assert!(QuantArtifact::from_bytes(b"definitely not an artifact").is_err());
+    }
+
+    #[test]
+    fn validate_against_manifest_shapes() {
+        let reg = GridRegistry::new();
+        let w = rand_layer(32, 8, 4);
+        let qm = QuantizedModel::from_layers(vec![
+            HiggsQuantizer::new(reg.get(GridKind::Higgs, 16, 2), 16, 5).quantize("l0.wq", &w)
+        ]);
+        let art = QuantArtifact::from_model("t", &qm);
+        let good = Manifest::parse("artifact a\nparam l0.wq.w f32 32,8\n").unwrap();
+        art.validate_against(&good).unwrap();
+        let wrong = Manifest::parse("artifact a\nparam l0.wq.w f32 8,32\n").unwrap();
+        assert!(art.validate_against(&wrong).is_err());
+        let missing = Manifest::parse("artifact a\nparam other.w f32 32,8\n").unwrap();
+        assert!(art.validate_against(&missing).is_err());
+    }
+
+    #[test]
+    fn scheme_validate_rejects_malformed() {
+        let reg = GridRegistry::new();
+        let w = rand_layer(32, 8, 6);
+        let ql = HiggsQuantizer::new(reg.get(GridKind::Higgs, 16, 2), 16, 5).quantize("l", &w);
+        let good = ql.scheme();
+        good.validate().unwrap();
+        // wrong scale-plane length
+        let mut bad = good.clone();
+        if let PlaneData::Lut { scales, .. } = &mut bad.plane {
+            scales.pop();
+        }
+        assert!(bad.validate().is_err());
+        // wrong packed count
+        let mut bad = good.clone();
+        bad.n_out += 1;
+        assert!(bad.validate().is_err());
+        // out-of-range code on a non-power-of-two grid
+        let grid = Arc::new(Grid::new(GridKind::Nf, 3, 1, vec![-1.0, 0.0, 1.0], 0.0));
+        let scheme = LayerScheme {
+            name: "bad".into(),
+            spec: QuantSpec::Lut { kind: GridKind::Nf, n: 3, group: 2 },
+            k: 2,
+            n_out: 1,
+            g: 2,
+            t2: None,
+            plane: PlaneData::Lut {
+                packed: PackedCodes::from_codes(&[3, 1], 2), // 3 >= n=3
+                scales: vec![1.0],
+                grid,
+                signs: None,
+            },
+        };
+        let err = scheme.validate().unwrap_err();
+        assert!(format!("{err:#}").contains("out of range"), "{err:#}");
+    }
+}

@@ -201,8 +201,30 @@ pub(super) fn decode_dense(view: &LayerView<'_>, block: usize) -> Vec<f32> {
 /// materializing the dense Ŵ. Deterministic for any thread count
 /// (per-block partials summed in block order).
 pub(super) fn rel_sq_err_streaming(view: &LayerView<'_>, original: &[f32], block: usize) -> f64 {
+    rel_sq_err_streaming_overlay(view, original, block, &[])
+}
+
+/// [`rel_sq_err_streaming`] with a sparse OVERLAY: each `(flat
+/// row-major index, value)` entry REPLACES the decoded value at that
+/// position before the error accumulates — the outlier side-band
+/// measurement ([`super::outlier::OutlierLayer::rel_sq_err`]) without
+/// materializing the base dequantization. `overlay` must be sorted by
+/// `(column, row)`, i.e. by `(i % n, i / n)`, with indices `< k * n`
+/// and no duplicates; an empty overlay degenerates to the plain
+/// streaming measurement with identical arithmetic order.
+pub(super) fn rel_sq_err_streaming_overlay(
+    view: &LayerView<'_>,
+    original: &[f32],
+    block: usize,
+    overlay: &[(usize, f32)],
+) -> f64 {
     let (k, n) = (view.k, view.n);
     assert_eq!(original.len(), k * n, "original shape mismatch");
+    debug_assert!(
+        overlay.windows(2).all(|w| (w[0].0 % n, w[0].0 / n) < (w[1].0 % n, w[1].0 / n)),
+        "overlay must be sorted by (column, row) without duplicates"
+    );
+    debug_assert!(overlay.iter().all(|&(i, _)| i < k * n), "overlay index out of range");
     let block = block.max(1);
     let nblocks = n.div_ceil(block);
     let mut num = vec![0.0f64; nblocks];
@@ -211,12 +233,29 @@ pub(super) fn rel_sq_err_streaming(view: &LayerView<'_>, original: &[f32], block
         let num_out = SharedSlice::new(&mut num);
         let den_out = SharedSlice::new(&mut den);
         for_each_block(view, block, |bi, j0, bcols, buf| {
+            // overlay entries whose column falls inside this block form
+            // one contiguous run of the (column, row)-sorted slice
+            let lo = overlay.partition_point(|&(i, _)| i % n < j0);
+            let hi = lo + overlay[lo..].partition_point(|&(i, _)| i % n < j0 + bcols);
+            let mut cur = lo;
             let mut bn = 0.0f64;
             let mut bd = 0.0f64;
             for b in 0..bcols {
+                let j = j0 + b;
                 let col = &buf[b * k..(b + 1) * k];
-                for (kk, &dec) in col.iter().enumerate() {
-                    let orig = original[kk * n + j0 + b];
+                for (kk, &decoded) in col.iter().enumerate() {
+                    // merge-walk: entries for column j arrive in row order
+                    let dec = if cur < hi
+                        && overlay[cur].0 % n == j
+                        && overlay[cur].0 / n == kk
+                    {
+                        let v = overlay[cur].1;
+                        cur += 1;
+                        v
+                    } else {
+                        decoded
+                    };
+                    let orig = original[kk * n + j];
                     let d = (dec - orig) as f64;
                     bn += d * d;
                     bd += (orig as f64) * (orig as f64);

@@ -12,7 +12,7 @@
 //! the output is structurally identical to Algorithm 1's — so it runs on
 //! the same FLUTE serving path.
 
-use super::{eff_group, layer_signs, QuantData, QuantizedLayer, Quantizer};
+use super::{eff_group, layer_signs, QuantData, QuantSpec, QuantizedLayer, Quantizer};
 use crate::grids::uniform::rtn_scale_zero;
 use crate::grids::Grid;
 use crate::hadamard::{rht_rows_forward, signs_for};
@@ -51,6 +51,22 @@ impl GptqQuantizer {
             GptqRounding::Higgs { grid, .. } => {
                 format!("gptq_higgs_p{}_n{}_g{}", grid.p, grid.n, self.group)
             }
+        }
+    }
+
+    /// The typed spec of this GPTQ configuration (rounding operator +
+    /// group; the dampening fraction is a fixed implementation detail).
+    pub fn spec(&self) -> QuantSpec {
+        match &self.rounding {
+            GptqRounding::Uniform { bits } => {
+                QuantSpec::Gptq { bits: *bits, group: self.group }
+            }
+            GptqRounding::Higgs { grid, seed } => QuantSpec::GptqHiggs {
+                n: grid.n,
+                p: grid.p,
+                group: self.group,
+                seed: *seed,
+            },
         }
     }
 
@@ -193,12 +209,13 @@ impl GptqQuantizer {
         };
         Ok(QuantizedLayer {
             name: layer_name.to_string(),
-            method: self.name(),
+            spec: self.spec(),
             k,
             n_out: n,
             g,
             data,
             bits_per_param: self.bits_per_param(k),
+            t2: None,
         })
     }
 }
@@ -222,6 +239,10 @@ pub struct CalibratedGptq {
 }
 
 impl Quantizer for CalibratedGptq {
+    fn spec(&self) -> QuantSpec {
+        self.inner.spec()
+    }
+
     fn name(&self) -> String {
         self.inner.name()
     }

@@ -37,7 +37,7 @@
 //! for any thread count or block size — property-tested in
 //! `rust/tests/prop_fast_encode.rs`.
 
-use super::{eff_group, layer_signs, QuantData, QuantizedLayer, Quantizer};
+use super::{eff_group, layer_signs, QuantData, QuantSpec, QuantizedLayer, Quantizer};
 use crate::grids::Grid;
 use crate::hadamard::{rht_block_forward, rht_forward};
 use crate::tensor::Tensor;
@@ -136,9 +136,10 @@ impl HiggsQuantizer {
                 }
             }
         }
-        self.finish(layer_name, k, n, g, codes, scales, signs)
+        self.finish(layer_name, k, n, g, codes, scales, signs, None)
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn finish(
         &self,
         layer_name: &str,
@@ -148,10 +149,11 @@ impl HiggsQuantizer {
         codes: Vec<u32>,
         scales: Vec<f32>,
         signs: Vec<f32>,
+        t2: Option<f64>,
     ) -> QuantizedLayer {
         QuantizedLayer {
             name: layer_name.to_string(),
-            method: self.name(),
+            spec: self.spec(),
             k,
             n_out: n,
             g,
@@ -162,18 +164,23 @@ impl HiggsQuantizer {
                 signs: Some(signs),
             },
             bits_per_param: self.bits_per_param(k),
+            t2,
         }
     }
 }
 
 impl Quantizer for HiggsQuantizer {
-    fn name(&self) -> String {
-        format!("higgs_p{}_n{}_g{}", self.grid.p, self.grid.n, self.group)
+    fn spec(&self) -> QuantSpec {
+        QuantSpec::Higgs {
+            n: self.grid.n,
+            p: self.grid.p,
+            group: self.group,
+            seed: self.seed,
+        }
     }
 
-    fn bits_per_param(&self, k: usize) -> f64 {
-        (self.grid.n as f64).log2() / self.grid.p as f64
-            + 16.0 / eff_group(self.group, k) as f64
+    fn name(&self) -> String {
+        format!("higgs_p{}_n{}_g{}", self.grid.p, self.grid.n, self.group)
     }
 
     /// Column-blocked multithreaded encode — see the module docs.
@@ -339,7 +346,8 @@ impl HiggsQuantizer {
         } else {
             0.0
         };
-        (self.finish(layer_name, k, n, g, codes, scales, signs), t2)
+        let stamped = if want_err { Some(t2) } else { None };
+        (self.finish(layer_name, k, n, g, codes, scales, signs, stamped), t2)
     }
 }
 

@@ -8,7 +8,7 @@
 //! iterated a fixed number of rounds, starting from the min-max RTN
 //! solution.
 
-use super::{eff_group, QuantData, QuantizedLayer, Quantizer};
+use super::{eff_group, QuantData, QuantSpec, QuantizedLayer, Quantizer};
 use crate::grids::uniform::rtn_scale_zero;
 use crate::tensor::Tensor;
 
@@ -35,12 +35,8 @@ fn shrink_lp(x: f32, lp: f32, beta: f32) -> f32 {
 }
 
 impl Quantizer for HqqQuantizer {
-    fn name(&self) -> String {
-        format!("hqq_b{}_g{}", self.bits, self.group)
-    }
-
-    fn bits_per_param(&self, k: usize) -> f64 {
-        self.bits as f64 + 16.0 / eff_group(self.group, k) as f64
+    fn spec(&self) -> QuantSpec {
+        QuantSpec::Hqq { bits: self.bits, group: self.group }
     }
 
     fn quantize(&self, layer_name: &str, w: &Tensor) -> QuantizedLayer {
@@ -97,12 +93,13 @@ impl Quantizer for HqqQuantizer {
         }
         QuantizedLayer {
             name: layer_name.to_string(),
-            method: self.name(),
+            spec: self.spec(),
             k,
             n_out: n,
             g,
             data: QuantData::Uniform { codes, steps, zeros, bits: self.bits },
             bits_per_param: self.bits_per_param(k),
+            t2: None,
         }
     }
 }

@@ -7,7 +7,7 @@
 //! HIGGS *minus* the Hadamard rotation — so comparisons isolate exactly
 //! (grid choice) and (rotation) as the paper intends.
 
-use super::{eff_group, QuantData, QuantizedLayer, Quantizer};
+use super::{eff_group, QuantData, QuantSpec, QuantizedLayer, Quantizer};
 use crate::grids::Grid;
 use crate::tensor::Tensor;
 use crate::util::pool::{par_for, SharedSlice};
@@ -83,23 +83,24 @@ impl LutQuantizer {
     ) -> QuantizedLayer {
         QuantizedLayer {
             name: layer_name.to_string(),
-            method: self.name(),
+            spec: self.spec(),
             k,
             n_out: n,
             g,
             data: QuantData::Lut { codes, scales, grid: self.grid.clone(), signs: None },
             bits_per_param: self.bits_per_param(k),
+            t2: None,
         }
     }
 }
 
 impl Quantizer for LutQuantizer {
-    fn name(&self) -> String {
-        format!("{}_n{}_g{}", self.grid.kind.label(), self.grid.n, self.group)
+    fn spec(&self) -> QuantSpec {
+        QuantSpec::Lut { kind: self.grid.kind, n: self.grid.n, group: self.group }
     }
 
-    fn bits_per_param(&self, k: usize) -> f64 {
-        (self.grid.n as f64).log2() + 16.0 / eff_group(self.group, k) as f64
+    fn name(&self) -> String {
+        format!("{}_n{}_g{}", self.grid.kind.label(), self.grid.n, self.group)
     }
 
     /// Column-parallel encode: columns are independent, so they fan

@@ -5,7 +5,15 @@
 //! (input-dim K, output-dim N, row-major) with scale groups of size `g`
 //! along K per output column — the layout the serving kernels consume
 //! (`python/compile/kernels/lut_matmul.py`).
+//!
+//! The configuration of every quantizer is a typed [`QuantSpec`]: each
+//! `Quantizer` is constructible from its spec ([`QuantSpec::build`])
+//! and reports it back ([`Quantizer::spec`]), `Display`/`parse`
+//! round-trip exactly, and the spec travels with every
+//! [`QuantizedLayer`] — which is what makes quantized models
+//! self-describing and serializable (see [`artifact`]).
 
+pub mod artifact;
 pub mod calibration;
 pub mod decode;
 pub mod gptq;
@@ -16,10 +24,262 @@ pub mod lut;
 pub mod packing;
 pub mod rtn;
 
-use crate::grids::Grid;
+use crate::grids::{Grid, GridKind};
 use crate::hadamard::{rht_inverse, signs_for};
 use crate::tensor::Tensor;
 use std::sync::Arc;
+
+/// Typed quantizer configuration — the API-level replacement for the
+/// old one-way stringly `parse_spec` grammar. `Display` emits the
+/// canonical spec string (all fields explicit) and [`QuantSpec::parse`]
+/// accepts both the canonical form and the legacy shorthands
+/// (`higgs_p2_n256`, `nf_n16`, `rtn_b4`, … with group/seed defaulted),
+/// so `parse(spec.to_string()) == spec` for every spec.
+#[derive(Clone, Debug, PartialEq)]
+pub enum QuantSpec {
+    /// HIGGS (Alg. 1): grouped RHT + Gaussian-MSE-optimal n-point grid
+    /// in R^p. Canonical form `higgs_p<P>_n<N>_g<G>_s<SEED>`.
+    Higgs { n: usize, p: usize, group: usize, seed: u64 },
+    /// Scalar LUT without rotation (NF / AF / constrained-uniform /
+    /// CLVQ-grid comparators). Canonical form `<nf|af|chu|clvq>_n<N>_g<G>`.
+    Lut { kind: GridKind, n: usize, group: usize },
+    /// Min-max uniform round-to-nearest. Canonical `rtn_b<B>_g<G>`.
+    Rtn { bits: u32, group: usize },
+    /// Half-quadratic zero-point optimization. Canonical `hqq_b<B>_g<G>`.
+    Hqq { bits: u32, group: usize },
+    /// GPTQ with uniform rounding. Canonical `gptq_b<B>_g<G>`.
+    Gptq { bits: u32, group: usize },
+    /// GPTQ with HIGGS vector rounding (paper §4.4). Canonical
+    /// `gptq_higgs_p<P>_n<N>_g<G>_s<SEED>`.
+    GptqHiggs { n: usize, p: usize, group: usize, seed: u64 },
+    /// SpQR-style outlier side-band around an inner spec. Canonical
+    /// `spqr[<inner>]_rho<RHO>`.
+    Outlier { inner: Box<QuantSpec>, rho: f64 },
+}
+
+impl std::fmt::Display for QuantSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            QuantSpec::Higgs { n, p, group, seed } => {
+                write!(f, "higgs_p{p}_n{n}_g{group}_s{seed}")
+            }
+            QuantSpec::Lut { kind, n, group } => {
+                write!(f, "{}_n{n}_g{group}", lut_spec_label(*kind))
+            }
+            QuantSpec::Rtn { bits, group } => write!(f, "rtn_b{bits}_g{group}"),
+            QuantSpec::Hqq { bits, group } => write!(f, "hqq_b{bits}_g{group}"),
+            QuantSpec::Gptq { bits, group } => write!(f, "gptq_b{bits}_g{group}"),
+            QuantSpec::GptqHiggs { n, p, group, seed } => {
+                write!(f, "gptq_higgs_p{p}_n{n}_g{group}_s{seed}")
+            }
+            QuantSpec::Outlier { inner, rho } => write!(f, "spqr[{inner}]_rho{rho}"),
+        }
+    }
+}
+
+/// Spec-grammar label of a scalar-LUT grid kind. `GridKind::Higgs`
+/// here means "the CLVQ grid WITHOUT rotation" (a comparator used by
+/// Fig. 2) — labelled `clvq` so it cannot collide with the rotated
+/// `higgs_…` head.
+fn lut_spec_label(kind: GridKind) -> &'static str {
+    match kind {
+        GridKind::Nf => "nf",
+        GridKind::Af => "af",
+        GridKind::Uniform => "chu",
+        GridKind::Higgs => "clvq",
+    }
+}
+
+impl QuantSpec {
+    /// Parse a spec string. `default_group`/`default_seed` fill fields
+    /// the legacy shorthands omit; canonical strings (from `Display`)
+    /// carry every field, so the defaults never leak into a round-trip.
+    pub fn parse(
+        spec: &str,
+        default_group: usize,
+        default_seed: u64,
+    ) -> anyhow::Result<QuantSpec> {
+        Self::parse_at_depth(spec, default_group, default_seed, 0)
+    }
+
+    fn parse_at_depth(
+        spec: &str,
+        default_group: usize,
+        default_seed: u64,
+        depth: usize,
+    ) -> anyhow::Result<QuantSpec> {
+        // untrusted spec strings come through artifact manifests: cap
+        // the wrapper nesting so a crafted `spqr[spqr[…` errors instead
+        // of recursing off the stack
+        anyhow::ensure!(depth <= 8, "quantizer spec nested deeper than 8: {spec:?}");
+        let spec = spec.trim();
+        // outlier wrapper: spqr[<inner>]_rho<f64> (`brackets` tracks
+        // the bracket balance — NOT the recursion depth above)
+        if let Some(rest) = spec.strip_prefix("spqr[") {
+            let mut brackets = 1usize;
+            let mut end = None;
+            for (i, c) in rest.char_indices() {
+                match c {
+                    '[' => brackets += 1,
+                    ']' => {
+                        brackets -= 1;
+                        if brackets == 0 {
+                            end = Some(i);
+                            break;
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            let end =
+                end.ok_or_else(|| anyhow::anyhow!("spqr spec missing closing ']': {spec:?}"))?;
+            let inner =
+                QuantSpec::parse_at_depth(&rest[..end], default_group, default_seed, depth + 1)?;
+            let tail = &rest[end + 1..];
+            let rho_s = tail.strip_prefix("_rho").ok_or_else(|| {
+                anyhow::anyhow!("spqr spec needs a _rho<f64> suffix, got {tail:?}")
+            })?;
+            let rho: f64 = rho_s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad outlier fraction {rho_s:?}"))?;
+            anyhow::ensure!(
+                (0.0..0.5).contains(&rho),
+                "outlier fraction {rho} outside [0, 0.5)"
+            );
+            return Ok(QuantSpec::Outlier { inner: Box::new(inner), rho });
+        }
+        let mut parts: Vec<&str> = spec.split('_').collect();
+        anyhow::ensure!(
+            !parts.is_empty() && !parts[0].is_empty(),
+            "empty quantizer spec"
+        );
+        let mut head = parts.remove(0);
+        if head == "gptq" && parts.first() == Some(&"higgs") {
+            parts.remove(0);
+            head = "gptq_higgs";
+        }
+        let getn = |prefix: &str| -> Option<usize> {
+            parts
+                .iter()
+                .find_map(|p| p.strip_prefix(prefix).and_then(|v| v.parse::<usize>().ok()))
+        };
+        let getu64 = |prefix: &str| -> Option<u64> {
+            parts
+                .iter()
+                .find_map(|p| p.strip_prefix(prefix).and_then(|v| v.parse::<u64>().ok()))
+        };
+        let group = getn("g").unwrap_or(default_group);
+        anyhow::ensure!(group >= 1, "group must be >= 1 in {spec:?}");
+        let need_n = || -> anyhow::Result<usize> {
+            let n = getn("n").ok_or_else(|| anyhow::anyhow!("{spec:?} needs n<N>"))?;
+            anyhow::ensure!(n >= 1, "n must be >= 1 in {spec:?}");
+            Ok(n)
+        };
+        let need_b = || -> anyhow::Result<u32> {
+            // range-check BEFORE narrowing: "b4294967297" must error,
+            // not truncate to 1 bit
+            let b = getn("b").ok_or_else(|| anyhow::anyhow!("{spec:?} needs b<BITS>"))?;
+            anyhow::ensure!((1..=32).contains(&b), "bits must be in 1..=32 in {spec:?}");
+            Ok(b as u32)
+        };
+        let q = match head {
+            "higgs" => QuantSpec::Higgs {
+                n: need_n()?,
+                p: getn("p").unwrap_or(2).max(1),
+                group,
+                seed: getu64("s").unwrap_or(default_seed),
+            },
+            "nf" => QuantSpec::Lut { kind: GridKind::Nf, n: need_n()?, group },
+            "af" => QuantSpec::Lut { kind: GridKind::Af, n: need_n()?, group },
+            "chu" | "ch8" | "uniform" => QuantSpec::Lut {
+                kind: GridKind::Uniform,
+                n: getn("n").unwrap_or(256),
+                group,
+            },
+            "clvq" => QuantSpec::Lut { kind: GridKind::Higgs, n: need_n()?, group },
+            "rtn" => QuantSpec::Rtn { bits: need_b()?, group },
+            "hqq" => QuantSpec::Hqq { bits: need_b()?, group },
+            "gptq" => QuantSpec::Gptq { bits: need_b()?, group },
+            "gptq_higgs" => QuantSpec::GptqHiggs {
+                n: need_n()?,
+                p: getn("p").unwrap_or(2).max(1),
+                group,
+                seed: getu64("s").unwrap_or(default_seed),
+            },
+            other => anyhow::bail!("unknown quantizer spec head {other:?} in {spec:?}"),
+        };
+        Ok(q)
+    }
+
+    /// Effective bits/param for a layer with input dim `k` — the same
+    /// formula every quantizer used to duplicate.
+    pub fn bits_per_param(&self, k: usize) -> f64 {
+        match self {
+            QuantSpec::Higgs { n, p, group, .. }
+            | QuantSpec::GptqHiggs { n, p, group, .. } => {
+                (*n as f64).log2() / *p as f64 + 16.0 / eff_group(*group, k) as f64
+            }
+            QuantSpec::Lut { n, group, .. } => {
+                (*n as f64).log2() + 16.0 / eff_group(*group, k) as f64
+            }
+            QuantSpec::Rtn { bits, group }
+            | QuantSpec::Hqq { bits, group }
+            | QuantSpec::Gptq { bits, group } => {
+                *bits as f64 + 16.0 / eff_group(*group, k) as f64
+            }
+            QuantSpec::Outlier { inner, rho } => inner.bits_per_param(k) + rho * 64.0,
+        }
+    }
+
+    /// Construct the quantizer this spec describes (grids come from the
+    /// registry). The outlier wrapper is not itself a [`Quantizer`]
+    /// (its payload carries a side-band) — build its `inner` and wrap
+    /// [`outlier::OutlierQuantizer`] directly.
+    pub fn build(
+        &self,
+        registry: &crate::grids::registry::GridRegistry,
+    ) -> anyhow::Result<Box<dyn Quantizer>> {
+        let q: Box<dyn Quantizer> = match self {
+            QuantSpec::Higgs { n, p, group, seed } => Box::new(higgs::HiggsQuantizer::new(
+                registry.get(GridKind::Higgs, *n, *p),
+                *group,
+                *seed,
+            )),
+            QuantSpec::Lut { kind, n, group } => {
+                Box::new(lut::LutQuantizer::new(registry.get(*kind, *n, 1), *group))
+            }
+            QuantSpec::Rtn { bits, group } => Box::new(rtn::RtnQuantizer::new(*bits, *group)),
+            QuantSpec::Hqq { bits, group } => Box::new(hqq::HqqQuantizer::new(*bits, *group)),
+            QuantSpec::Gptq { bits, group } => Box::new(gptq::CalibratedGptq {
+                inner: gptq::GptqQuantizer::uniform(*bits, *group),
+                hessians: std::collections::HashMap::new(),
+            }),
+            QuantSpec::GptqHiggs { n, p, group, seed } => Box::new(gptq::CalibratedGptq {
+                inner: gptq::GptqQuantizer::higgs(
+                    registry.get(GridKind::Higgs, *n, *p),
+                    *group,
+                    *seed,
+                ),
+                hessians: std::collections::HashMap::new(),
+            }),
+            QuantSpec::Outlier { .. } => anyhow::bail!(
+                "outlier spec {self} wraps an inner quantizer; build the inner spec and \
+                 wrap quant::outlier::OutlierQuantizer around it"
+            ),
+        };
+        Ok(q)
+    }
+}
+
+impl std::str::FromStr for QuantSpec {
+    type Err = anyhow::Error;
+
+    /// Parse with the repo-wide defaults (group 64, seed 0x51) for the
+    /// legacy shorthands; canonical strings carry every field.
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        QuantSpec::parse(s, 64, 0x51)
+    }
+}
 
 /// Quantized payload of one layer.
 #[derive(Clone, Debug)]
@@ -45,19 +305,27 @@ pub enum QuantData {
 #[derive(Clone, Debug)]
 pub struct QuantizedLayer {
     pub name: String,
-    pub method: String,
+    /// The typed scheme that produced this layer — replaces the old
+    /// stringly `method` field; `spec.to_string()` is the display label.
+    pub spec: QuantSpec,
     pub k: usize,
     pub n_out: usize,
     pub g: usize,
     pub data: QuantData,
     /// effective bits per parameter incl. 16-bit group scales
     pub bits_per_param: f64,
+    /// measured relative squared error t² (Eqn. 3), when the encode
+    /// path measured it (`Quantizer::quantize_with_t2`, ErrorDb
+    /// builds) — travels with the layer into [`artifact::LayerScheme`]
+    pub t2: Option<f64>,
 }
 
 impl QuantizedLayer {
     /// Borrowed decode view for the blocked kernels. `codes_override`
     /// swaps in an alternate code plane (decode-from-packed);
     /// `keep_rotated` skips the inverse RHT (the serving view).
+    /// (Private to `quant`, but child modules — `outlier`, `artifact` —
+    /// reach it for their own streaming/packed views.)
     fn decode_view<'a>(
         &'a self,
         codes_override: Option<decode::CodeSource<'a>>,
@@ -281,26 +549,42 @@ impl QuantizedLayer {
 
 /// The quantizer interface every method implements.
 pub trait Quantizer: Sync + Send {
-    /// Human-readable method id, e.g. `higgs_p2_n256` — used in tables.
-    fn name(&self) -> String;
+    /// The typed configuration this quantizer was constructed from.
+    /// For the data-free quantizers `spec().build(registry)` reproduces
+    /// an equivalent (deterministic, bit-identical) quantizer; the spec
+    /// deliberately carries CONFIGURATION only, so data-dependent state
+    /// (a `CalibratedGptq`'s calibration Hessians) is not captured —
+    /// rebuilding one from its spec yields the identity-Hessian
+    /// fallback.
+    fn spec(&self) -> QuantSpec;
+
+    /// Human-readable method id — the canonical spec string by default;
+    /// implementations override it where tables rely on legacy labels.
+    fn name(&self) -> String {
+        self.spec().to_string()
+    }
 
     /// Effective bits/param for a layer with input dim K (the group size
-    /// is clamped to K for narrow layers).
-    fn bits_per_param(&self, k: usize) -> f64;
+    /// is clamped to K for narrow layers). Derived from the spec.
+    fn bits_per_param(&self, k: usize) -> f64 {
+        self.spec().bits_per_param(k)
+    }
 
     /// Quantize layer `layer_name` with weights W [K, N].
     fn quantize(&self, layer_name: &str, w: &Tensor) -> QuantizedLayer;
 
     /// Quantize AND report the layer's relative squared error t²
-    /// (Eqn. 3) — the ErrorDb build primitive (§5). The default
-    /// measures via the streaming blocked decode
-    /// ([`QuantizedLayer::rel_sq_err`]) — no dense Ŵ materialization;
-    /// quantizers that can compute the error during encode override it
-    /// (HIGGS: the RHT is orthonormal, so rotated-space error equals
-    /// original-space error).
+    /// (Eqn. 3) — the ErrorDb build primitive (§5). The measured error
+    /// is also stamped into the layer (`QuantizedLayer::t2`), so it
+    /// travels into artifacts. The default measures via the streaming
+    /// blocked decode ([`QuantizedLayer::rel_sq_err`]) — no dense Ŵ
+    /// materialization; quantizers that can compute the error during
+    /// encode override it (HIGGS: the RHT is orthonormal, so
+    /// rotated-space error equals original-space error).
     fn quantize_with_t2(&self, layer_name: &str, w: &Tensor) -> (QuantizedLayer, f64) {
-        let ql = self.quantize(layer_name, w);
+        let mut ql = self.quantize(layer_name, w);
         let t2 = ql.rel_sq_err(w);
+        ql.t2 = Some(t2);
         (ql, t2)
     }
 }
@@ -350,11 +634,16 @@ impl QuantizedModel {
     }
 
     /// Dense weights with every linear replaced by its dequantization —
-    /// what PPL evaluation (and dense prefill) runs on.
+    /// what PPL evaluation (and dense prefill) runs on. The per-layer
+    /// decode fans out over the pool like `Backend::build_params`
+    /// (each layer's own decode is block-parallel too, but the layer
+    /// fan-out is what overlaps small tail layers with large ones;
+    /// nested `par_for` runs inline via the pool's re-entrancy guard).
     pub fn apply_to(&self, weights: &crate::model::Weights) -> crate::model::Weights {
         let mut out = weights.clone();
-        for l in &self.layers {
-            out.set_linear(&l.name, l.dequantize()).expect("shape match");
+        let dense = crate::util::pool::par_map(self.layers.len(), |i| self.layers[i].dequantize());
+        for (l, d) in self.layers.iter().zip(dense) {
+            out.set_linear(&l.name, d).expect("shape match");
         }
         out
     }
@@ -388,9 +677,7 @@ impl QuantizedModel {
                 match &found {
                     None => found = Some(grid.clone()),
                     Some(g) => {
-                        let same = Arc::ptr_eq(g, grid)
-                            || (g.n == grid.n && g.p == grid.p && g.points == grid.points);
-                        if !same {
+                        if !Arc::ptr_eq(g, grid) && !g.same_table(grid) {
                             return None;
                         }
                     }
@@ -425,64 +712,20 @@ pub(crate) fn eff_group(g: usize, k: usize) -> usize {
     eg.max(1)
 }
 
-/// Parse a quantizer spec string into a boxed quantizer. Grammar:
+/// Parse a quantizer spec string into a boxed quantizer — the legacy
+/// entry point, now a thin wrapper over the typed
+/// [`QuantSpec::parse`] → [`QuantSpec::build`] pipeline. Grammar:
 ///   `higgs_p<P>_n<N>` | `nf_n<N>` | `af_n<N>` | `chu_n<N>` (constrained
-///   uniform) | `rtn_b<B>` | `hqq_b<B>`; optional `_g<G>` suffix
-///   overrides the group size.
+///   uniform) | `clvq_n<N>` | `rtn_b<B>` | `hqq_b<B>` | `gptq_b<B>` |
+///   `gptq_higgs_p<P>_n<N>`; optional `_g<G>` (group) and `_s<SEED>`
+///   tokens override the defaults.
 pub fn parse_spec(
     spec: &str,
     registry: &crate::grids::registry::GridRegistry,
     default_group: usize,
     seed: u64,
 ) -> anyhow::Result<Box<dyn Quantizer>> {
-    use crate::grids::GridKind;
-    let mut group = default_group;
-    let mut parts: Vec<&str> = spec.split('_').collect();
-    if let Some(last) = parts.last() {
-        if let Some(g) = last.strip_prefix('g').and_then(|v| v.parse::<usize>().ok()) {
-            group = g;
-            parts.pop();
-        }
-    }
-    let get = |prefix: &str| -> Option<usize> {
-        parts
-            .iter()
-            .find_map(|p| p.strip_prefix(prefix).and_then(|v| v.parse::<usize>().ok()))
-    };
-    let head = parts.first().copied().unwrap_or("");
-    let q: Box<dyn Quantizer> = match head {
-        "higgs" => {
-            let p = get("p").unwrap_or(2);
-            let n = get("n").ok_or_else(|| anyhow::anyhow!("higgs spec needs n"))?;
-            Box::new(higgs::HiggsQuantizer::new(
-                registry.get(GridKind::Higgs, n, p),
-                group,
-                seed,
-            ))
-        }
-        "nf" => {
-            let n = get("n").ok_or_else(|| anyhow::anyhow!("nf spec needs n"))?;
-            Box::new(lut::LutQuantizer::new(registry.get(GridKind::Nf, n, 1), group))
-        }
-        "af" => {
-            let n = get("n").ok_or_else(|| anyhow::anyhow!("af spec needs n"))?;
-            Box::new(lut::LutQuantizer::new(registry.get(GridKind::Af, n, 1), group))
-        }
-        "chu" | "ch8" => {
-            let n = get("n").unwrap_or(256);
-            Box::new(lut::LutQuantizer::new(registry.get(GridKind::Uniform, n, 1), group))
-        }
-        "rtn" => {
-            let b = get("b").ok_or_else(|| anyhow::anyhow!("rtn spec needs b"))? as u32;
-            Box::new(rtn::RtnQuantizer::new(b, group))
-        }
-        "hqq" => {
-            let b = get("b").ok_or_else(|| anyhow::anyhow!("hqq spec needs b"))? as u32;
-            Box::new(hqq::HqqQuantizer::new(b, group))
-        }
-        _ => anyhow::bail!("unknown quantizer spec {spec:?}"),
-    };
-    Ok(q)
+    QuantSpec::parse(spec, default_group, seed)?.build(registry)
 }
 
 /// RHT signs shared between quantizer and serving engine for a layer.
@@ -520,6 +763,128 @@ mod tests {
     }
 
     #[test]
+    fn quant_spec_display_parse_roundtrip() {
+        let specs = [
+            QuantSpec::Higgs { n: 256, p: 2, group: 64, seed: 0x51 },
+            QuantSpec::Higgs { n: 16, p: 1, group: 1024, seed: u64::MAX },
+            QuantSpec::Lut { kind: GridKind::Nf, n: 16, group: 64 },
+            QuantSpec::Lut { kind: GridKind::Af, n: 8, group: 32 },
+            QuantSpec::Lut { kind: GridKind::Uniform, n: 256, group: 128 },
+            QuantSpec::Lut { kind: GridKind::Higgs, n: 16, group: 64 },
+            QuantSpec::Rtn { bits: 4, group: 64 },
+            QuantSpec::Hqq { bits: 3, group: 32 },
+            QuantSpec::Gptq { bits: 2, group: 64 },
+            QuantSpec::GptqHiggs { n: 64, p: 2, group: 64, seed: 7 },
+            QuantSpec::Outlier {
+                inner: Box::new(QuantSpec::Rtn { bits: 3, group: 64 }),
+                rho: 0.01,
+            },
+            QuantSpec::Outlier {
+                inner: Box::new(QuantSpec::Outlier {
+                    inner: Box::new(QuantSpec::Higgs { n: 16, p: 2, group: 32, seed: 3 }),
+                    rho: 0.015625,
+                }),
+                rho: 0.25,
+            },
+        ];
+        for spec in specs {
+            let s = spec.to_string();
+            // mismatched defaults must not leak into canonical strings
+            let back = QuantSpec::parse(&s, 9999, 0xDEAD_BEEF).unwrap();
+            assert_eq!(back, spec, "{s}");
+        }
+    }
+
+    #[test]
+    fn quant_spec_legacy_shorthands() {
+        let cases = [
+            ("higgs_p2_n256", QuantSpec::Higgs { n: 256, p: 2, group: 64, seed: 7 }),
+            ("higgs_n16", QuantSpec::Higgs { n: 16, p: 2, group: 64, seed: 7 }),
+            ("nf_n16", QuantSpec::Lut { kind: GridKind::Nf, n: 16, group: 64 }),
+            ("af_n8_g32", QuantSpec::Lut { kind: GridKind::Af, n: 8, group: 32 }),
+            ("chu_n256", QuantSpec::Lut { kind: GridKind::Uniform, n: 256, group: 64 }),
+            ("ch8", QuantSpec::Lut { kind: GridKind::Uniform, n: 256, group: 64 }),
+            ("clvq_n16", QuantSpec::Lut { kind: GridKind::Higgs, n: 16, group: 64 }),
+            ("rtn_b4", QuantSpec::Rtn { bits: 4, group: 64 }),
+            ("hqq_b3", QuantSpec::Hqq { bits: 3, group: 64 }),
+            ("gptq_b4", QuantSpec::Gptq { bits: 4, group: 64 }),
+            ("gptq_higgs_p2_n16", QuantSpec::GptqHiggs { n: 16, p: 2, group: 64, seed: 7 }),
+            (
+                "spqr[rtn_b3]_rho0.01",
+                QuantSpec::Outlier {
+                    inner: Box::new(QuantSpec::Rtn { bits: 3, group: 64 }),
+                    rho: 0.01,
+                },
+            ),
+        ];
+        for (s, want) in cases {
+            assert_eq!(QuantSpec::parse(s, 64, 7).unwrap(), want, "{s}");
+        }
+        for bad in [
+            "bogus_x1",
+            "",
+            "higgs_p2",     // n missing
+            "rtn",          // bits missing
+            "rtn_b0",       // bits out of range
+            "rtn_b4294967297", // must not truncate to 1 bit
+            "spqr[rtn_b3]", // rho missing
+            "spqr[rtn_b3_rho0.1",
+            "spqr[rtn_b3]_rho0.9", // rho out of range
+        ] {
+            assert!(QuantSpec::parse(bad, 64, 7).is_err(), "{bad:?} should not parse");
+        }
+        // pathological nesting errors instead of recursing off the stack
+        let mut deep = String::from("rtn_b3");
+        for _ in 0..12 {
+            deep = format!("spqr[{deep}]_rho0.01");
+        }
+        assert!(QuantSpec::parse(&deep, 64, 7).is_err());
+    }
+
+    #[test]
+    fn quantizers_report_and_rebuild_from_spec() {
+        // every Quantizer is constructed from and reports back its spec:
+        // spec → build → spec is the identity, and the rebuilt quantizer
+        // produces bit-identical layers
+        let reg = crate::grids::registry::GridRegistry::new();
+        let mut rng = crate::util::prng::Rng::new(9);
+        let w = Tensor::from_vec(&[64, 12], rng.normal_vec(64 * 12));
+        for spec in [
+            QuantSpec::Higgs { n: 16, p: 2, group: 32, seed: 11 },
+            QuantSpec::Lut { kind: GridKind::Nf, n: 16, group: 32 },
+            QuantSpec::Rtn { bits: 3, group: 32 },
+            QuantSpec::Hqq { bits: 4, group: 32 },
+            QuantSpec::Gptq { bits: 4, group: 32 },
+            QuantSpec::GptqHiggs { n: 16, p: 2, group: 32, seed: 11 },
+        ] {
+            let q = spec.build(&reg).unwrap();
+            assert_eq!(q.spec(), spec);
+            let a = q.quantize("l", &w);
+            assert_eq!(a.spec, spec);
+            let b = spec.build(&reg).unwrap().quantize("l", &w);
+            assert_eq!(a.dequantize().data, b.dequantize().data, "{spec}");
+            assert!((q.bits_per_param(64) - spec.bits_per_param(64)).abs() < 1e-12);
+        }
+        // the outlier wrapper is not a plain Quantizer
+        let ospec = QuantSpec::Outlier {
+            inner: Box::new(QuantSpec::Rtn { bits: 3, group: 32 }),
+            rho: 0.01,
+        };
+        assert!(ospec.build(&reg).is_err());
+    }
+
+    #[test]
+    fn default_quantize_with_t2_stamps_layer() {
+        let reg = crate::grids::registry::GridRegistry::new();
+        let q = lut::LutQuantizer::new(reg.get(GridKind::Nf, 16, 1), 32);
+        let mut rng = crate::util::prng::Rng::new(4);
+        let w = Tensor::from_vec(&[64, 8], rng.normal_vec(64 * 8));
+        assert!(q.quantize("l", &w).t2.is_none());
+        let (ql, t2) = q.quantize_with_t2("l", &w);
+        assert_eq!(ql.t2, Some(t2));
+    }
+
+    #[test]
     fn eff_group_divides() {
         assert_eq!(eff_group(64, 192), 64);
         assert_eq!(eff_group(64, 48), 16);
@@ -532,7 +897,7 @@ mod tests {
         let grid = Arc::new(Grid::new(GridKind::Nf, 2, 1, vec![-1.0, 1.0], 0.0));
         let ql = QuantizedLayer {
             name: "t".into(),
-            method: "test".into(),
+            spec: QuantSpec::Lut { kind: GridKind::Nf, n: 2, group: 2 },
             k: 2,
             n_out: 2,
             g: 2,
@@ -543,6 +908,7 @@ mod tests {
                 signs: None,
             },
             bits_per_param: 1.0,
+            t2: None,
         };
         let w = ql.dequantize();
         assert_eq!(w.data, vec![-2.0, 3.0, 2.0, -3.0]);
@@ -552,7 +918,7 @@ mod tests {
     fn dequantize_uniform() {
         let ql = QuantizedLayer {
             name: "t".into(),
-            method: "rtn".into(),
+            spec: QuantSpec::Rtn { bits: 2, group: 2 },
             k: 2,
             n_out: 1,
             g: 2,
@@ -563,6 +929,7 @@ mod tests {
                 bits: 2,
             },
             bits_per_param: 2.0,
+            t2: None,
         };
         let w = ql.dequantize();
         assert_eq!(w.data, vec![-0.5, 1.0]);
@@ -583,17 +950,17 @@ mod tests {
         for ql in &layers {
             let reference = ql.dequantize_reference();
             for blk in [1usize, 5, 32, 1024] {
-                assert_eq!(ql.dequantize_blocked(blk).data, reference.data, "{}", ql.method);
+                assert_eq!(ql.dequantize_blocked(blk).data, reference.data, "{}", ql.spec);
             }
             assert_eq!(
                 ql.dequantize_rotated().data,
                 ql.dequantize_rotated_reference().data,
                 "{}",
-                ql.method
+                ql.spec
             );
             // decode-from-packed consumes the bit-exact storage plane
             let pc = ql.packed_codes();
-            assert_eq!(ql.dequantize_from_packed(&pc).data, reference.data, "{}", ql.method);
+            assert_eq!(ql.dequantize_from_packed(&pc).data, reference.data, "{}", ql.spec);
             // streaming error == materialized error (f64 order aside)
             let fast = ql.rel_sq_err(&w);
             let slow = ql.rel_sq_err_reference(&w);
@@ -608,7 +975,7 @@ mod tests {
         let grid = Arc::new(Grid::new(GridKind::Nf, 1, 1, vec![0.25], 0.0));
         let ql = QuantizedLayer {
             name: "t".into(),
-            method: "test".into(),
+            spec: QuantSpec::Lut { kind: GridKind::Nf, n: 1, group: 4 },
             k: 4,
             n_out: 3,
             g: 4,
@@ -619,6 +986,7 @@ mod tests {
                 signs: None,
             },
             bits_per_param: 0.25,
+            t2: None,
         };
         assert_eq!(ql.code_bits(), 0);
         let pc = ql.packed_codes();
@@ -635,7 +1003,7 @@ mod tests {
     fn code_bits_integer_ceil_log2() {
         let mk = |n: usize| QuantizedLayer {
             name: "t".into(),
-            method: "test".into(),
+            spec: QuantSpec::Lut { kind: GridKind::Nf, n, group: 1 },
             k: 1,
             n_out: 1,
             g: 1,
@@ -646,6 +1014,7 @@ mod tests {
                 signs: None,
             },
             bits_per_param: 1.0,
+            t2: None,
         };
         for (n, bits) in [(1usize, 0u32), (2, 1), (3, 2), (16, 4), (200, 8), (256, 8), (257, 9)] {
             assert_eq!(mk(n).code_bits(), bits, "n={n}");
@@ -657,7 +1026,7 @@ mod tests {
         let grid = Arc::new(Grid::new(GridKind::Nf, 4, 1, vec![-1.0, -0.3, 0.3, 1.0], 0.0));
         let ql = QuantizedLayer {
             name: "t".into(),
-            method: "test".into(),
+            spec: QuantSpec::Lut { kind: GridKind::Nf, n: 4, group: 4 },
             k: 4,
             n_out: 2,
             g: 4,
@@ -668,6 +1037,7 @@ mod tests {
                 signs: None,
             },
             bits_per_param: 2.5,
+            t2: None,
         };
         assert_eq!(ql.code_bits(), 2);
         let pc = ql.packed_codes();
@@ -682,7 +1052,7 @@ mod tests {
         let g2 = Arc::new(Grid::new(GridKind::Nf, 4, 1, vec![-1.0, -0.3, 0.3, 1.0], 0.0));
         let mk = |name: &str, grid: Arc<Grid>| QuantizedLayer {
             name: name.into(),
-            method: "test".into(),
+            spec: QuantSpec::Lut { kind: GridKind::Nf, n: 2, group: 2 },
             k: 2,
             n_out: 1,
             g: 2,
@@ -693,6 +1063,7 @@ mod tests {
                 signs: None,
             },
             bits_per_param: 1.0,
+            t2: None,
         };
         let uniform = QuantizedModel::from_layers(vec![
             mk("a", g1.clone()),
@@ -719,7 +1090,7 @@ mod tests {
         let grid = Arc::new(Grid::new(GridKind::Higgs, 256, 2, vec![0.0; 512], 0.0));
         let ql = QuantizedLayer {
             name: "t".into(),
-            method: "higgs".into(),
+            spec: QuantSpec::Higgs { n: 256, p: 2, group: 64, seed: 0 },
             k: 128,
             n_out: 64,
             g: 64,
@@ -730,6 +1101,7 @@ mod tests {
                 signs: None,
             },
             bits_per_param: 4.25,
+            t2: None,
         };
         // 4096 codes * 8 bits = 4096 bytes + 128 scales * 2 = 256
         assert_eq!(ql.packed_bytes(), 4096 + 256);

@@ -7,7 +7,7 @@
 //! outliers by rotation, SpQR stores them. Having both lets the benches
 //! ablate the choice (see `rust/benches/ablations.rs`).
 
-use super::{QuantizedLayer, Quantizer};
+use super::{decode, QuantSpec, QuantizedLayer, Quantizer};
 use crate::tensor::Tensor;
 
 pub struct OutlierQuantizer<Q: Quantizer> {
@@ -32,6 +32,11 @@ impl<Q: Quantizer> OutlierQuantizer<Q> {
 
     pub fn name(&self) -> String {
         format!("spqr[{}]_rho{}", self.inner.name(), self.rho)
+    }
+
+    /// Typed spec of the wrapper (canonical `spqr[<inner>]_rho<RHO>`).
+    pub fn spec(&self) -> QuantSpec {
+        QuantSpec::Outlier { inner: Box::new(self.inner.spec()), rho: self.rho }
     }
 
     /// Effective bits: inner bits + side-band cost (32-bit value + 32-bit
@@ -77,7 +82,31 @@ impl OutlierLayer {
         t
     }
 
+    /// Relative squared error t² with the side-band applied — routed
+    /// through the streaming decode sink with an outlier OVERLAY
+    /// (`decode::rel_sq_err_streaming_overlay`): the base
+    /// dequantization is never materialized; side-band positions
+    /// substitute their stored value into the error accumulation as the
+    /// decoded blocks stream by. Equals
+    /// [`OutlierLayer::rel_sq_err_reference`] up to f64
+    /// summation-order rounding.
     pub fn rel_sq_err(&self, original: &Tensor) -> f64 {
+        let n = self.base.n_out;
+        let mut overlay: Vec<(usize, f32)> =
+            self.outliers.iter().map(|&(i, v)| (i as usize, v)).collect();
+        overlay.sort_unstable_by_key(|&(i, _)| (i % n, i / n));
+        decode::rel_sq_err_streaming_overlay(
+            &self.base.decode_view(None, false),
+            &original.data,
+            decode::decode_block_cols(),
+            &overlay,
+        )
+    }
+
+    /// The materializing reference measurement (dense base dequant +
+    /// outlier restore + flat compare) — the oracle for the streaming
+    /// overlay path.
+    pub fn rel_sq_err_reference(&self, original: &Tensor) -> f64 {
         crate::util::stats::rel_sq_err(&self.dequantize().data, &original.data)
     }
 }
@@ -140,5 +169,44 @@ mod tests {
         let q = OutlierQuantizer::new(RtnQuantizer::new(4, 64), 0.01);
         // 4.25 + 0.01*64 = 4.89
         assert!((q.bits_per_param(128) - 4.89).abs() < 1e-9);
+    }
+
+    #[test]
+    fn streaming_overlay_matches_materializing_reference() {
+        // the streaming overlay measurement must equal the materialized
+        // one (f64 order aside) on both uniform and rotated-HIGGS bases
+        use crate::grids::registry::GridRegistry;
+        use crate::grids::GridKind;
+        use crate::quant::higgs::HiggsQuantizer;
+        let w = outlier_layer(96, 37, 3);
+        let reg = GridRegistry::new();
+        let rtn_base = OutlierQuantizer::new(RtnQuantizer::new(3, 32), 0.02).quantize("l", &w);
+        let higgs_base = OutlierQuantizer::new(
+            HiggsQuantizer::new(reg.get(GridKind::Higgs, 16, 2), 32, 7),
+            0.02,
+        )
+        .quantize("l", &w);
+        for ol in [&rtn_base, &higgs_base] {
+            let fast = ol.rel_sq_err(&w);
+            let slow = ol.rel_sq_err_reference(&w);
+            assert!(
+                (fast - slow).abs() <= 1e-12 + 1e-9 * slow.abs(),
+                "streaming {fast} vs materialized {slow}"
+            );
+        }
+        // determinism: repeated measurement is bit-identical
+        let a = rtn_base.rel_sq_err(&w);
+        let b = rtn_base.rel_sq_err(&w);
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+
+    #[test]
+    fn wrapper_spec_roundtrips() {
+        let q = OutlierQuantizer::new(RtnQuantizer::new(3, 64), 0.01);
+        let spec = q.spec();
+        assert_eq!(spec.to_string(), "spqr[rtn_b3_g64]_rho0.01");
+        assert_eq!(crate::quant::QuantSpec::parse(&spec.to_string(), 1, 0).unwrap(), spec);
+        // the wrapper's bits accounting matches the spec's
+        assert!((spec.bits_per_param(128) - q.bits_per_param(128)).abs() < 1e-12);
     }
 }

@@ -1,7 +1,7 @@
 //! RTN: direct round-to-nearest over min-max uniform group grids
 //! (Eqn. 1 of the paper) — the first-wave data-free baseline.
 
-use super::{eff_group, QuantData, QuantizedLayer, Quantizer};
+use super::{eff_group, QuantData, QuantSpec, QuantizedLayer, Quantizer};
 use crate::grids::uniform::{rtn_encode, rtn_scale_zero};
 use crate::tensor::Tensor;
 
@@ -17,12 +17,8 @@ impl RtnQuantizer {
 }
 
 impl Quantizer for RtnQuantizer {
-    fn name(&self) -> String {
-        format!("rtn_b{}_g{}", self.bits, self.group)
-    }
-
-    fn bits_per_param(&self, k: usize) -> f64 {
-        self.bits as f64 + 16.0 / eff_group(self.group, k) as f64
+    fn spec(&self) -> QuantSpec {
+        QuantSpec::Rtn { bits: self.bits, group: self.group }
     }
 
     fn quantize(&self, layer_name: &str, w: &Tensor) -> QuantizedLayer {
@@ -49,12 +45,13 @@ impl Quantizer for RtnQuantizer {
         }
         QuantizedLayer {
             name: layer_name.to_string(),
-            method: self.name(),
+            spec: self.spec(),
             k,
             n_out: n,
             g,
             data: QuantData::Uniform { codes, steps, zeros, bits: self.bits },
             bits_per_param: self.bits_per_param(k),
+            t2: None,
         }
     }
 }

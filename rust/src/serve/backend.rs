@@ -3,11 +3,128 @@
 //! assemble the executable's parameter list from a (dense, quantized)
 //! model pair — the rust side of Table 1's kernel comparison.
 
+use crate::grids::Grid;
 use crate::model::manifest::{DType, Manifest};
 use crate::model::Weights;
+use crate::quant::artifact::{PlaneData, QuantArtifact};
 use crate::quant::{QuantData, QuantizedModel};
 use crate::runtime::HostArg;
+use crate::tensor::Tensor;
 use anyhow::{bail, Context, Result};
+use std::sync::Arc;
+
+/// Where a backend's quantized parameters come from: the in-memory
+/// [`QuantizedModel`], or a persisted [`QuantArtifact`] — the
+/// cold-start path, where dense weights decode STRAIGHT from the
+/// bit-packed planes (`dequantize_from_packed` kernels, no unpacked
+/// code plane, no re-quantization).
+#[derive(Clone, Copy)]
+pub enum QuantSource<'a> {
+    Model(&'a QuantizedModel),
+    Artifact(&'a QuantArtifact),
+}
+
+impl<'a> QuantSource<'a> {
+    fn is_empty(&self) -> bool {
+        match self {
+            QuantSource::Model(m) => m.layers.is_empty(),
+            QuantSource::Artifact(a) => a.layers.is_empty(),
+        }
+    }
+
+    fn shared_lut_grid(&self) -> Option<Arc<Grid>> {
+        match self {
+            QuantSource::Model(m) => m.shared_lut_grid(),
+            QuantSource::Artifact(a) => a.shared_lut_grid(),
+        }
+    }
+
+    /// Dense weights of layer `base` (None if the source has no such
+    /// layer). Model sources run the blocked decode over the unpacked
+    /// plane; artifact sources decode from the packed words directly.
+    fn dense_weight(&self, base: &str) -> Option<Tensor> {
+        match self {
+            QuantSource::Model(m) => m.get(base).map(|ql| ql.dequantize()),
+            QuantSource::Artifact(a) => a.get(base).map(|s| s.dequantize()),
+        }
+    }
+
+    /// The layer's code plane widened to the i32 the executables take.
+    /// Model sources map straight off the borrowed plane (no u32
+    /// clone); artifact sources unpack once.
+    fn codes_i32(&self, base: &str) -> Result<Vec<i32>> {
+        match self {
+            QuantSource::Model(m) => {
+                let ql = lookup(Some(*m), base)?;
+                let codes: &[u32] = match &ql.data {
+                    QuantData::Lut { codes, .. } => codes,
+                    QuantData::Uniform { codes, .. } => codes,
+                };
+                Ok(codes.iter().map(|&c| c as i32).collect())
+            }
+            QuantSource::Artifact(a) => {
+                let s = lookup_scheme(a, base)?;
+                let packed = match &s.plane {
+                    PlaneData::Lut { packed, .. } => packed,
+                    PlaneData::Uniform { packed, .. } => packed,
+                };
+                Ok(packed.unpack().into_iter().map(|c| c as i32).collect())
+            }
+        }
+    }
+
+    fn lut_scales(&self, base: &str) -> Result<Vec<f32>> {
+        match self {
+            QuantSource::Model(m) => match &lookup(Some(*m), base)?.data {
+                QuantData::Lut { scales, .. } => Ok(scales.clone()),
+                _ => bail!("{base}: not LUT data"),
+            },
+            QuantSource::Artifact(a) => match &lookup_scheme(a, base)?.plane {
+                PlaneData::Lut { scales, .. } => Ok(scales.clone()),
+                _ => bail!("{base}: not LUT data"),
+            },
+        }
+    }
+
+    fn uniform_steps(&self, base: &str) -> Result<Vec<f32>> {
+        match self {
+            QuantSource::Model(m) => match &lookup(Some(*m), base)?.data {
+                QuantData::Uniform { steps, .. } => Ok(steps.clone()),
+                _ => bail!("{base}: not uniform data"),
+            },
+            QuantSource::Artifact(a) => match &lookup_scheme(a, base)?.plane {
+                PlaneData::Uniform { steps, .. } => Ok(steps.clone()),
+                _ => bail!("{base}: not uniform data"),
+            },
+        }
+    }
+
+    fn uniform_zeros(&self, base: &str) -> Result<Vec<f32>> {
+        match self {
+            QuantSource::Model(m) => match &lookup(Some(*m), base)?.data {
+                QuantData::Uniform { zeros, .. } => Ok(zeros.clone()),
+                _ => bail!("{base}: not uniform data"),
+            },
+            QuantSource::Artifact(a) => match &lookup_scheme(a, base)?.plane {
+                PlaneData::Uniform { zeros, .. } => Ok(zeros.clone()),
+                _ => bail!("{base}: not uniform data"),
+            },
+        }
+    }
+
+    fn signs(&self, base: &str) -> Result<Vec<f32>> {
+        match self {
+            QuantSource::Model(m) => match &lookup(Some(*m), base)?.data {
+                QuantData::Lut { signs: Some(s), .. } => Ok(s.clone()),
+                _ => bail!("{base}: layer has no RHT signs"),
+            },
+            QuantSource::Artifact(a) => match &lookup_scheme(a, base)?.plane {
+                PlaneData::Lut { signs: Some(s), .. } => Ok(s.clone()),
+                _ => bail!("{base}: layer has no RHT signs"),
+            },
+        }
+    }
+}
 
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum Backend {
@@ -64,6 +181,18 @@ impl Backend {
         weights: &Weights,
         qmodel: Option<&QuantizedModel>,
     ) -> Result<Vec<HostArg>> {
+        self.build_params_from(man, weights, qmodel.map(QuantSource::Model))
+    }
+
+    /// [`Backend::build_params`] generalized over the parameter source:
+    /// an in-memory model or a persisted [`QuantArtifact`] (serving
+    /// cold start straight from packed planes).
+    pub fn build_params_from(
+        &self,
+        man: &Manifest,
+        weights: &Weights,
+        src: Option<QuantSource<'_>>,
+    ) -> Result<Vec<HostArg>> {
         // Per-layer dense weights are the expensive params (a full
         // blocked decode each): fan them out over the pool up front
         // instead of decoding layers one-by-one on the calling thread.
@@ -71,29 +200,32 @@ impl Backend {
         // construction the per-layer fan-out is what overlaps small
         // and large layers (nested par_for runs inline via the pool's
         // re-entrancy guard). This is the Mixed serve-bench cold-start
-        // path.
-        let mut dense_w: Vec<Option<crate::tensor::Tensor>> = if qmodel.is_some() {
+        // path — from an artifact, each decode reads the bit-packed
+        // plane block-wise (`unpack_into`), never materializing an
+        // unpacked code vector.
+        let mut dense_w: Vec<Option<Tensor>> = if let Some(src) = src {
             let specs = &man.params;
             crate::util::pool::par_map(specs.len(), |i| {
                 let base = specs[i].name.strip_suffix(".w")?;
-                let ql = qmodel?.get(base)?;
-                Some(ql.dequantize())
+                src.dense_weight(base)
             })
         } else {
-            // no quantized model → nothing to pre-decode; skip the
+            // no quantized source → nothing to pre-decode; skip the
             // pool fan-out instead of spawning workers for all-None
             vec![None; man.params.len()]
         };
         let mut out = Vec::with_capacity(man.params.len());
         for (pi, spec) in man.params.iter().enumerate() {
             let arg = if spec.name == "lut" {
-                let qm = qmodel.context("lut param but no quantized model")?;
-                qm.layers.first().context("empty qmodel")?;
+                let src = src.context("lut param but no quantized model")?;
+                if src.is_empty() {
+                    bail!("empty quantized model");
+                }
                 // the decode executable bakes in ONE global grid: a
                 // mixed-precision model (per-layer grids) would silently
                 // decode every non-matching layer's codes against the
                 // wrong LUT — reject it here instead
-                let grid = qm.shared_lut_grid().context(
+                let grid = src.shared_lut_grid().context(
                     "decode artifact expects a single shared LUT grid, but the \
                      quantized model is mixed-precision; serve it with \
                      Backend::Mixed (dense decode on per-layer dequantized \
@@ -110,56 +242,41 @@ impl Backend {
                 HostArg::F32(grid.points.clone(), spec.dims.clone())
             } else if let Some(base) = spec.name.strip_suffix(".w") {
                 // dense linear weight: use dequantized values if we have
-                // a quantized model (keeps dense-backend comparisons
+                // a quantized source (keeps dense-backend comparisons
                 // honest; pre-decoded in the pool fan-out above), else
                 // original
                 let t = match dense_w[pi].take() {
                     Some(t) => t,
                     None => weights.linear(base).context("missing linear")?.clone(),
                 };
+                if t.data.len() != spec.numel() {
+                    bail!(
+                        "{}: decoded {} values vs manifest {:?}",
+                        spec.name,
+                        t.data.len(),
+                        spec.dims
+                    );
+                }
                 HostArg::F32(t.data, spec.dims.clone())
             } else if let Some(base) = spec.name.strip_suffix(".codes") {
-                let ql = lookup(qmodel, base)?;
-                let codes: &[u32] = match &ql.data {
-                    QuantData::Lut { codes, .. } => codes,
-                    QuantData::Uniform { codes, .. } => codes,
-                };
+                let src = src.context("quantized param but no quantized model")?;
+                let codes = src.codes_i32(base)?;
                 if codes.len() != spec.numel() {
                     bail!("{}: codes len {} vs {:?}", spec.name, codes.len(), spec.dims);
                 }
-                HostArg::I32(codes.iter().map(|&c| c as i32).collect(), spec.dims.clone())
+                HostArg::I32(codes, spec.dims.clone())
             } else if let Some(base) = spec.name.strip_suffix(".scales") {
-                let ql = lookup(qmodel, base)?;
-                match &ql.data {
-                    QuantData::Lut { scales, .. } => {
-                        HostArg::F32(scales.clone(), spec.dims.clone())
-                    }
-                    _ => bail!("{}: not LUT data", spec.name),
-                }
+                let src = src.context("quantized param but no quantized model")?;
+                HostArg::F32(src.lut_scales(base)?, spec.dims.clone())
             } else if let Some(base) = spec.name.strip_suffix(".scale") {
-                let ql = lookup(qmodel, base)?;
-                match &ql.data {
-                    QuantData::Uniform { steps, .. } => {
-                        HostArg::F32(steps.clone(), spec.dims.clone())
-                    }
-                    _ => bail!("{}: not uniform data", spec.name),
-                }
+                let src = src.context("quantized param but no quantized model")?;
+                HostArg::F32(src.uniform_steps(base)?, spec.dims.clone())
             } else if let Some(base) = spec.name.strip_suffix(".zero") {
-                let ql = lookup(qmodel, base)?;
-                match &ql.data {
-                    QuantData::Uniform { zeros, .. } => {
-                        HostArg::F32(zeros.clone(), spec.dims.clone())
-                    }
-                    _ => bail!("{}: not uniform data", spec.name),
-                }
+                let src = src.context("quantized param but no quantized model")?;
+                HostArg::F32(src.uniform_zeros(base)?, spec.dims.clone())
             } else if let Some(base) = spec.name.strip_suffix(".signs") {
-                let ql = lookup(qmodel, base)?;
-                match &ql.data {
-                    QuantData::Lut { signs: Some(s), .. } => {
-                        HostArg::F32(s.clone(), spec.dims.clone())
-                    }
-                    _ => bail!("{}: layer has no RHT signs", spec.name),
-                }
+                let src = src.context("quantized param but no quantized model")?;
+                HostArg::F32(src.signs(base)?, spec.dims.clone())
             } else {
                 // embed / norms: full precision
                 let t = weights
@@ -184,6 +301,15 @@ fn lookup<'a>(
         .context("quantized param but no quantized model")?
         .get(base)
         .with_context(|| format!("quantized model missing layer {base}"))
+}
+
+fn lookup_scheme<'a>(
+    artifact: &'a QuantArtifact,
+    base: &str,
+) -> Result<&'a crate::quant::artifact::LayerScheme> {
+    artifact
+        .get(base)
+        .with_context(|| format!("quantized artifact missing layer {base}"))
 }
 
 #[cfg(test)]
@@ -274,6 +400,40 @@ mod tests {
                     assert_eq!(v, &want.data, "param {}", spec.name);
                 }
                 _ => panic!("expected f32 param"),
+            }
+        }
+    }
+
+    #[test]
+    fn artifact_source_builds_identical_params() {
+        // serving cold start: params assembled straight from the
+        // artifact's packed planes must be bit-identical to the
+        // in-memory model's
+        let w = tiny_weights();
+        let qm = mixed_model(&w);
+        let art = crate::quant::artifact::QuantArtifact::from_model("tiny", &qm);
+        let cfg = fixture::tiny_config();
+        let mut text = String::from("artifact decode_dense_tiny_b1\n");
+        text += &format!("param embed f32 {},{}\n", cfg.vocab, cfg.d_model);
+        for (n, (k, m)) in cfg.linear_shapes() {
+            text += &format!("param {n}.w f32 {k},{m}\n");
+        }
+        let man = Manifest::parse(&text).unwrap();
+        art.validate_against(&man).unwrap();
+        let from_model = Backend::Mixed.build_params(&man, &w, Some(&qm)).unwrap();
+        let from_art = Backend::Mixed
+            .build_params_from(&man, &w, Some(QuantSource::Artifact(&art)))
+            .unwrap();
+        assert_eq!(from_model.len(), from_art.len());
+        for ((a, b), spec) in from_model.iter().zip(&from_art).zip(&man.params) {
+            match (a, b) {
+                (HostArg::F32(x, dx), HostArg::F32(y, dy)) => {
+                    assert_eq!(dx, dy, "param {}", spec.name);
+                    let xb: Vec<u32> = x.iter().map(|v| v.to_bits()).collect();
+                    let yb: Vec<u32> = y.iter().map(|v| v.to_bits()).collect();
+                    assert_eq!(xb, yb, "param {}", spec.name);
+                }
+                _ => panic!("expected f32 params"),
             }
         }
     }

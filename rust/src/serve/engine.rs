@@ -15,7 +15,7 @@
 //!   * greedy decode through the engine matches the offline
 //!     prefill-only path token-for-token.
 
-use super::backend::Backend;
+use super::backend::{Backend, QuantSource};
 use super::kvcache::{KvBlockManager, KvConfig};
 use super::metrics::ServeMetrics;
 use super::trace::Request;
@@ -138,14 +138,56 @@ impl<'a> GenerationEngine<'a> {
         weights: &Weights,
         qmodel: Option<&QuantizedModel>,
     ) -> Result<Self> {
+        Self::with_source(engine, cfg, backend, batch, weights, qmodel.map(QuantSource::Model))
+    }
+
+    /// Cold-start an engine from a persisted [`QuantArtifact`] — no
+    /// re-quantization: every dense weight param decodes straight from
+    /// the artifact's bit-packed planes (`dequantize_from_packed`
+    /// kernels). The artifact's layer shapes are validated against the
+    /// model manifest before anything decodes.
+    pub fn from_artifact(
+        engine: &'a Engine,
+        cfg: ModelConfig,
+        backend: Backend,
+        batch: usize,
+        weights: &Weights,
+        artifact: &crate::quant::artifact::QuantArtifact,
+    ) -> Result<Self> {
+        Self::with_source(
+            engine,
+            cfg,
+            backend,
+            batch,
+            weights,
+            Some(QuantSource::Artifact(artifact)),
+        )
+    }
+
+    /// [`GenerationEngine::new`] generalized over the quantized
+    /// parameter source (in-memory model or persisted artifact).
+    pub fn with_source(
+        engine: &'a Engine,
+        cfg: ModelConfig,
+        backend: Backend,
+        batch: usize,
+        weights: &Weights,
+        src: Option<QuantSource<'_>>,
+    ) -> Result<Self> {
         let decode_name = backend.decode_artifact(&cfg.name, batch);
         let prefill_name = backend.prefill_artifact(&cfg.name, batch);
         let decode_exe = engine.load(&decode_name).context(decode_name)?;
         let prefill_exe = engine.load(&prefill_name).context(prefill_name)?;
+        // a persisted artifact must belong to this model: check every
+        // layer's [k, n] against the dense prefill manifest up front
+        if let Some(QuantSource::Artifact(a)) = src {
+            a.validate_against(&prefill_exe.manifest)
+                .context("quant artifact does not match the model manifest")?;
+        }
         // cold-start: build_params fans the per-layer decode out over
         // the pool, and the host→literal conversions (one big copy per
         // param) fan out the same way
-        let decode_args = backend.build_params(&decode_exe.manifest, weights, qmodel)?;
+        let decode_args = backend.build_params_from(&decode_exe.manifest, weights, src)?;
         let decode_param_lits = par_literals(&decode_args)?;
         let decode_param_args = if std::env::var("HIGGS_SERVE_SLOWPATH").is_ok() {
             Some(decode_args.clone())
@@ -153,7 +195,8 @@ impl<'a> GenerationEngine<'a> {
             None
         };
         // prefill runs the dense graph on dequantized weights
-        let prefill_args = Backend::Dense.build_params(&prefill_exe.manifest, weights, qmodel)?;
+        let prefill_args =
+            Backend::Dense.build_params_from(&prefill_exe.manifest, weights, src)?;
         let prefill_param_lits = par_literals(&prefill_args)?;
         let kv_dims: Vec<usize> =
             vec![cfg.n_layers, batch, cfg.n_heads, cfg.seq, cfg.d_head()];

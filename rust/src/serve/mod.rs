@@ -23,7 +23,7 @@ pub mod metrics;
 pub mod router;
 pub mod trace;
 
-pub use backend::Backend;
+pub use backend::{Backend, QuantSource};
 pub use engine::GenerationEngine;
 pub use metrics::ServeMetrics;
 pub use router::{Router, RouterConfig};

@@ -24,11 +24,43 @@ pub fn env_usize(name: &str, default: usize) -> usize {
         .map_or(default, |n| n.max(1))
 }
 
+/// FNV-1a 64 over a byte stream — the shared integrity/identity hash
+/// (QuantArtifact trailer checksum, ErrorDb weights fingerprint). A
+/// single flipped byte always changes the hash: xor preserves state
+/// inequality and the multiplier is odd, hence invertible mod 2^64.
+pub fn fnv1a(bytes: impl IntoIterator<Item = u8>) -> u64 {
+    fnv1a_with(0xcbf2_9ce4_8422_2325, bytes)
+}
+
+/// [`fnv1a`] continued from an existing state, for hashing a sequence
+/// of byte streams without concatenating them.
+pub fn fnv1a_with(mut h: u64, bytes: impl IntoIterator<Item = u8>) -> u64 {
+    for b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1_0000_0001_b3);
+    }
+    h
+}
+
 #[cfg(test)]
 mod tests {
     #[test]
     fn env_usize_default_and_floor() {
         // unset → default (no env mutation: use an unlikely name)
         assert_eq!(super::env_usize("HIGGS_TEST_KNOB_DOES_NOT_EXIST", 32), 32);
+    }
+
+    #[test]
+    fn fnv1a_known_vectors_and_continuation() {
+        // standard FNV-1a 64 test vectors
+        assert_eq!(super::fnv1a(std::iter::empty::<u8>()), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(super::fnv1a(*b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(super::fnv1a(b"foobar".iter().copied()), 0x8594_4171_f739_67e8);
+        // continuation == one pass over the concatenation
+        let whole = super::fnv1a(b"foobar".iter().copied());
+        let split = super::fnv1a_with(super::fnv1a(b"foo".iter().copied()), b"bar".iter().copied());
+        assert_eq!(whole, split);
+        // single-byte flip always changes the hash
+        assert_ne!(super::fnv1a(*b"ab"), super::fnv1a(*b"aa"));
     }
 }

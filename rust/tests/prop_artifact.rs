@@ -1,0 +1,238 @@
+//! Property tests for the `QuantArtifact` subsystem (via
+//! `util/propcheck`):
+//!
+//! 1. `QuantSpec` parse ↔ Display round-trip over randomly generated
+//!    specs, including nested outlier wrappers — the typed spec is the
+//!    contract every artifact manifest relies on;
+//! 2. `QuantArtifact` save → load → dequantize is **bit-for-bit**
+//!    across every quantizer kind (HIGGS rotated, scalar LUT, RTN,
+//!    HQQ, GPTQ uniform + GPTQ-HIGGS) and for a mixed allocation from
+//!    an ErrorDb build (packed planes, `packed_avg_bits`, dequantized
+//!    tensors, measured t² all identical);
+//! 3. corrupted-header / truncated / bit-flipped files and wrong-shape
+//!    manifests ERROR — they never panic.
+
+use higgs::grids::registry::GridRegistry;
+use higgs::grids::GridKind;
+use higgs::model::{fixture, Manifest};
+use higgs::quant::artifact::QuantArtifact;
+use higgs::quant::gptq::{CalibratedGptq, GptqQuantizer};
+use higgs::quant::higgs::HiggsQuantizer;
+use higgs::quant::hqq::HqqQuantizer;
+use higgs::quant::lut::LutQuantizer;
+use higgs::quant::rtn::RtnQuantizer;
+use higgs::quant::{QuantSpec, QuantizedLayer, QuantizedModel, Quantizer};
+use higgs::tensor::Tensor;
+use higgs::util::propcheck::{forall, Gen};
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::OnceLock;
+
+/// One registry per test binary — CLVQ grids are expensive to train.
+fn registry() -> &'static GridRegistry {
+    static REG: OnceLock<GridRegistry> = OnceLock::new();
+    REG.get_or_init(GridRegistry::new)
+}
+
+fn to_bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn tmp_path(tag: u64) -> PathBuf {
+    std::env::temp_dir().join(format!("higgs_prop_artifact_{}_{tag}.qa", std::process::id()))
+}
+
+fn random_spec(g: &mut Gen, depth: usize) -> QuantSpec {
+    let group = *g.choose(&[16usize, 32, 64, 128]);
+    let hi = if depth == 0 { 6 } else { 5 };
+    match g.usize_in(0, hi) {
+        0 => QuantSpec::Higgs {
+            n: *g.choose(&[16usize, 64, 256]),
+            p: *g.choose(&[1usize, 2]),
+            group,
+            seed: g.rng().next_u64(),
+        },
+        1 => QuantSpec::Lut {
+            kind: *g.choose(&[GridKind::Nf, GridKind::Af, GridKind::Uniform, GridKind::Higgs]),
+            n: *g.choose(&[4usize, 16, 256]),
+            group,
+        },
+        2 => QuantSpec::Rtn { bits: *g.choose(&[2u32, 3, 4, 8]), group },
+        3 => QuantSpec::Hqq { bits: *g.choose(&[3u32, 4]), group },
+        4 => QuantSpec::Gptq { bits: *g.choose(&[2u32, 3, 4]), group },
+        5 => QuantSpec::GptqHiggs {
+            n: *g.choose(&[16usize, 64]),
+            p: 2,
+            group,
+            seed: g.rng().next_u64(),
+        },
+        _ => QuantSpec::Outlier {
+            inner: Box::new(random_spec(g, depth + 1)),
+            rho: g.f64_in(0.0, 0.05),
+        },
+    }
+}
+
+#[test]
+fn spec_display_parse_roundtrip() {
+    forall("spec Display ↔ parse", 300, |g| {
+        let spec = random_spec(g, 0);
+        let s = spec.to_string();
+        // mismatched defaults prove the canonical string carries
+        // every field itself
+        let back = QuantSpec::parse(&s, 7777, 0xDEAD_BEEF).unwrap();
+        assert_eq!(back, spec, "{s}");
+    });
+}
+
+/// A random quantized layer of a random kind — every payload shape an
+/// artifact can carry.
+fn random_layer(g: &mut Gen) -> (QuantizedLayer, Tensor) {
+    let k = *g.choose(&[32usize, 64, 96]);
+    let n = g.usize_in(1, 40);
+    let group = *g.choose(&[16usize, 32]);
+    let w = Tensor::from_vec(&[k, n], g.vec_normal(k * n));
+    let seed = g.rng().next_u64();
+    let ql = match g.usize_in(0, 5) {
+        0 => HiggsQuantizer::new(registry().get(GridKind::Higgs, 16, 2), group, seed)
+            .quantize("l", &w),
+        1 => {
+            let grids = [
+                registry().get(GridKind::Nf, 16, 1),
+                registry().get(GridKind::Af, 8, 1),
+                registry().get(GridKind::Uniform, 256, 1),
+            ];
+            LutQuantizer::new((*g.choose(&grids)).clone(), group).quantize("l", &w)
+        }
+        2 => RtnQuantizer::new(*g.choose(&[2u32, 3, 4]), group).quantize("l", &w),
+        3 => HqqQuantizer::new(*g.choose(&[3u32, 4]), group).quantize("l", &w),
+        4 => CalibratedGptq {
+            inner: GptqQuantizer::uniform(3, group),
+            hessians: HashMap::new(),
+        }
+        .quantize("l", &w),
+        _ => CalibratedGptq {
+            inner: GptqQuantizer::higgs(registry().get(GridKind::Higgs, 16, 2), group, seed),
+            hessians: HashMap::new(),
+        }
+        .quantize("l", &w),
+    };
+    (ql, w)
+}
+
+#[test]
+fn artifact_save_load_bitexact_all_kinds() {
+    forall("artifact roundtrip bit-for-bit", 18, |g| {
+        let (ql, _w) = random_layer(g);
+        let qm = QuantizedModel::from_layers(vec![ql]);
+        let art = QuantArtifact::from_model("prop", &qm);
+        let path = tmp_path(g.rng().next_u64());
+        art.save(&path).unwrap();
+        let loaded = QuantArtifact::load(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        let back = loaded.to_model().unwrap();
+        let (a, b) = (&qm.layers[0], &back.layers[0]);
+        assert_eq!(a.spec, b.spec, "spec survives the round trip");
+        assert_eq!(a.packed_codes(), b.packed_codes(), "packed plane diverged ({})", a.spec);
+        assert_eq!(
+            to_bits(&a.dequantize().data),
+            to_bits(&b.dequantize().data),
+            "dequantize diverged ({})",
+            a.spec
+        );
+        assert_eq!(
+            qm.packed_avg_bits().to_bits(),
+            back.packed_avg_bits().to_bits(),
+            "packed_avg_bits diverged"
+        );
+        // cold-start decode straight from the packed plane == in-memory
+        assert_eq!(
+            to_bits(&loaded.layers[0].dequantize().data),
+            to_bits(&a.dequantize().data),
+            "decode-from-packed diverged ({})",
+            a.spec
+        );
+    });
+}
+
+#[test]
+fn mixed_allocation_artifact_roundtrip() {
+    use higgs::alloc::errordb::{build_error_db, higgs_test_choices};
+    let w = fixture::tiny_weights(11);
+    let choices = higgs_test_choices(16, 7);
+    let build = build_error_db(&w, &choices).unwrap();
+    // a deliberately heterogeneous assignment
+    let choice: Vec<usize> =
+        (0..build.db.layers.len()).map(|l| l % choices.len()).collect();
+    let qm = build.realize(&choice).unwrap();
+    let art = QuantArtifact::from_model("tiny", &qm);
+    // t² measured during the ErrorDb build travels with the schemes
+    assert!(art.layers.iter().all(|s| s.t2.is_some()));
+    // shapes validate against the model's dense manifest
+    let man = Manifest::parse(&fixture::dense_manifest_text(&fixture::tiny_config())).unwrap();
+    art.validate_against(&man).unwrap();
+
+    let path = tmp_path(0xA110C);
+    art.save(&path).unwrap();
+    let loaded = QuantArtifact::load(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+    assert_eq!(loaded.config, "tiny");
+    let back = loaded.to_model().unwrap();
+    assert_eq!(qm.layers.len(), back.layers.len());
+    for (a, b) in qm.layers.iter().zip(&back.layers) {
+        assert_eq!(a.name, b.name);
+        assert_eq!(a.spec, b.spec);
+        assert_eq!(a.t2, b.t2, "t² diverged for {}", a.name);
+        assert_eq!(a.packed_codes(), b.packed_codes(), "packed plane diverged for {}", a.name);
+        assert_eq!(
+            to_bits(&a.dequantize().data),
+            to_bits(&b.dequantize().data),
+            "dequantize diverged for {}",
+            a.name
+        );
+    }
+    assert_eq!(qm.packed_avg_bits().to_bits(), back.packed_avg_bits().to_bits());
+    // the loaded artifact is mixed: no single shared LUT grid
+    assert!(loaded.shared_lut_grid().is_none());
+}
+
+#[test]
+fn corrupted_and_wrong_shape_loads_error_not_panic() {
+    let w = fixture::tiny_weights(5);
+    let q = HiggsQuantizer::new(registry().get(GridKind::Higgs, 16, 2), 16, 3);
+    let qm = QuantizedModel::quantize_all(&w, &q);
+    let art = QuantArtifact::from_model("tiny", &qm);
+    let path = tmp_path(0xC0FFEE);
+    art.save(&path).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+
+    // bad magic
+    let mut b = bytes.clone();
+    b[0] ^= 0xFF;
+    assert!(QuantArtifact::from_bytes(&b).is_err());
+    // truncations at every region: header, json, planes, checksum
+    for cut in [0usize, 5, 13, 25, bytes.len() / 3, bytes.len() / 2, bytes.len() - 1] {
+        assert!(QuantArtifact::from_bytes(&bytes[..cut]).is_err(), "cut at {cut}");
+    }
+    // any single flipped byte → checksum mismatch
+    forall("bit flips rejected", 40, |g| {
+        let at = g.usize_in(0, bytes.len() - 1);
+        let bit = 1u8 << g.usize_in(0, 7);
+        let mut b = bytes.clone();
+        b[at] ^= bit;
+        assert!(QuantArtifact::from_bytes(&b).is_err(), "flip at {at}");
+    });
+    // garbage file
+    assert!(QuantArtifact::from_bytes(b"not an artifact").is_err());
+    assert!(QuantArtifact::from_bytes(&[]).is_err());
+    // wrong-shape manifest validation errors
+    let mut text = String::from("artifact decode_dense_tiny_b1\n");
+    for (n, (k, m)) in fixture::tiny_config().linear_shapes() {
+        text += &format!("param {n}.w f32 {m},{k}\n"); // dims swapped
+    }
+    let swapped = Manifest::parse(&text).unwrap();
+    assert!(art.validate_against(&swapped).is_err());
+    // loading a nonexistent path errors cleanly
+    assert!(QuantArtifact::load(&tmp_path(0xDEAD_0001)).is_err());
+}

@@ -21,7 +21,7 @@ use higgs::quant::higgs::HiggsQuantizer;
 use higgs::quant::hqq::HqqQuantizer;
 use higgs::quant::lut::LutQuantizer;
 use higgs::quant::rtn::RtnQuantizer;
-use higgs::quant::{QuantData, QuantizedLayer, Quantizer};
+use higgs::quant::{QuantData, QuantSpec, QuantizedLayer, Quantizer};
 use higgs::tensor::Tensor;
 use higgs::util::propcheck::{forall, Gen};
 use std::sync::{Arc, OnceLock};
@@ -76,14 +76,14 @@ fn blocked_parallel_dequantize_equals_serial_reference() {
         let (ql, _w) = random_layer(g);
         let reference = ql.dequantize_reference();
         // the env-default block size (whatever the pool/thread count)
-        assert_eq!(to_bits(&ql.dequantize().data), to_bits(&reference.data), "{}", ql.method);
+        assert_eq!(to_bits(&ql.dequantize().data), to_bits(&reference.data), "{}", ql.spec);
         // explicit block sizes incl. degenerate and over-wide
         for blk in [1usize, 7, 32, 4096] {
             assert_eq!(
                 to_bits(&ql.dequantize_blocked(blk).data),
                 to_bits(&reference.data),
                 "{} block={blk}",
-                ql.method
+                ql.spec
             );
         }
     });
@@ -99,7 +99,7 @@ fn blocked_rotated_dequantize_equals_serial_reference() {
                 to_bits(&ql.dequantize_rotated_blocked(blk).data),
                 to_bits(&reference.data),
                 "{} block={blk}",
-                ql.method
+                ql.spec
             );
         }
     });
@@ -122,7 +122,7 @@ fn decode_from_packed_equals_decode_from_unpacked() {
                 to_bits(&ql.dequantize_from_packed_blocked(&pc, blk).data),
                 to_bits(&want.data),
                 "{} block={blk}",
-                ql.method
+                ql.spec
             );
         }
     });
@@ -140,7 +140,7 @@ fn streaming_rel_sq_err_matches_materialized() {
             assert!(
                 (fast - reference).abs() <= 1e-12 + 1e-9 * reference.abs(),
                 "{} block={blk}: {fast} vs {reference}",
-                ql.method
+                ql.spec
             );
         }
     });
@@ -178,7 +178,7 @@ fn zero_weights_den_zero_semantics_match_reference() {
     let grid = Arc::new(Grid::new(GridKind::Nf, 2, 1, vec![0.0, 1.0], 0.0));
     let exact = QuantizedLayer {
         name: "z".into(),
-        method: "test".into(),
+        spec: QuantSpec::Lut { kind: GridKind::Nf, n: 2, group: 32 },
         k: 32,
         n_out: 4,
         g: 32,
@@ -189,6 +189,7 @@ fn zero_weights_den_zero_semantics_match_reference() {
             signs: None,
         },
         bits_per_param: 1.0,
+        t2: None,
     };
     assert_eq!(exact.rel_sq_err(&w), 0.0);
     assert_eq!(exact.rel_sq_err_reference(&w), 0.0);
