@@ -223,6 +223,54 @@ fn main() {
         let _ = std::fs::remove_file(&path);
     }
 
+    // ArtifactReader: single-layer lazy load (ranged read + per-plane
+    // checksum + decode) vs paying the full-file load for one layer —
+    // the sharded cold-start unit of work on an 8-layer artifact
+    {
+        use higgs::quant::artifact::QuantArtifact;
+        use higgs::quant::reader::ArtifactReader;
+        use higgs::quant::QuantizedModel;
+        let q2 = HiggsQuantizer::new(reg.get(GridKind::Higgs, 16, 2), 64, 7);
+        let q4 = HiggsQuantizer::new(reg.get(GridKind::Higgs, 256, 2), 64, 7);
+        let layers: Vec<_> = (0..8)
+            .map(|i| {
+                let w = Tensor::from_vec(&[256, 256], rng.normal_vec(256 * 256));
+                let q: &HiggsQuantizer = if i % 2 == 0 { &q2 } else { &q4 };
+                q.quantize(&format!("l{i}"), &w)
+            })
+            .collect();
+        let qm = QuantizedModel::from_layers(layers);
+        let art = QuantArtifact::from_model("bench8", &qm);
+        let path = std::env::temp_dir()
+            .join(format!("higgs_bench_reader_{}.qa", std::process::id()));
+        art.save(&path).unwrap();
+        let reader = ArtifactReader::open(&path).unwrap();
+        // correctness gate: the lazy single-layer load is bit-identical
+        // to the same layer out of the full load
+        let full = QuantArtifact::load(&path).unwrap();
+        assert_eq!(
+            bits_of(&reader.load_layer("l3").unwrap().dequantize().data),
+            bits_of(&full.get("l3").unwrap().dequantize().data),
+            "lazy layer load diverged from full load"
+        );
+        let layer_params = 256.0 * 256.0;
+        let m = r.bench_items("reader_single_layer_load", layer_params, || {
+            reader.load_layer("l3").unwrap().dequantize()
+        });
+        eprintln!(
+            "  -> reader single-layer load: {:.2} Mparam/s (1/8 of the planes read)",
+            m.throughput(layer_params) / 1e6
+        );
+        let m = r.bench_items("artifact_full_load_one_layer", layer_params, || {
+            QuantArtifact::load(&path).unwrap().get("l3").unwrap().dequantize()
+        });
+        eprintln!(
+            "  -> full-load baseline for one layer: {:.2} Mparam/s",
+            m.throughput(layer_params) / 1e6
+        );
+        let _ = std::fs::remove_file(&path);
+    }
+
     // DP allocation at paper scale: 224 layers × 8 grid choices
     {
         use higgs::alloc::{solve_dp, ErrorDb, GridChoice};
@@ -294,13 +342,64 @@ fn main() {
         // decode fan-out
         {
             use higgs::model::Manifest;
-            use higgs::serve::Backend;
+            use higgs::quant::artifact::QuantArtifact;
+            use higgs::runtime::HostArg;
+            use higgs::serve::{Backend, PlaneStore, QuantSource};
             let man = Manifest::parse(&fixture::dense_manifest_text(&cfg)).unwrap();
             let qm = quantize_allocation(&w, &choices, &sol).unwrap();
             let m = r.bench_items("mixed_build_params_tiny", params, || {
                 Backend::Mixed.build_params(&man, &w, Some(&qm)).unwrap()
             });
             eprintln!("  -> mixed build_params: {:.2} Mparam/s", m.throughput(params) / 1e6);
+
+            // Engine-construction param provisioning from an artifact:
+            // the PR 4 baseline decoded every layer once PER manifest
+            // (decode + prefill = 2× decodes); the shared PlaneStore
+            // decodes once and clones. Both benched on the same two
+            // dense manifests the Mixed engine uses.
+            let art = QuantArtifact::from_model(&cfg.name, &qm);
+            let src = QuantSource::Artifact(&art);
+            let shared = || {
+                let store = PlaneStore::build_for(src, &[&man, &man]).unwrap();
+                let d = Backend::Mixed.build_params_with(&man, &w, Some(src), &store).unwrap();
+                let p = Backend::Dense.build_params_with(&man, &w, Some(src), &store).unwrap();
+                (d, p)
+            };
+            let double = || {
+                let d = Backend::Mixed.build_params_from(&man, &w, Some(src)).unwrap();
+                let p = Backend::Dense.build_params_from(&man, &w, Some(src)).unwrap();
+                (d, p)
+            };
+            // correctness + decode-count gates before timing: shared
+            // decodes each layer once, the baseline twice, params
+            // bit-identical
+            let nlayers = qm.layers.len() as u64;
+            let c0 = higgs::quant::decode::dense_decode_count();
+            let (sd, sp) = shared();
+            let c1 = higgs::quant::decode::dense_decode_count();
+            let (dd, dp) = double();
+            let c2 = higgs::quant::decode::dense_decode_count();
+            assert_eq!(c1 - c0, nlayers, "shared planes must decode each layer once");
+            assert_eq!(c2 - c1, 2 * nlayers, "baseline decodes per manifest");
+            for (a, b) in sd.iter().zip(&dd).chain(sp.iter().zip(&dp)) {
+                match (a, b) {
+                    (HostArg::F32(x, _), HostArg::F32(y, _)) => {
+                        assert_eq!(bits_of(x), bits_of(y), "shared-planes params diverged")
+                    }
+                    (HostArg::I32(x, _), HostArg::I32(y, _)) => assert_eq!(x, y),
+                    _ => panic!("param kind diverged"),
+                }
+            }
+            let m = r.bench_items("engine_cold_start_shared_planes", 2.0 * params, &shared);
+            eprintln!(
+                "  -> shared-planes provisioning (2 manifests): {:.2} Mparam/s",
+                m.throughput(2.0 * params) / 1e6
+            );
+            let m = r.bench_items("engine_cold_start_double_decode", 2.0 * params, &double);
+            eprintln!(
+                "  -> double-decode baseline (2 manifests): {:.2} Mparam/s",
+                m.throughput(2.0 * params) / 1e6
+            );
         }
 
         // ErrorDb build through the STREAMING decode measurement:

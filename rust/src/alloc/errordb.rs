@@ -147,15 +147,23 @@ pub fn weights_fingerprint(weights: &Weights) -> u64 {
 }
 
 impl ErrorDb {
-    /// Persist the measured t² table (plus the weights fingerprint it
-    /// was measured against) as a line-oriented text file under
+    /// Persist the measured t² table (plus the fingerprints it was
+    /// measured against) as a line-oriented text file under
     /// `artifacts/` — the reusable product of an expensive
     /// L·J-layer-encode build. f64 values round-trip exactly through
     /// Rust's shortest `Display` representation.
-    pub fn save(&self, path: &Path, fingerprint: u64) -> Result<()> {
+    ///
+    /// `fingerprint` is the COMBINED cache key (weight bytes ⊕ choice
+    /// specs) that gates reuse; `weights_fp` is the raw
+    /// [`weights_fingerprint`] alone, stored separately so `higgs
+    /// train` can tell whether a cache belongs to the checkpoint it
+    /// just wrote without knowing the choice list
+    /// ([`invalidate_stale_cache`]).
+    pub fn save(&self, path: &Path, fingerprint: u64, weights_fp: u64) -> Result<()> {
         self.validate()?;
         let mut s = String::from("higgs-errordb v1\n");
         s += &format!("fingerprint {fingerprint}\n");
+        s += &format!("weights_fp {weights_fp}\n");
         for c in &self.choices {
             ensure!(
                 !c.id.contains(char::is_whitespace),
@@ -180,9 +188,11 @@ impl ErrorDb {
         Ok(())
     }
 
-    /// Load a persisted error database; returns the db and the weights
-    /// fingerprint it was measured against.
-    pub fn load(path: &Path) -> Result<(ErrorDb, u64)> {
+    /// Load a persisted error database; returns the db, the combined
+    /// cache fingerprint it was measured against, and (for files
+    /// written since the `weights_fp` line existed) the raw weights
+    /// fingerprint alone.
+    pub fn load(path: &Path) -> Result<(ErrorDb, u64, Option<u64>)> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("read error db {}", path.display()))?;
         let mut lines = text.lines();
@@ -192,6 +202,7 @@ impl ErrorDb {
             path.display()
         );
         let mut fingerprint = 0u64;
+        let mut weights_fp = None;
         let mut choices = Vec::new();
         let (mut layers, mut dims, mut t2) = (Vec::new(), Vec::new(), Vec::new());
         for line in lines {
@@ -203,6 +214,9 @@ impl ErrorDb {
             match it.next() {
                 Some("fingerprint") => {
                     fingerprint = it.next().context("fingerprint value")?.parse()?;
+                }
+                Some("weights_fp") => {
+                    weights_fp = Some(it.next().context("weights_fp value")?.parse()?);
                 }
                 Some("choice") => {
                     let id = it.next().context("choice id")?.to_string();
@@ -224,8 +238,32 @@ impl ErrorDb {
         }
         let db = ErrorDb { layers, dims, choices, t2 };
         db.validate()?;
-        Ok((db, fingerprint))
+        Ok((db, fingerprint, weights_fp))
     }
+}
+
+/// Eagerly remove a persisted error-db cache that was NOT measured on
+/// `weights` — wired into `higgs train` checkpoint saves, so a
+/// retrained model invalidates its stale `artifacts/errordb_<cfg>.txt`
+/// immediately instead of leaving it for the next
+/// [`load_or_build_error_db`] to notice. A cache is kept only when it
+/// parses AND its stored raw [`weights_fingerprint`] matches; files
+/// predating the `weights_fp` line (or unreadable ones) are treated as
+/// stale. Returns `true` if a file was removed.
+pub fn invalidate_stale_cache(path: &Path, weights: &Weights) -> Result<bool> {
+    if !path.exists() {
+        return Ok(false);
+    }
+    let fresh = matches!(
+        ErrorDb::load(path),
+        Ok((_, _, Some(fp))) if fp == weights_fingerprint(weights)
+    );
+    if fresh {
+        return Ok(false);
+    }
+    std::fs::remove_file(path)
+        .with_context(|| format!("remove stale error db {}", path.display()))?;
+    Ok(true)
 }
 
 /// A usable error database: either freshly built (with every quantized
@@ -346,14 +384,15 @@ pub fn load_or_build_error_db(
     // spec (grid kind/n/p, group, seed) — a cache measured with a
     // different quantizer configuration behind the same choice id
     // must not be reused
-    let mut fingerprint = weights_fingerprint(weights);
+    let weights_fp = weights_fingerprint(weights);
+    let mut fingerprint = weights_fp;
     for (_, q) in choices {
         fingerprint = crate::util::fnv1a_with(fingerprint, q.spec().to_string().bytes());
     }
     if let Some(path) = cache {
         if path.exists() {
             match ErrorDb::load(path) {
-                Ok((db, fp)) if fp == fingerprint && db_matches(&db, weights, choices) => {
+                Ok((db, fp, _)) if fp == fingerprint && db_matches(&db, weights, choices) => {
                     eprintln!("error db: reusing cached measurement {}", path.display());
                     return Ok(DbHandle::cached_handle(db));
                 }
@@ -373,7 +412,7 @@ pub fn load_or_build_error_db(
         if let Some(parent) = path.parent() {
             let _ = std::fs::create_dir_all(parent);
         }
-        if let Err(e) = build.db.save(path, fingerprint) {
+        if let Err(e) = build.db.save(path, fingerprint, weights_fp) {
             eprintln!("WARNING: could not cache error db at {}: {e:#}", path.display());
         }
     }
@@ -592,6 +631,38 @@ mod tests {
         };
         let h4 = load_or_build_error_db(&w2, &fewer, Some(&path)).unwrap();
         assert!(!h4.cached());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn checkpoint_save_invalidates_stale_cache() {
+        let w = tiny_weights();
+        let choices = higgs_choices(16);
+        let path = std::env::temp_dir()
+            .join(format!("higgs_errordb_inval_{}.txt", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        // no cache → nothing to invalidate
+        assert!(!invalidate_stale_cache(&path, &w).unwrap());
+        // matching cache survives (re-saving the same weights must NOT
+        // throw away a valid measurement)
+        load_or_build_error_db(&w, &choices, Some(&path)).unwrap();
+        assert!(path.exists());
+        assert!(!invalidate_stale_cache(&path, &w).unwrap());
+        assert!(path.exists(), "fresh cache must be kept");
+        // the stored raw fingerprint round-trips
+        let (_, _, wfp) = ErrorDb::load(&path).unwrap();
+        assert_eq!(wfp, Some(weights_fingerprint(&w)));
+        // retrained weights → removed eagerly
+        let w2 = fixture::tiny_weights(42);
+        assert!(invalidate_stale_cache(&path, &w2).unwrap());
+        assert!(!path.exists(), "stale cache must be deleted");
+        // a pre-weights_fp (legacy) cache is treated as stale
+        load_or_build_error_db(&w, &choices, Some(&path)).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let legacy: String =
+            text.lines().filter(|l| !l.starts_with("weights_fp")).map(|l| format!("{l}\n")).collect();
+        std::fs::write(&path, legacy).unwrap();
+        assert!(invalidate_stale_cache(&path, &w).unwrap());
         let _ = std::fs::remove_file(&path);
     }
 

@@ -6,7 +6,7 @@
 //! higgs train      --config base --steps 400 [--lr 3e-3] [--out PATH]
 //! higgs eval       --config base [--quant SPEC] [--tasks]
 //! higgs quantize   --config base --method higgs_p2_n256 [--report-layers]
-//!                  [--save-artifact PATH]
+//!                  [--save-artifact PATH [--scale-dtype f32|f16]]
 //! higgs calibrate  --config base [--metric ppl|kl] [--levels 15]
 //! higgs allocate   --config base --budget 3.25 [--solver dp|greedy|lagrange] [--metric kl]
 //! higgs alloc-quantize --config base --budget 3.25 [--solver dp|greedy|lagrange]
@@ -17,6 +17,10 @@
 //!                  (budget applies to --backend mixed; --artifact cold-starts
 //!                   the mixed backend from a saved QuantArtifact)
 //! higgs serve-artifact --artifact PATH [--config base] [--batch 1] [--requests 8]
+//!                  [--shard i/n | i/n@rr]
+//!                  (--shard cold-starts ONE shard's layers with ranged
+//!                   reads — the per-process slice of a sharded fleet)
+//! higgs shard-manifest --artifact PATH --shards N [--rr]
 //! higgs hessian    --config tiny [--per-layer 8]
 //! higgs experiment fig1|fig2|fig3|fig4|table1|table2|table3|table4|table6 [--config base]
 //! ```
@@ -93,6 +97,7 @@ fn run(args: &Args) -> Result<()> {
         "alloc-quantize" => cmd_alloc_quantize(args),
         "serve-bench" => cmd_serve_bench(args),
         "serve-artifact" => cmd_serve_artifact(args),
+        "shard-manifest" => cmd_shard_manifest(args),
         "generate" => cmd_generate(args),
         "hessian" => cmd_hessian(args),
         "experiment" => cmd_experiment(args),
@@ -105,7 +110,7 @@ fn run(args: &Args) -> Result<()> {
 }
 
 const HELP: &str = "higgs — LLM quantization via the Linearity Theorem (see README.md)
-commands: train, eval, quantize, calibrate, allocate, alloc-quantize, serve-bench, serve-artifact, hessian, experiment";
+commands: train, eval, quantize, calibrate, allocate, alloc-quantize, serve-bench, serve-artifact, shard-manifest, hessian, experiment";
 
 fn ckpt_path(engine: &Engine, cfg: &ModelConfig, args: &Args) -> std::path::PathBuf {
     match args.flags.get("ckpt").or_else(|| args.flags.get("out")) {
@@ -142,6 +147,25 @@ fn cmd_train(args: &Args) -> Result<()> {
     let report = trainer.train(&mut weights, steps, lr, (steps / 20).max(1))?;
     let path = ckpt_path(&engine, &cfg, args);
     weights.save(&path)?;
+    // the ErrorDb cache is fingerprinted against the exact weight
+    // bytes: retraining the DEFAULT checkpoint invalidates it EAGERLY
+    // here, so a later alloc-quantize/serve-bench never even reads a
+    // stale file. A --out/--ckpt side-experiment leaves the default
+    // checkpoint (and therefore its still-valid cache) alone.
+    if !args.flags.contains_key("out") && !args.flags.contains_key("ckpt") {
+        let db_cache = engine.artifacts().join(format!("errordb_{}.txt", cfg.name));
+        match higgs::alloc::errordb::invalidate_stale_cache(&db_cache, &weights) {
+            Ok(true) => eprintln!(
+                "invalidated stale error-db cache {} (weights changed)",
+                db_cache.display()
+            ),
+            Ok(false) => {}
+            Err(e) => eprintln!(
+                "WARNING: could not invalidate error-db cache {}: {e:#}",
+                db_cache.display()
+            ),
+        }
+    }
     println!(
         "trained {} steps in {:.1}s ({:.0} tok/s), final loss {:.4} (ppl {:.3}); saved {}",
         report.steps,
@@ -220,23 +244,30 @@ fn cmd_quantize(args: &Args) -> Result<()> {
 /// `--save-artifact PATH`: persist the quantized model as a
 /// self-describing `QuantArtifact` (quantize once, serve many times —
 /// reload with `higgs serve-artifact` / `serve-bench --artifact`).
+/// `--scale-dtype f16` halves the on-disk scale bytes; the reload is
+/// then approximate (loader upcasts; bit-exactness needs f32).
 fn save_artifact_if_requested(
     args: &Args,
     config: &str,
     qm: &higgs::quant::QuantizedModel,
 ) -> Result<()> {
+    use higgs::quant::artifact::ScaleDtype;
     let Some(path) = args.flags.get("save-artifact") else {
         return Ok(());
     };
+    let sd = ScaleDtype::parse(&args.get("scale-dtype", "f32"))?;
     let art = higgs::quant::artifact::QuantArtifact::from_model(config, qm);
     let t0 = std::time::Instant::now();
-    art.save(std::path::Path::new(path))?;
+    art.save_with(std::path::Path::new(path), sd)?;
     let on_disk = std::fs::metadata(path).map(|m| m.len()).unwrap_or(0);
     println!(
-        "artifact: {} layers, {:.3} bits/param packed, {:.1} KiB on disk -> {path} ({:.2}s)",
+        "artifact: {} layers, {:.3} bits/param packed, {:.1} KiB on disk ({} scales{}) \
+         -> {path} ({:.2}s)",
         art.layers.len(),
         art.packed_avg_bits(),
         on_disk as f64 / 1024.0,
+        sd.label(),
+        if sd == ScaleDtype::F16 { "; reload is NOT bit-exact" } else { "" },
         t0.elapsed().as_secs_f64(),
     );
     Ok(())
@@ -504,8 +535,19 @@ fn backend_model(
 
 /// Cold-start a serving engine from a persisted `QuantArtifact` and
 /// run a request trace through it — the "quantize once, serve many
-/// times" path: no error-db build, no re-quantization; dense params
-/// decode straight from the artifact's bit-packed planes.
+/// times" path: no error-db build, no re-quantization. The file is
+/// opened through the lazy `ArtifactReader` (header + manifest parsed
+/// once; each layer plane is one checksummed ranged read) and dense
+/// params decode straight from the bit-packed planes, each layer
+/// exactly once via the shared `PlaneStore`.
+///
+/// `--shard i/n` (or `i/n@rr` for round-robin) cold-starts ONE shard:
+/// it loads and decodes only that shard's layers — ranged reads, I/O
+/// proportional to the slice — and reports the per-shard cost. This is
+/// the per-process step of an N-process sharded fleet; running a
+/// request trace needs every layer, so generation is only driven in
+/// unsharded mode (cross-process model-parallel execution is out of
+/// scope — see `higgs shard-manifest` for planning the split).
 fn cmd_serve_artifact(args: &Args) -> Result<()> {
     let path = args
         .flags
@@ -514,32 +556,64 @@ fn cmd_serve_artifact(args: &Args) -> Result<()> {
         .or_else(|| args.positional.first().cloned())
         .context(
             "usage: higgs serve-artifact --artifact PATH [--config base] [--batch 1] \
-             [--requests 8]",
+             [--requests 8] [--shard i/n]",
         )?;
-    let ctx = ExpContext::load(&args.get("config", "base"))?;
     let t0 = std::time::Instant::now();
-    let art = higgs::quant::artifact::QuantArtifact::load(std::path::Path::new(&path))?;
+    let reader = higgs::quant::reader::ArtifactReader::open(std::path::Path::new(&path))?;
     eprintln!(
-        "artifact {path}: config {:?}, {} layers, {:.3} bits/param packed, loaded in {:.2}s",
-        art.config,
-        art.layers.len(),
-        art.packed_avg_bits(),
-        t0.elapsed().as_secs_f64()
+        "artifact {path}: config {:?}, v{} ({} scales), {} layers, {:.3} bits/param packed, \
+         opened in {:.3}s ({} bytes read of {})",
+        reader.config,
+        reader.version(),
+        reader.scale_dtype().label(),
+        reader.entries().len(),
+        reader.packed_avg_bits(),
+        t0.elapsed().as_secs_f64(),
+        reader.bytes_read(),
+        reader.file_len(),
     );
+
+    if let Some(shard_s) = args.flags.get("shard") {
+        let shard = higgs::quant::reader::ShardSpec::parse(shard_s)?;
+        let t0 = std::time::Instant::now();
+        let slice = reader.load_shard(&shard)?;
+        let params: usize = slice.layers.iter().map(|s| s.k * s.n_out).sum();
+        let dense: usize = slice.layers.iter().map(|s| s.dequantize().len()).sum();
+        assert_eq!(params, dense);
+        let stats = reader.shard_stats(&shard);
+        println!(
+            "[shard {shard}] {} of {} layers, {} plane bytes (file range {}..{}), \
+             {:.3} bits/param, {} params decoded in {:.3}s; {} bytes read of {} total",
+            stats.layers,
+            reader.entries().len(),
+            stats.plane_bytes,
+            stats.byte_lo,
+            stats.byte_hi,
+            stats.bits_per_param,
+            params,
+            t0.elapsed().as_secs_f64(),
+            reader.bytes_read(),
+            reader.file_len(),
+        );
+        return Ok(());
+    }
+
+    let ctx = ExpContext::load(&args.get("config", "base"))?;
     let batch = args.get_usize("batch", 1)?;
     let n_req = args.get_usize("requests", 8)?;
     let t0 = std::time::Instant::now();
-    let mut ge = higgs::serve::GenerationEngine::from_artifact(
+    let mut ge = higgs::serve::GenerationEngine::from_reader(
         &ctx.engine,
         ctx.cfg.clone(),
         higgs::serve::Backend::Mixed,
         batch,
         &ctx.weights,
-        &art,
+        &reader,
     )?;
     eprintln!(
-        "engine cold start from packed planes in {:.2}s",
-        t0.elapsed().as_secs_f64()
+        "engine cold start from packed planes in {:.2}s ({} bytes read, decode-once planes)",
+        t0.elapsed().as_secs_f64(),
+        reader.bytes_read(),
     );
     let corpus = higgs::data::Corpus::new(ctx.cfg.vocab, ctx.cfg.seq, 1);
     let trace = higgs::serve::trace::generate_trace(
@@ -548,6 +622,57 @@ fn cmd_serve_artifact(args: &Args) -> Result<()> {
     );
     let m = ge.run_closed_loop(trace)?;
     println!("[artifact b={batch}] {}", m.summary());
+    Ok(())
+}
+
+/// Print the per-shard cold-start plan for an artifact: which layers
+/// each shard owns, the plane byte ranges it will read, and its bit
+/// budget — the operator-facing view of `serve-artifact --shard`.
+fn cmd_shard_manifest(args: &Args) -> Result<()> {
+    use higgs::quant::reader::{ArtifactReader, ShardSpec};
+    let path = args
+        .flags
+        .get("artifact")
+        .cloned()
+        .or_else(|| args.positional.first().cloned())
+        .context("usage: higgs shard-manifest --artifact PATH --shards N [--rr]")?;
+    let count = args.get_usize("shards", 2)?;
+    anyhow::ensure!(count >= 1, "--shards must be >= 1");
+    let rr = args.flags.contains_key("rr");
+    let reader = ArtifactReader::open(std::path::Path::new(&path))?;
+    let total = reader.entries().len();
+    println!(
+        "artifact {path}: config {:?}, {} layers, {} bytes, {:.3} bits/param packed, \
+         {count} shards ({})",
+        reader.config,
+        total,
+        reader.file_len(),
+        reader.packed_avg_bits(),
+        if rr { "round-robin" } else { "layer-range" },
+    );
+    for i in 0..count {
+        let shard = if rr {
+            ShardSpec::RoundRobin { index: i, count }
+        } else {
+            ShardSpec::Range { index: i, count }
+        };
+        let stats = reader.shard_stats(&shard);
+        let names: Vec<&str> = shard
+            .layer_indices(total)
+            .into_iter()
+            .map(|l| reader.entries()[l].name())
+            .collect();
+        println!(
+            "  shard {shard}: {} layers, {} plane bytes (file range {}..{}), \
+             {:.3} bits/param  [{}]",
+            stats.layers,
+            stats.plane_bytes,
+            stats.byte_lo,
+            stats.byte_hi,
+            stats.bits_per_param,
+            names.join(", "),
+        );
+    }
     Ok(())
 }
 

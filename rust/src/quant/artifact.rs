@@ -22,22 +22,39 @@
 //!
 //! ```text
 //! magic  b"HIGGSQA1"                         (8 bytes)
-//! u32    format version (1)
+//! u32    format version (2; version-1 files still load)
+//! u64    FNV-1a of the manifest JSON          (v2 only)
 //! u64    manifest length, then manifest JSON (grids + layer schemes,
-//!        specs as canonical QuantSpec strings)
+//!        specs as canonical QuantSpec strings; v2 adds per-region
+//!        offset/length/FNV fields and the scale dtype)
 //! planes deduplicated grid tables (n·p f32 each), then per layer:
-//!        packed code words (u32), scales/steps[/zeros] (f32),
-//!        RHT signs (f32, rotated layers)
+//!        packed code words (u32), scales/steps[/zeros] (f32 or f16,
+//!        see [`ScaleDtype`]), RHT signs (f32, rotated layers)
 //! u64    FNV-1a checksum of every preceding byte
 //! ```
 //!
-//! Scales are stored as raw f32 (the paper's 16-bit-scale accounting is
-//! a *size* convention — `packed_avg_bits` counts them at 16 bits —
-//! but serving decodes f32 scales, and storing them exactly is what
-//! makes save→load→dequantize bit-for-bit). Loading validates
-//! everything before any kernel runs: magic/version/checksum, plane
-//! sizes against the declared shapes, code ranges against the grid
-//! size — corrupted or truncated files error, they never panic.
+//! The v2 manifest records, for every grid table and every layer
+//! plane, its byte offset (relative to the start of the planes
+//! region), length, and an FNV-1a checksum of exactly those bytes.
+//! That is what makes the file *randomly accessible*: an
+//! [`crate::quant::reader::ArtifactReader`] parses the header +
+//! manifest once and then loads/validates/decodes any single layer
+//! with one ranged read — the sharded cold-start path. Version-1
+//! files (whole-file trailer only) still load everywhere; the reader
+//! verifies their trailer with one streaming pass at open instead.
+//!
+//! Scales are stored as raw f32 by default (the paper's 16-bit-scale
+//! accounting is a *size* convention — `packed_avg_bits` counts them
+//! at 16 bits — but serving decodes f32 scales, and storing them
+//! exactly is what makes save→load→dequantize bit-for-bit).
+//! [`QuantArtifact::save_with`] + [`ScaleDtype::F16`] store the scale
+//! planes as IEEE half instead — half the scale bytes at a documented
+//! precision cost: the loader upcasts and the round trip is no longer
+//! bit-exact (relative scale error ≤ 2⁻¹¹; property-tested bound in
+//! `rust/tests/prop_artifact.rs`). Loading validates everything
+//! before any kernel runs: magic/version/checksums, plane sizes
+//! against the declared shapes, code ranges against the grid size —
+//! corrupted or truncated files error, they never panic.
 
 use super::decode;
 use super::packing::{self, PackedCodes};
@@ -49,8 +66,120 @@ use anyhow::{bail, ensure, Context, Result};
 use std::path::Path;
 use std::sync::Arc;
 
-const MAGIC: &[u8; 8] = b"HIGGSQA1";
-const VERSION: u32 = 1;
+pub(crate) const MAGIC: &[u8; 8] = b"HIGGSQA1";
+/// v1: sequential planes, whole-file trailer checksum only.
+pub(crate) const V1: u32 = 1;
+/// v2: per-region offsets + FNV checksums in the manifest (random
+/// access), manifest checksum in the header, optional f16 scale planes.
+pub(crate) const V2: u32 = 2;
+
+// ---------------------------------------------------------------------------
+// scale dtype + f16 conversion
+// ---------------------------------------------------------------------------
+
+/// On-disk dtype of the scale planes (LUT scales, uniform steps/zeros).
+/// Codes, grid tables and RHT signs are unaffected. `F32` round-trips
+/// bit-for-bit; `F16` halves the scale bytes but the loader's upcast
+/// makes the round trip approximate (relative error ≤ 2⁻¹¹ per scale,
+/// values saturating at ±65504).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScaleDtype {
+    F32,
+    F16,
+}
+
+impl ScaleDtype {
+    pub fn label(&self) -> &'static str {
+        match self {
+            ScaleDtype::F32 => "f32",
+            ScaleDtype::F16 => "f16",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<ScaleDtype> {
+        match s {
+            "f32" => Ok(ScaleDtype::F32),
+            "f16" => Ok(ScaleDtype::F16),
+            other => bail!("unknown scale dtype {other:?} (want f32 or f16)"),
+        }
+    }
+
+    /// Bytes per stored scale value.
+    fn width(&self) -> usize {
+        match self {
+            ScaleDtype::F32 => 4,
+            ScaleDtype::F16 => 2,
+        }
+    }
+}
+
+/// f32 → IEEE 754 binary16 bits, round-to-nearest-even. Out-of-range
+/// finite values saturate to ±65504 (the max finite half) instead of
+/// overflowing to infinity, so an upcast scale is always finite;
+/// values below the subnormal range flush to signed zero. NaN maps to
+/// a quiet half NaN.
+pub fn f32_to_f16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let man = bits & 0x7f_ffff;
+    if exp == 0xff {
+        return if man != 0 { sign | 0x7e00 } else { sign | 0x7bff }; // NaN / saturate inf
+    }
+    let e = exp - 127 + 15;
+    if e >= 0x1f {
+        return sign | 0x7bff; // saturate to max finite
+    }
+    if e <= 0 {
+        // target is subnormal: value = man24 · 2^(e−14−10) with the
+        // implicit bit restored; h = man24 >> (14 − e), rounded to even
+        if e < -10 {
+            return sign; // below half the smallest subnormal: flush
+        }
+        let man24 = man | 0x80_0000;
+        let shift = (14 - e) as u32; // 14..=24
+        let halfway = 1u32 << (shift - 1);
+        let rem = man24 & ((1u32 << shift) - 1);
+        let mut h = (man24 >> shift) as u16;
+        if rem > halfway || (rem == halfway && (h & 1) == 1) {
+            h += 1; // may carry into the normal range: 0x0400 IS 2⁻¹⁴
+        }
+        return sign | h;
+    }
+    // normal: drop 13 mantissa bits, round to nearest even (carry may
+    // ripple into the exponent field — the bit layout makes that exact)
+    let rem = man & 0x1fff;
+    let mut h = ((e as u32) << 10) | (man >> 13);
+    if rem > 0x1000 || (rem == 0x1000 && (h & 1) == 1) {
+        h += 1;
+    }
+    if h >= 0x7c00 {
+        return sign | 0x7bff; // rounding overflowed past the max exponent
+    }
+    sign | h as u16
+}
+
+/// IEEE 754 binary16 bits → f32 (exact: every half value is
+/// representable in single precision).
+pub fn f16_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let man = (h & 0x3ff) as u32;
+    let bits = match exp {
+        0 => {
+            if man == 0 {
+                sign // signed zero
+            } else {
+                // subnormal: value = man · 2⁻²⁴; normalize into f32
+                let k = 31 - man.leading_zeros(); // MSB position, 0..=9
+                sign | ((103 + k) << 23) | ((man << (23 - k)) & 0x7f_ffff)
+            }
+        }
+        0x1f => sign | 0x7f80_0000 | (man << 13), // inf / NaN
+        _ => sign | ((exp + 112) << 23) | (man << 13),
+    };
+    f32::from_bits(bits)
+}
 
 // ---------------------------------------------------------------------------
 // LayerScheme
@@ -469,27 +598,79 @@ impl QuantArtifact {
 
     // ---- persistence ----
 
-    /// Serialize to the versioned binary format (see module docs).
+    /// Serialize to the versioned binary format (see module docs) with
+    /// f32 scale planes — bit-exact round trip.
     pub fn save(&self, path: &Path) -> Result<()> {
-        let bytes = self.to_bytes();
+        self.save_with(path, ScaleDtype::F32)
+    }
+
+    /// [`QuantArtifact::save`] with an explicit scale dtype.
+    /// [`ScaleDtype::F16`] halves the scale bytes; the round trip is
+    /// then approximate (loader upcasts; relative error ≤ 2⁻¹¹ plus a
+    /// 2⁻²⁴ absolute floor from the subnormal flush). Scales OUTSIDE
+    /// the f16 range would silently saturate into unbounded error, so
+    /// an f16 save errors instead of clamping. Also rejects duplicate
+    /// layer names up front — every loader refuses them, so writing
+    /// such a file would only defer the error to a far-away load.
+    pub fn save_with(&self, path: &Path, sd: ScaleDtype) -> Result<()> {
+        self.ensure_unique_names()?;
+        let bytes = self.to_bytes_with(sd)?;
         std::fs::write(path, &bytes)
             .with_context(|| format!("write artifact {}", path.display()))?;
         Ok(())
     }
 
-    /// The serialized byte image (exposed for size accounting/tests).
-    pub fn to_bytes(&self) -> Vec<u8> {
-        // deduplicate grid tables by content (layers quantized by one
-        // quantizer share the same Arc, but content-equality also folds
-        // separately-built identical grids)
+    /// Name-keyed access ([`QuantArtifact::get`], the reader's index)
+    /// must never be ambiguous: both load paths reject duplicate layer
+    /// names, so the save path must too (tests craft duplicate BYTES
+    /// through `to_bytes*` to pin the loader-side rejection).
+    fn ensure_unique_names(&self) -> Result<()> {
+        let mut seen = std::collections::HashSet::new();
+        for l in &self.layers {
+            ensure!(
+                seen.insert(l.name.as_str()),
+                "duplicate layer name {:?} in artifact",
+                l.name
+            );
+        }
+        Ok(())
+    }
+
+    /// Guard for f16 saves: every scale value must be finite and
+    /// within the f16 range (|v| ≤ 65504) — the documented ≤ 2⁻¹¹
+    /// error bound only holds there; out-of-range values would
+    /// saturate with unbounded relative error.
+    fn ensure_f16_scales(&self) -> Result<()> {
+        for l in &self.layers {
+            let planes: [&[f32]; 2] = match &l.plane {
+                PlaneData::Lut { scales, .. } => [scales.as_slice(), &[]],
+                PlaneData::Uniform { steps, zeros, .. } => {
+                    [steps.as_slice(), zeros.as_slice()]
+                }
+            };
+            for &v in planes.into_iter().flatten() {
+                ensure!(
+                    v.is_finite() && v.abs() <= 65504.0,
+                    "layer {}: scale {v} outside the f16 range — f16 scale planes \
+                     would saturate it with unbounded error; save with f32 scales",
+                    l.name
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Deduplicate grid tables by content (layers quantized by one
+    /// quantizer share the same Arc, but content-equality also folds
+    /// separately-built identical grids). `kind` participates (unlike
+    /// `shared_lut_grid`): the table entry stores it, so two
+    /// same-point grids of different kinds must not fold together.
+    fn dedup_grids(&self) -> (Vec<Arc<Grid>>, Vec<Option<usize>>) {
         let mut grids: Vec<Arc<Grid>> = Vec::new();
         let mut grid_of_layer: Vec<Option<usize>> = Vec::with_capacity(self.layers.len());
         for l in &self.layers {
             match &l.plane {
                 PlaneData::Lut { grid, .. } => {
-                    // kind participates here (unlike `shared_lut_grid`):
-                    // the table entry stores it, so two same-point grids
-                    // of different kinds must not fold together
                     let idx = grids.iter().position(|g| {
                         Arc::ptr_eq(g, grid) || (g.kind == grid.kind && g.same_table(grid))
                     });
@@ -502,8 +683,148 @@ impl QuantArtifact {
                 PlaneData::Uniform { .. } => grid_of_layer.push(None),
             }
         }
+        (grids, grid_of_layer)
+    }
+
+    /// The serialized byte image (exposed for size accounting/tests).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        self.to_bytes_with(ScaleDtype::F32)
+            .expect("f32 serialization has no failure mode")
+    }
+
+    /// Serialize as format v2: every grid table and layer plane is its
+    /// own region with a manifest-recorded offset/length/FNV, so an
+    /// [`crate::quant::reader::ArtifactReader`] can load any single
+    /// layer with one ranged, independently-checksummed read. An f16
+    /// image errors on scales outside the f16 range — serializing
+    /// them would silently saturate into unbounded error.
+    pub fn to_bytes_with(&self, sd: ScaleDtype) -> Result<Vec<u8>> {
+        if sd == ScaleDtype::F16 {
+            self.ensure_f16_scales()?;
+        }
+        let (grids, grid_of_layer) = self.dedup_grids();
+
+        // serialize every region up front: offsets (relative to the
+        // planes base) and per-region checksums go into the manifest
+        let mut regions: Vec<Vec<u8>> = Vec::with_capacity(grids.len() + self.layers.len());
+        for g in &grids {
+            let mut b = Vec::with_capacity(g.points.len() * 4);
+            push_f32s(&mut b, &g.points);
+            regions.push(b);
+        }
+        for l in &self.layers {
+            let mut b = Vec::new();
+            match &l.plane {
+                PlaneData::Lut { packed, scales, signs, .. } => {
+                    push_u32s(&mut b, &packed.words);
+                    push_scales(&mut b, scales, sd);
+                    if let Some(s) = signs {
+                        push_f32s(&mut b, s);
+                    }
+                }
+                PlaneData::Uniform { packed, steps, zeros, .. } => {
+                    push_u32s(&mut b, &packed.words);
+                    push_scales(&mut b, steps, sd);
+                    push_scales(&mut b, zeros, sd);
+                }
+            }
+            regions.push(b);
+        }
+        let mut offs: Vec<u64> = Vec::with_capacity(regions.len());
+        let mut off = 0u64;
+        for r in &regions {
+            offs.push(off);
+            off += r.len() as u64;
+        }
+        let region_json = |i: usize| -> [(String, Json); 3] {
+            [
+                ("off".into(), json_int(offs[i] as usize)),
+                ("len".into(), json_int(regions[i].len())),
+                ("fnv".into(), Json::Str(format!("{:016x}", fnv1a(&regions[i])))),
+            ]
+        };
 
         // manifest JSON
+        let grid_json: Vec<Json> = grids
+            .iter()
+            .enumerate()
+            .map(|(i, g)| {
+                let mut kv = vec![
+                    ("kind".into(), Json::Str(g.kind.label().to_string())),
+                    ("n".into(), json_int(g.n)),
+                    ("p".into(), json_int(g.p)),
+                    ("mse".into(), json_num(g.mse)),
+                ];
+                kv.extend(region_json(i));
+                Json::Obj(kv)
+            })
+            .collect();
+        let layer_json: Vec<Json> = self
+            .layers
+            .iter()
+            .zip(&grid_of_layer)
+            .enumerate()
+            .map(|(li, (l, gi))| {
+                let mut plane_kv = match &l.plane {
+                    PlaneData::Lut { packed, signs, .. } => vec![
+                        ("type".into(), Json::Str("lut".into())),
+                        ("grid".into(), json_int(gi.expect("lut layer has grid"))),
+                        ("bits".into(), json_int(packed.bits as usize)),
+                        ("count".into(), json_int(packed.count)),
+                        ("signs".into(), Json::Bool(signs.is_some())),
+                    ],
+                    PlaneData::Uniform { packed, bits, .. } => vec![
+                        ("type".into(), Json::Str("uniform".into())),
+                        ("bits".into(), json_int(*bits as usize)),
+                        ("count".into(), json_int(packed.count)),
+                    ],
+                };
+                plane_kv.extend(region_json(grids.len() + li));
+                Json::Obj(vec![
+                    ("name".into(), Json::Str(l.name.clone())),
+                    ("spec".into(), Json::Str(l.spec.to_string())),
+                    ("k".into(), json_int(l.k)),
+                    ("n".into(), json_int(l.n_out)),
+                    ("g".into(), json_int(l.g)),
+                    ("t2".into(), l.t2.map(json_num).unwrap_or(Json::Null)),
+                    ("plane".into(), Json::Obj(plane_kv)),
+                ])
+            })
+            .collect();
+        let manifest = Json::Obj(vec![
+            ("version".into(), json_int(V2 as usize)),
+            ("config".into(), Json::Str(self.config.clone())),
+            ("scale_dtype".into(), Json::Str(sd.label().to_string())),
+            ("grids".into(), Json::Arr(grid_json)),
+            ("layers".into(), Json::Arr(layer_json)),
+        ]);
+        let mut json = String::new();
+        manifest.write(&mut json);
+
+        // assemble: header (incl. manifest checksum) + json + regions
+        // + whole-file trailer
+        let mut buf: Vec<u8> = Vec::with_capacity(json.len() + off as usize + 64);
+        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(&V2.to_le_bytes());
+        buf.extend_from_slice(&fnv1a(json.as_bytes()).to_le_bytes());
+        buf.extend_from_slice(&(json.len() as u64).to_le_bytes());
+        buf.extend_from_slice(json.as_bytes());
+        for r in &regions {
+            buf.extend_from_slice(r);
+        }
+        let checksum = fnv1a(&buf);
+        buf.extend_from_slice(&checksum.to_le_bytes());
+        Ok(buf)
+    }
+
+    /// The legacy v1 byte image (sequential planes, f32 scales, no
+    /// per-region index — whole-file trailer only). Kept so tests pin
+    /// the backward-compatibility contract: v1 files produced by older
+    /// builds must keep loading through [`QuantArtifact::from_bytes`]
+    /// and `ArtifactReader::open`.
+    #[doc(hidden)]
+    pub fn to_bytes_v1(&self) -> Vec<u8> {
+        let (grids, grid_of_layer) = self.dedup_grids();
         let grid_json: Vec<Json> = grids
             .iter()
             .map(|g| {
@@ -546,7 +867,7 @@ impl QuantArtifact {
             })
             .collect();
         let manifest = Json::Obj(vec![
-            ("version".into(), json_int(VERSION as usize)),
+            ("version".into(), json_int(V1 as usize)),
             ("config".into(), Json::Str(self.config.clone())),
             ("grids".into(), Json::Arr(grid_json)),
             ("layers".into(), Json::Arr(layer_json)),
@@ -554,10 +875,9 @@ impl QuantArtifact {
         let mut json = String::new();
         manifest.write(&mut json);
 
-        // assemble: header + json + planes + checksum
         let mut buf: Vec<u8> = Vec::with_capacity(json.len() + 64);
         buf.extend_from_slice(MAGIC);
-        buf.extend_from_slice(&VERSION.to_le_bytes());
+        buf.extend_from_slice(&V1.to_le_bytes());
         buf.extend_from_slice(&(json.len() as u64).to_le_bytes());
         buf.extend_from_slice(json.as_bytes());
         for g in &grids {
@@ -594,6 +914,9 @@ impl QuantArtifact {
     }
 
     /// Parse a serialized artifact image (see [`QuantArtifact::save`]).
+    /// Accepts both format versions; validates the whole-file trailer,
+    /// the v2 manifest + per-region checksums, every plane length
+    /// against the declared shapes, and every code range.
     pub fn from_bytes(buf: &[u8]) -> Result<QuantArtifact> {
         ensure!(buf.len() >= 8 + 4 + 8 + 8, "file too short to be a quant artifact");
         ensure!(&buf[..8] == MAGIC, "bad magic (not a quant artifact)");
@@ -605,20 +928,223 @@ impl QuantArtifact {
         let body = &buf[..buf.len() - 8];
         let mut cur = Cursor { buf: body, pos: 8 };
         let version = cur.u32()?;
-        ensure!(version == VERSION, "unsupported artifact version {version}");
+        let man_fnv = match version {
+            V1 => None,
+            V2 => Some(cur.u64()?),
+            v => bail!("unsupported artifact version {v}"),
+        };
         let json_len = cur.u64()? as usize;
         let json_bytes = cur.take(json_len).context("manifest JSON")?;
+        if let Some(f) = man_fnv {
+            ensure!(fnv1a(json_bytes) == f, "manifest checksum mismatch");
+        }
         let json_text = std::str::from_utf8(json_bytes).context("manifest is not UTF-8")?;
-        let man = Json::parse(json_text)?;
+        let man = ArtifactManifest::parse(json_text)?;
+        ensure!(
+            man.version == version,
+            "manifest version {} disagrees with header version {version}",
+            man.version
+        );
+        let planes_base = cur.pos;
 
+        // Grid tables + layer planes. The whole-file trailer above
+        // already covers every region byte, so the per-region FNVs are
+        // NOT re-verified here (that would hash the file twice); they
+        // exist for the lazy reader, which skips the trailer. The
+        // offset index is still cross-checked against the sequential
+        // layout — a manifest whose regions disagree with the shapes
+        // is inconsistent even if uncorrupted.
+        let mut grids: Vec<Arc<Grid>> = Vec::with_capacity(man.grids.len());
+        for (i, gm) in man.grids.iter().enumerate() {
+            let start = cur.pos;
+            check_region(&gm.region, (start - planes_base) as u64, gm.byte_len())
+                .with_context(|| format!("grid {i}"))?;
+            let points = cur.f32s(gm.n * gm.p)?;
+            grids.push(Arc::new(Grid::new(gm.kind, gm.n, gm.p, points, gm.mse)));
+        }
+
+        let mut layers = Vec::with_capacity(man.layers.len());
+        for lm in &man.layers {
+            let start = cur.pos;
+            let len = lm.plane_byte_len(man.scale_dtype);
+            check_region(&lm.region, (start - planes_base) as u64, len)
+                .with_context(|| format!("layer {}", lm.name))?;
+            let bytes = cur.take(len as usize)?;
+            let plane = lm.parse_plane(bytes, &grids, man.scale_dtype)?;
+            layers.push(lm.to_scheme(plane));
+        }
+        ensure!(cur.pos == body.len(), "trailing bytes after planes");
+        for l in &layers {
+            l.validate()?;
+        }
+        Ok(QuantArtifact { config: man.config, layers })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// manifest metadata — shared by the full loader above and the lazy
+// `reader::ArtifactReader` (which reads the SAME manifest but fetches
+// plane regions on demand with ranged reads)
+// ---------------------------------------------------------------------------
+
+/// v2 region index entry: byte offset relative to the planes base,
+/// length, and an FNV-1a checksum of exactly those bytes. `None` for
+/// v1 files (offsets are then derived by the sequential walk and
+/// integrity comes from the whole-file trailer).
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct Region {
+    pub off: u64,
+    pub len: u64,
+    pub fnv: u64,
+}
+
+/// Manifest entry of one deduplicated grid table.
+pub(crate) struct GridMeta {
+    pub kind: GridKind,
+    pub n: usize,
+    pub p: usize,
+    pub mse: f64,
+    pub region: Option<Region>,
+}
+
+impl GridMeta {
+    pub(crate) fn byte_len(&self) -> u64 {
+        (self.n * self.p * 4) as u64
+    }
+
+    pub(crate) fn parse_table(&self, bytes: &[u8]) -> Result<Arc<Grid>> {
+        let mut cur = Cursor { buf: bytes, pos: 0 };
+        let points = cur.f32s(self.n * self.p)?;
+        ensure!(cur.pos == bytes.len(), "grid table region length mismatch");
+        Ok(Arc::new(Grid::new(self.kind, self.n, self.p, points, self.mse)))
+    }
+}
+
+/// Storage-plane shape metadata of one layer (everything needed to
+/// compute the region size and reassemble the payload).
+pub(crate) enum PlaneMeta {
+    Lut { grid: usize, bits: u32, count: usize, signs: bool },
+    Uniform { bits: u32, count: usize },
+}
+
+/// Parsed manifest entry of one layer: the scheme descriptor plus the
+/// plane-region index.
+pub(crate) struct LayerMeta {
+    pub name: String,
+    pub spec: QuantSpec,
+    pub k: usize,
+    pub n_out: usize,
+    pub g: usize,
+    pub t2: Option<f64>,
+    pub plane: PlaneMeta,
+    pub region: Option<Region>,
+}
+
+impl LayerMeta {
+    /// Number of stored scale values ((k/g) groups × n columns).
+    pub(crate) fn scale_count(&self) -> usize {
+        (self.k / self.g) * self.n_out
+    }
+
+    /// Exact byte length of this layer's plane region under `sd`.
+    pub(crate) fn plane_byte_len(&self, sd: ScaleDtype) -> u64 {
+        match &self.plane {
+            PlaneMeta::Lut { bits, count, signs, .. } => {
+                (packing::packed_words(*count, *bits) * 4
+                    + self.scale_count() * sd.width()
+                    + if *signs { self.k * 4 } else { 0 }) as u64
+            }
+            PlaneMeta::Uniform { bits, count } => {
+                (packing::packed_words(*count, *bits) * 4
+                    + 2 * self.scale_count() * sd.width()) as u64
+            }
+        }
+    }
+
+    /// Reassemble the payload from this layer's plane region bytes.
+    /// f16 scale planes are upcast to f32 here (the in-memory
+    /// [`PlaneData`] is always f32).
+    pub(crate) fn parse_plane(
+        &self,
+        bytes: &[u8],
+        grids: &[Arc<Grid>],
+        sd: ScaleDtype,
+    ) -> Result<PlaneData> {
+        let mut cur = Cursor { buf: bytes, pos: 0 };
+        let plane = match &self.plane {
+            PlaneMeta::Lut { grid: gi, bits, count, signs } => {
+                let words = cur.u32s(packing::packed_words(*count, *bits))?;
+                let packed = PackedCodes { bits: *bits, count: *count, words };
+                let grid = grids
+                    .get(*gi)
+                    .with_context(|| {
+                        format!("layer {}: grid index {gi} out of range", self.name)
+                    })?
+                    .clone();
+                let scales = cur.scales(self.scale_count(), sd)?;
+                let signs = if *signs { Some(cur.f32s(self.k)?) } else { None };
+                PlaneData::Lut { packed, scales, grid, signs }
+            }
+            PlaneMeta::Uniform { bits, count } => {
+                let words = cur.u32s(packing::packed_words(*count, *bits))?;
+                let packed = PackedCodes { bits: *bits, count: *count, words };
+                let steps = cur.scales(self.scale_count(), sd)?;
+                let zeros = cur.scales(self.scale_count(), sd)?;
+                PlaneData::Uniform { packed, steps, zeros, bits: *bits }
+            }
+        };
+        ensure!(
+            cur.pos == bytes.len(),
+            "layer {}: plane region length mismatch",
+            self.name
+        );
+        Ok(plane)
+    }
+
+    /// Assemble the [`LayerScheme`] (caller validates).
+    pub(crate) fn to_scheme(&self, plane: PlaneData) -> LayerScheme {
+        LayerScheme {
+            name: self.name.clone(),
+            spec: self.spec.clone(),
+            k: self.k,
+            n_out: self.n_out,
+            g: self.g,
+            t2: self.t2,
+            plane,
+        }
+    }
+}
+
+/// The parsed artifact manifest — everything the header JSON declares,
+/// with every field range-checked before any plane bytes are touched.
+pub(crate) struct ArtifactManifest {
+    pub version: u32,
+    pub config: String,
+    pub scale_dtype: ScaleDtype,
+    pub grids: Vec<GridMeta>,
+    pub layers: Vec<LayerMeta>,
+}
+
+impl ArtifactManifest {
+    pub(crate) fn parse(text: &str) -> Result<ArtifactManifest> {
+        let man = Json::parse(text)?;
+        let version = man
+            .get("version")
+            .map(|v| v.as_usize())
+            .transpose()
+            .context("manifest version")?
+            .unwrap_or(V1 as usize) as u32;
         let config = man
             .get("config")
             .and_then(Json::as_str)
             .unwrap_or_default()
             .to_string();
+        let scale_dtype = match man.get("scale_dtype").and_then(Json::as_str) {
+            Some(s) => ScaleDtype::parse(s)?,
+            None => ScaleDtype::F32, // v1 files predate the field
+        };
 
-        // grid tables
-        let mut grids: Vec<Arc<Grid>> = Vec::new();
+        let mut grids = Vec::new();
         for (i, gj) in man.get("grids").and_then(Json::as_arr).unwrap_or(&[]).iter().enumerate()
         {
             let kind = grid_kind_from_label(
@@ -630,12 +1156,12 @@ impl QuantArtifact {
                 (1..=1 << 24).contains(&n) && (1..=64).contains(&p),
                 "grid {i}: implausible size {n}x{p}"
             );
+            n.checked_mul(p).context("grid size overflow")?;
             let mse = gj.get("mse").and_then(|v| v.as_f64().ok()).unwrap_or(0.0);
-            let points = cur.f32s(n.checked_mul(p).context("grid size overflow")?)?;
-            grids.push(Arc::new(Grid::new(kind, n, p, points, mse)));
+            let region = parse_region(gj).with_context(|| format!("grid {i}"))?;
+            grids.push(GridMeta { kind, n, p, mse, region });
         }
 
-        // layer schemes
         let mut layers = Vec::new();
         for lj in man.get("layers").and_then(Json::as_arr).unwrap_or(&[]) {
             let name = lj.get("name").and_then(Json::as_str).context("layer name")?.to_string();
@@ -645,8 +1171,14 @@ impl QuantArtifact {
             let k = lj.get("k").context("layer k")?.as_usize()?;
             let n_out = lj.get("n").context("layer n")?.as_usize()?;
             let g = lj.get("g").context("layer g")?.as_usize()?;
+            // the 2^48-param ceiling keeps every later size computation
+            // (packed words × 4, scale bytes) overflow-free — a crafted
+            // manifest must error here, not panic on arithmetic later
             ensure!(
-                k >= 1 && n_out >= 1 && g >= 1 && k.checked_mul(n_out).is_some(),
+                k >= 1
+                    && n_out >= 1
+                    && g >= 1
+                    && k.checked_mul(n_out).is_some_and(|v| v <= 1 << 48),
                 "layer {name}: implausible shape {k}x{n_out} (g {g})"
             );
             let t2 = match lj.get("t2") {
@@ -660,38 +1192,83 @@ impl QuantArtifact {
             ensure!(bits_decl <= 32, "layer {name}: code width {bits_decl} > 32");
             let bits = bits_decl as u32;
             let count = pj.get("count").context("plane count")?.as_usize()?;
-            let words = cur.u32s(packing::packed_words(count, bits))?;
-            let packed = PackedCodes { bits, count, words };
+            // a code plane never has more entries than weights (p >= 1)
+            ensure!(
+                count <= k * n_out,
+                "layer {name}: plane count {count} exceeds shape {k}x{n_out}"
+            );
             let plane = match pj.get("type").and_then(Json::as_str) {
-                Some("lut") => {
-                    let gi = pj.get("grid").context("plane grid")?.as_usize()?;
-                    let grid = grids
-                        .get(gi)
-                        .with_context(|| format!("layer {name}: grid index {gi} out of range"))?
-                        .clone();
-                    let scales = cur.f32s((k / g.max(1)) * n_out)?;
-                    let signs = if pj.get("signs").and_then(Json::as_bool).unwrap_or(false) {
-                        Some(cur.f32s(k)?)
-                    } else {
-                        None
-                    };
-                    PlaneData::Lut { packed, scales, grid, signs }
-                }
-                Some("uniform") => {
-                    let steps = cur.f32s((k / g.max(1)) * n_out)?;
-                    let zeros = cur.f32s((k / g.max(1)) * n_out)?;
-                    PlaneData::Uniform { packed, steps, zeros, bits }
-                }
+                Some("lut") => PlaneMeta::Lut {
+                    grid: pj.get("grid").context("plane grid")?.as_usize()?,
+                    bits,
+                    count,
+                    signs: pj.get("signs").and_then(Json::as_bool).unwrap_or(false),
+                },
+                Some("uniform") => PlaneMeta::Uniform { bits, count },
                 other => bail!("layer {name}: unknown plane type {other:?}"),
             };
-            layers.push(LayerScheme { name, spec, k, n_out, g, t2, plane });
+            let region = parse_region(pj).with_context(|| format!("layer {name}"))?;
+            layers.push(LayerMeta { name, spec, k, n_out, g, t2, plane, region });
         }
-        ensure!(cur.pos == body.len(), "trailing bytes after planes");
+        // duplicate names would make name-keyed access ambiguous: the
+        // lazy reader's index and `QuantArtifact::get` could disagree
+        // about which plane "the" layer is — reject at parse instead
+        let mut seen = std::collections::HashSet::new();
         for l in &layers {
-            l.validate()?;
+            ensure!(
+                seen.insert(l.name.as_str()),
+                "duplicate layer name {:?} in artifact manifest",
+                l.name
+            );
         }
-        Ok(QuantArtifact { config, layers })
+        ensure!(
+            version == V1 || (grids.iter().all(|g| g.region.is_some())
+                && layers.iter().all(|l| l.region.is_some())),
+            "v2 manifest is missing region index entries"
+        );
+        Ok(ArtifactManifest { version, config, scale_dtype, grids, layers })
     }
+}
+
+/// Parse the optional off/len/fnv region triple off a manifest object.
+fn parse_region(obj: &Json) -> Result<Option<Region>> {
+    let (off, len, fnv) = (obj.get("off"), obj.get("len"), obj.get("fnv"));
+    if off.is_none() && len.is_none() && fnv.is_none() {
+        return Ok(None); // v1
+    }
+    let off = off.context("region off")?.as_usize()? as u64;
+    let len = len.context("region len")?.as_usize()? as u64;
+    let fnv_s = fnv.context("region fnv")?.as_str().context("region fnv type")?;
+    let fnv = u64::from_str_radix(fnv_s, 16)
+        .map_err(|_| anyhow::anyhow!("bad region fnv {fnv_s:?}"))?;
+    Ok(Some(Region { off, len, fnv }))
+}
+
+/// A declared v2 region must sit exactly where the sequential layout
+/// puts it and be exactly as long as the shape fields say — crafted
+/// overlapping/oversized indices error before any bytes are trusted.
+pub(crate) fn check_region(
+    region: &Option<Region>,
+    expect_off: u64,
+    expect_len: u64,
+) -> Result<()> {
+    if let Some(r) = region {
+        ensure!(
+            r.off == expect_off && r.len == expect_len,
+            "region index ({}, {}) disagrees with layout ({expect_off}, {expect_len})",
+            r.off,
+            r.len
+        );
+    }
+    Ok(())
+}
+
+/// Verify a v2 region checksum over its exact bytes (no-op for v1).
+pub(crate) fn verify_region_fnv(region: &Option<Region>, bytes: &[u8]) -> Result<()> {
+    if let Some(r) = region {
+        ensure!(fnv1a(bytes) == r.fnv, "plane checksum mismatch (corrupted region)");
+    }
+    Ok(())
 }
 
 fn grid_kind_from_label(s: &str) -> Result<GridKind> {
@@ -722,15 +1299,29 @@ fn push_f32s(buf: &mut Vec<u8>, v: &[f32]) {
     }
 }
 
+/// Write a scale plane at the requested on-disk dtype (f16 downcasts
+/// with round-to-nearest-even + saturation, see [`f32_to_f16`]).
+fn push_scales(buf: &mut Vec<u8>, v: &[f32], sd: ScaleDtype) {
+    match sd {
+        ScaleDtype::F32 => push_f32s(buf, v),
+        ScaleDtype::F16 => {
+            buf.reserve(v.len() * 2);
+            for &x in v {
+                buf.extend_from_slice(&f32_to_f16(x).to_le_bytes());
+            }
+        }
+    }
+}
+
 /// Trailer checksum over the whole byte image — the shared
 /// [`crate::util::fnv1a`] (single-byte corruptions always change it).
 fn fnv1a(bytes: &[u8]) -> u64 {
     crate::util::fnv1a(bytes.iter().copied())
 }
 
-struct Cursor<'a> {
-    buf: &'a [u8],
-    pos: usize,
+pub(crate) struct Cursor<'a> {
+    pub(crate) buf: &'a [u8],
+    pub(crate) pos: usize,
 }
 
 impl<'a> Cursor<'a> {
@@ -758,6 +1349,20 @@ impl<'a> Cursor<'a> {
     fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
         let bytes = self.take(n.checked_mul(4).context("length overflow")?)?;
         Ok(bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    /// Read `n` scale values at the on-disk dtype, upcast to f32.
+    fn scales(&mut self, n: usize, sd: ScaleDtype) -> Result<Vec<f32>> {
+        match sd {
+            ScaleDtype::F32 => self.f32s(n),
+            ScaleDtype::F16 => {
+                let bytes = self.take(n.checked_mul(2).context("length overflow")?)?;
+                Ok(bytes
+                    .chunks_exact(2)
+                    .map(|c| f16_to_f32(u16::from_le_bytes(c.try_into().unwrap())))
+                    .collect())
+            }
+        }
     }
 }
 
@@ -1167,6 +1772,126 @@ mod tests {
     }
 
     #[test]
+    fn f16_known_values_and_rounding() {
+        // exactly representable values round-trip bit-for-bit
+        for v in [
+            0.0f32, -0.0, 1.0, -1.0, 0.5, 2.0, 65504.0, -65504.0, 0.25, 1.5,
+            6.103515625e-5,            // smallest normal 2^-14
+            5.9604644775390625e-8,     // smallest subnormal 2^-24
+        ] {
+            let rt = f16_to_f32(f32_to_f16(v));
+            assert_eq!(rt.to_bits(), v.to_bits(), "{v} -> {rt}");
+        }
+        // round-to-nearest-even at the halfway points around 1.0 (f16
+        // ulp 2^-10): 1 + 2^-11 ties down to the even mantissa 1.0;
+        // 1 + 3·2^-11 ties up to the even mantissa 1 + 2·2^-10
+        assert_eq!(f16_to_f32(f32_to_f16(1.0 + 2f32.powi(-11))), 1.0);
+        let three_halves_ulp = 1.0 + 3.0 * 2f32.powi(-11);
+        assert_eq!(f16_to_f32(f32_to_f16(three_halves_ulp)), 1.0 + 2.0 * 2f32.powi(-10));
+        // saturation instead of infinity
+        assert_eq!(f16_to_f32(f32_to_f16(1e9)), 65504.0);
+        assert_eq!(f16_to_f32(f32_to_f16(f32::INFINITY)), 65504.0);
+        assert_eq!(f16_to_f32(f32_to_f16(-1e9)), -65504.0);
+        // flush-to-zero below the subnormal range, sign preserved
+        assert_eq!(f16_to_f32(f32_to_f16(1e-10)).to_bits(), 0.0f32.to_bits());
+        assert_eq!(f16_to_f32(f32_to_f16(-1e-10)).to_bits(), (-0.0f32).to_bits());
+        // NaN stays NaN
+        assert!(f16_to_f32(f32_to_f16(f32::NAN)).is_nan());
+    }
+
+    #[test]
+    fn v1_images_still_load_bit_for_bit() {
+        // the legacy writer's output must keep loading (backward
+        // compatibility with artifacts persisted by older builds) and
+        // reconstruct the same model as the v2 image
+        let reg = GridRegistry::new();
+        let q = HiggsQuantizer::new(reg.get(GridKind::Higgs, 16, 2), 16, 5);
+        let qm = QuantizedModel::from_layers(vec![
+            q.quantize("a", &rand_layer(32, 8, 2)),
+            RtnQuantizer::new(3, 16).quantize("b", &rand_layer(32, 4, 3)),
+        ]);
+        let art = QuantArtifact::from_model("compat", &qm);
+        let v1 = QuantArtifact::from_bytes(&art.to_bytes_v1()).unwrap();
+        let v2 = QuantArtifact::from_bytes(&art.to_bytes()).unwrap();
+        assert_eq!(v1.config, "compat");
+        for (a, b) in v1.layers.iter().zip(&v2.layers) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.spec, b.spec);
+            let (da, db) = (a.dequantize(), b.dequantize());
+            let bits =
+                |t: &Tensor| t.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&da), bits(&db), "v1/v2 decode diverged for {}", a.name);
+        }
+        // v1 corruption is still caught by the whole-file trailer
+        let mut bad = art.to_bytes_v1();
+        let at = bad.len() / 2;
+        bad[at] ^= 0x10;
+        assert!(QuantArtifact::from_bytes(&bad).is_err());
+    }
+
+    #[test]
+    fn f16_scale_planes_load_with_bounded_error() {
+        let reg = GridRegistry::new();
+        let q = HiggsQuantizer::new(reg.get(GridKind::Higgs, 16, 2), 16, 5);
+        let qm = QuantizedModel::from_layers(vec![
+            q.quantize("a", &rand_layer(64, 8, 7)),
+            RtnQuantizer::new(4, 16).quantize("b", &rand_layer(32, 4, 8)),
+        ]);
+        let art = QuantArtifact::from_model("t", &qm);
+        let bytes16 = art.to_bytes_with(ScaleDtype::F16).unwrap();
+        let bytes32 = art.to_bytes();
+        assert!(bytes16.len() < bytes32.len(), "f16 scales should shrink the file");
+        let loaded = QuantArtifact::from_bytes(&bytes16).unwrap();
+        // every scale within half-ulp relative error of the original
+        for (a, b) in art.layers.iter().zip(&loaded.layers) {
+            let (sa, sb): (&[f32], &[f32]) = match (&a.plane, &b.plane) {
+                (PlaneData::Lut { scales: x, .. }, PlaneData::Lut { scales: y, .. }) => (x, y),
+                (PlaneData::Uniform { steps: x, .. }, PlaneData::Uniform { steps: y, .. }) => {
+                    (x, y)
+                }
+                _ => panic!("plane kind changed"),
+            };
+            for (&x, &y) in sa.iter().zip(sb) {
+                assert!(
+                    (x - y).abs() as f64 <= 2f64.powi(-11) * x.abs() as f64 + 2f64.powi(-24),
+                    "scale error out of bound: {x} vs {y}"
+                );
+            }
+        }
+        // a second f16 round trip is exact (f16→f32→f16 is the identity)
+        let again =
+            QuantArtifact::from_bytes(&loaded.to_bytes_with(ScaleDtype::F16).unwrap()).unwrap();
+        for (a, b) in loaded.layers.iter().zip(&again.layers) {
+            assert_eq!(
+                a.dequantize().data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                b.dequantize().data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "f16 reload not idempotent for {}",
+                a.name
+            );
+        }
+    }
+
+    #[test]
+    fn f16_save_rejects_out_of_range_scales() {
+        // a scale beyond the f16 range would silently saturate into
+        // unbounded error — the save must error instead (f32 still ok)
+        let reg = GridRegistry::new();
+        let q = HiggsQuantizer::new(reg.get(GridKind::Higgs, 16, 2), 16, 5);
+        let mut ql = q.quantize("big", &rand_layer(32, 4, 11));
+        if let QuantData::Lut { scales, .. } = &mut ql.data {
+            scales[0] = 1e6;
+        }
+        let art = QuantArtifact::from_model("t", &QuantizedModel::from_layers(vec![ql]));
+        let path = std::env::temp_dir()
+            .join(format!("higgs_f16_range_{}.qa", std::process::id()));
+        let err = art.save_with(&path, ScaleDtype::F16).unwrap_err();
+        assert!(format!("{err:#}").contains("f16 range"), "{err:#}");
+        art.save_with(&path, ScaleDtype::F32).unwrap();
+        QuantArtifact::load(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
     fn corrupt_images_error_not_panic() {
         let reg = GridRegistry::new();
         let w = rand_layer(32, 4, 9);
@@ -1190,6 +1915,32 @@ mod tests {
         }
         // garbage
         assert!(QuantArtifact::from_bytes(b"definitely not an artifact").is_err());
+    }
+
+    #[test]
+    fn duplicate_layer_names_rejected_at_load() {
+        // name-keyed access (QuantArtifact::get, the reader's index)
+        // must never be ambiguous: a file with two layers of the same
+        // name errors at parse on BOTH load paths
+        let reg = GridRegistry::new();
+        let q = HiggsQuantizer::new(reg.get(GridKind::Higgs, 16, 2), 16, 5);
+        let a = q.quantize("dup", &rand_layer(32, 4, 1));
+        let b = q.quantize("dup", &rand_layer(32, 8, 2));
+        let art = QuantArtifact::from_schemes(
+            "t",
+            vec![LayerScheme::from_layer(&a), LayerScheme::from_layer(&b)],
+        );
+        let err = QuantArtifact::from_bytes(&art.to_bytes()).unwrap_err();
+        assert!(format!("{err:#}").contains("duplicate"), "{err:#}");
+        assert!(QuantArtifact::from_bytes(&art.to_bytes_v1()).is_err());
+        // and the save path refuses to write such a file in the first
+        // place (the loaders' rejection would otherwise surface far
+        // from the bug)
+        let path = std::env::temp_dir()
+            .join(format!("higgs_dup_names_{}.qa", std::process::id()));
+        let err = art.save(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("duplicate"), "{err:#}");
+        assert!(!path.exists());
     }
 
     #[test]

@@ -42,6 +42,21 @@ use crate::grids::Grid;
 use crate::hadamard::rht_inverse_block;
 use crate::util::pool::{par_for, SharedSlice};
 use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Process-wide count of dense layer decodes ([`decode_dense`] calls —
+/// one per `dequantize`/`build_params` layer decode). Instrumentation
+/// for the decode-once contract of the serving cold start
+/// (`serve::PlaneStore`): tests and `micro_hotpaths` assert counter
+/// DELTAS around a provisioning pass, so the engine path provably
+/// decodes each quantized layer exactly once.
+static DENSE_DECODES: AtomicU64 = AtomicU64::new(0);
+
+/// Read the process-wide dense-decode counter (monotonic; measure
+/// deltas, not absolute values — anything in the process may decode).
+pub fn dense_decode_count() -> u64 {
+    DENSE_DECODES.load(Ordering::Relaxed)
+}
 
 thread_local! {
     /// Per-worker decode scratch (column-major block buffer + one code
@@ -179,6 +194,7 @@ fn for_each_block(
 /// buffer — bit-identical to the serial reference for any thread count
 /// or block size.
 pub(super) fn decode_dense(view: &LayerView<'_>, block: usize) -> Vec<f32> {
+    DENSE_DECODES.fetch_add(1, Ordering::Relaxed);
     let (k, n) = (view.k, view.n);
     let mut w = vec![0.0f32; k * n];
     {

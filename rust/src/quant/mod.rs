@@ -22,6 +22,7 @@ pub mod outlier;
 pub mod hqq;
 pub mod lut;
 pub mod packing;
+pub mod reader;
 pub mod rtn;
 
 use crate::grids::{Grid, GridKind};

@@ -1,0 +1,590 @@
+//! `ArtifactReader` — an indexed, random-access view over a persisted
+//! [`QuantArtifact`] file, plus [`ShardSpec`], the layer-partition
+//! descriptor for sharded serving.
+//!
+//! [`QuantArtifact::load`] reads and validates the WHOLE file — the
+//! right call when one process serves every layer. The reader is the
+//! other cold-start shape: parse the header + manifest (and the small
+//! deduplicated grid tables) ONCE at [`ArtifactReader::open`], then
+//! load any single [`LayerScheme`] on demand with one ranged read,
+//! verified against its own per-plane FNV checksum (format v2). N
+//! processes can each open the same artifact and cold-start on only
+//! their [`ShardSpec`] slice — I/O proportional to the slice, not the
+//! file (`higgs serve-artifact --shard i/n`, `higgs shard-manifest`).
+//!
+//! Version-1 files (no per-region index) still open: their offsets are
+//! derived from the declared shapes and integrity comes from the
+//! whole-file trailer, which the reader verifies with one streaming
+//! pass at open — correct, but the I/O is then proportional to the
+//! file, so sharded cold starts want v2 (the default writer since the
+//! reader landed).
+//!
+//! Every byte the reader pulls off disk is counted
+//! ([`ArtifactReader::bytes_read`]), which is how tests pin the
+//! "a shard reads only its plane byte ranges" contract.
+
+use super::artifact::{
+    check_region, verify_region_fnv, ArtifactManifest, LayerMeta, LayerScheme, PlaneMeta,
+    QuantArtifact, ScaleDtype, MAGIC, V1, V2,
+};
+use crate::grids::Grid;
+use crate::model::Manifest;
+use anyhow::{bail, ensure, Context, Result};
+use std::io::{Read, Seek, SeekFrom};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+// ---------------------------------------------------------------------------
+// ShardSpec
+// ---------------------------------------------------------------------------
+
+/// Which slice of an artifact's layers a process owns. Both strategies
+/// PARTITION the layer list: the union of all `count` shards covers
+/// every layer exactly once (property-tested in
+/// `rust/tests/prop_reader.rs`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShardSpec {
+    /// Contiguous layer range `[index·L/count, (index+1)·L/count)` —
+    /// contiguous PLANE BYTES too (layers are written in order), so a
+    /// range shard is one sequential disk window.
+    Range { index: usize, count: usize },
+    /// Round-robin: layers where `layer % count == index` — balances
+    /// depth-correlated layer sizes across shards at the cost of a
+    /// strided read pattern.
+    RoundRobin { index: usize, count: usize },
+}
+
+impl ShardSpec {
+    /// Parse `"i/n"` (range) or `"i/n@rr"` (round-robin); `i` is
+    /// zero-based and must be `< n`.
+    pub fn parse(s: &str) -> Result<ShardSpec> {
+        let (body, rr) = match s.strip_suffix("@rr") {
+            Some(b) => (b, true),
+            None => (s, false),
+        };
+        let (i, n) = body
+            .split_once('/')
+            .with_context(|| format!("shard spec {s:?}: want i/n or i/n@rr"))?;
+        let index: usize = i.trim().parse().with_context(|| format!("shard index {i:?}"))?;
+        let count: usize = n.trim().parse().with_context(|| format!("shard count {n:?}"))?;
+        ensure!(count >= 1, "shard count must be >= 1");
+        ensure!(index < count, "shard index {index} out of range for {count} shards");
+        Ok(if rr {
+            ShardSpec::RoundRobin { index, count }
+        } else {
+            ShardSpec::Range { index, count }
+        })
+    }
+
+    pub fn index(&self) -> usize {
+        match self {
+            ShardSpec::Range { index, .. } | ShardSpec::RoundRobin { index, .. } => *index,
+        }
+    }
+
+    pub fn count(&self) -> usize {
+        match self {
+            ShardSpec::Range { count, .. } | ShardSpec::RoundRobin { count, .. } => *count,
+        }
+    }
+
+    /// Does this shard own layer `i` of `total`?
+    pub fn contains(&self, i: usize, total: usize) -> bool {
+        match self {
+            ShardSpec::Range { index, count } => {
+                i >= index * total / count && i < (index + 1) * total / count
+            }
+            ShardSpec::RoundRobin { index, count } => i % count == *index,
+        }
+    }
+
+    /// The layer indices this shard owns, ascending.
+    pub fn layer_indices(&self, total: usize) -> Vec<usize> {
+        (0..total).filter(|&i| self.contains(i, total)).collect()
+    }
+}
+
+impl std::fmt::Display for ShardSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ShardSpec::Range { index, count } => write!(f, "{index}/{count}"),
+            ShardSpec::RoundRobin { index, count } => write!(f, "{index}/{count}@rr"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ArtifactReader
+// ---------------------------------------------------------------------------
+
+/// One layer's manifest entry plus its resolved plane byte range.
+pub struct ReaderEntry {
+    pub(crate) meta: LayerMeta,
+    /// plane byte offset relative to the planes base
+    off: u64,
+    /// plane byte length
+    len: u64,
+    /// per-plane checksum (v2; v1 files rely on the trailer verified
+    /// at open)
+    fnv: Option<u64>,
+}
+
+impl ReaderEntry {
+    pub fn name(&self) -> &str {
+        &self.meta.name
+    }
+
+    pub fn spec(&self) -> &super::QuantSpec {
+        &self.meta.spec
+    }
+
+    pub fn k(&self) -> usize {
+        self.meta.k
+    }
+
+    pub fn n_out(&self) -> usize {
+        self.meta.n_out
+    }
+
+    pub fn t2(&self) -> Option<f64> {
+        self.meta.t2
+    }
+
+    /// Plane byte length on disk (ranged-read size).
+    pub fn plane_len(&self) -> u64 {
+        self.len
+    }
+
+    /// Packed size in bytes under the repo-wide accounting (codes
+    /// bit-packed + scales at 16 bit) — same convention as
+    /// [`LayerScheme::packed_bytes`], independent of the on-disk scale
+    /// dtype.
+    pub fn packed_bytes(&self) -> usize {
+        let scale_vals = self.meta.scale_count();
+        match &self.meta.plane {
+            PlaneMeta::Lut { bits, count, .. } => {
+                super::packing::packed_words(*count, *bits) * 4 + scale_vals * 2
+            }
+            PlaneMeta::Uniform { bits, count } => {
+                super::packing::packed_words(*count, *bits) * 4 + 2 * scale_vals * 2
+            }
+        }
+    }
+
+    fn grid_index(&self) -> Option<usize> {
+        match &self.meta.plane {
+            PlaneMeta::Lut { grid, .. } => Some(*grid),
+            PlaneMeta::Uniform { .. } => None,
+        }
+    }
+}
+
+/// Lazy, shardable view over an artifact file: manifest + grid tables
+/// parsed once at open, layer planes loaded on demand with ranged,
+/// per-plane-checksummed reads. Thread-safe (`load_layer` opens its
+/// own file handle), so [`crate::serve::PlaneStore`] can fan
+/// load+decode out over the pool.
+pub struct ArtifactReader {
+    path: PathBuf,
+    /// model config tag recorded at quantize time
+    pub config: String,
+    version: u32,
+    scale_dtype: ScaleDtype,
+    /// absolute file offset of the planes region
+    planes_base: u64,
+    file_len: u64,
+    grids: Vec<Arc<Grid>>,
+    entries: Vec<ReaderEntry>,
+    index: std::collections::HashMap<String, usize>,
+    bytes_read: AtomicU64,
+}
+
+impl ArtifactReader {
+    /// Parse the header, manifest, and grid tables — no layer plane is
+    /// read. v1 files additionally pay one streaming pass to verify
+    /// the whole-file trailer (they have no per-plane checksums).
+    pub fn open(path: &Path) -> Result<ArtifactReader> {
+        Self::open_inner(path)
+            .with_context(|| format!("open artifact {}", path.display()))
+    }
+
+    fn open_inner(path: &Path) -> Result<ArtifactReader> {
+        let mut f = std::fs::File::open(path)?;
+        let file_len = f.metadata()?.len();
+        ensure!(file_len >= 8 + 4 + 8 + 8, "file too short to be a quant artifact");
+        let mut bytes_read = 0u64;
+        let mut head = [0u8; 12];
+        f.read_exact(&mut head)?;
+        bytes_read += 12;
+        ensure!(&head[..8] == MAGIC, "bad magic (not a quant artifact)");
+        let version = u32::from_le_bytes(head[8..12].try_into().unwrap());
+        let man_fnv = match version {
+            V1 => None,
+            V2 => {
+                let mut b = [0u8; 8];
+                f.read_exact(&mut b)?;
+                bytes_read += 8;
+                Some(u64::from_le_bytes(b))
+            }
+            v => bail!("unsupported artifact version {v}"),
+        };
+        let mut b = [0u8; 8];
+        f.read_exact(&mut b)?;
+        bytes_read += 8;
+        let json_len = u64::from_le_bytes(b);
+        let header_len = 8 + 4 + if man_fnv.is_some() { 8 } else { 0 } + 8;
+        ensure!(
+            json_len
+                .checked_add(header_len as u64 + 8)
+                .map(|end| end <= file_len)
+                .unwrap_or(false),
+            "truncated artifact (manifest past end of file)"
+        );
+        let mut json_bytes = vec![0u8; json_len as usize];
+        f.read_exact(&mut json_bytes).context("manifest JSON")?;
+        bytes_read += json_len;
+        if let Some(want) = man_fnv {
+            ensure!(
+                crate::util::fnv1a(json_bytes.iter().copied()) == want,
+                "manifest checksum mismatch"
+            );
+        }
+        let json_text = std::str::from_utf8(&json_bytes).context("manifest is not UTF-8")?;
+        let man = ArtifactManifest::parse(json_text)?;
+        ensure!(
+            man.version == version,
+            "manifest version {} disagrees with header version {version}",
+            man.version
+        );
+        let planes_base = header_len as u64 + json_len;
+
+        // resolve every region against the sequential layout (v2
+        // declared offsets must agree; v1 offsets are derived)
+        let mut off = 0u64;
+        let mut grid_ranges = Vec::with_capacity(man.grids.len());
+        for (i, gm) in man.grids.iter().enumerate() {
+            let len = gm.byte_len();
+            check_region(&gm.region, off, len).with_context(|| format!("grid {i}"))?;
+            grid_ranges.push((off, len));
+            off = off.checked_add(len).context("plane layout overflow")?;
+        }
+        let mut entries = Vec::with_capacity(man.layers.len());
+        for lm in &man.layers {
+            let len = lm.plane_byte_len(man.scale_dtype);
+            check_region(&lm.region, off, len)
+                .with_context(|| format!("layer {}", lm.name))?;
+            entries.push((off, len, lm.region.map(|r| r.fnv)));
+            off = off.checked_add(len).context("plane layout overflow")?;
+        }
+        ensure!(
+            planes_base.checked_add(off).and_then(|v| v.checked_add(8)) == Some(file_len),
+            "file length {file_len} disagrees with the declared layout"
+        );
+
+        // v1 has no per-region checksums: verify the whole-file
+        // trailer once, streaming (the one full-file read v1 costs)
+        if version == V1 {
+            f.seek(SeekFrom::Start(0))?;
+            let mut h = crate::util::fnv1a(std::iter::empty::<u8>());
+            let mut remaining = file_len - 8;
+            let mut chunk = vec![0u8; 1 << 16];
+            while remaining > 0 {
+                let n = chunk.len().min(remaining as usize);
+                f.read_exact(&mut chunk[..n])?;
+                h = crate::util::fnv1a_with(h, chunk[..n].iter().copied());
+                remaining -= n as u64;
+            }
+            f.read_exact(&mut b)?;
+            bytes_read += file_len;
+            ensure!(
+                h == u64::from_le_bytes(b),
+                "checksum mismatch (corrupted artifact)"
+            );
+        }
+
+        // grid tables are shared by any LUT layer — load them eagerly
+        // (small, deduplicated, and contiguous at the start of the
+        // planes region, so the already-open handle reads them with
+        // one seek instead of re-opening per table)
+        let mut grids = Vec::with_capacity(man.grids.len());
+        if let Some((first_off, _)) = grid_ranges.first() {
+            f.seek(SeekFrom::Start(planes_base + first_off))?;
+            for ((i, gm), (_, glen)) in man.grids.iter().enumerate().zip(&grid_ranges) {
+                let mut bytes = vec![0u8; *glen as usize];
+                f.read_exact(&mut bytes)
+                    .with_context(|| format!("grid {i} table read"))?;
+                bytes_read += glen;
+                verify_region_fnv(&gm.region, &bytes).with_context(|| format!("grid {i}"))?;
+                grids.push(gm.parse_table(&bytes)?);
+            }
+        }
+        drop(f);
+
+        let mut reader = ArtifactReader {
+            path: path.to_path_buf(),
+            config: man.config.clone(),
+            version,
+            scale_dtype: man.scale_dtype,
+            planes_base,
+            file_len,
+            grids,
+            entries: Vec::new(),
+            index: std::collections::HashMap::new(),
+            bytes_read: AtomicU64::new(bytes_read),
+        };
+        for (lm, (loff, llen, lfnv)) in man.layers.into_iter().zip(entries) {
+            // grid index range-checked up front so a bad manifest
+            // errors at open, not at first load
+            if let PlaneMeta::Lut { grid, .. } = &lm.plane {
+                ensure!(
+                    *grid < reader.grids.len(),
+                    "layer {}: grid index {grid} out of range",
+                    lm.name
+                );
+            }
+            reader
+                .index
+                .insert(lm.name.clone(), reader.entries.len());
+            reader.entries.push(ReaderEntry { meta: lm, off: loff, len: llen, fnv: lfnv });
+        }
+        Ok(reader)
+    }
+
+    /// Ranged read of `len` bytes at `off` relative to the planes base
+    /// (opens its own handle — `&self`, thread-safe).
+    fn read_range(&self, off: u64, len: u64) -> Result<Vec<u8>> {
+        let abs = self.planes_base + off;
+        ensure!(
+            abs + len + 8 <= self.file_len,
+            "plane range {abs}..{} past end of file",
+            abs + len
+        );
+        let mut f = std::fs::File::open(&self.path)
+            .with_context(|| format!("reopen artifact {}", self.path.display()))?;
+        f.seek(SeekFrom::Start(abs))?;
+        let mut buf = vec![0u8; len as usize];
+        f.read_exact(&mut buf)
+            .with_context(|| format!("ranged read {abs}..{}", abs + len))?;
+        self.bytes_read.fetch_add(len, Ordering::Relaxed);
+        Ok(buf)
+    }
+
+    /// Total bytes this reader has pulled off disk (header + manifest
+    /// + grid tables + every ranged plane read; v1 adds the one
+    /// streaming trailer pass). The sharding contract — "a shard reads
+    /// only its slice" — is asserted against this counter.
+    pub fn bytes_read(&self) -> u64 {
+        self.bytes_read.load(Ordering::Relaxed)
+    }
+
+    pub fn file_len(&self) -> u64 {
+        self.file_len
+    }
+
+    pub fn version(&self) -> u32 {
+        self.version
+    }
+
+    pub fn scale_dtype(&self) -> ScaleDtype {
+        self.scale_dtype
+    }
+
+    /// Layer entries in artifact order (shape + byte-range metadata —
+    /// no plane bytes behind them until [`ArtifactReader::load_layer`]).
+    pub fn entries(&self) -> &[ReaderEntry] {
+        &self.entries
+    }
+
+    pub fn entry(&self, name: &str) -> Option<&ReaderEntry> {
+        self.index.get(name).map(|&i| &self.entries[i])
+    }
+
+    /// Absolute file byte range of one layer's plane region.
+    pub fn plane_range(&self, e: &ReaderEntry) -> (u64, u64) {
+        (self.planes_base + e.off, self.planes_base + e.off + e.len)
+    }
+
+    /// Load, checksum-verify, and validate ONE layer's scheme with a
+    /// single ranged read. Bit-for-bit equal to the same layer out of
+    /// a full [`QuantArtifact::load`].
+    pub fn load_layer(&self, name: &str) -> Result<LayerScheme> {
+        let e = self
+            .entry(name)
+            .with_context(|| format!("artifact has no layer {name}"))?;
+        let bytes = self.read_range(e.off, e.len)?;
+        if let Some(want) = e.fnv {
+            ensure!(
+                crate::util::fnv1a(bytes.iter().copied()) == want,
+                "layer {name}: plane checksum mismatch (corrupted region)"
+            );
+        }
+        let plane = e.meta.parse_plane(&bytes, &self.grids, self.scale_dtype)?;
+        let scheme = e.meta.to_scheme(plane);
+        scheme.validate()?;
+        Ok(scheme)
+    }
+
+    /// Load every layer a shard owns, in artifact order.
+    pub fn load_shard(&self, shard: &ShardSpec) -> Result<QuantArtifact> {
+        let total = self.entries.len();
+        let layers = shard
+            .layer_indices(total)
+            .into_iter()
+            .map(|i| self.load_layer(&self.entries[i].meta.name))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(QuantArtifact::from_schemes(&self.config, layers))
+    }
+
+    /// Load every layer (the lazy path's equivalent of
+    /// [`QuantArtifact::load`] — same result, ranged reads).
+    pub fn load_all(&self) -> Result<QuantArtifact> {
+        self.load_shard(&ShardSpec::Range { index: 0, count: 1 })
+    }
+
+    /// The single LUT grid shared by every LUT layer, or `None` if the
+    /// artifact is mixed-precision (same contract as
+    /// [`QuantArtifact::shared_lut_grid`]) — answered from the
+    /// manifest, no plane reads.
+    pub fn shared_lut_grid(&self) -> Option<Arc<Grid>> {
+        let mut found: Option<Arc<Grid>> = None;
+        for e in &self.entries {
+            if let Some(gi) = e.grid_index() {
+                let grid = &self.grids[gi];
+                match &found {
+                    None => found = Some(grid.clone()),
+                    Some(g) => {
+                        if !Arc::ptr_eq(g, grid) && !g.same_table(grid) {
+                            return None;
+                        }
+                    }
+                }
+            }
+        }
+        found
+    }
+
+    /// Exact average bits/param of the full artifact from the manifest
+    /// (identical to [`QuantArtifact::packed_avg_bits`], no plane
+    /// reads).
+    pub fn packed_avg_bits(&self) -> f64 {
+        let params: usize = self.entries.iter().map(|e| e.meta.k * e.meta.n_out).sum();
+        let bits: u64 = self.entries.iter().map(|e| e.packed_bytes() as u64 * 8).sum();
+        bits as f64 / params.max(1) as f64
+    }
+
+    /// Shard accounting for `higgs shard-manifest`: (layer count,
+    /// total plane bytes, absolute byte range lo..hi, packed
+    /// bits/param over the shard's layers).
+    pub fn shard_stats(&self, shard: &ShardSpec) -> ShardStats {
+        let idx = shard.layer_indices(self.entries.len());
+        let mut bytes = 0u64;
+        let (mut lo, mut hi) = (u64::MAX, 0u64);
+        let (mut params, mut packed_bits) = (0usize, 0u64);
+        for &i in &idx {
+            let e = &self.entries[i];
+            let (a, b) = self.plane_range(e);
+            bytes += e.len;
+            lo = lo.min(a);
+            hi = hi.max(b);
+            params += e.meta.k * e.meta.n_out;
+            packed_bits += e.packed_bytes() as u64 * 8;
+        }
+        if idx.is_empty() {
+            lo = 0;
+            hi = 0;
+        }
+        ShardStats {
+            layers: idx.len(),
+            plane_bytes: bytes,
+            byte_lo: lo,
+            byte_hi: hi,
+            bits_per_param: packed_bits as f64 / params.max(1) as f64,
+        }
+    }
+
+    /// Validate against a dense model manifest in BOTH directions
+    /// (same contract as [`QuantArtifact::validate_against`]): every
+    /// entry matches its `<name>.w` dims, every `.w` param is covered.
+    pub fn validate_against(&self, man: &Manifest) -> Result<()> {
+        for e in &self.entries {
+            let pname = format!("{}.w", e.meta.name);
+            let spec = man
+                .param(&pname)
+                .with_context(|| format!("manifest has no param {pname}"))?;
+            ensure!(
+                spec.dims == vec![e.meta.k, e.meta.n_out],
+                "layer {}: artifact shape {}x{} vs manifest {:?}",
+                e.meta.name,
+                e.meta.k,
+                e.meta.n_out,
+                spec.dims
+            );
+        }
+        for p in &man.params {
+            if let Some(base) = p.name.strip_suffix(".w") {
+                ensure!(
+                    self.entry(base).is_some(),
+                    "artifact does not cover linear layer {base} — a partial artifact \
+                     would silently serve it at full precision"
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Per-shard cold-start accounting (see [`ArtifactReader::shard_stats`]).
+pub struct ShardStats {
+    pub layers: usize,
+    pub plane_bytes: u64,
+    pub byte_lo: u64,
+    pub byte_hi: u64,
+    pub bits_per_param: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_spec_parse_and_display() {
+        assert_eq!(ShardSpec::parse("0/2").unwrap(), ShardSpec::Range { index: 0, count: 2 });
+        assert_eq!(
+            ShardSpec::parse("3/8@rr").unwrap(),
+            ShardSpec::RoundRobin { index: 3, count: 8 }
+        );
+        for s in ["2/2", "5/4", "x/2", "1/", "/", "", "1/0"] {
+            assert!(ShardSpec::parse(s).is_err(), "{s:?} should not parse");
+        }
+        for s in ["0/1", "1/3", "2/5@rr"] {
+            assert_eq!(ShardSpec::parse(s).unwrap().to_string(), s);
+        }
+    }
+
+    #[test]
+    fn shards_partition_small_cases() {
+        // exhaustive partition check on small (total, count) pairs;
+        // the property test in prop_reader.rs covers more
+        for total in 0..12usize {
+            for count in 1..6usize {
+                for mk in [
+                    (|i, c| ShardSpec::Range { index: i, count: c })
+                        as fn(usize, usize) -> ShardSpec,
+                    |i, c| ShardSpec::RoundRobin { index: i, count: c },
+                ] {
+                    let mut seen = vec![0usize; total];
+                    for i in 0..count {
+                        for l in mk(i, count).layer_indices(total) {
+                            seen[l] += 1;
+                        }
+                    }
+                    assert!(
+                        seen.iter().all(|&c| c == 1),
+                        "not a partition: total={total} count={count} {seen:?}"
+                    );
+                }
+            }
+        }
+    }
+}

@@ -3,10 +3,12 @@
 //! assemble the executable's parameter list from a (dense, quantized)
 //! model pair — the rust side of Table 1's kernel comparison.
 
+use super::planes::PlaneStore;
 use crate::grids::Grid;
 use crate::model::manifest::{DType, Manifest};
 use crate::model::Weights;
-use crate::quant::artifact::{PlaneData, QuantArtifact};
+use crate::quant::artifact::{LayerScheme, PlaneData, QuantArtifact};
+use crate::quant::reader::ArtifactReader;
 use crate::quant::{QuantData, QuantizedModel};
 use crate::runtime::HostArg;
 use crate::tensor::Tensor;
@@ -14,14 +16,20 @@ use anyhow::{bail, Context, Result};
 use std::sync::Arc;
 
 /// Where a backend's quantized parameters come from: the in-memory
-/// [`QuantizedModel`], or a persisted [`QuantArtifact`] — the
-/// cold-start path, where dense weights decode STRAIGHT from the
-/// bit-packed planes (`dequantize_from_packed` kernels, no unpacked
-/// code plane, no re-quantization).
+/// [`QuantizedModel`], a fully-loaded [`QuantArtifact`], or an
+/// on-disk [`ArtifactReader`] — the lazy cold-start path, where each
+/// layer's plane is pulled off disk with one checksummed ranged read
+/// and dense weights decode STRAIGHT from the bit-packed planes
+/// (`dequantize_from_packed` kernels, no unpacked code plane, no
+/// re-quantization). All three flow through the same provisioning
+/// pipeline: [`PlaneStore`] decodes each quantized layer ONCE, and
+/// [`Backend::build_params_with`] assembles executables' params from
+/// the store.
 #[derive(Clone, Copy)]
 pub enum QuantSource<'a> {
     Model(&'a QuantizedModel),
     Artifact(&'a QuantArtifact),
+    Reader(&'a ArtifactReader),
 }
 
 impl<'a> QuantSource<'a> {
@@ -29,6 +37,17 @@ impl<'a> QuantSource<'a> {
         match self {
             QuantSource::Model(m) => m.layers.is_empty(),
             QuantSource::Artifact(a) => a.layers.is_empty(),
+            QuantSource::Reader(r) => r.entries().is_empty(),
+        }
+    }
+
+    /// Does the source carry a quantized layer named `base`? (Cheap:
+    /// an index lookup — no plane read even for the reader.)
+    pub(crate) fn covers(&self, base: &str) -> bool {
+        match self {
+            QuantSource::Model(m) => m.get(base).is_some(),
+            QuantSource::Artifact(a) => a.get(base).is_some(),
+            QuantSource::Reader(r) => r.entry(base).is_some(),
         }
     }
 
@@ -36,23 +55,44 @@ impl<'a> QuantSource<'a> {
         match self {
             QuantSource::Model(m) => m.shared_lut_grid(),
             QuantSource::Artifact(a) => a.shared_lut_grid(),
+            QuantSource::Reader(r) => r.shared_lut_grid(),
         }
     }
 
-    /// Dense weights of layer `base` (None if the source has no such
-    /// layer). Model sources run the blocked decode over the unpacked
-    /// plane; artifact sources decode from the packed words directly.
-    fn dense_weight(&self, base: &str) -> Option<Tensor> {
+    /// Dense weights of layer `base`. Model sources run the blocked
+    /// decode over the unpacked plane; artifact sources decode from
+    /// the packed words directly; reader sources pay one ranged
+    /// (checksummed) plane read first. Errors if the source does not
+    /// cover `base` (check [`QuantSource::covers`] first) or the
+    /// ranged read fails.
+    pub(crate) fn dense_weight(&self, base: &str) -> Result<Tensor> {
         match self {
-            QuantSource::Model(m) => m.get(base).map(|ql| ql.dequantize()),
-            QuantSource::Artifact(a) => a.get(base).map(|s| s.dequantize()),
+            QuantSource::Model(m) => Ok(lookup(Some(*m), base)?.dequantize()),
+            QuantSource::Artifact(a) => Ok(lookup_scheme(a, base)?.dequantize()),
+            QuantSource::Reader(r) => Ok(r.load_layer(base)?.dequantize()),
         }
+    }
+
+    /// The layer's full scheme out of a lazy source (reader: one
+    /// ranged read). Used by the non-dense accessors below.
+    /// `load_layer` already distinguishes a genuinely-missing layer
+    /// from a checksum/I/O failure — no extra context here, it would
+    /// mislabel corruption as absence.
+    fn reader_scheme(r: &ArtifactReader, base: &str) -> Result<LayerScheme> {
+        r.load_layer(base)
     }
 
     /// The layer's code plane widened to the i32 the executables take.
     /// Model sources map straight off the borrowed plane (no u32
-    /// clone); artifact sources unpack once.
+    /// clone); artifact/reader sources unpack once.
     fn codes_i32(&self, base: &str) -> Result<Vec<i32>> {
+        let from_plane = |plane: &PlaneData| -> Vec<i32> {
+            let packed = match plane {
+                PlaneData::Lut { packed, .. } => packed,
+                PlaneData::Uniform { packed, .. } => packed,
+            };
+            packed.unpack().into_iter().map(|c| c as i32).collect()
+        };
         match self {
             QuantSource::Model(m) => {
                 let ql = lookup(Some(*m), base)?;
@@ -62,66 +102,76 @@ impl<'a> QuantSource<'a> {
                 };
                 Ok(codes.iter().map(|&c| c as i32).collect())
             }
-            QuantSource::Artifact(a) => {
-                let s = lookup_scheme(a, base)?;
-                let packed = match &s.plane {
-                    PlaneData::Lut { packed, .. } => packed,
-                    PlaneData::Uniform { packed, .. } => packed,
-                };
-                Ok(packed.unpack().into_iter().map(|c| c as i32).collect())
-            }
+            QuantSource::Artifact(a) => Ok(from_plane(&lookup_scheme(a, base)?.plane)),
+            QuantSource::Reader(r) => Ok(from_plane(&Self::reader_scheme(r, base)?.plane)),
         }
     }
 
     fn lut_scales(&self, base: &str) -> Result<Vec<f32>> {
+        let from_plane = |plane: &PlaneData| -> Result<Vec<f32>> {
+            match plane {
+                PlaneData::Lut { scales, .. } => Ok(scales.clone()),
+                _ => bail!("{base}: not LUT data"),
+            }
+        };
         match self {
             QuantSource::Model(m) => match &lookup(Some(*m), base)?.data {
                 QuantData::Lut { scales, .. } => Ok(scales.clone()),
                 _ => bail!("{base}: not LUT data"),
             },
-            QuantSource::Artifact(a) => match &lookup_scheme(a, base)?.plane {
-                PlaneData::Lut { scales, .. } => Ok(scales.clone()),
-                _ => bail!("{base}: not LUT data"),
-            },
+            QuantSource::Artifact(a) => from_plane(&lookup_scheme(a, base)?.plane),
+            QuantSource::Reader(r) => from_plane(&Self::reader_scheme(r, base)?.plane),
         }
     }
 
     fn uniform_steps(&self, base: &str) -> Result<Vec<f32>> {
+        let from_plane = |plane: &PlaneData| -> Result<Vec<f32>> {
+            match plane {
+                PlaneData::Uniform { steps, .. } => Ok(steps.clone()),
+                _ => bail!("{base}: not uniform data"),
+            }
+        };
         match self {
             QuantSource::Model(m) => match &lookup(Some(*m), base)?.data {
                 QuantData::Uniform { steps, .. } => Ok(steps.clone()),
                 _ => bail!("{base}: not uniform data"),
             },
-            QuantSource::Artifact(a) => match &lookup_scheme(a, base)?.plane {
-                PlaneData::Uniform { steps, .. } => Ok(steps.clone()),
-                _ => bail!("{base}: not uniform data"),
-            },
+            QuantSource::Artifact(a) => from_plane(&lookup_scheme(a, base)?.plane),
+            QuantSource::Reader(r) => from_plane(&Self::reader_scheme(r, base)?.plane),
         }
     }
 
     fn uniform_zeros(&self, base: &str) -> Result<Vec<f32>> {
+        let from_plane = |plane: &PlaneData| -> Result<Vec<f32>> {
+            match plane {
+                PlaneData::Uniform { zeros, .. } => Ok(zeros.clone()),
+                _ => bail!("{base}: not uniform data"),
+            }
+        };
         match self {
             QuantSource::Model(m) => match &lookup(Some(*m), base)?.data {
                 QuantData::Uniform { zeros, .. } => Ok(zeros.clone()),
                 _ => bail!("{base}: not uniform data"),
             },
-            QuantSource::Artifact(a) => match &lookup_scheme(a, base)?.plane {
-                PlaneData::Uniform { zeros, .. } => Ok(zeros.clone()),
-                _ => bail!("{base}: not uniform data"),
-            },
+            QuantSource::Artifact(a) => from_plane(&lookup_scheme(a, base)?.plane),
+            QuantSource::Reader(r) => from_plane(&Self::reader_scheme(r, base)?.plane),
         }
     }
 
     fn signs(&self, base: &str) -> Result<Vec<f32>> {
+        let from_plane = |plane: &PlaneData| -> Result<Vec<f32>> {
+            match plane {
+                PlaneData::Lut { signs: Some(s), .. } => Ok(s.clone()),
+                _ => bail!("{base}: layer has no RHT signs"),
+            }
+        };
         match self {
             QuantSource::Model(m) => match &lookup(Some(*m), base)?.data {
                 QuantData::Lut { signs: Some(s), .. } => Ok(s.clone()),
                 _ => bail!("{base}: layer has no RHT signs"),
             },
-            QuantSource::Artifact(a) => match &lookup_scheme(a, base)?.plane {
-                PlaneData::Lut { signs: Some(s), .. } => Ok(s.clone()),
-                _ => bail!("{base}: layer has no RHT signs"),
-            },
+            QuantSource::Artifact(a) => from_plane(&lookup_scheme(a, base)?.plane),
+            QuantSource::Reader(r) => from_plane(&Self::reader_scheme(r, base)?.plane),
         }
     }
 }
@@ -185,37 +235,44 @@ impl Backend {
     }
 
     /// [`Backend::build_params`] generalized over the parameter source:
-    /// an in-memory model or a persisted [`QuantArtifact`] (serving
-    /// cold start straight from packed planes).
+    /// an in-memory model, a loaded [`QuantArtifact`], or an on-disk
+    /// [`ArtifactReader`] (serving cold start straight from packed
+    /// planes). Builds a private [`PlaneStore`] for this one manifest;
+    /// callers provisioning SEVERAL manifests from the same source
+    /// (engine construction: decode + prefill) should build one store
+    /// over all of them and call [`Backend::build_params_with`] so
+    /// each layer decodes exactly once.
     pub fn build_params_from(
         &self,
         man: &Manifest,
         weights: &Weights,
         src: Option<QuantSource<'_>>,
     ) -> Result<Vec<HostArg>> {
-        // Per-layer dense weights are the expensive params (a full
-        // blocked decode each): fan them out over the pool up front
-        // instead of decoding layers one-by-one on the calling thread.
-        // Each layer's own decode is block-parallel too, but at engine
-        // construction the per-layer fan-out is what overlaps small
-        // and large layers (nested par_for runs inline via the pool's
-        // re-entrancy guard). This is the Mixed serve-bench cold-start
-        // path — from an artifact, each decode reads the bit-packed
-        // plane block-wise (`unpack_into`), never materializing an
-        // unpacked code vector.
-        let mut dense_w: Vec<Option<Tensor>> = if let Some(src) = src {
-            let specs = &man.params;
-            crate::util::pool::par_map(specs.len(), |i| {
-                let base = specs[i].name.strip_suffix(".w")?;
-                src.dense_weight(base)
-            })
-        } else {
-            // no quantized source → nothing to pre-decode; skip the
-            // pool fan-out instead of spawning workers for all-None
-            vec![None; man.params.len()]
+        let store = match src {
+            Some(s) => PlaneStore::build_for(s, &[man])?,
+            None => PlaneStore::empty(),
         };
+        self.build_params_with(man, weights, src, &store)
+    }
+
+    /// [`Backend::build_params_from`] drawing every dense `.w` plane
+    /// from an already-decoded [`PlaneStore`] — the decode-once
+    /// provisioning path. The store is the ONLY place layer decodes
+    /// happen (it fans them out over the pool; see
+    /// [`PlaneStore::build_for`]); this pass just assembles `HostArg`s
+    /// in manifest order. A layer the store does not hold falls back
+    /// to decoding from `src` directly (correct but paying an extra
+    /// decode — only reachable with a store built for other
+    /// manifests).
+    pub fn build_params_with(
+        &self,
+        man: &Manifest,
+        weights: &Weights,
+        src: Option<QuantSource<'_>>,
+        store: &PlaneStore,
+    ) -> Result<Vec<HostArg>> {
         let mut out = Vec::with_capacity(man.params.len());
-        for (pi, spec) in man.params.iter().enumerate() {
+        for spec in man.params.iter() {
             let arg = if spec.name == "lut" {
                 let src = src.context("lut param but no quantized model")?;
                 if src.is_empty() {
@@ -242,12 +299,16 @@ impl Backend {
                 HostArg::F32(grid.points.clone(), spec.dims.clone())
             } else if let Some(base) = spec.name.strip_suffix(".w") {
                 // dense linear weight: use dequantized values if we have
-                // a quantized source (keeps dense-backend comparisons
-                // honest; pre-decoded in the pool fan-out above), else
-                // original
-                let t = match dense_w[pi].take() {
+                // a quantized source — decoded ONCE in the shared
+                // PlaneStore, which clones for every consuming manifest
+                // but the last and MOVES the plane to the last (the
+                // single-manifest wrapper path is zero-copy)
+                let t = match store.claim(base) {
                     Some(t) => t,
-                    None => weights.linear(base).context("missing linear")?.clone(),
+                    None => match src {
+                        Some(s) if s.covers(base) => s.dense_weight(base)?,
+                        _ => weights.linear(base).context("missing linear")?.clone(),
+                    },
                 };
                 if t.data.len() != spec.numel() {
                     bail!(

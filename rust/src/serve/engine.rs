@@ -17,6 +17,7 @@
 
 use super::backend::{Backend, QuantSource};
 use super::kvcache::{KvBlockManager, KvConfig};
+use super::planes::PlaneStore;
 use super::metrics::ServeMetrics;
 use super::trace::Request;
 use crate::config::ModelConfig;
@@ -164,8 +165,35 @@ impl<'a> GenerationEngine<'a> {
         )
     }
 
+    /// Cold-start an engine from an opened [`ArtifactReader`] — the
+    /// lazy path: each layer's plane is pulled off disk with one
+    /// checksummed ranged read inside the [`PlaneStore`] fan-out
+    /// (I/O + verify + decode overlap across layers), and the file is
+    /// never loaded whole.
+    pub fn from_reader(
+        engine: &'a Engine,
+        cfg: ModelConfig,
+        backend: Backend,
+        batch: usize,
+        weights: &Weights,
+        reader: &crate::quant::reader::ArtifactReader,
+    ) -> Result<Self> {
+        Self::with_source(
+            engine,
+            cfg,
+            backend,
+            batch,
+            weights,
+            Some(QuantSource::Reader(reader)),
+        )
+    }
+
     /// [`GenerationEngine::new`] generalized over the quantized
-    /// parameter source (in-memory model or persisted artifact).
+    /// parameter source (in-memory model, loaded artifact, or on-disk
+    /// reader). All sources provision through ONE shared [`PlaneStore`]
+    /// spanning the decode and prefill manifests, so each quantized
+    /// layer is decoded exactly once per engine construction (the
+    /// pre-store path decoded every layer twice — once per manifest).
     pub fn with_source(
         engine: &'a Engine,
         cfg: ModelConfig,
@@ -180,24 +208,38 @@ impl<'a> GenerationEngine<'a> {
         let prefill_exe = engine.load(&prefill_name).context(prefill_name)?;
         // a persisted artifact must belong to this model: check every
         // layer's [k, n] against the dense prefill manifest up front
-        if let Some(QuantSource::Artifact(a)) = src {
-            a.validate_against(&prefill_exe.manifest)
-                .context("quant artifact does not match the model manifest")?;
+        match src {
+            Some(QuantSource::Artifact(a)) => a
+                .validate_against(&prefill_exe.manifest)
+                .context("quant artifact does not match the model manifest")?,
+            Some(QuantSource::Reader(r)) => r
+                .validate_against(&prefill_exe.manifest)
+                .context("quant artifact does not match the model manifest")?,
+            _ => {}
         }
-        // cold-start: build_params fans the per-layer decode out over
-        // the pool, and the host→literal conversions (one big copy per
+        // cold-start: ONE PlaneStore decodes every quantized layer the
+        // two manifests need (pool fan-out; ranged reads for a Reader
+        // source overlap in the same pass), both param assemblies draw
+        // from it, and the host→literal conversions (one big copy per
         // param) fan out the same way
-        let decode_args = backend.build_params_from(&decode_exe.manifest, weights, src)?;
+        let store = match src {
+            Some(s) => PlaneStore::build_for(s, &[&decode_exe.manifest, &prefill_exe.manifest])?,
+            None => PlaneStore::empty(),
+        };
+        let decode_args =
+            backend.build_params_with(&decode_exe.manifest, weights, src, &store)?;
         let decode_param_lits = par_literals(&decode_args)?;
         let decode_param_args = if std::env::var("HIGGS_SERVE_SLOWPATH").is_ok() {
             Some(decode_args.clone())
         } else {
             None
         };
-        // prefill runs the dense graph on dequantized weights
+        // prefill runs the dense graph on dequantized weights — the
+        // SAME store, no second decode
         let prefill_args =
-            Backend::Dense.build_params_from(&prefill_exe.manifest, weights, src)?;
+            Backend::Dense.build_params_with(&prefill_exe.manifest, weights, src, &store)?;
         let prefill_param_lits = par_literals(&prefill_args)?;
+        drop(store);
         let kv_dims: Vec<usize> =
             vec![cfg.n_layers, batch, cfg.n_heads, cfg.seq, cfg.d_head()];
         let kv_len: usize = kv_dims.iter().product();

@@ -20,11 +20,13 @@ pub mod batcher;
 pub mod engine;
 pub mod kvcache;
 pub mod metrics;
+pub mod planes;
 pub mod router;
 pub mod trace;
 
 pub use backend::{Backend, QuantSource};
 pub use engine::GenerationEngine;
+pub use planes::PlaneStore;
 pub use metrics::ServeMetrics;
 pub use router::{Router, RouterConfig};
 pub use trace::{Request, TraceConfig};

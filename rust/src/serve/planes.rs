@@ -1,0 +1,180 @@
+//! `PlaneStore` — the decode-once cache of dense layer planes that
+//! serving cold start provisions parameters from.
+//!
+//! Engine construction needs every quantized layer's dense weights
+//! TWICE: once for the decode-manifest params and once for the
+//! prefill-manifest params (prefill always runs the dense graph on
+//! dequantized weights). Before this store existed each
+//! `build_params` call decoded every layer for itself, so the
+//! dominant cost of an artifact cold start was paid double. Now
+//! [`PlaneStore::build_for`] takes the union of `.w` params across
+//! all consuming manifests, decodes each covered layer exactly once
+//! in one pool fan-out (each layer's own decode is block-parallel
+//! inline via the pool's re-entrancy guard), and
+//! [`crate::serve::Backend::build_params_with`] pulls finished planes
+//! out of the store via [`PlaneStore::claim`] — which counts how many
+//! manifests reference each layer, clones for every consumer but the
+//! last, and MOVES the tensor to the last one. A single-manifest
+//! store (the `build_params_from` wrapper) therefore keeps the old
+//! zero-copy handoff, and a decode+prefill store pays exactly one
+//! clone per layer instead of one decode per manifest.
+//!
+//! The decode-once contract is instrumented: the store counts its
+//! decodes ([`PlaneStore::decode_count`]) and the kernel-level
+//! [`crate::quant::decode::dense_decode_count`] counter lets tests
+//! and `micro_hotpaths` assert that a whole engine-construction pass
+//! performed exactly one dense decode per quantized layer.
+//!
+//! All three [`QuantSource`] variants flow through here — in-memory
+//! model, loaded artifact, and on-disk
+//! [`crate::quant::reader::ArtifactReader`] (whose per-layer ranged
+//! reads happen inside the same fan-out, so a lazy cold start
+//! overlaps I/O, checksum verification, and decode across layers).
+
+use super::backend::QuantSource;
+use crate::model::Manifest;
+use crate::tensor::Tensor;
+use anyhow::Result;
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// Dense decoded layer planes keyed by layer base name (the
+/// manifest's `<base>.w`), each tagged with how many claims remain.
+pub struct PlaneStore {
+    /// (plane, remaining claims); the entry is removed — and the
+    /// tensor moved out — on its last claim
+    planes: Mutex<HashMap<String, (Tensor, usize)>>,
+    decoded: usize,
+}
+
+impl PlaneStore {
+    /// A store with no planes (dense serving without a quantized
+    /// source).
+    pub fn empty() -> PlaneStore {
+        PlaneStore { planes: Mutex::new(HashMap::new()), decoded: 0 }
+    }
+
+    /// Decode every layer that appears as a `<base>.w` param in ANY of
+    /// `manifests` and is covered by `src` — each exactly once, in one
+    /// pool fan-out over the deduplicated union. Each plane's claim
+    /// budget is the number of manifests that reference it, so
+    /// [`PlaneStore::claim`] can move (not clone) the tensor to its
+    /// last consumer.
+    pub fn build_for(src: QuantSource<'_>, manifests: &[&Manifest]) -> Result<PlaneStore> {
+        let mut names: Vec<&str> = Vec::new();
+        let mut uses: HashMap<&str, usize> = HashMap::new();
+        for man in manifests {
+            for spec in &man.params {
+                if let Some(base) = spec.name.strip_suffix(".w") {
+                    if src.covers(base) {
+                        let n = uses.entry(base).or_insert(0);
+                        if *n == 0 {
+                            names.push(base);
+                        }
+                        *n += 1;
+                    }
+                }
+            }
+        }
+        let decoded: Vec<Result<Tensor>> =
+            crate::util::pool::par_map(names.len(), |i| src.dense_weight(names[i]));
+        let mut planes = HashMap::with_capacity(names.len());
+        for (base, t) in names.iter().zip(decoded) {
+            planes.insert(base.to_string(), (t?, uses[base]));
+        }
+        Ok(PlaneStore { decoded: planes.len(), planes: Mutex::new(planes) })
+    }
+
+    /// Take one claim on layer `base`'s dense plane: a clone for every
+    /// consumer but the last, the owned tensor (no copy) for the last.
+    /// `None` once the claim budget is spent or if the store never
+    /// decoded the layer — callers fall back to decoding from the
+    /// source, so over-claiming stays correct (just not decode-once).
+    pub fn claim(&self, base: &str) -> Option<Tensor> {
+        let mut planes = self.planes.lock().unwrap();
+        if let Some((t, remaining)) = planes.get_mut(base) {
+            if *remaining > 1 {
+                *remaining -= 1;
+                return Some(t.clone());
+            }
+        } else {
+            return None;
+        }
+        // last claim: move the tensor out instead of cloning
+        planes.remove(base).map(|(t, _)| t)
+    }
+
+    /// Whether the store still holds a plane for `base` (claims left).
+    pub fn contains(&self, base: &str) -> bool {
+        self.planes.lock().unwrap().contains_key(base)
+    }
+
+    /// How many layer decodes this store performed at build — by
+    /// construction exactly one per covered layer, which is what makes
+    /// it the decode-once witness in tests.
+    pub fn decode_count(&self) -> usize {
+        self.decoded
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.decoded == 0
+    }
+
+    /// Number of layers decoded at build (not the remaining claims).
+    pub fn len(&self) -> usize {
+        self.decoded
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grids::registry::GridRegistry;
+    use crate::grids::GridKind;
+    use crate::model::fixture;
+    use crate::quant::higgs::HiggsQuantizer;
+    use crate::quant::QuantizedModel;
+
+    #[test]
+    fn union_decodes_once_and_claims_count_manifests() {
+        let w = fixture::tiny_weights(3);
+        let reg = GridRegistry::new();
+        let q = HiggsQuantizer::new(reg.get(GridKind::Higgs, 16, 2), 16, 1);
+        let qm = QuantizedModel::quantize_all(&w, &q);
+        let man =
+            Manifest::parse(&fixture::dense_manifest_text(&fixture::tiny_config())).unwrap();
+        let before = crate::quant::decode::dense_decode_count();
+        // the same manifest twice: the union still decodes each layer
+        // once, and each plane carries TWO claims
+        let store = PlaneStore::build_for(QuantSource::Model(&qm), &[&man, &man]).unwrap();
+        let delta = crate::quant::decode::dense_decode_count() - before;
+        assert_eq!(store.decode_count(), qm.layers.len());
+        // NOTE: other tests in this binary may decode concurrently, so
+        // only a lower bound is safe on the global counter here; the
+        // exact-delta assertion lives in tests/prop_reader.rs where
+        // decoding tests serialize on a shared lock.
+        assert!(delta >= qm.layers.len() as u64);
+        for l in &qm.layers {
+            let want = l.dequantize().data;
+            let first = store.claim(&l.name).expect("first claim (clone)");
+            assert!(store.contains(&l.name), "one claim left after the first");
+            let second = store.claim(&l.name).expect("second claim (move)");
+            assert_eq!(first.data, want, "{}", l.name);
+            assert_eq!(second.data, want, "{}", l.name);
+            // budget spent: further claims miss (callers fall back)
+            assert!(store.claim(&l.name).is_none());
+            assert!(!store.contains(&l.name));
+        }
+        assert!(store.claim("nonexistent").is_none());
+        assert!(!store.is_empty());
+        assert_eq!(store.len(), qm.layers.len());
+    }
+
+    #[test]
+    fn empty_store_for_dense_serving() {
+        let s = PlaneStore::empty();
+        assert!(s.is_empty());
+        assert_eq!(s.decode_count(), 0);
+        assert!(s.claim("anything").is_none());
+    }
+}

@@ -1,0 +1,484 @@
+//! Property tests for the lazy artifact reader + sharded cold start +
+//! decode-once plane provisioning (`quant/reader.rs`,
+//! `serve/planes.rs`):
+//!
+//! 1. per-layer lazy loads are **bit-for-bit** equal to the full
+//!    `QuantArtifact::load` across every quantizer kind (HIGGS
+//!    rotated, scalar LUT, RTN, HQQ, GPTQ uniform + GPTQ-HIGGS), for
+//!    v2 and legacy v1 files and for f16 scale planes;
+//! 2. the union of all shards covers every layer exactly once (both
+//!    strategies, random sizes), and a shard's cold start reads only
+//!    its own plane byte ranges while producing dense params
+//!    bit-identical to the unsharded load;
+//! 3. truncated / bit-flipped plane regions ERROR on the lazy path —
+//!    they never panic — and corruption in one layer's plane does not
+//!    poison loads of other layers (per-plane checksums);
+//! 4. `PlaneStore` decodes each quantized layer exactly ONCE for the
+//!    union of the decode + prefill manifests (counter-asserted), and
+//!    both param assemblies drawn from it are bit-identical to the
+//!    independent double-decode path.
+//!
+//! Tests that decode share one lock so the process-wide
+//! `dense_decode_count` deltas in test 4 are exact.
+
+use higgs::grids::registry::GridRegistry;
+use higgs::grids::GridKind;
+use higgs::model::{fixture, Manifest};
+use higgs::quant::artifact::{QuantArtifact, ScaleDtype};
+use higgs::quant::gptq::{CalibratedGptq, GptqQuantizer};
+use higgs::quant::higgs::HiggsQuantizer;
+use higgs::quant::hqq::HqqQuantizer;
+use higgs::quant::lut::LutQuantizer;
+use higgs::quant::reader::{ArtifactReader, ShardSpec};
+use higgs::quant::rtn::RtnQuantizer;
+use higgs::quant::{QuantizedLayer, QuantizedModel, Quantizer};
+use higgs::serve::{Backend, PlaneStore, QuantSource};
+use higgs::tensor::Tensor;
+use higgs::util::propcheck::forall;
+use higgs::util::prng::Rng;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::{Mutex, OnceLock};
+
+/// One registry per test binary — CLVQ grids are expensive to train.
+fn registry() -> &'static GridRegistry {
+    static REG: OnceLock<GridRegistry> = OnceLock::new();
+    REG.get_or_init(GridRegistry::new)
+}
+
+/// Serializes every decoding test in this binary, so the exact
+/// process-global `dense_decode_count` deltas in the decode-once test
+/// cannot be inflated by a concurrently running sibling test.
+fn decode_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn to_bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn tmp_path(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("higgs_prop_reader_{}_{tag}.qa", std::process::id()))
+}
+
+/// A 6-layer model exercising every payload an artifact can carry:
+/// rotated HIGGS, scalar LUT, RTN, HQQ, GPTQ uniform, GPTQ-HIGGS.
+fn all_kinds_model(seed: u64) -> QuantizedModel {
+    let reg = registry();
+    let mut rng = Rng::new(seed);
+    let mut w = |k: usize, n: usize| Tensor::from_vec(&[k, n], rng.normal_vec(k * n));
+    let layers: Vec<QuantizedLayer> = vec![
+        HiggsQuantizer::new(reg.get(GridKind::Higgs, 16, 2), 16, 7).quantize("higgs", &w(64, 12)),
+        LutQuantizer::new(reg.get(GridKind::Nf, 16, 1), 16).quantize("lut", &w(32, 20)),
+        RtnQuantizer::new(3, 16).quantize("rtn", &w(32, 8)),
+        HqqQuantizer::new(4, 16).quantize("hqq", &w(32, 10)),
+        CalibratedGptq { inner: GptqQuantizer::uniform(3, 16), hessians: HashMap::new() }
+            .quantize("gptq", &w(32, 6)),
+        CalibratedGptq {
+            inner: GptqQuantizer::higgs(reg.get(GridKind::Higgs, 16, 2), 16, 7),
+            hessians: HashMap::new(),
+        }
+        .quantize("gptq_higgs", &w(64, 6)),
+    ];
+    QuantizedModel::from_layers(layers)
+}
+
+fn assert_lazy_equals_full(path: &std::path::Path) {
+    let full = QuantArtifact::load(path).unwrap();
+    let reader = ArtifactReader::open(path).unwrap();
+    assert_eq!(reader.config, full.config);
+    assert_eq!(reader.entries().len(), full.layers.len());
+    assert_eq!(
+        reader.packed_avg_bits().to_bits(),
+        full.packed_avg_bits().to_bits(),
+        "manifest-side bit accounting diverged"
+    );
+    for want in &full.layers {
+        let got = reader.load_layer(&want.name).unwrap();
+        assert_eq!(got.spec, want.spec, "spec diverged for {}", want.name);
+        assert_eq!(got.t2, want.t2, "t2 diverged for {}", want.name);
+        assert_eq!(
+            got.to_layer().unwrap().packed_codes(),
+            want.to_layer().unwrap().packed_codes(),
+            "packed plane diverged for {}",
+            want.name
+        );
+        assert_eq!(
+            to_bits(&got.dequantize().data),
+            to_bits(&want.dequantize().data),
+            "lazy dequantize diverged for {}",
+            want.name
+        );
+    }
+    // the all-layers lazy load is the full load
+    let all = reader.load_all().unwrap();
+    assert_eq!(all.layers.len(), full.layers.len());
+    assert_eq!(all.packed_avg_bits().to_bits(), full.packed_avg_bits().to_bits());
+}
+
+#[test]
+fn lazy_load_equals_full_load_all_kinds() {
+    let _g = decode_lock();
+    let qm = all_kinds_model(1);
+    let art = QuantArtifact::from_model("kinds", &qm);
+    // v2 (default writer)
+    let p = tmp_path("kinds_v2");
+    art.save(&p).unwrap();
+    assert_lazy_equals_full(&p);
+    let _ = std::fs::remove_file(&p);
+    // legacy v1 image: lazy loads still work (trailer verified at open)
+    let p = tmp_path("kinds_v1");
+    std::fs::write(&p, art.to_bytes_v1()).unwrap();
+    let r = ArtifactReader::open(&p).unwrap();
+    assert_eq!(r.version(), 1);
+    // v1 pays one full-file pass at open — the counter reflects it
+    assert!(r.bytes_read() >= r.file_len());
+    assert_lazy_equals_full(&p);
+    let _ = std::fs::remove_file(&p);
+    // f16 scale planes: lazy and full loads upcast IDENTICALLY
+    let p = tmp_path("kinds_f16");
+    art.save_with(&p, ScaleDtype::F16).unwrap();
+    let r = ArtifactReader::open(&p).unwrap();
+    assert_eq!(r.scale_dtype(), ScaleDtype::F16);
+    assert_lazy_equals_full(&p);
+    let _ = std::fs::remove_file(&p);
+}
+
+#[test]
+fn f16_scale_error_is_bounded() {
+    let _g = decode_lock();
+    // property: the f16 round trip of the scale planes keeps the
+    // dequantized weights within the half-precision half-ulp envelope
+    // of the f32 artifact. LUT payloads are LINEAR in their one scale
+    // plane (and the inverse RHT permutes/adds within a column, which
+    // preserves the Frobenius norm up to sign flips), so the bound is
+    // the clean relative 2⁻¹¹.
+    forall("f16 dequantize error bounded (LUT/HIGGS)", 12, |g| {
+        let reg = registry();
+        let k = *g.choose(&[32usize, 64]);
+        let n = g.usize_in(2, 16);
+        let w = Tensor::from_vec(&[k, n], g.vec_normal(k * n));
+        let ql = if g.rng().next_u64() % 2 == 0 {
+            HiggsQuantizer::new(reg.get(GridKind::Higgs, 16, 2), 16, g.rng().next_u64())
+                .quantize("l", &w)
+        } else {
+            LutQuantizer::new(reg.get(GridKind::Nf, 16, 1), 16).quantize("l", &w)
+        };
+        let art = QuantArtifact::from_model("p", &QuantizedModel::from_layers(vec![ql]));
+        let exact = QuantArtifact::from_bytes(&art.to_bytes()).unwrap();
+        let approx =
+            QuantArtifact::from_bytes(&art.to_bytes_with(ScaleDtype::F16).unwrap()).unwrap();
+        let (de, da) = (exact.layers[0].dequantize(), approx.layers[0].dequantize());
+        let num: f64 = de
+            .data
+            .iter()
+            .zip(&da.data)
+            .map(|(&x, &y)| ((x - y) as f64).powi(2))
+            .sum::<f64>()
+            .sqrt();
+        let den: f64 = de.data.iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt();
+        assert!(
+            num <= 2f64.powi(-11) * den + 1e-9,
+            "f16 scale error out of bound: {num} vs {den}"
+        );
+    });
+
+    // uniform payloads round BOTH planes (step and zero), so the
+    // elementwise envelope is |Δw| ≤ 2⁻¹¹·(|w| + 1.001·step·|zero|)
+    // (+ a subnormal absolute floor): w = (c − z)·s, and each factor
+    // carries at most half-ulp relative error
+    forall("f16 dequantize error bounded (uniform)", 12, |g| {
+        let k = 32usize;
+        let n = g.usize_in(2, 12);
+        let w = Tensor::from_vec(&[k, n], g.vec_normal(k * n));
+        let ql = RtnQuantizer::new(*g.choose(&[3u32, 4, 8]), 16).quantize("l", &w);
+        let art = QuantArtifact::from_model("p", &QuantizedModel::from_layers(vec![ql]));
+        let exact = QuantArtifact::from_bytes(&art.to_bytes()).unwrap();
+        let approx =
+            QuantArtifact::from_bytes(&art.to_bytes_with(ScaleDtype::F16).unwrap()).unwrap();
+        let s = &exact.layers[0];
+        let (de, da) = (s.dequantize(), approx.layers[0].dequantize());
+        let higgs::quant::artifact::PlaneData::Uniform { steps, zeros, .. } = &s.plane else {
+            panic!("expected uniform plane");
+        };
+        let (sk, sn, sg) = (s.k, s.n_out, s.g);
+        for kk in 0..sk {
+            for j in 0..sn {
+                let i = kk * sn + j;
+                let (x, y) = (de.data[i] as f64, da.data[i] as f64);
+                let gi = kk / sg;
+                let step = steps[gi * sn + j].abs() as f64;
+                let zero = zeros[gi * sn + j].abs() as f64;
+                let bound = 2f64.powi(-11) * (x.abs() + 1.001 * step * zero) + 1e-7;
+                assert!(
+                    (x - y).abs() <= bound,
+                    "uniform f16 error out of bound at ({kk},{j}): {x} vs {y} (bound {bound})"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn shards_partition_every_layer_exactly_once() {
+    forall("shard union is a partition", 200, |g| {
+        let total = g.usize_in(0, 40);
+        let count = g.usize_in(1, 9);
+        let rr = g.rng().next_u64() % 2 == 0;
+        let mut seen = vec![0usize; total];
+        for index in 0..count {
+            let shard = if rr {
+                ShardSpec::RoundRobin { index, count }
+            } else {
+                ShardSpec::Range { index, count }
+            };
+            for l in shard.layer_indices(total) {
+                seen[l] += 1;
+            }
+            // contains() agrees with layer_indices()
+            for l in 0..total {
+                assert_eq!(
+                    shard.contains(l, total),
+                    shard.layer_indices(total).contains(&l)
+                );
+            }
+        }
+        assert!(
+            seen.iter().all(|&c| c == 1),
+            "total={total} count={count} rr={rr}: {seen:?}"
+        );
+    });
+}
+
+#[test]
+fn shard_reads_only_its_ranges_and_matches_unsharded() {
+    let _g = decode_lock();
+    let qm = all_kinds_model(3);
+    let art = QuantArtifact::from_model("shards", &qm);
+    let p = tmp_path("shards");
+    art.save(&p).unwrap();
+    let full = QuantArtifact::load(&p).unwrap();
+    for shard in [
+        ShardSpec::Range { index: 0, count: 2 },
+        ShardSpec::Range { index: 1, count: 2 },
+        ShardSpec::RoundRobin { index: 1, count: 3 },
+    ] {
+        // a FRESH reader per shard so bytes_read isolates this shard
+        let reader = ArtifactReader::open(&p).unwrap();
+        let after_open = reader.bytes_read();
+        let slice = reader.load_shard(&shard).unwrap();
+        let stats = reader.shard_stats(&shard);
+        assert_eq!(slice.layers.len(), stats.layers);
+        // plane I/O == exactly this shard's plane bytes, nothing more
+        assert_eq!(
+            reader.bytes_read() - after_open,
+            stats.plane_bytes,
+            "shard {shard} read outside its plane ranges"
+        );
+        assert!(
+            reader.bytes_read() < reader.file_len(),
+            "shard {shard} cold start should not read the whole file"
+        );
+        // dense params bit-identical to the unsharded load
+        for s in &slice.layers {
+            let want = full.get(&s.name).unwrap();
+            assert_eq!(
+                to_bits(&s.dequantize().data),
+                to_bits(&want.dequantize().data),
+                "shard {shard}: dense params diverged for {}",
+                s.name
+            );
+        }
+    }
+    // union across one partition == every layer exactly once
+    let reader = ArtifactReader::open(&p).unwrap();
+    let mut names = Vec::new();
+    for index in 0..2 {
+        let slice = reader.load_shard(&ShardSpec::Range { index, count: 2 }).unwrap();
+        names.extend(slice.layers.iter().map(|s| s.name.clone()));
+    }
+    let mut want: Vec<String> = full.layers.iter().map(|l| l.name.clone()).collect();
+    names.sort();
+    want.sort();
+    assert_eq!(names, want);
+    let _ = std::fs::remove_file(&p);
+}
+
+#[test]
+fn corrupt_plane_reads_error_never_panic() {
+    let _g = decode_lock();
+    let qm = all_kinds_model(5);
+    let art = QuantArtifact::from_model("corrupt", &qm);
+    let bytes = art.to_bytes();
+    let p = tmp_path("corrupt");
+
+    // locate one layer's plane region via a clean reader
+    std::fs::write(&p, &bytes).unwrap();
+    let reader = ArtifactReader::open(&p).unwrap();
+    let victim = reader.entries()[2].name().to_string();
+    let (lo, hi) = {
+        let e = reader.entry(&victim).unwrap();
+        reader.plane_range(e)
+    };
+    drop(reader);
+
+    // flip one byte INSIDE the victim's plane: open still succeeds
+    // (header + manifest + grids untouched), the victim's lazy load
+    // errors on its per-plane checksum, every OTHER layer still loads
+    // bit-for-bit
+    let mut corrupt = bytes.clone();
+    corrupt[(lo + (hi - lo) / 2) as usize] ^= 0x20;
+    std::fs::write(&p, &corrupt).unwrap();
+    let reader = ArtifactReader::open(&p).unwrap();
+    let err = reader.load_layer(&victim).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("checksum"),
+        "expected a checksum error, got: {err:#}"
+    );
+    for e in reader.entries() {
+        if e.name() != victim {
+            reader.load_layer(e.name()).unwrap_or_else(|e2| {
+                panic!("uncorrupted layer {} failed to load: {e2:#}", e.name())
+            });
+        }
+    }
+    // the full loader rejects the same file outright (trailer)
+    assert!(QuantArtifact::load(&p).is_err());
+
+    // corruption in the manifest region errors at open
+    let mut corrupt = bytes.clone();
+    corrupt[40] ^= 0x01; // inside the manifest JSON
+    std::fs::write(&p, &corrupt).unwrap();
+    assert!(ArtifactReader::open(&p).is_err());
+
+    // truncations error at open (never panic)
+    for cut in [0usize, 7, 13, 27, bytes.len() / 2, bytes.len() - 5] {
+        std::fs::write(&p, &bytes[..cut]).unwrap();
+        assert!(ArtifactReader::open(&p).is_err(), "cut at {cut}");
+    }
+
+    // v1 files: any flip is caught by the streaming trailer pass at open
+    let v1 = art.to_bytes_v1();
+    let mut corrupt = v1.clone();
+    let at = v1.len() / 2;
+    corrupt[at] ^= 0x10;
+    std::fs::write(&p, &corrupt).unwrap();
+    assert!(ArtifactReader::open(&p).is_err());
+
+    let _ = std::fs::remove_file(&p);
+}
+
+#[test]
+fn plane_store_decodes_each_layer_once_across_manifests() {
+    let _g = decode_lock();
+    // tiny fixture model quantized with alternating grids (mixed), the
+    // dense manifest standing in for BOTH the decode and prefill
+    // manifests of a Mixed-backend engine construction
+    let w = fixture::tiny_weights(9);
+    let reg = registry();
+    let q2 = HiggsQuantizer::new(reg.get(GridKind::Higgs, 16, 2), 16, 1);
+    let q4 = HiggsQuantizer::new(reg.get(GridKind::Higgs, 256, 2), 16, 1);
+    let names = w.linear_names();
+    let assignment: Vec<(String, &dyn Quantizer)> = names
+        .iter()
+        .enumerate()
+        .map(|(i, n)| {
+            let q: &dyn Quantizer = if i % 2 == 0 { &q2 } else { &q4 };
+            (n.clone(), q)
+        })
+        .collect();
+    let qm = QuantizedModel::quantize_mixed(&w, &assignment);
+    let man = Manifest::parse(&fixture::dense_manifest_text(&fixture::tiny_config())).unwrap();
+    let nlayers = qm.layers.len() as u64;
+    let src = QuantSource::Model(&qm);
+
+    // the engine-construction shape: ONE store over both manifests,
+    // then two param assemblies — exactly nlayers decodes total
+    let before = higgs::quant::decode::dense_decode_count();
+    let store = PlaneStore::build_for(src, &[&man, &man]).unwrap();
+    let decode_args = Backend::Mixed.build_params_with(&man, &w, Some(src), &store).unwrap();
+    let prefill_args = Backend::Dense.build_params_with(&man, &w, Some(src), &store).unwrap();
+    let shared_delta = higgs::quant::decode::dense_decode_count() - before;
+    assert_eq!(
+        shared_delta, nlayers,
+        "shared-store provisioning must decode each layer exactly once"
+    );
+    assert_eq!(store.decode_count() as u64, nlayers);
+
+    // the pre-store baseline decodes per manifest: 2 × nlayers
+    let before = higgs::quant::decode::dense_decode_count();
+    let decode_ref = Backend::Mixed.build_params_from(&man, &w, Some(src)).unwrap();
+    let prefill_ref = Backend::Dense.build_params_from(&man, &w, Some(src)).unwrap();
+    let double_delta = higgs::quant::decode::dense_decode_count() - before;
+    assert_eq!(double_delta, 2 * nlayers, "independent builds decode per manifest");
+
+    // and the store-provisioned params are bit-identical to the
+    // double-decode path, for both manifests
+    for (got, want) in
+        decode_args.iter().zip(&decode_ref).chain(prefill_args.iter().zip(&prefill_ref))
+    {
+        match (got, want) {
+            (higgs::runtime::HostArg::F32(a, da), higgs::runtime::HostArg::F32(b, db)) => {
+                assert_eq!(da, db);
+                assert_eq!(to_bits(a), to_bits(b));
+            }
+            (higgs::runtime::HostArg::I32(a, da), higgs::runtime::HostArg::I32(b, db)) => {
+                assert_eq!(da, db);
+                assert_eq!(a, b);
+            }
+            _ => panic!("param kind diverged"),
+        }
+    }
+}
+
+#[test]
+fn reader_source_provisions_identical_params_decode_once() {
+    let _g = decode_lock();
+    // the sharded/lazy cold-start acceptance path: an on-disk reader
+    // flows through the SAME decode-once provisioning as the in-memory
+    // model, bit-for-bit
+    let w = fixture::tiny_weights(13);
+    let reg = registry();
+    let q2 = HiggsQuantizer::new(reg.get(GridKind::Higgs, 16, 2), 16, 2);
+    let q4 = HiggsQuantizer::new(reg.get(GridKind::Higgs, 256, 2), 16, 2);
+    let names = w.linear_names();
+    let assignment: Vec<(String, &dyn Quantizer)> = names
+        .iter()
+        .enumerate()
+        .map(|(i, n)| {
+            let q: &dyn Quantizer = if i % 2 == 0 { &q2 } else { &q4 };
+            (n.clone(), q)
+        })
+        .collect();
+    let qm = QuantizedModel::quantize_mixed(&w, &assignment);
+    let man = Manifest::parse(&fixture::dense_manifest_text(&fixture::tiny_config())).unwrap();
+    let p = tmp_path("reader_src");
+    QuantArtifact::from_model("tiny", &qm).save(&p).unwrap();
+    let reader = ArtifactReader::open(&p).unwrap();
+    reader.validate_against(&man).unwrap();
+
+    let before = higgs::quant::decode::dense_decode_count();
+    let store = PlaneStore::build_for(QuantSource::Reader(&reader), &[&man, &man]).unwrap();
+    let from_reader = Backend::Mixed
+        .build_params_with(&man, &w, Some(QuantSource::Reader(&reader)), &store)
+        .unwrap();
+    assert_eq!(
+        higgs::quant::decode::dense_decode_count() - before,
+        qm.layers.len() as u64
+    );
+    let from_model = Backend::Mixed.build_params(&man, &w, Some(&qm)).unwrap();
+    for (a, b) in from_reader.iter().zip(&from_model) {
+        match (a, b) {
+            (higgs::runtime::HostArg::F32(x, dx), higgs::runtime::HostArg::F32(y, dy)) => {
+                assert_eq!(dx, dy);
+                assert_eq!(to_bits(x), to_bits(y));
+            }
+            _ => panic!("expected f32 params"),
+        }
+    }
+    // validate_against catches a manifest the artifact does not cover
+    let bad = Manifest::parse("artifact x\nparam extra.w f32 4,4\n").unwrap();
+    assert!(reader.validate_against(&bad).is_err());
+    let _ = std::fs::remove_file(&p);
+}
