@@ -97,8 +97,22 @@ def backend_meta(spec):
     ]
 
 
-def kv_shape(cfg, b):
-    return (cfg.n_layers, b, cfg.n_heads, cfg.seq, cfg.d_head)
+def slot_kv_shape(cfg):
+    """One batch slot's K (or V) cache: [L,H,S,Dh].
+
+    The serving ABI is slot-strided — every executable takes/returns one
+    such literal per batch slot (`kcache_0..B-1`, `vcache_0..B-1`)
+    instead of a monolithic [L,B,H,S,Dh] pair, so admission uploads only
+    the slots that changed.
+    """
+    return (cfg.n_layers, cfg.n_heads, cfg.seq, cfg.d_head)
+
+
+def slot_kv_specs(cfg, b):
+    """Per-slot KV specs, k-block then v-block: kcache_0..B-1, vcache_0..B-1."""
+    shape = slot_kv_shape(cfg)
+    return ([(f"kcache_{i}", "f32", shape) for i in range(b)]
+            + [(f"vcache_{i}", "f32", shape) for i in range(b)])
 
 
 def export_model_graphs(ex, cfg):
@@ -123,25 +137,21 @@ def export_serving_graphs(ex, cfg, batches, specs):
     for b in batches:
         man = M.manifest(cfg, M.DENSE)
         ex.emit(
-            f"prefill_dense_{cfg.name}_b{b}", M.make_prefill_fn(cfg),
+            f"prefill_dense_{cfg.name}_b{b}", M.make_prefill_fn(cfg, slots=b),
             [("tokens", "i32", (b, cfg.seq))], man,
-            [("logits", "f32", (b, cfg.seq, cfg.vocab)),
-             ("kcache", "f32", kv_shape(cfg, b)),
-             ("vcache", "f32", kv_shape(cfg, b))],
+            [("logits", "f32", (b, cfg.seq, cfg.vocab))] + slot_kv_specs(cfg, b),
             [("config", cfg.name), ("kind", "prefill"), ("batch", b)]
             + backend_meta(M.DENSE),
         )
         for spec in specs:
             man = M.manifest(cfg, spec)
             ex.emit(
-                f"decode_{spec.tag()}_{cfg.name}_b{b}", M.make_decode_fn(cfg, spec),
-                [("token", "i32", (b,)), ("pos", "i32", (b,)),
-                 ("kcache", "f32", kv_shape(cfg, b)),
-                 ("vcache", "f32", kv_shape(cfg, b))],
+                f"decode_{spec.tag()}_{cfg.name}_b{b}",
+                M.make_decode_fn(cfg, spec, slots=b),
+                [("token", "i32", (b,)), ("pos", "i32", (b,))]
+                + slot_kv_specs(cfg, b),
                 man,
-                [("logits", "f32", (b, cfg.vocab)),
-                 ("kcache", "f32", kv_shape(cfg, b)),
-                 ("vcache", "f32", kv_shape(cfg, b))],
+                [("logits", "f32", (b, cfg.vocab))] + slot_kv_specs(cfg, b),
                 [("config", cfg.name), ("kind", "decode"), ("batch", b)]
                 + backend_meta(spec),
             )

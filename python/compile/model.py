@@ -380,18 +380,53 @@ def make_grad_fn(cfg):
     return fn
 
 
-def make_prefill_fn(cfg, spec=DENSE):
+def make_prefill_fn(cfg, spec=DENSE, slots=None):
+    """Prefill wrapper.
+
+    slots=None keeps the legacy monolithic ABI (kcache/vcache
+    [L,B,H,S,Dh]); slots=B emits the slot-strided ABI the serving
+    engine requires: one [L,H,S,Dh] output per batch slot, so the rust
+    side can install exactly the slots it admitted — O(new slots)
+    admission instead of re-uploading the whole cache.
+    """
+
     def fn(tokens, *flat):
         params, shared = _split(cfg, spec, flat)
-        return prefill(cfg, spec, params, shared, tokens)
+        logits, kc, vc = prefill(cfg, spec, params, shared, tokens)
+        if slots is None:
+            return logits, kc, vc
+        ks = tuple(kc[:, i] for i in range(slots))   # each [L,H,S,Dh]
+        vs = tuple(vc[:, i] for i in range(slots))
+        return (logits, *ks, *vs)
 
     return fn
 
 
-def make_decode_fn(cfg, spec=DENSE):
-    def fn(token, pos, kcache, vcache, *flat):
+def make_decode_fn(cfg, spec=DENSE, slots=None):
+    """Decode wrapper; see make_prefill_fn for the slots convention.
+
+    Slot-strided inputs arrive as (token, pos, kcache_0..B-1,
+    vcache_0..B-1, *params); they are stacked back to [L,B,H,S,Dh] for
+    decode_step and re-split per slot on the way out. XLA sees the same
+    fused graph either way — the slicing is free at the tuple boundary.
+    """
+
+    def fn(token, pos, *rest):
+        if slots is None:
+            kcache, vcache, flat = rest[0], rest[1], rest[2:]
+        else:
+            ks, vs = rest[:slots], rest[slots : 2 * slots]
+            flat = rest[2 * slots :]
+            kcache = jnp.stack(ks, axis=1)           # [L,B,H,S,Dh]
+            vcache = jnp.stack(vs, axis=1)
         params, shared = _split(cfg, spec, flat)
-        return decode_step(cfg, spec, params, shared, token, pos, kcache, vcache)
+        logits, kc, vc = decode_step(cfg, spec, params, shared, token, pos,
+                                     kcache, vcache)
+        if slots is None:
+            return logits, kc, vc
+        return (logits,
+                *(kc[:, i] for i in range(slots)),
+                *(vc[:, i] for i in range(slots)))
 
     return fn
 

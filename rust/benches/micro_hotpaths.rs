@@ -445,6 +445,83 @@ fn main() {
         }
     }
 
+    // KV admission: slot-strided vs the full-splice reference, across
+    // live batch sizes. The acceptance claim is in the BYTE accounting
+    // (asserted before timing): strided admission moves the same bytes
+    // per admit at batch 4 and batch 16, the full splice scales with
+    // the whole cache.
+    {
+        use higgs::serve::{FullKv, KvLayout, SlotKv};
+        let layout = KvLayout { layers: 4, heads: 4, seq: 64, d_head: 16 };
+        let mut strided_bytes_per_admit = Vec::new();
+        for batch in [4usize, 16] {
+            let kc = rng.normal_vec(layout.full_elems(batch));
+            let vc = rng.normal_vec(layout.full_elems(batch));
+            let mut s = SlotKv::new(layout, batch).unwrap();
+            let mut f = FullKv::new(layout, batch).unwrap();
+            s.admit_from_full(&[0], &kc, &vc).unwrap();
+            f.admit_reference(&[0], &kc, &vc).unwrap();
+            strided_bytes_per_admit.push(s.admit_bytes);
+            assert_eq!(
+                f.admit_bytes,
+                4 * layout.full_elems(batch) as u64 * 4,
+                "full splice must move the whole cache"
+            );
+            // one-slot admission, timed (bytes per iteration = what one
+            // admit moves — flat for strided, growing for full-splice)
+            r.bench_items(&format!("kv_admit_strided_b{batch}"), 1.0, || {
+                s.admit_from_full(&[0], &kc, &vc).unwrap()
+            });
+            r.bench_items(&format!("kv_admit_fullsplice_b{batch}"), 1.0, || {
+                f.admit_reference(&[0], &kc, &vc).unwrap()
+            });
+        }
+        assert_eq!(
+            strided_bytes_per_admit[0], strided_bytes_per_admit[1],
+            "strided admission bytes must be independent of the live batch size"
+        );
+        eprintln!(
+            "  -> strided admit moves {} bytes at batch 4 AND 16; full splice {} vs {}",
+            strided_bytes_per_admit[0],
+            4 * layout.full_elems(4) * 4,
+            4 * layout.full_elems(16) * 4,
+        );
+    }
+
+    // churn throughput: continuous batching on the strided path vs the
+    // drain-between-batches baseline on the full-splice path, same
+    // Poisson-ish workload with mixed prompt lengths. Gates before
+    // timing: everything completes, continuous actually admits
+    // mid-batch, strided moves fewer admission bytes.
+    {
+        use higgs::serve::{run_churn, ChurnConfig, KvMode};
+        let base = ChurnConfig {
+            long_frac: 0.25,
+            mean_gap_steps: 1.5,
+            ..Default::default()
+        };
+        let cont = ChurnConfig { mode: KvMode::Strided, ..base.clone() };
+        let drain = ChurnConfig { drain: true, mode: KvMode::FullSplice, ..base.clone() };
+        let both = run_churn(&ChurnConfig { mode: KvMode::Both, ..base.clone() }).unwrap();
+        let rc = run_churn(&cont).unwrap();
+        let rd = run_churn(&drain).unwrap();
+        assert_eq!(rc.completions, base.n_requests as u64);
+        assert_eq!(rd.completions, base.n_requests as u64);
+        assert!(rc.mid_batch_admissions > 0, "continuous run never admitted mid-batch");
+        assert_eq!(rd.mid_batch_admissions, 0);
+        assert!(rc.steps < rd.steps, "continuous must finish in fewer decode steps");
+        assert!(
+            both.admit_bytes_strided < both.admit_bytes_fullsplice,
+            "strided admission must move fewer bytes"
+        );
+        let toks = rc.total_generated as f64;
+        let m = r.bench_items("churn_continuous_strided", toks, || run_churn(&cont).unwrap());
+        eprintln!("  -> continuous+strided churn: {:.1} tok/s", m.throughput(toks));
+        let toks_d = rd.total_generated as f64;
+        let m = r.bench_items("churn_drain_fullsplice", toks_d, || run_churn(&drain).unwrap());
+        eprintln!("  -> drain+fullsplice baseline: {:.1} tok/s", m.throughput(toks_d));
+    }
+
     // machine-readable perf record (tracked across PRs)
     let json_path = std::env::var("HIGGS_BENCH_JSON")
         .unwrap_or_else(|_| "BENCH_hotpaths.json".to_string());

@@ -54,6 +54,7 @@ fn main() -> anyhow::Result<()> {
             max_new: (8, 16),
             mean_gap_ms: 20,
             seed: 7,
+            ..Default::default()
         },
         &corpus,
     );

@@ -43,7 +43,7 @@ pub fn table1_throughput(ctx: &ExpContext) -> Result<Table> {
     let n_req = if quick() { 6 } else { 24 };
     let mut t = Table::new(
         "Table 1: decode throughput (tok/s) by backend",
-        &["backend", "wbits", "batch", "tok/s", "p50_ms", "decode_steps"],
+        &["backend", "wbits", "batch", "tok/s", "p50_ms", "p99_ms", "queue_ms", "decode_steps"],
     );
     // backends: fp16 dense, uniform-4 (MARLIN), nf4 (unfused), flute 2/3/4
     let mut cases: Vec<(Backend, Option<QuantizedModel>, &str)> = Vec::new();
@@ -101,6 +101,8 @@ pub fn table1_throughput(ctx: &ExpContext) -> Result<Table> {
                 batch.to_string(),
                 format!("{:.1}", m.tok_per_sec()),
                 format!("{:.0}", m.latency_p50()),
+                format!("{:.0}", m.latency_p99()),
+                format!("{:.1}", m.mean_queue_ms()),
                 m.decode_steps.to_string(),
             ]);
         }

@@ -14,8 +14,13 @@
 //!                  [--serve [--requests 8] [--batch 1]]
 //! higgs serve-bench --config base --backend flute4|fp16|uniform4|nf4|mixed --batch 4
 //!                  [--requests 24] [--budget 3.25] [--artifact PATH]
+//!                  [--churn [--mean-gap-ms 15] [--long-frac 0.25] [--drain]]
 //!                  (budget applies to --backend mixed; --artifact cold-starts
-//!                   the mixed backend from a saved QuantArtifact)
+//!                   the mixed backend from a saved QuantArtifact; --churn
+//!                   replays an open-loop arrival stream with mixed prompt
+//!                   lengths through the continuous batcher — --drain keeps
+//!                   the same workload but only admits into an idle engine,
+//!                   the pre-slot-strided baseline)
 //! higgs serve-artifact --artifact PATH [--config base] [--batch 1] [--requests 8]
 //!                  [--shard i/n | i/n@rr]
 //!                  (--shard cold-starts ONE shard's layers with ranged
@@ -110,7 +115,10 @@ fn run(args: &Args) -> Result<()> {
 }
 
 const HELP: &str = "higgs — LLM quantization via the Linearity Theorem (see README.md)
-commands: train, eval, quantize, calibrate, allocate, alloc-quantize, serve-bench, serve-artifact, shard-manifest, hessian, experiment";
+commands: train, eval, quantize, calibrate, allocate, alloc-quantize, serve-bench, serve-artifact, shard-manifest, generate, hessian, experiment
+serve-bench --churn replays an open-loop arrival stream (Poisson-ish gaps,
+mixed prompt lengths) through the continuous batcher; add --drain for the
+admit-only-when-idle baseline. See PERF.md section 10.";
 
 fn ckpt_path(engine: &Engine, cfg: &ModelConfig, args: &Args) -> std::path::PathBuf {
     match args.flags.get("ckpt").or_else(|| args.flags.get("out")) {
@@ -450,11 +458,24 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         Some(_) => None, // the artifact IS the quantized model
         None => backend_model(args, &ctx, &backend)?,
     };
+    // --churn: open-loop arrival stream with a long-prompt mixture,
+    // exercising admit-on-any-decode-step; --drain runs the same trace
+    // but only admits into an idle engine (the old batch-drain policy)
+    let churn = args.flags.contains_key("churn");
+    let drain = args.flags.contains_key("drain");
     let corpus = higgs::data::Corpus::new(ctx.cfg.vocab, ctx.cfg.seq, 1);
-    let trace = higgs::serve::trace::generate_trace(
-        &higgs::serve::TraceConfig { n_requests: n_req, ..Default::default() },
-        &corpus,
-    );
+    let tc = if churn {
+        higgs::serve::TraceConfig {
+            n_requests: n_req,
+            mean_gap_ms: args.get_usize("mean-gap-ms", 15)? as u64,
+            long_frac: args.get_f64("long-frac", 0.25)?,
+            long_prompt_len: (ctx.cfg.seq / 2, (2 * ctx.cfg.seq / 3).max(ctx.cfg.seq / 2)),
+            ..Default::default()
+        }
+    } else {
+        higgs::serve::TraceConfig { n_requests: n_req, ..Default::default() }
+    };
+    let trace = higgs::serve::trace::generate_trace(&tc, &corpus);
     let t0 = std::time::Instant::now();
     let mut ge = match &artifact {
         Some(art) => higgs::serve::GenerationEngine::from_artifact(
@@ -480,8 +501,26 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
             t0.elapsed().as_secs_f64()
         );
     }
-    let m = ge.run_closed_loop(trace)?;
-    println!("[{} b={batch}] {}", backend.label(), m.summary());
+    let m = if churn {
+        ge.run_open_loop(trace, drain)?
+    } else {
+        ge.run_closed_loop(trace)?
+    };
+    let tag = match (churn, drain) {
+        (true, true) => " churn/drain",
+        (true, false) => " churn",
+        _ => "",
+    };
+    println!("[{} b={batch}{tag}] {}", backend.label(), m.summary());
+    if churn {
+        // per-slot literals move device-side at admission; 0 means no
+        // host round-trip of resident slots (the old full-splice cost)
+        println!(
+            "admission KV host traffic: {} bytes over {} completions",
+            ge.kv_admit_bytes(),
+            m.completions.len(),
+        );
+    }
     Ok(())
 }
 
@@ -709,12 +748,12 @@ fn cmd_generate(args: &Args) -> Result<()> {
         qm.as_ref(),
     )?;
     let mut queue = std::collections::VecDeque::new();
-    queue.push_back(higgs::serve::Request {
+    queue.push_back(higgs::serve::QueuedRequest::now(higgs::serve::Request {
         id: 0,
         prompt: prompt.clone(),
         max_new: n_new,
         arrival_ms: 0,
-    });
+    }));
     let mut tokens = Vec::new();
     while queue.front().is_some() || ge.active_slots() > 0 {
         ge.admit(&mut queue)?;

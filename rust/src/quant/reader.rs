@@ -33,7 +33,7 @@ use anyhow::{bail, ensure, Context, Result};
 use std::io::{Read, Seek, SeekFrom};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 // ---------------------------------------------------------------------------
 // ShardSpec
@@ -198,6 +198,10 @@ pub struct ArtifactReader {
     entries: Vec<ReaderEntry>,
     index: std::collections::HashMap<String, usize>,
     bytes_read: AtomicU64,
+    /// decoded schemes, memoized per layer after the first
+    /// [`ArtifactReader::layer_scheme`] call — repeat accessors must
+    /// not re-read (or re-verify, or re-decode) the plane bytes
+    scheme_cache: Mutex<std::collections::HashMap<String, Arc<LayerScheme>>>,
 }
 
 impl ArtifactReader {
@@ -332,6 +336,7 @@ impl ArtifactReader {
             entries: Vec::new(),
             index: std::collections::HashMap::new(),
             bytes_read: AtomicU64::new(bytes_read),
+            scheme_cache: Mutex::new(std::collections::HashMap::new()),
         };
         for (lm, (loff, llen, lfnv)) in man.layers.into_iter().zip(entries) {
             // grid index range-checked up front so a bad manifest
@@ -423,6 +428,24 @@ impl ArtifactReader {
         let scheme = e.meta.to_scheme(plane);
         scheme.validate()?;
         Ok(scheme)
+    }
+
+    /// Memoized [`ArtifactReader::load_layer`]: the first call for a
+    /// layer pays the ranged read + checksum + decode; every later call
+    /// returns the cached scheme with NO disk I/O (`bytes_read` does
+    /// not move — pinned in `rust/tests/prop_reader.rs`). This is what
+    /// the `QuantSource::Reader` accessors go through: an engine
+    /// construction touches each layer's scheme several times (codes,
+    /// scales, signs…), which used to be that many full plane reads.
+    pub fn layer_scheme(&self, name: &str) -> Result<Arc<LayerScheme>> {
+        if let Some(s) = self.scheme_cache.lock().unwrap().get(name) {
+            return Ok(s.clone());
+        }
+        // load OUTSIDE the lock: concurrent first readers may duplicate
+        // the read, but never block each other on disk I/O
+        let scheme = Arc::new(self.load_layer(name)?);
+        let mut cache = self.scheme_cache.lock().unwrap();
+        Ok(cache.entry(name.to_string()).or_insert(scheme).clone())
     }
 
     /// Load every layer a shard owns, in artifact order.

@@ -6,6 +6,15 @@
 //! Artifacts are lowered with `return_tuple=True`, so every execution
 //! returns one tuple literal which we decompose into per-output
 //! literals in manifest order.
+//!
+//! Serving executables use a slot-strided KV ABI: instead of one
+//! monolithic `kcache`/`vcache` pair of shape `[L,B,H,S,Dh]`, decode
+//! takes (and prefill returns) `kcache_0..B-1` / `vcache_0..B-1`, one
+//! `[L,H,S,Dh]` literal per batch slot. Admitting a request then only
+//! uploads that slot's literals — O(new slots), not O(batch) — and the
+//! resident slots' handles move device-to-device untouched. The engine
+//! validates this ABI against the manifest at load time and rejects
+//! pre-slot-strided artifacts with a regeneration hint.
 
 use crate::model::manifest::{DType, Manifest};
 use anyhow::{bail, Context, Result};

@@ -69,17 +69,20 @@ impl<'a> QuantSource<'a> {
         match self {
             QuantSource::Model(m) => Ok(lookup(Some(*m), base)?.dequantize()),
             QuantSource::Artifact(a) => Ok(lookup_scheme(a, base)?.dequantize()),
-            QuantSource::Reader(r) => Ok(r.load_layer(base)?.dequantize()),
+            QuantSource::Reader(r) => Ok(Self::reader_scheme(r, base)?.dequantize()),
         }
     }
 
-    /// The layer's full scheme out of a lazy source (reader: one
-    /// ranged read). Used by the non-dense accessors below.
-    /// `load_layer` already distinguishes a genuinely-missing layer
+    /// The layer's full scheme out of a lazy source, through the
+    /// reader's per-layer memo: the FIRST accessor touching a layer
+    /// pays the ranged (checksummed) read + decode, every later one —
+    /// and an engine construction makes several per layer (codes,
+    /// scales, signs…) — hits the cache with no disk I/O.
+    /// `layer_scheme` already distinguishes a genuinely-missing layer
     /// from a checksum/I/O failure — no extra context here, it would
     /// mislabel corruption as absence.
-    fn reader_scheme(r: &ArtifactReader, base: &str) -> Result<LayerScheme> {
-        r.load_layer(base)
+    fn reader_scheme(r: &ArtifactReader, base: &str) -> Result<Arc<LayerScheme>> {
+        r.layer_scheme(base)
     }
 
     /// The layer's code plane widened to the i32 the executables take.

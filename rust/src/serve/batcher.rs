@@ -1,8 +1,12 @@
 //! Dynamic batcher: groups incoming requests into admission batches
 //! under a (max size, deadline) policy — the vLLM-style front end of
 //! the router. Pure logic (no XLA), so it is exhaustively testable.
+//!
+//! Requests are stamped at `push` ([`QueuedRequest`]) and carry that
+//! submission timestamp through the engine, so end-to-end latency
+//! includes time spent waiting here — not just time after admission.
 
-use super::trace::Request;
+use super::trace::{QueuedRequest, Request};
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
@@ -22,7 +26,7 @@ impl Default for BatcherConfig {
 
 pub struct Batcher {
     cfg: BatcherConfig,
-    pending: VecDeque<(Request, Instant)>,
+    pending: VecDeque<QueuedRequest>,
 }
 
 impl Batcher {
@@ -31,7 +35,7 @@ impl Batcher {
     }
 
     pub fn push(&mut self, req: Request) {
-        self.pending.push_back((req, Instant::now()));
+        self.pending.push_back(QueuedRequest::now(req));
     }
 
     pub fn pending(&self) -> usize {
@@ -40,19 +44,20 @@ impl Batcher {
 
     /// Release a batch if the policy says so: either `max_batch`
     /// requests are waiting, or the oldest has exceeded `max_wait`, or
-    /// `force` (engine idle) is set.
-    pub fn poll(&mut self, now: Instant, force: bool) -> Vec<Request> {
+    /// `force` (engine idle) is set. Released requests keep their
+    /// original submission timestamps.
+    pub fn poll(&mut self, now: Instant, force: bool) -> Vec<QueuedRequest> {
         let due = self
             .pending
             .front()
-            .map(|(_, t)| now.duration_since(*t) >= self.cfg.max_wait)
+            .map(|q| now.duration_since(q.enqueued) >= self.cfg.max_wait)
             .unwrap_or(false);
         if self.pending.is_empty() || (!due && !force && self.pending.len() < self.cfg.max_batch)
         {
             return Vec::new();
         }
         let n = self.pending.len().min(self.cfg.max_batch);
-        (0..n).map(|_| self.pending.pop_front().unwrap().0).collect()
+        (0..n).map(|_| self.pending.pop_front().unwrap()).collect()
     }
 }
 
@@ -77,7 +82,7 @@ mod tests {
         b.push(req(2));
         let out = b.poll(Instant::now(), false);
         assert_eq!(out.len(), 3);
-        assert_eq!(out[0].id, 0);
+        assert_eq!(out[0].req.id, 0);
     }
 
     #[test]
@@ -103,6 +108,18 @@ mod tests {
     }
 
     #[test]
+    fn submission_timestamp_survives_release() {
+        let mut b = Batcher::new(BatcherConfig::default());
+        let before = Instant::now();
+        b.push(req(0));
+        let after = Instant::now();
+        let out = b.poll(Instant::now(), true);
+        assert_eq!(out.len(), 1);
+        // the released request still carries its push-time stamp
+        assert!(out[0].enqueued >= before && out[0].enqueued <= after);
+    }
+
+    #[test]
     fn fifo_order_preserved() {
         forall("batcher fifo", 30, |g| {
             let n = g.usize_in(1, 40);
@@ -121,7 +138,7 @@ mod tests {
                     break;
                 }
                 assert!(out.len() <= cap);
-                seen.extend(out.iter().map(|r| r.id));
+                seen.extend(out.iter().map(|q| q.req.id));
             }
             assert_eq!(seen, (0..n as u64).collect::<Vec<_>>());
         });

@@ -1,0 +1,381 @@
+//! XLA-free continuous-batching churn harness.
+//!
+//! Drives the REAL admission machinery — [`plan_admissions`], the
+//! [`KvBlockManager`] block accounting, and both KV state layouts
+//! ([`SlotKv`] strided vs [`FullKv`] full-splice reference) — through a
+//! synthetic arrival process with no executables involved: decode steps
+//! are virtual (a step counter plus a fresh simulated KV image), so the
+//! whole thing runs in CI without artifacts. This is what the
+//! equivalence property test (`rust/tests/prop_kv_admission.rs`), the
+//! churn throughput benches, and the `churn_admission` CI example build
+//! on.
+//!
+//! In `KvMode::Both` the harness maintains BOTH layouts through every
+//! admission and decode swap and bit-compares them after each mutation —
+//! any divergence of the slot-strided path from the full-splice
+//! reference fails immediately, attributed to the exact operation.
+
+use super::engine::plan_admissions;
+use super::kvcache::{KvBlockManager, KvConfig};
+use super::kvstate::{FullKv, KvLayout, SlotKv};
+use super::metrics::ServeMetrics;
+use super::trace::{QueuedRequest, Request};
+use crate::util::prng::Rng;
+use anyhow::{ensure, Result};
+use std::collections::VecDeque;
+
+/// Which KV state layout(s) the harness maintains.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KvMode {
+    /// slot-strided only (the fast path; what the benches time)
+    Strided,
+    /// monolithic full-splice only (the "before" baseline)
+    FullSplice,
+    /// both, bit-compared after every mutation (the equivalence oracle)
+    Both,
+}
+
+#[derive(Clone, Debug)]
+pub struct ChurnConfig {
+    pub layout: KvLayout,
+    pub batch: usize,
+    pub n_requests: usize,
+    pub prompt_len: (usize, usize),
+    /// fraction of requests drawing from `long_prompt_len` (mixed
+    /// prompt lengths; may exceed `seq` to exercise clamping)
+    pub long_frac: f64,
+    pub long_prompt_len: (usize, usize),
+    pub max_new: (usize, usize),
+    /// mean inter-arrival gap in virtual decode steps (exponential)
+    pub mean_gap_steps: f64,
+    /// fraction of requests generated unservable (empty prompt) so
+    /// rejection interleaves with admission
+    pub reject_frac: f64,
+    /// drain-between-batches baseline: only admit into an idle engine
+    pub drain: bool,
+    pub mode: KvMode,
+    pub seed: u64,
+}
+
+impl Default for ChurnConfig {
+    fn default() -> Self {
+        ChurnConfig {
+            layout: KvLayout { layers: 2, heads: 2, seq: 32, d_head: 4 },
+            batch: 4,
+            n_requests: 24,
+            prompt_len: (4, 10),
+            long_frac: 0.0,
+            long_prompt_len: (16, 24),
+            max_new: (4, 10),
+            mean_gap_steps: 2.0,
+            reject_frac: 0.0,
+            drain: false,
+            mode: KvMode::Both,
+            seed: 0xC0FFEE,
+        }
+    }
+}
+
+/// What one churn run did, in virtual-step time.
+#[derive(Clone, Debug, Default)]
+pub struct ChurnReport {
+    pub completions: u64,
+    pub total_generated: u64,
+    /// virtual decode steps executed
+    pub steps: u64,
+    /// merged-prefill calls (one per admission round)
+    pub prefills: u64,
+    pub rejected: u64,
+    pub dropped: u64,
+    /// requests admitted while other slots were still decoding — the
+    /// continuous-batching signature; always 0 under `drain`
+    pub mid_batch_admissions: u64,
+    pub queue_peak: usize,
+    pub admit_bytes_strided: u64,
+    pub admit_bytes_fullsplice: u64,
+    /// blocks not back on the free list at the end (must be 0)
+    pub blocks_leaked: usize,
+    /// `(request id, virtual step)` at admission
+    pub admission_steps: Vec<(u64, u64)>,
+    /// `(request id, virtual step)` at completion
+    pub completion_steps: Vec<(u64, u64)>,
+}
+
+/// One live slot in the virtual engine (mirrors `Slot::Active`).
+struct Active {
+    id: u64,
+    max_new: usize,
+    pos: usize,
+    generated: usize,
+}
+
+/// Deterministic arrival process: `(arrival step, request)` pairs,
+/// exponential gaps, mixed short/long prompts, a `reject_frac` share of
+/// unservable (empty-prompt) requests.
+pub fn churn_arrivals(cfg: &ChurnConfig) -> Vec<(u64, Request)> {
+    let mut rng = Rng::from_stream(cfg.seed, "churn");
+    let mut arrival = 0u64;
+    (0..cfg.n_requests)
+        .map(|i| {
+            let reject = cfg.reject_frac > 0.0 && rng.coin(cfg.reject_frac);
+            let (lo, hi) = if cfg.long_frac > 0.0 && rng.coin(cfg.long_frac) {
+                cfg.long_prompt_len
+            } else {
+                cfg.prompt_len
+            };
+            let plen = if reject { 0 } else { lo + rng.below(hi - lo + 1) };
+            let max_new = cfg.max_new.0 + rng.below(cfg.max_new.1 - cfg.max_new.0 + 1);
+            let prompt: Vec<i32> = (0..plen).map(|t| ((i * 31 + t * 7) % 97) as i32).collect();
+            if cfg.mean_gap_steps > 0.0 {
+                let u = rng.uniform().max(1e-9);
+                arrival += (-(u.ln()) * cfg.mean_gap_steps) as u64;
+            }
+            (arrival, Request { id: i as u64, prompt, max_new, arrival_ms: arrival })
+        })
+        .collect()
+}
+
+/// Bit-compare the two layouts' monolithic images (KvMode::Both only).
+fn verify_equal(strided: &Option<SlotKv>, full: &Option<FullKv>) -> Result<()> {
+    let (Some(s), Some(f)) = (strided, full) else { return Ok(()) };
+    let (sk, sv) = s.to_full()?;
+    let (fk, fv) = f.to_full()?;
+    let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+    ensure!(
+        bits(&sk) == bits(&fk) && bits(&sv) == bits(&fv),
+        "slot-strided KV diverged from the full-splice reference"
+    );
+    Ok(())
+}
+
+pub fn run_churn(cfg: &ChurnConfig) -> Result<ChurnReport> {
+    run_churn_with(cfg, churn_arrivals(cfg))
+}
+
+/// Run the harness over an explicit arrival sequence (sorted by step).
+pub fn run_churn_with(cfg: &ChurnConfig, arrivals: Vec<(u64, Request)>) -> Result<ChurnReport> {
+    let layout = cfg.layout;
+    let batch = cfg.batch;
+    let seq = layout.seq;
+    let mut kv_mgr = KvBlockManager::new(KvConfig::for_model(seq, batch, 16));
+    let mut metrics = ServeMetrics::default();
+    let mut strided = match cfg.mode {
+        KvMode::FullSplice => None,
+        _ => Some(SlotKv::new(layout, batch)?),
+    };
+    let mut full = match cfg.mode {
+        KvMode::Strided => None,
+        _ => Some(FullKv::new(layout, batch)?),
+    };
+    // the simulated prefill/decode KV images (contents are arbitrary —
+    // only bit-equivalence between the two layouts matters)
+    let mut fill = Rng::from_stream(cfg.seed, "churn-kv");
+    let mut slots: Vec<Option<Active>> = (0..batch).map(|_| None).collect();
+    let mut arrivals: VecDeque<(u64, Request)> = arrivals.into();
+    let mut queue: VecDeque<QueuedRequest> = VecDeque::new();
+    let mut report = ChurnReport::default();
+    let mut step = 0u64;
+    loop {
+        while arrivals.front().map(|(t, _)| *t <= step).unwrap_or(false) {
+            queue.push_back(QueuedRequest::now(arrivals.pop_front().unwrap().1));
+        }
+        let active = slots.iter().filter(|s| s.is_some()).count();
+        if arrivals.is_empty() && queue.is_empty() && active == 0 {
+            break;
+        }
+        report.queue_peak = report.queue_peak.max(queue.len());
+        // continuous batching admits on ANY step; the drain baseline
+        // only into an idle engine
+        if (!cfg.drain || active == 0) && !queue.is_empty() {
+            let idle: Vec<usize> = slots
+                .iter()
+                .enumerate()
+                .filter(|(_, s)| s.is_none())
+                .map(|(b, _)| b)
+                .collect();
+            let planned = plan_admissions(&mut queue, &mut kv_mgr, &idle, seq, &mut metrics)?;
+            if !planned.is_empty() {
+                // one merged prefill produces a fresh full-shape image;
+                // each layout admits ONLY the planned slots from it
+                let kc = fill.normal_vec(layout.full_elems(batch));
+                let vc = fill.normal_vec(layout.full_elems(batch));
+                let slot_ids: Vec<usize> = planned.iter().map(|(b, _, _)| *b).collect();
+                if let Some(s) = strided.as_mut() {
+                    s.admit_from_full(&slot_ids, &kc, &vc)?;
+                }
+                if let Some(f) = full.as_mut() {
+                    f.admit_reference(&slot_ids, &kc, &vc)?;
+                }
+                report.prefills += 1;
+                if active > 0 {
+                    report.mid_batch_admissions += planned.len() as u64;
+                }
+                for (b, plen, qr) in planned {
+                    report.admission_steps.push((qr.req.id, step));
+                    // mirrors the engine: prefill samples one token
+                    slots[b] = Some(Active {
+                        id: qr.req.id,
+                        max_new: qr.req.max_new,
+                        pos: plen,
+                        generated: 1,
+                    });
+                }
+                verify_equal(&strided, &full)?;
+            }
+        }
+        let active = slots.iter().filter(|s| s.is_some()).count();
+        if active > 0 {
+            // one virtual decode step: every layout swaps in the step's
+            // per-slot outputs wholesale, exactly like the engine
+            step += 1;
+            report.steps += 1;
+            let kc = fill.normal_vec(layout.full_elems(batch));
+            let vc = fill.normal_vec(layout.full_elems(batch));
+            if let Some(s) = strided.as_mut() {
+                s.swap_from_full(&kc, &vc)?;
+            }
+            if let Some(f) = full.as_mut() {
+                f.swap_host(&kc, &vc)?;
+            }
+            verify_equal(&strided, &full)?;
+            for slot in slots.iter_mut() {
+                let Some(a) = slot.as_mut() else { continue };
+                a.pos += 1;
+                a.generated += 1;
+                kv_mgr.append_token(a.id)?;
+                let capacity_hit = a.pos + 1 >= seq;
+                if a.generated >= a.max_new || capacity_hit {
+                    let (id, generated) = (a.id, a.generated as u64);
+                    report.completion_steps.push((id, step));
+                    report.total_generated += generated;
+                    report.completions += 1;
+                    kv_mgr.release(id)?;
+                    *slot = None;
+                }
+            }
+        } else {
+            match arrivals.front() {
+                // idle engine: jump straight to the next arrival
+                Some((t, _)) => step = (*t).max(step + 1),
+                None => {
+                    // nothing running, nothing coming, head can never
+                    // fit: surface the remainder instead of spinning
+                    report.dropped += queue.len() as u64;
+                    queue.clear();
+                }
+            }
+        }
+    }
+    report.rejected = metrics.rejected;
+    if let Some(s) = &strided {
+        report.admit_bytes_strided = s.admit_bytes;
+    }
+    if let Some(f) = &full {
+        report.admit_bytes_fullsplice = f.admit_bytes;
+    }
+    report.blocks_leaked = kv_mgr.n_blocks() - kv_mgr.free_blocks();
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(id: u64, plen: usize, max_new: usize) -> Request {
+        Request { id, prompt: vec![1i32; plen], max_new, arrival_ms: 0 }
+    }
+
+    fn step_of(steps: &[(u64, u64)], id: u64) -> u64 {
+        steps.iter().find(|(i, _)| *i == id).map(|(_, s)| *s).unwrap()
+    }
+
+    #[test]
+    fn continuous_batching_admits_mid_batch_and_drain_does_not() {
+        // batch 2, three requests arriving together: req 0 (short) and
+        // req 1 (long) fill the batch; req 2 waits. Under continuous
+        // batching req 2 must take req 0's slot as soon as it frees,
+        // BEFORE req 1 finishes; under drain it must wait for req 1.
+        let cfg = ChurnConfig {
+            layout: KvLayout { layers: 1, heads: 1, seq: 32, d_head: 2 },
+            batch: 2,
+            ..Default::default()
+        };
+        let arrivals = || vec![(0u64, mk(0, 4, 2)), (0, mk(1, 4, 8)), (0, mk(2, 4, 2))];
+        let cont = run_churn_with(&cfg, arrivals()).unwrap();
+        assert_eq!(cont.completions, 3);
+        assert!(cont.mid_batch_admissions >= 1, "no mid-batch admission happened");
+        assert!(cont.queue_peak >= 1, "req 2 never queued");
+        let done0 = step_of(&cont.completion_steps, 0);
+        let done1 = step_of(&cont.completion_steps, 1);
+        let admit2 = step_of(&cont.admission_steps, 2);
+        assert!(
+            admit2 >= done0 && admit2 < done1,
+            "req 2 must be admitted after req 0 completes ({done0}) but before \
+             req 1 does ({done1}); got step {admit2}"
+        );
+        assert_eq!(cont.blocks_leaked, 0);
+        // drain baseline: same workload, no mid-batch admission, and
+        // strictly more decode steps for the same tokens
+        let drain = run_churn_with(
+            &ChurnConfig { drain: true, ..cfg.clone() },
+            arrivals(),
+        )
+        .unwrap();
+        assert_eq!(drain.completions, 3);
+        assert_eq!(drain.mid_batch_admissions, 0);
+        assert_eq!(drain.total_generated, cont.total_generated);
+        assert!(
+            drain.steps > cont.steps,
+            "drain ({}) should need more steps than continuous ({})",
+            drain.steps,
+            cont.steps
+        );
+    }
+
+    #[test]
+    fn rejects_surface_in_accounting() {
+        let cfg = ChurnConfig { reject_frac: 0.5, seed: 42, ..Default::default() };
+        let r = run_churn(&cfg).unwrap();
+        assert!(r.rejected > 0, "reject_frac 0.5 produced no rejections");
+        assert!(r.completions > 0);
+        assert_eq!(
+            r.completions + r.rejected + r.dropped,
+            cfg.n_requests as u64,
+            "every request must be completed, rejected, or dropped"
+        );
+        assert_eq!(r.blocks_leaked, 0);
+    }
+
+    #[test]
+    fn admission_byte_accounting_is_exact() {
+        // strided: each admitted request moves exactly one slot's K+V
+        // bytes, once. full-splice: every prefill round-trips the WHOLE
+        // cache (4 × full image × 4 bytes).
+        let cfg = ChurnConfig::default();
+        let r = run_churn(&cfg).unwrap();
+        assert_eq!(r.completions, cfg.n_requests as u64);
+        assert_eq!(r.admit_bytes_strided, r.completions * cfg.layout.slot_kv_bytes());
+        assert_eq!(
+            r.admit_bytes_fullsplice,
+            r.prefills * 4 * cfg.layout.full_elems(cfg.batch) as u64 * 4
+        );
+        assert!(
+            r.admit_bytes_strided < r.admit_bytes_fullsplice,
+            "strided admission moved MORE bytes than the full splice"
+        );
+    }
+
+    #[test]
+    fn burst_arrivals_report_backpressure() {
+        let cfg = ChurnConfig { mean_gap_steps: 0.0, ..Default::default() };
+        let r = run_churn(&cfg).unwrap();
+        assert!(
+            r.queue_peak > cfg.batch,
+            "24 simultaneous arrivals into batch 4 must pile up a queue \
+             (peak {})",
+            r.queue_peak
+        );
+        assert_eq!(r.completions, cfg.n_requests as u64);
+        assert_eq!(r.blocks_leaked, 0);
+    }
+}

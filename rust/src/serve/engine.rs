@@ -1,40 +1,52 @@
 //! The generation engine: continuous batching over fixed-shape PJRT
-//! executables with slot reuse and rust-owned KV state.
+//! executables with slot reuse and rust-owned, slot-strided KV state.
 //!
-//! Hot-path design (EXPERIMENTS.md §Perf): weight/code parameters are
-//! converted to XLA literals ONCE at engine construction and borrowed
-//! on every decode step; the KV cache lives as a pair of literals that
-//! are swapped with the step outputs, so the steady-state loop performs
-//! no host-side weight copies at all.
+//! Hot-path design (EXPERIMENTS.md §Perf, PERF.md §10): weight/code
+//! parameters are converted to XLA literals ONCE at engine construction
+//! and borrowed on every decode step. The KV cache lives as one literal
+//! pair PER SLOT ([`SlotKv`]); the steady-state decode loop swaps the
+//! per-slot outputs in wholesale, and admission installs ONLY the new
+//! slots' prefill outputs by handle move — O(new slots), where the old
+//! monolithic layout downloaded, spliced, and re-uploaded the ENTIRE
+//! cache for every admission.
 //!
 //! Invariants (checked by tests + propcheck):
-//!   * a live slot's KV column is never touched by other slots'
-//!     prefills;
+//!   * a live slot's KV literal is never touched by other slots'
+//!     admissions (slot-strided ≡ full-splice reference, bit for bit —
+//!     `rust/tests/prop_kv_admission.rs`);
 //!   * every admitted request generates exactly min(max_new, capacity)
 //!     tokens;
-//!   * greedy decode through the engine matches the offline
-//!     prefill-only path token-for-token.
+//!   * a request finishing at step t frees its slot and a queued
+//!     request can be admitted before other slots finish (continuous
+//!     batching, no drain).
 
 use super::backend::{Backend, QuantSource};
 use super::kvcache::{KvBlockManager, KvConfig};
+use super::kvstate::{KvLayout, SlotKv};
+use super::metrics::{CompletionStat, ServeMetrics};
 use super::planes::PlaneStore;
-use super::metrics::ServeMetrics;
-use super::trace::Request;
+use super::trace::{QueuedRequest, Request};
 use crate::config::ModelConfig;
 use crate::eval::argmax;
+use crate::model::manifest::{Manifest, ParamSpec};
 use crate::model::Weights;
 use crate::quant::QuantizedModel;
 use crate::runtime::{Engine, Executable, HostArg};
-use anyhow::{Context, Result};
+use anyhow::{ensure, Context, Result};
 use std::collections::VecDeque;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 #[derive(Clone, Debug)]
 pub struct Completion {
     pub id: u64,
     pub tokens: Vec<i32>,
+    /// enqueue → completion (end-to-end)
     pub latency_ms: f64,
+    /// enqueue → admission (queue wait)
+    pub queue_ms: f64,
+    /// admission → completion (prefill + decode)
+    pub decode_ms: f64,
     pub prompt_len: usize,
 }
 
@@ -46,6 +58,8 @@ enum Slot {
         pos: usize,
         generated: Vec<i32>,
         last_token: i32,
+        /// when the request entered the serving system (latency basis)
+        enqueued: Instant,
         admitted: Instant,
     },
 }
@@ -63,12 +77,15 @@ pub struct GenerationEngine<'a> {
     /// host copies kept only for HIGGS_SERVE_SLOWPATH=1 (the §Perf
     /// "before" baseline: re-convert all params every step)
     decode_param_args: Option<Vec<HostArg>>,
-    kv_k: xla::Literal,
-    kv_v: xla::Literal,
+    /// slot-strided KV state: one literal pair per slot (PERF.md §10)
+    kv: SlotKv,
     slots: Vec<Slot>,
     /// paged KV accounting (admission control + fragmentation metrics)
     pub kv_manager: KvBlockManager,
     pub metrics: ServeMetrics,
+    /// when the current admission-blocked interval began (queue
+    /// non-empty but nothing placeable) — backpressure accounting
+    blocked_since: Option<Instant>,
 }
 
 /// Pure admission planning (no XLA): pop admissible requests off the
@@ -84,12 +101,12 @@ pub struct GenerationEngine<'a> {
 ///
 /// Returns `(slot, clamped_prompt_len, request)` triples.
 pub(crate) fn plan_admissions(
-    queue: &mut VecDeque<Request>,
+    queue: &mut VecDeque<QueuedRequest>,
     kv: &mut KvBlockManager,
     idle_slots: &[usize],
     seq: usize,
     metrics: &mut ServeMetrics,
-) -> Result<Vec<(usize, usize, Request)>> {
+) -> Result<Vec<(usize, usize, QueuedRequest)>> {
     let mut out = Vec::new();
     let mut slots = idle_slots.iter().copied();
     let mut slot = slots.next();
@@ -98,28 +115,76 @@ pub(crate) fn plan_admissions(
         // plen == 0 covers both an empty prompt and a prompt clamped to
         // nothing (seq <= 1) — either way there is no logits row to
         // sample from (`plen - 1` would underflow)
-        let plen = front.prompt.len().min(seq.saturating_sub(1));
-        if plen == 0 || front.max_new == 0 {
-            let req = queue.pop_front().unwrap();
+        let plen = front.req.prompt.len().min(seq.saturating_sub(1));
+        if plen == 0 || front.req.max_new == 0 {
+            let qr = queue.pop_front().unwrap();
             log::warn!(
                 "rejecting request {}: {}",
-                req.id,
-                if req.max_new == 0 { "max_new == 0" } else { "no servable prompt tokens" }
+                qr.req.id,
+                if qr.req.max_new == 0 { "max_new == 0" } else { "no servable prompt tokens" }
             );
             metrics.rejected += 1;
             continue; // slot b stays available for the next request
         }
         // paged-KV admission control: worst-case block reservation on
         // the CLAMPED length (what prefill will actually write)
-        if !kv.can_admit(plen, front.max_new) {
+        if !kv.can_admit(plen, front.req.max_new) {
             break;
         }
-        let req = queue.pop_front().unwrap();
-        kv.admit(req.id, plen, req.max_new)?;
-        out.push((b, plen, req));
+        let qr = queue.pop_front().unwrap();
+        kv.admit(qr.req.id, plen, qr.req.max_new)?;
+        out.push((b, plen, qr));
         slot = slots.next();
     }
     Ok(out)
+}
+
+/// Check a manifest against the slot-strided KV ABI: `kcache_i` /
+/// `vcache_i` specs (decode inputs / prefill outputs), one pair per
+/// slot, each shaped `[layers, heads, seq, d_head]`. A monolithic
+/// `kcache`/`vcache` pair means the artifact predates the ABI.
+fn validate_slot_kv_manifest(
+    man: &Manifest,
+    batch: usize,
+    layout: &KvLayout,
+    decode: bool,
+) -> Result<()> {
+    let (specs, section, lead): (&[ParamSpec], &str, usize) = if decode {
+        (&man.inputs, "inputs", 2) // token, pos
+    } else {
+        (&man.outputs, "outputs", 1) // logits
+    };
+    ensure!(
+        !specs.iter().any(|s| s.name == "kcache"),
+        "{}: monolithic kcache/vcache {section} — this artifact predates the \
+         slot-strided KV ABI; regenerate artifacts with python/compile/aot.py",
+        man.artifact
+    );
+    ensure!(
+        specs.len() == lead + 2 * batch,
+        "{}: {} {section}, slot-strided ABI at batch {batch} wants {}",
+        man.artifact,
+        specs.len(),
+        lead + 2 * batch
+    );
+    let want = layout.slot_dims();
+    for i in 0..batch {
+        for (spec, name) in [
+            (&specs[lead + i], format!("kcache_{i}")),
+            (&specs[lead + batch + i], format!("vcache_{i}")),
+        ] {
+            ensure!(
+                spec.name == name && spec.dims == want,
+                "{}: {section} spec `{}` {:?} where the slot-strided ABI wants \
+                 `{name}` {:?}",
+                man.artifact,
+                spec.name,
+                spec.dims,
+                want
+            );
+        }
+    }
+    Ok(())
 }
 
 /// Convert host args to XLA literals in parallel (engine-construction
@@ -206,6 +271,12 @@ impl<'a> GenerationEngine<'a> {
         let prefill_name = backend.prefill_artifact(&cfg.name, batch);
         let decode_exe = engine.load(&decode_name).context(decode_name)?;
         let prefill_exe = engine.load(&prefill_name).context(prefill_name)?;
+        // the executables must speak the slot-strided KV ABI (per-slot
+        // kcache_i/vcache_i tensors) — reject monolithic-KV artifacts
+        // up front with a regeneration hint
+        let layout = KvLayout::for_model(&cfg);
+        validate_slot_kv_manifest(&decode_exe.manifest, batch, &layout, true)?;
+        validate_slot_kv_manifest(&prefill_exe.manifest, batch, &layout, false)?;
         // a persisted artifact must belong to this model: check every
         // layer's [k, n] against the dense prefill manifest up front
         match src {
@@ -240,11 +311,7 @@ impl<'a> GenerationEngine<'a> {
             Backend::Dense.build_params_with(&prefill_exe.manifest, weights, src, &store)?;
         let prefill_param_lits = par_literals(&prefill_args)?;
         drop(store);
-        let kv_dims: Vec<usize> =
-            vec![cfg.n_layers, batch, cfg.n_heads, cfg.seq, cfg.d_head()];
-        let kv_len: usize = kv_dims.iter().product();
         let kv_manager = KvBlockManager::new(KvConfig::for_model(cfg.seq, batch, 16));
-        let zero_kv = || HostArg::F32(vec![0.0; kv_len], kv_dims.clone()).to_literal();
         Ok(GenerationEngine {
             engine,
             cfg,
@@ -255,11 +322,11 @@ impl<'a> GenerationEngine<'a> {
             decode_param_lits,
             prefill_param_lits,
             decode_param_args,
-            kv_k: zero_kv()?,
-            kv_v: zero_kv()?,
+            kv: SlotKv::new(layout, batch)?,
             slots: (0..batch).map(|_| Slot::Idle).collect(),
             kv_manager,
             metrics: ServeMetrics::default(),
+            blocked_since: None,
         })
     }
 
@@ -271,13 +338,45 @@ impl<'a> GenerationEngine<'a> {
         self.batch - self.idle_slots()
     }
 
+    /// Bytes admission has moved across the host↔literal boundary so
+    /// far. Per-slot installs are handle moves, so this stays 0 on the
+    /// real engine path — the number exists so the accounting matches
+    /// the churn harness's.
+    pub fn kv_admit_bytes(&self) -> u64 {
+        self.kv.admit_bytes
+    }
+
+    fn note_unblocked(&mut self) {
+        if let Some(t) = self.blocked_since.take() {
+            self.metrics.admission_blocked_ms += t.elapsed().as_secs_f64() * 1e3;
+        }
+    }
+
     /// Admit up to `idle_slots` requests from the queue via one merged
-    /// prefill. Live slots' KV is preserved by only copying the new
-    /// slots' KV columns out of the prefill result.
-    pub fn admit(&mut self, queue: &mut VecDeque<Request>) -> Result<usize> {
-        if queue.is_empty() || self.idle_slots() == 0 {
+    /// prefill. O(new slots): only the admitted slots' per-slot KV
+    /// literals are installed (handle moves); live slots' literals are
+    /// never read or re-uploaded. Also maintains the backpressure
+    /// metrics (queue depth peak, admission-blocked time).
+    pub fn admit(&mut self, queue: &mut VecDeque<QueuedRequest>) -> Result<usize> {
+        self.metrics.queue_peak = self.metrics.queue_peak.max(queue.len());
+        if queue.is_empty() {
+            self.note_unblocked();
             return Ok(0);
         }
+        if self.idle_slots() == 0 {
+            self.blocked_since.get_or_insert_with(Instant::now);
+            return Ok(0);
+        }
+        let n = self.admit_inner(queue)?;
+        if n > 0 || queue.is_empty() {
+            self.note_unblocked();
+        } else {
+            self.blocked_since.get_or_insert_with(Instant::now);
+        }
+        Ok(n)
+    }
+
+    fn admit_inner(&mut self, queue: &mut VecDeque<QueuedRequest>) -> Result<usize> {
         let s = self.cfg.seq;
         let idle: Vec<usize> = (0..self.batch)
             .filter(|&b| matches!(self.slots[b], Slot::Idle))
@@ -288,55 +387,51 @@ impl<'a> GenerationEngine<'a> {
             return Ok(0);
         }
         let mut tokens = vec![0i32; self.batch * s];
-        for (b, plen, req) in &newly {
+        for (b, plen, qr) in &newly {
             let (b, plen) = (*b, *plen);
-            tokens[b * s..b * s + plen].copy_from_slice(&req.prompt[..plen]);
+            tokens[b * s..b * s + plen].copy_from_slice(&qr.req.prompt[..plen]);
         }
         let tok_lit = HostArg::I32(tokens, vec![self.batch, s]).to_literal()?;
         let mut args: Vec<&xla::Literal> = vec![&tok_lit];
         args.extend(self.prefill_param_lits.iter());
         let outs = self.engine.run_literals(&self.prefill_exe, &args)?;
         self.metrics.prefill_calls += 1;
+        ensure!(
+            outs.len() == 1 + 2 * self.batch,
+            "prefill returned {} outputs, slot-strided ABI wants {}",
+            outs.len(),
+            1 + 2 * self.batch
+        );
         let v = self.cfg.vocab;
+        let mut it = outs.into_iter();
         let logits: Vec<f32> =
-            outs[0].to_vec().map_err(|e| anyhow::anyhow!("logits: {e:?}"))?;
-        let kc: Vec<f32> = outs[1].to_vec().map_err(|e| anyhow::anyhow!("kc: {e:?}"))?;
-        let vc: Vec<f32> = outs[2].to_vec().map_err(|e| anyhow::anyhow!("vc: {e:?}"))?;
-        // splice the new slots' KV columns into the engine state
-        let mut kv_k: Vec<f32> =
-            self.kv_k.to_vec().map_err(|e| anyhow::anyhow!("kv_k: {e:?}"))?;
-        let mut kv_v: Vec<f32> =
-            self.kv_v.to_vec().map_err(|e| anyhow::anyhow!("kv_v: {e:?}"))?;
-        let (l_count, h, dh) = (self.cfg.n_layers, self.cfg.n_heads, self.cfg.d_head());
-        let slot_stride = h * s * dh;
-        let layer_stride = self.batch * slot_stride;
-        for &(b, _, _) in &newly {
-            for l in 0..l_count {
-                let off = l * layer_stride + b * slot_stride;
-                kv_k[off..off + slot_stride].copy_from_slice(&kc[off..off + slot_stride]);
-                kv_v[off..off + slot_stride].copy_from_slice(&vc[off..off + slot_stride]);
-            }
-        }
-        let kv_dims: Vec<usize> =
-            vec![l_count, self.batch, h, s, dh];
-        self.kv_k = HostArg::F32(kv_k, kv_dims.clone()).to_literal()?;
-        self.kv_v = HostArg::F32(kv_v, kv_dims).to_literal()?;
+            it.next().unwrap().to_vec().map_err(|e| anyhow::anyhow!("logits: {e:?}"))?;
+        let mut kouts: Vec<Option<xla::Literal>> =
+            it.by_ref().take(self.batch).map(Some).collect();
+        let mut vouts: Vec<Option<xla::Literal>> = it.map(Some).collect();
         let n = newly.len();
-        for (b, plen, req) in newly {
+        for (b, plen, qr) in newly {
+            // O(new-slots) install: the prefill's per-slot KV outputs
+            // move in by handle; no other slot is touched
+            self.kv.install_slot(b, kouts[b].take().unwrap(), vouts[b].take().unwrap())?;
             let row = &logits[(b * s + plen - 1) * v..(b * s + plen) * v];
             let first = argmax(row) as i32;
             self.slots[b] = Slot::Active {
                 pos: plen,
                 generated: vec![first],
                 last_token: first,
+                enqueued: qr.enqueued,
                 admitted: Instant::now(),
-                req,
+                req: qr.req,
             };
         }
         Ok(n)
     }
 
-    /// One decode step for all active slots; returns completions.
+    /// One decode step for all active slots; returns completions. A
+    /// finished request frees its slot (and KV lease) IMMEDIATELY — the
+    /// next `admit` call can refill it while other slots keep decoding
+    /// (continuous batching, no drain).
     pub fn step(&mut self) -> Result<Vec<Completion>> {
         if self.active_slots() == 0 {
             return Ok(Vec::new());
@@ -363,26 +458,34 @@ impl<'a> GenerationEngine<'a> {
             }
             None => None,
         };
-        let mut args: Vec<&xla::Literal> = vec![&tok_lit, &pos_lit, &self.kv_k, &self.kv_v];
+        let mut args: Vec<&xla::Literal> = vec![&tok_lit, &pos_lit];
+        args.extend(self.kv.args());
         match &slow_lits {
             Some(lits) => args.extend(lits.iter()),
             None => args.extend(self.decode_param_lits.iter()),
         }
-        let mut outs = self.engine.run_literals(&self.decode_exe, &args)?;
+        let outs = self.engine.run_literals(&self.decode_exe, &args)?;
         self.metrics.decode_steps += 1;
-        // outputs: logits [B,V], kcache, vcache — kv literals are swapped
-        // in wholesale (no host round-trip)
-        let vc = outs.pop().unwrap();
-        let kc = outs.pop().unwrap();
+        ensure!(
+            outs.len() == 1 + 2 * self.batch,
+            "decode returned {} outputs, slot-strided ABI wants {}",
+            outs.len(),
+            1 + 2 * self.batch
+        );
+        // outputs: logits [B,V], then per-slot kcache_i / vcache_i —
+        // swapped in wholesale (no host round-trip)
+        let mut it = outs.into_iter();
         let logits: Vec<f32> =
-            outs.pop().unwrap().to_vec().map_err(|e| anyhow::anyhow!("logits: {e:?}"))?;
-        self.kv_k = kc;
-        self.kv_v = vc;
+            it.next().unwrap().to_vec().map_err(|e| anyhow::anyhow!("logits: {e:?}"))?;
+        let kouts: Vec<xla::Literal> = it.by_ref().take(self.batch).collect();
+        let vouts: Vec<xla::Literal> = it.collect();
+        self.kv.replace_all(kouts, vouts)?;
 
         let mut done = Vec::new();
         for b in 0..self.batch {
             let slot = &mut self.slots[b];
-            if let Slot::Active { pos, generated, last_token, req, admitted } = slot {
+            if let Slot::Active { pos, generated, last_token, req, enqueued, admitted } = slot
+            {
                 let row = &logits[b * v..(b + 1) * v];
                 let next = argmax(row) as i32;
                 *pos += 1;
@@ -396,18 +499,27 @@ impl<'a> GenerationEngine<'a> {
                 })?;
                 let capacity_hit = *pos + 1 >= s;
                 if generated.len() >= req.max_new || capacity_hit {
-                    let latency = admitted.elapsed().as_secs_f64() * 1e3;
+                    let now = Instant::now();
+                    // latency from SUBMISSION, split into queue + decode
+                    let latency_ms = now.duration_since(*enqueued).as_secs_f64() * 1e3;
+                    let queue_ms =
+                        admitted.duration_since(*enqueued).as_secs_f64() * 1e3;
+                    let decode_ms = now.duration_since(*admitted).as_secs_f64() * 1e3;
                     done.push(Completion {
                         id: req.id,
                         tokens: generated.clone(),
-                        latency_ms: latency,
+                        latency_ms,
+                        queue_ms,
+                        decode_ms,
                         prompt_len: req.prompt.len(),
                     });
-                    self.metrics.completions.push((
-                        latency,
-                        generated.len(),
-                        req.prompt.len(),
-                    ));
+                    self.metrics.completions.push(CompletionStat {
+                        latency_ms,
+                        queue_ms,
+                        decode_ms,
+                        generated: generated.len(),
+                        prompt_len: req.prompt.len(),
+                    });
                     self.kv_manager.release(req.id)?;
                     self.slots[b] = Slot::Idle;
                 }
@@ -417,15 +529,78 @@ impl<'a> GenerationEngine<'a> {
     }
 
     /// Closed-loop driver: run a whole trace to completion (Table 1's
-    /// measurement mode) and return the metrics.
+    /// measurement mode) and return the metrics. Admission is attempted
+    /// on EVERY iteration — slots freed by completions refill without
+    /// waiting for the batch to drain.
     pub fn run_closed_loop(&mut self, trace: Vec<Request>) -> Result<ServeMetrics> {
-        let mut queue: VecDeque<Request> = trace.into();
+        let mut queue: VecDeque<QueuedRequest> =
+            trace.into_iter().map(QueuedRequest::now).collect();
         let t0 = Instant::now();
-        let mut all = Vec::new();
         while !queue.is_empty() || self.active_slots() > 0 {
-            self.admit(&mut queue)?;
+            let admitted = self.admit(&mut queue)?;
             let done = self.step()?;
-            all.extend(done);
+            if admitted == 0
+                && done.is_empty()
+                && self.active_slots() == 0
+                && !queue.is_empty()
+            {
+                // nothing running and the head request can never fit:
+                // surface the remainder instead of spinning forever
+                log::error!(
+                    "closed loop stuck: dropping {} unservable request(s)",
+                    queue.len()
+                );
+                self.metrics.dropped += queue.len() as u64;
+                queue.clear();
+            }
+        }
+        self.metrics.wall_secs = t0.elapsed().as_secs_f64();
+        Ok(self.metrics.clone())
+    }
+
+    /// Open-loop driver: requests become visible at their trace
+    /// `arrival_ms`, the churn measurement mode (`serve-bench --churn`).
+    /// With `drain` set, admission waits for the WHOLE batch to finish
+    /// before refilling — the pre-continuous-batching baseline the
+    /// churn bench compares against.
+    pub fn run_open_loop(&mut self, trace: Vec<Request>, drain: bool) -> Result<ServeMetrics> {
+        let mut pending: Vec<Request> = trace;
+        pending.sort_by_key(|r| r.arrival_ms);
+        let mut pending: VecDeque<Request> = pending.into();
+        let mut queue: VecDeque<QueuedRequest> = VecDeque::new();
+        let t0 = Instant::now();
+        loop {
+            let now_ms = t0.elapsed().as_millis() as u64;
+            while pending.front().map(|r| r.arrival_ms <= now_ms).unwrap_or(false) {
+                queue.push_back(QueuedRequest::now(pending.pop_front().unwrap()));
+            }
+            if pending.is_empty() && queue.is_empty() && self.active_slots() == 0 {
+                break;
+            }
+            let admitted = if !drain || self.active_slots() == 0 {
+                self.admit(&mut queue)?
+            } else {
+                // drain baseline still observes backpressure
+                self.metrics.queue_peak = self.metrics.queue_peak.max(queue.len());
+                self.blocked_since.get_or_insert_with(Instant::now);
+                0
+            };
+            if self.active_slots() > 0 {
+                self.step()?;
+            } else if admitted == 0 {
+                if pending.is_empty() && !queue.is_empty() {
+                    // idle engine, no future arrivals, head can never fit
+                    log::error!(
+                        "open loop stuck: dropping {} unservable request(s)",
+                        queue.len()
+                    );
+                    self.metrics.dropped += queue.len() as u64;
+                    queue.clear();
+                } else if let Some(r) = pending.front() {
+                    let wait = r.arrival_ms.saturating_sub(t0.elapsed().as_millis() as u64);
+                    std::thread::sleep(Duration::from_millis(wait.clamp(1, 5)));
+                }
+            }
         }
         self.metrics.wall_secs = t0.elapsed().as_secs_f64();
         Ok(self.metrics.clone())
@@ -449,6 +624,10 @@ mod tests {
         Request { id, prompt: vec![1i32; prompt_len], max_new, arrival_ms: 0 }
     }
 
+    fn qd(reqs: Vec<Request>) -> VecDeque<QueuedRequest> {
+        reqs.into_iter().map(QueuedRequest::now).collect()
+    }
+
     #[test]
     fn admission_rejects_empty_prompt_and_zero_max_new() {
         // empty prompt → clean rejection (not a plen-1 underflow panic);
@@ -458,14 +637,13 @@ mod tests {
         // the slot stays available for the next admissible request
         let mut kv = mgr(96, 2);
         let mut metrics = ServeMetrics::default();
-        let mut queue: VecDeque<Request> =
-            vec![req(0, 0, 4), req(1, 8, 0), req(2, 8, 4)].into();
+        let mut queue = qd(vec![req(0, 0, 4), req(1, 8, 0), req(2, 8, 4)]);
         let planned =
             plan_admissions(&mut queue, &mut kv, &[0, 1], 96, &mut metrics).unwrap();
         assert_eq!(metrics.rejected, 2);
         assert_eq!(planned.len(), 1);
         assert_eq!(planned[0].0, 0, "slot 0 reused after the rejections");
-        assert_eq!(planned[0].2.id, 2);
+        assert_eq!(planned[0].2.req.id, 2);
         assert!(kv.tokens_of(0).is_none(), "no lease for the rejected requests");
         assert!(kv.tokens_of(1).is_none());
     }
@@ -477,13 +655,13 @@ mod tests {
         // admitted into a `plen - 1` underflow
         let mut kv = mgr(16, 1);
         let mut metrics = ServeMetrics::default();
-        let mut queue: VecDeque<Request> = vec![req(4, 8, 2)].into();
+        let mut queue = qd(vec![req(4, 8, 2)]);
         let planned =
             plan_admissions(&mut queue, &mut kv, &[0], 1, &mut metrics).unwrap();
         assert!(planned.is_empty());
         assert_eq!(metrics.rejected, 1);
         // seq == 0 must not underflow either
-        let mut queue: VecDeque<Request> = vec![req(5, 8, 2)].into();
+        let mut queue = qd(vec![req(5, 8, 2)]);
         let planned =
             plan_admissions(&mut queue, &mut kv, &[0], 0, &mut metrics).unwrap();
         assert!(planned.is_empty());
@@ -499,7 +677,7 @@ mod tests {
         let mut kv = mgr(seq, 1);
         let mut metrics = ServeMetrics::default();
         let max_new = 4;
-        let mut queue: VecDeque<Request> = vec![req(7, 1000, max_new)].into();
+        let mut queue = qd(vec![req(7, 1000, max_new)]);
         let planned =
             plan_admissions(&mut queue, &mut kv, &[0], seq, &mut metrics).unwrap();
         assert_eq!(planned.len(), 1);
@@ -530,11 +708,66 @@ mod tests {
         let mut kv = mgr(32, 1); // 2 blocks of 16
         let mut metrics = ServeMetrics::default();
         kv.admit(99, 20, 10).unwrap(); // occupies both blocks
-        let mut queue: VecDeque<Request> = vec![req(0, 8, 4), req(1, 4, 2)].into();
+        let mut queue = qd(vec![req(0, 8, 4), req(1, 4, 2)]);
         let planned =
             plan_admissions(&mut queue, &mut kv, &[0], 32, &mut metrics).unwrap();
         assert!(planned.is_empty());
         assert_eq!(queue.len(), 2, "queue untouched when nothing fits");
+    }
+
+    #[test]
+    fn released_slot_admits_mid_batch() {
+        // continuous batching at the planning level: a lease released
+        // at step t makes a queued request admissible immediately,
+        // while the other slot's lease is still live
+        let mut kv = mgr(32, 2); // 4 blocks of 16
+        let mut metrics = ServeMetrics::default();
+        kv.admit(0, 16, 16).unwrap(); // 2 blocks
+        kv.admit(1, 16, 16).unwrap(); // 2 blocks — full
+        let mut queue = qd(vec![req(2, 8, 8)]);
+        let planned =
+            plan_admissions(&mut queue, &mut kv, &[0], 32, &mut metrics).unwrap();
+        assert!(planned.is_empty(), "no capacity while both leases live");
+        kv.release(0).unwrap(); // request 0 completes mid-batch
+        let planned =
+            plan_admissions(&mut queue, &mut kv, &[0], 32, &mut metrics).unwrap();
+        assert_eq!(planned.len(), 1, "freed slot must refill without draining");
+        assert_eq!(planned[0].2.req.id, 2);
+        assert!(kv.tokens_of(1).is_some(), "live lease untouched");
+    }
+
+    #[test]
+    fn slot_kv_manifest_validation() {
+        let layout = KvLayout { layers: 2, heads: 2, seq: 8, d_head: 4 };
+        let slot = "2,2,8,4";
+        let decode_ok = format!(
+            "artifact decode_x\ninput token i32 2\ninput pos i32 2\n\
+             input kcache_0 f32 {slot}\ninput kcache_1 f32 {slot}\n\
+             input vcache_0 f32 {slot}\ninput vcache_1 f32 {slot}\n\
+             output logits f32 2,64\n"
+        );
+        let man = Manifest::parse(&decode_ok).unwrap();
+        validate_slot_kv_manifest(&man, 2, &layout, true).unwrap();
+        // legacy monolithic ABI → actionable error
+        let legacy = "artifact decode_x\ninput token i32 2\ninput pos i32 2\n\
+                      input kcache f32 2,2,2,8,4\ninput vcache f32 2,2,2,8,4\n\
+                      output logits f32 2,64\n";
+        let man = Manifest::parse(legacy).unwrap();
+        let err = validate_slot_kv_manifest(&man, 2, &layout, true).unwrap_err();
+        assert!(err.to_string().contains("predates"), "{err}");
+        // wrong dims rejected
+        let bad = decode_ok.replace("input vcache_1 f32 2,2,8,4", "input vcache_1 f32 2,2,8,2");
+        let man = Manifest::parse(&bad).unwrap();
+        assert!(validate_slot_kv_manifest(&man, 2, &layout, true).is_err());
+        // prefill side checks outputs
+        let prefill_ok = format!(
+            "artifact prefill_x\ninput tokens i32 2,8\n\
+             output logits f32 2,8,64\n\
+             output kcache_0 f32 {slot}\noutput kcache_1 f32 {slot}\n\
+             output vcache_0 f32 {slot}\noutput vcache_1 f32 {slot}\n"
+        );
+        let man = Manifest::parse(&prefill_ok).unwrap();
+        validate_slot_kv_manifest(&man, 2, &layout, false).unwrap();
     }
 
     fn setup(eng: &Engine) -> (ModelConfig, Weights) {
@@ -567,6 +800,13 @@ mod tests {
         assert_eq!(m.completions.len(), 3);
         assert!(m.total_generated() >= 9);
         assert!(m.tok_per_sec() > 0.0);
+        // latency is measured from submission and split: the parts sum
+        // to the whole (within float noise)
+        for c in &m.completions {
+            assert!(c.latency_ms >= c.decode_ms);
+            assert!((c.queue_ms + c.decode_ms - c.latency_ms).abs() < 1.0);
+        }
+        assert_eq!(ge.kv_admit_bytes(), 0, "per-slot installs are handle moves");
     }
 
     #[test]
@@ -592,7 +832,7 @@ mod tests {
             let mut ge =
                 GenerationEngine::new(&eng, cfg.clone(), Backend::Dense, 1, &w, None)
                     .unwrap();
-            let mut queue: VecDeque<Request> = mk_trace().into();
+            let mut queue = qd(mk_trace());
             let mut outs = Vec::new();
             while !queue.is_empty() || ge.active_slots() > 0 {
                 ge.admit(&mut queue).unwrap();
@@ -656,6 +896,6 @@ mod tests {
         assert_eq!(md.completions.len(), 1);
         assert_eq!(mf.completions.len(), 1);
         // same number of tokens (content may rarely differ on near-ties)
-        assert_eq!(md.completions[0].1, mf.completions[0].1);
+        assert_eq!(md.completions[0].generated, mf.completions[0].generated);
     }
 }

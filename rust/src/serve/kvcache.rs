@@ -64,6 +64,17 @@ impl KvBlockManager {
         self.free.len()
     }
 
+    /// Blocks currently held by live leases. The conservation invariant
+    /// `free_blocks() + leased_blocks() == n_blocks()` must hold after
+    /// EVERY operation — the churn tests pin it.
+    pub fn leased_blocks(&self) -> usize {
+        self.leases.values().map(|l| l.blocks.len()).sum()
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.cfg.n_blocks
+    }
+
     fn blocks_for(&self, tokens: usize) -> usize {
         tokens.div_ceil(self.cfg.block_size)
     }
@@ -243,6 +254,72 @@ mod tests {
             }
             assert_eq!(m.used_blocks(), 0, "blocks leaked");
         });
+    }
+
+    #[test]
+    fn churn_interleavings_conserve_blocks() {
+        // randomized admit/append/release interleavings: the block pool
+        // is conserved after EVERY operation (free + leased == total),
+        // peak_used is monotone, and appends never corrupt accounting
+        forall("kv manager churn invariants", 40, |g| {
+            let mut m = mgr(g.usize_in(4, 40));
+            let total = m.n_blocks();
+            let mut live: Vec<u64> = Vec::new();
+            let mut next_id = 0u64;
+            let mut last_peak = 0usize;
+            for _ in 0..g.usize_in(20, 150) {
+                match g.usize_in(0, 2) {
+                    0 => {
+                        let p = g.usize_in(1, 40);
+                        let n = g.usize_in(1, 40);
+                        if m.can_admit(p, n) {
+                            m.admit(next_id, p, n).unwrap();
+                            live.push(next_id);
+                            next_id += 1;
+                        }
+                    }
+                    1 if !live.is_empty() => {
+                        // appends may legitimately hit the lease cap;
+                        // they must never break conservation either way
+                        let id = live[g.usize_in(0, live.len() - 1)];
+                        let _ = m.append_token(id);
+                    }
+                    _ if !live.is_empty() => {
+                        let i = g.usize_in(0, live.len() - 1);
+                        m.release(live.swap_remove(i)).unwrap();
+                    }
+                    _ => {}
+                }
+                assert_eq!(
+                    m.free_blocks() + m.leased_blocks(),
+                    total,
+                    "block conservation violated"
+                );
+                assert!(m.peak_used >= last_peak, "peak_used went backwards");
+                assert!(m.peak_used >= m.used_blocks());
+                last_peak = m.peak_used;
+            }
+            for id in live.drain(..) {
+                m.release(id).unwrap();
+            }
+            assert_eq!(m.free_blocks(), total, "blocks leaked");
+            assert_eq!(m.leased_blocks(), 0);
+        });
+    }
+
+    #[test]
+    fn release_reopens_admission_mid_batch() {
+        // continuous batching depends on this: releasing ONE lease makes
+        // its blocks admissible immediately, while other leases stay live
+        let mut m = mgr(4);
+        m.admit(1, 20, 12).unwrap(); // 32 tok → 2 blocks
+        m.admit(2, 20, 12).unwrap(); // 2 more — pool exhausted
+        assert!(!m.can_admit(20, 12));
+        m.release(1).unwrap();
+        assert!(m.can_admit(20, 12), "freed blocks must be immediately re-admittable");
+        m.admit(3, 20, 12).unwrap();
+        assert_eq!(m.tokens_of(2), Some(20), "live lease untouched by the churn");
+        assert_eq!(m.free_blocks() + m.leased_blocks(), m.n_blocks());
     }
 
     #[test]

@@ -1,0 +1,423 @@
+//! Slot-strided KV state — the O(new-slots) admission path.
+//!
+//! The engine used to hold its KV cache as two monolithic
+//! `[layers, batch, heads, seq, d_head]` literals, and admission paid a
+//! full download + splice + re-upload of BOTH for every admitted
+//! request — `4 × layers·batch·heads·seq·d_head` floats crossing the
+//! host↔literal boundary per admission, regardless of how many slots
+//! were actually new. Under steady request churn that dwarfs decode
+//! itself (PR 3 profiling; PERF.md §10).
+//!
+//! [`SlotKv`] restructures the state as ONE literal pair per slot
+//! (vLLM-paged in spirit, matching the per-request accounting
+//! `KvBlockManager` already keeps): the decode executable takes
+//! `kcache_0..kcache_{B-1}, vcache_0..vcache_{B-1}` each shaped
+//! `[layers, heads, seq, d_head]`, and prefill returns per-slot KV the
+//! same way. Admission then *moves handles*: the new slots' prefill
+//! outputs are installed directly, live slots' literals are never read,
+//! copied, or re-uploaded.
+//!
+//! [`FullKv`] keeps the old full-splice path alive as `admit_reference`
+//! — the equivalence oracle the churn property tests compare against
+//! bit for bit (`rust/tests/prop_kv_admission.rs`), and the "before"
+//! side of the admission benches. Both types count the bytes they move
+//! across the host↔literal boundary in `admit_bytes`, which is what the
+//! `kv_admit_*` benches in `micro_hotpaths` pin: strided bytes per
+//! admit are constant in the live batch size; full-splice bytes scale
+//! with it.
+
+use crate::runtime::HostArg;
+use anyhow::{ensure, Result};
+
+/// The KV tensor geometry of one engine (everything but the batch).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KvLayout {
+    pub layers: usize,
+    pub heads: usize,
+    pub seq: usize,
+    pub d_head: usize,
+}
+
+impl KvLayout {
+    pub fn for_model(cfg: &crate::config::ModelConfig) -> Self {
+        KvLayout {
+            layers: cfg.n_layers,
+            heads: cfg.n_heads,
+            seq: cfg.seq,
+            d_head: cfg.d_head(),
+        }
+    }
+
+    /// Elements of one slot within one layer (`heads · seq · d_head`).
+    pub fn layer_slot_elems(&self) -> usize {
+        self.heads * self.seq * self.d_head
+    }
+
+    /// Elements of one slot's full KV tensor (`layers · heads · seq · d_head`).
+    pub fn slot_elems(&self) -> usize {
+        self.layers * self.layer_slot_elems()
+    }
+
+    /// Dims of one slot's literal: `[layers, heads, seq, d_head]`.
+    pub fn slot_dims(&self) -> Vec<usize> {
+        vec![self.layers, self.heads, self.seq, self.d_head]
+    }
+
+    /// Dims of the monolithic layout: `[layers, batch, heads, seq, d_head]`.
+    pub fn full_dims(&self, batch: usize) -> Vec<usize> {
+        vec![self.layers, batch, self.heads, self.seq, self.d_head]
+    }
+
+    pub fn full_elems(&self, batch: usize) -> usize {
+        batch * self.slot_elems()
+    }
+
+    /// Bytes one slot's K+V pair occupies (f32).
+    pub fn slot_kv_bytes(&self) -> u64 {
+        2 * self.slot_elems() as u64 * 4
+    }
+}
+
+/// Gather slot `b`'s strided region out of a full-layout host buffer.
+fn gather_slot(layout: &KvLayout, batch: usize, b: usize, full: &[f32]) -> Vec<f32> {
+    let lse = layout.layer_slot_elems();
+    let mut out = Vec::with_capacity(layout.slot_elems());
+    for l in 0..layout.layers {
+        let off = (l * batch + b) * lse;
+        out.extend_from_slice(&full[off..off + lse]);
+    }
+    out
+}
+
+/// Per-slot KV literals — the slot-strided engine state.
+pub struct SlotKv {
+    pub layout: KvLayout,
+    k: Vec<xla::Literal>,
+    v: Vec<xla::Literal>,
+    /// bytes moved across the host↔literal boundary by admissions
+    pub admit_bytes: u64,
+}
+
+impl SlotKv {
+    /// Zero-initialized state for `batch` slots.
+    pub fn new(layout: KvLayout, batch: usize) -> Result<Self> {
+        ensure!(batch > 0, "SlotKv: batch must be >= 1");
+        let dims = layout.slot_dims();
+        let zero = || HostArg::F32(vec![0.0; layout.slot_elems()], dims.clone()).to_literal();
+        let k = (0..batch).map(|_| zero()).collect::<Result<Vec<_>>>()?;
+        let v = (0..batch).map(|_| zero()).collect::<Result<Vec<_>>>()?;
+        Ok(SlotKv { layout, k, v, admit_bytes: 0 })
+    }
+
+    pub fn batch(&self) -> usize {
+        self.k.len()
+    }
+
+    /// Borrowed executable arguments in ABI order:
+    /// `kcache_0..kcache_{B-1}, vcache_0..vcache_{B-1}`.
+    pub fn args(&self) -> Vec<&xla::Literal> {
+        self.k.iter().chain(self.v.iter()).collect()
+    }
+
+    fn check_slot_dims(&self, what: &str, lit: &xla::Literal) -> Result<()> {
+        let want: Vec<i64> = self.layout.slot_dims().iter().map(|&d| d as i64).collect();
+        ensure!(
+            lit.dims() == want.as_slice(),
+            "{what}: literal dims {:?} do not match the slot layout {:?}",
+            lit.dims(),
+            want
+        );
+        Ok(())
+    }
+
+    /// Install one slot's freshly prefilled KV literals by HANDLE MOVE —
+    /// zero host bytes touched, and no other slot's literal is read.
+    /// This is the real engine's admission path.
+    pub fn install_slot(&mut self, b: usize, k: xla::Literal, v: xla::Literal) -> Result<()> {
+        ensure!(b < self.batch(), "install_slot: slot {b} out of range {}", self.batch());
+        self.check_slot_dims("kcache", &k)?;
+        self.check_slot_dims("vcache", &v)?;
+        self.k[b] = k;
+        self.v[b] = v;
+        Ok(())
+    }
+
+    /// Swap in a decode step's per-slot output literals wholesale (the
+    /// steady-state loop: no host round-trip, exactly like the old
+    /// monolithic swap but per slot).
+    pub fn replace_all(&mut self, k: Vec<xla::Literal>, v: Vec<xla::Literal>) -> Result<()> {
+        ensure!(
+            k.len() == self.batch() && v.len() == self.batch(),
+            "replace_all: got {}/{} literals for batch {}",
+            k.len(),
+            v.len(),
+            self.batch()
+        );
+        for lit in k.iter().chain(v.iter()) {
+            self.check_slot_dims("kv", lit)?;
+        }
+        self.k = k;
+        self.v = v;
+        Ok(())
+    }
+
+    /// Admit from full-layout host buffers: gather ONLY the new slots'
+    /// strided regions and upload one literal pair per new slot. Bytes
+    /// moved: `2 · slot_elems · 4` per admitted slot — independent of
+    /// the live batch size. (The XLA-free churn harness and benches use
+    /// this; the real engine uses [`SlotKv::install_slot`], which moves
+    /// zero bytes.)
+    pub fn admit_from_full(&mut self, slots: &[usize], kc: &[f32], vc: &[f32]) -> Result<()> {
+        let batch = self.batch();
+        let want = self.layout.full_elems(batch);
+        ensure!(
+            kc.len() == want && vc.len() == want,
+            "admit_from_full: buffers {}/{} vs full layout {want}",
+            kc.len(),
+            vc.len()
+        );
+        let dims = self.layout.slot_dims();
+        for &b in slots {
+            ensure!(b < batch, "admit_from_full: slot {b} out of range {batch}");
+            let ks = gather_slot(&self.layout, batch, b, kc);
+            let vs = gather_slot(&self.layout, batch, b, vc);
+            self.k[b] = HostArg::F32(ks, dims.clone()).to_literal()?;
+            self.v[b] = HostArg::F32(vs, dims.clone()).to_literal()?;
+            self.admit_bytes += self.layout.slot_kv_bytes();
+        }
+        Ok(())
+    }
+
+    /// Replace EVERY slot from full-layout host buffers — the churn
+    /// harness's simulated decode swap (not admission traffic, so not
+    /// counted in `admit_bytes`).
+    pub fn swap_from_full(&mut self, kc: &[f32], vc: &[f32]) -> Result<()> {
+        let batch = self.batch();
+        let want = self.layout.full_elems(batch);
+        ensure!(
+            kc.len() == want && vc.len() == want,
+            "swap_from_full: buffers {}/{} vs full layout {want}",
+            kc.len(),
+            vc.len()
+        );
+        let dims = self.layout.slot_dims();
+        for b in 0..batch {
+            let ks = gather_slot(&self.layout, batch, b, kc);
+            let vs = gather_slot(&self.layout, batch, b, vc);
+            self.k[b] = HostArg::F32(ks, dims.clone()).to_literal()?;
+            self.v[b] = HostArg::F32(vs, dims.clone()).to_literal()?;
+        }
+        Ok(())
+    }
+
+    /// Interleave the per-slot literals back into the monolithic
+    /// `[layers, batch, heads, seq, d_head]` layout — the comparison
+    /// point the equivalence property tests use.
+    pub fn to_full(&self) -> Result<(Vec<f32>, Vec<f32>)> {
+        Ok((self.scatter(&self.k)?, self.scatter(&self.v)?))
+    }
+
+    fn scatter(&self, lits: &[xla::Literal]) -> Result<Vec<f32>> {
+        let batch = lits.len();
+        let lse = self.layout.layer_slot_elems();
+        let mut full = vec![0.0f32; self.layout.full_elems(batch)];
+        for (b, lit) in lits.iter().enumerate() {
+            let data: Vec<f32> =
+                lit.to_vec().map_err(|e| anyhow::anyhow!("kv slot {b}: {e:?}"))?;
+            for l in 0..self.layout.layers {
+                let off = (l * batch + b) * lse;
+                full[off..off + lse].copy_from_slice(&data[l * lse..(l + 1) * lse]);
+            }
+        }
+        Ok(full)
+    }
+}
+
+/// The pre-slot-strided KV state: two monolithic literals, kept as the
+/// equivalence oracle and the "before" side of the admission benches.
+pub struct FullKv {
+    pub layout: KvLayout,
+    batch: usize,
+    k: xla::Literal,
+    v: xla::Literal,
+    /// bytes moved across the host↔literal boundary by admissions
+    pub admit_bytes: u64,
+}
+
+impl FullKv {
+    pub fn new(layout: KvLayout, batch: usize) -> Result<Self> {
+        ensure!(batch > 0, "FullKv: batch must be >= 1");
+        let dims = layout.full_dims(batch);
+        let n = layout.full_elems(batch);
+        let zero = || HostArg::F32(vec![0.0; n], dims.clone()).to_literal();
+        Ok(FullKv { layout, batch, k: zero()?, v: zero()?, admit_bytes: 0 })
+    }
+
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// The reference admission path (what `GenerationEngine::admit` did
+    /// before this refactor): download BOTH full literals, splice the
+    /// new slots' strided regions, re-upload everything. Bytes moved:
+    /// `4 · full_elems · 4` per call — proportional to the WHOLE cache
+    /// no matter how few slots were admitted.
+    pub fn admit_reference(&mut self, slots: &[usize], kc: &[f32], vc: &[f32]) -> Result<()> {
+        let want = self.layout.full_elems(self.batch);
+        ensure!(
+            kc.len() == want && vc.len() == want,
+            "admit_reference: buffers {}/{} vs full layout {want}",
+            kc.len(),
+            vc.len()
+        );
+        let mut k: Vec<f32> = self.k.to_vec().map_err(|e| anyhow::anyhow!("kv_k: {e:?}"))?;
+        let mut v: Vec<f32> = self.v.to_vec().map_err(|e| anyhow::anyhow!("kv_v: {e:?}"))?;
+        let lse = self.layout.layer_slot_elems();
+        for &b in slots {
+            ensure!(b < self.batch, "admit_reference: slot {b} out of range {}", self.batch);
+            for l in 0..self.layout.layers {
+                let off = (l * self.batch + b) * lse;
+                k[off..off + lse].copy_from_slice(&kc[off..off + lse]);
+                v[off..off + lse].copy_from_slice(&vc[off..off + lse]);
+            }
+        }
+        let dims = self.layout.full_dims(self.batch);
+        self.k = HostArg::F32(k, dims.clone()).to_literal()?;
+        self.v = HostArg::F32(v, dims).to_literal()?;
+        self.admit_bytes += 4 * want as u64 * 4;
+        Ok(())
+    }
+
+    /// Replace the whole state from full-layout host buffers (simulated
+    /// decode swap; not admission traffic).
+    pub fn swap_host(&mut self, kc: &[f32], vc: &[f32]) -> Result<()> {
+        let want = self.layout.full_elems(self.batch);
+        ensure!(
+            kc.len() == want && vc.len() == want,
+            "swap_host: buffers {}/{} vs full layout {want}",
+            kc.len(),
+            vc.len()
+        );
+        let dims = self.layout.full_dims(self.batch);
+        self.k = HostArg::F32(kc.to_vec(), dims.clone()).to_literal()?;
+        self.v = HostArg::F32(vc.to_vec(), dims).to_literal()?;
+        Ok(())
+    }
+
+    pub fn to_full(&self) -> Result<(Vec<f32>, Vec<f32>)> {
+        let k = self.k.to_vec().map_err(|e| anyhow::anyhow!("kv_k: {e:?}"))?;
+        let v = self.v.to_vec().map_err(|e| anyhow::anyhow!("kv_v: {e:?}"))?;
+        Ok((k, v))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn layout() -> KvLayout {
+        KvLayout { layers: 3, heads: 2, seq: 8, d_head: 4 }
+    }
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn layout_math() {
+        let l = layout();
+        assert_eq!(l.layer_slot_elems(), 2 * 8 * 4);
+        assert_eq!(l.slot_elems(), 3 * 2 * 8 * 4);
+        assert_eq!(l.slot_dims(), vec![3, 2, 8, 4]);
+        assert_eq!(l.full_dims(5), vec![3, 5, 2, 8, 4]);
+        assert_eq!(l.full_elems(5), 5 * l.slot_elems());
+        assert_eq!(l.slot_kv_bytes(), 2 * l.slot_elems() as u64 * 4);
+    }
+
+    #[test]
+    fn strided_matches_full_splice() {
+        // interleaved admissions into different slots must leave both
+        // layouts bit-identical under to_full()
+        let l = layout();
+        let batch = 4;
+        let mut rng = Rng::new(7);
+        let mut s = SlotKv::new(l, batch).unwrap();
+        let mut f = FullKv::new(l, batch).unwrap();
+        for (round, slots) in [vec![0usize, 2], vec![1], vec![2, 3], vec![0]]
+            .into_iter()
+            .enumerate()
+        {
+            let kc = rng.normal_vec(l.full_elems(batch));
+            let vc = rng.normal_vec(l.full_elems(batch));
+            s.admit_from_full(&slots, &kc, &vc).unwrap();
+            f.admit_reference(&slots, &kc, &vc).unwrap();
+            let (sk, sv) = s.to_full().unwrap();
+            let (fk, fv) = f.to_full().unwrap();
+            assert_eq!(bits(&sk), bits(&fk), "round {round}: k diverged");
+            assert_eq!(bits(&sv), bits(&fv), "round {round}: v diverged");
+        }
+        // decode swap keeps them aligned too
+        let kc = rng.normal_vec(l.full_elems(batch));
+        let vc = rng.normal_vec(l.full_elems(batch));
+        s.swap_from_full(&kc, &vc).unwrap();
+        f.swap_host(&kc, &vc).unwrap();
+        let (sk, _) = s.to_full().unwrap();
+        let (fk, _) = f.to_full().unwrap();
+        assert_eq!(bits(&sk), bits(&fk));
+    }
+
+    #[test]
+    fn install_slot_roundtrip() {
+        let l = layout();
+        let mut s = SlotKv::new(l, 2).unwrap();
+        let mut rng = Rng::new(3);
+        let data = rng.normal_vec(l.slot_elems());
+        let lit = |d: &[f32]| HostArg::F32(d.to_vec(), l.slot_dims()).to_literal().unwrap();
+        s.install_slot(1, lit(&data), lit(&data)).unwrap();
+        assert_eq!(s.admit_bytes, 0, "handle move must not count as moved bytes");
+        let (k, _) = s.to_full().unwrap();
+        // slot 1's strided region carries the installed data, slot 0 stays zero
+        let lse = l.layer_slot_elems();
+        for layer in 0..l.layers {
+            let off0 = (layer * 2) * lse;
+            let off1 = (layer * 2 + 1) * lse;
+            assert!(k[off0..off0 + lse].iter().all(|&x| x == 0.0));
+            assert_eq!(bits(&k[off1..off1 + lse]), bits(&data[layer * lse..(layer + 1) * lse]));
+        }
+    }
+
+    #[test]
+    fn admit_bytes_accounting() {
+        // strided: per-admit bytes are constant in the batch size;
+        // full-splice: per-admit bytes scale with it
+        let l = layout();
+        for batch in [2usize, 8] {
+            let mut rng = Rng::new(11);
+            let kc = rng.normal_vec(l.full_elems(batch));
+            let vc = rng.normal_vec(l.full_elems(batch));
+            let mut s = SlotKv::new(l, batch).unwrap();
+            s.admit_from_full(&[0], &kc, &vc).unwrap();
+            assert_eq!(s.admit_bytes, l.slot_kv_bytes(), "batch {batch}");
+            let mut f = FullKv::new(l, batch).unwrap();
+            f.admit_reference(&[0], &kc, &vc).unwrap();
+            assert_eq!(f.admit_bytes, 4 * l.full_elems(batch) as u64 * 4, "batch {batch}");
+        }
+    }
+
+    #[test]
+    fn shape_errors_rejected() {
+        let l = layout();
+        let mut s = SlotKv::new(l, 2).unwrap();
+        let bad = HostArg::F32(vec![0.0; 4], vec![4]).to_literal().unwrap();
+        let good = HostArg::F32(vec![0.0; l.slot_elems()], l.slot_dims()).to_literal().unwrap();
+        assert!(s.install_slot(0, bad, good.clone()).is_err());
+        assert!(s.install_slot(5, good.clone(), good.clone()).is_err());
+        assert!(s.replace_all(vec![good.clone()], vec![good.clone()]).is_err());
+        assert!(s.admit_from_full(&[0], &[0.0; 3], &[0.0; 3]).is_err());
+        let mut f = FullKv::new(l, 2).unwrap();
+        assert!(f.admit_reference(&[0], &[0.0; 3], &[0.0; 3]).is_err());
+        let full = vec![0.0; l.full_elems(2)];
+        assert!(f.admit_reference(&[7], &full, &full).is_err());
+    }
+}

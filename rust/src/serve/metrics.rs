@@ -1,11 +1,28 @@
-//! Serving metrics: throughput / latency accounting for Table 1.
+//! Serving metrics: throughput / latency accounting for Table 1, plus
+//! the backpressure signals continuous batching needs (queue depth,
+//! admission-blocked time, queue-wait vs decode latency split).
 
 use crate::util::stats::percentile;
+use std::fmt;
+
+/// One finished request's accounting. Latency is measured from
+/// SUBMISSION (enqueue), not admission, and split into its queue-wait
+/// and decode components so churn benches can attribute backpressure.
+#[derive(Clone, Copy, Debug)]
+pub struct CompletionStat {
+    /// enqueue → completion (end-to-end, what the client sees)
+    pub latency_ms: f64,
+    /// enqueue → admission (time spent waiting for a slot)
+    pub queue_ms: f64,
+    /// admission → completion (prefill + decode)
+    pub decode_ms: f64,
+    pub generated: usize,
+    pub prompt_len: usize,
+}
 
 #[derive(Clone, Debug, Default)]
 pub struct ServeMetrics {
-    /// per-request (latency_ms, generated tokens, prompt tokens)
-    pub completions: Vec<(f64, usize, usize)>,
+    pub completions: Vec<CompletionStat>,
     pub wall_secs: f64,
     pub decode_steps: u64,
     pub prefill_calls: u64,
@@ -14,12 +31,17 @@ pub struct ServeMetrics {
     /// requests dropped by the router safety valve (stuck work that
     /// could not be admitted; never silently discarded)
     pub dropped: u64,
+    /// high-water mark of the admission queue depth (backpressure)
+    pub queue_peak: usize,
+    /// total time the engine had queued requests it could not place in
+    /// any slot (backpressure: admission wanted to run but was blocked)
+    pub admission_blocked_ms: f64,
 }
 
 impl ServeMetrics {
     /// End-to-end generated-token throughput (tok/s) — Table 1's metric.
     pub fn tok_per_sec(&self) -> f64 {
-        let toks: usize = self.completions.iter().map(|c| c.1).sum();
+        let toks: usize = self.completions.iter().map(|c| c.generated).sum();
         if self.wall_secs <= 0.0 {
             return 0.0;
         }
@@ -27,38 +49,70 @@ impl ServeMetrics {
     }
 
     pub fn total_generated(&self) -> usize {
-        self.completions.iter().map(|c| c.1).sum()
+        self.completions.iter().map(|c| c.generated).sum()
+    }
+
+    fn latency_pct(&self, p: f64) -> f64 {
+        let ls: Vec<f64> = self.completions.iter().map(|c| c.latency_ms).collect();
+        if ls.is_empty() {
+            0.0
+        } else {
+            percentile(&ls, p)
+        }
     }
 
     pub fn latency_p50(&self) -> f64 {
-        let ls: Vec<f64> = self.completions.iter().map(|c| c.0).collect();
-        if ls.is_empty() {
-            0.0
-        } else {
-            percentile(&ls, 50.0)
-        }
+        self.latency_pct(50.0)
     }
 
     pub fn latency_p95(&self) -> f64 {
-        let ls: Vec<f64> = self.completions.iter().map(|c| c.0).collect();
-        if ls.is_empty() {
-            0.0
-        } else {
-            percentile(&ls, 95.0)
+        self.latency_pct(95.0)
+    }
+
+    pub fn latency_p99(&self) -> f64 {
+        self.latency_pct(99.0)
+    }
+
+    /// Mean time completed requests spent queued before admission.
+    pub fn mean_queue_ms(&self) -> f64 {
+        if self.completions.is_empty() {
+            return 0.0;
         }
+        let s: f64 = self.completions.iter().map(|c| c.queue_ms).sum();
+        s / self.completions.len() as f64
+    }
+
+    /// Mean time completed requests spent between admission and
+    /// completion (prefill + decode).
+    pub fn mean_decode_ms(&self) -> f64 {
+        if self.completions.is_empty() {
+            return 0.0;
+        }
+        let s: f64 = self.completions.iter().map(|c| c.decode_ms).sum();
+        s / self.completions.len() as f64
     }
 
     pub fn summary(&self) -> String {
         let mut s = format!(
-            "{} reqs, {} toks, {:.1} tok/s, p50 {:.0} ms, p95 {:.0} ms, {} decode steps, {} prefills",
+            "{} reqs, {} toks, {:.1} tok/s, p50 {:.0} ms, p95 {:.0} ms, p99 {:.0} ms, \
+             queue/decode {:.0}/{:.0} ms, {} decode steps, {} prefills",
             self.completions.len(),
             self.total_generated(),
             self.tok_per_sec(),
             self.latency_p50(),
             self.latency_p95(),
+            self.latency_p99(),
+            self.mean_queue_ms(),
+            self.mean_decode_ms(),
             self.decode_steps,
             self.prefill_calls,
         );
+        if self.queue_peak > 0 {
+            s += &format!(", queue peak {}", self.queue_peak);
+        }
+        if self.admission_blocked_ms > 0.0 {
+            s += &format!(", blocked {:.0} ms", self.admission_blocked_ms);
+        }
         if self.rejected > 0 {
             s += &format!(", {} rejected", self.rejected);
         }
@@ -69,14 +123,30 @@ impl ServeMetrics {
     }
 }
 
+impl fmt::Display for ServeMetrics {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.summary())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    fn stat(latency_ms: f64, queue_ms: f64, generated: usize) -> CompletionStat {
+        CompletionStat {
+            latency_ms,
+            queue_ms,
+            decode_ms: latency_ms - queue_ms,
+            generated,
+            prompt_len: 10,
+        }
+    }
+
     #[test]
     fn throughput_math() {
         let m = ServeMetrics {
-            completions: vec![(100.0, 50, 10), (200.0, 50, 10)],
+            completions: vec![stat(100.0, 20.0, 50), stat(200.0, 40.0, 50)],
             wall_secs: 2.0,
             decode_steps: 100,
             prefill_calls: 2,
@@ -85,6 +155,21 @@ mod tests {
         assert!((m.tok_per_sec() - 50.0).abs() < 1e-9);
         assert_eq!(m.total_generated(), 100);
         assert!((m.latency_p50() - 100.0).abs() < 1e-9 || (m.latency_p50() - 200.0).abs() < 1e-9);
+        assert!((m.mean_queue_ms() - 30.0).abs() < 1e-9);
+        assert!((m.mean_decode_ms() - 120.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentiles_ordered() {
+        let m = ServeMetrics {
+            completions: (1..=100).map(|i| stat(i as f64, 0.0, 1)).collect(),
+            wall_secs: 1.0,
+            ..Default::default()
+        };
+        assert!(m.latency_p50() <= m.latency_p95());
+        assert!(m.latency_p95() <= m.latency_p99());
+        assert!(m.latency_p99() > m.latency_p50());
+        assert!(m.summary().contains("p99"));
     }
 
     #[test]
@@ -92,11 +177,24 @@ mod tests {
         let m = ServeMetrics::default();
         assert_eq!(m.tok_per_sec(), 0.0);
         assert_eq!(m.latency_p50(), 0.0);
+        assert_eq!(m.latency_p99(), 0.0);
+        assert_eq!(m.mean_queue_ms(), 0.0);
         assert!(m.summary().contains("0 reqs"));
-        // rejected/dropped only surface when nonzero
+        // rejected/dropped/backpressure only surface when nonzero
         assert!(!m.summary().contains("rejected"));
-        let m2 = ServeMetrics { rejected: 2, dropped: 1, ..Default::default() };
+        assert!(!m.summary().contains("queue peak"));
+        let m2 = ServeMetrics {
+            rejected: 2,
+            dropped: 1,
+            queue_peak: 7,
+            admission_blocked_ms: 12.0,
+            ..Default::default()
+        };
         assert!(m2.summary().contains("2 rejected"));
         assert!(m2.summary().contains("1 DROPPED"));
+        assert!(m2.summary().contains("queue peak 7"));
+        assert!(m2.summary().contains("blocked 12 ms"));
+        // Display delegates to summary
+        assert_eq!(format!("{m2}"), m2.summary());
     }
 }

@@ -17,16 +17,20 @@
 
 pub mod backend;
 pub mod batcher;
+pub mod churn;
 pub mod engine;
 pub mod kvcache;
+pub mod kvstate;
 pub mod metrics;
 pub mod planes;
 pub mod router;
 pub mod trace;
 
 pub use backend::{Backend, QuantSource};
+pub use churn::{run_churn, ChurnConfig, ChurnReport, KvMode};
 pub use engine::GenerationEngine;
+pub use kvstate::{FullKv, KvLayout, SlotKv};
+pub use metrics::{CompletionStat, ServeMetrics};
 pub use planes::PlaneStore;
-pub use metrics::ServeMetrics;
 pub use router::{Router, RouterConfig};
-pub use trace::{Request, TraceConfig};
+pub use trace::{QueuedRequest, Request, TraceConfig};

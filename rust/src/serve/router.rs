@@ -7,7 +7,7 @@ use super::backend::Backend;
 use super::batcher::{Batcher, BatcherConfig};
 use super::engine::{Completion, GenerationEngine};
 use super::metrics::ServeMetrics;
-use super::trace::Request;
+use super::trace::{QueuedRequest, Request};
 use crate::config::ModelConfig;
 use crate::model::Weights;
 use crate::quant::QuantizedModel;
@@ -70,7 +70,9 @@ impl Router {
                 qmodel.as_ref(),
             )?;
             let mut batcher = Batcher::new(rcfg.batcher.clone());
-            let mut queue: VecDeque<Request> = VecDeque::new();
+            // requests keep their batcher-push submission timestamps —
+            // latency is measured from there, not from admission
+            let mut queue: VecDeque<QueuedRequest> = VecDeque::new();
             let t0 = Instant::now();
             let mut last_work = Instant::now();
             let mut shutdown = false;

@@ -3,6 +3,7 @@
 
 use crate::data::{Corpus, Split};
 use crate::util::prng::Rng;
+use std::time::Instant;
 
 #[derive(Clone, Debug)]
 pub struct Request {
@@ -13,6 +14,28 @@ pub struct Request {
     pub arrival_ms: u64,
 }
 
+/// A request plus the instant it entered the serving system. End-to-end
+/// latency is measured from THIS timestamp (submission), not from
+/// admission — otherwise queueing delay under churn is invisible.
+#[derive(Clone, Debug)]
+pub struct QueuedRequest {
+    pub req: Request,
+    pub enqueued: Instant,
+}
+
+impl QueuedRequest {
+    /// Stamp a request as entering the system now.
+    pub fn now(req: Request) -> Self {
+        QueuedRequest { req, enqueued: Instant::now() }
+    }
+}
+
+impl From<Request> for QueuedRequest {
+    fn from(req: Request) -> Self {
+        QueuedRequest::now(req)
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct TraceConfig {
     pub n_requests: usize,
@@ -21,6 +44,10 @@ pub struct TraceConfig {
     /// mean inter-arrival gap; 0 = closed-loop (all arrive at t=0)
     pub mean_gap_ms: u64,
     pub seed: u64,
+    /// fraction of requests drawing from `long_prompt_len` instead of
+    /// `prompt_len` — the churn scenarios' mixed-prompt-length knob
+    pub long_frac: f64,
+    pub long_prompt_len: (usize, usize),
 }
 
 impl Default for TraceConfig {
@@ -31,6 +58,8 @@ impl Default for TraceConfig {
             max_new: (16, 32),
             mean_gap_ms: 0,
             seed: 0xBEEF,
+            long_frac: 0.0,
+            long_prompt_len: (48, 64),
         }
     }
 }
@@ -41,7 +70,14 @@ pub fn generate_trace(cfg: &TraceConfig, corpus: &Corpus) -> Vec<Request> {
     let mut arrival = 0u64;
     (0..cfg.n_requests)
         .map(|i| {
-            let plen = cfg.prompt_len.0 + rng.below(cfg.prompt_len.1 - cfg.prompt_len.0 + 1);
+            // short-circuit keeps long_frac == 0.0 traces byte-identical
+            // to pre-churn traces (no extra rng draw)
+            let (lo, hi) = if cfg.long_frac > 0.0 && rng.coin(cfg.long_frac) {
+                cfg.long_prompt_len
+            } else {
+                cfg.prompt_len
+            };
+            let plen = lo + rng.below(hi - lo + 1);
             let new = cfg.max_new.0 + rng.below(cfg.max_new.1 - cfg.max_new.0 + 1);
             let seq = corpus.sequence(Split::Val, 90_000 + i);
             let prompt: Vec<i32> = seq[..plen.min(seq.len())].iter().map(|&t| t as i32).collect();
@@ -79,6 +115,39 @@ mod tests {
         let t = generate_trace(&cfg, &corpus);
         assert!(t.windows(2).all(|w| w[1].arrival_ms >= w[0].arrival_ms));
         assert!(t.last().unwrap().arrival_ms > 0);
+    }
+
+    #[test]
+    fn long_prompt_mixture() {
+        let corpus = Corpus::new(256, 96, 1);
+        // long_frac = 1.0: every prompt draws from the long range
+        let all_long = TraceConfig {
+            n_requests: 12,
+            long_frac: 1.0,
+            long_prompt_len: (40, 60),
+            ..Default::default()
+        };
+        for r in generate_trace(&all_long, &corpus) {
+            assert!(r.prompt.len() >= 40 && r.prompt.len() <= 60, "{}", r.prompt.len());
+        }
+        // mixed: both populations show up
+        let mixed = TraceConfig {
+            n_requests: 64,
+            long_frac: 0.5,
+            long_prompt_len: (40, 60),
+            ..Default::default()
+        };
+        let t = generate_trace(&mixed, &corpus);
+        assert!(t.iter().any(|r| r.prompt.len() <= 24));
+        assert!(t.iter().any(|r| r.prompt.len() >= 40));
+    }
+
+    #[test]
+    fn queued_request_wraps() {
+        let r = Request { id: 9, prompt: vec![1], max_new: 2, arrival_ms: 0 };
+        let q: QueuedRequest = r.clone().into();
+        assert_eq!(q.req.id, 9);
+        assert!(q.enqueued.elapsed().as_secs() < 60);
     }
 
     #[test]

@@ -5,9 +5,13 @@ use higgs::config::ModelConfig;
 use higgs::model::Weights;
 use higgs::runtime::Engine;
 use higgs::serve::engine::GenerationEngine;
-use higgs::serve::trace::{generate_trace, Request, TraceConfig};
+use higgs::serve::trace::{generate_trace, QueuedRequest, Request, TraceConfig};
 use higgs::serve::{Backend, Router, RouterConfig};
 use std::collections::VecDeque;
+
+fn qd(reqs: Vec<Request>) -> VecDeque<QueuedRequest> {
+    reqs.into_iter().map(QueuedRequest::now).collect()
+}
 
 fn have_artifacts() -> bool {
     higgs::artifacts_dir().join("decode_dense_tiny_b1.hlo.txt").exists()
@@ -39,7 +43,7 @@ fn every_request_generates_exactly_max_new() {
     let expected: Vec<(u64, usize)> =
         trace.iter().map(|r| (r.id, r.max_new)).collect();
     let mut ge = GenerationEngine::new(&engine, cfg, Backend::Dense, 1, &w, None).unwrap();
-    let mut queue: VecDeque<Request> = trace.into();
+    let mut queue = qd(trace);
     let mut done = Vec::new();
     while !queue.is_empty() || ge.active_slots() > 0 {
         ge.admit(&mut queue).unwrap();
@@ -78,7 +82,7 @@ fn continuous_batching_isolates_slots() {
         let mut ge =
             GenerationEngine::new(&engine, cfg.clone(), Backend::Dense, 1, &w, None)
                 .unwrap();
-        let mut q: VecDeque<Request> = vec![mk(0, 8, 6)].into();
+        let mut q = qd(vec![mk(0, 8, 6)]);
         let mut out = Vec::new();
         while !q.is_empty() || ge.active_slots() > 0 {
             ge.admit(&mut q).unwrap();
@@ -91,7 +95,7 @@ fn continuous_batching_isolates_slots() {
         let mut ge =
             GenerationEngine::new(&engine, cfg.clone(), Backend::Dense, 1, &w, None)
                 .unwrap();
-        let mut q: VecDeque<Request> = vec![mk(7, 5, 3), mk(0, 8, 6)].into();
+        let mut q = qd(vec![mk(7, 5, 3), mk(0, 8, 6)]);
         let mut out = Vec::new();
         while !q.is_empty() || ge.active_slots() > 0 {
             ge.admit(&mut q).unwrap();
@@ -169,7 +173,7 @@ fn batch4_artifacts_run_if_present() {
     let m = ge.run_closed_loop(trace).unwrap();
     assert_eq!(m.completions.len(), 6);
     // batching efficiency: fewer decode steps than serial execution
-    let serial_steps: usize = m.completions.iter().map(|c| c.1).sum();
+    let serial_steps: usize = m.completions.iter().map(|c| c.generated).sum();
     assert!(
         (m.decode_steps as usize) < serial_steps,
         "batching had no effect: {} steps for {} tokens",

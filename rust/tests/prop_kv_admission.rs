@@ -1,0 +1,55 @@
+//! Property test for the tentpole equivalence claim: slot-strided KV
+//! admission is bit-for-bit identical to the old full-splice reference
+//! path under randomized churn — mixed (and over-long) prompt lengths,
+//! mid-batch completions, rejections, bursts, and the drain baseline.
+//!
+//! The comparison itself happens INSIDE the harness (`KvMode::Both`
+//! bit-compares both layouts after every admission and decode swap), so
+//! a divergence fails at the exact operation that caused it; this test
+//! randomizes the workload and pins the conservation accounting.
+
+use higgs::serve::{run_churn, ChurnConfig, KvLayout, KvMode};
+use higgs::util::propcheck::forall;
+
+#[test]
+fn slot_strided_kv_equals_full_splice_under_churn() {
+    forall("slot-strided kv ≡ full-splice", 25, |g| {
+        let seq = g.usize_in(8, 24);
+        let layout = KvLayout {
+            layers: g.usize_in(1, 3),
+            heads: g.usize_in(1, 2),
+            seq,
+            d_head: g.usize_in(1, 4),
+        };
+        let n_requests = g.usize_in(3, 16);
+        let cfg = ChurnConfig {
+            layout,
+            batch: g.usize_in(1, 4),
+            n_requests,
+            prompt_len: (1, seq.saturating_sub(1).clamp(1, 12)),
+            // the long population may exceed seq — admission must clamp
+            long_frac: 0.3,
+            long_prompt_len: (seq / 2 + 1, seq + 4),
+            max_new: (1, g.usize_in(2, 8)),
+            mean_gap_steps: g.usize_in(0, 3) as f64,
+            reject_frac: 0.2,
+            drain: g.bool(),
+            mode: KvMode::Both,
+            seed: g.rng().next_u64(),
+        };
+        let r = run_churn(&cfg).unwrap_or_else(|e| panic!("churn run failed: {e:#}"));
+        // every request is accounted for exactly once
+        assert_eq!(
+            r.admission_steps.len() as u64 + r.rejected + r.dropped,
+            n_requests as u64,
+            "request accounting leak: {r:?}"
+        );
+        assert_eq!(r.completions as usize, r.admission_steps.len(), "admitted but never completed");
+        assert_eq!(r.completions as usize, r.completion_steps.len());
+        assert_eq!(r.blocks_leaked, 0, "KV blocks leaked: {r:?}");
+        // strided admission never moves more bytes than the full splice
+        if r.completions > 0 {
+            assert!(r.admit_bytes_strided <= r.admit_bytes_fullsplice);
+        }
+    });
+}

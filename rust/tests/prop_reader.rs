@@ -433,6 +433,40 @@ fn plane_store_decodes_each_layer_once_across_manifests() {
 }
 
 #[test]
+fn layer_scheme_memoized_no_repeat_io() {
+    let _g = decode_lock();
+    // satellite: `QuantSource::Reader` accessors used to re-read a
+    // layer's plane from disk on EVERY call. `layer_scheme` memoizes —
+    // the first call pays the ranged read, every later call for the
+    // same layer leaves `bytes_read` untouched and returns the SAME
+    // Arc'd scheme.
+    let qm = all_kinds_model(17);
+    let art = QuantArtifact::from_model("memo", &qm);
+    let p = tmp_path("memo");
+    art.save(&p).unwrap();
+    let reader = ArtifactReader::open(&p).unwrap();
+    for e in reader.entries().iter().map(|e| e.name().to_string()).collect::<Vec<_>>() {
+        let before = reader.bytes_read();
+        let first = reader.layer_scheme(&e).unwrap();
+        let paid = reader.bytes_read() - before;
+        assert!(paid > 0, "{e}: first access must read the plane");
+        // repeat accesses: zero additional I/O, identical scheme object
+        for _ in 0..3 {
+            let again = reader.layer_scheme(&e).unwrap();
+            assert!(std::sync::Arc::ptr_eq(&first, &again), "{e}: cache must return the same Arc");
+        }
+        assert_eq!(reader.bytes_read() - before, paid, "{e}: repeat access did disk I/O");
+        // and the cached scheme is bit-identical to an uncached load
+        assert_eq!(
+            to_bits(&first.dequantize().data),
+            to_bits(&reader.load_layer(&e).unwrap().dequantize().data),
+            "{e}: cached scheme diverged from a fresh load"
+        );
+    }
+    let _ = std::fs::remove_file(&p);
+}
+
+#[test]
 fn reader_source_provisions_identical_params_decode_once() {
     let _g = decode_lock();
     // the sharded/lazy cold-start acceptance path: an on-disk reader
