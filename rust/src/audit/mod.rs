@@ -1,0 +1,266 @@
+//! pallas-audit: the repo-specific lint pass (`cargo run --release
+//! --bin audit`). Walks `rust/src`, scans each file with the lexical
+//! pass in [`scan`], applies the token rules in [`rules`], subtracts
+//! the grandfathered findings in `rust/audit_allowlist.txt`
+//! (shrink-only — entries may be removed, never added to sneak new
+//! violations past CI), and emits a machine-readable JSON report.
+//!
+//! Exit policy (see `bin/audit.rs`): 0 when every finding is
+//! allowlisted, 1 otherwise; stale allowlist entries warn on stderr but
+//! do not fail, so deleting the last use of a grandfathered line does
+//! not break the build. Rules and rationale are documented in
+//! PERF.md §11.
+
+pub mod rules;
+pub mod scan;
+
+pub use rules::Finding;
+
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+pub struct AuditConfig {
+    /// Directory to walk for `.rs` files (normally `rust/src`).
+    pub src_root: PathBuf,
+    /// PERF.md, for the env-knob documentation cross-check. None skips
+    /// the knob rule entirely.
+    pub perf_md: Option<PathBuf>,
+    /// Grandfathered findings, `rule<TAB>path<TAB>trimmed-source-line`
+    /// per line. None means nothing is allowlisted.
+    pub allowlist: Option<PathBuf>,
+}
+
+pub struct AuditReport {
+    pub files_scanned: usize,
+    /// Findings the allowlist suppressed.
+    pub allowlisted: usize,
+    /// Allowlist entries that matched nothing (candidates to delete).
+    pub stale_allowlist: Vec<String>,
+    /// Unsuppressed violations, sorted by (path, line, rule).
+    pub findings: Vec<Finding>,
+}
+
+struct AllowEntry {
+    rule: String,
+    path: String,
+    source: String,
+}
+
+pub fn run_audit(cfg: &AuditConfig) -> Result<AuditReport> {
+    let mut files: Vec<String> = Vec::new();
+    collect_rs(&cfg.src_root, &cfg.src_root, &mut files)?;
+    files.sort();
+
+    let knobs: Option<Vec<String>> = match &cfg.perf_md {
+        Some(p) => {
+            let md = std::fs::read_to_string(p)
+                .with_context(|| format!("reading knob table from {}", p.display()))?;
+            Some(knob_table(&md))
+        }
+        None => None,
+    };
+
+    let mut findings: Vec<Finding> = Vec::new();
+    for rel in &files {
+        let path = cfg.src_root.join(rel);
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let fs = scan::scan(&text);
+        rules::check_file(rel, &fs, knobs.as_deref(), &mut findings);
+    }
+    findings.sort_by(|a, b| {
+        (a.path.as_str(), a.line, a.rule).cmp(&(b.path.as_str(), b.line, b.rule))
+    });
+
+    let mut allowlisted = 0usize;
+    let mut stale_allowlist: Vec<String> = Vec::new();
+    if let Some(ap) = &cfg.allowlist {
+        let text = std::fs::read_to_string(ap)
+            .with_context(|| format!("reading allowlist {}", ap.display()))?;
+        let entries = parse_allowlist(&text);
+        let mut used = vec![false; entries.len()];
+        findings.retain(|f| {
+            let hit = entries
+                .iter()
+                .position(|e| e.rule == f.rule && e.path == f.path && e.source == f.source);
+            match hit {
+                Some(i) => {
+                    used[i] = true;
+                    allowlisted += 1;
+                    false
+                }
+                None => true,
+            }
+        });
+        for (e, u) in entries.iter().zip(&used) {
+            if !u {
+                stale_allowlist.push(format!("{}\t{}\t{}", e.rule, e.path, e.source));
+            }
+        }
+    }
+
+    Ok(AuditReport {
+        files_scanned: files.len(),
+        allowlisted,
+        stale_allowlist,
+        findings,
+    })
+}
+
+/// Recursively collect `.rs` files under `root` as sorted repo-relative
+/// forward-slash paths (deterministic across platforms → stable JSON).
+fn collect_rs(root: &Path, dir: &Path, out: &mut Vec<String>) -> Result<()> {
+    let rd = std::fs::read_dir(dir).with_context(|| format!("walking {}", dir.display()))?;
+    let mut entries: Vec<PathBuf> = rd
+        .map(|e| e.map(|e| e.path()))
+        .collect::<std::io::Result<Vec<_>>>()
+        .with_context(|| format!("walking {}", dir.display()))?;
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            collect_rs(root, &p, out)?;
+        } else if p.extension().and_then(|x| x.to_str()) == Some("rs") {
+            let rel = p.strip_prefix(root).context("source path outside root")?;
+            let s = rel
+                .components()
+                .map(|c| c.as_os_str().to_string_lossy().into_owned())
+                .collect::<Vec<_>>()
+                .join("/");
+            out.push(s);
+        }
+    }
+    Ok(())
+}
+
+/// Knob names documented in PERF.md: any HIGGS_* token on a markdown
+/// table row (`|`-prefixed line).
+fn knob_table(md: &str) -> Vec<String> {
+    let mut out: Vec<String> = Vec::new();
+    for line in md.lines() {
+        if !line.trim_start().starts_with('|') {
+            continue;
+        }
+        for k in rules::extract_knobs(line) {
+            if !out.contains(&k) {
+                out.push(k);
+            }
+        }
+    }
+    out
+}
+
+fn parse_allowlist(text: &str) -> Vec<AllowEntry> {
+    let mut out = Vec::new();
+    for line in text.lines() {
+        let line = line.trim_end();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut it = line.splitn(3, '\t');
+        let (rule, path, source) = (it.next(), it.next(), it.next());
+        if let (Some(r), Some(p), Some(s)) = (rule, path, source) {
+            out.push(AllowEntry {
+                rule: r.to_string(),
+                path: p.to_string(),
+                source: s.to_string(),
+            });
+        }
+    }
+    out
+}
+
+/// Render the report as stable, diffable JSON (hand-rolled — the
+/// offline crate set has no serde).
+pub fn report_json(r: &AuditReport) -> String {
+    let mut s = String::from("{\n");
+    s.push_str(&format!("  \"files_scanned\": {},\n", r.files_scanned));
+    s.push_str(&format!("  \"allowlisted\": {},\n", r.allowlisted));
+    s.push_str("  \"stale_allowlist\": [");
+    for (i, e) in r.stale_allowlist.iter().enumerate() {
+        if i > 0 {
+            s.push_str(", ");
+        }
+        s.push('"');
+        s.push_str(&esc(e));
+        s.push('"');
+    }
+    s.push_str("],\n  \"findings\": [");
+    for (i, f) in r.findings.iter().enumerate() {
+        s.push_str(if i == 0 { "\n" } else { ",\n" });
+        s.push_str(&format!(
+            "    {{\"rule\": \"{}\", \"path\": \"{}\", \"line\": {}, \
+             \"message\": \"{}\", \"source\": \"{}\"}}",
+            esc(f.rule),
+            esc(&f.path),
+            f.line,
+            esc(&f.message),
+            esc(&f.source),
+        ));
+    }
+    if r.findings.is_empty() {
+        s.push_str("]\n}\n");
+    } else {
+        s.push_str("\n  ]\n}\n");
+    }
+    s
+}
+
+fn esc(text: &str) -> String {
+    let mut out = String::with_capacity(text.len());
+    for c in text.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn knob_table_parses_markdown_rows() {
+        let md = "\
+# Doc
+HIGGS_NOT_A_ROW mentioned in prose is ignored.
+
+| knob | meaning |
+|---|---|
+| `HIGGS_THREADS` | workers |
+| `HIGGS_BENCH_JSON` | json out |
+";
+        let k = knob_table(md);
+        assert_eq!(k, vec!["HIGGS_THREADS", "HIGGS_BENCH_JSON"]);
+    }
+
+    #[test]
+    fn allowlist_parse_skips_comments_and_malformed() {
+        let t = "# comment\n\nrule-a\tserve/x.rs\tlet y = 1;\nmalformed line\n";
+        let e = parse_allowlist(t);
+        assert_eq!(e.len(), 1);
+        assert_eq!(e[0].rule, "rule-a");
+        assert_eq!(e[0].path, "serve/x.rs");
+        assert_eq!(e[0].source, "let y = 1;");
+    }
+
+    #[test]
+    fn json_escaping() {
+        assert_eq!(esc("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+        let r = AuditReport {
+            files_scanned: 0,
+            allowlisted: 0,
+            stale_allowlist: vec![],
+            findings: vec![],
+        };
+        let j = report_json(&r);
+        assert!(j.contains("\"findings\": []"));
+        assert!(j.starts_with('{') && j.trim_end().ends_with('}'));
+    }
+}

@@ -1,0 +1,493 @@
+//! The lint rules. Each rule is a pure function over one scanned file
+//! (`FileScan`) — rules never re-read source text, so everything they
+//! see has comments and string interiors already blanked (a banned
+//! token inside a string literal or comment can never fire a rule).
+//!
+//! Rule ids are stable strings: they key the allowlist and the JSON
+//! report, so renaming one invalidates grandfathered entries. See
+//! PERF.md §11 for the rationale behind each rule.
+
+use super::scan::FileScan;
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Finding {
+    /// Stable rule id (allowlist key).
+    pub rule: &'static str,
+    /// Repo-relative path under `rust/src`, forward slashes.
+    pub path: String,
+    /// 1-based line number.
+    pub line: usize,
+    pub message: String,
+    /// The offending line, trimmed (allowlist key — survives edits
+    /// elsewhere in the file).
+    pub source: String,
+}
+
+/// Files where panics/unwraps in non-test code are banned outright:
+/// everything under `serve/` plus the artifact parse paths.
+const PANIC_SCOPE_FILES: [&str; 2] = ["quant/artifact.rs", "quant/reader.rs"];
+const PANIC_TOKENS: [&str; 6] = [
+    ".unwrap()",
+    ".expect(",
+    "panic!",
+    "unreachable!",
+    "todo!",
+    "unimplemented!",
+];
+/// Fn-name prefixes that mark a parse path (unchecked `[...]` banned).
+const PARSE_FN_PREFIXES: [&str; 4] = ["parse", "from_bytes", "load", "open"];
+/// Modules that must be deterministic: replayable churn traces and
+/// property-check shrinking both break if wall time leaks in.
+const WALL_CLOCK_FILES: [&str; 2] = ["serve/churn.rs", "util/propcheck.rs"];
+const WALL_CLOCK_TOKENS: [&str; 3] = ["Instant::now", "SystemTime", "thread::sleep"];
+
+/// Run every rule against one file. `knobs` is the set of HIGGS_* names
+/// documented in PERF.md's knob table (None = PERF.md unavailable, knob
+/// rule skipped).
+pub fn check_file(rel: &str, fs: &FileScan, knobs: Option<&[String]>, out: &mut Vec<Finding>) {
+    rule_unsafe(rel, fs, out);
+    rule_panic_path(rel, fs, out);
+    rule_parse_index(rel, fs, out);
+    rule_thread_spawn(rel, fs, out);
+    rule_wall_clock(rel, fs, out);
+    rule_env_var(rel, fs, out);
+    if let Some(k) = knobs {
+        rule_env_knob_doc(rel, fs, k, out);
+    }
+}
+
+fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// `word` present with non-identifier characters on both sides.
+fn has_word(code: &str, word: &str) -> bool {
+    let bytes = code.as_bytes();
+    let mut from = 0;
+    while let Some(p) = code[from..].find(word) {
+        let at = from + p;
+        let end = at + word.len();
+        let before_ok = at == 0 || !is_ident_byte(bytes[at - 1]);
+        let after_ok = end >= bytes.len() || !is_ident_byte(bytes[end]);
+        if before_ok && after_ok {
+            return true;
+        }
+        from = end;
+    }
+    false
+}
+
+fn finding(rule: &'static str, rel: &str, fs: &FileScan, idx: usize, message: String) -> Finding {
+    Finding {
+        rule,
+        path: rel.to_string(),
+        line: idx + 1,
+        message,
+        source: fs.lines[idx].raw.clone(),
+    }
+}
+
+/// Any comment containing `SAFETY` on this line or the 5 above it.
+fn has_safety_comment(fs: &FileScan, idx: usize) -> bool {
+    let lo = idx.saturating_sub(5);
+    fs.comments
+        .iter()
+        .any(|(l, t)| (lo..=idx).contains(l) && t.contains("SAFETY"))
+}
+
+/// Walk the doc-comment/attribute run directly above line `idx` looking
+/// for a `# Safety` section.
+fn has_safety_doc(fs: &FileScan, idx: usize) -> bool {
+    let mut j = idx;
+    while j > 0 {
+        j -= 1;
+        let docs: Vec<&str> = fs
+            .comments
+            .iter()
+            .filter(|(l, _)| *l == j)
+            .map(|(_, t)| t.as_str())
+            .collect();
+        if !docs.is_empty() {
+            if docs.iter().any(|t| t.contains("# Safety")) {
+                return true;
+            }
+            if docs.iter().any(|t| t.trim_start().starts_with("///")) {
+                continue; // keep walking up the doc run
+            }
+            return false;
+        }
+        let code = fs.lines[j].code.trim();
+        if code.is_empty() || code.starts_with('#') {
+            continue; // blank line or attribute between docs and item
+        }
+        return false;
+    }
+    false
+}
+
+/// unsafe-safety-comment / pub-unsafe-fn-doc: every `unsafe` site needs
+/// its contract written down where the reviewer will see it. Applies to
+/// test code too — tests exercise the same contracts.
+fn rule_unsafe(rel: &str, fs: &FileScan, out: &mut Vec<Finding>) {
+    for (i, l) in fs.lines.iter().enumerate() {
+        if !has_word(&l.code, "unsafe") {
+            continue;
+        }
+        let after = match l.code.split_once("unsafe") {
+            Some((_, a)) => a.trim_start(),
+            None => continue,
+        };
+        let is_fn_decl = after.starts_with("fn ") || after.starts_with("fn<");
+        if is_fn_decl {
+            if has_safety_doc(fs, i) || has_safety_comment(fs, i) {
+                continue;
+            }
+            if has_word(&l.code, "pub") {
+                out.push(finding(
+                    "pub-unsafe-fn-doc",
+                    rel,
+                    fs,
+                    i,
+                    "pub unsafe fn without a `# Safety` doc section".to_string(),
+                ));
+            } else {
+                out.push(finding(
+                    "unsafe-safety-comment",
+                    rel,
+                    fs,
+                    i,
+                    "unsafe fn without a `# Safety` doc or `SAFETY:` comment".to_string(),
+                ));
+            }
+        } else if !has_safety_comment(fs, i) {
+            out.push(finding(
+                "unsafe-safety-comment",
+                rel,
+                fs,
+                i,
+                "unsafe without a `// SAFETY:` comment within 5 lines".to_string(),
+            ));
+        }
+    }
+}
+
+/// panic-path: no `.unwrap()` / `.expect(` / `panic!`-family in
+/// non-test serving and artifact-parse code — corrupted input or ABI
+/// drift must surface as `Err`, not tear down the engine thread.
+fn rule_panic_path(rel: &str, fs: &FileScan, out: &mut Vec<Finding>) {
+    if !rel.starts_with("serve/") && !PANIC_SCOPE_FILES.contains(&rel) {
+        return;
+    }
+    for (i, l) in fs.lines.iter().enumerate() {
+        if l.in_test {
+            continue;
+        }
+        if let Some(tok) = PANIC_TOKENS.iter().find(|t| l.code.contains(*t)) {
+            out.push(finding(
+                "panic-path",
+                rel,
+                fs,
+                i,
+                format!("panicking call `{tok}` on a serving/parse path"),
+            ));
+        }
+    }
+}
+
+/// parse-index: inside parse-path fns of the artifact files, `[` right
+/// after an expression is an unchecked index over untrusted bytes —
+/// use `get`/`split_at`/`chunks_exact` instead.
+fn rule_parse_index(rel: &str, fs: &FileScan, out: &mut Vec<Finding>) {
+    if !PANIC_SCOPE_FILES.contains(&rel) {
+        return;
+    }
+    for (i, l) in fs.lines.iter().enumerate() {
+        if l.in_test {
+            continue;
+        }
+        let Some(name) = &l.fn_name else { continue };
+        if !PARSE_FN_PREFIXES.iter().any(|p| name.starts_with(p)) {
+            continue;
+        }
+        let chars: Vec<char> = l.code.chars().collect();
+        let indexed = chars.windows(2).any(|w| {
+            w[1] == '[' && (w[0].is_alphanumeric() || w[0] == '_' || w[0] == ')' || w[0] == ']')
+        });
+        if indexed {
+            out.push(finding(
+                "parse-index",
+                rel,
+                fs,
+                i,
+                format!("unchecked indexing in parse-path fn `{name}`"),
+            ));
+        }
+    }
+}
+
+/// thread-spawn: all parallelism goes through `util::pool` so the
+/// write-audit sanitizer and thread-count knob see every worker.
+fn rule_thread_spawn(rel: &str, fs: &FileScan, out: &mut Vec<Finding>) {
+    if rel == "util/pool.rs" {
+        return;
+    }
+    for (i, l) in fs.lines.iter().enumerate() {
+        if l.in_test {
+            continue;
+        }
+        if l.code.contains("thread::spawn") {
+            out.push(finding(
+                "thread-spawn",
+                rel,
+                fs,
+                i,
+                "raw thread::spawn outside util/pool.rs".to_string(),
+            ));
+        }
+    }
+}
+
+/// wall-clock: churn replay and propcheck shrinking must be
+/// deterministic — route time through the `Clock` seam instead.
+fn rule_wall_clock(rel: &str, fs: &FileScan, out: &mut Vec<Finding>) {
+    if !WALL_CLOCK_FILES.contains(&rel) {
+        return;
+    }
+    for (i, l) in fs.lines.iter().enumerate() {
+        if l.in_test {
+            continue;
+        }
+        if let Some(tok) = WALL_CLOCK_TOKENS.iter().find(|t| l.code.contains(*t)) {
+            out.push(finding(
+                "wall-clock",
+                rel,
+                fs,
+                i,
+                format!("wall-clock call `{tok}` in deterministic module"),
+            ));
+        }
+    }
+}
+
+/// env-var: raw `std::env::var` scatters defaulting/parsing policy;
+/// the `util::env_*` helpers centralize it (and make knobs greppable).
+fn rule_env_var(rel: &str, fs: &FileScan, out: &mut Vec<Finding>) {
+    if rel == "util/mod.rs" {
+        return;
+    }
+    for (i, l) in fs.lines.iter().enumerate() {
+        if l.in_test {
+            continue;
+        }
+        if l.code.contains("env::var(") {
+            out.push(finding(
+                "env-var",
+                rel,
+                fs,
+                i,
+                "raw std::env::var outside util::env_* helpers".to_string(),
+            ));
+        }
+    }
+}
+
+/// env-knob-doc: every HIGGS_* knob literal in non-test code must
+/// appear in PERF.md's knob table — undocumented knobs rot.
+fn rule_env_knob_doc(rel: &str, fs: &FileScan, knobs: &[String], out: &mut Vec<Finding>) {
+    for (li, text) in &fs.strings {
+        let in_test = fs.lines.get(*li).map(|l| l.in_test).unwrap_or(false);
+        if in_test {
+            continue;
+        }
+        for name in extract_knobs(text) {
+            if !knobs.iter().any(|k| *k == name) {
+                out.push(finding(
+                    "env-knob-doc",
+                    rel,
+                    fs,
+                    *li,
+                    format!("env knob `{name}` not documented in PERF.md's knob table"),
+                ));
+            }
+        }
+    }
+}
+
+/// Extract HIGGS_* knob names from a chunk of text (string literal or
+/// PERF.md table row). A bare `HIGGS_` prefix with nothing after it is
+/// not a knob.
+pub fn extract_knobs(text: &str) -> Vec<String> {
+    const PREFIX: &str = "HIGGS_";
+    let bytes = text.as_bytes();
+    let mut out: Vec<String> = Vec::new();
+    for (at, _) in text.match_indices(PREFIX) {
+        if at > 0 && is_ident_byte(bytes[at - 1]) {
+            continue; // mid-identifier, e.g. NOT_HIGGS_X
+        }
+        let rest = &text[at..];
+        let end = rest
+            .char_indices()
+            .find(|&(_, c)| !(c.is_ascii_uppercase() || c.is_ascii_digit() || c == '_'))
+            .map(|(p, _)| p)
+            .unwrap_or(rest.len());
+        if end > PREFIX.len() {
+            let name = rest[..end].trim_end_matches('_').to_string();
+            if name.len() > PREFIX.len() && !out.contains(&name) {
+                out.push(name);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::audit::scan::scan;
+
+    fn run(rel: &str, src: &str, knobs: Option<&[String]>) -> Vec<Finding> {
+        let fs = scan(src);
+        let mut out = Vec::new();
+        check_file(rel, &fs, knobs, &mut out);
+        out
+    }
+
+    #[test]
+    fn panic_tokens_flagged_only_in_scope_and_outside_tests() {
+        let src = "\
+pub fn step() {
+    let v: Option<u8> = None;
+    v.unwrap();
+}
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t() {
+        Some(1).unwrap();
+    }
+}
+";
+        let f = run("serve/engine.rs", src, None);
+        assert_eq!(f.iter().filter(|x| x.rule == "panic-path").count(), 1);
+        assert_eq!(f[0].line, 3);
+        // same source outside the scope: clean
+        assert!(run("quant/higgs.rs", src, None).is_empty());
+    }
+
+    #[test]
+    fn tokens_inside_strings_do_not_fire() {
+        let src = "pub fn step() { let m = \"don't .unwrap() here\"; let _ = m; }\n";
+        assert!(run("serve/engine.rs", src, None).is_empty());
+    }
+
+    #[test]
+    fn near_miss_tokens_do_not_fire() {
+        let src = "\
+pub fn step(o: Option<u32>) -> u32 {
+    let v = vec![1u32];
+    let w = o.unwrap_or(0);
+    self.expect_byte(b':');
+    v.into_iter().next().unwrap_or(w)
+}
+";
+        // unwrap_or / expect_byte / vec! must not match the banned tokens
+        let f = run("serve/engine.rs", src, None);
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn parse_index_only_in_parse_fns() {
+        let src = "\
+pub fn from_bytes(buf: &[u8]) -> u8 {
+    buf[0]
+}
+pub fn helper(buf: &[u8]) -> u8 {
+    buf[1]
+}
+";
+        let f = run("quant/artifact.rs", src, None);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "parse-index");
+        assert_eq!(f[0].line, 2);
+        assert!(f[0].message.contains("from_bytes"));
+    }
+
+    #[test]
+    fn unsafe_needs_safety_comment() {
+        let bad = "pub fn f(p: *mut u8) { unsafe { *p = 0 }; }\n";
+        let f = run("quant/higgs.rs", bad, None);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "unsafe-safety-comment");
+        let good = "\
+pub fn f(p: *mut u8) {
+    // SAFETY: caller guarantees p is valid and exclusive.
+    unsafe { *p = 0 };
+}
+";
+        assert!(run("quant/higgs.rs", good, None).is_empty());
+    }
+
+    #[test]
+    fn pub_unsafe_fn_needs_safety_doc() {
+        let bad = "pub unsafe fn poke(p: *mut u8) { *p = 0 }\n";
+        let f = run("util/pool.rs", bad, None);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "pub-unsafe-fn-doc");
+        let good = "\
+/// Writes a byte.
+///
+/// # Safety
+/// `p` must be valid for writes.
+pub unsafe fn poke(p: *mut u8) {
+    *p = 0
+}
+";
+        assert!(run("util/pool.rs", good, None).is_empty());
+    }
+
+    #[test]
+    fn spawn_clock_env_rules() {
+        let src = "\
+pub fn go() {
+    let h = std::thread::spawn(|| 1);
+    let _t = std::time::Instant::now();
+    let _e = std::env::var(\"HOME\");
+    let _ = h.join();
+}
+";
+        let f = run("serve/churn.rs", src, None);
+        let rules: Vec<&str> = f.iter().map(|x| x.rule).collect();
+        assert!(rules.contains(&"thread-spawn"));
+        assert!(rules.contains(&"wall-clock"));
+        assert!(rules.contains(&"env-var"));
+        // pool.rs may spawn; quant files may read the clock
+        assert!(run("util/pool.rs", src, None)
+            .iter()
+            .all(|x| x.rule != "thread-spawn" && x.rule != "wall-clock"));
+    }
+
+    #[test]
+    fn knob_doc_rule() {
+        let knobs = vec!["HIGGS_THREADS".to_string()];
+        let src = "\
+pub fn a() -> usize {
+    crate::util::env_usize(\"HIGGS_THREADS\", 1)
+}
+pub fn b() -> usize {
+    crate::util::env_usize(\"HIGGS_MYSTERY\", 1)
+}
+";
+        let f = run("util/bench.rs", src, Some(&knobs));
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "env-knob-doc");
+        assert!(f[0].message.contains("HIGGS_MYSTERY"));
+    }
+
+    #[test]
+    fn knob_extraction() {
+        assert_eq!(extract_knobs("| `HIGGS_THREADS` | worker count |"), vec!["HIGGS_THREADS"]);
+        assert_eq!(extract_knobs("HIGGS_A and HIGGS_A again"), vec!["HIGGS_A"]);
+        assert!(extract_knobs("a bare HIGGS_ prefix").is_empty());
+        assert!(extract_knobs("NOT_HIGGS_X").is_empty());
+    }
+}

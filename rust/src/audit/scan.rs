@@ -1,0 +1,433 @@
+//! Lexical scanner behind the repo lint (`cargo run --bin audit`): a
+//! hand-rolled pass that blanks comments and string/char interiors out
+//! of a Rust source file while remembering where they were, and
+//! annotates every line with "is this test code?" and "which fn am I
+//! in?". Just enough structure for the token rules in [`super::rules`]
+//! — no syn/proc-macro in the offline crate set, and none needed: the
+//! rules are token-shaped, not type-shaped.
+
+/// One annotated source line.
+pub struct Line {
+    /// Source text with comments and string/char interiors blanked to
+    /// spaces. Token rules match against THIS, so `".unwrap()"` inside
+    /// a string or comment never trips a rule. Columns are preserved
+    /// (blanking is 1:1), so previous-character checks stay exact.
+    pub code: String,
+    /// The original line, trimmed — the allowlist key (line-number
+    /// independent, so entries survive unrelated edits above them).
+    pub raw: String,
+    /// Inside a `#[cfg(test)]`-gated item.
+    pub in_test: bool,
+    /// Innermost enclosing `fn`'s name, if any.
+    pub fn_name: Option<String>,
+}
+
+/// A scanned file: annotated lines plus the comment/string text the
+/// blanking removed (rules that WANT comments — `SAFETY:` detection —
+/// or string contents — env-knob names — read these).
+pub struct FileScan {
+    /// 0-based line → comment text on that line (doc comments
+    /// included; multi-line block comments contribute one entry per
+    /// spanned line).
+    pub comments: Vec<(usize, String)>,
+    /// 0-based line (of the opening quote) → string literal contents.
+    pub strings: Vec<(usize, String)>,
+    pub lines: Vec<Line>,
+}
+
+pub fn scan(source: &str) -> FileScan {
+    let (cleaned, comments, strings) = blank(source);
+    annotate(source, &cleaned, comments, strings)
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_ascii_alphabetic() || c == '_'
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Pass 1: blank comments and string/char interiors to spaces,
+/// collecting their text. Newlines are preserved exactly so line
+/// numbers line up between `source` and the cleaned text.
+fn blank(source: &str) -> (String, Vec<(usize, String)>, Vec<(usize, String)>) {
+    let chars: Vec<char> = source.chars().collect();
+    let mut out = String::with_capacity(source.len());
+    let mut comments: Vec<(usize, String)> = Vec::new();
+    let mut strings: Vec<(usize, String)> = Vec::new();
+    let mut line = 0usize;
+    let mut i = 0usize;
+    while i < chars.len() {
+        let c = chars[i];
+        // line comment (incl. /// and //! doc comments)
+        if c == '/' && chars.get(i + 1) == Some(&'/') {
+            let mut text = String::new();
+            while i < chars.len() && chars[i] != '\n' {
+                text.push(chars[i]);
+                out.push(' ');
+                i += 1;
+            }
+            comments.push((line, text));
+            continue;
+        }
+        // block comment (Rust block comments nest)
+        if c == '/' && chars.get(i + 1) == Some(&'*') {
+            let mut depth = 0usize;
+            let mut text = String::new();
+            while i < chars.len() {
+                if chars[i] == '\n' {
+                    comments.push((line, std::mem::take(&mut text)));
+                    out.push('\n');
+                    line += 1;
+                    i += 1;
+                } else if chars[i] == '/' && chars.get(i + 1) == Some(&'*') {
+                    depth += 1;
+                    text.push_str("/*");
+                    out.push_str("  ");
+                    i += 2;
+                } else if chars[i] == '*' && chars.get(i + 1) == Some(&'/') {
+                    depth = depth.saturating_sub(1);
+                    text.push_str("*/");
+                    out.push_str("  ");
+                    i += 2;
+                    if depth == 0 {
+                        break;
+                    }
+                } else {
+                    text.push(chars[i]);
+                    out.push(' ');
+                    i += 1;
+                }
+            }
+            if !text.is_empty() {
+                comments.push((line, text));
+            }
+            continue;
+        }
+        // plain or byte string
+        if c == '"' {
+            i = blank_string(&chars, i, &mut out, &mut strings, &mut line);
+            continue;
+        }
+        if (c == 'b' || c == 'r') && (i == 0 || !is_ident(chars[i - 1])) {
+            // raw (and byte-raw) strings: r"..", r#".."#, br#".."#
+            if let Some((hashes, qpos)) = raw_string_open(&chars, i) {
+                for &p in &chars[i..=qpos] {
+                    out.push(p); // the r##" prefix itself is token-free
+                }
+                i = blank_raw_string(&chars, qpos + 1, hashes, &mut out, &mut strings, &mut line);
+                continue;
+            }
+            if c == 'b' && chars.get(i + 1) == Some(&'"') {
+                out.push('b');
+                i = blank_string(&chars, i + 1, &mut out, &mut strings, &mut line);
+                continue;
+            }
+        }
+        // char literal vs lifetime
+        if c == '\'' {
+            if let Some(close) = char_literal_close(&chars, i) {
+                out.push('\'');
+                for _ in i + 1..close {
+                    out.push(' ');
+                }
+                out.push('\'');
+                i = close + 1;
+                continue;
+            }
+        }
+        if c == '\n' {
+            line += 1;
+        }
+        out.push(c);
+        i += 1;
+    }
+    (out, comments, strings)
+}
+
+/// Blank a `"…"` body starting at the opening quote; returns the index
+/// past the closing quote.
+fn blank_string(
+    chars: &[char],
+    open: usize,
+    out: &mut String,
+    strings: &mut Vec<(usize, String)>,
+    line: &mut usize,
+) -> usize {
+    out.push('"');
+    let start_line = *line;
+    let mut text = String::new();
+    let mut i = open + 1;
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\\' && i + 1 < chars.len() {
+            text.push(c);
+            text.push(chars[i + 1]);
+            if chars[i + 1] == '\n' {
+                // line continuation inside a string
+                out.push(' ');
+                out.push('\n');
+                *line += 1;
+            } else {
+                out.push_str("  ");
+            }
+            i += 2;
+        } else if c == '"' {
+            out.push('"');
+            i += 1;
+            break;
+        } else if c == '\n' {
+            text.push('\n');
+            out.push('\n');
+            *line += 1;
+            i += 1;
+        } else {
+            text.push(c);
+            out.push(' ');
+            i += 1;
+        }
+    }
+    strings.push((start_line, text));
+    i
+}
+
+/// `i` points at `r` or `b`; Some((hash_count, quote_index)) if a raw
+/// string literal opens here.
+fn raw_string_open(chars: &[char], i: usize) -> Option<(usize, usize)> {
+    let mut j = i;
+    if chars[j] == 'b' {
+        j += 1;
+    }
+    if chars.get(j) != Some(&'r') {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0usize;
+    while chars.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if chars.get(j) == Some(&'"') {
+        Some((hashes, j))
+    } else {
+        None
+    }
+}
+
+/// Blank a raw-string body (no escapes; closes at `"` + `hashes` `#`s).
+fn blank_raw_string(
+    chars: &[char],
+    body: usize,
+    hashes: usize,
+    out: &mut String,
+    strings: &mut Vec<(usize, String)>,
+    line: &mut usize,
+) -> usize {
+    let start_line = *line;
+    let mut text = String::new();
+    let mut i = body;
+    while i < chars.len() {
+        if chars[i] == '"'
+            && i + hashes < chars.len()
+            && chars[i + 1..=i + hashes].iter().all(|&h| h == '#')
+        {
+            out.push('"');
+            for _ in 0..hashes {
+                out.push('#');
+            }
+            i += 1 + hashes;
+            break;
+        }
+        if chars[i] == '\n' {
+            text.push('\n');
+            out.push('\n');
+            *line += 1;
+        } else {
+            text.push(chars[i]);
+            out.push(' ');
+        }
+        i += 1;
+    }
+    strings.push((start_line, text));
+    i
+}
+
+/// `i` points at a `'`. Some(index of the closing `'`) when this is a
+/// char literal; None for a lifetime (`'a`, `'static`, `'_`).
+fn char_literal_close(chars: &[char], i: usize) -> Option<usize> {
+    let next = *chars.get(i + 1)?;
+    if next == '\\' {
+        let mut j = i + 2;
+        match chars.get(j)? {
+            'u' => {
+                // '\u{…}'
+                while j < chars.len() && chars[j] != '\'' && j - i < 12 {
+                    j += 1;
+                }
+                return (chars.get(j) == Some(&'\'')).then_some(j);
+            }
+            'x' => j += 2, // '\x41'
+            _ => {}        // '\n', '\\', '\''
+        }
+        j += 1;
+        return (chars.get(j) == Some(&'\'')).then_some(j);
+    }
+    if next == '\'' {
+        return None;
+    }
+    // 'x' (single char, possibly multi-byte — chars[] is char-level)
+    (chars.get(i + 2) == Some(&'\'')).then_some(i + 2)
+}
+
+/// Pass 2: walk the cleaned text tracking brace scopes to tag each
+/// line with test-ness and its innermost enclosing fn.
+fn annotate(
+    source: &str,
+    cleaned: &str,
+    comments: Vec<(usize, String)>,
+    strings: Vec<(usize, String)>,
+) -> FileScan {
+    struct Scope {
+        fn_name: Option<String>,
+        test: bool,
+    }
+    let raw_lines: Vec<&str> = source.lines().collect();
+    let mut stack: Vec<Scope> = Vec::new();
+    let mut pending_fn: Option<String> = None;
+    let mut pending_test = false;
+    let mut lines = Vec::new();
+    for (li, cl) in cleaned.lines().enumerate() {
+        // an attribute line arms test-ness before its item's `{` opens
+        // (checked first: the brace usually sits on a later line)
+        if cl.contains("cfg(test") {
+            pending_test = true;
+        }
+        let mut in_test = pending_test || stack.iter().any(|s| s.test);
+        let mut fn_name = stack.iter().rev().find_map(|s| s.fn_name.clone());
+        let lchars: Vec<char> = cl.chars().collect();
+        let mut k = 0usize;
+        while k < lchars.len() {
+            let c = lchars[k];
+            if is_ident_start(c) {
+                let start = k;
+                while k < lchars.len() && is_ident(lchars[k]) {
+                    k += 1;
+                }
+                if k - start == 2 && lchars[start] == 'f' && lchars[start + 1] == 'n' {
+                    let mut j = k;
+                    while j < lchars.len() && lchars[j].is_whitespace() {
+                        j += 1;
+                    }
+                    let ns = j;
+                    while j < lchars.len() && is_ident(lchars[j]) {
+                        j += 1;
+                    }
+                    if j > ns {
+                        pending_fn = Some(lchars[ns..j].iter().collect());
+                    }
+                    k = j;
+                }
+                continue;
+            }
+            match c {
+                '{' => {
+                    let test = std::mem::take(&mut pending_test);
+                    let f = pending_fn.take();
+                    if f.is_some() {
+                        fn_name = f.clone();
+                    }
+                    in_test |= test;
+                    stack.push(Scope { fn_name: f, test });
+                }
+                '}' => {
+                    stack.pop();
+                }
+                ';' => {
+                    // end of a brace-less item (trait fn decl, gated
+                    // `use`): the pending markers bind to nothing
+                    pending_fn = None;
+                    pending_test = false;
+                }
+                _ => {}
+            }
+            k += 1;
+        }
+        lines.push(Line {
+            code: cl.to_string(),
+            raw: raw_lines.get(li).map(|r| r.trim()).unwrap_or("").to_string(),
+            in_test,
+            fn_name,
+        });
+    }
+    FileScan { comments, strings, lines }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strings_and_comments_blanked_but_recorded() {
+        let src = "let x = \"a.unwrap() inside\"; // c.unwrap() too\nlet y = 1;\n";
+        let s = scan(src);
+        assert!(!s.lines[0].code.contains("unwrap"));
+        assert_eq!(s.strings.len(), 1);
+        assert!(s.strings[0].1.contains("a.unwrap() inside"));
+        assert_eq!(s.comments.len(), 1);
+        assert!(s.comments[0].1.contains("c.unwrap() too"));
+        // columns preserved
+        assert_eq!(s.lines[0].code.len(), src.lines().next().map(|l| l.len()).unwrap_or(0));
+    }
+
+    #[test]
+    fn char_literals_and_lifetimes() {
+        // a quote inside a char literal must not open a string
+        let src = "fn f<'a>(c: char) -> bool { c == '\"' || c == '\\'' }\nlet z = 0;\n";
+        let s = scan(src);
+        assert!(s.lines[1].code.contains("let z"));
+        assert_eq!(s.lines[0].fn_name.as_deref(), Some("f"));
+    }
+
+    #[test]
+    fn raw_strings_blanked() {
+        let src = "let j = r#\"{\"k\": \".expect(\"}\"#;\nlet w = 2;\n";
+        let s = scan(src);
+        assert!(!s.lines[0].code.contains(".expect("));
+        assert!(s.strings[0].1.contains(".expect("));
+        // the unbalanced brace inside the raw string must not open a scope
+        assert!(s.lines[1].fn_name.is_none());
+    }
+
+    #[test]
+    fn test_mod_tagging_and_fn_names() {
+        let src = "\
+pub fn parse(b: &[u8]) -> u8 {
+    b[0]
+}
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t() {
+        Some(1).unwrap();
+    }
+}
+";
+        let s = scan(src);
+        assert_eq!(s.lines[1].fn_name.as_deref(), Some("parse"));
+        assert!(!s.lines[1].in_test);
+        assert!(s.lines[3].in_test, "attribute line is test-gated");
+        assert!(s.lines[7].in_test);
+        assert_eq!(s.lines[7].fn_name.as_deref(), Some("t"));
+        // after the mod closes nothing is in-test
+        assert!(!s.lines[0].in_test);
+    }
+
+    #[test]
+    fn block_comments_nest() {
+        let src = "/* a /* b */ still comment */ let k = 1;\n";
+        let s = scan(src);
+        assert!(s.lines[0].code.contains("let k"));
+        assert!(!s.lines[0].code.contains("still"));
+    }
+}

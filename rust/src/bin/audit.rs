@@ -1,0 +1,81 @@
+//! Repo lint driver: `cargo run --release --bin audit`.
+//!
+//! Walks `rust/src`, applies the rules in `higgs::audit::rules`,
+//! subtracts `rust/audit_allowlist.txt`, prints the JSON report to
+//! stdout and human-readable findings to stderr. Exit codes: 0 clean
+//! (all findings allowlisted), 1 new violations, 2 setup failure.
+
+use higgs::audit::{report_json, run_audit, AuditConfig};
+use std::path::PathBuf;
+
+fn main() {
+    std::process::exit(real_main());
+}
+
+fn real_main() -> i32 {
+    // `cargo run` sets CARGO_MANIFEST_DIR to rust/; running the bare
+    // binary falls back to the current directory.
+    let manifest = higgs::util::env_str("CARGO_MANIFEST_DIR")
+        .map(PathBuf::from)
+        .or_else(find_manifest)
+        .unwrap_or_else(|| PathBuf::from("."));
+    let src_root = manifest.join("src");
+    if !src_root.is_dir() {
+        eprintln!("audit: no src/ under {} — run from the rust/ crate", manifest.display());
+        return 2;
+    }
+    let cfg = AuditConfig {
+        perf_md: manifest.parent().map(|p| p.join("PERF.md")).filter(|p| p.is_file()),
+        allowlist: Some(manifest.join("audit_allowlist.txt")).filter(|p| p.is_file()),
+        src_root,
+    };
+    if cfg.perf_md.is_none() {
+        eprintln!("audit: PERF.md not found — env-knob-doc rule skipped");
+    }
+    let report = match run_audit(&cfg) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("audit: {e:#}");
+            return 2;
+        }
+    };
+    print!("{}", report_json(&report));
+    for w in &report.stale_allowlist {
+        eprintln!("audit: warning: stale allowlist entry (matched nothing): {w}");
+    }
+    if report.findings.is_empty() {
+        eprintln!(
+            "audit: clean — {} files scanned, {} finding(s) allowlisted",
+            report.files_scanned, report.allowlisted
+        );
+        return 0;
+    }
+    for f in &report.findings {
+        eprintln!("audit: {}:{}: [{}] {}", f.path, f.line, f.rule, f.message);
+    }
+    eprintln!(
+        "audit: {} new violation(s) — fix them (preferred) or grandfather \
+         in rust/audit_allowlist.txt (shrink-only policy, see PERF.md §11)",
+        report.findings.len()
+    );
+    1
+}
+
+/// Walk up from the current directory looking for the crate root
+/// (a directory containing both Cargo.toml and src/).
+fn find_manifest() -> Option<PathBuf> {
+    let mut dir = std::env::current_dir().ok()?;
+    loop {
+        if dir.join("Cargo.toml").is_file() && dir.join("src").is_dir() {
+            return Some(dir);
+        }
+        // a checkout root with the crate nested under rust/
+        let nested = dir.join("rust");
+        if nested.join("Cargo.toml").is_file() && nested.join("src").is_dir() {
+            return Some(nested);
+        }
+        if !dir.pop() {
+            return None;
+        }
+    }
+}

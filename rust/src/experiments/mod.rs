@@ -53,7 +53,7 @@ impl ExpContext {
         let mut ev = crate::eval::Evaluator::new(&self.engine, self.cfg.clone());
         // experiment drivers need PPL resolution well below the
         // per-method deltas; 12 batches ≈ 9k scored tokens
-        ev.ppl_batches = if std::env::var("HIGGS_BENCH_QUICK").is_ok() { 4 } else { 12 };
+        ev.ppl_batches = if crate::util::env_flag("HIGGS_BENCH_QUICK") { 4 } else { 12 };
         ev
     }
 
@@ -83,7 +83,7 @@ impl ExpContext {
 
     /// Default calibration depth: paper uses J=15; quick mode uses 5.
     pub fn default_j(&self) -> usize {
-        if std::env::var("HIGGS_BENCH_QUICK").is_ok() {
+        if crate::util::env_flag("HIGGS_BENCH_QUICK") {
             5
         } else {
             15

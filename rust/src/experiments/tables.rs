@@ -22,7 +22,7 @@ use crate::util::bench::BenchRunner;
 use anyhow::Result;
 
 fn quick() -> bool {
-    std::env::var("HIGGS_BENCH_QUICK").is_ok()
+    crate::util::env_flag("HIGGS_BENCH_QUICK")
 }
 
 /// Evaluate (ppl, task scores) of a quantized model.

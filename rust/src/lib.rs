@@ -25,6 +25,7 @@
 //! | §6 evaluation harness | [`eval`], `rust/benches/` |
 
 pub mod alloc;
+pub mod audit;
 pub mod config;
 pub mod experiments;
 pub mod data;
@@ -45,7 +46,7 @@ pub use anyhow::{anyhow, bail, Context, Result};
 
 /// Repo-relative artifacts directory (overridable via `HIGGS_ARTIFACTS`).
 pub fn artifacts_dir() -> std::path::PathBuf {
-    if let Ok(p) = std::env::var("HIGGS_ARTIFACTS") {
+    if let Some(p) = crate::util::env_str("HIGGS_ARTIFACTS") {
         return p.into();
     }
     // Walk up from cwd looking for an `artifacts/` directory so tests,

@@ -14,13 +14,16 @@
 //!                  [--serve [--requests 8] [--batch 1]]
 //! higgs serve-bench --config base --backend flute4|fp16|uniform4|nf4|mixed --batch 4
 //!                  [--requests 24] [--budget 3.25] [--artifact PATH]
-//!                  [--churn [--mean-gap-ms 15] [--long-frac 0.25] [--drain]]
+//!                  [--churn [--mean-gap-ms 15] [--long-frac 0.25] [--drain]
+//!                   [--virtual-clock]]
 //!                  (budget applies to --backend mixed; --artifact cold-starts
 //!                   the mixed backend from a saved QuantArtifact; --churn
 //!                   replays an open-loop arrival stream with mixed prompt
 //!                   lengths through the continuous batcher — --drain keeps
 //!                   the same workload but only admits into an idle engine,
-//!                   the pre-slot-strided baseline)
+//!                   the pre-slot-strided baseline; --virtual-clock replays
+//!                   the arrival schedule on a deterministic virtual clock —
+//!                   no wall sleeps, run-to-run identical metrics)
 //! higgs serve-artifact --artifact PATH [--config base] [--batch 1] [--requests 8]
 //!                  [--shard i/n | i/n@rr]
 //!                  (--shard cold-starts ONE shard's layers with ranged
@@ -118,7 +121,8 @@ const HELP: &str = "higgs — LLM quantization via the Linearity Theorem (see RE
 commands: train, eval, quantize, calibrate, allocate, alloc-quantize, serve-bench, serve-artifact, shard-manifest, generate, hessian, experiment
 serve-bench --churn replays an open-loop arrival stream (Poisson-ish gaps,
 mixed prompt lengths) through the continuous batcher; add --drain for the
-admit-only-when-idle baseline. See PERF.md section 10.";
+admit-only-when-idle baseline and --virtual-clock for a deterministic
+sleep-free replay. See PERF.md sections 10-11.";
 
 fn ckpt_path(engine: &Engine, cfg: &ModelConfig, args: &Args) -> std::path::PathBuf {
     match args.flags.get("ckpt").or_else(|| args.flags.get("out")) {
@@ -463,6 +467,13 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     // but only admits into an idle engine (the old batch-drain policy)
     let churn = args.flags.contains_key("churn");
     let drain = args.flags.contains_key("drain");
+    // --virtual-clock: replay the open-loop arrival schedule on a
+    // deterministic virtual clock (one tick per decode step, no
+    // wall-clock sleeps) — run-to-run identical churn metrics
+    let virtual_clock = args.flags.contains_key("virtual-clock");
+    if virtual_clock && !churn {
+        bail!("--virtual-clock only applies to the open-loop --churn mode");
+    }
     let corpus = higgs::data::Corpus::new(ctx.cfg.vocab, ctx.cfg.seq, 1);
     let tc = if churn {
         higgs::serve::TraceConfig {
@@ -501,6 +512,9 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
             t0.elapsed().as_secs_f64()
         );
     }
+    if virtual_clock {
+        ge.set_clock(higgs::serve::Clock::virtual_at(0.0));
+    }
     let m = if churn {
         ge.run_open_loop(trace, drain)?
     } else {
@@ -511,6 +525,7 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         (true, false) => " churn",
         _ => "",
     };
+    let tag = if virtual_clock { format!("{tag} virtual") } else { tag.to_string() };
     println!("[{} b={batch}{tag}] {}", backend.label(), m.summary());
     if churn {
         // per-slot literals move device-side at admission; 0 means no
@@ -748,12 +763,10 @@ fn cmd_generate(args: &Args) -> Result<()> {
         qm.as_ref(),
     )?;
     let mut queue = std::collections::VecDeque::new();
-    queue.push_back(higgs::serve::QueuedRequest::now(higgs::serve::Request {
-        id: 0,
-        prompt: prompt.clone(),
-        max_new: n_new,
-        arrival_ms: 0,
-    }));
+    queue.push_back(higgs::serve::QueuedRequest::at(
+        higgs::serve::Request { id: 0, prompt: prompt.clone(), max_new: n_new, arrival_ms: 0 },
+        ge.now_ms(),
+    ));
     let mut tokens = Vec::new();
     while queue.front().is_some() || ge.active_slots() > 0 {
         ge.admit(&mut queue)?;

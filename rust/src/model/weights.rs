@@ -104,7 +104,9 @@ impl Weights {
             for &d in &t.dims {
                 f.write_all(&(d as u64).to_le_bytes())?;
             }
-            // raw f32 little-endian
+            // SAFETY: u8 has alignment 1 and the view spans exactly
+            // the tensor's f32 buffer (len * 4 bytes); the borrow of
+            // `t` keeps the allocation alive for the view's lifetime.
             let bytes: &[u8] = unsafe {
                 std::slice::from_raw_parts(t.data.as_ptr() as *const u8, t.data.len() * 4)
             };
@@ -143,6 +145,10 @@ impl Weights {
             }
             let numel: usize = dims.iter().product();
             let mut data = vec![0.0f32; numel];
+            // SAFETY: `data` is a freshly allocated, exclusively
+            // borrowed f32 buffer; the u8 view (alignment 1) spans
+            // exactly numel * 4 bytes and is fully overwritten by
+            // `read_exact` before any f32 is read.
             let bytes: &mut [u8] = unsafe {
                 std::slice::from_raw_parts_mut(data.as_mut_ptr() as *mut u8, numel * 4)
             };

@@ -687,9 +687,8 @@ impl QuantArtifact {
     }
 
     /// The serialized byte image (exposed for size accounting/tests).
-    pub fn to_bytes(&self) -> Vec<u8> {
+    pub fn to_bytes(&self) -> Result<Vec<u8>> {
         self.to_bytes_with(ScaleDtype::F32)
-            .expect("f32 serialization has no failure mode")
     }
 
     /// Serialize as format v2: every grid table and layer plane is its
@@ -764,15 +763,20 @@ impl QuantArtifact {
             .iter()
             .zip(&grid_of_layer)
             .enumerate()
-            .map(|(li, (l, gi))| {
+            .map(|(li, (l, gi))| -> Result<Json> {
                 let mut plane_kv = match &l.plane {
-                    PlaneData::Lut { packed, signs, .. } => vec![
-                        ("type".into(), Json::Str("lut".into())),
-                        ("grid".into(), json_int(gi.expect("lut layer has grid"))),
-                        ("bits".into(), json_int(packed.bits as usize)),
-                        ("count".into(), json_int(packed.count)),
-                        ("signs".into(), Json::Bool(signs.is_some())),
-                    ],
+                    PlaneData::Lut { packed, signs, .. } => {
+                        let gi = gi.ok_or_else(|| {
+                            anyhow::anyhow!("lut layer {} has no grid table", l.name)
+                        })?;
+                        vec![
+                            ("type".into(), Json::Str("lut".into())),
+                            ("grid".into(), json_int(gi)),
+                            ("bits".into(), json_int(packed.bits as usize)),
+                            ("count".into(), json_int(packed.count)),
+                            ("signs".into(), Json::Bool(signs.is_some())),
+                        ]
+                    }
                     PlaneData::Uniform { packed, bits, .. } => vec![
                         ("type".into(), Json::Str("uniform".into())),
                         ("bits".into(), json_int(*bits as usize)),
@@ -780,7 +784,7 @@ impl QuantArtifact {
                     ],
                 };
                 plane_kv.extend(region_json(grids.len() + li));
-                Json::Obj(vec![
+                Ok(Json::Obj(vec![
                     ("name".into(), Json::Str(l.name.clone())),
                     ("spec".into(), Json::Str(l.spec.to_string())),
                     ("k".into(), json_int(l.k)),
@@ -788,9 +792,9 @@ impl QuantArtifact {
                     ("g".into(), json_int(l.g)),
                     ("t2".into(), l.t2.map(json_num).unwrap_or(Json::Null)),
                     ("plane".into(), Json::Obj(plane_kv)),
-                ])
+                ]))
             })
-            .collect();
+            .collect::<Result<Vec<Json>>>()?;
         let manifest = Json::Obj(vec![
             ("version".into(), json_int(V2 as usize)),
             ("config".into(), Json::Str(self.config.clone())),
@@ -823,7 +827,7 @@ impl QuantArtifact {
     /// builds must keep loading through [`QuantArtifact::from_bytes`]
     /// and `ArtifactReader::open`.
     #[doc(hidden)]
-    pub fn to_bytes_v1(&self) -> Vec<u8> {
+    pub fn to_bytes_v1(&self) -> Result<Vec<u8>> {
         let (grids, grid_of_layer) = self.dedup_grids();
         let grid_json: Vec<Json> = grids
             .iter()
@@ -840,22 +844,27 @@ impl QuantArtifact {
             .layers
             .iter()
             .zip(&grid_of_layer)
-            .map(|(l, gi)| {
+            .map(|(l, gi)| -> Result<Json> {
                 let plane = match &l.plane {
-                    PlaneData::Lut { packed, signs, .. } => Json::Obj(vec![
-                        ("type".into(), Json::Str("lut".into())),
-                        ("grid".into(), json_int(gi.expect("lut layer has grid"))),
-                        ("bits".into(), json_int(packed.bits as usize)),
-                        ("count".into(), json_int(packed.count)),
-                        ("signs".into(), Json::Bool(signs.is_some())),
-                    ]),
+                    PlaneData::Lut { packed, signs, .. } => {
+                        let gi = gi.ok_or_else(|| {
+                            anyhow::anyhow!("lut layer {} has no grid table", l.name)
+                        })?;
+                        Json::Obj(vec![
+                            ("type".into(), Json::Str("lut".into())),
+                            ("grid".into(), json_int(gi)),
+                            ("bits".into(), json_int(packed.bits as usize)),
+                            ("count".into(), json_int(packed.count)),
+                            ("signs".into(), Json::Bool(signs.is_some())),
+                        ])
+                    }
                     PlaneData::Uniform { packed, bits, .. } => Json::Obj(vec![
                         ("type".into(), Json::Str("uniform".into())),
                         ("bits".into(), json_int(*bits as usize)),
                         ("count".into(), json_int(packed.count)),
                     ]),
                 };
-                Json::Obj(vec![
+                Ok(Json::Obj(vec![
                     ("name".into(), Json::Str(l.name.clone())),
                     ("spec".into(), Json::Str(l.spec.to_string())),
                     ("k".into(), json_int(l.k)),
@@ -863,9 +872,9 @@ impl QuantArtifact {
                     ("g".into(), json_int(l.g)),
                     ("t2".into(), l.t2.map(json_num).unwrap_or(Json::Null)),
                     ("plane".into(), plane),
-                ])
+                ]))
             })
-            .collect();
+            .collect::<Result<Vec<Json>>>()?;
         let manifest = Json::Obj(vec![
             ("version".into(), json_int(V1 as usize)),
             ("config".into(), Json::Str(self.config.clone())),
@@ -901,7 +910,7 @@ impl QuantArtifact {
         }
         let checksum = fnv1a(&buf);
         buf.extend_from_slice(&checksum.to_le_bytes());
-        buf
+        Ok(buf)
     }
 
     /// Load and fully validate an artifact file. Corrupted headers,
@@ -919,13 +928,11 @@ impl QuantArtifact {
     /// against the declared shapes, and every code range.
     pub fn from_bytes(buf: &[u8]) -> Result<QuantArtifact> {
         ensure!(buf.len() >= 8 + 4 + 8 + 8, "file too short to be a quant artifact");
-        ensure!(&buf[..8] == MAGIC, "bad magic (not a quant artifact)");
-        let trailer = u64::from_le_bytes(buf[buf.len() - 8..].try_into().unwrap());
-        ensure!(
-            fnv1a(&buf[..buf.len() - 8]) == trailer,
-            "checksum mismatch (corrupted artifact)"
-        );
-        let body = &buf[..buf.len() - 8];
+        let (body, trailer_bytes) = buf.split_at(buf.len() - 8);
+        let (magic, _) = body.split_at(8);
+        ensure!(magic == MAGIC, "bad magic (not a quant artifact)");
+        let trailer = u64::from_le_bytes(le(trailer_bytes));
+        ensure!(fnv1a(body) == trailer, "checksum mismatch (corrupted artifact)");
         let mut cur = Cursor { buf: body, pos: 8 };
         let version = cur.u32()?;
         let man_fnv = match version {
@@ -1319,6 +1326,16 @@ fn fnv1a(bytes: &[u8]) -> u64 {
     crate::util::fnv1a(bytes.iter().copied())
 }
 
+/// Copy an exactly-`N`-byte chunk into an array for `from_le_bytes`.
+/// Callers only ever pass `take(N)` / `chunks_exact(N)` / `split_at`
+/// slices, so the lengths always match — this replaces the
+/// `try_into().unwrap()` idiom the parse path bans.
+fn le<const N: usize>(chunk: &[u8]) -> [u8; N] {
+    let mut b = [0u8; N];
+    b.copy_from_slice(chunk);
+    b
+}
+
 pub(crate) struct Cursor<'a> {
     pub(crate) buf: &'a [u8],
     pub(crate) pos: usize,
@@ -1334,21 +1351,21 @@ impl<'a> Cursor<'a> {
     }
 
     fn u32(&mut self) -> Result<u32> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        Ok(u32::from_le_bytes(le(self.take(4)?)))
     }
 
     fn u64(&mut self) -> Result<u64> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        Ok(u64::from_le_bytes(le(self.take(8)?)))
     }
 
     fn u32s(&mut self, n: usize) -> Result<Vec<u32>> {
         let bytes = self.take(n.checked_mul(4).context("length overflow")?)?;
-        Ok(bytes.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect())
+        Ok(bytes.chunks_exact(4).map(|c| u32::from_le_bytes(le(c))).collect())
     }
 
     fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
         let bytes = self.take(n.checked_mul(4).context("length overflow")?)?;
-        Ok(bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+        Ok(bytes.chunks_exact(4).map(|c| f32::from_le_bytes(le(c))).collect())
     }
 
     /// Read `n` scale values at the on-disk dtype, upcast to f32.
@@ -1359,7 +1376,7 @@ impl<'a> Cursor<'a> {
                 let bytes = self.take(n.checked_mul(2).context("length overflow")?)?;
                 Ok(bytes
                     .chunks_exact(2)
-                    .map(|c| f16_to_f32(u16::from_le_bytes(c.try_into().unwrap())))
+                    .map(|c| f16_to_f32(u16::from_le_bytes(le(c))))
                     .collect())
             }
         }
@@ -1532,7 +1549,7 @@ impl JsonParser<'_> {
             .with_context(|| "unexpected end of JSON".to_string())
     }
 
-    fn expect(&mut self, c: u8) -> Result<()> {
+    fn expect_byte(&mut self, c: u8) -> Result<()> {
         let got = self.peek()?;
         ensure!(got == c, "expected {:?} at byte {}, got {:?}", c as char, self.pos, got as char);
         self.pos += 1;
@@ -1568,11 +1585,8 @@ impl JsonParser<'_> {
                 }
                 loop {
                     self.skip_ws();
-                    let key = match self.string()? {
-                        Json::Str(s) => s,
-                        _ => unreachable!(),
-                    };
-                    self.expect(b':')?;
+                    let key = self.string()?;
+                    self.expect_byte(b':')?;
                     let v = self.value()?;
                     kv.push((key, v));
                     match self.peek()? {
@@ -1604,7 +1618,7 @@ impl JsonParser<'_> {
                     }
                 }
             }
-            b'"' => self.string(),
+            b'"' => self.string().map(Json::Str),
             b't' => self.eat_lit("true", Json::Bool(true)),
             b'f' => self.eat_lit("false", Json::Bool(false)),
             b'n' => self.eat_lit("null", Json::Null),
@@ -1612,8 +1626,8 @@ impl JsonParser<'_> {
         }
     }
 
-    fn string(&mut self) -> Result<Json> {
-        self.expect(b'"')?;
+    fn string(&mut self) -> Result<String> {
+        self.expect_byte(b'"')?;
         let mut s = String::new();
         loop {
             let c = *self
@@ -1622,7 +1636,7 @@ impl JsonParser<'_> {
                 .context("unterminated JSON string")?;
             self.pos += 1;
             match c {
-                b'"' => return Ok(Json::Str(s)),
+                b'"' => return Ok(s),
                 b'\\' => {
                     let e = *self
                         .bytes
@@ -1676,7 +1690,8 @@ impl JsonParser<'_> {
             self.pos += 1;
         }
         ensure!(self.pos > start, "expected JSON value at byte {start}");
-        let s = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
+        let s = std::str::from_utf8(&self.bytes[start..self.pos])
+            .context("non-UTF-8 JSON number")?;
         let v: f64 = s
             .parse()
             .map_err(|_| anyhow::anyhow!("bad JSON number {s:?} at byte {start}"))?;
@@ -1749,7 +1764,7 @@ mod tests {
             q.quantize("b", &w2),
         ]);
         let art = QuantArtifact::from_model("test", &qm);
-        let bytes = art.to_bytes();
+        let bytes = art.to_bytes().unwrap();
         let loaded = QuantArtifact::from_bytes(&bytes).unwrap();
         assert_eq!(loaded.config, "test");
         assert_eq!(loaded.layers.len(), 2);
@@ -1811,8 +1826,8 @@ mod tests {
             RtnQuantizer::new(3, 16).quantize("b", &rand_layer(32, 4, 3)),
         ]);
         let art = QuantArtifact::from_model("compat", &qm);
-        let v1 = QuantArtifact::from_bytes(&art.to_bytes_v1()).unwrap();
-        let v2 = QuantArtifact::from_bytes(&art.to_bytes()).unwrap();
+        let v1 = QuantArtifact::from_bytes(&art.to_bytes_v1().unwrap()).unwrap();
+        let v2 = QuantArtifact::from_bytes(&art.to_bytes().unwrap()).unwrap();
         assert_eq!(v1.config, "compat");
         for (a, b) in v1.layers.iter().zip(&v2.layers) {
             assert_eq!(a.name, b.name);
@@ -1823,7 +1838,7 @@ mod tests {
             assert_eq!(bits(&da), bits(&db), "v1/v2 decode diverged for {}", a.name);
         }
         // v1 corruption is still caught by the whole-file trailer
-        let mut bad = art.to_bytes_v1();
+        let mut bad = art.to_bytes_v1().unwrap();
         let at = bad.len() / 2;
         bad[at] ^= 0x10;
         assert!(QuantArtifact::from_bytes(&bad).is_err());
@@ -1839,7 +1854,7 @@ mod tests {
         ]);
         let art = QuantArtifact::from_model("t", &qm);
         let bytes16 = art.to_bytes_with(ScaleDtype::F16).unwrap();
-        let bytes32 = art.to_bytes();
+        let bytes32 = art.to_bytes().unwrap();
         assert!(bytes16.len() < bytes32.len(), "f16 scales should shrink the file");
         let loaded = QuantArtifact::from_bytes(&bytes16).unwrap();
         // every scale within half-ulp relative error of the original
@@ -1898,7 +1913,7 @@ mod tests {
         let qm = QuantizedModel::from_layers(vec![
             HiggsQuantizer::new(reg.get(GridKind::Higgs, 16, 2), 16, 5).quantize("a", &w)
         ]);
-        let bytes = QuantArtifact::from_model("t", &qm).to_bytes();
+        let bytes = QuantArtifact::from_model("t", &qm).to_bytes().unwrap();
         // bad magic
         let mut b = bytes.clone();
         b[0] ^= 0xFF;
@@ -1930,9 +1945,9 @@ mod tests {
             "t",
             vec![LayerScheme::from_layer(&a), LayerScheme::from_layer(&b)],
         );
-        let err = QuantArtifact::from_bytes(&art.to_bytes()).unwrap_err();
+        let err = QuantArtifact::from_bytes(&art.to_bytes().unwrap()).unwrap_err();
         assert!(format!("{err:#}").contains("duplicate"), "{err:#}");
-        assert!(QuantArtifact::from_bytes(&art.to_bytes_v1()).is_err());
+        assert!(QuantArtifact::from_bytes(&art.to_bytes_v1().unwrap()).is_err());
         // and the save path refuses to write such a file in the first
         // place (the loaders' rejection would otherwise surface far
         // from the bug)

@@ -208,6 +208,8 @@ pub(super) fn decode_dense(view: &LayerView<'_>, block: usize) -> Vec<f32> {
                 }
             }
         });
+        // write-audit hook: a dense decode fills every weight slot
+        out.assert_covered("dense decode");
     }
     w
 }
@@ -281,6 +283,9 @@ pub(super) fn rel_sq_err_streaming_overlay(
             unsafe { num_out.write(bi, bn) };
             unsafe { den_out.write(bi, bd) };
         });
+        // write-audit hook: one partial sum per block, no block skipped
+        num_out.assert_covered("overlay rel-err num");
+        den_out.assert_covered("overlay rel-err den");
     }
     let num: f64 = num.iter().sum();
     let den: f64 = den.iter().sum();

@@ -328,6 +328,9 @@ impl HiggsQuantizer {
                                 blk_den += s * s;
                             }
                             let sigma = svals[b * ngroups + gi] / sqrt_g;
+                            // SAFETY: (gi, j) scale slots are owned by
+                            // this block alone (same disjointness as
+                            // the codes scatter above).
                             unsafe { scales_out.write(gi * n + j, sigma) };
                         }
                     }
@@ -338,6 +341,15 @@ impl HiggsQuantizer {
                     }
                 });
             });
+            // write-audit hooks: every code/scale slot must have been
+            // scattered exactly once (the err accumulators only when
+            // the error pass ran)
+            codes_out.assert_covered("higgs encode codes");
+            scales_out.assert_covered("higgs encode scales");
+            if want_err {
+                err_num_out.assert_covered("higgs encode err");
+                err_den_out.assert_covered("higgs encode err");
+            }
         }
         let t2 = if want_err {
             let num: f64 = err_num.iter().sum();

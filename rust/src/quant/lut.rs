@@ -129,6 +129,9 @@ impl Quantizer for LutQuantizer {
                     |i, s| unsafe { scales_out.write(i, s) },
                 );
             });
+            // write-audit hooks: every strided slot scattered once
+            codes_out.assert_covered("lut encode codes");
+            scales_out.assert_covered("lut encode scales");
         }
         self.finish(layer_name, k, n, g, codes, scales)
     }

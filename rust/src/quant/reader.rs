@@ -221,8 +221,11 @@ impl ArtifactReader {
         let mut head = [0u8; 12];
         f.read_exact(&mut head)?;
         bytes_read += 12;
-        ensure!(&head[..8] == MAGIC, "bad magic (not a quant artifact)");
-        let version = u32::from_le_bytes(head[8..12].try_into().unwrap());
+        let (magic, ver_bytes) = head.split_at(8);
+        ensure!(magic == MAGIC, "bad magic (not a quant artifact)");
+        let mut vb = [0u8; 4];
+        vb.copy_from_slice(ver_bytes);
+        let version = u32::from_le_bytes(vb);
         let man_fnv = match version {
             V1 => None,
             V2 => {
@@ -295,8 +298,9 @@ impl ArtifactReader {
             let mut chunk = vec![0u8; 1 << 16];
             while remaining > 0 {
                 let n = chunk.len().min(remaining as usize);
-                f.read_exact(&mut chunk[..n])?;
-                h = crate::util::fnv1a_with(h, chunk[..n].iter().copied());
+                let (head, _) = chunk.split_at_mut(n);
+                f.read_exact(head)?;
+                h = crate::util::fnv1a_with(h, head.iter().copied());
                 remaining -= n as u64;
             }
             f.read_exact(&mut b)?;
@@ -438,13 +442,13 @@ impl ArtifactReader {
     /// construction touches each layer's scheme several times (codes,
     /// scales, signs…), which used to be that many full plane reads.
     pub fn layer_scheme(&self, name: &str) -> Result<Arc<LayerScheme>> {
-        if let Some(s) = self.scheme_cache.lock().unwrap().get(name) {
+        if let Some(s) = self.scheme_cache.lock().unwrap_or_else(|p| p.into_inner()).get(name) {
             return Ok(s.clone());
         }
         // load OUTSIDE the lock: concurrent first readers may duplicate
         // the read, but never block each other on disk I/O
         let scheme = Arc::new(self.load_layer(name)?);
-        let mut cache = self.scheme_cache.lock().unwrap();
+        let mut cache = self.scheme_cache.lock().unwrap_or_else(|p| p.into_inner());
         Ok(cache.entry(name.to_string()).or_insert(scheme).clone())
     }
 
@@ -454,7 +458,13 @@ impl ArtifactReader {
         let layers = shard
             .layer_indices(total)
             .into_iter()
-            .map(|i| self.load_layer(&self.entries[i].meta.name))
+            .map(|i| {
+                let e = self
+                    .entries
+                    .get(i)
+                    .with_context(|| format!("shard layer index {i} out of range"))?;
+                self.load_layer(&e.meta.name)
+            })
             .collect::<Result<Vec<_>>>()?;
         Ok(QuantArtifact::from_schemes(&self.config, layers))
     }

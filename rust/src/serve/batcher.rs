@@ -1,6 +1,8 @@
 //! Dynamic batcher: groups incoming requests into admission batches
 //! under a (max size, deadline) policy — the vLLM-style front end of
-//! the router. Pure logic (no XLA), so it is exhaustively testable.
+//! the router. Pure logic (no XLA, no internal clock reads: callers
+//! pass [`crate::serve::trace::Clock`] readings in), so it is
+//! exhaustively testable and works identically under virtual replay.
 //!
 //! Requests are stamped at `push` ([`QueuedRequest`]) and carry that
 //! submission timestamp through the engine, so end-to-end latency
@@ -8,7 +10,7 @@
 
 use super::trace::{QueuedRequest, Request};
 use std::collections::VecDeque;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 #[derive(Clone, Debug)]
 pub struct BatcherConfig {
@@ -34,8 +36,9 @@ impl Batcher {
         Batcher { cfg, pending: VecDeque::new() }
     }
 
-    pub fn push(&mut self, req: Request) {
-        self.pending.push_back(QueuedRequest::now(req));
+    /// Enqueue a request, stamped with the caller's clock reading.
+    pub fn push(&mut self, req: Request, now_ms: f64) {
+        self.pending.push_back(QueuedRequest::at(req, now_ms));
     }
 
     pub fn pending(&self) -> usize {
@@ -46,18 +49,19 @@ impl Batcher {
     /// requests are waiting, or the oldest has exceeded `max_wait`, or
     /// `force` (engine idle) is set. Released requests keep their
     /// original submission timestamps.
-    pub fn poll(&mut self, now: Instant, force: bool) -> Vec<QueuedRequest> {
+    pub fn poll(&mut self, now_ms: f64, force: bool) -> Vec<QueuedRequest> {
+        let wait_ms = self.cfg.max_wait.as_secs_f64() * 1e3;
         let due = self
             .pending
             .front()
-            .map(|q| now.duration_since(q.enqueued) >= self.cfg.max_wait)
+            .map(|q| now_ms - q.enqueued_ms >= wait_ms)
             .unwrap_or(false);
         if self.pending.is_empty() || (!due && !force && self.pending.len() < self.cfg.max_batch)
         {
             return Vec::new();
         }
         let n = self.pending.len().min(self.cfg.max_batch);
-        (0..n).map(|_| self.pending.pop_front().unwrap()).collect()
+        self.pending.drain(..n).collect()
     }
 }
 
@@ -76,11 +80,11 @@ mod tests {
             max_batch: 3,
             max_wait: Duration::from_secs(10),
         });
-        b.push(req(0));
-        b.push(req(1));
-        assert!(b.poll(Instant::now(), false).is_empty());
-        b.push(req(2));
-        let out = b.poll(Instant::now(), false);
+        b.push(req(0), 0.0);
+        b.push(req(1), 0.0);
+        assert!(b.poll(0.0, false).is_empty());
+        b.push(req(2), 0.0);
+        let out = b.poll(0.0, false);
         assert_eq!(out.len(), 3);
         assert_eq!(out[0].req.id, 0);
     }
@@ -89,10 +93,11 @@ mod tests {
     fn releases_on_deadline() {
         let mut b = Batcher::new(BatcherConfig {
             max_batch: 100,
-            max_wait: Duration::from_millis(0),
+            max_wait: Duration::from_millis(2),
         });
-        b.push(req(0));
-        let out = b.poll(Instant::now() + Duration::from_millis(1), false);
+        b.push(req(0), 0.0);
+        assert!(b.poll(1.0, false).is_empty());
+        let out = b.poll(2.0, false);
         assert_eq!(out.len(), 1);
     }
 
@@ -102,21 +107,19 @@ mod tests {
             max_batch: 100,
             max_wait: Duration::from_secs(100),
         });
-        b.push(req(0));
-        assert_eq!(b.poll(Instant::now(), true).len(), 1);
-        assert!(b.poll(Instant::now(), true).is_empty());
+        b.push(req(0), 0.0);
+        assert_eq!(b.poll(0.0, true).len(), 1);
+        assert!(b.poll(0.0, true).is_empty());
     }
 
     #[test]
     fn submission_timestamp_survives_release() {
         let mut b = Batcher::new(BatcherConfig::default());
-        let before = Instant::now();
-        b.push(req(0));
-        let after = Instant::now();
-        let out = b.poll(Instant::now(), true);
+        b.push(req(0), 3.5);
+        let out = b.poll(1_000.0, true);
         assert_eq!(out.len(), 1);
         // the released request still carries its push-time stamp
-        assert!(out[0].enqueued >= before && out[0].enqueued <= after);
+        assert_eq!(out[0].enqueued_ms, 3.5);
     }
 
     #[test]
@@ -129,11 +132,11 @@ mod tests {
                 max_wait: Duration::from_secs(100),
             });
             for i in 0..n {
-                b.push(req(i as u64));
+                b.push(req(i as u64), i as f64);
             }
             let mut seen = Vec::new();
             loop {
-                let out = b.poll(Instant::now(), true);
+                let out = b.poll(n as f64, true);
                 if out.is_empty() {
                     break;
                 }

@@ -177,7 +177,10 @@ pub fn run_churn_with(cfg: &ChurnConfig, arrivals: Vec<(u64, Request)>) -> Resul
     let mut step = 0u64;
     loop {
         while arrivals.front().map(|(t, _)| *t <= step).unwrap_or(false) {
-            queue.push_back(QueuedRequest::now(arrivals.pop_front().unwrap().1));
+            if let Some((_, r)) = arrivals.pop_front() {
+                // virtual-step timestamps: the harness has no wall clock
+                queue.push_back(QueuedRequest::at(r, step as f64));
+            }
         }
         let active = slots.iter().filter(|s| s.is_some()).count();
         if arrivals.is_empty() && queue.is_empty() && active == 0 {

@@ -32,10 +32,17 @@ use crate::model::manifest::{Manifest, ParamSpec};
 use crate::model::Weights;
 use crate::quant::QuantizedModel;
 use crate::runtime::{Engine, Executable, HostArg};
-use anyhow::{ensure, Context, Result};
+use anyhow::{anyhow, ensure, Context, Result};
 use std::collections::VecDeque;
 use std::sync::Arc;
-use std::time::{Duration, Instant};
+
+use super::trace::Clock;
+
+/// Simulated cost of one decode step under a virtual clock (ms). Real
+/// decode cost is irrelevant to virtual replay — only the DETERMINISTIC
+/// interleaving of arrivals with steps matters, so any positive
+/// constant works; 1 ms keeps trace `arrival_ms` values meaningful.
+const VIRTUAL_MS_PER_STEP: f64 = 1.0;
 
 #[derive(Clone, Debug)]
 pub struct Completion {
@@ -58,9 +65,10 @@ enum Slot {
         pos: usize,
         generated: Vec<i32>,
         last_token: i32,
-        /// when the request entered the serving system (latency basis)
-        enqueued: Instant,
-        admitted: Instant,
+        /// when the request entered the serving system (latency
+        /// basis), in engine-clock ms
+        enqueued_ms: f64,
+        admitted_ms: f64,
     },
 }
 
@@ -84,8 +92,12 @@ pub struct GenerationEngine<'a> {
     pub kv_manager: KvBlockManager,
     pub metrics: ServeMetrics,
     /// when the current admission-blocked interval began (queue
-    /// non-empty but nothing placeable) — backpressure accounting
-    blocked_since: Option<Instant>,
+    /// non-empty but nothing placeable) — backpressure accounting,
+    /// in engine-clock ms
+    blocked_since: Option<f64>,
+    /// the engine's time source: wall by default, virtual for
+    /// deterministic sleep-free open-loop replay ([`Clock`])
+    clock: Clock,
 }
 
 /// Pure admission planning (no XLA): pop admissible requests off the
@@ -117,7 +129,7 @@ pub(crate) fn plan_admissions(
         // sample from (`plen - 1` would underflow)
         let plen = front.req.prompt.len().min(seq.saturating_sub(1));
         if plen == 0 || front.req.max_new == 0 {
-            let qr = queue.pop_front().unwrap();
+            let Some(qr) = queue.pop_front() else { break };
             log::warn!(
                 "rejecting request {}: {}",
                 qr.req.id,
@@ -131,7 +143,7 @@ pub(crate) fn plan_admissions(
         if !kv.can_admit(plen, front.req.max_new) {
             break;
         }
-        let qr = queue.pop_front().unwrap();
+        let Some(qr) = queue.pop_front() else { break };
         kv.admit(qr.req.id, plen, qr.req.max_new)?;
         out.push((b, plen, qr));
         slot = slots.next();
@@ -300,7 +312,7 @@ impl<'a> GenerationEngine<'a> {
         let decode_args =
             backend.build_params_with(&decode_exe.manifest, weights, src, &store)?;
         let decode_param_lits = par_literals(&decode_args)?;
-        let decode_param_args = if std::env::var("HIGGS_SERVE_SLOWPATH").is_ok() {
+        let decode_param_args = if crate::util::env_flag("HIGGS_SERVE_SLOWPATH") {
             Some(decode_args.clone())
         } else {
             None
@@ -327,6 +339,7 @@ impl<'a> GenerationEngine<'a> {
             kv_manager,
             metrics: ServeMetrics::default(),
             blocked_since: None,
+            clock: Clock::wall(),
         })
     }
 
@@ -348,8 +361,23 @@ impl<'a> GenerationEngine<'a> {
 
     fn note_unblocked(&mut self) {
         if let Some(t) = self.blocked_since.take() {
-            self.metrics.admission_blocked_ms += t.elapsed().as_secs_f64() * 1e3;
+            self.metrics.admission_blocked_ms += self.clock.now_ms() - t;
         }
+    }
+
+    /// Replace the engine's time source. A [`Clock::virtual_at`] clock
+    /// makes `run_open_loop` a deterministic, sleep-free replay (every
+    /// decode step costs [`VIRTUAL_MS_PER_STEP`]); latency metrics are
+    /// then virtual-ms, bit-stable across runs and machines.
+    pub fn set_clock(&mut self, clock: Clock) {
+        self.clock = clock;
+    }
+
+    /// Current reading of the engine's clock, for callers stamping
+    /// [`QueuedRequest`]s (the router's batcher shares this clock so
+    /// queue-wait accounting has one origin).
+    pub fn now_ms(&self) -> f64 {
+        self.clock.now_ms()
     }
 
     /// Admit up to `idle_slots` requests from the queue via one merged
@@ -358,20 +386,31 @@ impl<'a> GenerationEngine<'a> {
     /// never read or re-uploaded. Also maintains the backpressure
     /// metrics (queue depth peak, admission-blocked time).
     pub fn admit(&mut self, queue: &mut VecDeque<QueuedRequest>) -> Result<usize> {
+        let r = self.admit_impl(queue);
+        if r.is_err() {
+            // propagated, never swallowed — but counted, so operators
+            // see engine-internal failures in the serving metrics
+            self.metrics.internal_errors += 1;
+        }
+        r
+    }
+
+    fn admit_impl(&mut self, queue: &mut VecDeque<QueuedRequest>) -> Result<usize> {
         self.metrics.queue_peak = self.metrics.queue_peak.max(queue.len());
         if queue.is_empty() {
             self.note_unblocked();
             return Ok(0);
         }
+        let now_ms = self.clock.now_ms();
         if self.idle_slots() == 0 {
-            self.blocked_since.get_or_insert_with(Instant::now);
+            self.blocked_since.get_or_insert(now_ms);
             return Ok(0);
         }
         let n = self.admit_inner(queue)?;
         if n > 0 || queue.is_empty() {
             self.note_unblocked();
         } else {
-            self.blocked_since.get_or_insert_with(Instant::now);
+            self.blocked_since.get_or_insert(now_ms);
         }
         Ok(n)
     }
@@ -404,8 +443,11 @@ impl<'a> GenerationEngine<'a> {
         );
         let v = self.cfg.vocab;
         let mut it = outs.into_iter();
-        let logits: Vec<f32> =
-            it.next().unwrap().to_vec().map_err(|e| anyhow::anyhow!("logits: {e:?}"))?;
+        let logits: Vec<f32> = it
+            .next()
+            .ok_or_else(|| anyhow!("prefill returned no logits output"))?
+            .to_vec()
+            .map_err(|e| anyhow!("logits: {e:?}"))?;
         let mut kouts: Vec<Option<xla::Literal>> =
             it.by_ref().take(self.batch).map(Some).collect();
         let mut vouts: Vec<Option<xla::Literal>> = it.map(Some).collect();
@@ -413,15 +455,19 @@ impl<'a> GenerationEngine<'a> {
         for (b, plen, qr) in newly {
             // O(new-slots) install: the prefill's per-slot KV outputs
             // move in by handle; no other slot is touched
-            self.kv.install_slot(b, kouts[b].take().unwrap(), vouts[b].take().unwrap())?;
+            let (ko, vo) = match (kouts[b].take(), vouts[b].take()) {
+                (Some(k), Some(v)) => (k, v),
+                _ => return Err(anyhow!("prefill KV output for slot {b} missing")),
+            };
+            self.kv.install_slot(b, ko, vo)?;
             let row = &logits[(b * s + plen - 1) * v..(b * s + plen) * v];
             let first = argmax(row) as i32;
             self.slots[b] = Slot::Active {
                 pos: plen,
                 generated: vec![first],
                 last_token: first,
-                enqueued: qr.enqueued,
-                admitted: Instant::now(),
+                enqueued_ms: qr.enqueued_ms,
+                admitted_ms: self.clock.now_ms(),
                 req: qr.req,
             };
         }
@@ -433,6 +479,14 @@ impl<'a> GenerationEngine<'a> {
     /// next `admit` call can refill it while other slots keep decoding
     /// (continuous batching, no drain).
     pub fn step(&mut self) -> Result<Vec<Completion>> {
+        let r = self.step_impl();
+        if r.is_err() {
+            self.metrics.internal_errors += 1;
+        }
+        r
+    }
+
+    fn step_impl(&mut self) -> Result<Vec<Completion>> {
         if self.active_slots() == 0 {
             return Ok(Vec::new());
         }
@@ -474,17 +528,31 @@ impl<'a> GenerationEngine<'a> {
         );
         // outputs: logits [B,V], then per-slot kcache_i / vcache_i —
         // swapped in wholesale (no host round-trip)
+        // a virtual clock charges each decode step a fixed tick, which
+        // is what makes sleep-free open-loop replay deterministic
+        self.clock.advance(VIRTUAL_MS_PER_STEP);
         let mut it = outs.into_iter();
-        let logits: Vec<f32> =
-            it.next().unwrap().to_vec().map_err(|e| anyhow::anyhow!("logits: {e:?}"))?;
+        let logits: Vec<f32> = it
+            .next()
+            .ok_or_else(|| anyhow!("decode returned no logits output"))?
+            .to_vec()
+            .map_err(|e| anyhow!("logits: {e:?}"))?;
         let kouts: Vec<xla::Literal> = it.by_ref().take(self.batch).collect();
         let vouts: Vec<xla::Literal> = it.collect();
         self.kv.replace_all(kouts, vouts)?;
 
+        let clock_now = self.clock.now_ms();
         let mut done = Vec::new();
         for b in 0..self.batch {
             let slot = &mut self.slots[b];
-            if let Slot::Active { pos, generated, last_token, req, enqueued, admitted } = slot
+            if let Slot::Active {
+                pos,
+                generated,
+                last_token,
+                req,
+                enqueued_ms,
+                admitted_ms,
+            } = slot
             {
                 let row = &logits[b * v..(b + 1) * v];
                 let next = argmax(row) as i32;
@@ -499,12 +567,11 @@ impl<'a> GenerationEngine<'a> {
                 })?;
                 let capacity_hit = *pos + 1 >= s;
                 if generated.len() >= req.max_new || capacity_hit {
-                    let now = Instant::now();
+                    let now_ms = clock_now;
                     // latency from SUBMISSION, split into queue + decode
-                    let latency_ms = now.duration_since(*enqueued).as_secs_f64() * 1e3;
-                    let queue_ms =
-                        admitted.duration_since(*enqueued).as_secs_f64() * 1e3;
-                    let decode_ms = now.duration_since(*admitted).as_secs_f64() * 1e3;
+                    let latency_ms = now_ms - *enqueued_ms;
+                    let queue_ms = *admitted_ms - *enqueued_ms;
+                    let decode_ms = now_ms - *admitted_ms;
                     done.push(Completion {
                         id: req.id,
                         tokens: generated.clone(),
@@ -533,9 +600,9 @@ impl<'a> GenerationEngine<'a> {
     /// on EVERY iteration — slots freed by completions refill without
     /// waiting for the batch to drain.
     pub fn run_closed_loop(&mut self, trace: Vec<Request>) -> Result<ServeMetrics> {
+        let start_ms = self.clock.now_ms();
         let mut queue: VecDeque<QueuedRequest> =
-            trace.into_iter().map(QueuedRequest::now).collect();
-        let t0 = Instant::now();
+            trace.into_iter().map(|r| QueuedRequest::at(r, start_ms)).collect();
         while !queue.is_empty() || self.active_slots() > 0 {
             let admitted = self.admit(&mut queue)?;
             let done = self.step()?;
@@ -554,7 +621,7 @@ impl<'a> GenerationEngine<'a> {
                 queue.clear();
             }
         }
-        self.metrics.wall_secs = t0.elapsed().as_secs_f64();
+        self.metrics.wall_secs = (self.clock.now_ms() - start_ms) / 1e3;
         Ok(self.metrics.clone())
     }
 
@@ -563,16 +630,27 @@ impl<'a> GenerationEngine<'a> {
     /// With `drain` set, admission waits for the WHOLE batch to finish
     /// before refilling — the pre-continuous-batching baseline the
     /// churn bench compares against.
+    /// Under a virtual clock ([`GenerationEngine::set_clock`]) the same
+    /// replay runs with NO wall-clock sleeps: each decode step advances
+    /// time by [`VIRTUAL_MS_PER_STEP`] and idle gaps jump straight to
+    /// the next arrival, so the arrival/step interleaving — and every
+    /// latency metric — is deterministic and machine-independent.
     pub fn run_open_loop(&mut self, trace: Vec<Request>, drain: bool) -> Result<ServeMetrics> {
         let mut pending: Vec<Request> = trace;
         pending.sort_by_key(|r| r.arrival_ms);
         let mut pending: VecDeque<Request> = pending.into();
         let mut queue: VecDeque<QueuedRequest> = VecDeque::new();
-        let t0 = Instant::now();
+        let start_ms = self.clock.now_ms();
         loop {
-            let now_ms = t0.elapsed().as_millis() as u64;
-            while pending.front().map(|r| r.arrival_ms <= now_ms).unwrap_or(false) {
-                queue.push_back(QueuedRequest::now(pending.pop_front().unwrap()));
+            let now_ms = self.clock.now_ms();
+            while pending
+                .front()
+                .map(|r| r.arrival_ms as f64 <= now_ms - start_ms)
+                .unwrap_or(false)
+            {
+                if let Some(r) = pending.pop_front() {
+                    queue.push_back(QueuedRequest::at(r, now_ms));
+                }
             }
             if pending.is_empty() && queue.is_empty() && self.active_slots() == 0 {
                 break;
@@ -582,10 +660,11 @@ impl<'a> GenerationEngine<'a> {
             } else {
                 // drain baseline still observes backpressure
                 self.metrics.queue_peak = self.metrics.queue_peak.max(queue.len());
-                self.blocked_since.get_or_insert_with(Instant::now);
+                self.blocked_since.get_or_insert(now_ms);
                 0
             };
             if self.active_slots() > 0 {
+                // step() advances a virtual clock by one tick itself
                 self.step()?;
             } else if admitted == 0 {
                 if pending.is_empty() && !queue.is_empty() {
@@ -597,12 +676,12 @@ impl<'a> GenerationEngine<'a> {
                     self.metrics.dropped += queue.len() as u64;
                     queue.clear();
                 } else if let Some(r) = pending.front() {
-                    let wait = r.arrival_ms.saturating_sub(t0.elapsed().as_millis() as u64);
-                    std::thread::sleep(Duration::from_millis(wait.clamp(1, 5)));
+                    // wall: short poll sleep; virtual: jump to arrival
+                    self.clock.sleep_until(start_ms + r.arrival_ms as f64, 5.0);
                 }
             }
         }
-        self.metrics.wall_secs = t0.elapsed().as_secs_f64();
+        self.metrics.wall_secs = (self.clock.now_ms() - start_ms) / 1e3;
         Ok(self.metrics.clone())
     }
 }
@@ -625,7 +704,7 @@ mod tests {
     }
 
     fn qd(reqs: Vec<Request>) -> VecDeque<QueuedRequest> {
-        reqs.into_iter().map(QueuedRequest::now).collect()
+        reqs.into_iter().map(|r| QueuedRequest::at(r, 0.0)).collect()
     }
 
     #[test]

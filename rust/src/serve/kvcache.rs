@@ -99,7 +99,15 @@ impl KvBlockManager {
                 self.free.len()
             );
         }
-        let blocks: Vec<usize> = (0..need).map(|_| self.free.pop().unwrap()).collect();
+        let mut blocks = Vec::with_capacity(need);
+        for _ in 0..need {
+            match self.free.pop() {
+                Some(b) => blocks.push(b),
+                // unreachable given the `need <= free.len()` gate above,
+                // but an accounting bug must error, not panic mid-serve
+                None => bail!("KV free list exhausted mid-admission for {req_id}"),
+            }
+        }
         self.leases.insert(req_id, Lease { blocks, tokens: prompt_len });
         self.peak_used = self.peak_used.max(self.used_blocks());
         Ok(())

@@ -36,6 +36,12 @@ pub struct ServeMetrics {
     /// total time the engine had queued requests it could not place in
     /// any slot (backpressure: admission wanted to run but was blocked)
     pub admission_blocked_ms: f64,
+    /// engine-internal errors propagated out of `admit`/`step` (ABI
+    /// drift, missing outputs, lease accounting bugs). Always ALSO
+    /// returned as `Err` to the caller — this counter exists so a
+    /// serving run's summary shows failures even when a driver retries
+    /// or drops them.
+    pub internal_errors: u64,
 }
 
 impl ServeMetrics {
@@ -119,6 +125,9 @@ impl ServeMetrics {
         if self.dropped > 0 {
             s += &format!(", {} DROPPED", self.dropped);
         }
+        if self.internal_errors > 0 {
+            s += &format!(", {} INTERNAL ERRORS", self.internal_errors);
+        }
         s
     }
 }
@@ -183,15 +192,18 @@ mod tests {
         // rejected/dropped/backpressure only surface when nonzero
         assert!(!m.summary().contains("rejected"));
         assert!(!m.summary().contains("queue peak"));
+        assert!(!m.summary().contains("INTERNAL"));
         let m2 = ServeMetrics {
             rejected: 2,
             dropped: 1,
             queue_peak: 7,
             admission_blocked_ms: 12.0,
+            internal_errors: 3,
             ..Default::default()
         };
         assert!(m2.summary().contains("2 rejected"));
         assert!(m2.summary().contains("1 DROPPED"));
+        assert!(m2.summary().contains("3 INTERNAL ERRORS"));
         assert!(m2.summary().contains("queue peak 7"));
         assert!(m2.summary().contains("blocked 12 ms"));
         // Display delegates to summary

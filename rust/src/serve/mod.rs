@@ -33,4 +33,4 @@ pub use kvstate::{FullKv, KvLayout, SlotKv};
 pub use metrics::{CompletionStat, ServeMetrics};
 pub use planes::PlaneStore;
 pub use router::{Router, RouterConfig};
-pub use trace::{QueuedRequest, Request, TraceConfig};
+pub use trace::{Clock, QueuedRequest, Request, TraceConfig};

@@ -91,7 +91,7 @@ impl PlaneStore {
     /// decoded the layer — callers fall back to decoding from the
     /// source, so over-claiming stays correct (just not decode-once).
     pub fn claim(&self, base: &str) -> Option<Tensor> {
-        let mut planes = self.planes.lock().unwrap();
+        let mut planes = self.planes.lock().unwrap_or_else(|p| p.into_inner());
         if let Some((t, remaining)) = planes.get_mut(base) {
             if *remaining > 1 {
                 *remaining -= 1;
@@ -106,7 +106,7 @@ impl PlaneStore {
 
     /// Whether the store still holds a plane for `base` (claims left).
     pub fn contains(&self, base: &str) -> bool {
-        self.planes.lock().unwrap().contains_key(base)
+        self.planes.lock().unwrap_or_else(|p| p.into_inner()).contains_key(base)
     }
 
     /// How many layer decodes this store performed at build — by

@@ -85,7 +85,9 @@ impl Router {
                             // safety-valve clock so requests arriving
                             // after an idle gap are never guillotined
                             last_work = Instant::now();
-                            batcher.push(r);
+                            // stamp on the ENGINE's clock: queue-wait
+                            // accounting needs one time origin end-to-end
+                            batcher.push(r, ge.now_ms());
                         }
                         Ok(RouterMsg::Shutdown) => shutdown = true,
                         Err(mpsc::TryRecvError::Empty) => break,
@@ -97,7 +99,7 @@ impl Router {
                 }
                 // batcher → admission queue (force when engine has room)
                 let force = ge.idle_slots() > 0 && queue.is_empty();
-                queue.extend(batcher.poll(Instant::now(), force || shutdown));
+                queue.extend(batcher.poll(ge.now_ms(), force || shutdown));
                 ge.admit(&mut queue)?;
                 if ge.active_slots() > 0 {
                     for c in ge.step()? {
@@ -130,7 +132,7 @@ impl Router {
                     // flush the batcher COMPLETELY (one poll caps at
                     // max_batch) so every stuck request is counted
                     loop {
-                        let flushed = batcher.poll(Instant::now(), true);
+                        let flushed = batcher.poll(ge.now_ms(), true);
                         if flushed.is_empty() {
                             break;
                         }

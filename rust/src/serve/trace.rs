@@ -3,7 +3,67 @@
 
 use crate::data::{Corpus, Split};
 use crate::util::prng::Rng;
-use std::time::Instant;
+use std::time::{Duration, Instant};
+
+/// The serving stack's time source. All timestamps downstream
+/// ([`QueuedRequest::enqueued_ms`], the batcher deadline, the engine's
+/// latency split) are f64 milliseconds on ONE clock, so the whole
+/// admission path can run against either real time or a deterministic
+/// virtual clock (`serve-bench --churn --virtual-clock`: open-loop
+/// arrival replay with no wall-clock sleeps, one tick per decode step).
+#[derive(Clone, Debug)]
+pub enum Clock {
+    /// Real time: `now_ms` is wall time elapsed since construction.
+    Wall { t0: Instant },
+    /// Deterministic virtual time: advances only via [`Clock::advance`]
+    /// / [`Clock::sleep_until`]. Never sleeps.
+    Virtual { now_ms: f64 },
+}
+
+impl Clock {
+    pub fn wall() -> Clock {
+        Clock::Wall { t0: Instant::now() }
+    }
+
+    pub fn virtual_at(now_ms: f64) -> Clock {
+        Clock::Virtual { now_ms }
+    }
+
+    pub fn is_virtual(&self) -> bool {
+        matches!(self, Clock::Virtual { .. })
+    }
+
+    /// Milliseconds since this clock's origin.
+    pub fn now_ms(&self) -> f64 {
+        match self {
+            Clock::Wall { t0 } => t0.elapsed().as_secs_f64() * 1e3,
+            Clock::Virtual { now_ms } => *now_ms,
+        }
+    }
+
+    /// Charge `ms` of simulated work to a virtual clock. On a wall
+    /// clock this is a no-op — real time advances on its own.
+    pub fn advance(&mut self, ms: f64) {
+        if let Clock::Virtual { now_ms } = self {
+            *now_ms += ms;
+        }
+    }
+
+    /// Block until roughly `target_ms`, bounded by `cap_ms` per call so
+    /// callers can keep polling. Wall: one short sleep (≥ 1 ms).
+    /// Virtual: jump straight to the target — no sleeping, which is the
+    /// entire point of virtual replay.
+    pub fn sleep_until(&mut self, target_ms: f64, cap_ms: f64) {
+        match self {
+            Clock::Wall { t0 } => {
+                let now = t0.elapsed().as_secs_f64() * 1e3;
+                let wait = (target_ms - now).max(0.0).min(cap_ms);
+                std::thread::sleep(Duration::from_millis((wait as u64).max(1)));
+            }
+            Clock::Virtual { now_ms } => *now_ms = now_ms.max(target_ms),
+        }
+    }
+}
 
 #[derive(Clone, Debug)]
 pub struct Request {
@@ -14,25 +74,22 @@ pub struct Request {
     pub arrival_ms: u64,
 }
 
-/// A request plus the instant it entered the serving system. End-to-end
-/// latency is measured from THIS timestamp (submission), not from
-/// admission — otherwise queueing delay under churn is invisible.
+/// A request plus the [`Clock`] timestamp at which it entered the
+/// serving system. End-to-end latency is measured from THIS timestamp
+/// (submission), not from admission — otherwise queueing delay under
+/// churn is invisible.
 #[derive(Clone, Debug)]
 pub struct QueuedRequest {
     pub req: Request,
-    pub enqueued: Instant,
+    /// submission time in ms on the engine/batcher's shared [`Clock`]
+    pub enqueued_ms: f64,
 }
 
 impl QueuedRequest {
-    /// Stamp a request as entering the system now.
-    pub fn now(req: Request) -> Self {
-        QueuedRequest { req, enqueued: Instant::now() }
-    }
-}
-
-impl From<Request> for QueuedRequest {
-    fn from(req: Request) -> Self {
-        QueuedRequest::now(req)
+    /// Stamp a request as entering the system at `now_ms` (the caller's
+    /// clock reading — wall or virtual).
+    pub fn at(req: Request, now_ms: f64) -> Self {
+        QueuedRequest { req, enqueued_ms: now_ms }
     }
 }
 
@@ -145,9 +202,36 @@ mod tests {
     #[test]
     fn queued_request_wraps() {
         let r = Request { id: 9, prompt: vec![1], max_new: 2, arrival_ms: 0 };
-        let q: QueuedRequest = r.clone().into();
+        let q = QueuedRequest::at(r, 12.5);
         assert_eq!(q.req.id, 9);
-        assert!(q.enqueued.elapsed().as_secs() < 60);
+        assert_eq!(q.enqueued_ms, 12.5);
+    }
+
+    #[test]
+    fn virtual_clock_is_deterministic() {
+        let mut c = Clock::virtual_at(0.0);
+        assert!(c.is_virtual());
+        assert_eq!(c.now_ms(), 0.0);
+        c.advance(1.5);
+        assert_eq!(c.now_ms(), 1.5);
+        // sleep_until jumps without sleeping, and never moves backwards
+        c.sleep_until(10.0, 5.0);
+        assert_eq!(c.now_ms(), 10.0);
+        c.sleep_until(4.0, 5.0);
+        assert_eq!(c.now_ms(), 10.0);
+    }
+
+    #[test]
+    fn wall_clock_monotonic() {
+        let c = Clock::wall();
+        assert!(!c.is_virtual());
+        let a = c.now_ms();
+        let b = c.now_ms();
+        assert!(b >= a && a >= 0.0);
+        // advance is a no-op on a wall clock
+        let mut c = c;
+        c.advance(1e9);
+        assert!(c.now_ms() < 1e9);
     }
 
     #[test]

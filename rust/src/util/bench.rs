@@ -45,7 +45,7 @@ impl Default for BenchRunner {
 
 impl BenchRunner {
     pub fn new() -> Self {
-        let quick = std::env::var("HIGGS_BENCH_QUICK").is_ok();
+        let quick = crate::util::env_flag("HIGGS_BENCH_QUICK");
         if quick {
             Self::with_counts(1, 3)
         } else {

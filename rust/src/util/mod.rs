@@ -24,6 +24,24 @@ pub fn env_usize(name: &str, default: usize) -> usize {
         .map_or(default, |n| n.max(1))
 }
 
+/// Boolean knob: set (to anything) means on. Every env knob in the
+/// crate reads through one of the `env_*` helpers — the audit lint
+/// (`cargo run --bin audit`, PERF.md §11) bans raw `std::env::var`
+/// elsewhere and cross-checks knob names against PERF.md's table.
+pub fn env_flag(name: &str) -> bool {
+    std::env::var(name).is_ok()
+}
+
+/// String knob: `None` when unset.
+pub fn env_str(name: &str) -> Option<String> {
+    std::env::var(name).ok()
+}
+
+/// u64 knob: `default` when unset or unparsable.
+pub fn env_u64(name: &str, default: u64) -> u64 {
+    std::env::var(name).ok().and_then(|s| s.parse::<u64>().ok()).unwrap_or(default)
+}
+
 /// FNV-1a 64 over a byte stream — the shared integrity/identity hash
 /// (QuantArtifact trailer checksum, ErrorDb weights fingerprint). A
 /// single flipped byte always changes the hash: xor preserves state
@@ -48,6 +66,13 @@ mod tests {
     fn env_usize_default_and_floor() {
         // unset → default (no env mutation: use an unlikely name)
         assert_eq!(super::env_usize("HIGGS_TEST_KNOB_DOES_NOT_EXIST", 32), 32);
+    }
+
+    #[test]
+    fn env_helpers_defaults() {
+        assert!(!super::env_flag("HIGGS_TEST_KNOB_DOES_NOT_EXIST"));
+        assert_eq!(super::env_str("HIGGS_TEST_KNOB_DOES_NOT_EXIST"), None);
+        assert_eq!(super::env_u64("HIGGS_TEST_KNOB_DOES_NOT_EXIST", 7), 7);
     }
 
     #[test]

@@ -53,18 +53,25 @@ pub fn par_for(n: usize, f: impl Fn(usize) + Sync) {
     });
 }
 
-/// Map 0..n in parallel, collecting results in order.
+/// Map 0..n in parallel, collecting results in order. Results scatter
+/// through the audited disjoint-write path ([`SharedSlice`]) — no
+/// per-item lock on the fan-out (the old collection took a `Mutex`
+/// once per element, serializing every `build_error_db` /
+/// `PlaneStore::build_for` / `apply_to` result hand-off).
 pub fn par_map<T: Send>(n: usize, f: impl Fn(usize) -> T + Sync) -> Vec<T> {
     let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
     {
-        let slots = std::sync::Mutex::new(&mut out);
-        par_for(n, |i| {
-            let v = f(i);
-            // Short critical section: single slot write.
-            slots.lock().unwrap()[i] = Some(v);
+        let slots = SharedSlice::new(&mut out);
+        covered_region(&[&slots], "par_map", || {
+            par_for(n, |i| {
+                let v = f(i);
+                // SAFETY: par_for's atomic counter hands index i to
+                // exactly one worker, and i < n == slots.len().
+                unsafe { slots.write(i, Some(v)) };
+            });
         });
     }
-    out.into_iter().map(|o| o.unwrap()).collect()
+    out.into_iter().map(|o| o.expect("par_for covers 0..n")).collect()
 }
 
 /// A shared mutable view of a slice for parallel writers whose index
@@ -75,6 +82,12 @@ pub fn par_map<T: Send>(n: usize, f: impl Fn(usize) -> T + Sync) -> Vec<T> {
 pub struct SharedSlice<'a, T> {
     ptr: *mut T,
     len: usize,
+    /// Per-index write bitmap (`shared_slice_audit` only): `write`
+    /// panics on an out-of-bounds index or a second write to the same
+    /// index within this region — a lightweight race detector for the
+    /// disjoint-scatter contract. One relaxed `fetch_or` per write.
+    #[cfg(feature = "shared_slice_audit")]
+    written: Vec<std::sync::atomic::AtomicU64>,
     _marker: std::marker::PhantomData<&'a mut [T]>,
 }
 
@@ -86,7 +99,15 @@ unsafe impl<T: Send> Sync for SharedSlice<'_, T> {}
 
 impl<'a, T> SharedSlice<'a, T> {
     pub fn new(slice: &'a mut [T]) -> Self {
-        SharedSlice { ptr: slice.as_mut_ptr(), len: slice.len(), _marker: std::marker::PhantomData }
+        SharedSlice {
+            ptr: slice.as_mut_ptr(),
+            len: slice.len(),
+            #[cfg(feature = "shared_slice_audit")]
+            written: (0..slice.len().div_ceil(64))
+                .map(|_| std::sync::atomic::AtomicU64::new(0))
+                .collect(),
+            _marker: std::marker::PhantomData,
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -101,10 +122,80 @@ impl<'a, T> SharedSlice<'a, T> {
     ///
     /// # Safety
     /// `i < len`, and no other thread writes index `i` during the same
-    /// parallel region.
+    /// parallel region. Under the `shared_slice_audit` feature both
+    /// clauses are checked at runtime (panic before the raw write).
     pub unsafe fn write(&self, i: usize, v: T) {
+        #[cfg(feature = "shared_slice_audit")]
+        self.audit_mark(i);
         debug_assert!(i < self.len);
         *self.ptr.add(i) = v;
+    }
+
+    #[cfg(feature = "shared_slice_audit")]
+    fn audit_mark(&self, i: usize) {
+        use std::sync::atomic::Ordering;
+        assert!(
+            i < self.len,
+            "SharedSlice audit: out-of-bounds write at index {i} (len {})",
+            self.len
+        );
+        let bit = 1u64 << (i % 64);
+        let prev = self.written[i / 64].fetch_or(bit, Ordering::Relaxed);
+        assert!(
+            prev & bit == 0,
+            "SharedSlice audit: double write at index {i} within one parallel region"
+        );
+    }
+
+    /// Audit hook: assert every index 0..len was written during this
+    /// region (callers that declare full coverage — encode/decode
+    /// scatters, `par_map`). No-op unless `shared_slice_audit` is on.
+    pub fn assert_covered(&self, ctx: &str) {
+        #[cfg(feature = "shared_slice_audit")]
+        {
+            use std::sync::atomic::Ordering;
+            for (w, word) in self.written.iter().enumerate() {
+                let got = word.load(Ordering::Acquire);
+                let lanes = (self.len - w * 64).min(64);
+                let want = if lanes == 64 { u64::MAX } else { (1u64 << lanes) - 1 };
+                if got != want {
+                    let missing =
+                        (0..lanes).find(|&b| got & (1u64 << b) == 0).map(|b| w * 64 + b);
+                    panic!(
+                        "SharedSlice audit: uncovered index {missing:?} after region \
+                         `{ctx}` (len {})",
+                        self.len
+                    );
+                }
+            }
+        }
+        #[cfg(not(feature = "shared_slice_audit"))]
+        let _ = ctx;
+    }
+}
+
+/// Write-coverage witness for the audit feature: lets a region declare
+/// heterogeneous output slices (`u32` codes + `f32` scales) in one
+/// list.
+pub trait ScatterAudit {
+    fn assert_covered(&self, ctx: &str);
+}
+
+impl<T> ScatterAudit for SharedSlice<'_, T> {
+    fn assert_covered(&self, ctx: &str) {
+        SharedSlice::assert_covered(self, ctx);
+    }
+}
+
+/// Run `f` as an audited parallel scatter region: when
+/// `shared_slice_audit` is on, every slice in `outs` must be fully
+/// written by the time `f` returns (partial-coverage outputs assert
+/// individually via [`SharedSlice::assert_covered`]). Without the
+/// feature this is exactly `f()`.
+pub fn covered_region(outs: &[&dyn ScatterAudit], ctx: &str, f: impl FnOnce()) {
+    f();
+    for o in outs {
+        o.assert_covered(ctx);
     }
 }
 
@@ -126,6 +217,7 @@ mod tests {
     fn par_for_each_index_exactly_once() {
         let mut seen = vec![0u32; 500];
         let shared = SharedSlice::new(&mut seen);
+        // SAFETY: par_for hands each in-bounds index to one worker.
         par_for(500, |i| unsafe { shared.write(i, i as u32 + 1) });
         for (i, &v) in seen.iter().enumerate() {
             assert_eq!(v, i as u32 + 1);
@@ -145,6 +237,68 @@ mod tests {
         assert!(v.is_empty());
         let v = par_map(1, |i| i + 1);
         assert_eq!(v, vec![1]);
+    }
+
+    // Negative tests: the write-audit sanitizer must actually catch
+    // seeded contract violations (these are the proofs the `# Safety`
+    // contract is checkable, not just documented). Without the feature
+    // the seeded writes below would be UB, so the whole block is gated.
+    #[cfg(feature = "shared_slice_audit")]
+    #[test]
+    #[should_panic(expected = "double write")]
+    fn audit_catches_double_write() {
+        let mut v = vec![0u32; 8];
+        let s = SharedSlice::new(&mut v);
+        // SAFETY: in-bounds single-threaded writes; the second write to
+        // index 3 violates the region contract ON PURPOSE — the audit
+        // bitmap must panic before it lands.
+        unsafe {
+            s.write(3, 1);
+            s.write(3, 2);
+        }
+    }
+
+    #[cfg(feature = "shared_slice_audit")]
+    #[test]
+    #[should_panic(expected = "out-of-bounds")]
+    fn audit_catches_out_of_bounds_write() {
+        let mut v = vec![0u32; 8];
+        let s = SharedSlice::new(&mut v);
+        // SAFETY: not actually unsafe under the audit feature — the
+        // bounds assert fires before the raw pointer write happens.
+        unsafe { s.write(8, 1) };
+    }
+
+    #[cfg(feature = "shared_slice_audit")]
+    #[test]
+    #[should_panic(expected = "uncovered index Some(1)")]
+    fn audit_catches_missed_coverage() {
+        let mut v = vec![0u32; 3];
+        let s = SharedSlice::new(&mut v);
+        covered_region(&[&s], "coverage-test", || {
+            // SAFETY: disjoint in-bounds writes — but index 1 is never
+            // written, so the declared full coverage must fail.
+            unsafe {
+                s.write(0, 1);
+                s.write(2, 1);
+            }
+        });
+    }
+
+    #[cfg(feature = "shared_slice_audit")]
+    #[test]
+    fn audit_passes_clean_full_coverage() {
+        // positive control: a correct disjoint scatter is untouched by
+        // the sanitizer (same results, no panic) — bit-identical runs
+        // under `--features shared_slice_audit` depend on this
+        let mut v = vec![0u32; 130]; // >2 bitmap words, ragged tail
+        let s = SharedSlice::new(&mut v);
+        covered_region(&[&s], "clean", || {
+            // SAFETY: disjoint in-bounds writes covering every index.
+            par_for(130, |i| unsafe { s.write(i, i as u32) });
+        });
+        drop(s);
+        assert!(v.iter().enumerate().all(|(i, &x)| x == i as u32));
     }
 
     #[test]

@@ -105,10 +105,7 @@ pub fn forall<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(name: &str, cases: u6
 }
 
 fn env_seed() -> u64 {
-    std::env::var("HIGGS_PROP_SEED")
-        .ok()
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(0x5EED)
+    crate::util::env_u64("HIGGS_PROP_SEED", 0x5EED)
 }
 
 #[cfg(test)]

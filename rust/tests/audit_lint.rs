@@ -1,0 +1,96 @@
+//! Golden-file tests for the repo lint (`higgs::audit`), plus the
+//! self-hosting check: the audit must pass on this crate's own tree
+//! with exactly the grandfathered allowlist.
+//!
+//! Fixture sources live under `tests/fixtures/audit/` — cargo only
+//! compiles top-level files in `tests/`, so the deliberately broken
+//! fixtures are never built, only scanned.
+
+use higgs::audit::{report_json, run_audit, AuditConfig};
+use std::path::{Path, PathBuf};
+
+fn fixtures() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/audit")
+}
+
+#[test]
+fn bad_fixtures_produce_exact_golden_report() {
+    let cfg = AuditConfig {
+        src_root: fixtures().join("bad"),
+        perf_md: Some(fixtures().join("PERF.md")),
+        allowlist: None,
+    };
+    let report = run_audit(&cfg).unwrap();
+    let got = report_json(&report);
+    let want = std::fs::read_to_string(fixtures().join("expected.json")).unwrap();
+    assert_eq!(got, want, "audit JSON drifted from the golden file");
+    assert_eq!(report.findings.len(), 7);
+    assert_eq!(report.allowlisted, 0);
+}
+
+#[test]
+fn good_fixtures_are_clean() {
+    // near-miss tokens (unwrap_or, expect_byte, vec![, strings/comments
+    // containing banned tokens, test-gated everything) must not fire
+    let cfg = AuditConfig {
+        src_root: fixtures().join("good"),
+        perf_md: Some(fixtures().join("PERF.md")),
+        allowlist: None,
+    };
+    let report = run_audit(&cfg).unwrap();
+    assert!(report.findings.is_empty(), "{}", report_json(&report));
+    assert_eq!(report.files_scanned, 2);
+}
+
+#[test]
+fn allowlist_suppresses_exact_matches_and_reports_stale() {
+    let dir = std::env::temp_dir().join(format!("higgs_audit_allow_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let allow = dir.join("allow.txt");
+    std::fs::write(
+        &allow,
+        "# test allowlist\n\
+         panic-path\tserve/engine.rs\tlet n = o.unwrap();\n\
+         panic-path\tserve/engine.rs\tthis line no longer exists\n",
+    )
+    .unwrap();
+    let cfg = AuditConfig {
+        src_root: fixtures().join("bad"),
+        perf_md: Some(fixtures().join("PERF.md")),
+        allowlist: Some(allow.clone()),
+    };
+    let report = run_audit(&cfg).unwrap();
+    std::fs::remove_file(&allow).ok();
+    std::fs::remove_dir(&dir).ok();
+    assert_eq!(report.allowlisted, 1);
+    assert_eq!(report.findings.len(), 6);
+    assert!(report.findings.iter().all(|f| f.rule != "panic-path"));
+    assert_eq!(report.stale_allowlist.len(), 1);
+    assert!(report.stale_allowlist[0].contains("no longer exists"));
+}
+
+#[test]
+fn repo_tree_is_audit_clean() {
+    // the same invocation CI runs via `cargo run --release --bin audit`
+    let manifest = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let cfg = AuditConfig {
+        src_root: manifest.join("src"),
+        perf_md: manifest.parent().map(|p| p.join("PERF.md")),
+        allowlist: Some(manifest.join("audit_allowlist.txt")),
+    };
+    assert!(cfg.perf_md.as_ref().is_some_and(|p| p.is_file()), "PERF.md missing");
+    let report = run_audit(&cfg).unwrap();
+    assert!(
+        report.findings.is_empty(),
+        "new audit violations:\n{}",
+        report_json(&report)
+    );
+    assert!(
+        report.stale_allowlist.is_empty(),
+        "stale allowlist entries: {:?}",
+        report.stale_allowlist
+    );
+    // shrink-only allowlist: exactly the router coordinator spawn
+    assert_eq!(report.allowlisted, 1);
+    assert!(report.files_scanned > 30);
+}

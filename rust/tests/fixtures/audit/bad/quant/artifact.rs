@@ -1,0 +1,10 @@
+//! Fixture: unchecked indexing on the parse path.
+
+pub fn from_bytes(buf: &[u8]) -> u32 {
+    let hi = buf[0];
+    u32::from(hi)
+}
+
+pub fn checksum(buf: &[u8]) -> u8 {
+    buf[1]
+}

@@ -1,0 +1,22 @@
+//! Fixture: deliberately violates the serving-path rules.
+
+pub unsafe fn poke(p: *mut u8) {
+    *p = 0;
+}
+
+pub fn admit(o: Option<u32>) -> u32 {
+    let h = std::thread::spawn(|| 7);
+    let key = std::env::var("HIGGS_SECRET_KNOB").unwrap_or_default();
+    let n = o.unwrap();
+    unsafe { poke(&mut (n as u8) as *mut u8) };
+    let _ = (h.join(), key);
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn gated_unwrap_is_fine() {
+        Some(3).unwrap();
+    }
+}

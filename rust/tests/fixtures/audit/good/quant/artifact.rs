@@ -1,0 +1,8 @@
+//! Fixture: checked parse path — no raw indexing in parse-named fns.
+
+pub fn from_bytes(buf: &[u8]) -> Option<u32> {
+    let head = buf.get(..4)?;
+    let mut b = [0u8; 4];
+    b.copy_from_slice(head);
+    Some(u32::from_le_bytes(b))
+}

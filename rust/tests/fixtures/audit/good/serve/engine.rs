@@ -1,0 +1,25 @@
+//! Fixture: clean serving code — near-miss tokens only.
+
+pub fn admit(o: Option<u32>) -> u32 {
+    let v = vec![1u32];
+    let w = o.unwrap_or(0);
+    let msg = "calling .unwrap() or panic! here would be a bug";
+    let flag = crate::util::env_flag("HIGGS_DOCUMENTED");
+    let b = expect_byte(b':');
+    u32::from(flag) + w + u32::from(b) + v.len() as u32 + msg.len() as u32
+}
+
+fn expect_byte(b: u8) -> u8 {
+    b
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn gated_everything_is_fine() {
+        Some(1).unwrap();
+        let _ = std::env::var("HIGGS_UNTRACKED_TEST_ONLY");
+        let h = std::thread::spawn(|| 1);
+        let _ = h.join();
+    }
+}

@@ -10,7 +10,7 @@ use higgs::serve::{Backend, Router, RouterConfig};
 use std::collections::VecDeque;
 
 fn qd(reqs: Vec<Request>) -> VecDeque<QueuedRequest> {
-    reqs.into_iter().map(QueuedRequest::now).collect()
+    reqs.into_iter().map(|r| QueuedRequest::at(r, 0.0)).collect()
 }
 
 fn have_artifacts() -> bool {

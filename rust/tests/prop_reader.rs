@@ -129,7 +129,7 @@ fn lazy_load_equals_full_load_all_kinds() {
     let _ = std::fs::remove_file(&p);
     // legacy v1 image: lazy loads still work (trailer verified at open)
     let p = tmp_path("kinds_v1");
-    std::fs::write(&p, art.to_bytes_v1()).unwrap();
+    std::fs::write(&p, art.to_bytes_v1().unwrap()).unwrap();
     let r = ArtifactReader::open(&p).unwrap();
     assert_eq!(r.version(), 1);
     // v1 pays one full-file pass at open — the counter reflects it
@@ -166,7 +166,7 @@ fn f16_scale_error_is_bounded() {
             LutQuantizer::new(reg.get(GridKind::Nf, 16, 1), 16).quantize("l", &w)
         };
         let art = QuantArtifact::from_model("p", &QuantizedModel::from_layers(vec![ql]));
-        let exact = QuantArtifact::from_bytes(&art.to_bytes()).unwrap();
+        let exact = QuantArtifact::from_bytes(&art.to_bytes().unwrap()).unwrap();
         let approx =
             QuantArtifact::from_bytes(&art.to_bytes_with(ScaleDtype::F16).unwrap()).unwrap();
         let (de, da) = (exact.layers[0].dequantize(), approx.layers[0].dequantize());
@@ -194,7 +194,7 @@ fn f16_scale_error_is_bounded() {
         let w = Tensor::from_vec(&[k, n], g.vec_normal(k * n));
         let ql = RtnQuantizer::new(*g.choose(&[3u32, 4, 8]), 16).quantize("l", &w);
         let art = QuantArtifact::from_model("p", &QuantizedModel::from_layers(vec![ql]));
-        let exact = QuantArtifact::from_bytes(&art.to_bytes()).unwrap();
+        let exact = QuantArtifact::from_bytes(&art.to_bytes().unwrap()).unwrap();
         let approx =
             QuantArtifact::from_bytes(&art.to_bytes_with(ScaleDtype::F16).unwrap()).unwrap();
         let s = &exact.layers[0];
@@ -310,7 +310,7 @@ fn corrupt_plane_reads_error_never_panic() {
     let _g = decode_lock();
     let qm = all_kinds_model(5);
     let art = QuantArtifact::from_model("corrupt", &qm);
-    let bytes = art.to_bytes();
+    let bytes = art.to_bytes().unwrap();
     let p = tmp_path("corrupt");
 
     // locate one layer's plane region via a clean reader
@@ -359,7 +359,7 @@ fn corrupt_plane_reads_error_never_panic() {
     }
 
     // v1 files: any flip is caught by the streaming trailer pass at open
-    let v1 = art.to_bytes_v1();
+    let v1 = art.to_bytes_v1().unwrap();
     let mut corrupt = v1.clone();
     let at = v1.len() / 2;
     corrupt[at] ^= 0x10;
