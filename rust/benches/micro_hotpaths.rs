@@ -3,7 +3,9 @@
 //! HIGGS layer quantization throughput (serial reference vs blocked
 //! multithreaded encode), fused decode (blocked parallel dequantize vs
 //! serial reference, decode-from-packed, streaming error measurement),
-//! bit-packing, DP allocation, qmm kernel executions at serving shapes.
+//! bit-packing, DP allocation, qmm kernel executions at serving shapes,
+//! the tiled block gather, and pipeline-parallel serving throughput at
+//! 1/2/4 shards plus per-frame transport overhead.
 //!
 //! Emits `BENCH_hotpaths.json` (override with `HIGGS_BENCH_JSON`) with
 //! (op, ns/iter, throughput) rows so the perf trajectory is tracked
@@ -520,6 +522,114 @@ fn main() {
         let toks_d = rd.total_generated as f64;
         let m = r.bench_items("churn_drain_fullsplice", toks_d, || run_churn(&drain).unwrap());
         eprintln!("  -> drain+fullsplice baseline: {:.1} tok/s", m.throughput(toks_d));
+    }
+
+    // SIMD-friendly block gather: the tiled micro-transpose feeding the
+    // blocked HIGGS encode vs the naive per-element scatter it replaced
+    // — a pure copy permutation, equality-gated bit-for-bit first
+    {
+        use higgs::quant::higgs::gather_block_colmajor;
+        let (k, n) = (1024usize, 1024usize);
+        let src = rng.normal_vec(k * n);
+        let (j0, bcols) = (512usize, 32usize);
+        let mut tiled = vec![0.0f32; bcols * k];
+        let mut naive = vec![0.0f32; bcols * k];
+        gather_block_colmajor(&src, k, n, j0, bcols, &mut tiled);
+        for kk in 0..k {
+            let row = &src[kk * n + j0..kk * n + j0 + bcols];
+            for (b, &val) in row.iter().enumerate() {
+                naive[b * k + kk] = val;
+            }
+        }
+        assert_eq!(bits_of(&tiled), bits_of(&naive), "tiled gather diverged from naive");
+        let elems = (bcols * k) as f64;
+        let m = r.bench_items("gather_block_1024", elems, || {
+            gather_block_colmajor(&src, k, n, j0, bcols, &mut tiled);
+            tiled[0]
+        });
+        eprintln!("  -> tiled block gather: {:.1} Melem/s", m.throughput(elems) / 1e6);
+        r.bench_items("gather_block_naive_1024", elems, || {
+            for kk in 0..k {
+                let row = &src[kk * n + j0..kk * n + j0 + bcols];
+                for (b, &val) in row.iter().enumerate() {
+                    naive[b * k + kk] = val;
+                }
+            }
+            naive[0]
+        });
+    }
+
+    // pipeline-parallel serving: tokens/s at 1/2/4 shards on one churn
+    // workload (tokens asserted identical across shard counts before
+    // timing — sharding is an execution strategy, not a different
+    // model), per-ring cold-start bytes, and the frame encode/parse
+    // cost paid on every shard hop
+    {
+        use higgs::serve::churn::churn_arrivals;
+        use higgs::serve::transport::{FRAME_DECODE, WIRE_OVERHEAD};
+        use higgs::serve::{
+            run_pipeline, ActivationFrame, ChurnConfig, PipelineConfig, PipelineSource,
+        };
+        let mk = |shards: usize| PipelineConfig {
+            shards,
+            micro_batches: 2,
+            layers: 8,
+            ..Default::default()
+        };
+        let workload = ChurnConfig { n_requests: 16, ..Default::default() };
+        let oracle =
+            run_pipeline(&mk(1), &PipelineSource::Synthetic, churn_arrivals(&workload)).unwrap();
+        let toks: f64 = oracle.completions.iter().map(|c| c.tokens.len() as f64).sum();
+        assert!(toks > 0.0, "pipeline workload generated no tokens");
+        for shards in [2usize, 4] {
+            let rep =
+                run_pipeline(&mk(shards), &PipelineSource::Synthetic, churn_arrivals(&workload))
+                    .unwrap();
+            assert_eq!(rep.completions.len(), oracle.completions.len());
+            for (a, b) in oracle.completions.iter().zip(&rep.completions) {
+                assert_eq!(
+                    (a.id, &a.tokens),
+                    (b.id, &b.tokens),
+                    "pipeline tokens diverged at {shards} shards"
+                );
+            }
+            eprintln!(
+                "  -> {shards}-shard ring: cold start {} bytes, {} frames / {} wire bytes, bubble {:.1} ms",
+                rep.cold_start_bytes(),
+                rep.total_frames(),
+                rep.total_wire_bytes(),
+                rep.metrics.pipeline_bubble_ms,
+            );
+        }
+        for shards in [1usize, 2, 4] {
+            let cfg = mk(shards);
+            let m = r.bench_items(&format!("pipeline_tokens_s{shards}"), toks, || {
+                run_pipeline(&cfg, &PipelineSource::Synthetic, churn_arrivals(&workload)).unwrap()
+            });
+            eprintln!("  -> pipeline {shards} shard(s): {:.1} tok/s", m.throughput(toks));
+        }
+        // per-frame transport overhead: full wire roundtrip (serialize,
+        // length/checksum framing, parse + verify) of a decode frame
+        let frame = ActivationFrame {
+            kind: FRAME_DECODE,
+            mb: 0,
+            step: 1,
+            rows: 4,
+            cols: 8,
+            active: 0xF,
+            pos: vec![3, 4, 5, 6],
+            data: rng.normal_vec(32),
+        };
+        let rt = ActivationFrame::from_bytes(&frame.to_bytes()).unwrap();
+        assert_eq!(rt, frame, "frame wire roundtrip diverged");
+        eprintln!(
+            "  -> frame wire size: {} bytes ({} of them length/checksum framing)",
+            frame.wire_len(),
+            WIRE_OVERHEAD
+        );
+        r.bench_items("pipeline_frame_roundtrip", 1.0, || {
+            ActivationFrame::from_bytes(&frame.to_bytes()).unwrap()
+        });
     }
 
     // machine-readable perf record (tracked across PRs)

@@ -36,9 +36,12 @@ const PANIC_TOKENS: [&str; 6] = [
 ];
 /// Fn-name prefixes that mark a parse path (unchecked `[...]` banned).
 const PARSE_FN_PREFIXES: [&str; 4] = ["parse", "from_bytes", "load", "open"];
-/// Modules that must be deterministic: replayable churn traces and
-/// property-check shrinking both break if wall time leaks in.
-const WALL_CLOCK_FILES: [&str; 2] = ["serve/churn.rs", "util/propcheck.rs"];
+/// Modules that must be deterministic: replayable churn traces,
+/// property-check shrinking, and the pipeline activation transport
+/// (the LocalPipe path must stay virtual-clock-compatible) all break
+/// if wall time leaks in.
+const WALL_CLOCK_FILES: [&str; 3] =
+    ["serve/churn.rs", "serve/transport.rs", "util/propcheck.rs"];
 const WALL_CLOCK_TOKENS: [&str; 3] = ["Instant::now", "SystemTime", "thread::sleep"];
 
 /// Run every rule against one file. `knobs` is the set of HIGGS_* names

@@ -8,10 +8,15 @@
 //!
 //! Nearest-neighbor usage is phase-aware: the competitive phase mutates
 //! one point per sample, so it queries the raw [`nearest_scan`]
-//! (an index would go stale every step); each Lloyd polish round runs
-//! against a frozen point set, so it builds a fresh [`GridIndex`] and
-//! assigns all 60k samples through it. Both paths return bit-identical
-//! indices to the scan, so the produced grids are unchanged.
+//! (an index would go stale every step); the Lloyd polish freezes the
+//! point set within a round, so it builds one [`GridIndex`] up front
+//! and [`GridIndex::refresh`]es it between rounds — the projections are
+//! re-sorted for the moved points but the projection direction (the
+//! expensive power iteration) is derived once. Exactness never depends
+//! on the direction, so every path returns bit-identical indices to
+//! the scan and the produced grids are unchanged
+//! (`polish_refresh_matches_rebuild_oracle` pins this against a
+//! rebuild-every-round oracle).
 
 use super::index::GridIndex;
 use super::{nearest_scan, Grid, GridKind};
@@ -115,19 +120,36 @@ fn clvq_nd(n: usize, p: usize, seed: u64) -> Vec<f32> {
         }
     }
 
-    // Lloyd polish: K rounds of batched assignment/centroid. The point
-    // set is frozen within a round, so assignments run through a fresh
-    // per-round index (bit-identical to the scan, ~10x fewer flops).
+    lloyd_polish(&mut pts, n, p, seed, false);
+    pts
+}
+
+/// Lloyd polish: K rounds of batched assignment/centroid over fresh
+/// N(0,1) samples. The point set is frozen within a round, so
+/// assignments run through an index (bit-identical to the scan, ~10x
+/// fewer flops). `rebuild_each_round` picks the index strategy:
+/// `false` derives the projection direction once and incrementally
+/// [`GridIndex::refresh`]es between rounds (production); `true`
+/// rebuilds from scratch every round — the equivalence oracle, same
+/// assignments at more work.
+fn lloyd_polish(pts: &mut [f32], n: usize, p: usize, seed: u64, rebuild_each_round: bool) {
     let batch = 60_000usize;
     let mut samples = vec![0.0f32; batch * p];
+    let mut idx = GridIndex::build(pts, n, p);
     for round in 0..8 {
         let mut r2 = Rng::new(seed ^ (0xF00D + round as u64));
         r2.fill_normal(&mut samples);
         let mut sums = vec![0.0f64; n * p];
         let mut counts = vec![0usize; n];
-        let idx = GridIndex::build(&pts, n, p);
+        if round > 0 {
+            if rebuild_each_round {
+                idx = GridIndex::build(pts, n, p);
+            } else {
+                idx.refresh(pts);
+            }
+        }
         for s in samples.chunks(p) {
-            let c = idx.nearest(&pts, s);
+            let c = idx.nearest(pts, s);
             counts[c] += 1;
             for d in 0..p {
                 sums[c * p + d] += s[d] as f64;
@@ -146,7 +168,6 @@ fn clvq_nd(n: usize, p: usize, seed: u64) -> Vec<f32> {
             }
         }
     }
-    pts
 }
 
 #[cfg(test)]
@@ -194,6 +215,20 @@ mod tests {
             g2.mse,
             g1.mse
         );
+    }
+
+    #[test]
+    fn polish_refresh_matches_rebuild_oracle() {
+        // identical start through both index strategies: the
+        // incremental refresh must yield a bit-identical grid to
+        // rebuilding the index from scratch every round
+        let (n, p) = (24usize, 2usize);
+        let mut a: Vec<f32> = Rng::new(42).normal_vec(n * p);
+        let mut b = a.clone();
+        lloyd_polish(&mut a, n, p, 7, false);
+        lloyd_polish(&mut b, n, p, 7, true);
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&a), bits(&b), "refresh polish diverged from rebuild oracle");
     }
 
     #[test]

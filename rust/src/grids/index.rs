@@ -158,6 +158,46 @@ impl GridIndex {
         best
     }
 
+    /// Re-index a moved point set without re-deriving the projection
+    /// direction: recompute the projections along the existing `dir`,
+    /// re-sort, re-lay-out the points, and refresh the pruning margin.
+    ///
+    /// Exactness never depends on the direction (the Cauchy–Schwarz
+    /// bound holds for any unit vector — see the module doc), so after
+    /// small point moves — e.g. between Lloyd rounds, where the cloud's
+    /// principal direction is essentially static — the refreshed index
+    /// answers every query identically to a full [`GridIndex::build`]
+    /// while skipping its O(n·p²) power iteration. Equivalence against
+    /// the rebuild oracle is property-tested here and in
+    /// `grids::clvq`.
+    pub fn refresh(&mut self, points: &[f32]) {
+        let p = self.p;
+        let n = self.proj.len();
+        assert_eq!(points.len(), n * p, "points length mismatch");
+        let mut ranked: Vec<(f32, u32)> = (0..n)
+            .map(|i| {
+                let mut t = 0.0f32;
+                for d in 0..p {
+                    t += self.dir[d] * points[i * p + d];
+                }
+                (t, i as u32)
+            })
+            .collect();
+        // same total order + tiebreak as build
+        ranked.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        self.proj.clear();
+        self.proj.extend(ranked.iter().map(|r| r.0));
+        self.order.clear();
+        self.order.extend(ranked.iter().map(|r| r.1));
+        self.pts_sorted.clear();
+        for &oi in &self.order {
+            let oi = oi as usize;
+            self.pts_sorted.extend_from_slice(&points[oi * p..(oi + 1) * p]);
+        }
+        let max_abs = points.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        self.margin = 1e-4 * (1.0 + max_abs) * p as f32;
+    }
+
     /// Number of indexed points.
     pub fn len(&self) -> usize {
         self.proj.len()
@@ -253,6 +293,28 @@ mod tests {
                     nearest_scan(&pts, p, &v),
                     "n={n} p={p} v={v:?}"
                 );
+            }
+        });
+    }
+
+    #[test]
+    fn refresh_matches_fresh_build_queries() {
+        forall("refresh == rebuild", 40, |g| {
+            let n = g.usize_in(2, 200);
+            let p = g.usize_in(1, 4);
+            let mut pts = g.vec_normal(n * p);
+            let mut idx = GridIndex::build(&pts, n, p);
+            // Lloyd-round-sized perturbation of the cloud
+            for (i, x) in pts.iter_mut().enumerate() {
+                *x += 0.05 * ((i % 7) as f32 - 3.0);
+            }
+            idx.refresh(&pts);
+            let fresh = GridIndex::build(&pts, n, p);
+            for _ in 0..20 {
+                let v = g.vec_normal(p);
+                let want = nearest_scan(&pts, p, &v);
+                assert_eq!(idx.nearest(&pts, &v), want, "refreshed index diverged");
+                assert_eq!(fresh.nearest(&pts, &v), want, "rebuilt index diverged");
             }
         });
     }

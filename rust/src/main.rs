@@ -28,6 +28,13 @@
 //!                  [--shard i/n | i/n@rr]
 //!                  (--shard cold-starts ONE shard's layers with ranged
 //!                   reads — the per-process slice of a sharded fleet)
+//! higgs serve-pipeline [--artifact PATH] --shards N [--micro-batches K]
+//!                  [--socket] [--batch 4] [--requests 24]
+//!                  (pipeline-parallel execution: N shard workers each
+//!                   cold-start one layer range and stream hidden states
+//!                   shard→shard with K micro-batches in flight; tokens
+//!                   are bit-identical to the single-process path —
+//!                   PERF.md section 12)
 //! higgs shard-manifest --artifact PATH --shards N [--rr]
 //! higgs hessian    --config tiny [--per-layer 8]
 //! higgs experiment fig1|fig2|fig3|fig4|table1|table2|table3|table4|table6 [--config base]
@@ -105,6 +112,7 @@ fn run(args: &Args) -> Result<()> {
         "alloc-quantize" => cmd_alloc_quantize(args),
         "serve-bench" => cmd_serve_bench(args),
         "serve-artifact" => cmd_serve_artifact(args),
+        "serve-pipeline" => cmd_serve_pipeline(args),
         "shard-manifest" => cmd_shard_manifest(args),
         "generate" => cmd_generate(args),
         "hessian" => cmd_hessian(args),
@@ -118,11 +126,14 @@ fn run(args: &Args) -> Result<()> {
 }
 
 const HELP: &str = "higgs — LLM quantization via the Linearity Theorem (see README.md)
-commands: train, eval, quantize, calibrate, allocate, alloc-quantize, serve-bench, serve-artifact, shard-manifest, generate, hessian, experiment
+commands: train, eval, quantize, calibrate, allocate, alloc-quantize, serve-bench, serve-artifact, serve-pipeline, shard-manifest, generate, hessian, experiment
 serve-bench --churn replays an open-loop arrival stream (Poisson-ish gaps,
 mixed prompt lengths) through the continuous batcher; add --drain for the
 admit-only-when-idle baseline and --virtual-clock for a deterministic
-sleep-free replay. See PERF.md sections 10-11.";
+sleep-free replay; --pipeline N routes the churn scenario through the
+pipeline coordinator instead. serve-pipeline streams hidden states across
+N shard workers with K in-flight micro-batches (--micro-batches, or env
+HIGGS_PIPELINE_MB). See PERF.md sections 10-12.";
 
 fn ckpt_path(engine: &Engine, cfg: &ModelConfig, args: &Args) -> std::path::PathBuf {
     match args.flags.get("ckpt").or_else(|| args.flags.get("out")) {
@@ -421,6 +432,13 @@ fn cmd_alloc_quantize(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve_bench(args: &Args) -> Result<()> {
+    // --pipeline N: run the churn scenario through the pipeline
+    // coordinator (XLA-free synthetic layer stack, LocalPipe ring,
+    // virtual clock) instead of the single-process engine — no
+    // ExpContext, no artifacts needed
+    if args.flags.contains_key("pipeline") {
+        return serve_bench_pipeline(args);
+    }
     let ctx = ExpContext::load(&args.get("config", "base"))?;
     let backend = match args.get("backend", "flute4").as_str() {
         "fp16" | "dense" => higgs::serve::Backend::Dense,
@@ -539,6 +557,106 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `serve-bench --pipeline N`: the churn workload through the pipeline
+/// coordinator. Deterministic end to end (virtual clock, synthetic
+/// stack), so the printed metrics are run-to-run identical and the
+/// token stream is bit-identical across shard counts.
+fn serve_bench_pipeline(args: &Args) -> Result<()> {
+    let shards = args.get_usize("pipeline", 2)?;
+    let micro =
+        args.get_usize("micro-batches", higgs::util::env_usize("HIGGS_PIPELINE_MB", 1))?;
+    let batch = args.get_usize("batch", 4)?;
+    let n_req = args.get_usize("requests", 24)?;
+    let cfg = higgs::serve::PipelineConfig {
+        shards,
+        micro_batches: micro,
+        batch,
+        socket: args.flags.contains_key("socket"),
+        ..Default::default()
+    };
+    let arrivals = higgs::serve::churn::churn_arrivals(&higgs::serve::ChurnConfig {
+        n_requests: n_req,
+        batch,
+        ..Default::default()
+    });
+    let rep =
+        higgs::serve::run_pipeline(&cfg, &higgs::serve::PipelineSource::Synthetic, arrivals)?;
+    print_pipeline_report(&rep, batch);
+    Ok(())
+}
+
+fn print_pipeline_report(rep: &higgs::serve::PipelineReport, batch: usize) {
+    println!(
+        "[pipeline n={} k={} b={batch}] {}",
+        rep.shards,
+        rep.micro_batches,
+        rep.metrics.summary()
+    );
+    for (i, (lane, w)) in rep.metrics.shard_lanes.iter().zip(&rep.worker_reports).enumerate() {
+        println!(
+            "  shard {i}: {} layers, busy/wait/idle {:.0}/{:.0}/{:.0} ms, \
+             {} frames ({} bytes) sent, KV {} bytes resident, {} bytes admitted, \
+             cold start {} bytes",
+            w.layers,
+            lane.busy_ms,
+            lane.wait_ms,
+            lane.idle_ms,
+            lane.frames_sent,
+            lane.bytes_sent,
+            w.kv_bytes,
+            w.kv_admit_bytes,
+            w.cold_start_bytes,
+        );
+    }
+    println!(
+        "  ring total: {} frames, {} wire bytes; bubble {:.0} ms over {} rounds; \
+         blocks leaked {}",
+        rep.total_frames(),
+        rep.total_wire_bytes(),
+        rep.metrics.pipeline_bubble_ms,
+        rep.steps,
+        rep.blocks_leaked,
+    );
+}
+
+/// Pipeline-parallel serving: split the layer stack across N shard
+/// workers (each cold-starting ONLY its `ShardSpec::Range` slice
+/// through its own `ArtifactReader` when `--artifact` is given) and
+/// stream hidden states shard→shard with K in-flight micro-batches
+/// over the `ShardTransport` ring (`--socket` for Unix-domain sockets,
+/// default in-process pipes). This is the execution step that
+/// `serve-artifact --shard` only cold-started — see PERF.md §12.
+fn cmd_serve_pipeline(args: &Args) -> Result<()> {
+    let shards = args.get_usize("shards", 2)?;
+    let micro =
+        args.get_usize("micro-batches", higgs::util::env_usize("HIGGS_PIPELINE_MB", 1))?;
+    let batch = args.get_usize("batch", 4)?;
+    let n_req = args.get_usize("requests", 24)?;
+    let layers = args.get_usize("layers", 8)?;
+    let source = match args.flags.get("artifact") {
+        Some(p) => higgs::serve::PipelineSource::Artifact(std::path::PathBuf::from(p)),
+        None => higgs::serve::PipelineSource::Synthetic,
+    };
+    let cfg = higgs::serve::PipelineConfig {
+        shards,
+        micro_batches: micro,
+        batch,
+        layers,
+        socket: args.flags.contains_key("socket"),
+        ..Default::default()
+    };
+    let arrivals = higgs::serve::churn::churn_arrivals(&higgs::serve::ChurnConfig {
+        n_requests: n_req,
+        batch,
+        ..Default::default()
+    });
+    let t0 = std::time::Instant::now();
+    let rep = higgs::serve::run_pipeline(&cfg, &source, arrivals)?;
+    eprintln!("pipeline run ({shards} shards) finished in {:.2}s", t0.elapsed().as_secs_f64());
+    print_pipeline_report(&rep, batch);
+    Ok(())
+}
+
 /// Quantize (or DP-allocate) the model a serve-bench backend needs.
 fn backend_model(
     args: &Args,
@@ -600,8 +718,9 @@ fn backend_model(
 /// proportional to the slice — and reports the per-shard cost. This is
 /// the per-process step of an N-process sharded fleet; running a
 /// request trace needs every layer, so generation is only driven in
-/// unsharded mode (cross-process model-parallel execution is out of
-/// scope — see `higgs shard-manifest` for planning the split).
+/// unsharded mode (`higgs serve-pipeline` EXECUTES across shards by
+/// streaming activations shard→shard; `higgs shard-manifest` plans
+/// the split).
 fn cmd_serve_artifact(args: &Args) -> Result<()> {
     let path = args
         .flags

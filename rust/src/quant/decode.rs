@@ -23,8 +23,10 @@
 //!   block instead of re-copying each column out of the row-major
 //!   output and calling scalar `rht_inverse` on it;
 //! * sinks consume finished blocks: the dense scatter
-//!   ([`decode_dense`]) writes disjoint columns through a
-//!   [`SharedSlice`], and the streaming error measurement
+//!   ([`decode_dense`]) transposes each output row into a contiguous
+//!   scratch run and stores it with one bulk
+//!   [`SharedSlice::write_slice`] per row (disjoint columns per
+//!   block), and the streaming error measurement
 //!   ([`rel_sq_err_streaming`]) accumulates ‖Ŵ−W‖² / ‖W‖² partials
 //!   into per-block slots without ever materializing Ŵ.
 //!
@@ -200,12 +202,19 @@ pub(super) fn decode_dense(view: &LayerView<'_>, block: usize) -> Vec<f32> {
     {
         let out = SharedSlice::new(&mut w);
         for_each_block(view, block, |_bi, j0, bcols, buf| {
+            // per-block row scratch: transpose one output row's worth
+            // of the column-major block, then store it as one
+            // contiguous run — a single bulk write per row instead of
+            // a strided per-element scatter
+            let mut row = vec![0.0f32; bcols];
             for kk in 0..k {
-                for b in 0..bcols {
-                    // SAFETY: column j0+b is decoded by exactly this
-                    // block; positions are disjoint across workers.
-                    unsafe { out.write(kk * n + j0 + b, buf[b * k + kk]) };
+                for (b, r) in row.iter_mut().enumerate() {
+                    *r = buf[b * k + kk];
                 }
+                // SAFETY: columns j0..j0+bcols are decoded by exactly
+                // this block, so row kk's run here is disjoint across
+                // workers.
+                unsafe { out.write_slice(kk * n + j0, &row) };
             }
         });
         // write-audit hook: a dense decode fills every weight slot

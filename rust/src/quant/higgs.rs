@@ -19,8 +19,10 @@
 //!
 //! * columns are processed in blocks of `B` (`HIGGS_ENCODE_BLOCK`,
 //!   default 32). A block is **gathered once** into a column-major
-//!   scratch buffer — the row-major weight matrix is streamed
-//!   contiguously instead of strided per-column walks;
+//!   scratch buffer via [`gather_block_colmajor`], a tiled
+//!   micro-transpose whose reads *and* writes are contiguous
+//!   fixed-width runs (SIMD/`memcpy`-friendly on both sides) instead
+//!   of strided per-element walks;
 //! * per column: group scales (f64 accumulation, same order as the
 //!   reference), normalization, one batched
 //!   [`rht_block_forward`] pass over the whole block, the √g scale, and
@@ -61,6 +63,48 @@ thread_local! {
 /// inside L2 while amortizing the strided row reads across columns.
 fn encode_block_cols() -> usize {
     crate::util::env_usize("HIGGS_ENCODE_BLOCK", 32)
+}
+
+/// Gather the column block `j0..j0 + bcols` of the row-major `[k, n]`
+/// matrix `src` into the column-major buffer `buf` (`buf[b * k + kk] =
+/// src[kk * n + j0 + b]`).
+///
+/// The transpose runs over `T×T` stack tiles: each source row
+/// contributes one contiguous `T`-float read per tile and each
+/// destination column receives one contiguous `T`-float write, so both
+/// sides of the permutation are fixed-width runs the compiler can turn
+/// into vector loads/stores — the naive form streams one side and
+/// strides the other per element. Pure copy permutation: bit-identical
+/// to the naive gather for every shape (benched as
+/// `gather_block_1024`, equality-gated in `micro_hotpaths`).
+pub fn gather_block_colmajor(
+    src: &[f32],
+    k: usize,
+    n: usize,
+    j0: usize,
+    bcols: usize,
+    buf: &mut [f32],
+) {
+    const T: usize = 16;
+    debug_assert!(j0 + bcols <= n, "column block out of range");
+    debug_assert!(src.len() >= k * n && buf.len() >= bcols * k);
+    let mut tile = [[0.0f32; T]; T];
+    for kk0 in (0..k).step_by(T) {
+        let kt = (k - kk0).min(T);
+        for b0 in (0..bcols).step_by(T) {
+            let bt = (bcols - b0).min(T);
+            for (dk, trow) in tile.iter_mut().enumerate().take(kt) {
+                let at = (kk0 + dk) * n + j0 + b0;
+                trow[..bt].copy_from_slice(&src[at..at + bt]);
+            }
+            for db in 0..bt {
+                let at = (b0 + db) * k + kk0;
+                for (dk, d) in buf[at..at + kt].iter_mut().enumerate() {
+                    *d = tile[dk][db];
+                }
+            }
+        }
+    }
 }
 
 pub struct HiggsQuantizer {
@@ -264,14 +308,9 @@ impl HiggsQuantizer {
                     let (buf, svals) = (&mut scratch.0, &mut scratch.1);
                     buf.resize(bcols * k, 0.0);
                     svals.resize(bcols * ngroups, 0.0);
-                    // gather: stream the rows contiguously, scatter
-                    // into per-column runs
-                    for kk in 0..k {
-                        let row = &w.data[kk * n + j0..kk * n + j1];
-                        for (b, &val) in row.iter().enumerate() {
-                            buf[b * k + kk] = val;
-                        }
-                    }
+                    // gather: tiled micro-transpose — contiguous runs
+                    // on both the read and write side
+                    gather_block_colmajor(&w.data, k, n, j0, bcols, buf);
                     // group scales + normalization (f64 accumulation in
                     // the same element order as the reference)
                     for b in 0..bcols {

@@ -42,7 +42,7 @@ use super::trace::Clock;
 /// decode cost is irrelevant to virtual replay — only the DETERMINISTIC
 /// interleaving of arrivals with steps matters, so any positive
 /// constant works; 1 ms keeps trace `arrival_ms` values meaningful.
-const VIRTUAL_MS_PER_STEP: f64 = 1.0;
+pub(crate) const VIRTUAL_MS_PER_STEP: f64 = 1.0;
 
 #[derive(Clone, Debug)]
 pub struct Completion {

@@ -20,6 +20,22 @@ pub struct CompletionStat {
     pub prompt_len: usize,
 }
 
+/// One pipeline stage's time/traffic split (PERF.md §12). Busy/wait/
+/// idle come from the deterministic bubble model — per decode round a
+/// shard is busy for F chunks, waits `i` chunk-times for its first
+/// input, and idles `N−1−i` chunk-times at the tail — while frames/
+/// bytes are real counts off the shard's downstream transport.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ShardLane {
+    pub busy_ms: f64,
+    /// startup latency: waiting for the first micro-batch each round
+    pub wait_ms: f64,
+    /// drain latency: done while later shards still flush
+    pub idle_ms: f64,
+    pub frames_sent: u64,
+    pub bytes_sent: u64,
+}
+
 #[derive(Clone, Debug, Default)]
 pub struct ServeMetrics {
     pub completions: Vec<CompletionStat>,
@@ -42,6 +58,13 @@ pub struct ServeMetrics {
     /// serving run's summary shows failures even when a driver retries
     /// or drops them.
     pub internal_errors: u64,
+    /// pipeline fill/drain cost: per decode round, the makespan beyond
+    /// the ideal `F·τ` a perfectly-overlapped round would take
+    /// ((N−1)·τ per round; 0 for single-shard runs)
+    pub pipeline_bubble_ms: f64,
+    /// per-shard busy/wait/idle + traffic split; empty outside
+    /// pipeline runs
+    pub shard_lanes: Vec<ShardLane>,
 }
 
 impl ServeMetrics {
@@ -128,6 +151,13 @@ impl ServeMetrics {
         if self.internal_errors > 0 {
             s += &format!(", {} INTERNAL ERRORS", self.internal_errors);
         }
+        if !self.shard_lanes.is_empty() {
+            s += &format!(
+                ", {} shards, bubble {:.0} ms",
+                self.shard_lanes.len(),
+                self.pipeline_bubble_ms
+            );
+        }
         s
     }
 }
@@ -208,5 +238,17 @@ mod tests {
         assert!(m2.summary().contains("blocked 12 ms"));
         // Display delegates to summary
         assert_eq!(format!("{m2}"), m2.summary());
+    }
+
+    #[test]
+    fn shard_lanes_surface_in_summary() {
+        let mut m = ServeMetrics::default();
+        assert!(!m.summary().contains("shards"));
+        m.shard_lanes = vec![
+            ShardLane { busy_ms: 10.0, wait_ms: 0.0, idle_ms: 1.0, frames_sent: 4, bytes_sent: 99 },
+            ShardLane { busy_ms: 10.0, wait_ms: 1.0, idle_ms: 0.0, frames_sent: 4, bytes_sent: 99 },
+        ];
+        m.pipeline_bubble_ms = 2.0;
+        assert!(m.summary().contains("2 shards, bubble 2 ms"));
     }
 }

@@ -14,6 +14,15 @@
 //! Fixed-shape executables force a static max batch; the engine does
 //! continuous batching by slot reuse: finished slots are refilled from
 //! the queue via a merged prefill without disturbing live slots' KV.
+//!
+//! Pipeline-parallel execution ([`pipeline`], PERF.md §12) splits the
+//! layer stack across N shard workers behind the same router shape:
+//!
+//! ```text
+//!   clients ──mpsc──▶ ShardRouter ──▶ PipelineCoordinator
+//!                        │   frames: coord ─▶ shard 0 ─▶ … ─▶ shard N−1 ─▶ coord
+//!                        └◀─ completions    (ShardTransport ring, K micro-batches)
+//! ```
 
 pub mod backend;
 pub mod batcher;
@@ -22,15 +31,20 @@ pub mod engine;
 pub mod kvcache;
 pub mod kvstate;
 pub mod metrics;
+pub mod pipeline;
 pub mod planes;
 pub mod router;
 pub mod trace;
+pub mod transport;
 
 pub use backend::{Backend, QuantSource};
 pub use churn::{run_churn, ChurnConfig, ChurnReport, KvMode};
 pub use engine::GenerationEngine;
 pub use kvstate::{FullKv, KvLayout, SlotKv};
-pub use metrics::{CompletionStat, ServeMetrics};
-pub use planes::PlaneStore;
-pub use router::{Router, RouterConfig};
+pub use metrics::{CompletionStat, ServeMetrics, ShardLane};
+pub use pipeline::{
+    run_pipeline, PipelineConfig, PipelineCoordinator, PipelineReport, PipelineSource,
+};
+pub use router::{Router, RouterConfig, ShardRouter};
 pub use trace::{Clock, QueuedRequest, Request, TraceConfig};
+pub use transport::{ActivationFrame, LocalPipe, ShardTransport, SocketTransport};

@@ -1,0 +1,1099 @@
+//! Pipeline-parallel sharded execution (PERF.md §12): a
+//! [`PipelineCoordinator`] in front of N [`ShardWorker`] stages, each
+//! owning a contiguous layer range ([`ShardSpec::Range`] — the same
+//! split `serve-artifact --shard i/n` cold-starts), streaming hidden
+//! states shard→shard over a [`ShardTransport`] ring with K in-flight
+//! micro-batches: shard i computes micro-batch m while shard i+1
+//! computes m−1, the classic bubble-fill.
+//!
+//! Like `serve/churn.rs` this is an XLA-free harness for the system
+//! layer around the executables: the per-layer transform is a
+//! deterministic, KV-coupled attention-lite stand-in (write k/v at the
+//! row's position, read the running mean of v, mix with a per-layer
+//! digest). What it exercises for real:
+//!   * the frame wire format + integrity checks ([`ActivationFrame`]);
+//!   * per-shard cold start through [`ArtifactReader::load_shard`]
+//!     (each worker opens its OWN reader and reads only its slice —
+//!     cold-start bytes are measured per shard);
+//!   * slot-strided per-shard KV: each worker's [`SlotKv`] holds only
+//!     its layers, so per-shard KV memory is ~1/N of the total;
+//!   * admission/lease accounting ([`plan_admissions`],
+//!     [`KvBlockManager`]) and the queue/decode latency split.
+//!
+//! Determinism contract (property-tested in `tests/prop_pipeline.rs`):
+//! a request's tokens depend only on its own prompt and its own slot's
+//! KV, and every layer sees rows in the same order regardless of the
+//! partition — so output tokens and per-request completion steps are
+//! BIT-IDENTICAL across 1/2/4 shards and any micro-batch count. The
+//! single-process baseline is the same engine at `shards == 1`.
+//!
+//! Scheduling/time model: under a virtual clock, one decode round costs
+//! the same total work regardless of the partition — each (shard,
+//! micro-batch) chunk costs τ = [`VIRTUAL_MS_PER_STEP`]/(N·F), a round's
+//! makespan is (N+F−1)·τ, and the per-round bubble (makespan minus the
+//! ideal F·τ) is (N−1)·τ. At N=1, F=1 this degenerates to exactly one
+//! engine step. Per-shard busy/wait/idle lanes and
+//! `pipeline_bubble_ms` are accumulated from this model (deterministic
+//! under either clock); frame/byte counters are real transport counts.
+
+use super::engine::{plan_admissions, Completion, VIRTUAL_MS_PER_STEP};
+use super::kvcache::{KvBlockManager, KvConfig};
+use super::kvstate::{KvLayout, SlotKv};
+use super::metrics::{CompletionStat, ServeMetrics, ShardLane};
+use super::trace::{Clock, QueuedRequest, Request};
+use super::transport::{
+    ActivationFrame, LocalPipe, ShardTransport, SocketTransport, FRAME_DECODE, FRAME_PREFILL,
+    FRAME_SHUTDOWN,
+};
+use crate::quant::reader::{ArtifactReader, ShardSpec};
+use anyhow::{anyhow, bail, ensure, Result};
+use std::collections::VecDeque;
+use std::path::PathBuf;
+use std::thread::JoinHandle;
+
+/// Per-layer digest the attention-lite transform mixes in — the
+/// pipeline analogue of a layer's weights. `coef` has `dim` entries.
+#[derive(Clone, Debug)]
+pub struct LayerDigest {
+    pub coef: Vec<f32>,
+}
+
+/// Fold a dequantized dense plane into a `dim`-wide digest. Pure
+/// per-layer computation in index order, so it is identical no matter
+/// which shard loads the layer.
+pub fn digest_plane(data: &[f32], dim: usize) -> LayerDigest {
+    let mut acc = vec![0.0f32; dim.max(1)];
+    for (i, &v) in data.iter().enumerate() {
+        acc[i % dim.max(1)] += v;
+    }
+    let scale = if data.is_empty() { 1.0 } else { dim.max(1) as f32 / data.len() as f32 };
+    let coef = acc.iter().map(|&a| squash(a * scale)).collect();
+    LayerDigest { coef }
+}
+
+/// The full layer stack the ring executes, plus its hidden width.
+#[derive(Clone, Debug)]
+pub struct PipelineModel {
+    pub dim: usize,
+    pub layers: Vec<LayerDigest>,
+}
+
+impl PipelineModel {
+    /// Deterministic synthetic model (the churn-style XLA-free mode).
+    pub fn synthetic(layers: usize, dim: usize, seed: u64) -> PipelineModel {
+        let mut rng = crate::util::prng::Rng::from_stream(seed, "pipeline-model");
+        let layers = (0..layers)
+            .map(|_| LayerDigest {
+                coef: (0..dim).map(|_| rng.normal_f32() * 0.5).collect(),
+            })
+            .collect();
+        PipelineModel { dim, layers }
+    }
+}
+
+/// Where a shard worker gets its layer slice from.
+enum ShardModel {
+    /// Pre-sliced digests (synthetic mode).
+    Digests(Vec<LayerDigest>),
+    /// Cold-start the slice through a per-worker [`ArtifactReader`]:
+    /// open the file, read ONLY this shard's plane bytes, dequantize,
+    /// digest.
+    Artifact { path: PathBuf, index: usize, count: usize },
+}
+
+/// What a shard worker reports back at shutdown.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WorkerReport {
+    pub layers: usize,
+    /// bytes the worker's own `ArtifactReader` pulled off disk for its
+    /// slice (0 in synthetic mode)
+    pub cold_start_bytes: u64,
+    /// resident KV bytes for this shard's slice: `slot_kv_bytes × batch`
+    pub kv_bytes: u64,
+    /// host bytes admissions moved into this shard's `SlotKv`
+    pub kv_admit_bytes: u64,
+    pub frames_sent: u64,
+    pub bytes_sent: u64,
+}
+
+#[derive(Clone, Debug)]
+pub struct PipelineConfig {
+    pub shards: usize,
+    /// requested micro-batches in flight; the effective count is
+    /// `ceil(batch / ceil(batch / K))` (contiguous slot ranges)
+    pub micro_batches: usize,
+    pub batch: usize,
+    pub seq: usize,
+    pub heads: usize,
+    pub d_head: usize,
+    pub vocab: usize,
+    /// total layer count (synthetic mode; artifact mode uses the file's)
+    pub layers: usize,
+    pub seed: u64,
+    /// ring over [`SocketTransport`] instead of [`LocalPipe`]
+    pub socket: bool,
+    pub virtual_clock: bool,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig {
+            shards: 2,
+            micro_batches: 1,
+            batch: 4,
+            seq: 32,
+            heads: 2,
+            d_head: 4,
+            vocab: 97,
+            layers: 4,
+            seed: 0xC0FFEE,
+            socket: false,
+            virtual_clock: true,
+        }
+    }
+}
+
+impl PipelineConfig {
+    pub fn dim(&self) -> usize {
+        self.heads * self.d_head
+    }
+}
+
+/// The model source for a pipeline run.
+pub enum PipelineSource {
+    /// `cfg.layers` synthetic digests from `cfg.seed`.
+    Synthetic,
+    /// Split the artifact's layer stack across the shards; each worker
+    /// cold-starts its own slice through its own reader.
+    Artifact(PathBuf),
+}
+
+enum PipeSlot {
+    Idle,
+    Active {
+        req: Request,
+        pos: usize,
+        generated: Vec<i32>,
+        last_token: i32,
+        enqueued_ms: f64,
+        admitted_ms: f64,
+    },
+}
+
+/// Everything a finished run reports (the churn-report analogue).
+pub struct PipelineReport {
+    pub metrics: ServeMetrics,
+    /// completions sorted by request id — the bit-identity surface
+    pub completions: Vec<Completion>,
+    /// (request id, decode round) admission order
+    pub admission_steps: Vec<(u64, u64)>,
+    pub completion_steps: Vec<(u64, u64)>,
+    pub steps: u64,
+    pub shards: usize,
+    /// effective micro-batches in flight (F)
+    pub micro_batches: usize,
+    pub worker_reports: Vec<WorkerReport>,
+    pub coord_frames_sent: u64,
+    pub coord_bytes_sent: u64,
+    /// KV blocks still leased at the end (0 = no leak)
+    pub blocks_leaked: usize,
+}
+
+impl PipelineReport {
+    pub fn cold_start_bytes(&self) -> u64 {
+        self.worker_reports.iter().map(|w| w.cold_start_bytes).sum()
+    }
+
+    pub fn total_frames(&self) -> u64 {
+        self.coord_frames_sent + self.worker_reports.iter().map(|w| w.frames_sent).sum::<u64>()
+    }
+
+    pub fn total_wire_bytes(&self) -> u64 {
+        self.coord_bytes_sent + self.worker_reports.iter().map(|w| w.bytes_sent).sum::<u64>()
+    }
+}
+
+pub struct PipelineCoordinator {
+    cfg: PipelineConfig,
+    dim: usize,
+    /// effective micro-batch count F and the contiguous range width
+    mb_count: usize,
+    mb_size: usize,
+    down: Box<dyn ShardTransport + Send>,
+    up: Box<dyn ShardTransport + Send>,
+    workers: Vec<JoinHandle<Result<WorkerReport>>>,
+    slots: Vec<PipeSlot>,
+    queue: VecDeque<QueuedRequest>,
+    kv_manager: KvBlockManager,
+    pub metrics: ServeMetrics,
+    clock: Clock,
+    start_ms: f64,
+    blocked_since: Option<f64>,
+    step: u64,
+    completions: Vec<Completion>,
+    admission_steps: Vec<(u64, u64)>,
+    completion_steps: Vec<(u64, u64)>,
+}
+
+impl PipelineCoordinator {
+    /// Build the ring and spawn the shard workers (threads via
+    /// `util::pool::spawn_worker`; real processes would speak the same
+    /// socket protocol — multi-host is future work, PERF.md §12).
+    pub fn new(cfg: PipelineConfig, source: &PipelineSource) -> Result<PipelineCoordinator> {
+        ensure!(cfg.shards >= 1, "pipeline needs at least one shard");
+        ensure!(cfg.batch >= 1 && cfg.batch <= 64, "batch must be in 1..=64 (active bitmap)");
+        ensure!(cfg.micro_batches >= 1, "micro-batch count must be >= 1");
+        ensure!(cfg.dim() >= 1, "hidden width heads*d_head must be >= 1");
+        let dim = cfg.dim();
+        // resolve each shard's model slice
+        let (shard_models, total_layers) = match source {
+            PipelineSource::Synthetic => {
+                let model = PipelineModel::synthetic(cfg.layers, dim, cfg.seed);
+                let total = model.layers.len();
+                let slices = (0..cfg.shards)
+                    .map(|i| {
+                        let spec = ShardSpec::Range { index: i, count: cfg.shards };
+                        let digests = spec
+                            .layer_indices(total)
+                            .into_iter()
+                            .map(|l| model.layers[l].clone())
+                            .collect();
+                        ShardModel::Digests(digests)
+                    })
+                    .collect::<Vec<_>>();
+                (slices, total)
+            }
+            PipelineSource::Artifact(path) => {
+                let reader = ArtifactReader::open(path)?;
+                let total = reader.entries().len();
+                let slices = (0..cfg.shards)
+                    .map(|i| ShardModel::Artifact {
+                        path: path.clone(),
+                        index: i,
+                        count: cfg.shards,
+                    })
+                    .collect();
+                (slices, total)
+            }
+        };
+        ensure!(
+            total_layers >= cfg.shards,
+            "cannot split {total_layers} layers across {} shards",
+            cfg.shards
+        );
+        // contiguous micro-batch ranges: F = ceil(B / ceil(B / K))
+        let mb_size = cfg.batch.div_ceil(cfg.micro_batches.min(cfg.batch));
+        let mb_count = cfg.batch.div_ceil(mb_size);
+        // the ring: stage 0 is the coordinator, stages 1..=N the shard
+        // workers; link j carries stage j → stage j+1 (mod N+1)
+        let n = cfg.shards;
+        let mut send_ends: Vec<Option<Box<dyn ShardTransport + Send>>> = Vec::new();
+        let mut recv_ends: Vec<Option<Box<dyn ShardTransport + Send>>> = Vec::new();
+        for link in 0..=n {
+            let (s, r): (Box<dyn ShardTransport + Send>, Box<dyn ShardTransport + Send>) =
+                if cfg.socket {
+                    let (a, b) = socket_link(link)?;
+                    (Box::new(a), Box::new(b))
+                } else {
+                    let (a, b) = LocalPipe::pair();
+                    (Box::new(a), Box::new(b))
+                };
+            send_ends.push(Some(s));
+            recv_ends.push(Some(r));
+        }
+        let down = send_ends[0].take().ok_or_else(|| anyhow!("ring link 0 missing"))?;
+        let up = recv_ends[n].take().ok_or_else(|| anyhow!("ring link {n} missing"))?;
+        let mut workers = Vec::with_capacity(n);
+        for (i, model) in shard_models.into_iter().enumerate() {
+            let w_up = recv_ends[i].take().ok_or_else(|| anyhow!("ring link {i} missing"))?;
+            let w_down =
+                send_ends[i + 1].take().ok_or_else(|| anyhow!("ring link {} missing", i + 1))?;
+            let wcfg = WorkerConfig {
+                dim,
+                batch: cfg.batch,
+                seq: cfg.seq,
+                heads: cfg.heads,
+                d_head: cfg.d_head,
+                mb_size,
+            };
+            workers.push(crate::util::pool::spawn_worker(
+                &format!("shard-{i}"),
+                move || ShardWorker::run(model, wcfg, w_up, w_down),
+            ));
+        }
+        let clock = if cfg.virtual_clock { Clock::virtual_at(0.0) } else { Clock::wall() };
+        let start_ms = clock.now_ms();
+        let kv_manager = KvBlockManager::new(KvConfig::for_model(cfg.seq, cfg.batch, 16));
+        let slots = (0..cfg.batch).map(|_| PipeSlot::Idle).collect();
+        Ok(PipelineCoordinator {
+            dim,
+            mb_count,
+            mb_size,
+            down,
+            up,
+            workers,
+            slots,
+            queue: VecDeque::new(),
+            kv_manager,
+            metrics: ServeMetrics::default(),
+            clock,
+            start_ms,
+            blocked_since: None,
+            step: 0,
+            completions: Vec::new(),
+            admission_steps: Vec::new(),
+            completion_steps: Vec::new(),
+            cfg,
+        })
+    }
+
+    pub fn submit(&mut self, req: Request) {
+        self.queue.push_back(QueuedRequest::at(req, self.clock.now_ms()));
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn active_slots(&self) -> usize {
+        self.slots.iter().filter(|s| matches!(s, PipeSlot::Active { .. })).count()
+    }
+
+    pub fn now_ms(&self) -> f64 {
+        self.clock.now_ms()
+    }
+
+    /// Current decode round (the arrival index `run_arrivals` keys on).
+    pub fn step(&self) -> u64 {
+        self.step
+    }
+
+    /// Effective micro-batches in flight.
+    pub fn micro_batches(&self) -> usize {
+        self.mb_count
+    }
+
+    /// Push raw bytes down the coordinator → shard-0 link — the
+    /// corruption seam for tests (a flipped byte must surface as an
+    /// `Err` + `internal_errors`, never a panic).
+    pub fn inject_raw_downstream(&self, bytes: Vec<u8>) -> Result<()> {
+        self.down.send_raw(bytes)
+    }
+
+    /// One coordinator iteration: admit what fits (one prefill ring
+    /// traversal per admitted request), then run one decode round with
+    /// F micro-batch frames in flight. Errors are counted in
+    /// `internal_errors` and propagated, mirroring the engine.
+    pub fn tick(&mut self) -> Result<Vec<Completion>> {
+        let r = self.tick_impl();
+        if r.is_err() {
+            self.metrics.internal_errors += 1;
+        }
+        r
+    }
+
+    fn tick_impl(&mut self) -> Result<Vec<Completion>> {
+        self.admit()?;
+        if self.active_slots() == 0 {
+            return Ok(Vec::new());
+        }
+        self.decode_round()
+    }
+
+    fn admit(&mut self) -> Result<()> {
+        self.metrics.queue_peak = self.metrics.queue_peak.max(self.queue.len());
+        if self.queue.is_empty() {
+            self.note_unblocked();
+            return Ok(());
+        }
+        let now_ms = self.clock.now_ms();
+        let idle: Vec<usize> = (0..self.cfg.batch)
+            .filter(|&b| matches!(self.slots[b], PipeSlot::Idle))
+            .collect();
+        if idle.is_empty() {
+            self.blocked_since.get_or_insert(now_ms);
+            return Ok(());
+        }
+        let newly = plan_admissions(
+            &mut self.queue,
+            &mut self.kv_manager,
+            &idle,
+            self.cfg.seq,
+            &mut self.metrics,
+        )?;
+        if newly.is_empty() {
+            if self.queue.is_empty() {
+                self.note_unblocked();
+            } else {
+                self.blocked_since.get_or_insert(now_ms);
+            }
+            return Ok(());
+        }
+        self.note_unblocked();
+        self.metrics.prefill_calls += 1;
+        for (b, plen, qr) in newly {
+            let mut data = vec![0.0f32; plen * self.dim];
+            for (t, row) in data.chunks_exact_mut(self.dim).enumerate() {
+                let tok = qr.req.prompt.get(t).copied().unwrap_or(0);
+                embed_token(tok, row);
+            }
+            let frame = ActivationFrame {
+                kind: FRAME_PREFILL,
+                mb: b as u32,
+                step: self.step,
+                rows: plen as u32,
+                cols: self.dim as u32,
+                active: 0,
+                pos: (0..plen as u32).collect(),
+                data,
+            };
+            self.down.send(&frame)?;
+            let out = self.up.recv()?;
+            ensure!(
+                out.kind == FRAME_PREFILL && out.mb == b as u32 && out.rows == plen as u32,
+                "prefill echo mismatch: slot {b} plen {plen}, got kind {} mb {} rows {}",
+                out.kind,
+                out.mb,
+                out.rows
+            );
+            let last = out
+                .data
+                .get((plen - 1) * self.dim..plen * self.dim)
+                .ok_or_else(|| anyhow!("prefill echo shorter than its header"))?;
+            let first = sample_token(last, self.cfg.vocab);
+            self.admission_steps.push((qr.req.id, self.step));
+            self.slots[b] = PipeSlot::Active {
+                pos: plen,
+                generated: vec![first],
+                last_token: first,
+                enqueued_ms: qr.enqueued_ms,
+                admitted_ms: self.clock.now_ms(),
+                req: qr.req,
+            };
+        }
+        Ok(())
+    }
+
+    fn decode_round(&mut self) -> Result<Vec<Completion>> {
+        let dim = self.dim;
+        // fan the batch out as F micro-batch frames, all in flight
+        for m in 0..self.mb_count {
+            let base = m * self.mb_size;
+            let rows = self.mb_size.min(self.cfg.batch - base);
+            let mut active = 0u64;
+            let mut pos = vec![0u32; rows];
+            let mut data = vec![0.0f32; rows * dim];
+            for r in 0..rows {
+                if let PipeSlot::Active { pos: p, last_token, .. } = &self.slots[base + r] {
+                    active |= 1 << r;
+                    pos[r] = *p as u32;
+                    if let Some(row) = data.get_mut(r * dim..(r + 1) * dim) {
+                        embed_token(*last_token, row);
+                    }
+                }
+            }
+            let frame = ActivationFrame {
+                kind: FRAME_DECODE,
+                mb: m as u32,
+                step: self.step,
+                rows: rows as u32,
+                cols: dim as u32,
+                active,
+                pos,
+                data,
+            };
+            self.down.send(&frame)?;
+        }
+        // virtual-time pipeline model (see module docs): τ per chunk,
+        // (N+F−1)·τ makespan, (N−1)·τ bubble per round
+        let n = self.cfg.shards;
+        let f = self.mb_count;
+        let tau = VIRTUAL_MS_PER_STEP / (n * f) as f64;
+        self.clock.advance((n + f - 1) as f64 * tau);
+        if self.metrics.shard_lanes.len() != n {
+            self.metrics.shard_lanes = vec![ShardLane::default(); n];
+        }
+        for (i, lane) in self.metrics.shard_lanes.iter_mut().enumerate() {
+            lane.busy_ms += f as f64 * tau;
+            lane.wait_ms += i as f64 * tau;
+            lane.idle_ms += (n - 1 - i) as f64 * tau;
+        }
+        self.metrics.pipeline_bubble_ms += (n - 1) as f64 * tau;
+        self.metrics.decode_steps += 1;
+        self.step += 1;
+
+        // drain the F result frames (ring links are FIFO)
+        let mut done = Vec::new();
+        for m in 0..self.mb_count {
+            let out = self.up.recv()?;
+            ensure!(
+                out.kind == FRAME_DECODE && out.mb == m as u32,
+                "decode echo mismatch: wanted micro-batch {m}, got kind {} mb {}",
+                out.kind,
+                out.mb
+            );
+            let base = m as usize * self.mb_size;
+            let rows = out.rows as usize;
+            for r in 0..rows {
+                if out.active & (1 << r) == 0 {
+                    continue;
+                }
+                let row = out
+                    .data
+                    .get(r * dim..(r + 1) * dim)
+                    .ok_or_else(|| anyhow!("decode echo shorter than its header"))?;
+                let next = sample_token(row, self.cfg.vocab);
+                let b = base + r;
+                let slot = self
+                    .slots
+                    .get_mut(b)
+                    .ok_or_else(|| anyhow!("decode echo names slot {b} beyond batch"))?;
+                if let PipeSlot::Active {
+                    pos,
+                    generated,
+                    last_token,
+                    req,
+                    enqueued_ms,
+                    admitted_ms,
+                } = slot
+                {
+                    *pos += 1;
+                    generated.push(next);
+                    *last_token = next;
+                    self.kv_manager.append_token(req.id)?;
+                    let capacity_hit = *pos + 1 >= self.cfg.seq;
+                    if generated.len() >= req.max_new || capacity_hit {
+                        let now_ms = self.clock.now_ms();
+                        let latency_ms = now_ms - *enqueued_ms;
+                        let queue_ms = *admitted_ms - *enqueued_ms;
+                        let decode_ms = now_ms - *admitted_ms;
+                        let c = Completion {
+                            id: req.id,
+                            tokens: generated.clone(),
+                            latency_ms,
+                            queue_ms,
+                            decode_ms,
+                            prompt_len: req.prompt.len(),
+                        };
+                        self.metrics.completions.push(CompletionStat {
+                            latency_ms,
+                            queue_ms,
+                            decode_ms,
+                            generated: generated.len(),
+                            prompt_len: req.prompt.len(),
+                        });
+                        self.completion_steps.push((req.id, self.step));
+                        self.kv_manager.release(req.id)?;
+                        self.completions.push(c.clone());
+                        done.push(c);
+                        self.slots[b] = PipeSlot::Idle;
+                    }
+                }
+            }
+        }
+        Ok(done)
+    }
+
+    fn note_unblocked(&mut self) {
+        if let Some(t) = self.blocked_since.take() {
+            self.metrics.admission_blocked_ms += self.clock.now_ms() - t;
+        }
+    }
+
+    /// Drain the admission queue into the drop counter (safety valve
+    /// for requests that can never be admitted — callers decide when
+    /// the queue is hopeless; nothing is ever discarded silently).
+    pub fn drop_queued(&mut self) {
+        self.metrics.dropped += self.queue.len() as u64;
+        self.queue.clear();
+    }
+
+    /// Open-loop driver over step-indexed arrivals (the churn format:
+    /// `(arrival_step, request)`). Keying arrivals on the decode ROUND
+    /// index — not clock ms — is what keeps the arrival/round
+    /// interleaving, and therefore every token, identical across shard
+    /// and micro-batch counts.
+    pub fn run_arrivals(&mut self, arrivals: Vec<(u64, Request)>) -> Result<()> {
+        let mut arrivals: VecDeque<(u64, Request)> = arrivals.into();
+        loop {
+            while arrivals.front().map(|(t, _)| *t <= self.step).unwrap_or(false) {
+                if let Some((_, r)) = arrivals.pop_front() {
+                    self.submit(r);
+                }
+            }
+            if self.queue.is_empty() && self.active_slots() == 0 {
+                match arrivals.front() {
+                    Some((t, _)) => {
+                        // idle: jump the round counter (and the virtual
+                        // clock) to the next arrival
+                        let target = (*t).max(self.step + 1);
+                        self.clock.advance((target - self.step) as f64 * VIRTUAL_MS_PER_STEP);
+                        self.step = target;
+                        continue;
+                    }
+                    None => break,
+                }
+            }
+            self.tick()?;
+            if self.active_slots() == 0 && !self.queue.is_empty() {
+                if arrivals.is_empty() {
+                    // head request can never fit: surface, don't spin
+                    log::error!(
+                        "pipeline stuck: dropping {} unservable request(s)",
+                        self.queue.len()
+                    );
+                    self.drop_queued();
+                } else {
+                    // let time pass toward the next arrival
+                    self.clock.advance(VIRTUAL_MS_PER_STEP);
+                    self.step += 1;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Drain the ring (one shutdown frame traverses every stage), join
+    /// the workers, and fold their reports into the metrics. Worker
+    /// errors are logged + counted, not panicked on.
+    pub fn finish(mut self) -> Result<PipelineReport> {
+        if let Err(e) = self.down.send(&ActivationFrame::shutdown()) {
+            log::error!("pipeline shutdown send failed: {e}");
+            self.metrics.internal_errors += 1;
+        } else {
+            match self.up.recv() {
+                Ok(f) if f.kind == FRAME_SHUTDOWN => {}
+                Ok(f) => {
+                    log::error!("pipeline shutdown echoed frame kind {}", f.kind);
+                    self.metrics.internal_errors += 1;
+                }
+                Err(e) => {
+                    log::error!("pipeline shutdown echo failed: {e}");
+                    self.metrics.internal_errors += 1;
+                }
+            }
+        }
+        let mut worker_reports = Vec::with_capacity(self.workers.len());
+        for (i, h) in self.workers.drain(..).enumerate() {
+            match h.join() {
+                Ok(Ok(r)) => worker_reports.push(r),
+                Ok(Err(e)) => {
+                    log::error!("shard worker {i} failed: {e}");
+                    self.metrics.internal_errors += 1;
+                    worker_reports.push(WorkerReport::default());
+                }
+                Err(_) => {
+                    log::error!("shard worker {i} panicked");
+                    self.metrics.internal_errors += 1;
+                    worker_reports.push(WorkerReport::default());
+                }
+            }
+        }
+        // lanes carry the model-based split; frames/bytes are the real
+        // transport counters (shard i's lane counts its DOWNSTREAM link)
+        if self.metrics.shard_lanes.len() != worker_reports.len() {
+            self.metrics.shard_lanes = vec![ShardLane::default(); worker_reports.len()];
+        }
+        for (lane, w) in self.metrics.shard_lanes.iter_mut().zip(&worker_reports) {
+            lane.frames_sent = w.frames_sent;
+            lane.bytes_sent = w.bytes_sent;
+        }
+        self.metrics.wall_secs = (self.clock.now_ms() - self.start_ms) / 1e3;
+        let mut completions = std::mem::take(&mut self.completions);
+        completions.sort_by_key(|c| c.id);
+        Ok(PipelineReport {
+            metrics: self.metrics.clone(),
+            completions,
+            admission_steps: std::mem::take(&mut self.admission_steps),
+            completion_steps: std::mem::take(&mut self.completion_steps),
+            steps: self.step,
+            shards: self.cfg.shards,
+            micro_batches: self.mb_count,
+            worker_reports,
+            coord_frames_sent: self.down.frames_sent(),
+            coord_bytes_sent: self.down.bytes_sent(),
+            blocks_leaked: self.kv_manager.n_blocks() - self.kv_manager.free_blocks(),
+        })
+    }
+}
+
+/// Build one ring link over sockets: an anonymous `pair()` by default,
+/// or a filesystem rendezvous when `HIGGS_SHARD_SOCKET` names a path
+/// prefix (the seam a future multi-process launcher binds to).
+fn socket_link(link: usize) -> Result<(SocketTransport, SocketTransport)> {
+    let Some(path) = SocketTransport::rendezvous_path(link) else {
+        return SocketTransport::pair();
+    };
+    let lp = path.clone();
+    let listener =
+        crate::util::pool::spawn_worker("shard-listen", move || SocketTransport::listen(&lp));
+    let mut connected = None;
+    for _ in 0..100_000 {
+        match SocketTransport::connect(&path) {
+            Ok(c) => {
+                connected = Some(c);
+                break;
+            }
+            Err(_) => std::thread::yield_now(),
+        }
+    }
+    let connect_end =
+        connected.ok_or_else(|| anyhow!("rendezvous connect timed out on {}", path.display()))?;
+    let listen_end = listener
+        .join()
+        .map_err(|_| anyhow!("rendezvous listener panicked"))?
+        .map_err(|e| anyhow!("rendezvous listen on {}: {e}", path.display()))?;
+    // sender side holds the connect end; either end is duplex
+    Ok((connect_end, listen_end))
+}
+
+struct WorkerConfig {
+    dim: usize,
+    batch: usize,
+    seq: usize,
+    heads: usize,
+    d_head: usize,
+    mb_size: usize,
+}
+
+/// One pipeline stage: cold-start the layer slice, then serve frames
+/// until a shutdown traverses the ring. Holds a [`SlotKv`] covering
+/// ONLY its own layers (per-shard KV memory ~1/N of the model's).
+struct ShardWorker {
+    cfg: WorkerConfig,
+    layers: Vec<LayerDigest>,
+    layout: KvLayout,
+    kv: SlotKv,
+}
+
+impl ShardWorker {
+    fn run(
+        model: ShardModel,
+        cfg: WorkerConfig,
+        up: Box<dyn ShardTransport + Send>,
+        down: Box<dyn ShardTransport + Send>,
+    ) -> Result<WorkerReport> {
+        let (layers, cold_start_bytes) = match model {
+            ShardModel::Digests(d) => (d, 0u64),
+            ShardModel::Artifact { path, index, count } => {
+                let reader = ArtifactReader::open(&path)?;
+                let slice = reader.load_shard(&ShardSpec::Range { index, count })?;
+                let digests = slice
+                    .layers
+                    .iter()
+                    .map(|l| digest_plane(&l.dequantize().data, cfg.dim))
+                    .collect();
+                (digests, reader.bytes_read())
+            }
+        };
+        ensure!(!layers.is_empty(), "shard worker got an empty layer slice");
+        let layout = KvLayout {
+            layers: layers.len(),
+            heads: cfg.heads,
+            seq: cfg.seq,
+            d_head: cfg.d_head,
+        };
+        let kv = SlotKv::new(layout, cfg.batch)?;
+        let mut w = ShardWorker { cfg, layers, layout, kv };
+        loop {
+            let frame = up.recv()?;
+            match frame.kind {
+                FRAME_SHUTDOWN => {
+                    down.send(&frame)?;
+                    break;
+                }
+                FRAME_PREFILL => {
+                    let out = w.prefill(frame)?;
+                    down.send(&out)?;
+                }
+                FRAME_DECODE => {
+                    let out = w.decode(frame)?;
+                    down.send(&out)?;
+                }
+                k => bail!("shard worker got unknown frame kind {k}"),
+            }
+        }
+        Ok(WorkerReport {
+            layers: w.layers.len(),
+            cold_start_bytes,
+            kv_bytes: w.layout.slot_kv_bytes() * w.cfg.batch as u64,
+            kv_admit_bytes: w.kv.admit_bytes,
+            frames_sent: down.frames_sent(),
+            bytes_sent: down.bytes_sent(),
+        })
+    }
+
+    fn check_frame(&self, frame: &ActivationFrame) -> Result<()> {
+        ensure!(
+            frame.cols as usize == self.cfg.dim,
+            "frame width {} != hidden width {}",
+            frame.cols,
+            self.cfg.dim
+        );
+        ensure!(
+            frame.pos.len() == frame.rows as usize
+                && frame.data.len() == frame.rows as usize * self.cfg.dim,
+            "frame body inconsistent with its header"
+        );
+        for &p in &frame.pos {
+            ensure!((p as usize) < self.cfg.seq, "KV position {p} beyond seq {}", self.cfg.seq);
+        }
+        Ok(())
+    }
+
+    /// Admit one slot: run the prompt rows through this shard's layers
+    /// (row t sees rows 0..t's k/v, causal order), then install the
+    /// slot's KV via the strided admission path.
+    fn prefill(&mut self, mut frame: ActivationFrame) -> Result<ActivationFrame> {
+        self.check_frame(&frame)?;
+        let slot = frame.mb as usize;
+        ensure!(slot < self.cfg.batch, "prefill slot {slot} beyond batch {}", self.cfg.batch);
+        let dim = self.cfg.dim;
+        let full = self.layout.full_elems(self.cfg.batch);
+        let (mut kc, mut vc) = (vec![0.0f32; full], vec![0.0f32; full]);
+        for t in 0..frame.rows as usize {
+            let row = frame
+                .data
+                .get_mut(t * dim..(t + 1) * dim)
+                .ok_or_else(|| anyhow!("prefill frame shorter than its header"))?;
+            for (l, digest) in self.layers.iter().enumerate() {
+                transform_row(row, t, digest, l, slot, &self.layout, self.cfg.batch, &mut kc, &mut vc);
+            }
+        }
+        self.kv.admit_from_full(&[slot], &kc, &vc)?;
+        Ok(frame)
+    }
+
+    /// One decode micro-batch: read-modify-write this shard's KV for
+    /// the frame's live rows.
+    fn decode(&mut self, mut frame: ActivationFrame) -> Result<ActivationFrame> {
+        self.check_frame(&frame)?;
+        let dim = self.cfg.dim;
+        let base = frame.mb as usize * self.cfg.mb_size;
+        ensure!(
+            base + frame.rows as usize <= self.cfg.batch,
+            "micro-batch {} rows {} beyond batch {}",
+            frame.mb,
+            frame.rows,
+            self.cfg.batch
+        );
+        let (mut kc, mut vc) = self.kv.to_full()?;
+        for r in 0..frame.rows as usize {
+            if frame.active & (1 << r) == 0 {
+                continue;
+            }
+            let pos = frame.pos.get(r).copied().unwrap_or(0) as usize;
+            let row = frame
+                .data
+                .get_mut(r * dim..(r + 1) * dim)
+                .ok_or_else(|| anyhow!("decode frame shorter than its header"))?;
+            for (l, digest) in self.layers.iter().enumerate() {
+                transform_row(row, pos, digest, l, base + r, &self.layout, self.cfg.batch, &mut kc, &mut vc);
+            }
+        }
+        self.kv.swap_from_full(&kc, &vc)?;
+        Ok(frame)
+    }
+}
+
+/// The attention-lite per-layer transform: write k/v at `pos` from the
+/// hidden row, read the running mean of v over positions 0..=pos, mix
+/// with the layer digest, soft-clamp. Every operation is f32 in a fixed
+/// order — the partition only changes WHO runs a layer, never the
+/// arithmetic, which is the bit-identity invariant the property tests
+/// pin down.
+#[allow(clippy::too_many_arguments)]
+fn transform_row(
+    row: &mut [f32],
+    pos: usize,
+    digest: &LayerDigest,
+    layer: usize,
+    slot: usize,
+    layout: &KvLayout,
+    batch: usize,
+    kc: &mut [f32],
+    vc: &mut [f32],
+) {
+    let (seq, dh) = (layout.seq, layout.d_head);
+    let lse = layout.layer_slot_elems();
+    let base = (layer * batch + slot) * lse;
+    for (j, h) in row.iter().enumerate() {
+        let c = digest.coef.get(j).copied().unwrap_or(0.0);
+        let off = base + (j / dh) * seq * dh + pos * dh + (j % dh);
+        if let (Some(k), Some(v)) = (kc.get_mut(off), vc.get_mut(off)) {
+            *k = h * 0.5 + c;
+            *v = h - 0.25 * c;
+        }
+    }
+    for (j, h) in row.iter_mut().enumerate() {
+        let c = digest.coef.get(j).copied().unwrap_or(0.0);
+        let col = base + (j / dh) * seq * dh + (j % dh);
+        let mut sum = 0.0f32;
+        for t in 0..=pos {
+            sum += vc.get(col + t * dh).copied().unwrap_or(0.0);
+        }
+        let mean = sum / (pos + 1) as f32;
+        let mixed = *h + 0.5 * mean + 0.125 * c;
+        *h = squash(mixed);
+    }
+}
+
+/// Soft clamp keeping hidden magnitudes bounded across deep stacks
+/// (deterministic; monotone; sign-preserving).
+fn squash(x: f32) -> f32 {
+    x / (1.0 + 0.0625 * x.abs())
+}
+
+/// Greedy "sampling": hash the final hidden row's f32 bit patterns into
+/// the vocabulary. Bit-stable by construction.
+fn sample_token(row: &[f32], vocab: usize) -> i32 {
+    let h = crate::util::fnv1a(row.iter().flat_map(|x| x.to_le_bytes()));
+    (h % vocab.max(1) as u64) as i32
+}
+
+/// Deterministic token embedding (FNV-mixed), the coordinator-side
+/// stand-in for an embedding table.
+fn embed_token(tok: i32, out: &mut [f32]) {
+    for (j, o) in out.iter_mut().enumerate() {
+        let h = crate::util::fnv1a(
+            tok.to_le_bytes().into_iter().chain((j as u32).to_le_bytes()),
+        );
+        *o = ((h >> 16) % 4096) as f32 / 2048.0 - 1.0;
+    }
+}
+
+/// Run a whole arrival trace through a fresh pipeline and report — the
+/// churn-harness analogue (`run_churn`) for pipeline execution.
+pub fn run_pipeline(
+    cfg: &PipelineConfig,
+    source: &PipelineSource,
+    arrivals: Vec<(u64, Request)>,
+) -> Result<PipelineReport> {
+    let mut pc = PipelineCoordinator::new(cfg.clone(), source)?;
+    pc.run_arrivals(arrivals)?;
+    pc.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::churn::{churn_arrivals, ChurnConfig};
+
+    fn small_cfg(shards: usize, mb: usize) -> PipelineConfig {
+        PipelineConfig {
+            shards,
+            micro_batches: mb,
+            batch: 3,
+            seq: 24,
+            heads: 2,
+            d_head: 3,
+            vocab: 61,
+            layers: 4,
+            seed: 7,
+            ..Default::default()
+        }
+    }
+
+    fn arrivals(n: usize) -> Vec<(u64, Request)> {
+        churn_arrivals(&ChurnConfig {
+            n_requests: n,
+            prompt_len: (4, 6),
+            long_frac: 0.3,
+            long_prompt_len: (10, 12),
+            max_new: (4, 6),
+            mean_gap_steps: 1.0,
+            seed: 0xABCD,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn single_shard_completes_everything() {
+        let rep = run_pipeline(&small_cfg(1, 1), &PipelineSource::Synthetic, arrivals(8)).unwrap();
+        assert_eq!(rep.completions.len(), 8, "{}", rep.metrics.summary());
+        assert_eq!(rep.blocks_leaked, 0);
+        assert_eq!(rep.metrics.internal_errors, 0);
+        assert!(rep.total_frames() > 0);
+        // N=1, F=1 degenerates to the engine's step cost: bubble is 0
+        assert_eq!(rep.metrics.pipeline_bubble_ms, 0.0);
+        assert!((rep.metrics.shard_lanes[0].busy_ms - rep.steps as f64).abs() < 1e-6);
+    }
+
+    #[test]
+    fn shard_counts_agree_bitwise() {
+        let base = run_pipeline(&small_cfg(1, 1), &PipelineSource::Synthetic, arrivals(8)).unwrap();
+        for (shards, mb) in [(2usize, 1usize), (2, 3), (4, 2)] {
+            let rep =
+                run_pipeline(&small_cfg(shards, mb), &PipelineSource::Synthetic, arrivals(8))
+                    .unwrap();
+            assert_eq!(rep.completions.len(), base.completions.len());
+            for (a, b) in base.completions.iter().zip(&rep.completions) {
+                assert_eq!(a.id, b.id);
+                assert_eq!(a.tokens, b.tokens, "tokens diverged at {shards} shards mb {mb}");
+            }
+            assert_eq!(rep.admission_steps, base.admission_steps);
+            assert_eq!(rep.completion_steps, base.completion_steps);
+        }
+    }
+
+    #[test]
+    fn micro_batch_partition_math() {
+        // B=3, K=2 → mb_size 2 → F=2; K=16 → mb_size 1 → F=3
+        let pc = PipelineCoordinator::new(small_cfg(1, 2), &PipelineSource::Synthetic).unwrap();
+        assert_eq!(pc.micro_batches(), 2);
+        let _ = pc.finish().unwrap();
+        let pc = PipelineCoordinator::new(small_cfg(1, 16), &PipelineSource::Synthetic).unwrap();
+        assert_eq!(pc.micro_batches(), 3);
+        let _ = pc.finish().unwrap();
+    }
+
+    #[test]
+    fn corrupt_frame_counts_internal_error() {
+        let mut pc =
+            PipelineCoordinator::new(small_cfg(2, 1), &PipelineSource::Synthetic).unwrap();
+        pc.submit(Request { id: 1, prompt: vec![3, 1, 4], max_new: 4, arrival_ms: 0 });
+        // a corrupt frame reaches shard 0 before the real prefill: the
+        // worker errors out, the coordinator's ring traversal fails
+        pc.inject_raw_downstream(vec![0xde, 0xad, 0xbe, 0xef, 9, 9]).unwrap();
+        assert!(pc.tick().is_err());
+        assert!(pc.metrics.internal_errors >= 1);
+        let rep = pc.finish().unwrap();
+        assert!(rep.metrics.internal_errors >= 1);
+    }
+
+    #[test]
+    fn shard_router_submission_and_drain() {
+        let router =
+            crate::serve::router::ShardRouter::spawn(small_cfg(2, 2), PipelineSource::Synthetic);
+        for (i, (_, mut r)) in arrivals(5).into_iter().enumerate() {
+            r.id = i as u64;
+            router.submit(r);
+        }
+        let rep = router.finish().unwrap();
+        assert_eq!(rep.completions.len(), 5, "{}", rep.metrics.summary());
+        assert_eq!(rep.blocks_leaked, 0);
+    }
+
+    #[test]
+    fn socket_ring_matches_local_ring() {
+        let local = run_pipeline(&small_cfg(2, 2), &PipelineSource::Synthetic, arrivals(6)).unwrap();
+        let cfg = PipelineConfig { socket: true, ..small_cfg(2, 2) };
+        let sock = run_pipeline(&cfg, &PipelineSource::Synthetic, arrivals(6)).unwrap();
+        assert_eq!(local.completions.len(), sock.completions.len());
+        for (a, b) in local.completions.iter().zip(&sock.completions) {
+            assert_eq!((a.id, &a.tokens), (b.id, &b.tokens));
+        }
+        assert_eq!(local.total_wire_bytes(), sock.total_wire_bytes());
+    }
+
+    #[test]
+    fn per_shard_kv_shrinks_with_shard_count() {
+        let one = run_pipeline(&small_cfg(1, 1), &PipelineSource::Synthetic, arrivals(3)).unwrap();
+        let four = run_pipeline(&small_cfg(4, 1), &PipelineSource::Synthetic, arrivals(3)).unwrap();
+        let kv1 = one.worker_reports[0].kv_bytes;
+        let kv4: u64 = four.worker_reports.iter().map(|w| w.kv_bytes).sum();
+        assert_eq!(kv1, kv4, "total KV bytes conserved across the split");
+        let max4 = four.worker_reports.iter().map(|w| w.kv_bytes).max().unwrap();
+        assert_eq!(max4, kv1 / 4, "per-shard KV is 1/N of the model's");
+    }
+}

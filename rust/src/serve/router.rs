@@ -1,12 +1,20 @@
-//! Router: the threaded serving front end. Clients submit requests via
-//! a channel; a coordinator thread owns the XLA engine (PJRT handles
-//! are not Send) and runs the batcher + generation loop; completions
-//! stream back on a channel.
+//! Router: the threaded serving front ends. Clients submit requests via
+//! a channel; a coordinator thread owns the engine and runs the
+//! admission + generation loop; completions stream back on a channel.
+//! Two roles share the shape:
+//!
+//! * [`Router`] — single-process: the coordinator owns the XLA engine
+//!   (PJRT handles are not Send) and runs the batcher + generation
+//!   loop.
+//! * [`ShardRouter`] — pipeline-parallel: the coordinator owns a
+//!   [`PipelineCoordinator`] and the N shard workers behind it,
+//!   streaming activation frames around the transport ring.
 
 use super::backend::Backend;
 use super::batcher::{Batcher, BatcherConfig};
 use super::engine::{Completion, GenerationEngine};
 use super::metrics::ServeMetrics;
+use super::pipeline::{PipelineConfig, PipelineCoordinator, PipelineReport, PipelineSource};
 use super::trace::{QueuedRequest, Request};
 use crate::config::ModelConfig;
 use crate::model::Weights;
@@ -59,7 +67,7 @@ impl Router {
     ) -> Router {
         let (tx, rx) = mpsc::channel::<RouterMsg>();
         let (ctx, crx) = mpsc::channel::<Completion>();
-        let handle = std::thread::spawn(move || -> Result<ServeMetrics> {
+        let handle = crate::util::pool::spawn_worker("router", move || -> Result<ServeMetrics> {
             let engine = Engine::new()?;
             let mut ge = GenerationEngine::new(
                 &engine,
@@ -167,6 +175,79 @@ impl Router {
     pub fn finish(self) -> Result<ServeMetrics> {
         let _ = self.tx.send(RouterMsg::Shutdown);
         self.handle.join().map_err(|_| anyhow::anyhow!("router thread panicked"))?
+    }
+}
+
+/// The router's shard-coordinator role: a long-lived thread owns the
+/// [`PipelineCoordinator`] (and through it the whole transport ring and
+/// its shard workers); clients get the same non-blocking submit handle
+/// and completion stream as [`Router`], and `finish` drains the ring
+/// and returns the full [`PipelineReport`].
+pub struct ShardRouter {
+    pub tx: mpsc::Sender<RouterMsg>,
+    pub completions: mpsc::Receiver<Completion>,
+    handle: std::thread::JoinHandle<Result<PipelineReport>>,
+}
+
+impl ShardRouter {
+    pub fn spawn(cfg: PipelineConfig, source: PipelineSource) -> ShardRouter {
+        let (tx, rx) = mpsc::channel::<RouterMsg>();
+        let (ctx, crx) = mpsc::channel::<Completion>();
+        let handle = crate::util::pool::spawn_worker(
+            "shard-coordinator",
+            move || -> Result<PipelineReport> {
+                let mut pc = PipelineCoordinator::new(cfg, &source)?;
+                let mut shutdown = false;
+                loop {
+                    loop {
+                        match rx.try_recv() {
+                            Ok(RouterMsg::Submit(r)) => pc.submit(r),
+                            Ok(RouterMsg::Shutdown) => shutdown = true,
+                            Err(mpsc::TryRecvError::Empty) => break,
+                            Err(mpsc::TryRecvError::Disconnected) => {
+                                shutdown = true;
+                                break;
+                            }
+                        }
+                    }
+                    for c in pc.tick()? {
+                        let _ = ctx.send(c);
+                    }
+                    if pc.active_slots() == 0 && pc.queue_len() == 0 {
+                        if shutdown {
+                            break;
+                        }
+                        // idle: block on the inbox instead of spinning
+                        match rx.recv() {
+                            Ok(RouterMsg::Submit(r)) => pc.submit(r),
+                            Ok(RouterMsg::Shutdown) | Err(_) => break,
+                        }
+                    } else if pc.active_slots() == 0 && pc.queue_len() > 0 {
+                        // nothing active yet nothing admissible: the
+                        // queue head cannot fit even a fully-idle
+                        // engine, so it never will — drain it into the
+                        // drop counter instead of spinning forever
+                        log::error!(
+                            "shard router dropping {} unservable request(s)",
+                            pc.queue_len()
+                        );
+                        pc.drop_queued();
+                    }
+                }
+                pc.finish()
+            },
+        );
+        ShardRouter { tx, completions: crx, handle }
+    }
+
+    pub fn submit(&self, req: Request) {
+        let _ = self.tx.send(RouterMsg::Submit(req));
+    }
+
+    /// Signal shutdown, join the coordinator, return the run's report.
+    pub fn finish(self) -> Result<PipelineReport> {
+        let _ = self.tx.send(RouterMsg::Shutdown);
+        self.handle.join().map_err(|_| anyhow::anyhow!("shard coordinator thread panicked"))?
     }
 }
 

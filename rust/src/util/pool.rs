@@ -23,6 +23,22 @@ pub fn num_threads() -> usize {
     crate::util::env_usize("HIGGS_THREADS", auto)
 }
 
+/// Spawn a long-lived named worker thread. This is the ONE sanctioned
+/// spawn site outside the scoped pool (the `thread-spawn` audit rule
+/// confines raw `thread::spawn` to this module), so every long-lived
+/// thread — the router coordinator, pipeline shard workers, socket
+/// listeners — is named `higgs-*` and greppable in thread dumps.
+pub fn spawn_worker<T: Send + 'static>(
+    name: &str,
+    f: impl FnOnce() -> T + Send + 'static,
+) -> std::thread::JoinHandle<T> {
+    let full = format!("higgs-{name}");
+    match std::thread::Builder::new().name(full.clone()).spawn(f) {
+        Ok(h) => h,
+        Err(e) => panic!("spawning worker thread `{full}`: {e}"),
+    }
+}
+
 /// Run `f(i)` for every i in 0..n across worker threads. Indices are
 /// handed out dynamically, one at a time, so long items don't stall a
 /// whole static chunk. `f` must be Sync; results are written via
@@ -129,6 +145,27 @@ impl<'a, T> SharedSlice<'a, T> {
         self.audit_mark(i);
         debug_assert!(i < self.len);
         *self.ptr.add(i) = v;
+    }
+
+    /// Write a contiguous run starting at `start` — the bulk form of
+    /// [`SharedSlice::write`] for row-granular scatters (one memcpy the
+    /// autovectorizer can see, instead of a strided per-element loop).
+    ///
+    /// # Safety
+    /// `start + src.len() <= len`, and no other thread writes any index
+    /// in `start..start + src.len()` during the same parallel region.
+    /// Under the `shared_slice_audit` feature both clauses are checked
+    /// per index (panic before the raw copy).
+    pub unsafe fn write_slice(&self, start: usize, src: &[T])
+    where
+        T: Copy,
+    {
+        #[cfg(feature = "shared_slice_audit")]
+        for i in start..start + src.len() {
+            self.audit_mark(i);
+        }
+        debug_assert!(start + src.len() <= self.len);
+        std::ptr::copy_nonoverlapping(src.as_ptr(), self.ptr.add(start), src.len());
     }
 
     #[cfg(feature = "shared_slice_audit")]

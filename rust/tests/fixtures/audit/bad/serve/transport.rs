@@ -1,0 +1,13 @@
+//! Fixture: wall-clock leak in the pipeline activation transport.
+
+pub fn stamp() -> std::time::Instant {
+    std::time::Instant::now()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn gated_clock_is_fine() {
+        let _ = std::time::Instant::now();
+    }
+}
