@@ -4,8 +4,9 @@
 //! multithreaded encode), fused decode (blocked parallel dequantize vs
 //! serial reference, decode-from-packed, streaming error measurement),
 //! bit-packing, DP allocation, qmm kernel executions at serving shapes,
-//! the tiled block gather, and pipeline-parallel serving throughput at
-//! 1/2/4 shards plus per-frame transport overhead.
+//! the tiled block gather, pipeline-parallel serving throughput at
+//! 1/2/4 shards plus per-frame transport overhead, and the network
+//! daemon (request wire codec roundtrip + loopback TCP tokens/s).
 //!
 //! Emits `BENCH_hotpaths.json` (override with `HIGGS_BENCH_JSON`) with
 //! (op, ns/iter, throughput) rows so the perf trajectory is tracked
@@ -630,6 +631,58 @@ fn main() {
         r.bench_items("pipeline_frame_roundtrip", 1.0, || {
             ActivationFrame::from_bytes(&frame.to_bytes()).unwrap()
         });
+    }
+
+    // daemon wire protocol: per-request frame encode/parse cost (the
+    // Submit message a TCP client pays on every request), then
+    // end-to-end loopback serving throughput — N requests over one
+    // connection through accept loop, core, coordinator, and back
+    {
+        use higgs::serve::{
+            request_many, ClientOutcome, ClientRequest, Daemon, DaemonConfig, PipelineConfig,
+            PipelineSource, WireMsg,
+        };
+        let submit = WireMsg::Submit {
+            id: 7,
+            prompt: (0..16).map(|i| i as i32).collect(),
+            max_new: 8,
+            deadline_ms: 250,
+        };
+        let rt = WireMsg::from_bytes(&submit.to_bytes()).unwrap();
+        assert_eq!(rt, submit, "wire roundtrip diverged");
+        r.bench_items("wire_frame_roundtrip", 1.0, || {
+            WireMsg::from_bytes(&submit.to_bytes()).unwrap()
+        });
+
+        let cfg = DaemonConfig {
+            pipeline: PipelineConfig { shards: 2, batch: 4, layers: 6, ..Default::default() },
+            ..Default::default()
+        };
+        let reqs: Vec<ClientRequest> = (1..=8u64)
+            .map(|id| ClientRequest {
+                id,
+                prompt: vec![id as i32, 3, 5],
+                max_new: 4,
+                deadline_ms: 0,
+            })
+            .collect();
+        let daemon = Daemon::start(cfg, PipelineSource::Synthetic).unwrap();
+        let warm = request_many(daemon.addr(), &reqs).unwrap();
+        let toks: f64 = warm
+            .iter()
+            .map(|(_, o)| match o {
+                ClientOutcome::Done { tokens, .. } => tokens.len() as f64,
+                other => panic!("bench warmup request failed: {other:?}"),
+            })
+            .sum();
+        assert!(toks > 0.0, "daemon warmup generated no tokens");
+        let addr = daemon.addr().to_string();
+        let m = r.bench_items("daemon_loopback_tokens_s", toks, || {
+            request_many(&addr, &reqs).unwrap()
+        });
+        eprintln!("  -> daemon loopback: {:.1} tok/s over TCP", m.throughput(toks));
+        let rep = daemon.finish().unwrap();
+        assert_eq!(rep.wire_errors, 0, "bench run must be wire-clean");
     }
 
     // machine-readable perf record (tracked across PRs)

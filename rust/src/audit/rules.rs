@@ -36,12 +36,30 @@ const PANIC_TOKENS: [&str; 6] = [
 ];
 /// Fn-name prefixes that mark a parse path (unchecked `[...]` banned).
 const PARSE_FN_PREFIXES: [&str; 4] = ["parse", "from_bytes", "load", "open"];
+/// Files whose parse-path fns handle untrusted bytes: the artifact
+/// readers plus the daemon's network-facing wire/span/lifecycle code
+/// (client frames are attacker-controlled; a bad index is a crash).
+const PARSE_SCOPE_FILES: [&str; 5] = [
+    "quant/artifact.rs",
+    "quant/reader.rs",
+    "serve/daemon.rs",
+    "serve/spans.rs",
+    "serve/wire.rs",
+];
 /// Modules that must be deterministic: replayable churn traces,
-/// property-check shrinking, and the pipeline activation transport
-/// (the LocalPipe path must stay virtual-clock-compatible) all break
-/// if wall time leaks in.
-const WALL_CLOCK_FILES: [&str; 3] =
-    ["serve/churn.rs", "serve/transport.rs", "util/propcheck.rs"];
+/// property-check shrinking, the pipeline activation transport
+/// (the LocalPipe path must stay virtual-clock-compatible), and the
+/// daemon's request lifecycle (deadlines, spans, and the wire codec
+/// run on the coordinator's virtual clock so drain/timeout tests are
+/// sleep-free and replayable) all break if wall time leaks in.
+const WALL_CLOCK_FILES: [&str; 6] = [
+    "serve/churn.rs",
+    "serve/daemon.rs",
+    "serve/spans.rs",
+    "serve/transport.rs",
+    "serve/wire.rs",
+    "util/propcheck.rs",
+];
 const WALL_CLOCK_TOKENS: [&str; 3] = ["Instant::now", "SystemTime", "thread::sleep"];
 
 /// Run every rule against one file. `knobs` is the set of HIGGS_* names
@@ -197,11 +215,11 @@ fn rule_panic_path(rel: &str, fs: &FileScan, out: &mut Vec<Finding>) {
     }
 }
 
-/// parse-index: inside parse-path fns of the artifact files, `[` right
-/// after an expression is an unchecked index over untrusted bytes —
-/// use `get`/`split_at`/`chunks_exact` instead.
+/// parse-index: inside parse-path fns of the artifact and daemon wire
+/// files, `[` right after an expression is an unchecked index over
+/// untrusted bytes — use `get`/`split_at`/`chunks_exact` instead.
 fn rule_parse_index(rel: &str, fs: &FileScan, out: &mut Vec<Finding>) {
-    if !PANIC_SCOPE_FILES.contains(&rel) {
+    if !PARSE_SCOPE_FILES.contains(&rel) {
         return;
     }
     for (i, l) in fs.lines.iter().enumerate() {
@@ -413,6 +431,39 @@ pub fn helper(buf: &[u8]) -> u8 {
         assert_eq!(f[0].rule, "parse-index");
         assert_eq!(f[0].line, 2);
         assert!(f[0].message.contains("from_bytes"));
+    }
+
+    #[test]
+    fn parse_index_covers_daemon_wire_files() {
+        let src = "\
+pub fn from_bytes(buf: &[u8]) -> u8 {
+    buf[0]
+}
+";
+        for rel in ["serve/wire.rs", "serve/daemon.rs", "serve/spans.rs"] {
+            let f = run(rel, src, None);
+            assert_eq!(f.iter().filter(|x| x.rule == "parse-index").count(), 1, "{rel}");
+        }
+        // serve files outside the parse scope keep only the panic rule
+        assert!(run("serve/engine.rs", src, None)
+            .iter()
+            .all(|x| x.rule != "parse-index"));
+    }
+
+    #[test]
+    fn wall_clock_covers_daemon_files() {
+        let src = "\
+pub fn tick() {
+    let _t = std::time::Instant::now();
+}
+";
+        for rel in ["serve/daemon.rs", "serve/spans.rs", "serve/wire.rs"] {
+            let f = run(rel, src, None);
+            assert_eq!(f.iter().filter(|x| x.rule == "wall-clock").count(), 1, "{rel}");
+        }
+        // the blocking-accept seam lives in router.rs, which may read
+        // wall time; scope must not widen to the whole serve/ tree
+        assert!(run("serve/router.rs", src, None).is_empty());
     }
 
     #[test]

@@ -35,6 +35,21 @@
 //!                   shard→shard with K micro-batches in flight; tokens
 //!                   are bit-identical to the single-process path —
 //!                   PERF.md section 12)
+//! higgs serve-daemon [--artifact PATH] [--listen ADDR] [--shards N]
+//!                  [--max-queue 64] [--deadline-ms 0] [--trace-out PATH]
+//!                  [--batch 4] [--micro-batches K] [--tcp]
+//!                  (long-lived TCP front-end speaking the length-prefixed,
+//!                   checksummed `serve::wire` protocol: streamed tokens,
+//!                   typed Busy/Error replies, bounded admission, queue
+//!                   deadlines, per-request lifecycle spans, graceful
+//!                   drain; --listen defaults from HIGGS_DAEMON_ADDR,
+//!                   --deadline-ms from HIGGS_REQ_DEADLINE_MS — PERF.md §13)
+//! higgs request    --addr ADDR [--prompt 1,2,3] [--max-new 16] [--count N]
+//!                  [--deadline-ms 0] [--drain]
+//!                  (client for serve-daemon: submits N requests over one
+//!                   connection, prints the streamed tokens and the
+//!                   queue/decode latency split; --drain asks the daemon
+//!                   to finish in-flight work and exit instead)
 //! higgs shard-manifest --artifact PATH --shards N [--rr]
 //! higgs hessian    --config tiny [--per-layer 8]
 //! higgs experiment fig1|fig2|fig3|fig4|table1|table2|table3|table4|table6 [--config base]
@@ -113,6 +128,8 @@ fn run(args: &Args) -> Result<()> {
         "serve-bench" => cmd_serve_bench(args),
         "serve-artifact" => cmd_serve_artifact(args),
         "serve-pipeline" => cmd_serve_pipeline(args),
+        "serve-daemon" => cmd_serve_daemon(args),
+        "request" => cmd_request(args),
         "shard-manifest" => cmd_shard_manifest(args),
         "generate" => cmd_generate(args),
         "hessian" => cmd_hessian(args),
@@ -126,14 +143,17 @@ fn run(args: &Args) -> Result<()> {
 }
 
 const HELP: &str = "higgs — LLM quantization via the Linearity Theorem (see README.md)
-commands: train, eval, quantize, calibrate, allocate, alloc-quantize, serve-bench, serve-artifact, serve-pipeline, shard-manifest, generate, hessian, experiment
+commands: train, eval, quantize, calibrate, allocate, alloc-quantize, serve-bench, serve-artifact, serve-pipeline, serve-daemon, request, shard-manifest, generate, hessian, experiment
 serve-bench --churn replays an open-loop arrival stream (Poisson-ish gaps,
 mixed prompt lengths) through the continuous batcher; add --drain for the
 admit-only-when-idle baseline and --virtual-clock for a deterministic
 sleep-free replay; --pipeline N routes the churn scenario through the
 pipeline coordinator instead. serve-pipeline streams hidden states across
 N shard workers with K in-flight micro-batches (--micro-batches, or env
-HIGGS_PIPELINE_MB). See PERF.md sections 10-12.";
+HIGGS_PIPELINE_MB). serve-daemon puts a TCP front-end (streamed tokens,
+bounded admission, deadlines, graceful drain) in front of the same
+coordinator; request is its client (--drain to shut the daemon down).
+See PERF.md sections 10-13.";
 
 fn ckpt_path(engine: &Engine, cfg: &ModelConfig, args: &Args) -> std::path::PathBuf {
     match args.flags.get("ckpt").or_else(|| args.flags.get("out")) {
@@ -654,6 +674,111 @@ fn cmd_serve_pipeline(args: &Args) -> Result<()> {
     let rep = higgs::serve::run_pipeline(&cfg, &source, arrivals)?;
     eprintln!("pipeline run ({shards} shards) finished in {:.2}s", t0.elapsed().as_secs_f64());
     print_pipeline_report(&rep, batch);
+    Ok(())
+}
+
+/// The network serving daemon (PERF.md §13): bind a TCP listener, feed
+/// the pipeline coordinator from connection workers speaking the
+/// `serve::wire` protocol, and block until a client drains us. The
+/// final report prints the standard serving summary plus the
+/// span-derived per-phase latency histograms.
+fn cmd_serve_daemon(args: &Args) -> Result<()> {
+    let listen = match args.flags.get("listen") {
+        Some(a) => a.clone(),
+        None => higgs::util::env_str("HIGGS_DAEMON_ADDR")
+            .unwrap_or_else(|| "127.0.0.1:7411".to_string()),
+    };
+    let deadline_default = higgs::util::env_u64("HIGGS_REQ_DEADLINE_MS", 0) as usize;
+    let cfg = higgs::serve::DaemonConfig {
+        listen,
+        max_queue: args.get_usize("max-queue", 64)?,
+        default_deadline_ms: args.get_usize("deadline-ms", deadline_default)? as u32,
+        trace_out: args.flags.get("trace-out").map(std::path::PathBuf::from),
+        pipeline: higgs::serve::PipelineConfig {
+            shards: args.get_usize("shards", 1)?,
+            micro_batches: args
+                .get_usize("micro-batches", higgs::util::env_usize("HIGGS_PIPELINE_MB", 1))?,
+            batch: args.get_usize("batch", 4)?,
+            layers: args.get_usize("layers", 8)?,
+            socket: args.flags.contains_key("socket"),
+            tcp: args.flags.contains_key("tcp"),
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let source = match args.flags.get("artifact") {
+        Some(p) => higgs::serve::PipelineSource::Artifact(std::path::PathBuf::from(p)),
+        None => higgs::serve::PipelineSource::Synthetic,
+    };
+    let daemon = higgs::serve::Daemon::start(cfg, source)?;
+    eprintln!(
+        "serve-daemon listening on {} (drain with `higgs request --addr {} --drain`)",
+        daemon.addr(),
+        daemon.addr()
+    );
+    let rep = daemon.wait()?;
+    println!("[daemon n={} steps={}] {}", rep.shards, rep.steps, rep.metrics.summary());
+    print!("{}", rep.metrics.phase_report());
+    println!(
+        "  busy {} / timeouts {} / wire errors {}; {} spans recorded ({} retained)",
+        rep.busy_rejections,
+        rep.timeouts,
+        rep.wire_errors,
+        rep.spans.total(),
+        rep.spans.len(),
+    );
+    Ok(())
+}
+
+/// Client for `serve-daemon`: submit `--count` requests sequentially
+/// over one connection and print each streamed token plus the Done
+/// latency split; `--drain` instead asks the daemon to finish its
+/// in-flight work and exit.
+fn cmd_request(args: &Args) -> Result<()> {
+    let addr = match args.flags.get("addr") {
+        Some(a) => a.clone(),
+        None => higgs::util::env_str("HIGGS_DAEMON_ADDR")
+            .unwrap_or_else(|| "127.0.0.1:7411".to_string()),
+    };
+    if args.flags.contains_key("drain") {
+        higgs::serve::drain_daemon(&addr)?;
+        println!("daemon at {addr} drained");
+        return Ok(());
+    }
+    let prompt: Vec<i32> = args
+        .get("prompt", "1,2,3")
+        .split(',')
+        .map(|t| t.trim().parse::<i32>().with_context(|| format!("--prompt token {t:?}")))
+        .collect::<Result<_>>()?;
+    let max_new = args.get_usize("max-new", 16)? as u32;
+    let count = args.get_usize("count", 1)? as u64;
+    let deadline_ms = args.get_usize("deadline-ms", 0)? as u32;
+    let reqs: Vec<higgs::serve::ClientRequest> = (1..=count)
+        .map(|id| higgs::serve::ClientRequest {
+            id,
+            prompt: prompt.clone(),
+            max_new,
+            deadline_ms,
+        })
+        .collect();
+    for (id, outcome) in higgs::serve::request_many(&addr, &reqs)? {
+        match outcome {
+            higgs::serve::ClientOutcome::Done { tokens, finish, queue_ms, decode_ms, latency_ms } => {
+                println!(
+                    "req {id}: {} tokens ({}), queue {queue_ms:.1} ms + decode \
+                     {decode_ms:.1} ms = {latency_ms:.1} ms\n  {tokens:?}",
+                    tokens.len(),
+                    finish.label(),
+                );
+            }
+            higgs::serve::ClientOutcome::Busy { queue_depth } => {
+                println!("req {id}: BUSY (queue depth {queue_depth})");
+            }
+            higgs::serve::ClientOutcome::Failed { code, message } => {
+                println!("req {id}: ERROR {} — {message}", code.label());
+            }
+        }
+    }
     Ok(())
 }
 

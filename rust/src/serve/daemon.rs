@@ -1,0 +1,868 @@
+//! The network serving daemon (PERF.md §13): a long-lived TCP
+//! front-end (`higgs serve-daemon`) speaking the [`wire`](super::wire)
+//! request protocol in front of the pipeline coordinator — the first
+//! process a CLIENT can actually send a request to.
+//!
+//! ```text
+//!   clients ──TCP──▶ accept loop ──▶ per-conn workers ──mpsc──▶ DaemonCore
+//!     ◀─ Token / Done / Error / Busy streams ◀── reply channels ──┘  │ tick
+//!                                                        PipelineCoordinator
+//! ```
+//!
+//! Lifecycle contract:
+//!   * **streaming**: every generated token is pushed to the client as
+//!     it is produced (the coordinator's opt-in [`TokenEvent`] seam),
+//!     terminal `Done` carries the finish reason + latency split;
+//!   * **backpressure**: admission is bounded (`max_queue`); an
+//!     overflowing or draining daemon answers a typed `Busy`, never
+//!     queues unboundedly;
+//!   * **deadlines**: a request whose deadline expires while it is
+//!     still QUEUED gets a typed timeout `Error`. Deadlines are
+//!     enforced on the daemon's [`Clock`](super::trace::Clock) —
+//!     virtual-clock tests exercise them sleep-free. Once admitted, a
+//!     request runs to completion (a mid-decode cancel would desync
+//!     the bit-identity contract);
+//!   * **graceful drain**: a `Drain` message (or [`Daemon::finish`])
+//!     stops admission, finishes every in-flight decode, streams the
+//!     tails, acks the drain, and exits with a final report;
+//!   * **corruption**: a corrupt or truncated client frame closes that
+//!     connection and counts in `internal_errors` — the daemon keeps
+//!     serving everyone else.
+//!
+//! Every request carries a [`RequestSpan`]; finished spans land in the
+//! ring ([`SpanRing`], `HIGGS_TRACE_RING`) and fold into
+//! `ServeMetrics::phases` / the optional `--trace-out` JSONL dump.
+//!
+//! This module is under the `wall-clock` audit rule: all timing flows
+//! through the coordinator's `Clock` — no `Instant`, no sleeps.
+
+use super::engine::Completion;
+use super::metrics::ServeMetrics;
+use super::pipeline::{PipelineConfig, PipelineCoordinator, PipelineSource, TokenEvent};
+use super::spans::{phase_stats, RequestSpan, SpanOutcome, SpanRing};
+use super::trace::Request;
+use super::wire::{read_msg, write_msg, ErrorCode, FinishReason, WireMsg};
+use anyhow::{anyhow, bail, ensure, Result};
+use std::collections::{BTreeMap, VecDeque};
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+
+#[derive(Clone, Debug)]
+pub struct DaemonConfig {
+    /// bind address; port 0 picks an ephemeral port (tests)
+    pub listen: String,
+    /// bounded admission: pending requests beyond this bounce as `Busy`
+    pub max_queue: usize,
+    /// applied to submits that carry `deadline_ms == 0`; 0 = no deadline
+    pub default_deadline_ms: u32,
+    /// span ring capacity (see [`SpanRing::default_capacity`])
+    pub trace_ring: usize,
+    /// dump the span ring as JSONL here at shutdown
+    pub trace_out: Option<PathBuf>,
+    pub pipeline: PipelineConfig,
+}
+
+impl Default for DaemonConfig {
+    fn default() -> Self {
+        DaemonConfig {
+            listen: "127.0.0.1:0".to_string(),
+            max_queue: 64,
+            default_deadline_ms: 0,
+            trace_ring: 1024,
+            trace_out: None,
+            pipeline: PipelineConfig { shards: 1, ..Default::default() },
+        }
+    }
+}
+
+/// What the core loop receives from connection workers (and from
+/// direct-drive tests — the deterministic seam for drain/deadline
+/// semantics, no TCP races involved).
+pub enum CoreMsg {
+    Submit {
+        /// connection id (0 for direct drives)
+        client: u64,
+        /// the CLIENT's request id, echoed on every reply
+        id: u64,
+        prompt: Vec<i32>,
+        max_new: u32,
+        deadline_ms: u32,
+        reply: mpsc::Sender<WireMsg>,
+    },
+    /// stop admitting, finish in-flight work, ack with `WireMsg::Drain`
+    Drain { reply: mpsc::Sender<WireMsg> },
+    /// a connection saw a corrupt frame (counted in `internal_errors`)
+    WireError,
+}
+
+/// The daemon's final accounting.
+pub struct DaemonReport {
+    pub metrics: ServeMetrics,
+    /// completions sorted by internal id — the bit-identity surface
+    pub completions: Vec<Completion>,
+    pub steps: u64,
+    pub shards: usize,
+    pub busy_rejections: u64,
+    pub timeouts: u64,
+    pub wire_errors: u64,
+    pub spans: SpanRing,
+}
+
+struct Pending {
+    internal: u64,
+    client_req: u64,
+    prompt: Vec<i32>,
+    max_new: u32,
+    deadline_ms: u32,
+    reply: mpsc::Sender<WireMsg>,
+    span: RequestSpan,
+}
+
+struct Live {
+    client_req: u64,
+    max_new: u32,
+    reply: mpsc::Sender<WireMsg>,
+    span: RequestSpan,
+}
+
+struct DaemonCore {
+    cfg: DaemonConfig,
+    pc: PipelineCoordinator,
+    pending: VecDeque<Pending>,
+    live: BTreeMap<u64, Live>,
+    ring: SpanRing,
+    drain_replies: Vec<mpsc::Sender<WireMsg>>,
+    draining: bool,
+    next_internal: u64,
+    busy_rejections: u64,
+    rejected: u64,
+    timeouts: u64,
+    wire_errors: u64,
+}
+
+/// Run the daemon core to completion: consume [`CoreMsg`]s from `rx`,
+/// drive the pipeline, stream replies, and return the final report
+/// once drained (or once every sender is gone and the queue is dry).
+pub fn run_core(
+    cfg: DaemonConfig,
+    source: &PipelineSource,
+    rx: mpsc::Receiver<CoreMsg>,
+) -> Result<DaemonReport> {
+    let mut pc = PipelineCoordinator::new(cfg.pipeline.clone(), source)?;
+    pc.set_token_recording(true);
+    let ring = SpanRing::new(cfg.trace_ring);
+    let mut core = DaemonCore {
+        cfg,
+        pc,
+        pending: VecDeque::new(),
+        live: BTreeMap::new(),
+        ring,
+        drain_replies: Vec::new(),
+        draining: false,
+        next_internal: 0,
+        busy_rejections: 0,
+        rejected: 0,
+        timeouts: 0,
+        wire_errors: 0,
+    };
+    core.run(rx)?;
+    core.finalize()
+}
+
+impl DaemonCore {
+    fn run(&mut self, rx: mpsc::Receiver<CoreMsg>) -> Result<()> {
+        let mut disconnected = false;
+        loop {
+            loop {
+                match rx.try_recv() {
+                    Ok(m) => {
+                        // feed between arrivals so `max_queue` bounds the
+                        // true backlog, not submissions a free slot is
+                        // about to absorb
+                        self.handle(m);
+                        self.feed();
+                    }
+                    Err(mpsc::TryRecvError::Empty) => break,
+                    Err(mpsc::TryRecvError::Disconnected) => {
+                        disconnected = true;
+                        break;
+                    }
+                }
+            }
+            self.expire_deadlines();
+            self.feed();
+            if self.pc.active_slots() > 0 || self.pc.queue_len() > 0 {
+                match self.pc.tick() {
+                    Ok(done) => self.dispatch(done),
+                    Err(e) => {
+                        log::error!("daemon tick failed: {e}");
+                        self.abort_all(&format!("engine failure: {e}"));
+                        return Ok(());
+                    }
+                }
+                continue;
+            }
+            if !self.pending.is_empty() {
+                // feed() always moves work when slots are free, so a
+                // non-empty backlog with an idle pipeline means the
+                // next iteration will place it
+                continue;
+            }
+            if self.draining || disconnected {
+                return Ok(());
+            }
+            // idle: block until the next message (deadlines can only
+            // expire while something is PENDING, and pending is empty)
+            match rx.recv() {
+                Ok(m) => self.handle(m),
+                Err(_) => return Ok(()),
+            }
+        }
+    }
+
+    fn handle(&mut self, msg: CoreMsg) {
+        match msg {
+            CoreMsg::Submit { client, id, prompt, max_new, deadline_ms, reply } => {
+                let now = self.pc.now_ms();
+                let mut span = RequestSpan::start(id, client, prompt.len(), now);
+                if self.draining || self.pending.len() >= self.cfg.max_queue {
+                    self.busy_rejections += 1;
+                    span.finish(SpanOutcome::Busy, now);
+                    self.ring.push(span);
+                    let _ = reply
+                        .send(WireMsg::Busy { id, queue_depth: self.pending.len() as u32 });
+                    return;
+                }
+                if prompt.is_empty() || max_new == 0 {
+                    self.rejected += 1;
+                    span.finish(SpanOutcome::Rejected, now);
+                    self.ring.push(span);
+                    let reason =
+                        if prompt.is_empty() { "empty prompt" } else { "max_new == 0" };
+                    let _ = reply.send(WireMsg::Error {
+                        id,
+                        code: ErrorCode::Rejected,
+                        message: reason.to_string(),
+                    });
+                    return;
+                }
+                let deadline_ms = if deadline_ms == 0 {
+                    self.cfg.default_deadline_ms
+                } else {
+                    deadline_ms
+                };
+                self.next_internal += 1;
+                self.pending.push_back(Pending {
+                    internal: self.next_internal,
+                    client_req: id,
+                    prompt,
+                    max_new,
+                    deadline_ms,
+                    reply,
+                    span,
+                });
+            }
+            CoreMsg::Drain { reply } => {
+                self.draining = true;
+                self.drain_replies.push(reply);
+            }
+            CoreMsg::WireError => self.wire_errors += 1,
+        }
+    }
+
+    /// Bounce pending requests whose deadline has passed (queue-level
+    /// only — admitted requests run to completion).
+    fn expire_deadlines(&mut self) {
+        let now = self.pc.now_ms();
+        let mut keep = VecDeque::with_capacity(self.pending.len());
+        for mut p in self.pending.drain(..) {
+            if p.deadline_ms > 0 && now - p.span.enqueue_ms >= p.deadline_ms as f64 {
+                self.timeouts += 1;
+                let _ = p.reply.send(WireMsg::Error {
+                    id: p.client_req,
+                    code: ErrorCode::Timeout,
+                    message: format!("deadline {} ms expired in queue", p.deadline_ms),
+                });
+                p.span.finish(SpanOutcome::Timeout, now);
+                self.ring.push(p.span);
+            } else {
+                keep.push_back(p);
+            }
+        }
+        self.pending = keep;
+    }
+
+    /// Move backlog into the coordinator, one request per free slot —
+    /// never more, so the coordinator's own queue stays shallow and
+    /// deadline expiry keeps authority over everything still waiting.
+    fn feed(&mut self) {
+        let used = self.pc.active_slots() + self.pc.queue_len();
+        let free = self.cfg.pipeline.batch.saturating_sub(used);
+        for _ in 0..free {
+            let Some(p) = self.pending.pop_front() else { break };
+            self.pc.submit(Request {
+                id: p.internal,
+                prompt: p.prompt,
+                max_new: p.max_new as usize,
+                arrival_ms: p.span.enqueue_ms as u64,
+            });
+            self.live.insert(
+                p.internal,
+                Live {
+                    client_req: p.client_req,
+                    max_new: p.max_new,
+                    reply: p.reply,
+                    span: p.span,
+                },
+            );
+        }
+    }
+
+    /// Stream this tick's tokens, then settle its completions. Reply
+    /// sends to a hung-up client are ignored — a dropped connection
+    /// doesn't cancel its generation.
+    fn dispatch(&mut self, done: Vec<Completion>) {
+        let now = self.pc.now_ms();
+        for TokenEvent { id, index, token } in self.pc.take_token_events() {
+            if let Some(l) = self.live.get_mut(&id) {
+                l.span.note_token(index, now);
+                let _ = l.reply.send(WireMsg::Token {
+                    id: l.client_req,
+                    index: index as u32,
+                    token,
+                });
+            }
+        }
+        for c in done {
+            let Some(mut l) = self.live.remove(&c.id) else { continue };
+            let finish = if c.tokens.len() >= l.max_new as usize {
+                FinishReason::Complete
+            } else {
+                FinishReason::Capacity
+            };
+            l.span.finish(SpanOutcome::Complete, now);
+            let _ = l.reply.send(WireMsg::Done {
+                id: l.client_req,
+                finish,
+                tokens: c.tokens.len() as u32,
+                queue_ms: c.queue_ms,
+                decode_ms: c.decode_ms,
+                latency_ms: c.latency_ms,
+            });
+            self.ring.push(l.span);
+        }
+    }
+
+    /// Fatal engine error: every outstanding request gets a typed
+    /// internal `Error`, then the daemon shuts down with the failure
+    /// counted (the tick already bumped `internal_errors`).
+    fn abort_all(&mut self, why: &str) {
+        let now = self.pc.now_ms();
+        let mut outstanding: Vec<(u64, mpsc::Sender<WireMsg>, RequestSpan)> = Vec::new();
+        for (_, l) in std::mem::take(&mut self.live) {
+            outstanding.push((l.client_req, l.reply, l.span));
+        }
+        for p in self.pending.drain(..) {
+            outstanding.push((p.client_req, p.reply, p.span));
+        }
+        for (id, reply, mut span) in outstanding {
+            let _ = reply.send(WireMsg::Error {
+                id,
+                code: ErrorCode::Internal,
+                message: why.to_string(),
+            });
+            span.finish(SpanOutcome::Error, now);
+            self.ring.push(span);
+        }
+    }
+
+    fn finalize(mut self) -> Result<DaemonReport> {
+        // ack drains FIRST so no waiter can hang on a finish error
+        for r in self.drain_replies.drain(..) {
+            let _ = r.send(WireMsg::Drain);
+        }
+        let rep = self.pc.finish()?;
+        let mut metrics = rep.metrics.clone();
+        metrics.rejected += self.rejected + self.busy_rejections;
+        metrics.internal_errors += self.wire_errors;
+        metrics.timeouts += self.timeouts;
+        metrics.phases = phase_stats(&self.ring);
+        if let Some(path) = &self.cfg.trace_out {
+            if let Err(e) = self.ring.write_jsonl(path) {
+                log::error!("span trace dump failed: {e}");
+            }
+        }
+        Ok(DaemonReport {
+            metrics,
+            completions: rep.completions,
+            steps: rep.steps,
+            shards: rep.shards,
+            busy_rejections: self.busy_rejections,
+            timeouts: self.timeouts,
+            wire_errors: self.wire_errors,
+            spans: self.ring,
+        })
+    }
+}
+
+/// A running daemon: the TCP accept loop + the core, with handles to
+/// drain and collect the final report.
+pub struct Daemon {
+    addr: String,
+    tx: mpsc::Sender<CoreMsg>,
+    core: JoinHandle<Result<DaemonReport>>,
+    accept: JoinHandle<()>,
+    stop: Arc<AtomicBool>,
+}
+
+impl Daemon {
+    /// Bind `cfg.listen`, spawn the core and the accept loop, return
+    /// immediately. `addr()` reports the bound address (so `:0` works
+    /// for tests).
+    pub fn start(cfg: DaemonConfig, source: PipelineSource) -> Result<Daemon> {
+        let listener =
+            TcpListener::bind(&cfg.listen).map_err(|e| anyhow!("bind {}: {e}", cfg.listen))?;
+        let addr = listener
+            .local_addr()
+            .map_err(|e| anyhow!("local_addr on {}: {e}", cfg.listen))?
+            .to_string();
+        let (tx, rx) = mpsc::channel();
+        let core =
+            crate::util::pool::spawn_worker("daemon-core", move || run_core(cfg, &source, rx));
+        let stop = Arc::new(AtomicBool::new(false));
+        let (stop2, tx2) = (stop.clone(), tx.clone());
+        let accept = crate::util::pool::spawn_worker("daemon-accept", move || {
+            accept_loop(listener, tx2, stop2)
+        });
+        Ok(Daemon { addr, tx, core, accept, stop })
+    }
+
+    /// The bound `host:port`.
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Server-side graceful drain: stop admitting, finish in-flight
+    /// generations, stream the tails, then collect the report.
+    pub fn finish(self) -> Result<DaemonReport> {
+        let Daemon { addr, tx, core, accept, stop } = self;
+        let (rtx, rrx) = mpsc::channel();
+        if tx.send(CoreMsg::Drain { reply: rtx }).is_ok() {
+            // core gone before acking == already drained; proceed
+            let _ = rrx.recv();
+        }
+        shutdown_accept(&addr, &stop, accept);
+        match core.join() {
+            Ok(r) => r,
+            Err(_) => bail!("daemon core panicked"),
+        }
+    }
+
+    /// Wait for a CLIENT-driven drain ([`drain_daemon`] /
+    /// `higgs request --drain`) to complete, then collect the report.
+    pub fn wait(self) -> Result<DaemonReport> {
+        let Daemon { addr, tx: _tx, core, accept, stop } = self;
+        let report = match core.join() {
+            Ok(r) => r,
+            Err(_) => Err(anyhow!("daemon core panicked")),
+        };
+        shutdown_accept(&addr, &stop, accept);
+        report
+    }
+}
+
+/// Wake the blocking `accept()` with a probe connection (it sees the
+/// stop flag and exits) and join the loop.
+fn shutdown_accept(addr: &str, stop: &AtomicBool, accept: JoinHandle<()>) {
+    stop.store(true, Ordering::SeqCst);
+    let _ = TcpStream::connect(addr);
+    let _ = accept.join();
+}
+
+fn accept_loop(listener: TcpListener, tx: mpsc::Sender<CoreMsg>, stop: Arc<AtomicBool>) {
+    let mut client = 0u64;
+    loop {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                if stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                client += 1;
+                let (ctx, cid) = (tx.clone(), client);
+                // detached: a connection lives as long as its client
+                let _ = crate::util::pool::spawn_worker(&format!("daemon-conn-{cid}"), move || {
+                    if let Err(e) = serve_connection(stream, ctx, cid) {
+                        log::warn!("connection {cid} closed: {e}");
+                    }
+                });
+            }
+            Err(e) => {
+                if stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                log::error!("daemon accept failed: {e}");
+                break;
+            }
+        }
+    }
+}
+
+/// One client connection: read wire messages, forward submits to the
+/// core, stream each request's replies back until terminal. A corrupt
+/// frame reports [`CoreMsg::WireError`] and closes THIS connection —
+/// the daemon keeps serving.
+fn serve_connection(mut stream: TcpStream, tx: mpsc::Sender<CoreMsg>, client: u64) -> Result<()> {
+    loop {
+        let msg = match read_msg(&mut stream) {
+            Ok(Some(m)) => m,
+            Ok(None) => return Ok(()),
+            Err(e) => {
+                let _ = tx.send(CoreMsg::WireError);
+                bail!("corrupt frame: {e}");
+            }
+        };
+        match msg {
+            WireMsg::Submit { id, prompt, max_new, deadline_ms } => {
+                let (rtx, rrx) = mpsc::channel();
+                let sent = tx.send(CoreMsg::Submit {
+                    client,
+                    id,
+                    prompt,
+                    max_new,
+                    deadline_ms,
+                    reply: rtx,
+                });
+                if sent.is_err() {
+                    // core already shut down: typed bounce, clean close
+                    let _ = write_msg(&mut stream, &WireMsg::Busy { id, queue_depth: 0 });
+                    return Ok(());
+                }
+                let mut terminal = false;
+                for m in rrx.iter() {
+                    let is_terminal = matches!(
+                        m,
+                        WireMsg::Done { .. } | WireMsg::Error { .. } | WireMsg::Busy { .. }
+                    );
+                    write_msg(&mut stream, &m)?;
+                    if is_terminal {
+                        terminal = true;
+                        break;
+                    }
+                }
+                if !terminal {
+                    write_msg(
+                        &mut stream,
+                        &WireMsg::Error {
+                            id,
+                            code: ErrorCode::Internal,
+                            message: "daemon core exited mid-request".to_string(),
+                        },
+                    )?;
+                    return Ok(());
+                }
+            }
+            WireMsg::Drain => {
+                let (rtx, rrx) = mpsc::channel();
+                if tx.send(CoreMsg::Drain { reply: rtx }).is_ok() {
+                    // blocks until every in-flight request completed
+                    let _ = rrx.recv();
+                }
+                write_msg(&mut stream, &WireMsg::Drain)?;
+                return Ok(());
+            }
+            other => {
+                let _ = tx.send(CoreMsg::WireError);
+                bail!("client sent server-only message kind {}", other.kind());
+            }
+        }
+    }
+}
+
+/// One client-side request for [`request_many`].
+#[derive(Clone, Debug)]
+pub struct ClientRequest {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub max_new: u32,
+    /// 0 = use the daemon's default
+    pub deadline_ms: u32,
+}
+
+/// What one request resolved to, client-side.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ClientOutcome {
+    Done {
+        tokens: Vec<i32>,
+        finish: FinishReason,
+        queue_ms: f64,
+        decode_ms: f64,
+        latency_ms: f64,
+    },
+    Busy { queue_depth: u32 },
+    Failed { code: ErrorCode, message: String },
+}
+
+/// Submit `reqs` sequentially over ONE connection, validating the
+/// stream as it arrives (ids match, token indices are gapless, the
+/// terminal count equals the streamed count). The client side of
+/// `higgs request` and the smoke/bench harnesses.
+pub fn request_many(addr: &str, reqs: &[ClientRequest]) -> Result<Vec<(u64, ClientOutcome)>> {
+    let mut stream = TcpStream::connect(addr).map_err(|e| anyhow!("connect {addr}: {e}"))?;
+    let mut out = Vec::with_capacity(reqs.len());
+    for r in reqs {
+        write_msg(
+            &mut stream,
+            &WireMsg::Submit {
+                id: r.id,
+                prompt: r.prompt.clone(),
+                max_new: r.max_new,
+                deadline_ms: r.deadline_ms,
+            },
+        )?;
+        let mut tokens: Vec<i32> = Vec::new();
+        loop {
+            let Some(m) = read_msg(&mut stream)? else {
+                bail!("daemon closed mid-request {}", r.id)
+            };
+            match m {
+                WireMsg::Token { id, index, token } => {
+                    ensure!(id == r.id, "token for request {id}, expected {}", r.id);
+                    ensure!(
+                        index as usize == tokens.len(),
+                        "token index {index} out of order (have {})",
+                        tokens.len()
+                    );
+                    tokens.push(token);
+                }
+                WireMsg::Done { id, finish, tokens: n, queue_ms, decode_ms, latency_ms } => {
+                    ensure!(id == r.id, "Done for request {id}, expected {}", r.id);
+                    ensure!(
+                        n as usize == tokens.len(),
+                        "Done says {n} tokens, streamed {}",
+                        tokens.len()
+                    );
+                    out.push((
+                        r.id,
+                        ClientOutcome::Done { tokens, finish, queue_ms, decode_ms, latency_ms },
+                    ));
+                    break;
+                }
+                WireMsg::Busy { id, queue_depth } => {
+                    ensure!(id == r.id, "Busy for request {id}, expected {}", r.id);
+                    out.push((r.id, ClientOutcome::Busy { queue_depth }));
+                    break;
+                }
+                WireMsg::Error { id, code, message } => {
+                    ensure!(id == r.id, "Error for request {id}, expected {}", r.id);
+                    out.push((r.id, ClientOutcome::Failed { code, message }));
+                    break;
+                }
+                other => bail!("unexpected message kind {} from daemon", other.kind()),
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Ask a daemon to drain gracefully and wait for the ack.
+pub fn drain_daemon(addr: &str) -> Result<()> {
+    let mut stream = TcpStream::connect(addr).map_err(|e| anyhow!("connect {addr}: {e}"))?;
+    write_msg(&mut stream, &WireMsg::Drain)?;
+    match read_msg(&mut stream)? {
+        Some(WireMsg::Drain) => Ok(()),
+        Some(m) => bail!("unexpected message kind {} while draining", m.kind()),
+        None => bail!("daemon closed before acking the drain"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn test_cfg() -> DaemonConfig {
+        DaemonConfig {
+            max_queue: 4,
+            pipeline: PipelineConfig {
+                shards: 1,
+                batch: 2,
+                seq: 24,
+                vocab: 61,
+                layers: 3,
+                ..Default::default()
+            },
+            ..Default::default()
+        }
+    }
+
+    fn submit(
+        tx: &mpsc::Sender<CoreMsg>,
+        id: u64,
+        prompt: Vec<i32>,
+        max_new: u32,
+        deadline_ms: u32,
+    ) -> mpsc::Receiver<WireMsg> {
+        let (rtx, rrx) = mpsc::channel();
+        tx.send(CoreMsg::Submit { client: 0, id, prompt, max_new, deadline_ms, reply: rtx })
+            .unwrap();
+        rrx
+    }
+
+    fn collect_terminal(rx: &mpsc::Receiver<WireMsg>) -> (Vec<i32>, WireMsg) {
+        let mut tokens = Vec::new();
+        loop {
+            let m = rx.recv().unwrap();
+            match m {
+                WireMsg::Token { index, token, .. } => {
+                    assert_eq!(index as usize, tokens.len());
+                    tokens.push(token);
+                }
+                other => return (tokens, other),
+            }
+        }
+    }
+
+    #[test]
+    fn core_drains_in_flight_and_bounces_late_submits() {
+        let (tx, rx) = mpsc::channel();
+        let r1 = submit(&tx, 11, vec![1, 2, 3], 4, 0);
+        let r2 = submit(&tx, 12, vec![4, 5], 3, 0);
+        let (dtx, drx) = mpsc::channel();
+        tx.send(CoreMsg::Drain { reply: dtx }).unwrap();
+        // after the drain request: typed Busy, not silence
+        let r3 = submit(&tx, 13, vec![9], 2, 0);
+        drop(tx);
+        let rep = run_core(test_cfg(), &PipelineSource::Synthetic, rx).unwrap();
+        let (t1, done1) = collect_terminal(&r1);
+        assert_eq!(t1.len(), 4);
+        assert!(matches!(done1, WireMsg::Done { id: 11, finish: FinishReason::Complete, .. }));
+        let (t2, done2) = collect_terminal(&r2);
+        assert_eq!(t2.len(), 3);
+        assert!(matches!(done2, WireMsg::Done { id: 12, .. }));
+        let (t3, late) = collect_terminal(&r3);
+        assert!(t3.is_empty());
+        assert!(matches!(late, WireMsg::Busy { id: 13, .. }));
+        assert_eq!(drx.recv().unwrap(), WireMsg::Drain);
+        assert_eq!(rep.completions.len(), 2);
+        assert_eq!(rep.busy_rejections, 1);
+        assert_eq!(rep.metrics.rejected, 1);
+        assert!(!rep.metrics.phases.is_empty());
+    }
+
+    #[test]
+    fn queued_deadline_expires_on_virtual_clock() {
+        // batch=1: the long request holds the one slot while the
+        // deadlined request waits in the daemon queue
+        let mut cfg = test_cfg();
+        cfg.pipeline.batch = 1;
+        let (tx, rx) = mpsc::channel();
+        let r1 = submit(&tx, 1, vec![1, 2, 3], 12, 0);
+        let r2 = submit(&tx, 2, vec![4, 5], 2, 3);
+        drop(tx);
+        let rep = run_core(cfg, &PipelineSource::Synthetic, rx).unwrap();
+        let (t1, done1) = collect_terminal(&r1);
+        assert_eq!(t1.len(), 12);
+        assert!(matches!(done1, WireMsg::Done { id: 1, .. }));
+        let (t2, err2) = collect_terminal(&r2);
+        assert!(t2.is_empty());
+        assert!(
+            matches!(err2, WireMsg::Error { id: 2, code: ErrorCode::Timeout, .. }),
+            "wanted a typed timeout, got {err2:?}"
+        );
+        assert_eq!(rep.timeouts, 1);
+        assert_eq!(rep.metrics.timeouts, 1);
+        assert_eq!(rep.completions.len(), 1);
+        // the timed-out span is in the ring with its outcome
+        assert!(rep
+            .spans
+            .iter()
+            .any(|s| s.id == 2 && s.outcome == SpanOutcome::Timeout && s.admit_ms.is_none()));
+    }
+
+    #[test]
+    fn invalid_submits_get_typed_rejections() {
+        let (tx, rx) = mpsc::channel();
+        let r1 = submit(&tx, 1, vec![], 3, 0);
+        let r2 = submit(&tx, 2, vec![1], 0, 0);
+        drop(tx);
+        let rep = run_core(test_cfg(), &PipelineSource::Synthetic, rx).unwrap();
+        for r in [r1, r2] {
+            let (toks, term) = collect_terminal(&r);
+            assert!(toks.is_empty());
+            assert!(matches!(term, WireMsg::Error { code: ErrorCode::Rejected, .. }));
+        }
+        assert_eq!(rep.metrics.rejected, 2);
+        assert_eq!(rep.completions.len(), 0);
+    }
+
+    #[test]
+    fn bounded_queue_bounces_overflow_as_busy() {
+        let mut cfg = test_cfg();
+        cfg.pipeline.batch = 1;
+        cfg.max_queue = 1;
+        let (tx, rx) = mpsc::channel();
+        // one running, one queued, the third overflows
+        let _r1 = submit(&tx, 1, vec![1, 2], 6, 0);
+        let _r2 = submit(&tx, 2, vec![3], 2, 0);
+        let r3 = submit(&tx, 3, vec![4], 2, 0);
+        drop(tx);
+        let rep = run_core(cfg, &PipelineSource::Synthetic, rx).unwrap();
+        let (_, term) = collect_terminal(&r3);
+        assert!(matches!(term, WireMsg::Busy { id: 3, queue_depth: 1 }), "got {term:?}");
+        assert_eq!(rep.busy_rejections, 1);
+        assert_eq!(rep.completions.len(), 2);
+    }
+
+    #[test]
+    fn tcp_daemon_serves_and_drains() {
+        let daemon = Daemon::start(test_cfg(), PipelineSource::Synthetic).unwrap();
+        let reqs = vec![
+            ClientRequest { id: 1, prompt: vec![1, 2, 3], max_new: 4, deadline_ms: 0 },
+            ClientRequest { id: 2, prompt: vec![7], max_new: 3, deadline_ms: 0 },
+        ];
+        let got = request_many(daemon.addr(), &reqs).unwrap();
+        assert_eq!(got.len(), 2);
+        for (id, outcome) in &got {
+            match outcome {
+                ClientOutcome::Done { tokens, finish, .. } => {
+                    let want = reqs.iter().find(|r| r.id == *id).unwrap().max_new as usize;
+                    assert_eq!(tokens.len(), want);
+                    assert_eq!(*finish, FinishReason::Complete);
+                }
+                other => panic!("request {id} got {other:?}"),
+            }
+        }
+        let rep = daemon.finish().unwrap();
+        assert_eq!(rep.completions.len(), 2);
+        assert_eq!(rep.wire_errors, 0);
+        assert_eq!(rep.metrics.internal_errors, 0);
+    }
+
+    #[test]
+    fn corrupt_client_frame_closes_connection_daemon_survives() {
+        let daemon = Daemon::start(test_cfg(), PipelineSource::Synthetic).unwrap();
+        // a raw garbage burst on one connection
+        {
+            use std::io::{Read as _, Write as _};
+            let mut s = TcpStream::connect(daemon.addr()).unwrap();
+            s.write_all(&[0x13, 0x00, 0x00, 0x00, 0xde, 0xad, 0xbe, 0xef]).unwrap();
+            s.shutdown(std::net::Shutdown::Write).unwrap();
+            // the daemon closes the corrupt connection; seeing EOF here
+            // guarantees its WireError already reached the core
+            let mut buf = [0u8; 8];
+            assert_eq!(s.read(&mut buf).unwrap_or(0), 0);
+        }
+        // the daemon still serves fresh connections afterwards
+        let reqs = vec![ClientRequest { id: 9, prompt: vec![5, 6], max_new: 2, deadline_ms: 0 }];
+        let got = request_many(daemon.addr(), &reqs).unwrap();
+        assert!(matches!(got[0].1, ClientOutcome::Done { .. }));
+        // drain via the client path this time
+        drain_daemon(daemon.addr()).unwrap();
+        let rep = daemon.wait().unwrap();
+        assert_eq!(rep.completions.len(), 1);
+        assert_eq!(rep.wire_errors, 1);
+        assert_eq!(rep.metrics.internal_errors, 1);
+    }
+}

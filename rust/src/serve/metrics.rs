@@ -36,6 +36,22 @@ pub struct ShardLane {
     pub bytes_sent: u64,
 }
 
+/// Percentile summary of one request-lifecycle phase, sourced from the
+/// daemon's span ring (`serve/spans.rs`, PERF.md §13) — per-phase
+/// latency histograms rather than just the end-to-end split.
+#[derive(Clone, Debug, Default)]
+pub struct PhaseStats {
+    /// "queue" (enqueue→admit), "prefill" (admit→first token),
+    /// "decode" (first token→complete), or "total"
+    pub phase: &'static str,
+    /// completed spans contributing to this row
+    pub count: usize,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub max_ms: f64,
+}
+
 #[derive(Clone, Debug, Default)]
 pub struct ServeMetrics {
     pub completions: Vec<CompletionStat>,
@@ -62,9 +78,15 @@ pub struct ServeMetrics {
     /// the ideal `F·τ` a perfectly-overlapped round would take
     /// ((N−1)·τ per round; 0 for single-shard runs)
     pub pipeline_bubble_ms: f64,
+    /// requests whose deadline expired before admission (daemon runs;
+    /// each also got a typed `Error{Timeout}` reply)
+    pub timeouts: u64,
     /// per-shard busy/wait/idle + traffic split; empty outside
     /// pipeline runs
     pub shard_lanes: Vec<ShardLane>,
+    /// span-derived per-phase latency percentiles; empty outside
+    /// daemon runs
+    pub phases: Vec<PhaseStats>,
 }
 
 impl ServeMetrics {
@@ -148,6 +170,9 @@ impl ServeMetrics {
         if self.dropped > 0 {
             s += &format!(", {} DROPPED", self.dropped);
         }
+        if self.timeouts > 0 {
+            s += &format!(", {} timeouts", self.timeouts);
+        }
         if self.internal_errors > 0 {
             s += &format!(", {} INTERNAL ERRORS", self.internal_errors);
         }
@@ -156,6 +181,19 @@ impl ServeMetrics {
                 ", {} shards, bubble {:.0} ms",
                 self.shard_lanes.len(),
                 self.pipeline_bubble_ms
+            );
+        }
+        s
+    }
+
+    /// Multi-line per-phase histogram table (one row per entry in
+    /// `phases`); empty string when no spans were recorded.
+    pub fn phase_report(&self) -> String {
+        let mut s = String::new();
+        for ph in &self.phases {
+            s += &format!(
+                "  phase {:<8} n={:<5} p50 {:>8.2} ms  p95 {:>8.2} ms  p99 {:>8.2} ms  max {:>8.2} ms\n",
+                ph.phase, ph.count, ph.p50_ms, ph.p95_ms, ph.p99_ms, ph.max_ms
             );
         }
         s
@@ -234,6 +272,9 @@ mod tests {
         assert!(m2.summary().contains("2 rejected"));
         assert!(m2.summary().contains("1 DROPPED"));
         assert!(m2.summary().contains("3 INTERNAL ERRORS"));
+        assert!(!m2.summary().contains("timeouts"));
+        let m3 = ServeMetrics { timeouts: 4, ..Default::default() };
+        assert!(m3.summary().contains("4 timeouts"));
         assert!(m2.summary().contains("queue peak 7"));
         assert!(m2.summary().contains("blocked 12 ms"));
         // Display delegates to summary
@@ -250,5 +291,19 @@ mod tests {
         ];
         m.pipeline_bubble_ms = 2.0;
         assert!(m.summary().contains("2 shards, bubble 2 ms"));
+    }
+
+    #[test]
+    fn phase_report_rows() {
+        let mut m = ServeMetrics::default();
+        assert!(m.phase_report().is_empty());
+        m.phases = vec![
+            PhaseStats { phase: "queue", count: 3, p50_ms: 1.0, p95_ms: 2.0, p99_ms: 2.0, max_ms: 2.0 },
+            PhaseStats { phase: "decode", count: 3, p50_ms: 5.0, p95_ms: 9.0, p99_ms: 9.0, max_ms: 9.0 },
+        ];
+        let rep = m.phase_report();
+        assert!(rep.contains("phase queue"));
+        assert!(rep.contains("phase decode"));
+        assert_eq!(rep.lines().count(), 2);
     }
 }

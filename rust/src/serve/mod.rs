@@ -23,10 +23,21 @@
 //!                        │   frames: coord ─▶ shard 0 ─▶ … ─▶ shard N−1 ─▶ coord
 //!                        └◀─ completions    (ShardTransport ring, K micro-batches)
 //! ```
+//!
+//! The network front-end ([`daemon`], PERF.md §13) puts a TCP accept
+//! loop speaking the [`wire`] request protocol in front of the same
+//! coordinator, with streamed tokens, per-request lifecycle spans
+//! ([`spans`]), bounded admission, deadlines, and graceful drain:
+//!
+//! ```text
+//!   TCP clients ──▶ higgs serve-daemon ──▶ DaemonCore ──▶ PipelineCoordinator
+//!         ◀─ Token…/Done streams, Busy, typed Errors ◀──┘  (spans → JSONL)
+//! ```
 
 pub mod backend;
 pub mod batcher;
 pub mod churn;
+pub mod daemon;
 pub mod engine;
 pub mod kvcache;
 pub mod kvstate;
@@ -34,17 +45,27 @@ pub mod metrics;
 pub mod pipeline;
 pub mod planes;
 pub mod router;
+pub mod spans;
 pub mod trace;
 pub mod transport;
+pub mod wire;
 
 pub use backend::{Backend, QuantSource};
 pub use churn::{run_churn, ChurnConfig, ChurnReport, KvMode};
+pub use daemon::{
+    drain_daemon, request_many, run_core, ClientOutcome, ClientRequest, CoreMsg, Daemon,
+    DaemonConfig, DaemonReport,
+};
 pub use engine::GenerationEngine;
 pub use kvstate::{FullKv, KvLayout, SlotKv};
-pub use metrics::{CompletionStat, ServeMetrics, ShardLane};
+pub use metrics::{CompletionStat, PhaseStats, ServeMetrics, ShardLane};
 pub use pipeline::{
-    run_pipeline, PipelineConfig, PipelineCoordinator, PipelineReport, PipelineSource,
+    run_pipeline, PipelineConfig, PipelineCoordinator, PipelineReport, PipelineSource, TokenEvent,
 };
 pub use router::{Router, RouterConfig, ShardRouter};
+pub use spans::{phase_stats, RequestSpan, SpanOutcome, SpanRing};
 pub use trace::{Clock, QueuedRequest, Request, TraceConfig};
-pub use transport::{ActivationFrame, LocalPipe, ShardTransport, SocketTransport};
+pub use transport::{
+    ActivationFrame, LocalPipe, ShardTransport, SocketTransport, TcpTransport,
+};
+pub use wire::{ErrorCode, FinishReason, WireMsg};

@@ -42,8 +42,8 @@ use super::kvstate::{KvLayout, SlotKv};
 use super::metrics::{CompletionStat, ServeMetrics, ShardLane};
 use super::trace::{Clock, QueuedRequest, Request};
 use super::transport::{
-    ActivationFrame, LocalPipe, ShardTransport, SocketTransport, FRAME_DECODE, FRAME_PREFILL,
-    FRAME_SHUTDOWN,
+    ActivationFrame, LocalPipe, ShardTransport, SocketTransport, TcpTransport, FRAME_DECODE,
+    FRAME_PREFILL, FRAME_SHUTDOWN,
 };
 use crate::quant::reader::{ArtifactReader, ShardSpec};
 use anyhow::{anyhow, bail, ensure, Result};
@@ -132,6 +132,9 @@ pub struct PipelineConfig {
     pub seed: u64,
     /// ring over [`SocketTransport`] instead of [`LocalPipe`]
     pub socket: bool,
+    /// ring over [`TcpTransport`] — loopback pairs by default, or
+    /// multi-host rendezvous addresses via `HIGGS_SHARD_TCP`
+    pub tcp: bool,
     pub virtual_clock: bool,
 }
 
@@ -148,6 +151,7 @@ impl Default for PipelineConfig {
             layers: 4,
             seed: 0xC0FFEE,
             socket: false,
+            tcp: false,
             virtual_clock: true,
         }
     }
@@ -166,6 +170,17 @@ pub enum PipelineSource {
     /// Split the artifact's layer stack across the shards; each worker
     /// cold-starts its own slice through its own reader.
     Artifact(PathBuf),
+}
+
+/// One token produced during a tick, in production order — the
+/// streaming seam the serving daemon consumes. Recording is opt-in
+/// (`set_token_recording`) so batch runs pay nothing.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TokenEvent {
+    pub id: u64,
+    /// 0 is the admission token (end of prefill)
+    pub index: usize,
+    pub token: i32,
 }
 
 enum PipeSlot {
@@ -233,6 +248,8 @@ pub struct PipelineCoordinator {
     completions: Vec<Completion>,
     admission_steps: Vec<(u64, u64)>,
     completion_steps: Vec<(u64, u64)>,
+    record_tokens: bool,
+    token_events: Vec<TokenEvent>,
 }
 
 impl PipelineCoordinator {
@@ -244,6 +261,7 @@ impl PipelineCoordinator {
         ensure!(cfg.batch >= 1 && cfg.batch <= 64, "batch must be in 1..=64 (active bitmap)");
         ensure!(cfg.micro_batches >= 1, "micro-batch count must be >= 1");
         ensure!(cfg.dim() >= 1, "hidden width heads*d_head must be >= 1");
+        ensure!(!(cfg.socket && cfg.tcp), "pick one of --socket / --tcp, not both");
         let dim = cfg.dim();
         // resolve each shard's model slice
         let (shard_models, total_layers) = match source {
@@ -291,7 +309,10 @@ impl PipelineCoordinator {
         let mut recv_ends: Vec<Option<Box<dyn ShardTransport + Send>>> = Vec::new();
         for link in 0..=n {
             let (s, r): (Box<dyn ShardTransport + Send>, Box<dyn ShardTransport + Send>) =
-                if cfg.socket {
+                if cfg.tcp {
+                    let (a, b) = tcp_link(link)?;
+                    (Box::new(a), Box::new(b))
+                } else if cfg.socket {
                     let (a, b) = socket_link(link)?;
                     (Box::new(a), Box::new(b))
                 } else {
@@ -343,6 +364,8 @@ impl PipelineCoordinator {
             completions: Vec::new(),
             admission_steps: Vec::new(),
             completion_steps: Vec::new(),
+            record_tokens: false,
+            token_events: Vec::new(),
             cfg,
         })
     }
@@ -371,6 +394,18 @@ impl PipelineCoordinator {
     /// Effective micro-batches in flight.
     pub fn micro_batches(&self) -> usize {
         self.mb_count
+    }
+
+    /// Opt into per-token [`TokenEvent`] recording (the daemon's
+    /// streaming seam). Off by default — batch runs pay nothing.
+    pub fn set_token_recording(&mut self, on: bool) {
+        self.record_tokens = on;
+    }
+
+    /// Drain the tokens produced since the last call, in production
+    /// order. Empty unless `set_token_recording(true)` was called.
+    pub fn take_token_events(&mut self) -> Vec<TokenEvent> {
+        std::mem::take(&mut self.token_events)
     }
 
     /// Push raw bytes down the coordinator → shard-0 link — the
@@ -461,6 +496,9 @@ impl PipelineCoordinator {
                 .get((plen - 1) * self.dim..plen * self.dim)
                 .ok_or_else(|| anyhow!("prefill echo shorter than its header"))?;
             let first = sample_token(last, self.cfg.vocab);
+            if self.record_tokens {
+                self.token_events.push(TokenEvent { id: qr.req.id, index: 0, token: first });
+            }
             self.admission_steps.push((qr.req.id, self.step));
             self.slots[b] = PipeSlot::Active {
                 pos: plen,
@@ -560,6 +598,13 @@ impl PipelineCoordinator {
                     *pos += 1;
                     generated.push(next);
                     *last_token = next;
+                    if self.record_tokens {
+                        self.token_events.push(TokenEvent {
+                            id: req.id,
+                            index: generated.len() - 1,
+                            token: next,
+                        });
+                    }
                     self.kv_manager.append_token(req.id)?;
                     let capacity_hit = *pos + 1 >= self.cfg.seq;
                     if generated.len() >= req.max_new || capacity_hit {
@@ -744,6 +789,34 @@ fn socket_link(link: usize) -> Result<(SocketTransport, SocketTransport)> {
         .map_err(|_| anyhow!("rendezvous listener panicked"))?
         .map_err(|e| anyhow!("rendezvous listen on {}: {e}", path.display()))?;
     // sender side holds the connect end; either end is duplex
+    Ok((connect_end, listen_end))
+}
+
+/// Build one ring link over TCP: a loopback `pair()` by default, or a
+/// rendezvous address when `HIGGS_SHARD_TCP` names `host:base_port`
+/// (link i uses port `base_port + i` — the multi-host seam).
+fn tcp_link(link: usize) -> Result<(TcpTransport, TcpTransport)> {
+    let Some(addr) = TcpTransport::rendezvous_addr(link)? else {
+        return TcpTransport::pair();
+    };
+    let la = addr.clone();
+    let listener = crate::util::pool::spawn_worker("shard-listen", move || TcpTransport::listen(&la));
+    let mut connected = None;
+    for _ in 0..100_000 {
+        match TcpTransport::connect(&addr) {
+            Ok(c) => {
+                connected = Some(c);
+                break;
+            }
+            Err(_) => std::thread::yield_now(),
+        }
+    }
+    let connect_end =
+        connected.ok_or_else(|| anyhow!("rendezvous connect timed out on {addr}"))?;
+    let listen_end = listener
+        .join()
+        .map_err(|_| anyhow!("rendezvous listener panicked"))?
+        .map_err(|e| anyhow!("rendezvous listen on {addr}: {e}"))?;
     Ok((connect_end, listen_end))
 }
 
@@ -1084,6 +1157,50 @@ mod tests {
             assert_eq!((a.id, &a.tokens), (b.id, &b.tokens));
         }
         assert_eq!(local.total_wire_bytes(), sock.total_wire_bytes());
+    }
+
+    #[test]
+    fn tcp_ring_matches_local_ring() {
+        let local = run_pipeline(&small_cfg(2, 2), &PipelineSource::Synthetic, arrivals(6)).unwrap();
+        let cfg = PipelineConfig { tcp: true, ..small_cfg(2, 2) };
+        let tcp = run_pipeline(&cfg, &PipelineSource::Synthetic, arrivals(6)).unwrap();
+        assert_eq!(local.completions.len(), tcp.completions.len());
+        for (a, b) in local.completions.iter().zip(&tcp.completions) {
+            assert_eq!((a.id, &a.tokens), (b.id, &b.tokens));
+        }
+        assert_eq!(local.total_wire_bytes(), tcp.total_wire_bytes());
+    }
+
+    #[test]
+    fn token_events_stream_matches_completions() {
+        let mut pc =
+            PipelineCoordinator::new(small_cfg(2, 1), &PipelineSource::Synthetic).unwrap();
+        pc.set_token_recording(true);
+        pc.submit(Request { id: 5, prompt: vec![1, 2, 3], max_new: 4, arrival_ms: 0 });
+        pc.submit(Request { id: 6, prompt: vec![4, 5], max_new: 3, arrival_ms: 0 });
+        let mut streamed: std::collections::BTreeMap<u64, Vec<i32>> = Default::default();
+        let mut done = Vec::new();
+        while done.len() < 2 {
+            let cs = pc.tick().unwrap();
+            for ev in pc.take_token_events() {
+                let toks = streamed.entry(ev.id).or_default();
+                assert_eq!(ev.index, toks.len(), "token indices must be gapless");
+                toks.push(ev.token);
+            }
+            done.extend(cs);
+        }
+        assert!(pc.take_token_events().is_empty());
+        for c in &done {
+            assert_eq!(streamed.get(&c.id), Some(&c.tokens), "stream != completion for {}", c.id);
+        }
+        // recording is opt-in: a fresh coordinator records nothing
+        let mut quiet =
+            PipelineCoordinator::new(small_cfg(1, 1), &PipelineSource::Synthetic).unwrap();
+        quiet.submit(Request { id: 9, prompt: vec![1], max_new: 2, arrival_ms: 0 });
+        while quiet.tick().unwrap().is_empty() {}
+        assert!(quiet.take_token_events().is_empty());
+        let _ = pc.finish().unwrap();
+        let _ = quiet.finish().unwrap();
     }
 
     #[test]

@@ -1,0 +1,339 @@
+//! Request-lifecycle tracing for the serving daemon (PERF.md §13):
+//! every request carries a [`RequestSpan`] recording its
+//! enqueue → admit → first-token → per-step decode → complete
+//! timestamps, all on the ONE [`Clock`](super::trace::Clock) the
+//! daemon runs on — so virtual-clock tests get exact, sleep-free span
+//! assertions and wall-clock runs get real latencies from the same
+//! code path.
+//!
+//! Spans are ring-buffered ([`SpanRing`], capacity `HIGGS_TRACE_RING`)
+//! so a long-lived daemon holds bounded memory, and dumpable as JSONL
+//! (`serve-daemon --trace-out PATH`) for offline analysis.
+//! [`phase_stats`] reduces completed spans to the per-phase latency
+//! percentiles surfaced in `ServeMetrics::phases`.
+//!
+//! Distinct from `serve/trace.rs`, which models the WORKLOAD (arrival
+//! traces + the clock); this module traces the LIFECYCLE of each
+//! request inside the daemon.
+//!
+//! This module is under the `wall-clock` audit rule: timestamps only
+//! ever arrive as `now_ms` arguments read off the daemon's clock.
+
+use crate::serve::metrics::PhaseStats;
+use crate::util::stats::percentile;
+use std::collections::VecDeque;
+use std::fmt::Write as _;
+
+/// Terminal state of a request's lifecycle.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpanOutcome {
+    /// still in flight (only ever observed on live spans)
+    Pending,
+    /// generated its tokens and streamed `Done`
+    Complete,
+    /// deadline expired before admission → typed timeout `Error`
+    Timeout,
+    /// invalid request (empty prompt, zero `max_new`) → `Error`
+    Rejected,
+    /// bounced with `Busy` (queue full or draining)
+    Busy,
+    /// engine failure → `Error{Internal}`
+    Error,
+}
+
+impl SpanOutcome {
+    pub fn label(self) -> &'static str {
+        match self {
+            SpanOutcome::Pending => "pending",
+            SpanOutcome::Complete => "complete",
+            SpanOutcome::Timeout => "timeout",
+            SpanOutcome::Rejected => "rejected",
+            SpanOutcome::Busy => "busy",
+            SpanOutcome::Error => "error",
+        }
+    }
+}
+
+/// One request's lifecycle timestamps, all in clock-milliseconds on
+/// the daemon's `Clock`. Invariant (asserted by `prop_daemon`):
+/// `enqueue_ms ≤ admit_ms ≤ first_token_ms ≤ complete_ms` for every
+/// completed span.
+#[derive(Clone, Debug)]
+pub struct RequestSpan {
+    /// the CLIENT's request id (what `Token`/`Done` replies carry)
+    pub id: u64,
+    /// which connection submitted it (daemon-assigned, 0 for direct)
+    pub client: u64,
+    pub prompt_len: usize,
+    pub enqueue_ms: f64,
+    /// set when the pipeline admits the request into a slot
+    pub admit_ms: Option<f64>,
+    /// set when token index 0 is produced (end of prefill)
+    pub first_token_ms: Option<f64>,
+    /// timestamp of every produced token, in order
+    pub step_ms: Vec<f64>,
+    pub complete_ms: Option<f64>,
+    pub outcome: SpanOutcome,
+    pub tokens: usize,
+}
+
+impl RequestSpan {
+    pub fn start(id: u64, client: u64, prompt_len: usize, now_ms: f64) -> RequestSpan {
+        RequestSpan {
+            id,
+            client,
+            prompt_len,
+            enqueue_ms: now_ms,
+            admit_ms: None,
+            first_token_ms: None,
+            step_ms: Vec::new(),
+            complete_ms: None,
+            outcome: SpanOutcome::Pending,
+            tokens: 0,
+        }
+    }
+
+    /// Record one produced token. Index 0 doubles as the admit /
+    /// end-of-prefill mark: the pipeline produces the first token as
+    /// part of admission, so they share a timestamp.
+    pub fn note_token(&mut self, index: usize, now_ms: f64) {
+        if index == 0 {
+            self.admit_ms = Some(now_ms);
+            self.first_token_ms = Some(now_ms);
+        }
+        self.step_ms.push(now_ms);
+        self.tokens = self.tokens.max(index + 1);
+    }
+
+    /// Close the span with its terminal outcome.
+    pub fn finish(&mut self, outcome: SpanOutcome, now_ms: f64) {
+        self.outcome = outcome;
+        self.complete_ms = Some(now_ms);
+    }
+
+    /// One JSONL record (hand-rolled: the crate carries no serde).
+    pub fn to_json(&self) -> String {
+        let opt = |v: Option<f64>| match v {
+            Some(x) => format!("{x:.3}"),
+            None => "null".to_string(),
+        };
+        let mut steps = String::from("[");
+        for (i, s) in self.step_ms.iter().enumerate() {
+            if i > 0 {
+                steps.push(',');
+            }
+            let _ = write!(steps, "{s:.3}");
+        }
+        steps.push(']');
+        format!(
+            "{{\"id\":{},\"client\":{},\"prompt_len\":{},\"enqueue_ms\":{:.3},\
+             \"admit_ms\":{},\"first_token_ms\":{},\"complete_ms\":{},\
+             \"tokens\":{},\"outcome\":\"{}\",\"step_ms\":{}}}",
+            self.id,
+            self.client,
+            self.prompt_len,
+            self.enqueue_ms,
+            opt(self.admit_ms),
+            opt(self.first_token_ms),
+            opt(self.complete_ms),
+            self.tokens,
+            self.outcome.label(),
+            steps,
+        )
+    }
+}
+
+/// Bounded span history: the daemon pushes every finished span; once
+/// `cap` is exceeded the oldest drops (`total` keeps counting), so a
+/// week-long daemon holds bounded memory while `--trace-out` still
+/// dumps the most recent window.
+#[derive(Debug)]
+pub struct SpanRing {
+    cap: usize,
+    spans: VecDeque<RequestSpan>,
+    total: u64,
+}
+
+impl SpanRing {
+    pub fn new(cap: usize) -> SpanRing {
+        SpanRing { cap: cap.max(1), spans: VecDeque::new(), total: 0 }
+    }
+
+    /// Ring capacity from the `HIGGS_TRACE_RING` knob (default 1024).
+    pub fn default_capacity() -> usize {
+        crate::util::env_usize("HIGGS_TRACE_RING", 1024)
+    }
+
+    pub fn push(&mut self, span: RequestSpan) {
+        if self.spans.len() == self.cap {
+            self.spans.pop_front();
+        }
+        self.spans.push_back(span);
+        self.total += 1;
+    }
+
+    pub fn len(&self) -> usize {
+        self.spans.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.spans.is_empty()
+    }
+
+    /// Spans ever pushed, including ones the ring has since dropped.
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &RequestSpan> {
+        self.spans.iter()
+    }
+
+    /// All retained spans as JSONL, oldest first.
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        for s in &self.spans {
+            out += &s.to_json();
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn write_jsonl(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_jsonl())
+            .map_err(|e| anyhow::anyhow!("write trace {}: {e}", path.display()))
+    }
+}
+
+/// Reduce the ring's COMPLETED spans to per-phase percentiles:
+/// queue (enqueue→admit), prefill (admit→first token — 0 by
+/// construction today since admission produces the first token, kept
+/// as its own row for when prefill decouples), decode (first
+/// token→complete), total (enqueue→complete).
+pub fn phase_stats(ring: &SpanRing) -> Vec<PhaseStats> {
+    let mut queue = Vec::new();
+    let mut prefill = Vec::new();
+    let mut decode = Vec::new();
+    let mut total = Vec::new();
+    for s in ring.iter() {
+        if s.outcome != SpanOutcome::Complete {
+            continue;
+        }
+        let (Some(admit), Some(first), Some(done)) =
+            (s.admit_ms, s.first_token_ms, s.complete_ms)
+        else {
+            continue;
+        };
+        queue.push(admit - s.enqueue_ms);
+        prefill.push(first - admit);
+        decode.push(done - first);
+        total.push(done - s.enqueue_ms);
+    }
+    let row = |phase: &'static str, v: &[f64]| PhaseStats {
+        phase,
+        count: v.len(),
+        p50_ms: if v.is_empty() { 0.0 } else { percentile(v, 50.0) },
+        p95_ms: if v.is_empty() { 0.0 } else { percentile(v, 95.0) },
+        p99_ms: if v.is_empty() { 0.0 } else { percentile(v, 99.0) },
+        max_ms: v.iter().copied().fold(0.0, f64::max),
+    };
+    if total.is_empty() {
+        return Vec::new();
+    }
+    vec![
+        row("queue", &queue),
+        row("prefill", &prefill),
+        row("decode", &decode),
+        row("total", &total),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn completed(id: u64, t0: f64) -> RequestSpan {
+        let mut s = RequestSpan::start(id, 1, 3, t0);
+        s.note_token(0, t0 + 2.0);
+        s.note_token(1, t0 + 3.0);
+        s.note_token(2, t0 + 4.0);
+        s.finish(SpanOutcome::Complete, t0 + 4.0);
+        s
+    }
+
+    #[test]
+    fn phase_ordering_and_token_marks() {
+        let s = completed(7, 10.0);
+        assert_eq!(s.admit_ms, Some(12.0));
+        assert_eq!(s.first_token_ms, Some(12.0));
+        assert_eq!(s.complete_ms, Some(14.0));
+        assert_eq!(s.tokens, 3);
+        assert!(s.enqueue_ms <= s.admit_ms.unwrap());
+        assert!(s.admit_ms.unwrap() <= s.first_token_ms.unwrap());
+        assert!(s.first_token_ms.unwrap() <= s.complete_ms.unwrap());
+        assert_eq!(s.step_ms, vec![12.0, 13.0, 14.0]);
+    }
+
+    #[test]
+    fn ring_wraps_and_counts_total() {
+        let mut ring = SpanRing::new(3);
+        for i in 0..5 {
+            ring.push(completed(i, i as f64));
+        }
+        assert_eq!(ring.len(), 3);
+        assert_eq!(ring.total(), 5);
+        let ids: Vec<u64> = ring.iter().map(|s| s.id).collect();
+        assert_eq!(ids, vec![2, 3, 4]);
+        // capacity floors at 1
+        let mut tiny = SpanRing::new(0);
+        tiny.push(completed(9, 0.0));
+        tiny.push(completed(10, 1.0));
+        assert_eq!(tiny.len(), 1);
+        assert_eq!(tiny.iter().next().map(|s| s.id), Some(10));
+    }
+
+    #[test]
+    fn jsonl_shape() {
+        let mut ring = SpanRing::new(8);
+        ring.push(completed(1, 0.0));
+        let mut open = RequestSpan::start(2, 3, 1, 5.0);
+        open.finish(SpanOutcome::Busy, 5.0);
+        ring.push(open);
+        let jsonl = ring.to_jsonl();
+        let lines: Vec<&str> = jsonl.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].contains("\"id\":1"));
+        assert!(lines[0].contains("\"outcome\":\"complete\""));
+        assert!(lines[0].contains("\"step_ms\":[2.000,3.000,4.000]"));
+        assert!(lines[1].contains("\"admit_ms\":null"));
+        assert!(lines[1].contains("\"outcome\":\"busy\""));
+        for l in &lines {
+            assert!(l.starts_with('{') && l.ends_with('}'));
+        }
+    }
+
+    #[test]
+    fn phase_stats_only_counts_completions() {
+        let mut ring = SpanRing::new(16);
+        assert!(phase_stats(&ring).is_empty());
+        for i in 0..4 {
+            ring.push(completed(i, 10.0 * i as f64));
+        }
+        let mut bounced = RequestSpan::start(99, 0, 1, 0.0);
+        bounced.finish(SpanOutcome::Busy, 0.0);
+        ring.push(bounced);
+        let phases = phase_stats(&ring);
+        assert_eq!(phases.len(), 4);
+        let names: Vec<&str> = phases.iter().map(|p| p.phase).collect();
+        assert_eq!(names, vec!["queue", "prefill", "decode", "total"]);
+        for p in &phases {
+            assert_eq!(p.count, 4, "bounced span leaked into phase {}", p.phase);
+            assert!(p.p50_ms <= p.p95_ms && p.p95_ms <= p.p99_ms && p.p99_ms <= p.max_ms);
+        }
+        // queue = 2ms, decode = 2ms, total = 4ms for every span
+        assert!((phases[0].p50_ms - 2.0).abs() < 1e-9);
+        assert!((phases[1].p50_ms - 0.0).abs() < 1e-9);
+        assert!((phases[2].p50_ms - 2.0).abs() < 1e-9);
+        assert!((phases[3].p50_ms - 4.0).abs() < 1e-9);
+    }
+}

@@ -5,7 +5,7 @@
 //! a flipped byte anywhere in a frame is caught at `recv`, never
 //! decoded into garbage activations.
 //!
-//! Two implementations of [`ShardTransport`]:
+//! Three implementations of [`ShardTransport`]:
 //!   * [`LocalPipe`] — in-process, channel-backed, deterministic and
 //!     XLA-free. Frames still round-trip through the WIRE BYTES (not
 //!     moved as structs), so byte accounting and corruption handling
@@ -14,6 +14,10 @@
 //!     multi-process runs (`higgs serve-pipeline --socket`), either an
 //!     anonymous `pair()` or a filesystem rendezvous derived from the
 //!     `HIGGS_SHARD_SOCKET` path prefix.
+//!   * [`TcpTransport`] — the same frame contract over `TcpStream`
+//!     (`higgs serve-pipeline --tcp`), so ring links can leave the
+//!     host; rendezvous addresses derive from the `HIGGS_SHARD_TCP`
+//!     `host:base_port` knob (link i listens on `base_port + i`).
 //!
 //! This module is under the `wall-clock` audit rule: no `Instant`,
 //! `SystemTime`, or sleeps — blocking reads are the only waiting
@@ -21,6 +25,7 @@
 
 use anyhow::{anyhow, bail, ensure, Result};
 use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
 use std::os::unix::net::{UnixListener, UnixStream};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -353,6 +358,112 @@ impl ShardTransport for SocketTransport {
     }
 }
 
+/// TCP stream transport end for multi-host pipelines (ROADMAP item 1's
+/// remaining gap). The wire format is identical to [`LocalPipe`]'s and
+/// [`SocketTransport`]'s — a frame serialized by one is parseable by
+/// the others — so shard workers can be placed by address without any
+/// change to the coordinator.
+pub struct TcpTransport {
+    stream: Mutex<TcpStream>,
+    frames: AtomicU64,
+    bytes: AtomicU64,
+}
+
+impl TcpTransport {
+    fn wrap(stream: TcpStream) -> TcpTransport {
+        // activation frames are latency-critical hops, not bulk bytes
+        let _ = stream.set_nodelay(true);
+        TcpTransport {
+            stream: Mutex::new(stream),
+            frames: AtomicU64::new(0),
+            bytes: AtomicU64::new(0),
+        }
+    }
+
+    /// Connected loopback pair (single-host runs and tests): bind an
+    /// ephemeral port, connect to it, accept the one peer.
+    pub fn pair() -> Result<(TcpTransport, TcpTransport)> {
+        let listener =
+            TcpListener::bind(("127.0.0.1", 0)).map_err(|e| anyhow!("tcp bind: {e}"))?;
+        let addr = listener.local_addr().map_err(|e| anyhow!("tcp local_addr: {e}"))?;
+        let a = TcpStream::connect(addr).map_err(|e| anyhow!("tcp connect {addr}: {e}"))?;
+        let (b, _) = listener.accept().map_err(|e| anyhow!("tcp accept: {e}"))?;
+        Ok((Self::wrap(a), Self::wrap(b)))
+    }
+
+    /// Bind `addr` and accept one peer (the upstream stage listens).
+    pub fn listen(addr: &str) -> Result<TcpTransport> {
+        let listener = TcpListener::bind(addr).map_err(|e| anyhow!("tcp bind {addr}: {e}"))?;
+        let (stream, _) = listener.accept().map_err(|e| anyhow!("tcp accept on {addr}: {e}"))?;
+        Ok(Self::wrap(stream))
+    }
+
+    /// Connect to a listening peer (the downstream stage connects).
+    pub fn connect(addr: &str) -> Result<TcpTransport> {
+        let stream = TcpStream::connect(addr).map_err(|e| anyhow!("tcp connect {addr}: {e}"))?;
+        Ok(Self::wrap(stream))
+    }
+
+    /// Rendezvous address for ring link `link` (coordinator → shard 0
+    /// is link 0), derived from the `HIGGS_SHARD_TCP` knob:
+    /// `host:base_port` means link i uses `host:(base_port + i)`.
+    /// `Ok(None)` when the knob is unset — callers fall back to
+    /// loopback `pair()`s; a malformed value is an `Err`, not a
+    /// silent fallback.
+    pub fn rendezvous_addr(link: usize) -> Result<Option<String>> {
+        let Some(spec) = crate::util::env_str("HIGGS_SHARD_TCP") else {
+            return Ok(None);
+        };
+        let (host, base) = spec
+            .rsplit_once(':')
+            .ok_or_else(|| anyhow!("HIGGS_SHARD_TCP must be host:base_port, got {spec:?}"))?;
+        let base: u16 = base
+            .parse()
+            .map_err(|_| anyhow!("HIGGS_SHARD_TCP base port {base:?} is not a u16"))?;
+        let link16 = u16::try_from(link).map_err(|_| anyhow!("ring link {link} out of range"))?;
+        let port = base
+            .checked_add(link16)
+            .ok_or_else(|| anyhow!("HIGGS_SHARD_TCP port {base}+{link} overflows u16"))?;
+        Ok(Some(format!("{host}:{port}")))
+    }
+}
+
+impl ShardTransport for TcpTransport {
+    fn send(&self, frame: &ActivationFrame) -> Result<()> {
+        self.send_raw(frame.to_bytes())
+    }
+
+    fn recv(&self) -> Result<ActivationFrame> {
+        let mut stream = self.stream.lock().map_err(|_| anyhow!("tcp transport poisoned"))?;
+        let mut len_b = [0u8; 4];
+        stream.read_exact(&mut len_b).map_err(|e| anyhow!("tcp read (length): {e}"))?;
+        let plen = u32::from_le_bytes(len_b) as usize;
+        ensure!(plen <= MAX_PAYLOAD, "frame payload length {plen} exceeds the {MAX_PAYLOAD} cap");
+        let mut rest = vec![0u8; plen + 8];
+        stream.read_exact(&mut rest).map_err(|e| anyhow!("tcp read (payload): {e}"))?;
+        let mut wire = Vec::with_capacity(4 + rest.len());
+        wire.extend_from_slice(&len_b);
+        wire.extend_from_slice(&rest);
+        ActivationFrame::from_bytes(&wire)
+    }
+
+    fn send_raw(&self, bytes: Vec<u8>) -> Result<()> {
+        let mut stream = self.stream.lock().map_err(|_| anyhow!("tcp transport poisoned"))?;
+        stream.write_all(&bytes).map_err(|e| anyhow!("tcp write: {e}"))?;
+        self.bytes.fetch_add(bytes.len() as u64, Ordering::Relaxed);
+        self.frames.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    fn frames_sent(&self) -> u64 {
+        self.frames.load(Ordering::Relaxed)
+    }
+
+    fn bytes_sent(&self) -> u64 {
+        self.bytes.load(Ordering::Relaxed)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -494,5 +605,50 @@ mod tests {
         client.send(&frame()).unwrap();
         assert_eq!(server.recv().unwrap().step, frame().step);
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn tcp_transport_roundtrip() {
+        let (a, b) = TcpTransport::pair().unwrap();
+        let f = frame();
+        a.send(&f).unwrap();
+        let g = b.recv().unwrap();
+        assert_eq!(g.data.len(), f.data.len());
+        assert_eq!(g.pos, f.pos);
+        assert_eq!(a.bytes_sent(), f.wire_len() as u64);
+        assert_eq!(a.frames_sent(), 1);
+        // corrupt bytes through the socket also error at recv
+        let mut bad = f.to_bytes();
+        let last = bad.len() - 1;
+        bad[last] ^= 0xff;
+        b.send_raw(bad).unwrap();
+        assert!(a.recv().is_err());
+    }
+
+    #[test]
+    fn tcp_listen_connect_by_address() {
+        let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        drop(listener);
+        let a2 = addr.clone();
+        let server = std::thread::spawn(move || TcpTransport::listen(&a2));
+        // connect retries while the listener binds
+        let mut client = None;
+        for _ in 0..200 {
+            match TcpTransport::connect(&addr) {
+                Ok(c) => {
+                    client = Some(c);
+                    break;
+                }
+                Err(_) => std::thread::sleep(std::time::Duration::from_millis(5)),
+            }
+        }
+        let client = client.expect("could not connect to test tcp port");
+        let server = server.join().unwrap().unwrap();
+        client.send(&frame()).unwrap();
+        assert_eq!(server.recv().unwrap().step, frame().step);
+        // peer hangup surfaces as Err, not a panic
+        drop(client);
+        assert!(server.recv().is_err());
     }
 }

@@ -1,0 +1,481 @@
+//! Client-facing request wire protocol for the serving daemon
+//! (PERF.md §13): length-prefixed little-endian messages with an
+//! FNV-1a trailer — the same framing discipline as
+//! [`ActivationFrame`](super::transport::ActivationFrame), so a flipped
+//! byte anywhere in a message is caught at parse time, never decoded
+//! into a garbage request.
+//!
+//! Message kinds:
+//!   * `Submit` — client → daemon: prompt tokens + `max_new` +
+//!     an optional per-request deadline (0 = none).
+//!   * `Token` — daemon → client: one streamed token with its index.
+//!   * `Done` — daemon → client: terminal success, with the finish
+//!     reason and the queue/decode/total latency split.
+//!   * `Error` — daemon → client: terminal failure with a typed code.
+//!   * `Busy` — daemon → client: typed backpressure rejection (queue
+//!     full or draining), carrying the queue depth observed.
+//!   * `Drain` — client → daemon requests graceful drain; daemon →
+//!     client acknowledges once every in-flight request has completed.
+//!
+//! Parsing is panic-free: truncation, trailing garbage, checksum
+//! mismatches, unknown kinds/codes, and absurd length prefixes are all
+//! `Err`, never a panic — a corrupt client frame must not tear down
+//! the daemon.
+//!
+//! This module is under the `wall-clock` audit rule: the protocol
+//! carries durations measured elsewhere (on `serve::Clock`) but never
+//! reads time itself.
+
+use anyhow::{anyhow, bail, ensure, Result};
+use std::io::{Read, Write};
+
+/// Message kind bytes on the wire.
+pub const MSG_SUBMIT: u8 = 0;
+pub const MSG_TOKEN: u8 = 1;
+pub const MSG_DONE: u8 = 2;
+pub const MSG_ERROR: u8 = 3;
+pub const MSG_BUSY: u8 = 4;
+pub const MSG_DRAIN: u8 = 5;
+
+/// Wire overhead around the payload: u32 length prefix + u64 FNV
+/// trailer (identical to the activation-frame transport).
+pub const WIRE_OVERHEAD: usize = 12;
+/// Upper bound on an accepted payload (16 MiB) — a corrupt length
+/// prefix must produce an error, not an OOM-sized allocation.
+const MAX_PAYLOAD: usize = 16 << 20;
+/// Upper bound on a `Submit` prompt (tokens). Generous for any real
+/// context window while keeping a corrupt count from allocating GiBs.
+const MAX_PROMPT: usize = 1 << 20;
+/// Upper bound on an `Error` message string (bytes).
+const MAX_MESSAGE: usize = 1 << 16;
+
+/// Why a generation stopped.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Produced the requested `max_new` tokens.
+    Complete,
+    /// Hit the KV sequence capacity before `max_new`.
+    Capacity,
+}
+
+impl FinishReason {
+    fn code(self) -> u8 {
+        match self {
+            FinishReason::Complete => 0,
+            FinishReason::Capacity => 1,
+        }
+    }
+
+    fn from_code(c: u8) -> Result<FinishReason> {
+        match c {
+            0 => Ok(FinishReason::Complete),
+            1 => Ok(FinishReason::Capacity),
+            _ => bail!("unknown finish reason code {c}"),
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            FinishReason::Complete => "complete",
+            FinishReason::Capacity => "capacity",
+        }
+    }
+}
+
+/// Typed failure codes on `Error` messages.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// The request's deadline expired before it was admitted.
+    Timeout,
+    /// The request was invalid (empty prompt, zero `max_new`, …).
+    Rejected,
+    /// The engine failed; the daemon's `internal_errors` counter grew.
+    Internal,
+}
+
+impl ErrorCode {
+    fn code(self) -> u8 {
+        match self {
+            ErrorCode::Timeout => 0,
+            ErrorCode::Rejected => 1,
+            ErrorCode::Internal => 2,
+        }
+    }
+
+    fn from_code(c: u8) -> Result<ErrorCode> {
+        match c {
+            0 => Ok(ErrorCode::Timeout),
+            1 => Ok(ErrorCode::Rejected),
+            2 => Ok(ErrorCode::Internal),
+            _ => bail!("unknown error code {c}"),
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            ErrorCode::Timeout => "timeout",
+            ErrorCode::Rejected => "rejected",
+            ErrorCode::Internal => "internal",
+        }
+    }
+}
+
+/// One protocol message. `id` is always the CLIENT's request id — the
+/// daemon maps it to its internal pipeline id and back, so a client
+/// multiplexing requests over one connection can match replies.
+#[derive(Clone, Debug, PartialEq)]
+pub enum WireMsg {
+    Submit { id: u64, prompt: Vec<i32>, max_new: u32, deadline_ms: u32 },
+    Token { id: u64, index: u32, token: i32 },
+    Done { id: u64, finish: FinishReason, tokens: u32, queue_ms: f64, decode_ms: f64, latency_ms: f64 },
+    Error { id: u64, code: ErrorCode, message: String },
+    Busy { id: u64, queue_depth: u32 },
+    Drain,
+}
+
+impl WireMsg {
+    pub fn kind(&self) -> u8 {
+        match self {
+            WireMsg::Submit { .. } => MSG_SUBMIT,
+            WireMsg::Token { .. } => MSG_TOKEN,
+            WireMsg::Done { .. } => MSG_DONE,
+            WireMsg::Error { .. } => MSG_ERROR,
+            WireMsg::Busy { .. } => MSG_BUSY,
+            WireMsg::Drain => MSG_DRAIN,
+        }
+    }
+
+    fn payload(&self) -> Vec<u8> {
+        let mut p = vec![self.kind()];
+        match self {
+            WireMsg::Submit { id, prompt, max_new, deadline_ms } => {
+                p.extend_from_slice(&id.to_le_bytes());
+                p.extend_from_slice(&(prompt.len() as u32).to_le_bytes());
+                for t in prompt {
+                    p.extend_from_slice(&t.to_le_bytes());
+                }
+                p.extend_from_slice(&max_new.to_le_bytes());
+                p.extend_from_slice(&deadline_ms.to_le_bytes());
+            }
+            WireMsg::Token { id, index, token } => {
+                p.extend_from_slice(&id.to_le_bytes());
+                p.extend_from_slice(&index.to_le_bytes());
+                p.extend_from_slice(&token.to_le_bytes());
+            }
+            WireMsg::Done { id, finish, tokens, queue_ms, decode_ms, latency_ms } => {
+                p.extend_from_slice(&id.to_le_bytes());
+                p.push(finish.code());
+                p.extend_from_slice(&tokens.to_le_bytes());
+                p.extend_from_slice(&queue_ms.to_le_bytes());
+                p.extend_from_slice(&decode_ms.to_le_bytes());
+                p.extend_from_slice(&latency_ms.to_le_bytes());
+            }
+            WireMsg::Error { id, code, message } => {
+                p.extend_from_slice(&id.to_le_bytes());
+                p.push(code.code());
+                p.extend_from_slice(&(message.len() as u32).to_le_bytes());
+                p.extend_from_slice(message.as_bytes());
+            }
+            WireMsg::Busy { id, queue_depth } => {
+                p.extend_from_slice(&id.to_le_bytes());
+                p.extend_from_slice(&queue_depth.to_le_bytes());
+            }
+            WireMsg::Drain => {}
+        }
+        p
+    }
+
+    /// Total bytes this message occupies on the wire.
+    pub fn wire_len(&self) -> usize {
+        self.payload().len() + WIRE_OVERHEAD
+    }
+
+    /// Serialize to the full wire form: `len:u32 LE` over the payload,
+    /// the payload, then `fnv1a(payload):u64 LE`.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let payload = self.payload();
+        let mut out = Vec::with_capacity(payload.len() + WIRE_OVERHEAD);
+        out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        out.extend_from_slice(&payload);
+        let fnv = crate::util::fnv1a(payload.iter().copied());
+        out.extend_from_slice(&fnv.to_le_bytes());
+        out
+    }
+
+    /// Parse a full wire message (length prefix + payload + FNV
+    /// trailer). Every failure mode — truncation, trailing garbage, a
+    /// checksum mismatch, unknown kinds or codes — is an `Err`, never
+    /// a panic.
+    pub fn from_bytes(buf: &[u8]) -> Result<WireMsg> {
+        let (len_b, rest) =
+            take(buf, 4).map_err(|_| anyhow!("message shorter than its length prefix"))?;
+        let plen = u32::from_le_bytes(arr4(len_b)?) as usize;
+        ensure!(plen <= MAX_PAYLOAD, "message payload length {plen} exceeds the {MAX_PAYLOAD} cap");
+        ensure!(
+            rest.len() == plen + 8,
+            "message length prefix says {plen} payload bytes, got {} (+8 trailer expected)",
+            rest.len().saturating_sub(8)
+        );
+        let (payload, trailer) = take(rest, plen)?;
+        let fnv_want = u64::from_le_bytes(arr8(trailer)?);
+        let fnv_got = crate::util::fnv1a(payload.iter().copied());
+        ensure!(
+            fnv_got == fnv_want,
+            "message checksum mismatch: computed {fnv_got:#018x}, trailer {fnv_want:#018x}"
+        );
+        Self::from_payload(payload)
+    }
+
+    fn from_payload(payload: &[u8]) -> Result<WireMsg> {
+        let (kind_b, p) = take(payload, 1)?;
+        let kind = kind_b.first().copied().ok_or_else(|| anyhow!("empty message payload"))?;
+        let (msg, p) = match kind {
+            MSG_SUBMIT => {
+                let (id, p) = take_u64(p)?;
+                let (n, p) = take_u32(p)?;
+                let n = n as usize;
+                ensure!(n <= MAX_PROMPT, "prompt length {n} exceeds the {MAX_PROMPT} cap");
+                let (prompt_b, p) = take(p, n * 4)?;
+                let mut prompt = Vec::with_capacity(n);
+                for c in prompt_b.chunks_exact(4) {
+                    prompt.push(i32::from_le_bytes(arr4(c)?));
+                }
+                let (max_new, p) = take_u32(p)?;
+                let (deadline_ms, p) = take_u32(p)?;
+                (WireMsg::Submit { id, prompt, max_new, deadline_ms }, p)
+            }
+            MSG_TOKEN => {
+                let (id, p) = take_u64(p)?;
+                let (index, p) = take_u32(p)?;
+                let (token, p) = take_u32(p)?;
+                (WireMsg::Token { id, index, token: token as i32 }, p)
+            }
+            MSG_DONE => {
+                let (id, p) = take_u64(p)?;
+                let (fin_b, p) = take(p, 1)?;
+                let finish = FinishReason::from_code(
+                    fin_b.first().copied().ok_or_else(|| anyhow!("missing finish reason"))?,
+                )?;
+                let (tokens, p) = take_u32(p)?;
+                let (queue_ms, p) = take_f64(p)?;
+                let (decode_ms, p) = take_f64(p)?;
+                let (latency_ms, p) = take_f64(p)?;
+                (WireMsg::Done { id, finish, tokens, queue_ms, decode_ms, latency_ms }, p)
+            }
+            MSG_ERROR => {
+                let (id, p) = take_u64(p)?;
+                let (code_b, p) = take(p, 1)?;
+                let code = ErrorCode::from_code(
+                    code_b.first().copied().ok_or_else(|| anyhow!("missing error code"))?,
+                )?;
+                let (n, p) = take_u32(p)?;
+                let n = n as usize;
+                ensure!(n <= MAX_MESSAGE, "error message length {n} exceeds the {MAX_MESSAGE} cap");
+                let (msg_b, p) = take(p, n)?;
+                let message = std::str::from_utf8(msg_b)
+                    .map_err(|_| anyhow!("error message is not valid UTF-8"))?
+                    .to_string();
+                (WireMsg::Error { id, code, message }, p)
+            }
+            MSG_BUSY => {
+                let (id, p) = take_u64(p)?;
+                let (queue_depth, p) = take_u32(p)?;
+                (WireMsg::Busy { id, queue_depth }, p)
+            }
+            MSG_DRAIN => (WireMsg::Drain, p),
+            _ => bail!("unknown message kind {kind}"),
+        };
+        ensure!(p.is_empty(), "message has {} trailing payload bytes", p.len());
+        Ok(msg)
+    }
+}
+
+/// Write one message to a byte stream (a `TcpStream` in the daemon,
+/// anything `Write` in tests).
+pub fn write_msg<W: Write>(w: &mut W, msg: &WireMsg) -> Result<()> {
+    let wire = msg.to_bytes();
+    w.write_all(&wire).map_err(|e| anyhow!("wire write: {e}"))?;
+    Ok(())
+}
+
+/// Read one message from a byte stream. Returns `Ok(None)` on a CLEAN
+/// end-of-stream — zero bytes available at the first length byte, i.e.
+/// the peer closed between messages. EOF anywhere mid-frame is
+/// corruption and returns `Err`, as does any parse failure.
+pub fn read_msg<R: Read>(r: &mut R) -> Result<Option<WireMsg>> {
+    let mut len_b = [0u8; 4];
+    let mut got = 0usize;
+    while got < 4 {
+        let n = r.read(&mut len_b[got..]).map_err(|e| anyhow!("wire read (length): {e}"))?;
+        if n == 0 {
+            ensure!(got == 0, "peer closed mid-frame ({got} of 4 length bytes)");
+            return Ok(None);
+        }
+        got += n;
+    }
+    let plen = u32::from_le_bytes(len_b) as usize;
+    ensure!(plen <= MAX_PAYLOAD, "message payload length {plen} exceeds the {MAX_PAYLOAD} cap");
+    let mut rest = vec![0u8; plen + 8];
+    r.read_exact(&mut rest).map_err(|e| anyhow!("wire read (payload): {e}"))?;
+    let mut wire = Vec::with_capacity(4 + rest.len());
+    wire.extend_from_slice(&len_b);
+    wire.extend_from_slice(&rest);
+    WireMsg::from_bytes(&wire).map(Some)
+}
+
+fn take(buf: &[u8], n: usize) -> Result<(&[u8], &[u8])> {
+    ensure!(buf.len() >= n, "message truncated: wanted {n} bytes, have {}", buf.len());
+    Ok(buf.split_at(n))
+}
+
+fn take_u32(buf: &[u8]) -> Result<(u32, &[u8])> {
+    let (b, rest) = take(buf, 4)?;
+    Ok((u32::from_le_bytes(arr4(b)?), rest))
+}
+
+fn take_u64(buf: &[u8]) -> Result<(u64, &[u8])> {
+    let (b, rest) = take(buf, 8)?;
+    Ok((u64::from_le_bytes(arr8(b)?), rest))
+}
+
+fn take_f64(buf: &[u8]) -> Result<(f64, &[u8])> {
+    let (b, rest) = take(buf, 8)?;
+    Ok((f64::from_le_bytes(arr8(b)?), rest))
+}
+
+fn arr4(b: &[u8]) -> Result<[u8; 4]> {
+    b.try_into().map_err(|_| anyhow!("message field: expected 4 bytes, got {}", b.len()))
+}
+
+fn arr8(b: &[u8]) -> Result<[u8; 8]> {
+    b.try_into().map_err(|_| anyhow!("message field: expected 8 bytes, got {}", b.len()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn all_kinds() -> Vec<WireMsg> {
+        vec![
+            WireMsg::Submit { id: 7, prompt: vec![1, -2, 3, i32::MAX], max_new: 9, deadline_ms: 250 },
+            WireMsg::Token { id: 7, index: 3, token: -41 },
+            WireMsg::Done {
+                id: 7,
+                finish: FinishReason::Capacity,
+                tokens: 4,
+                queue_ms: 1.5,
+                decode_ms: 8.25,
+                latency_ms: 9.75,
+            },
+            WireMsg::Error { id: 7, code: ErrorCode::Timeout, message: "deadline 250ms".into() },
+            WireMsg::Busy { id: 7, queue_depth: 64 },
+            WireMsg::Drain,
+        ]
+    }
+
+    #[test]
+    fn roundtrip_every_kind() {
+        for msg in all_kinds() {
+            let wire = msg.to_bytes();
+            assert_eq!(wire.len(), msg.wire_len());
+            let back = WireMsg::from_bytes(&wire).unwrap();
+            assert_eq!(back, msg, "roundtrip drift for kind {}", msg.kind());
+        }
+    }
+
+    #[test]
+    fn corruption_and_truncation_error_not_panic() {
+        for msg in all_kinds() {
+            let wire = msg.to_bytes();
+            for i in 0..wire.len() {
+                let mut bad = wire.clone();
+                bad[i] ^= 0x40;
+                assert!(
+                    WireMsg::from_bytes(&bad).is_err(),
+                    "kind {}: flip at byte {i} accepted",
+                    msg.kind()
+                );
+            }
+            for n in 0..wire.len() {
+                assert!(
+                    WireMsg::from_bytes(&wire[..n]).is_err(),
+                    "kind {}: truncation to {n} accepted",
+                    msg.kind()
+                );
+            }
+            let mut long = wire.clone();
+            long.push(0);
+            assert!(WireMsg::from_bytes(&long).is_err(), "trailing garbage accepted");
+        }
+    }
+
+    #[test]
+    fn absurd_length_prefix_errors_without_allocating() {
+        let mut wire = WireMsg::Drain.to_bytes();
+        wire[..4].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(WireMsg::from_bytes(&wire).is_err());
+    }
+
+    #[test]
+    fn unknown_kind_and_codes_rejected() {
+        // kind byte lives at wire offset 4; re-seal the checksum so
+        // ONLY the kind check can catch it
+        let reseal = |wire: &mut Vec<u8>| {
+            let plen = wire.len() - WIRE_OVERHEAD;
+            let fnv = crate::util::fnv1a(wire[4..4 + plen].iter().copied());
+            let at = 4 + plen;
+            wire[at..at + 8].copy_from_slice(&fnv.to_le_bytes());
+        };
+        let mut wire = WireMsg::Drain.to_bytes();
+        wire[4] = 99;
+        reseal(&mut wire);
+        assert!(WireMsg::from_bytes(&wire).is_err(), "unknown kind accepted");
+        // finish-reason byte of Done lives at payload offset 9 → wire 13
+        let done = WireMsg::Done {
+            id: 1,
+            finish: FinishReason::Complete,
+            tokens: 1,
+            queue_ms: 0.0,
+            decode_ms: 0.0,
+            latency_ms: 0.0,
+        };
+        let mut wire = done.to_bytes();
+        wire[13] = 99;
+        reseal(&mut wire);
+        assert!(WireMsg::from_bytes(&wire).is_err(), "unknown finish reason accepted");
+        let err = WireMsg::Error { id: 1, code: ErrorCode::Internal, message: String::new() };
+        let mut wire = err.to_bytes();
+        wire[13] = 99;
+        reseal(&mut wire);
+        assert!(WireMsg::from_bytes(&wire).is_err(), "unknown error code accepted");
+    }
+
+    #[test]
+    fn stream_read_write_and_clean_eof() {
+        let mut buf = Vec::new();
+        for msg in all_kinds() {
+            write_msg(&mut buf, &msg).unwrap();
+        }
+        let mut cur = std::io::Cursor::new(buf.clone());
+        for msg in all_kinds() {
+            assert_eq!(read_msg(&mut cur).unwrap(), Some(msg));
+        }
+        // clean EOF between messages → Ok(None)
+        assert!(read_msg(&mut cur).unwrap().is_none());
+        // EOF mid-frame → Err, not Ok(None)
+        let mut cut = std::io::Cursor::new(buf[..buf.len() - 3].to_vec());
+        for _ in 0..all_kinds().len() - 1 {
+            read_msg(&mut cut).unwrap();
+        }
+        assert!(read_msg(&mut cut).is_err(), "mid-frame EOF must be an error");
+        // EOF inside the length prefix itself → Err
+        let mut cut = std::io::Cursor::new(all_kinds()[0].to_bytes()[..2].to_vec());
+        assert!(read_msg(&mut cut).is_err());
+    }
+
+    #[test]
+    fn empty_input_is_clean_eof() {
+        let mut cur = std::io::Cursor::new(Vec::<u8>::new());
+        assert!(read_msg(&mut cur).unwrap().is_none());
+    }
+}

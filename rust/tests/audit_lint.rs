@@ -24,7 +24,7 @@ fn bad_fixtures_produce_exact_golden_report() {
     let got = report_json(&report);
     let want = std::fs::read_to_string(fixtures().join("expected.json")).unwrap();
     assert_eq!(got, want, "audit JSON drifted from the golden file");
-    assert_eq!(report.findings.len(), 8);
+    assert_eq!(report.findings.len(), 10);
     assert_eq!(report.allowlisted, 0);
 }
 
@@ -39,7 +39,7 @@ fn good_fixtures_are_clean() {
     };
     let report = run_audit(&cfg).unwrap();
     assert!(report.findings.is_empty(), "{}", report_json(&report));
-    assert_eq!(report.files_scanned, 2);
+    assert_eq!(report.files_scanned, 3);
 }
 
 #[test]
@@ -63,7 +63,7 @@ fn allowlist_suppresses_exact_matches_and_reports_stale() {
     std::fs::remove_file(&allow).ok();
     std::fs::remove_dir(&dir).ok();
     assert_eq!(report.allowlisted, 1);
-    assert_eq!(report.findings.len(), 7);
+    assert_eq!(report.findings.len(), 9);
     assert!(report.findings.iter().all(|f| f.rule != "panic-path"));
     assert_eq!(report.stale_allowlist.len(), 1);
     assert!(report.stale_allowlist[0].contains("no longer exists"));

@@ -1,0 +1,5 @@
+//! Fixture: wall sleep in the daemon's deterministic core loop.
+
+pub fn nap() {
+    std::thread::sleep(std::time::Duration::from_millis(5));
+}

@@ -1,0 +1,5 @@
+//! Fixture: unchecked indexing while decoding a client frame.
+
+pub fn from_bytes(buf: &[u8]) -> u8 {
+    buf[0]
+}

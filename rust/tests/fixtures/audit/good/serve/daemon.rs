@@ -1,0 +1,5 @@
+//! Fixture: clean daemon code — virtual-clock deadline arithmetic only.
+
+pub fn expired(now_ms: f64, enqueue_ms: f64, deadline_ms: u32) -> bool {
+    deadline_ms > 0 && now_ms - enqueue_ms >= f64::from(deadline_ms)
+}

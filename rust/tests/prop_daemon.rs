@@ -1,0 +1,337 @@
+//! Property tests for the network serving daemon (via `util/propcheck`):
+//!
+//! 1. **wire codec**: random messages round-trip bit-exactly; any
+//!    single-byte flip or truncation is an `Err`, never a panic;
+//! 2. **loopback equivalence**: N concurrent TCP clients receive
+//!    exactly the token streams a direct `CoreMsg::Submit` drive of the
+//!    same requests produces (the front-end is transport, not policy);
+//! 3. **graceful drain**: every request admitted before the drain
+//!    completes with a full stream; every submit after it bounces as a
+//!    typed `Busy`;
+//! 4. **deadlines**: a queued request whose deadline lapses on the
+//!    virtual clock gets a typed `Error{Timeout}` and never tokens;
+//! 5. **span ordering**: every recorded span satisfies
+//!    enqueue ≤ admit ≤ first-token ≤ complete with monotone steps.
+
+use higgs::serve::{
+    request_many, run_core, ClientOutcome, ClientRequest, CoreMsg, Daemon, DaemonConfig,
+    ErrorCode, FinishReason, PipelineConfig, PipelineSource, SpanOutcome, WireMsg,
+};
+use higgs::util::propcheck::{forall, Gen};
+use std::collections::BTreeMap;
+use std::sync::mpsc;
+
+fn small_cfg(g: &mut Gen) -> DaemonConfig {
+    DaemonConfig {
+        max_queue: 16,
+        pipeline: PipelineConfig {
+            shards: g.usize_in(1, 2),
+            batch: g.usize_in(1, 3),
+            seq: 24,
+            vocab: *g.choose(&[31usize, 61]),
+            layers: g.usize_in(2, 4),
+            seed: g.usize_in(0, 1 << 30) as u64,
+            ..Default::default()
+        },
+        ..Default::default()
+    }
+}
+
+fn random_msg(g: &mut Gen) -> WireMsg {
+    match g.usize_in(0, 5) {
+        0 => WireMsg::Submit {
+            id: g.usize_in(0, 1 << 30) as u64,
+            prompt: (0..g.usize_in(0, 32)).map(|_| g.usize_in(0, 1 << 20) as i32).collect(),
+            max_new: g.usize_in(0, 512) as u32,
+            deadline_ms: g.usize_in(0, 10_000) as u32,
+        },
+        1 => WireMsg::Token {
+            id: g.usize_in(0, 1 << 30) as u64,
+            index: g.usize_in(0, 4096) as u32,
+            token: g.usize_in(0, 1 << 20) as i32 - (1 << 19),
+        },
+        2 => WireMsg::Done {
+            id: g.usize_in(0, 1 << 30) as u64,
+            finish: *g.choose(&[FinishReason::Complete, FinishReason::Capacity]),
+            tokens: g.usize_in(0, 4096) as u32,
+            queue_ms: g.f64_in(0.0, 1e6),
+            decode_ms: g.f64_in(0.0, 1e6),
+            latency_ms: g.f64_in(0.0, 1e6),
+        },
+        3 => WireMsg::Error {
+            id: g.usize_in(0, 1 << 30) as u64,
+            code: *g.choose(&[ErrorCode::Timeout, ErrorCode::Rejected, ErrorCode::Internal]),
+            message: "x".repeat(g.usize_in(0, 64)),
+        },
+        4 => WireMsg::Busy {
+            id: g.usize_in(0, 1 << 30) as u64,
+            queue_depth: g.usize_in(0, 1 << 16) as u32,
+        },
+        _ => WireMsg::Drain,
+    }
+}
+
+#[test]
+fn wire_roundtrips_and_rejects_corruption() {
+    forall("wire round-trip + corruption -> Err", 64, |g| {
+        let msg = random_msg(g);
+        let wire = msg.to_bytes();
+        assert_eq!(WireMsg::from_bytes(&wire).unwrap(), msg);
+        // single-byte flip anywhere: length mismatch or checksum error
+        let at = g.usize_in(0, wire.len() - 1);
+        let bit = 1u8 << g.usize_in(0, 7);
+        let mut flipped = wire.clone();
+        flipped[at] ^= bit;
+        assert!(WireMsg::from_bytes(&flipped).is_err(), "flip at {at} parsed");
+        // any truncation: Err (strict full-buffer parse)
+        let cut = g.usize_in(0, wire.len() - 1);
+        assert!(WireMsg::from_bytes(&wire[..cut]).is_err(), "truncation at {cut} parsed");
+        // pure noise must never panic (Err is the contract; an Ok would
+        // need a forged FNV trailer)
+        let noise: Vec<u8> = (0..g.usize_in(0, 64)).map(|_| g.usize_in(0, 255) as u8).collect();
+        assert!(WireMsg::from_bytes(&noise).is_err());
+    });
+}
+
+/// Drive `run_core` directly with one `Submit` per request and return
+/// each request's (tokens, terminal message).
+fn direct_outcomes(
+    cfg: DaemonConfig,
+    reqs: &[ClientRequest],
+) -> BTreeMap<u64, (Vec<i32>, WireMsg)> {
+    let (tx, rx) = mpsc::channel();
+    let replies: Vec<(u64, mpsc::Receiver<WireMsg>)> = reqs
+        .iter()
+        .map(|r| {
+            let (rtx, rrx) = mpsc::channel();
+            tx.send(CoreMsg::Submit {
+                client: 0,
+                id: r.id,
+                prompt: r.prompt.clone(),
+                max_new: r.max_new,
+                deadline_ms: r.deadline_ms,
+                reply: rtx,
+            })
+            .unwrap();
+            (r.id, rrx)
+        })
+        .collect();
+    drop(tx);
+    run_core(cfg, &PipelineSource::Synthetic, rx).unwrap();
+    replies
+        .into_iter()
+        .map(|(id, rrx)| {
+            let mut tokens = Vec::new();
+            loop {
+                match rrx.recv().unwrap() {
+                    WireMsg::Token { index, token, .. } => {
+                        assert_eq!(index as usize, tokens.len(), "gap in stream for {id}");
+                        tokens.push(token);
+                    }
+                    terminal => return (id, (tokens, terminal)),
+                }
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn concurrent_tcp_clients_match_direct_submits() {
+    forall("N TCP clients == direct core drive", 6, |g| {
+        let cfg = small_cfg(g);
+        let reqs: Vec<ClientRequest> = (1..=g.usize_in(2, 5) as u64)
+            .map(|id| ClientRequest {
+                id,
+                prompt: (0..g.usize_in(1, 6)).map(|_| g.usize_in(1, 97) as i32).collect(),
+                max_new: g.usize_in(1, 5) as u32,
+                deadline_ms: 0,
+            })
+            .collect();
+        let want = direct_outcomes(cfg.clone(), &reqs);
+
+        let daemon = Daemon::start(cfg, PipelineSource::Synthetic).unwrap();
+        let addr = daemon.addr().to_string();
+        let handles: Vec<_> = reqs
+            .iter()
+            .map(|r| {
+                let addr = addr.clone();
+                let r = r.clone();
+                std::thread::spawn(move || request_many(&addr, std::slice::from_ref(&r)).unwrap())
+            })
+            .collect();
+        let mut got: BTreeMap<u64, ClientOutcome> = BTreeMap::new();
+        for h in handles {
+            for (id, outcome) in h.join().unwrap() {
+                got.insert(id, outcome);
+            }
+        }
+        let rep = daemon.finish().unwrap();
+        assert_eq!(got.len(), reqs.len());
+        for r in &reqs {
+            let (want_tokens, want_term) = &want[&r.id];
+            match &got[&r.id] {
+                ClientOutcome::Done { tokens, .. } => {
+                    assert_eq!(
+                        tokens, want_tokens,
+                        "request {} tokens diverged from the direct drive",
+                        r.id
+                    );
+                    assert!(matches!(want_term, WireMsg::Done { .. }));
+                }
+                other => panic!("request {} got {other:?} over TCP", r.id),
+            }
+        }
+        assert_eq!(rep.completions.len(), reqs.len());
+        assert_eq!(rep.wire_errors, 0);
+    });
+}
+
+#[test]
+fn drain_completes_admitted_and_bounces_late() {
+    forall("drain: in-flight complete, late submits Busy", 8, |g| {
+        let cfg = small_cfg(g);
+        let n_before = g.usize_in(1, 4);
+        let n_after = g.usize_in(1, 3);
+        let (tx, rx) = mpsc::channel();
+        let mut replies = Vec::new();
+        for id in 0..(n_before + n_after) as u64 {
+            if id == n_before as u64 {
+                let (dtx, _drx) = mpsc::channel();
+                tx.send(CoreMsg::Drain { reply: dtx }).unwrap();
+            }
+            let (rtx, rrx) = mpsc::channel();
+            tx.send(CoreMsg::Submit {
+                client: 0,
+                id,
+                prompt: vec![1 + id as i32, 2],
+                max_new: g.usize_in(1, 4) as u32,
+                deadline_ms: 0,
+                reply: rtx,
+            })
+            .unwrap();
+            replies.push((id, rrx));
+        }
+        drop(tx);
+        let rep = run_core(cfg, &PipelineSource::Synthetic, rx).unwrap();
+        for (id, rrx) in replies {
+            let mut tokens = 0usize;
+            let terminal = loop {
+                match rrx.recv().unwrap() {
+                    WireMsg::Token { .. } => tokens += 1,
+                    t => break t,
+                }
+            };
+            if id < n_before as u64 {
+                assert!(
+                    matches!(terminal, WireMsg::Done { .. }),
+                    "pre-drain request {id} got {terminal:?}"
+                );
+                assert!(tokens > 0);
+            } else {
+                assert!(
+                    matches!(terminal, WireMsg::Busy { .. }),
+                    "post-drain request {id} got {terminal:?}"
+                );
+                assert_eq!(tokens, 0);
+            }
+        }
+        assert_eq!(rep.completions.len(), n_before);
+        assert_eq!(rep.busy_rejections, n_after as u64);
+    });
+}
+
+#[test]
+fn lapsed_queue_deadlines_get_typed_timeouts() {
+    forall("queued deadline -> Error{Timeout}", 8, |g| {
+        let mut cfg = small_cfg(g);
+        cfg.pipeline.batch = 1; // one slot: the long request blocks the queue
+        let long_new = g.usize_in(8, 16) as u32;
+        let deadline = g.usize_in(1, 3) as u32; // < long_new virtual ms
+        let (tx, rx) = mpsc::channel();
+        let (ltx, lrx) = mpsc::channel();
+        tx.send(CoreMsg::Submit {
+            client: 0,
+            id: 1,
+            prompt: vec![1, 2, 3],
+            max_new: long_new,
+            deadline_ms: 0,
+            reply: ltx,
+        })
+        .unwrap();
+        let (dtx, drx) = mpsc::channel();
+        tx.send(CoreMsg::Submit {
+            client: 0,
+            id: 2,
+            prompt: vec![4],
+            max_new: 2,
+            deadline_ms: deadline,
+            reply: dtx,
+        })
+        .unwrap();
+        drop(tx);
+        let rep = run_core(cfg, &PipelineSource::Synthetic, rx).unwrap();
+        let mut long_tokens = 0usize;
+        let long_term = loop {
+            match lrx.recv().unwrap() {
+                WireMsg::Token { .. } => long_tokens += 1,
+                t => break t,
+            }
+        };
+        assert_eq!(long_tokens, long_new as usize);
+        assert!(matches!(long_term, WireMsg::Done { .. }));
+        match drx.recv().unwrap() {
+            WireMsg::Error { id: 2, code: ErrorCode::Timeout, .. } => {}
+            other => panic!("deadlined request got {other:?}"),
+        }
+        assert_eq!(rep.timeouts, 1);
+        assert_eq!(rep.metrics.timeouts, 1);
+        assert_eq!(rep.completions.len(), 1);
+    });
+}
+
+#[test]
+fn span_phases_are_ordered() {
+    forall("enqueue <= admit <= first token <= complete", 8, |g| {
+        let cfg = small_cfg(g);
+        let reqs: Vec<ClientRequest> = (1..=g.usize_in(2, 6) as u64)
+            .map(|id| ClientRequest {
+                id,
+                prompt: (0..g.usize_in(1, 5)).map(|_| g.usize_in(1, 50) as i32).collect(),
+                max_new: g.usize_in(1, 6) as u32,
+                deadline_ms: 0,
+            })
+            .collect();
+        let (tx, rx) = mpsc::channel();
+        let mut keep = Vec::new();
+        for r in &reqs {
+            let (rtx, rrx) = mpsc::channel();
+            tx.send(CoreMsg::Submit {
+                client: 0,
+                id: r.id,
+                prompt: r.prompt.clone(),
+                max_new: r.max_new,
+                deadline_ms: 0,
+                reply: rtx,
+            })
+            .unwrap();
+            keep.push(rrx);
+        }
+        drop(tx);
+        let rep = run_core(cfg, &PipelineSource::Synthetic, rx).unwrap();
+        assert_eq!(rep.spans.len(), reqs.len());
+        for s in rep.spans.iter() {
+            assert_eq!(s.outcome, SpanOutcome::Complete);
+            let admit = s.admit_ms.expect("completed span must have admit_ms");
+            let first = s.first_token_ms.expect("completed span must have first_token_ms");
+            let done = s.complete_ms.expect("completed span must have complete_ms");
+            assert!(s.enqueue_ms <= admit, "span {}: enqueue > admit", s.id);
+            assert!(admit <= first, "span {}: admit > first token", s.id);
+            assert!(first <= done, "span {}: first token > complete", s.id);
+            for w in s.step_ms.windows(2) {
+                assert!(w[0] <= w[1], "span {}: decode steps not monotone", s.id);
+            }
+            assert_eq!(s.tokens, s.step_ms.len(), "span {}: token count drifted", s.id);
+        }
+        assert!(!rep.metrics.phases.is_empty());
+    });
+}
