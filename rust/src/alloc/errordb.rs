@@ -24,6 +24,7 @@
 use super::{Allocation, ErrorDb, GridChoice};
 use crate::model::Weights;
 use crate::quant::{QuantizedLayer, QuantizedModel, Quantizer};
+use crate::util::sync::lock_or_recover;
 use anyhow::{bail, ensure, Context, Result};
 use std::path::Path;
 
@@ -341,7 +342,7 @@ impl DbHandle {
                 }
                 // one entry per layer — cells are unique within a call
                 let todo: Vec<(usize, usize)> = {
-                    let m = memo.lock().unwrap();
+                    let m = lock_or_recover(memo);
                     choice
                         .iter()
                         .enumerate()
@@ -356,7 +357,7 @@ impl DbHandle {
                     ql.t2 = Some(db.t2[l][j]);
                     ql
                 });
-                let mut m = memo.lock().unwrap();
+                let mut m = lock_or_recover(memo);
                 for (cell, ql) in todo.into_iter().zip(fresh) {
                     m.insert(cell, ql);
                 }

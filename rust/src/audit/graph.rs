@@ -1,0 +1,1187 @@
+//! Cross-file concurrency analysis: the audit's call-graph pass.
+//!
+//! Where `rules.rs` is per-file and per-line, this pass sees the whole
+//! scanned tree at once. It indexes every `fn` item by NAME (methods
+//! from different impls merge — a deliberate, documented
+//! over-approximation), builds an approximate intra-crate call graph
+//! from the comment/string-blanked token stream, tracks lock-guard
+//! acquisition sites and guard live ranges, and enforces three rules:
+//!
+//! * `blocking-under-lock` — no channel `send`/`recv`,
+//!   `JoinHandle::join`, `TcpListener::accept`, or `Condvar::wait`
+//!   while a guard is held, transitively through the call graph.
+//! * `lock-order` — acquisition edges between ranked [`AuditMutex`]es
+//!   must strictly increase in rank; any edge that does not (which is
+//!   exactly what creates a cycle in the lock-rank graph) is a finding,
+//!   as are re-entrant edges and undeclarable/conflicting ranks.
+//! * `guard-across-spawn` — no guard lexically live across a
+//!   `pool::spawn_worker` / `par_for` / `par_map` boundary.
+//!
+//! What the token-level resolver can and cannot see is documented in
+//! PERF.md §14; `util/sync.rs` (the sanctioned wrapper itself) is
+//! exempt. The dynamic counterpart is the `lock_audit` feature.
+//!
+//! [`AuditMutex`]: ../../util/sync/struct.AuditMutex.html
+
+use super::rules::Finding;
+use super::scan::FileScan;
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Blocking method names that must have EMPTY parens to count:
+/// `h.join()` / `listener.accept()` block, while `PathBuf::join("x")`
+/// and iterator `join(", ")` take arguments and do not.
+const BLOCKING_EMPTY_PARENS: [&str; 2] = ["join", "accept"];
+/// Blocking method names that count with any argument list (channel
+/// ends and `Condvar::wait` take payloads/guards).
+const BLOCKING_ANY_PARENS: [&str; 4] = ["send", "recv", "recv_timeout", "wait"];
+/// The crate's sanctioned spawn seams (`thread-spawn` bans the rest).
+const SPAWN_CALLS: [&str; 3] = ["spawn_worker", "par_for", "par_map"];
+/// Constructor names excluded from the fn index outright: every
+/// `impl` block's `new`/`default` merges into one node, wiring the
+/// whole crate together through constructors and drowning the report
+/// (e.g. `from_bytes -> new -> pair -> .accept()`). Their bodies are
+/// still line-scanned for guards; only call edges through the merged
+/// NAME are dropped.
+const CTOR_NOISE: [&str; 2] = ["new", "default"];
+/// Dotted method names never resolved as intra-crate calls: std
+/// collection/iterator vocabulary whose name-level merge with crate
+/// fns (`GridRegistry::get`, `ShardRouter::drain`, …) would drown the
+/// report in false positives. Undotted calls still resolve.
+const STD_METHOD_NOISE: [&str; 36] = [
+    "clear", "clone", "cloned", "collect", "contains", "contains_key", "copied", "drain", "entry",
+    "extend", "filter", "first", "flatten", "get", "get_mut", "insert", "into_iter", "is_empty",
+    "iter", "iter_mut", "keys", "last", "len", "map", "max", "min", "next", "or_insert", "pop",
+    "push", "remove", "retain", "rev", "take", "to_string", "values",
+];
+
+/// A ranked mutex declaration (`AuditMutex::new("name", rank::R, …)`).
+#[derive(Clone)]
+pub struct LockNode {
+    /// Field/binding identifier at the construction site — the key the
+    /// acquisition scanner sees (`self.<ident>.lock()`).
+    pub ident: String,
+    /// The declared `&'static str` name.
+    pub name: String,
+    /// The `rank::` constant's identifier (empty for literal ranks).
+    pub rank_const: String,
+    pub rank: u32,
+    pub path: String,
+    /// 1-based declaration line.
+    pub line: usize,
+}
+
+/// A static acquisition edge: while `from` is held, `to` is acquired
+/// (directly, or transitively via the call at `path:line`).
+#[derive(Clone)]
+pub struct LockEdge {
+    pub from: String,
+    pub to: String,
+    pub path: String,
+    pub line: usize,
+}
+
+/// The crate's lock-rank graph, as printed by the `lock_graph_smoke`
+/// example.
+pub struct LockGraph {
+    /// Ranked mutexes, sorted by (rank, ident).
+    pub mutexes: Vec<LockNode>,
+    /// Acquisition edges, sorted by (from, to, path, line).
+    pub edges: Vec<LockEdge>,
+}
+
+pub struct CrateAnalysis {
+    pub findings: Vec<Finding>,
+    pub graph: LockGraph,
+}
+
+/// Run the three concurrency rules over the scanned tree, appending
+/// findings. `files` are (repo-relative path, scan) pairs.
+pub fn check_crate(files: &[(String, FileScan)], out: &mut Vec<Finding>) {
+    out.extend(analyze(files).findings);
+}
+
+/// The wrapper module itself is exempt from all three rules (it is the
+/// sanctioned site for raw `Mutex` access) and from the fn index.
+fn is_sync_module(path: &str) -> bool {
+    path == "util/sync.rs" || path.ends_with("/util/sync.rs")
+}
+
+pub fn analyze(files: &[(String, FileScan)]) -> CrateAnalysis {
+    let mut findings: Vec<Finding> = Vec::new();
+    let ranks = rank_table(files);
+    let mutexes = mutex_table(files, &ranks, &mut findings);
+    let toks: Vec<Vec<LineTok>> = files
+        .iter()
+        .map(|(path, fs)| {
+            if is_sync_module(path) {
+                fs.lines.iter().map(|_| LineTok::default()).collect()
+            } else {
+                fs.lines.iter().map(|l| line_tokens(&l.code)).collect()
+            }
+        })
+        .collect();
+    let fns = fn_index(files, &toks, &mutexes);
+    let mut edges: BTreeSet<(String, String, String, usize)> = BTreeSet::new();
+    for (fi, (path, fs)) in files.iter().enumerate() {
+        if is_sync_module(path) {
+            continue;
+        }
+        analyze_file(path, fs, &toks[fi], &mutexes, &fns, &mut findings, &mut edges);
+    }
+    let mut graph = LockGraph {
+        mutexes: mutexes.values().cloned().collect(),
+        edges: edges
+            .into_iter()
+            .map(|(from, to, path, line)| LockEdge { from, to, path, line })
+            .collect(),
+    };
+    graph.mutexes.sort_by(|a, b| (a.rank, a.ident.as_str()).cmp(&(b.rank, b.ident.as_str())));
+    CrateAnalysis { findings, graph }
+}
+
+/// DFS 3-color cycle check over the edge list (rank-agnostic, so the
+/// smoke example proves acyclicity independently of the rank compare).
+pub fn is_acyclic(g: &LockGraph) -> bool {
+    let mut adj: BTreeMap<&str, Vec<&str>> = BTreeMap::new();
+    for e in &g.edges {
+        adj.entry(e.from.as_str()).or_default().push(e.to.as_str());
+    }
+    // 0 = unvisited, 1 = on stack, 2 = done
+    let mut color: BTreeMap<&str, u8> = BTreeMap::new();
+    fn visit<'a>(
+        n: &'a str,
+        adj: &BTreeMap<&'a str, Vec<&'a str>>,
+        color: &mut BTreeMap<&'a str, u8>,
+    ) -> bool {
+        match color.get(n) {
+            Some(1) => return false,
+            Some(2) => return true,
+            _ => {}
+        }
+        color.insert(n, 1);
+        for m in adj.get(n).map(|v| v.as_slice()).unwrap_or(&[]) {
+            if !visit(m, adj, color) {
+                return false;
+            }
+        }
+        color.insert(n, 2);
+        true
+    }
+    let nodes: Vec<&str> = adj.keys().copied().collect();
+    nodes.into_iter().all(|n| visit(n, &adj, &mut color))
+}
+
+/// Render the lock-rank graph as stable JSON (hand-rolled, no serde).
+pub fn lock_graph_json(g: &LockGraph) -> String {
+    let esc = |s: &str| s.replace('\\', "\\\\").replace('"', "\\\"");
+    let mut s = String::from("{\n  \"mutexes\": [");
+    for (i, n) in g.mutexes.iter().enumerate() {
+        s.push_str(if i == 0 { "\n" } else { ",\n" });
+        s.push_str(&format!(
+            "    {{\"ident\": \"{}\", \"name\": \"{}\", \"rank_const\": \"{}\", \
+             \"rank\": {}, \"path\": \"{}\", \"line\": {}}}",
+            esc(&n.ident),
+            esc(&n.name),
+            esc(&n.rank_const),
+            n.rank,
+            esc(&n.path),
+            n.line,
+        ));
+    }
+    s.push_str(if g.mutexes.is_empty() { "],\n" } else { "\n  ],\n" });
+    s.push_str("  \"edges\": [");
+    for (i, e) in g.edges.iter().enumerate() {
+        s.push_str(if i == 0 { "\n" } else { ",\n" });
+        s.push_str(&format!(
+            "    {{\"from\": \"{}\", \"to\": \"{}\", \"path\": \"{}\", \"line\": {}}}",
+            esc(&e.from),
+            esc(&e.to),
+            esc(&e.path),
+            e.line,
+        ));
+    }
+    s.push_str(if g.edges.is_empty() { "]\n}\n" } else { "\n  ]\n}\n" });
+    s
+}
+
+// ---------------------------------------------------------------------
+// token extraction
+// ---------------------------------------------------------------------
+
+fn is_ident_start(c: char) -> bool {
+    c.is_ascii_alphabetic() || c == '_'
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Call-shaped tokens found on one cleaned line.
+#[derive(Default)]
+struct LineTok {
+    /// idents immediately followed by `(` that look like calls, minus
+    /// definitions, macros, blocking/spawn/acquire tokens, and dotted
+    /// std-vocabulary noise.
+    calls: Vec<String>,
+    /// First blocking operation on the line, display form (`.recv(`).
+    blocking: Option<String>,
+    /// Spawn-seam calls (`par_for`, …).
+    spawns: Vec<String>,
+    /// Guard acquisitions: (mutex ident, char offset just past the
+    /// token's closing paren — used to decide let-binding vs temporary).
+    acquires: Vec<(String, usize)>,
+}
+
+fn line_tokens(code: &str) -> LineTok {
+    let chars: Vec<char> = code.chars().collect();
+    let mut t = LineTok::default();
+    let mut prev_word: Option<String> = None;
+    let mut i = 0usize;
+    while i < chars.len() {
+        if !is_ident_start(chars[i]) {
+            i += 1;
+            continue;
+        }
+        let start = i;
+        while i < chars.len() && is_ident(chars[i]) {
+            i += 1;
+        }
+        // a digit-led run can't start here (is_ident_start gate), so
+        // this is a real identifier
+        let word: String = chars[start..i].iter().collect();
+        let open_paren = chars.get(i) == Some(&'(');
+        let empty_parens = open_paren && chars.get(i + 1) == Some(&')');
+        let dotted = start > 0 && chars[start - 1] == '.';
+        let pathed = start > 0 && chars[start - 1] == ':';
+        let is_def = prev_word.as_deref() == Some("fn");
+        let is_macro = chars.get(i) == Some(&'!');
+        prev_word = Some(word.clone());
+        if !open_paren || is_def || is_macro {
+            continue;
+        }
+        let w = word.as_str();
+        if dotted && empty_parens && matches!(w, "lock" | "read" | "write") {
+            if let Some(ident) = receiver_ident(&chars, start) {
+                t.acquires.push((ident, i + 2));
+            }
+            continue;
+        }
+        if w == "lock_or_recover" {
+            if let Some((ident, end)) = arg_ident(&chars, i) {
+                t.acquires.push((ident, end));
+            }
+            continue;
+        }
+        if dotted && empty_parens && BLOCKING_EMPTY_PARENS.contains(&w) {
+            if t.blocking.is_none() {
+                t.blocking = Some(format!(".{w}()"));
+            }
+            continue;
+        }
+        if (dotted || pathed) && BLOCKING_ANY_PARENS.contains(&w) {
+            if t.blocking.is_none() {
+                t.blocking = Some(format!(".{w}("));
+            }
+            continue;
+        }
+        if SPAWN_CALLS.contains(&w) {
+            t.spawns.push(word);
+            continue;
+        }
+        if dotted && STD_METHOD_NOISE.contains(&w) {
+            continue;
+        }
+        t.calls.push(word);
+    }
+    t
+}
+
+/// Last path segment of the receiver chain before a `.lock()`-style
+/// token: `self.planes.lock()` → `planes`. None when the receiver is
+/// not a plain ident chain (`make().lock()`).
+fn receiver_ident(chars: &[char], dot_word_start: usize) -> Option<String> {
+    let mut j = dot_word_start.checked_sub(1)?; // the '.'
+    let mut ident: Vec<char> = Vec::new();
+    while j > 0 {
+        j -= 1;
+        if is_ident(chars[j]) {
+            ident.push(chars[j]);
+        } else {
+            break;
+        }
+    }
+    if ident.is_empty() {
+        return None;
+    }
+    Some(ident.into_iter().rev().collect())
+}
+
+/// Trailing ident inside `lock_or_recover(<expr>)`: strips `&`/`self.`
+/// paths — `lock_or_recover(&self.cache)` → (`cache`, offset past `)`).
+fn arg_ident(chars: &[char], open: usize) -> Option<(String, usize)> {
+    let mut depth = 0usize;
+    let mut j = open;
+    let mut last_ident_end = None;
+    while j < chars.len() {
+        match chars[j] {
+            '(' => depth += 1,
+            ')' => {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            }
+            c if is_ident(c) => last_ident_end = Some(j),
+            _ => {}
+        }
+        j += 1;
+    }
+    let end = last_ident_end?;
+    let mut s = end;
+    while s > 0 && is_ident(chars[s - 1]) {
+        s -= 1;
+    }
+    let ident: String = chars[s..=end].iter().collect();
+    if ident.chars().next().map(is_ident_start) != Some(true) {
+        return None;
+    }
+    Some((ident, j + 1))
+}
+
+// ---------------------------------------------------------------------
+// rank and mutex tables
+// ---------------------------------------------------------------------
+
+/// Parse `pub const NAME: u32 = N;` lines out of `util/sync.rs`.
+fn rank_table(files: &[(String, FileScan)]) -> BTreeMap<String, u32> {
+    let mut out = BTreeMap::new();
+    for (path, fs) in files {
+        if !is_sync_module(path) {
+            continue;
+        }
+        for l in &fs.lines {
+            let code = l.code.trim();
+            let Some(rest) = code.strip_prefix("pub const ") else { continue };
+            let Some((name, tail)) = rest.split_once(':') else { continue };
+            if !tail.trim_start().starts_with("u32") {
+                continue;
+            }
+            let Some((_, val)) = tail.split_once('=') else { continue };
+            let val = val.trim().trim_end_matches(';').trim().replace('_', "");
+            if let Ok(v) = val.parse::<u32>() {
+                out.insert(name.trim().to_string(), v);
+            }
+        }
+    }
+    out
+}
+
+/// Index every `AuditMutex::new` / `::with_watchdog_ms` construction
+/// site: ident ← text before the call, name ← first string literal
+/// within 4 lines, rank ← `rank::CONST` within 4 lines (or a literal
+/// second argument on a single-line construction).
+fn mutex_table(
+    files: &[(String, FileScan)],
+    ranks: &BTreeMap<String, u32>,
+    findings: &mut Vec<Finding>,
+) -> BTreeMap<String, LockNode> {
+    let mut out: BTreeMap<String, LockNode> = BTreeMap::new();
+    for (path, fs) in files {
+        if is_sync_module(path) {
+            continue;
+        }
+        for (i, l) in fs.lines.iter().enumerate() {
+            if l.in_test {
+                continue;
+            }
+            let pos = ["AuditMutex::new(", "AuditMutex::with_watchdog_ms("]
+                .iter()
+                .find_map(|pat| l.code.find(pat).map(|p| (p, pat.len())));
+            let Some((pos, patlen)) = pos else { continue };
+            let ident = preceding_ident(&l.code[..pos]);
+            let name = fs
+                .strings
+                .iter()
+                .find(|(sl, _)| (i..i + 4).contains(sl))
+                .map(|(_, s)| s.trim().to_string())
+                .unwrap_or_default();
+            let rank = resolve_rank(fs, i, pos + patlen, ranks);
+            let Some((rank_const, rank)) = rank else {
+                findings.push(mk(
+                    path,
+                    fs,
+                    i,
+                    "lock-order",
+                    "AuditMutex declaration without a resolvable rank \
+                     (`rank::CONST` or integer literal)"
+                        .to_string(),
+                ));
+                continue;
+            };
+            let Some(ident) = ident else {
+                findings.push(mk(
+                    path,
+                    fs,
+                    i,
+                    "lock-order",
+                    "AuditMutex declaration without a recognizable field/binding ident"
+                        .to_string(),
+                ));
+                continue;
+            };
+            match out.get(&ident) {
+                Some(prev) if prev.rank != rank => {
+                    findings.push(mk(
+                        path,
+                        fs,
+                        i,
+                        "lock-order",
+                        format!(
+                            "mutex ident `{ident}` declared with conflicting ranks \
+                             ({} here vs {} at {}:{})",
+                            rank, prev.rank, prev.path, prev.line
+                        ),
+                    ));
+                }
+                Some(_) => {}
+                None => {
+                    out.insert(
+                        ident.clone(),
+                        LockNode {
+                            ident,
+                            name,
+                            rank_const,
+                            rank,
+                            path: path.clone(),
+                            line: i + 1,
+                        },
+                    );
+                }
+            }
+        }
+    }
+    out
+}
+
+/// `planes: AuditMutex::new(…)` / `let m = AuditMutex::new(…)` → the
+/// ident left of the `:` / `=`.
+fn preceding_ident(before: &str) -> Option<String> {
+    let before = before.trim_end();
+    let before = before.strip_suffix(':').or_else(|| before.strip_suffix('=')).unwrap_or(before);
+    let before = before.trim_end();
+    let end = before.len();
+    let start = before
+        .char_indices()
+        .rev()
+        .take_while(|(_, c)| is_ident(*c))
+        .last()
+        .map(|(p, _)| p)?;
+    let ident = &before[start..end];
+    if ident.is_empty() || !ident.chars().next().map(is_ident_start).unwrap_or(false) {
+        return None;
+    }
+    Some(ident.to_string())
+}
+
+/// The rank argument: `rank::CONST` on the construction line or the 3
+/// below it (multi-line rustfmt layout), else a `u32` literal second
+/// argument on a single-line construction.
+fn resolve_rank(
+    fs: &FileScan,
+    line: usize,
+    after: usize,
+    ranks: &BTreeMap<String, u32>,
+) -> Option<(String, u32)> {
+    for (j, l) in fs.lines.iter().enumerate().skip(line).take(4) {
+        let code = if j == line { &l.code[after.min(l.code.len())..] } else { &l.code[..] };
+        if let Some(p) = code.find("rank::") {
+            let rest = &code[p + "rank::".len()..];
+            let name: String = rest.chars().take_while(|c| is_ident(*c)).collect();
+            if let Some(v) = ranks.get(&name) {
+                return Some((name, *v));
+            }
+            return None; // names a constant the table doesn't declare
+        }
+    }
+    // literal rank: second comma-separated argument on the same line
+    let code = &fs.lines[line].code[after.min(fs.lines[line].code.len())..];
+    let second = code.split(',').nth(1)?.trim();
+    second.parse::<u32>().ok().map(|v| (String::new(), v))
+}
+
+// ---------------------------------------------------------------------
+// fn index and propagation
+// ---------------------------------------------------------------------
+
+#[derive(Default)]
+struct FnData {
+    /// Blocking witness: `[callee, callee, …, token]` — None if the fn
+    /// cannot block. Direct blockers have a 1-element chain.
+    chain: Option<Vec<String>>,
+    /// Called idents (resolved against the index later).
+    calls: BTreeSet<String>,
+    /// Ranked mutex idents acquired, direct then (after propagation)
+    /// transitive.
+    acquires: BTreeSet<String>,
+}
+
+fn fn_index(
+    files: &[(String, FileScan)],
+    toks: &[Vec<LineTok>],
+    mutexes: &BTreeMap<String, LockNode>,
+) -> BTreeMap<String, FnData> {
+    let mut fns: BTreeMap<String, FnData> = BTreeMap::new();
+    for (fi, (path, fs)) in files.iter().enumerate() {
+        if is_sync_module(path) {
+            continue;
+        }
+        for (i, l) in fs.lines.iter().enumerate() {
+            if l.in_test {
+                continue;
+            }
+            let Some(name) = &l.fn_name else { continue };
+            let tk = &toks[fi][i];
+            let d = fns.entry(name.clone()).or_default();
+            d.calls.extend(tk.calls.iter().cloned());
+            if d.chain.is_none() {
+                if let Some(b) = &tk.blocking {
+                    d.chain = Some(vec![b.clone()]);
+                }
+            }
+            for (m, _) in &tk.acquires {
+                if mutexes.contains_key(m) {
+                    d.acquires.insert(m.clone());
+                }
+            }
+        }
+    }
+    for noise in CTOR_NOISE {
+        fns.remove(noise);
+    }
+    // keep only calls that resolve to indexed fns (and not self-calls)
+    let names: BTreeSet<String> = fns.keys().cloned().collect();
+    for (name, d) in fns.iter_mut() {
+        d.calls.retain(|c| names.contains(c) && c != name);
+    }
+    // propagate blocking witnesses to fixpoint: prefer the callee with
+    // the shortest (then lexicographically first) chain, so messages
+    // are deterministic and minimal
+    loop {
+        let mut updates: Vec<(String, Vec<String>)> = Vec::new();
+        for (name, d) in &fns {
+            if d.chain.is_some() {
+                continue;
+            }
+            let best = d
+                .calls
+                .iter()
+                .filter_map(|c| fns[c].chain.as_ref().map(|ch| (ch.len(), c.clone(), ch.clone())))
+                .min();
+            if let Some((_, callee, mut chain)) = best {
+                let mut full = vec![callee];
+                full.append(&mut chain);
+                updates.push((name.clone(), full));
+            }
+        }
+        if updates.is_empty() {
+            break;
+        }
+        for (name, chain) in updates {
+            fns.get_mut(&name).expect("indexed fn").chain = Some(chain);
+        }
+    }
+    // propagate acquire sets to fixpoint (monotone union)
+    loop {
+        let mut grew = false;
+        let snapshot: Vec<(String, BTreeSet<String>)> = fns
+            .iter()
+            .map(|(n, d)| {
+                let mut acc = d.acquires.clone();
+                for c in &d.calls {
+                    acc.extend(fns[c].acquires.iter().cloned());
+                }
+                (n.clone(), acc)
+            })
+            .collect();
+        for (name, acc) in snapshot {
+            let d = fns.get_mut(&name).expect("indexed fn");
+            if acc.len() > d.acquires.len() {
+                d.acquires = acc;
+                grew = true;
+            }
+        }
+        if !grew {
+            break;
+        }
+    }
+    fns
+}
+
+// ---------------------------------------------------------------------
+// guard ranges and rule checks
+// ---------------------------------------------------------------------
+
+struct Range {
+    ident: String,
+    acq_line: usize,
+    /// first line (inclusive) on which the guard is considered live
+    start: usize,
+    /// first line (exclusive) on which it is dead
+    end: usize,
+}
+
+fn mk(path: &str, fs: &FileScan, idx: usize, rule: &'static str, message: String) -> Finding {
+    Finding {
+        rule,
+        path: path.to_string(),
+        line: idx + 1,
+        message,
+        source: fs.lines[idx].raw.clone(),
+    }
+}
+
+/// `let g = …` with a lowercase plain-ident pattern (not `Some(_)` /
+/// tuples / `if let`).
+fn let_binding(trimmed: &str) -> Option<String> {
+    let rest = trimmed.strip_prefix("let ")?;
+    let rest = rest.strip_prefix("mut ").unwrap_or(rest);
+    let ident: String = rest.chars().take_while(|c| is_ident(*c)).collect();
+    let first = ident.chars().next()?;
+    if !is_ident_start(first) || first.is_ascii_uppercase() {
+        return None;
+    }
+    Some(ident)
+}
+
+/// `drop(g)` / `std::mem::drop(g)` with a word boundary before `drop`.
+fn drops_ident(code: &str, ident: &str) -> bool {
+    let needle = format!("drop({ident})");
+    let bytes = code.as_bytes();
+    for (at, _) in code.match_indices(&needle) {
+        let before_ok = at == 0 || !bytes[at - 1].is_ascii_alphanumeric() && bytes[at - 1] != b'_';
+        if before_ok {
+            return true;
+        }
+    }
+    false
+}
+
+fn analyze_file(
+    path: &str,
+    fs: &FileScan,
+    toks: &[LineTok],
+    mutexes: &BTreeMap<String, LockNode>,
+    fns: &BTreeMap<String, FnData>,
+    findings: &mut Vec<Finding>,
+    edges: &mut BTreeSet<(String, String, String, usize)>,
+) {
+    let n = fs.lines.len();
+    // brace depth at the start/end of every line (cleaned code, so
+    // braces inside strings/comments never count)
+    let mut depth_start = vec![0i32; n];
+    let mut depth_end = vec![0i32; n];
+    let mut d = 0i32;
+    for (i, l) in fs.lines.iter().enumerate() {
+        depth_start[i] = d;
+        for c in l.code.chars() {
+            match c {
+                '{' => d += 1,
+                '}' => d -= 1,
+                _ => {}
+            }
+        }
+        depth_end[i] = d;
+    }
+
+    let mut ranges: Vec<Range> = Vec::new();
+    for i in 0..n {
+        if fs.lines[i].in_test {
+            continue;
+        }
+        for (ident, tok_end) in &toks[i].acquires {
+            let code = &fs.lines[i].code;
+            let tail = code[(*tok_end).min(code.len())..].trim();
+            let bound =
+                let_binding(code.trim()).filter(|_| tail.is_empty() || tail == ";");
+            let (start, end) = match bound {
+                Some(b) => {
+                    // named guard: live until the enclosing block
+                    // closes, an explicit drop, or end of file
+                    let mut end = n;
+                    for (j, le) in depth_end.iter().enumerate().skip(i + 1) {
+                        if *le < depth_start[i]
+                            || drops_ident(&fs.lines[j].code, &b)
+                            || drops_ident(&fs.lines[j].code, ident)
+                        {
+                            end = j;
+                            break;
+                        }
+                    }
+                    (i + 1, end)
+                }
+                None => {
+                    // temporary: live to the end of the statement, or
+                    // of the block the statement opens (`if let … {`)
+                    let mut end = i + 1;
+                    for j in i..n {
+                        end = j + 1;
+                        let t = fs.lines[j].code.trim_end();
+                        let closes = depth_end[j] < depth_start[i];
+                        if closes
+                            || (depth_end[j] <= depth_start[i]
+                                && (t.ends_with(';') || t.ends_with('}')))
+                        {
+                            break;
+                        }
+                    }
+                    (i, end)
+                }
+            };
+            ranges.push(Range { ident: ident.clone(), acq_line: i, start, end });
+        }
+    }
+    if ranges.is_empty() {
+        return;
+    }
+
+    let mut seen: BTreeSet<String> = BTreeSet::new();
+    for li in 0..n {
+        if fs.lines[li].in_test {
+            continue;
+        }
+        let active: Vec<&Range> =
+            ranges.iter().filter(|r| r.start <= li && li < r.end).collect();
+        if active.is_empty() {
+            continue;
+        }
+        let inner = active.iter().max_by_key(|r| r.acq_line).expect("non-empty");
+        let tk = &toks[li];
+        if let Some(tok) = &tk.blocking {
+            if seen.insert(format!("{li}|block")) {
+                findings.push(mk(
+                    path,
+                    fs,
+                    li,
+                    "blocking-under-lock",
+                    format!(
+                        "blocking `{tok}` while guard `{}` (acquired line {}) is held",
+                        inner.ident,
+                        inner.acq_line + 1
+                    ),
+                ));
+            }
+        }
+        for sp in &tk.spawns {
+            if seen.insert(format!("{li}|spawn")) {
+                findings.push(mk(
+                    path,
+                    fs,
+                    li,
+                    "guard-across-spawn",
+                    format!(
+                        "`{sp}` spawn boundary while guard `{}` (acquired line {}) is live",
+                        inner.ident,
+                        inner.acq_line + 1
+                    ),
+                ));
+            }
+        }
+        for c in &tk.calls {
+            let Some(fd) = fns.get(c) else { continue };
+            if let Some(chain) = &fd.chain {
+                if seen.insert(format!("{li}|block")) {
+                    let display = std::iter::once(c.as_str())
+                        .chain(chain.iter().map(|s| s.as_str()))
+                        .collect::<Vec<_>>()
+                        .join(" -> ");
+                    findings.push(mk(
+                        path,
+                        fs,
+                        li,
+                        "blocking-under-lock",
+                        format!(
+                            "call to `{c}` may block ({display}) while guard `{}` \
+                             (acquired line {}) is held",
+                            inner.ident,
+                            inner.acq_line + 1
+                        ),
+                    ));
+                }
+            }
+            for m in &fd.acquires {
+                for g in &active {
+                    check_edge(path, fs, li, g, m, Some(c), mutexes, findings, edges, &mut seen);
+                }
+            }
+        }
+        for (m, _) in &tk.acquires {
+            for g in &active {
+                if g.acq_line == li {
+                    continue;
+                }
+                check_edge(path, fs, li, g, m, None, mutexes, findings, edges, &mut seen);
+            }
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn check_edge(
+    path: &str,
+    fs: &FileScan,
+    li: usize,
+    guard: &Range,
+    acquired: &str,
+    via: Option<&str>,
+    mutexes: &BTreeMap<String, LockNode>,
+    findings: &mut Vec<Finding>,
+    edges: &mut BTreeSet<(String, String, String, usize)>,
+    seen: &mut BTreeSet<String>,
+) {
+    let (Some(held), Some(next)) = (mutexes.get(&guard.ident), mutexes.get(acquired)) else {
+        return;
+    };
+    edges.insert((held.ident.clone(), next.ident.clone(), path.to_string(), li + 1));
+    if !seen.insert(format!("{li}|order|{}|{}", held.ident, next.ident)) {
+        return;
+    }
+    let via_txt = via.map(|c| format!(" via call to `{c}`")).unwrap_or_default();
+    if held.ident == next.ident {
+        findings.push(mk(
+            path,
+            fs,
+            li,
+            "lock-order",
+            format!(
+                "re-entrant acquisition of `{}` (rank {}){via_txt} — self-deadlock",
+                held.ident, held.rank
+            ),
+        ));
+    } else if next.rank <= held.rank {
+        findings.push(mk(
+            path,
+            fs,
+            li,
+            "lock-order",
+            format!(
+                "lock-order inversion: acquiring `{}` (rank {}){via_txt} while holding \
+                 `{}` (rank {}) — ranks must strictly increase",
+                next.ident, next.rank, held.ident, held.rank
+            ),
+        ));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::audit::scan::scan;
+
+    const SYNC_FIXTURE: &str = "\
+pub mod rank {
+    pub const A: u32 = 10;
+    pub const B: u32 = 20;
+}
+";
+
+    fn run(files: &[(&str, &str)]) -> CrateAnalysis {
+        let scanned: Vec<(String, FileScan)> =
+            files.iter().map(|(p, s)| (p.to_string(), scan(s))).collect();
+        analyze(&scanned)
+    }
+
+    fn rules_of(a: &CrateAnalysis) -> Vec<&'static str> {
+        a.findings.iter().map(|f| f.rule).collect()
+    }
+
+    #[test]
+    fn direct_blocking_under_let_guard() {
+        let src = "\
+use std::sync::Mutex;
+pub fn bad(m: &Mutex<u32>, rx: &std::sync::mpsc::Receiver<u32>) -> u32 {
+    let g = lock_or_recover(m);
+    let v = rx.recv().unwrap_or(0);
+    *g + v
+}
+";
+        let a = run(&[("serve/x.rs", src)]);
+        assert_eq!(rules_of(&a), vec!["blocking-under-lock"]);
+        assert_eq!(a.findings[0].line, 4);
+        assert!(a.findings[0].message.contains("`.recv(`"));
+    }
+
+    #[test]
+    fn guard_dropped_before_blocking_is_clean() {
+        let src = "\
+pub fn ok(m: &std::sync::Mutex<u32>, rx: &std::sync::mpsc::Receiver<u32>) -> u32 {
+    let g = lock_or_recover(m);
+    let v = *g;
+    drop(g);
+    v + rx.recv().unwrap_or(0)
+}
+";
+        let a = run(&[("serve/x.rs", src)]);
+        assert!(a.findings.is_empty(), "{:?}", a.findings);
+    }
+
+    #[test]
+    fn block_scoped_guard_ends_at_close_brace() {
+        let src = "\
+pub fn ok(m: &std::sync::Mutex<u32>, rx: &std::sync::mpsc::Receiver<u32>) -> u32 {
+    let v = {
+        let g = lock_or_recover(m);
+        *g
+    };
+    v + rx.recv().unwrap_or(0)
+}
+";
+        let a = run(&[("serve/x.rs", src)]);
+        assert!(a.findings.is_empty(), "{:?}", a.findings);
+    }
+
+    #[test]
+    fn chained_temporary_does_not_bind_the_guard() {
+        // the guard in `let v = ….lock().len();` dies at the `;`
+        let src = "\
+pub fn ok(m: &std::sync::Mutex<Vec<u32>>, rx: &std::sync::mpsc::Receiver<u32>) -> usize {
+    let v = m.lock().len();
+    v + rx.recv().unwrap_or(0) as usize
+}
+";
+        let a = run(&[("serve/x.rs", src)]);
+        assert!(a.findings.is_empty(), "{:?}", a.findings);
+    }
+
+    #[test]
+    fn if_let_temporary_covers_its_block() {
+        let src = "\
+pub fn bad(m: &std::sync::Mutex<Vec<u32>>, rx: &std::sync::mpsc::Receiver<u32>) -> u32 {
+    if let Some(v) = m.lock().first() {
+        return *v + rx.recv().unwrap_or(0);
+    }
+    0
+}
+";
+        let a = run(&[("serve/x.rs", src)]);
+        assert_eq!(rules_of(&a), vec!["blocking-under-lock"]);
+        assert_eq!(a.findings[0].line, 3);
+    }
+
+    #[test]
+    fn transitive_blocking_through_two_calls() {
+        let src = "\
+pub fn bad(m: &std::sync::Mutex<u32>) -> u32 {
+    let g = lock_or_recover(m);
+    *g + helper()
+}
+pub fn helper() -> u32 {
+    deeper()
+}
+pub fn deeper() -> u32 {
+    let h = spawn_worker(1);
+    h.join().unwrap_or(0)
+}
+";
+        let a = run(&[("serve/x.rs", src)]);
+        let block: Vec<_> =
+            a.findings.iter().filter(|f| f.rule == "blocking-under-lock").collect();
+        assert_eq!(block.len(), 1, "{:?}", a.findings);
+        assert!(block[0].message.contains("helper -> deeper -> .join()"), "{}", block[0].message);
+    }
+
+    #[test]
+    fn spawn_under_guard_detected() {
+        let src = "\
+pub fn bad(m: &std::sync::Mutex<u32>) {
+    let g = lock_or_recover(m);
+    par_for(4, |_| {});
+    drop(g);
+}
+pub fn ok(m: &std::sync::Mutex<u32>) {
+    {
+        let g = lock_or_recover(m);
+        drop(g);
+    }
+    par_for(4, |_| {});
+}
+";
+        let a = run(&[("serve/x.rs", src)]);
+        assert_eq!(rules_of(&a), vec!["guard-across-spawn"]);
+        assert_eq!(a.findings[0].line, 3);
+    }
+
+    #[test]
+    fn lock_order_inversion_and_rank_graph() {
+        let src = "\
+pub struct S {
+    lo: AuditMutex<u32>,
+    hi: AuditMutex<u32>,
+}
+impl S {
+    pub fn new() -> S {
+        S {
+            lo: AuditMutex::new(\"t.lo\", rank::A, 0),
+            hi: AuditMutex::new(\"t.hi\", rank::B, 0),
+        }
+    }
+    pub fn ordered(&self) -> u32 {
+        let a = self.lo.lock();
+        let b = self.hi.lock();
+        *a + *b
+    }
+    pub fn inverted(&self) -> u32 {
+        let b = self.hi.lock();
+        let a = self.lo.lock();
+        *a + *b
+    }
+}
+";
+        let a = run(&[("serve/x.rs", src), ("util/sync.rs", SYNC_FIXTURE)]);
+        assert_eq!(rules_of(&a), vec!["lock-order"]);
+        assert_eq!(a.findings[0].line, 19);
+        assert!(a.findings[0].message.contains("inversion"), "{}", a.findings[0].message);
+        assert_eq!(a.graph.mutexes.len(), 2);
+        assert_eq!(a.graph.mutexes[0].ident, "lo");
+        assert_eq!(a.graph.mutexes[0].rank, 10);
+        assert_eq!(a.graph.mutexes[1].rank_const, "B");
+        // both directions were exercised, so the edge graph is cyclic
+        assert_eq!(a.graph.edges.len(), 2);
+        assert!(!is_acyclic(&a.graph));
+        let json = lock_graph_json(&a.graph);
+        assert!(json.contains("\"ident\": \"lo\""), "{json}");
+        assert!(json.contains("\"rank\": 20"), "{json}");
+    }
+
+    #[test]
+    fn transitive_lock_order_via_call() {
+        let src = "\
+pub struct S {
+    lo: AuditMutex<u32>,
+    hi: AuditMutex<u32>,
+}
+impl S {
+    pub fn mk() -> S {
+        S {
+            lo: AuditMutex::new(\"t.lo\", rank::A, 0),
+            hi: AuditMutex::new(\"t.hi\", rank::B, 0),
+        }
+    }
+    pub fn outer(&self) -> u32 {
+        let b = self.hi.lock();
+        *b + self.takes_lo()
+    }
+    pub fn takes_lo(&self) -> u32 {
+        let a = self.lo.lock();
+        *a
+    }
+}
+";
+        let a = run(&[("serve/x.rs", src), ("util/sync.rs", SYNC_FIXTURE)]);
+        assert_eq!(rules_of(&a), vec!["lock-order"]);
+        assert!(a.findings[0].message.contains("via call to `takes_lo`"));
+    }
+
+    #[test]
+    fn reentrant_edge_detected() {
+        let src = "\
+pub struct S {
+    lo: AuditMutex<u32>,
+}
+impl S {
+    pub fn mk() -> S {
+        S { lo: AuditMutex::new(\"t.lo\", rank::A, 0) }
+    }
+    pub fn twice(&self) -> u32 {
+        let a = self.lo.lock();
+        let b = self.lo.lock();
+        *a + *b
+    }
+}
+";
+        let a = run(&[("serve/x.rs", src), ("util/sync.rs", SYNC_FIXTURE)]);
+        assert_eq!(rules_of(&a), vec!["lock-order"]);
+        assert!(a.findings[0].message.contains("re-entrant"));
+    }
+
+    #[test]
+    fn multi_line_construction_and_literal_ranks_resolve() {
+        let src = "\
+pub struct S {
+    cache: AuditMutex<u32>,
+    aux: AuditMutex<u32>,
+}
+pub fn mk() -> S {
+    S {
+        cache: AuditMutex::new(
+            \"t.cache\",
+            rank::A,
+            0,
+        ),
+        aux: AuditMutex::new(\"t.aux\", 33, 0),
+    }
+}
+";
+        let a = run(&[("serve/x.rs", src), ("util/sync.rs", SYNC_FIXTURE)]);
+        assert!(a.findings.is_empty(), "{:?}", a.findings);
+        assert_eq!(a.graph.mutexes.len(), 2);
+        assert_eq!(a.graph.mutexes[0].name, "t.cache");
+        assert_eq!(a.graph.mutexes[1].rank, 33);
+        assert_eq!(a.graph.mutexes[1].rank_const, "");
+    }
+
+    #[test]
+    fn unresolvable_rank_is_a_finding() {
+        let src = "\
+pub fn mk() {
+    let m = AuditMutex::new(\"t.m\", rank::MISSING, 0u32);
+    let _ = m;
+}
+";
+        let a = run(&[("serve/x.rs", src), ("util/sync.rs", SYNC_FIXTURE)]);
+        assert_eq!(rules_of(&a), vec!["lock-order"]);
+        assert!(a.findings[0].message.contains("resolvable rank"));
+    }
+
+    #[test]
+    fn sync_module_and_tests_are_exempt() {
+        let src = "\
+use std::sync::Mutex;
+pub fn inside(m: &Mutex<u32>, rx: &std::sync::mpsc::Receiver<u32>) -> u32 {
+    let g = m.lock();
+    *g + rx.recv().unwrap_or(0)
+}
+";
+        // the same violation in util/sync.rs (exempt) and in test code
+        let test_src = "\
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t(m: &std::sync::Mutex<u32>, rx: &std::sync::mpsc::Receiver<u32>) {
+        let g = m.lock();
+        let _ = rx.recv();
+        drop(g);
+    }
+}
+";
+        let a = run(&[("util/sync.rs", src), ("serve/t.rs", test_src)]);
+        assert!(a.findings.is_empty(), "{:?}", a.findings);
+    }
+
+    #[test]
+    fn near_miss_tokens_do_not_fire() {
+        let src = "\
+use std::path::Path;
+pub fn ok(m: &std::sync::Mutex<Vec<String>>, p: &Path) -> String {
+    let g = lock_or_recover(m);
+    let joined = p.join(\"part\");
+    let s = g.join(\", \");
+    let _ = x.recv_config();
+    format!(\"{}{}\", joined.display(), s)
+}
+";
+        // `.join(` with args and `recv_config` must not match; the
+        // dotted `.join(\", \")` takes an argument too
+        let a = run(&[("serve/x.rs", src)]);
+        assert!(a.findings.is_empty(), "{:?}", a.findings);
+    }
+}

@@ -7,10 +7,13 @@
 //!
 //! Exit policy (see `bin/audit.rs`): 0 when every finding is
 //! allowlisted, 1 otherwise; stale allowlist entries warn on stderr but
-//! do not fail, so deleting the last use of a grandfathered line does
-//! not break the build. Rules and rationale are documented in
-//! PERF.md §11.
+//! do not fail (unless `--strict-allowlist` is passed, as CI does), so
+//! deleting the last use of a grandfathered line does not break a local
+//! build. Per-file rules and rationale are documented in PERF.md §11;
+//! the cross-file concurrency pass in [`graph`] is documented in
+//! PERF.md §14.
 
+pub mod graph;
 pub mod rules;
 pub mod scan;
 
@@ -46,11 +49,26 @@ struct AllowEntry {
     source: String,
 }
 
-pub fn run_audit(cfg: &AuditConfig) -> Result<AuditReport> {
+/// Walk `src_root` and lexically scan every `.rs` file, returning
+/// sorted (repo-relative path, scan) pairs — the input shape both the
+/// per-file rules and the crate-wide [`graph`] pass consume. Public so
+/// the `lock_graph_smoke` example can reuse the exact audit view of
+/// the tree.
+pub fn scan_tree(src_root: &Path) -> Result<Vec<(String, scan::FileScan)>> {
     let mut files: Vec<String> = Vec::new();
-    collect_rs(&cfg.src_root, &cfg.src_root, &mut files)?;
+    collect_rs(src_root, src_root, &mut files)?;
     files.sort();
+    let mut out = Vec::with_capacity(files.len());
+    for rel in files {
+        let path = src_root.join(&rel);
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        out.push((rel, scan::scan(&text)));
+    }
+    Ok(out)
+}
 
+pub fn run_audit(cfg: &AuditConfig) -> Result<AuditReport> {
     let knobs: Option<Vec<String>> = match &cfg.perf_md {
         Some(p) => {
             let md = std::fs::read_to_string(p)
@@ -60,14 +78,12 @@ pub fn run_audit(cfg: &AuditConfig) -> Result<AuditReport> {
         None => None,
     };
 
+    let scans = scan_tree(&cfg.src_root)?;
     let mut findings: Vec<Finding> = Vec::new();
-    for rel in &files {
-        let path = cfg.src_root.join(rel);
-        let text = std::fs::read_to_string(&path)
-            .with_context(|| format!("reading {}", path.display()))?;
-        let fs = scan::scan(&text);
-        rules::check_file(rel, &fs, knobs.as_deref(), &mut findings);
+    for (rel, fs) in &scans {
+        rules::check_file(rel, fs, knobs.as_deref(), &mut findings);
     }
+    graph::check_crate(&scans, &mut findings);
     findings.sort_by(|a, b| {
         (a.path.as_str(), a.line, a.rule).cmp(&(b.path.as_str(), b.line, b.rule))
     });
@@ -94,13 +110,13 @@ pub fn run_audit(cfg: &AuditConfig) -> Result<AuditReport> {
         });
         for (e, u) in entries.iter().zip(&used) {
             if !u {
-                stale_allowlist.push(format!("{}\t{}\t{}", e.rule, e.path, e.source));
+                stale_allowlist.push(format!("[{}] {}: {}", e.rule, e.path, e.source));
             }
         }
     }
 
     Ok(AuditReport {
-        files_scanned: files.len(),
+        files_scanned: scans.len(),
         allowlisted,
         stale_allowlist,
         findings,

@@ -68,6 +68,7 @@ const WALL_CLOCK_TOKENS: [&str; 3] = ["Instant::now", "SystemTime", "thread::sle
 pub fn check_file(rel: &str, fs: &FileScan, knobs: Option<&[String]>, out: &mut Vec<Finding>) {
     rule_unsafe(rel, fs, out);
     rule_panic_path(rel, fs, out);
+    rule_lock_unwrap(rel, fs, out);
     rule_parse_index(rel, fs, out);
     rule_thread_spawn(rel, fs, out);
     rule_wall_clock(rel, fs, out);
@@ -210,6 +211,34 @@ fn rule_panic_path(rel: &str, fs: &FileScan, out: &mut Vec<Finding>) {
                 fs,
                 i,
                 format!("panicking call `{tok}` on a serving/parse path"),
+            ));
+        }
+    }
+}
+
+/// panic-path (lock poisoning): raw `.lock().unwrap()` anywhere in
+/// non-test code converts one panicked thread into a cascade — use
+/// `util::sync::lock_or_recover` (or a ranked `AuditMutex`) instead.
+/// `util/sync.rs` itself is exempt (it is the sanctioned wrapper), as
+/// are files already under the full panic-path scope above (the general
+/// `.unwrap()` ban there reports the same line — one finding, not two).
+fn rule_lock_unwrap(rel: &str, fs: &FileScan, out: &mut Vec<Finding>) {
+    if rel.starts_with("serve/") || PANIC_SCOPE_FILES.contains(&rel) || rel == "util/sync.rs" {
+        return;
+    }
+    for (i, l) in fs.lines.iter().enumerate() {
+        if l.in_test {
+            continue;
+        }
+        if l.code.contains(".lock().unwrap()") {
+            out.push(finding(
+                "panic-path",
+                rel,
+                fs,
+                i,
+                "raw `.lock().unwrap()` propagates poisoning — use \
+                 `util::sync::lock_or_recover`"
+                    .to_string(),
             ));
         }
     }

@@ -1,9 +1,12 @@
 //! Repo lint driver: `cargo run --release --bin audit`.
 //!
-//! Walks `rust/src`, applies the rules in `higgs::audit::rules`,
-//! subtracts `rust/audit_allowlist.txt`, prints the JSON report to
-//! stdout and human-readable findings to stderr. Exit codes: 0 clean
-//! (all findings allowlisted), 1 new violations, 2 setup failure.
+//! Walks `rust/src`, applies the per-file rules in
+//! `higgs::audit::rules` and the cross-file concurrency pass in
+//! `higgs::audit::graph`, subtracts `rust/audit_allowlist.txt`, prints
+//! the JSON report to stdout and human-readable findings to stderr.
+//! Exit codes: 0 clean (all findings allowlisted), 1 new violations —
+//! or, under `--strict-allowlist` (CI), stale allowlist entries —
+//! 2 setup failure.
 
 use higgs::audit::{report_json, run_audit, AuditConfig};
 use std::path::PathBuf;
@@ -13,6 +16,7 @@ fn main() {
 }
 
 fn real_main() -> i32 {
+    let strict_allowlist = std::env::args().skip(1).any(|a| a == "--strict-allowlist");
     // `cargo run` sets CARGO_MANIFEST_DIR to rust/; running the bare
     // binary falls back to the current directory.
     let manifest = higgs::util::env_str("CARGO_MANIFEST_DIR")
@@ -42,6 +46,14 @@ fn real_main() -> i32 {
     print!("{}", report_json(&report));
     for w in &report.stale_allowlist {
         eprintln!("audit: warning: stale allowlist entry (matched nothing): {w}");
+    }
+    if strict_allowlist && !report.stale_allowlist.is_empty() {
+        eprintln!(
+            "audit: {} stale allowlist entr(y/ies) with --strict-allowlist — \
+             delete them from rust/audit_allowlist.txt (shrink-only policy)",
+            report.stale_allowlist.len()
+        );
+        return 1;
     }
     if report.findings.is_empty() {
         eprintln!(

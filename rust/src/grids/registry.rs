@@ -7,6 +7,7 @@
 
 use super::{af::af_grid, clvq::clvq_grid, nf::nf_grid, uniform::uniform_optimal_grid};
 use super::{Grid, GridKind};
+use crate::util::sync::lock_or_recover;
 use anyhow::{Context, Result};
 use std::collections::HashMap;
 use std::io::{BufRead, Write};
@@ -29,7 +30,7 @@ impl GridRegistry {
     }
 
     pub fn get(&self, kind: GridKind, n: usize, p: usize) -> Arc<Grid> {
-        if let Some(g) = self.cache.lock().unwrap().get(&(kind, n, p)) {
+        if let Some(g) = lock_or_recover(&self.cache).get(&(kind, n, p)) {
             return g.clone();
         }
         let grid = self
@@ -40,7 +41,7 @@ impl GridRegistry {
                 g
             });
         let arc = Arc::new(grid);
-        self.cache.lock().unwrap().insert((kind, n, p), arc.clone());
+        lock_or_recover(&self.cache).insert((kind, n, p), arc.clone());
         arc
     }
 

@@ -33,7 +33,8 @@ use anyhow::{bail, ensure, Context, Result};
 use std::io::{Read, Seek, SeekFrom};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use crate::util::sync::{rank, AuditMutex};
+use std::sync::Arc;
 
 // ---------------------------------------------------------------------------
 // ShardSpec
@@ -201,7 +202,7 @@ pub struct ArtifactReader {
     /// decoded schemes, memoized per layer after the first
     /// [`ArtifactReader::layer_scheme`] call — repeat accessors must
     /// not re-read (or re-verify, or re-decode) the plane bytes
-    scheme_cache: Mutex<std::collections::HashMap<String, Arc<LayerScheme>>>,
+    scheme_cache: AuditMutex<std::collections::HashMap<String, Arc<LayerScheme>>>,
 }
 
 impl ArtifactReader {
@@ -340,7 +341,11 @@ impl ArtifactReader {
             entries: Vec::new(),
             index: std::collections::HashMap::new(),
             bytes_read: AtomicU64::new(bytes_read),
-            scheme_cache: Mutex::new(std::collections::HashMap::new()),
+            scheme_cache: AuditMutex::new(
+                "reader.scheme_cache",
+                rank::READER_SCHEME,
+                std::collections::HashMap::new(),
+            ),
         };
         for (lm, (loff, llen, lfnv)) in man.layers.into_iter().zip(entries) {
             // grid index range-checked up front so a bad manifest
@@ -442,13 +447,13 @@ impl ArtifactReader {
     /// construction touches each layer's scheme several times (codes,
     /// scales, signs…), which used to be that many full plane reads.
     pub fn layer_scheme(&self, name: &str) -> Result<Arc<LayerScheme>> {
-        if let Some(s) = self.scheme_cache.lock().unwrap_or_else(|p| p.into_inner()).get(name) {
+        if let Some(s) = self.scheme_cache.lock().get(name) {
             return Ok(s.clone());
         }
         // load OUTSIDE the lock: concurrent first readers may duplicate
         // the read, but never block each other on disk I/O
         let scheme = Arc::new(self.load_layer(name)?);
-        let mut cache = self.scheme_cache.lock().unwrap_or_else(|p| p.into_inner());
+        let mut cache = self.scheme_cache.lock();
         Ok(cache.entry(name.to_string()).or_insert(scheme).clone())
     }
 

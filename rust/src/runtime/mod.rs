@@ -17,6 +17,7 @@
 //! pre-slot-strided artifacts with a regeneration hint.
 
 use crate::model::manifest::{DType, Manifest};
+use crate::util::sync::lock_or_recover;
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -98,7 +99,7 @@ impl Engine {
 
     /// Load (compile) an artifact by name, with caching.
     pub fn load(&self, artifact: &str) -> Result<Arc<Executable>> {
-        if let Some(e) = self.cache.lock().unwrap().get(artifact) {
+        if let Some(e) = lock_or_recover(&self.cache).get(artifact) {
             return Ok(e.clone());
         }
         let hlo_path = self.artifacts.join(format!("{artifact}.hlo.txt"));
@@ -113,12 +114,12 @@ impl Engine {
             .compile(&comp)
             .map_err(|e| anyhow::anyhow!("compile {artifact}: {e:?}"))?;
         let arc = Arc::new(Executable { exe, manifest });
-        self.cache.lock().unwrap().insert(artifact.to_string(), arc.clone());
+        lock_or_recover(&self.cache).insert(artifact.to_string(), arc.clone());
         Ok(arc)
     }
 
     pub fn loaded_count(&self) -> usize {
-        self.cache.lock().unwrap().len()
+        lock_or_recover(&self.cache).len()
     }
 
     /// Low-level execute on pre-built literals (borrowed — no copies of

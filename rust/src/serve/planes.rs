@@ -34,16 +34,16 @@
 use super::backend::QuantSource;
 use crate::model::Manifest;
 use crate::tensor::Tensor;
+use crate::util::sync::{rank, AuditMutex};
 use anyhow::Result;
 use std::collections::HashMap;
-use std::sync::Mutex;
 
 /// Dense decoded layer planes keyed by layer base name (the
 /// manifest's `<base>.w`), each tagged with how many claims remain.
 pub struct PlaneStore {
     /// (plane, remaining claims); the entry is removed — and the
     /// tensor moved out — on its last claim
-    planes: Mutex<HashMap<String, (Tensor, usize)>>,
+    planes: AuditMutex<HashMap<String, (Tensor, usize)>>,
     decoded: usize,
 }
 
@@ -51,7 +51,10 @@ impl PlaneStore {
     /// A store with no planes (dense serving without a quantized
     /// source).
     pub fn empty() -> PlaneStore {
-        PlaneStore { planes: Mutex::new(HashMap::new()), decoded: 0 }
+        PlaneStore {
+            planes: AuditMutex::new("serve.planes", rank::PLANES, HashMap::new()),
+            decoded: 0,
+        }
     }
 
     /// Decode every layer that appears as a `<base>.w` param in ANY of
@@ -82,7 +85,10 @@ impl PlaneStore {
         for (base, t) in names.iter().zip(decoded) {
             planes.insert(base.to_string(), (t?, uses[base]));
         }
-        Ok(PlaneStore { decoded: planes.len(), planes: Mutex::new(planes) })
+        Ok(PlaneStore {
+            decoded: planes.len(),
+            planes: AuditMutex::new("serve.planes", rank::PLANES, planes),
+        })
     }
 
     /// Take one claim on layer `base`'s dense plane: a clone for every
@@ -91,7 +97,7 @@ impl PlaneStore {
     /// decoded the layer — callers fall back to decoding from the
     /// source, so over-claiming stays correct (just not decode-once).
     pub fn claim(&self, base: &str) -> Option<Tensor> {
-        let mut planes = self.planes.lock().unwrap_or_else(|p| p.into_inner());
+        let mut planes = self.planes.lock();
         if let Some((t, remaining)) = planes.get_mut(base) {
             if *remaining > 1 {
                 *remaining -= 1;
@@ -106,7 +112,7 @@ impl PlaneStore {
 
     /// Whether the store still holds a plane for `base` (claims left).
     pub fn contains(&self, base: &str) -> bool {
-        self.planes.lock().unwrap_or_else(|p| p.into_inner()).contains_key(base)
+        self.planes.lock().contains_key(base)
     }
 
     /// How many layer decodes this store performed at build — by

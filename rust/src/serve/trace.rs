@@ -46,6 +46,7 @@ impl Clock {
     pub fn advance(&mut self, ms: f64) {
         if let Clock::Virtual { now_ms } = self {
             *now_ms += ms;
+            crate::util::sync::note_virtual_now_ms(*now_ms);
         }
     }
 
@@ -60,7 +61,10 @@ impl Clock {
                 let wait = (target_ms - now).max(0.0).min(cap_ms);
                 std::thread::sleep(Duration::from_millis((wait as u64).max(1)));
             }
-            Clock::Virtual { now_ms } => *now_ms = now_ms.max(target_ms),
+            Clock::Virtual { now_ms } => {
+                *now_ms = now_ms.max(target_ms);
+                crate::util::sync::note_virtual_now_ms(*now_ms);
+            }
         }
     }
 }

@@ -9,6 +9,7 @@ pub mod pool;
 pub mod prng;
 pub mod propcheck;
 pub mod stats;
+pub mod sync;
 pub mod timer;
 
 pub use prng::Rng;

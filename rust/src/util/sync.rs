@@ -1,0 +1,353 @@
+//! Lock hygiene: poison recovery plus the ranked-lock runtime sanitizer.
+//!
+//! Two layers, mirroring the `shared_slice_audit` pairing in
+//! `util/pool.rs`:
+//!
+//! * Always on: [`lock_or_recover`] is the crate-blessed way to take a
+//!   plain `Mutex` that guards idempotent cache state (a poisoned cache
+//!   is still a valid cache — recompute-and-reinsert is safe), and
+//!   [`AuditMutex`] is the named, ranked wrapper every serve-stack lock
+//!   lives behind. Without the feature it is a zero-cost shell over
+//!   `std::sync::Mutex` (poison-recovering, never panicking).
+//! * `--features lock_audit`: every [`AuditMutex::lock`] checks a
+//!   per-thread stack of held ranks BEFORE blocking — panicking on rank
+//!   inversion (acquiring a rank ≤ one already held, i.e. a potential
+//!   deadlock cycle) and on re-entrant acquisition (guaranteed
+//!   self-deadlock with std's non-reentrant `Mutex`). An optional
+//!   watchdog panics when a guard outlives `HIGGS_LOCK_AUDIT_WATCHDOG_MS`
+//!   milliseconds on the serve stack's virtual clock (`serve::Clock`
+//!   publishes virtual time here via [`note_virtual_now_ms`]).
+//!
+//! The static half of the same contract is `audit/graph.rs`: it parses
+//! the [`rank`] table and every `AuditMutex::new` site out of the source
+//! tree and rejects lock-order edges that contradict the declared ranks
+//! at lint time, before any thread runs. See PERF.md §14.
+
+use std::ops::{Deref, DerefMut};
+use std::sync::{Mutex, MutexGuard};
+
+/// The crate-wide lock-rank table. Locks must be acquired in strictly
+/// increasing rank order on any one thread; a gap between consecutive
+/// ranks is intentional headroom for future locks. `audit/graph.rs`
+/// parses the `pub const NAME: u32 = N;` lines below by shape — keep
+/// them single-line.
+pub mod rank {
+    /// `serve/planes.rs` `PlaneStore.planes` — decode-once plane cache.
+    /// Outermost serve-stack lock: it may (transitively) trigger a
+    /// reader scheme load, never the reverse.
+    pub const PLANES: u32 = 10;
+    /// `quant/reader.rs` `ArtifactReader.scheme_cache` — per-layer
+    /// scheme memo, taken during cold start and lazy accessor reads.
+    pub const READER_SCHEME: u32 = 20;
+    /// `serve/transport.rs` `LocalPipe.rx` — makes `mpsc::Receiver`
+    /// Sync. Held across the blocking `recv` by design (grandfathered
+    /// in the audit allowlist), so nothing may nest under it.
+    pub const TRANSPORT_PIPE: u32 = 90;
+    /// `serve/transport.rs` `SocketTransport.stream` /
+    /// `TcpTransport.stream` — frame I/O serialization. Leaf rank:
+    /// nothing is ever acquired under a stream lock.
+    pub const TRANSPORT_STREAM: u32 = 91;
+}
+
+/// Take a plain `Mutex`, recovering from poison. Poison means some
+/// thread panicked while holding the guard; every call site guards
+/// idempotent memo/cache state where the worst case after recovery is
+/// a redundant recompute, never a broken invariant. This is the
+/// sanctioned alternative to `.lock().unwrap()`, which the audit's
+/// `panic-path` rule bans outside this file.
+pub fn lock_or_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// A named, ranked `Mutex`. The name is a stable identifier for audit
+/// reports and the lock-graph JSON; the rank is the lock's position in
+/// the crate-wide acquisition order ([`rank`]). With `lock_audit` off,
+/// `lock` is exactly `lock_or_recover` plus two words of metadata.
+pub struct AuditMutex<T> {
+    name: &'static str,
+    rank: u32,
+    #[cfg(feature = "lock_audit")]
+    watchdog_ms: u64,
+    inner: Mutex<T>,
+}
+
+impl<T> AuditMutex<T> {
+    /// Wrap `value`. `name` should be globally unique and stable
+    /// (module.field style); `rank` comes from the [`rank`] table. The
+    /// long-hold watchdog threshold is read from
+    /// `HIGGS_LOCK_AUDIT_WATCHDOG_MS` (0 = disabled).
+    pub fn new(name: &'static str, rank: u32, value: T) -> AuditMutex<T> {
+        AuditMutex {
+            name,
+            rank,
+            #[cfg(feature = "lock_audit")]
+            watchdog_ms: crate::util::env_u64("HIGGS_LOCK_AUDIT_WATCHDOG_MS", 0),
+            inner: Mutex::new(value),
+        }
+    }
+
+    /// [`AuditMutex::new`] with an explicit watchdog threshold instead
+    /// of the env default — lets tests seed a long-hold violation
+    /// without mutating process-global env state.
+    #[cfg(feature = "lock_audit")]
+    pub fn with_watchdog_ms(name: &'static str, rank: u32, ms: u64, value: T) -> AuditMutex<T> {
+        AuditMutex { name, rank, watchdog_ms: ms, inner: Mutex::new(value) }
+    }
+
+    /// Acquire the lock, recovering from poison. Under `lock_audit` the
+    /// rank/re-entrancy checks run BEFORE blocking on the inner mutex,
+    /// so a would-be deadlock panics with a diagnostic instead of
+    /// hanging.
+    pub fn lock(&self) -> AuditGuard<'_, T> {
+        #[cfg(feature = "lock_audit")]
+        let token =
+            audit::acquire(self.name, self.rank, self.watchdog_ms, self as *const Self as usize);
+        let guard = self.inner.lock().unwrap_or_else(|poisoned| poisoned.into_inner());
+        AuditGuard {
+            guard,
+            #[cfg(feature = "lock_audit")]
+            token,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    pub fn rank(&self) -> u32 {
+        self.rank
+    }
+}
+
+/// Guard returned by [`AuditMutex::lock`]. Dropping it releases the
+/// inner mutex first, then (under `lock_audit`) pops the held-rank
+/// stack and runs the long-hold watchdog check.
+pub struct AuditGuard<'a, T> {
+    guard: MutexGuard<'a, T>,
+    #[cfg(feature = "lock_audit")]
+    token: audit::HeldToken,
+}
+
+impl<T> Deref for AuditGuard<'_, T> {
+    type Target = T;
+
+    fn deref(&self) -> &T {
+        &self.guard
+    }
+}
+
+impl<T> DerefMut for AuditGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        &mut self.guard
+    }
+}
+
+/// Publish the serve stack's virtual clock reading (milliseconds) to
+/// the lock sanitizer's long-hold watchdog. `serve::Clock` calls this
+/// on every virtual advance; the published value is monotone
+/// (`fetch_max`), so concurrent clocks can only move it forward. No-op
+/// without `lock_audit`.
+pub fn note_virtual_now_ms(ms: f64) {
+    #[cfg(feature = "lock_audit")]
+    audit::publish_now(ms.max(0.0) as u64);
+    #[cfg(not(feature = "lock_audit"))]
+    let _ = ms;
+}
+
+#[cfg(feature = "lock_audit")]
+mod audit {
+    use std::cell::RefCell;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    /// Virtual-clock milliseconds, monotone across all publishers.
+    /// Process-global: the watchdog is meant for single-daemon runs
+    /// (one virtual timeline), not for suites advancing many clocks.
+    static VIRTUAL_NOW_MS: AtomicU64 = AtomicU64::new(0);
+
+    struct Held {
+        name: &'static str,
+        rank: u32,
+        id: usize,
+    }
+
+    thread_local! {
+        static HELD: RefCell<Vec<Held>> = const { RefCell::new(Vec::new()) };
+    }
+
+    pub fn publish_now(ms: u64) {
+        VIRTUAL_NOW_MS.fetch_max(ms, Ordering::Relaxed);
+    }
+
+    pub fn virtual_now_ms() -> u64 {
+        VIRTUAL_NOW_MS.load(Ordering::Relaxed)
+    }
+
+    /// Number of guards the current thread holds — test hook.
+    pub fn held_count() -> usize {
+        HELD.with(|h| h.borrow().len())
+    }
+
+    /// Check and record an acquisition. Panics on re-entrancy or rank
+    /// inversion; both are deterministic deadlock hazards regardless of
+    /// thread timing, which is what makes this a sanitizer rather than
+    /// a race detector.
+    pub fn acquire(name: &'static str, rank: u32, watchdog_ms: u64, id: usize) -> HeldToken {
+        HELD.with(|h| {
+            let held = h.borrow();
+            if held.iter().any(|e| e.id == id) {
+                panic!(
+                    "lock audit: re-entrant acquisition of `{name}` (rank {rank}) — \
+                     std::sync::Mutex self-deadlocks here"
+                );
+            }
+            if let Some(worst) = held.iter().filter(|e| e.rank >= rank).max_by_key(|e| e.rank) {
+                panic!(
+                    "lock audit: rank inversion acquiring `{name}` (rank {rank}) while holding \
+                     `{}` (rank {}) — ranks must strictly increase; see the table in \
+                     util/sync.rs and PERF.md §14",
+                    worst.name, worst.rank
+                );
+            }
+        });
+        HELD.with(|h| h.borrow_mut().push(Held { name, rank, id }));
+        HeldToken { name, id, watchdog_ms, acquired_ms: virtual_now_ms() }
+    }
+
+    pub struct HeldToken {
+        name: &'static str,
+        id: usize,
+        watchdog_ms: u64,
+        acquired_ms: u64,
+    }
+
+    impl Drop for HeldToken {
+        fn drop(&mut self) {
+            HELD.with(|h| {
+                let mut held = h.borrow_mut();
+                if let Some(i) = held.iter().rposition(|e| e.id == self.id) {
+                    held.remove(i);
+                }
+            });
+            let held_ms = virtual_now_ms().saturating_sub(self.acquired_ms);
+            // Never double-panic: a guard dropped during unwind (e.g. a
+            // should_panic test) must not escalate to an abort.
+            if self.watchdog_ms > 0 && held_ms > self.watchdog_ms && !std::thread::panicking() {
+                panic!(
+                    "lock audit: watchdog — `{}` held for {held_ms} virtual ms \
+                     (HIGGS_LOCK_AUDIT_WATCHDOG_MS = {})",
+                    self.name, self.watchdog_ms
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+
+    #[test]
+    fn lock_or_recover_survives_poison() {
+        let m = Mutex::new(7u32);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            let _g = m.lock().unwrap();
+            panic!("poison it");
+        }));
+        assert!(r.is_err());
+        assert!(m.lock().is_err(), "mutex should be poisoned");
+        assert_eq!(*lock_or_recover(&m), 7);
+        *lock_or_recover(&m) += 1;
+        assert_eq!(*lock_or_recover(&m), 8);
+    }
+
+    #[test]
+    fn audit_mutex_basic_roundtrip() {
+        let m = AuditMutex::new("test.basic", rank::PLANES, vec![1u8, 2]);
+        assert_eq!(m.name(), "test.basic");
+        assert_eq!(m.rank(), rank::PLANES);
+        m.lock().push(3);
+        assert_eq!(*m.lock(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn audit_mutex_recovers_poison() {
+        let m = AuditMutex::new("test.poison", rank::PLANES, 40u32);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            let _g = m.lock();
+            panic!("poison it");
+        }));
+        assert!(r.is_err());
+        // poisoned inner mutex: lock() recovers instead of propagating
+        *m.lock() += 2;
+        assert_eq!(*m.lock(), 42);
+    }
+
+    #[test]
+    fn rank_table_is_strictly_increasing() {
+        let ranks =
+            [rank::PLANES, rank::READER_SCHEME, rank::TRANSPORT_PIPE, rank::TRANSPORT_STREAM];
+        assert!(ranks.windows(2).all(|w| w[0] < w[1]), "{ranks:?}");
+    }
+
+    #[cfg(feature = "lock_audit")]
+    mod sanitizer {
+        use super::super::*;
+
+        #[test]
+        fn increasing_ranks_nest_cleanly_and_stack_drains() {
+            let lo = AuditMutex::new("test.nest.lo", 10, 1u32);
+            let hi = AuditMutex::new("test.nest.hi", 20, 2u32);
+            {
+                let a = lo.lock();
+                let b = hi.lock();
+                assert_eq!(*a + *b, 3);
+                assert_eq!(audit::held_count(), 2);
+            }
+            assert_eq!(audit::held_count(), 0);
+        }
+
+        #[test]
+        #[should_panic(expected = "rank inversion")]
+        fn rank_inversion_panics() {
+            let hi = AuditMutex::new("test.inv.hi", 20, 0u32);
+            let lo = AuditMutex::new("test.inv.lo", 10, 0u32);
+            let _h = hi.lock();
+            let _l = lo.lock();
+        }
+
+        #[test]
+        #[should_panic(expected = "rank inversion")]
+        fn equal_rank_nesting_panics() {
+            let a = AuditMutex::new("test.eq.a", 15, 0u32);
+            let b = AuditMutex::new("test.eq.b", 15, 0u32);
+            let _a = a.lock();
+            let _b = b.lock();
+        }
+
+        #[test]
+        #[should_panic(expected = "re-entrant")]
+        fn reentrant_acquisition_panics() {
+            let m = AuditMutex::new("test.reentrant", 10, 0u32);
+            let _a = m.lock();
+            let _b = m.lock();
+        }
+
+        #[test]
+        #[should_panic(expected = "watchdog")]
+        fn watchdog_panics_on_long_virtual_hold() {
+            let m = AuditMutex::with_watchdog_ms("test.watchdog", 10, 5, 0u32);
+            let g = m.lock();
+            note_virtual_now_ms((audit::virtual_now_ms() + 1_000) as f64);
+            drop(g);
+        }
+
+        #[test]
+        fn watchdog_quiet_within_threshold() {
+            let m = AuditMutex::with_watchdog_ms("test.watchdog.ok", 10, 1 << 40, 0u32);
+            let g = m.lock();
+            note_virtual_now_ms((audit::virtual_now_ms() + 10) as f64);
+            drop(g);
+        }
+    }
+}

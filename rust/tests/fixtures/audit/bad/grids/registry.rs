@@ -1,0 +1,15 @@
+//! Fixture: raw `.lock().unwrap()` outside the sanctioned wrapper —
+//! poisoning from any panicked holder cascades to every later caller.
+
+pub fn cached(m: &std::sync::Mutex<u32>) -> u32 {
+    *m.lock().unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn gated_lock_unwrap_is_fine() {
+        let m = std::sync::Mutex::new(1u32);
+        assert_eq!(*m.lock().unwrap(), 1);
+    }
+}

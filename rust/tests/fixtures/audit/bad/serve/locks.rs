@@ -1,0 +1,54 @@
+//! Fixture: violates all three concurrency rules — a lock-order
+//! inversion, blocking while a guard is held (directly and through a
+//! two-deep call chain), and a guard live across a spawn boundary.
+
+use crate::util::sync::{rank, AuditMutex};
+
+pub struct Stages {
+    lo: AuditMutex<u32>,
+    hi: AuditMutex<u32>,
+}
+
+impl Stages {
+    pub fn mk() -> Stages {
+        Stages {
+            lo: AuditMutex::new("fixture.lo", rank::LO, 0),
+            hi: AuditMutex::new(
+                "fixture.hi",
+                rank::HI,
+                0,
+            ),
+        }
+    }
+
+    pub fn inverted(&self) -> u32 {
+        let hi = self.hi.lock();
+        let lo = self.lo.lock();
+        *hi + *lo
+    }
+
+    pub fn blocks_direct(&self, rx: &std::sync::mpsc::Receiver<u32>) -> u32 {
+        let hi = self.hi.lock();
+        *hi + rx.recv().unwrap_or(0)
+    }
+
+    pub fn blocks_transitive(&self) -> u32 {
+        let lo = self.lo.lock();
+        *lo + settle()
+    }
+
+    pub fn spawns_under_guard(&self) -> u32 {
+        let lo = self.lo.lock();
+        par_for(2, |_| {});
+        *lo
+    }
+}
+
+fn settle() -> u32 {
+    wait_done()
+}
+
+fn wait_done() -> u32 {
+    let h = spawn_worker(7);
+    h.join().unwrap_or(0)
+}

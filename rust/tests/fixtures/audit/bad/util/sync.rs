@@ -1,0 +1,21 @@
+//! Fixture: the sanctioned sync wrapper. Exempt from the concurrency
+//! pass and the `.lock().unwrap()` ban — recovery lives here, so the
+//! raw patterns below must produce zero findings. The rank table is
+//! what `bad/serve/locks.rs` resolves its `rank::` constants against.
+
+pub mod rank {
+    pub const LO: u32 = 10;
+    pub const HI: u32 = 20;
+}
+
+pub fn raw_unwrap_is_sanctioned_here(m: &std::sync::Mutex<u32>) -> u32 {
+    *m.lock().unwrap()
+}
+
+pub fn even_blocking_under_guard_is_exempt(
+    m: &std::sync::Mutex<u32>,
+    rx: &std::sync::mpsc::Receiver<u32>,
+) -> u32 {
+    let g = m.lock().unwrap();
+    *g + rx.recv().unwrap_or(0)
+}

@@ -1,0 +1,56 @@
+//! Fixture: clean concurrency patterns plus near-miss tokens — the
+//! graph pass must report nothing here. Guards are dropped or scoped
+//! out before anything blocks or spawns, ranked locks nest in rank
+//! order, and the argument-taking `join`/`read`/`recv_*` lookalikes
+//! below are not blocking or acquisition tokens.
+
+use crate::util::sync::{rank, AuditMutex};
+
+pub struct Stages {
+    lo: AuditMutex<u32>,
+    hi: AuditMutex<u32>,
+}
+
+impl Stages {
+    pub fn mk() -> Stages {
+        Stages {
+            lo: AuditMutex::new("fixture.lo", rank::LO, 0),
+            hi: AuditMutex::new("fixture.hi", rank::HI, 0),
+        }
+    }
+
+    pub fn ordered(&self) -> u32 {
+        let lo = self.lo.lock();
+        let hi = self.hi.lock();
+        *lo + *hi
+    }
+
+    pub fn drops_before_blocking(&self, rx: &std::sync::mpsc::Receiver<u32>) -> u32 {
+        let lo = self.lo.lock();
+        let v = *lo;
+        drop(lo);
+        v + rx.recv().unwrap_or(0)
+    }
+
+    pub fn scopes_before_spawn(&self) -> u32 {
+        let v = {
+            let lo = self.lo.lock();
+            *lo
+        };
+        par_for(2, |_| {});
+        v
+    }
+
+    pub fn near_misses(&self, dir: &std::path::Path, file: &mut impl std::io::Read) -> usize {
+        let mut buf = [0u8; 8];
+        let n = file.read(&mut buf).unwrap_or(0);
+        let sub = dir.join("part");
+        let names = ["a", "b"].join(", ");
+        let cfg = recv_config();
+        n + sub.as_os_str().len() + names.len() + cfg
+    }
+}
+
+fn recv_config() -> usize {
+    7
+}

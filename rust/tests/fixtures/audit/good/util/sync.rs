@@ -1,0 +1,12 @@
+//! Fixture: the sanctioned wrapper module — `.lock().unwrap()` here is
+//! exempt from the lock-unwrap ban, and the rank table below is what
+//! `good/serve/locks.rs` resolves its `rank::` constants against.
+
+pub mod rank {
+    pub const LO: u32 = 10;
+    pub const HI: u32 = 20;
+}
+
+pub fn lock_or_recover(m: &std::sync::Mutex<u32>) -> u32 {
+    *m.lock().unwrap()
+}

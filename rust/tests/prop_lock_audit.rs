@@ -1,0 +1,138 @@
+//! Serve-stack stress for the ranked-lock runtime sanitizer.
+//!
+//! Always compiled; CI also runs it under `--features lock_audit`,
+//! where every `AuditMutex` acquisition checks the per-thread rank
+//! stack — a rank inversion or re-entrant lock anywhere under the
+//! daemon/pipeline stack panics the offending thread and fails the
+//! run. The assertion here is the same bit-exact loopback equivalence
+//! the daemon props check: the sanitizer must observe, never perturb.
+
+use higgs::serve::{
+    request_many, run_core, ClientOutcome, ClientRequest, CoreMsg, Daemon, DaemonConfig,
+    PipelineConfig, PipelineSource, WireMsg,
+};
+use std::collections::BTreeMap;
+use std::sync::mpsc;
+
+fn cfg(shards: usize, batch: usize, seed: u64) -> DaemonConfig {
+    DaemonConfig {
+        max_queue: 16,
+        pipeline: PipelineConfig {
+            shards,
+            batch,
+            seq: 24,
+            vocab: 61,
+            layers: 3,
+            seed,
+            ..Default::default()
+        },
+        ..Default::default()
+    }
+}
+
+/// Drive the same requests straight through the core loop — the oracle
+/// the TCP loopback run must match token-for-token.
+fn direct_tokens(cfg: DaemonConfig, reqs: &[ClientRequest]) -> BTreeMap<u64, Vec<i32>> {
+    let (tx, rx) = mpsc::channel();
+    let replies: Vec<(u64, mpsc::Receiver<WireMsg>)> = reqs
+        .iter()
+        .map(|r| {
+            let (rtx, rrx) = mpsc::channel();
+            tx.send(CoreMsg::Submit {
+                client: 0,
+                id: r.id,
+                prompt: r.prompt.clone(),
+                max_new: r.max_new,
+                deadline_ms: r.deadline_ms,
+                reply: rtx,
+            })
+            .unwrap();
+            (r.id, rrx)
+        })
+        .collect();
+    drop(tx);
+    run_core(cfg, &PipelineSource::Synthetic, rx).unwrap();
+    replies
+        .into_iter()
+        .map(|(id, rrx)| {
+            let mut tokens = Vec::new();
+            loop {
+                match rrx.recv().unwrap() {
+                    WireMsg::Token { token, .. } => tokens.push(token),
+                    WireMsg::Done { .. } => break,
+                    other => panic!("direct drive of {id} hit {other:?}"),
+                }
+            }
+            (id, tokens)
+        })
+        .collect()
+}
+
+#[test]
+fn loopback_streams_bit_identical_with_sanitizer_observing() {
+    // a few deterministic shapes: single shard, multi-shard (LocalPipe
+    // AuditMutex on every hop), and batch > clients
+    for (shards, batch, seed, n_req) in [(1usize, 1usize, 11u64, 2u64), (2, 2, 42, 4), (2, 3, 7, 5)]
+    {
+        let reqs: Vec<ClientRequest> = (1..=n_req)
+            .map(|id| ClientRequest {
+                id,
+                prompt: vec![id as i32, (2 * id) as i32 + 1, 3],
+                max_new: 2 + (id % 3) as u32,
+                deadline_ms: 0,
+            })
+            .collect();
+        let want = direct_tokens(cfg(shards, batch, seed), &reqs);
+
+        let daemon = Daemon::start(cfg(shards, batch, seed), PipelineSource::Synthetic).unwrap();
+        let addr = daemon.addr().to_string();
+        let handles: Vec<_> = reqs
+            .iter()
+            .map(|r| {
+                let addr = addr.clone();
+                let r = r.clone();
+                std::thread::spawn(move || request_many(&addr, std::slice::from_ref(&r)).unwrap())
+            })
+            .collect();
+        let mut got: BTreeMap<u64, ClientOutcome> = BTreeMap::new();
+        for h in handles {
+            for (id, outcome) in h.join().unwrap() {
+                got.insert(id, outcome);
+            }
+        }
+        let report = daemon.finish().unwrap();
+        assert_eq!(got.len(), reqs.len());
+        for r in &reqs {
+            match &got[&r.id] {
+                ClientOutcome::Done { tokens, .. } => assert_eq!(
+                    tokens, &want[&r.id],
+                    "request {} tokens diverged (shards={shards} batch={batch})",
+                    r.id
+                ),
+                other => panic!("request {} got {other:?} over TCP", r.id),
+            }
+        }
+        assert_eq!(report.wire_errors, 0);
+        assert_eq!(report.completions.len(), reqs.len());
+    }
+}
+
+/// Only meaningful in `--features lock_audit` builds: prove the
+/// sanitizer is actually armed by committing a deliberate inversion on
+/// a scratch pair of ranked mutexes in a throwaway thread.
+#[cfg(feature = "lock_audit")]
+mod sanitizer_armed {
+    use higgs::util::sync::AuditMutex;
+
+    #[test]
+    fn deliberate_inversion_panics_in_this_build() {
+        let res = std::thread::spawn(|| {
+            let hi = AuditMutex::new("test.hi", 50, 0u32);
+            let lo = AuditMutex::new("test.lo", 5, 0u32);
+            let _g = hi.lock();
+            let _h = lo.lock(); // rank 5 under rank 50 — must panic
+        })
+        .join();
+        assert!(res.is_err(), "lock_audit build failed to catch a rank inversion");
+    }
+}
